@@ -1,0 +1,90 @@
+//! The §3.3 empirical cache-parameter search (Fig. 4), as a runnable
+//! tool: coarse sweep → fine refinement → optima, for both core types,
+//! plus the §5.3 shared-kc refit — with a terminal heatmap rendering.
+//!
+//! Run: `cargo run --release --example cache_search`
+
+use amp_gemm::model::PerfModel;
+use amp_gemm::search::{shared_kc_refit, two_phase_search, SearchResult};
+use amp_gemm::soc::CoreType;
+
+/// Coarse ASCII heatmap: rows = mc buckets, cols = kc buckets, shading
+/// by GFLOPS decile (the terminal stand-in for Fig. 4's color plots).
+fn render_heatmap(result: &SearchResult, buckets: usize) {
+    let max = result.best.gflops;
+    let min = result
+        .points
+        .iter()
+        .map(|p| p.gflops)
+        .fold(f64::INFINITY, f64::min);
+    let mcs: Vec<usize> = {
+        let mut v: Vec<usize> = result.points.iter().map(|p| p.mc).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let kcs: Vec<usize> = {
+        let mut v: Vec<usize> = result.points.iter().map(|p| p.kc).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let shades: Vec<char> = " .:-=+*#%@".chars().collect();
+    let pick = |mc: usize, kc: usize| -> f64 {
+        result
+            .points
+            .iter()
+            .find(|p| p.mc == mc && p.kc == kc)
+            .map(|p| p.gflops)
+            .unwrap_or(min)
+    };
+    let step_m = (mcs.len() / buckets).max(1);
+    let step_k = (kcs.len() / buckets).max(1);
+    println!("      kc {} .. {}", kcs[0], kcs[kcs.len() - 1]);
+    for mi in (0..mcs.len()).step_by(step_m) {
+        let mut line = String::new();
+        for ki in (0..kcs.len()).step_by(step_k) {
+            let g = pick(mcs[mi], kcs[ki]);
+            let t = ((g - min) / (max - min + 1e-12) * (shades.len() - 1) as f64) as usize;
+            line.push(shades[t.min(shades.len() - 1)]);
+        }
+        println!("mc={:>4} {}", mcs[mi], line);
+    }
+}
+
+fn main() {
+    let model = PerfModel::exynos();
+    for core in CoreType::ALL {
+        println!("=== {} ===", core.name());
+        let (coarse, fine) = two_phase_search(&model, core);
+        render_heatmap(&coarse, 20);
+        println!(
+            "coarse optimum: (mc, kc) = ({}, {}) @ {:.3} GFLOPS",
+            coarse.best.mc, coarse.best.kc, coarse.best.gflops
+        );
+        println!(
+            "fine optimum:   (mc, kc) = ({}, {}) @ {:.3} GFLOPS   [paper: {}]\n",
+            fine.best.mc,
+            fine.best.kc,
+            fine.best.gflops,
+            match core {
+                CoreType::Big => "(152, 952)",
+                CoreType::Little => "(80, 352)",
+            }
+        );
+    }
+
+    println!("=== §5.3: A7 refit under shared kc = 952 ===");
+    let refit = shared_kc_refit(&model, CoreType::Little, 952);
+    println!(
+        "constrained optimum: mc = {} @ {:.3} GFLOPS   [paper: mc = 32]",
+        refit.best.mc, refit.best.gflops
+    );
+    let sample: Vec<String> = refit
+        .points
+        .iter()
+        .filter(|p| p.mc % 16 == 0 || p.mc <= 48)
+        .map(|p| format!("mc={:<3} {:.3}", p.mc, p.gflops))
+        .collect();
+    println!("{}", sample.join("\n"));
+}

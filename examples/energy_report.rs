@@ -1,0 +1,85 @@
+//! Energy deep-dive: the pmlib-style view of the paper's §3.4/§5
+//! energy story — per-rail power, polling waste, and the GFLOPS/W
+//! ranking across schedules, rendered the way the ODROID board's four
+//! sensors would have reported it (250 ms samples).
+//!
+//! Run: `cargo run --release --example energy_report [-- --size 4096]`
+
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::energy::{PmlibSampler, PowerModel};
+use amp_gemm::model::PerfModel;
+use amp_gemm::sched::ScheduleSpec;
+use amp_gemm::sim::simulate;
+use amp_gemm::soc::CoreType;
+use amp_gemm::util::cli::Args;
+use amp_gemm::util::table::Table;
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    let r = args.usize_or("size", 4096).expect("--size");
+    let model = PerfModel::exynos();
+    let power = PowerModel::exynos();
+
+    let specs = [
+        ScheduleSpec::cluster_only(CoreType::Big, 1),
+        ScheduleSpec::cluster_only(CoreType::Big, 3),
+        ScheduleSpec::cluster_only(CoreType::Big, 4),
+        ScheduleSpec::cluster_only(CoreType::Little, 4),
+        ScheduleSpec::sss(),
+        ScheduleSpec::sas(1.0),
+        ScheduleSpec::sas(5.0),
+        ScheduleSpec::ca_das(),
+    ];
+
+    let mut table = Table::new(
+        &format!("Energy breakdown at r = {r} (virtual pmlib rails)"),
+        &[
+            "schedule", "time s", "GFLOPS", "E total J", "E A15 J", "E A7 J", "E DRAM J",
+            "avg W", "poll s (Σcores)", "GFLOPS/W",
+        ],
+    );
+    let mut ranking: Vec<(String, f64)> = Vec::new();
+    for spec in &specs {
+        let st = simulate(&model, spec, GemmShape::square(r));
+        let poll_total: f64 = st.activity.iter().map(|a| a.poll_s).sum();
+        table.push_row(vec![
+            st.label.clone(),
+            format!("{:.3}", st.time_s),
+            format!("{:.2}", st.gflops),
+            format!("{:.2}", st.energy.energy_j),
+            format!("{:.2}", st.energy.energy_big_j),
+            format!("{:.2}", st.energy.energy_little_j),
+            format!("{:.2}", st.energy.energy_dram_j),
+            format!("{:.2}", st.energy.avg_power_w),
+            format!("{:.3}", poll_total),
+            format!("{:.3}", st.gflops_per_watt),
+        ]);
+        ranking.push((st.label.clone(), st.gflops_per_watt));
+    }
+    println!("{}", table.to_markdown());
+
+    ranking.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("GFLOPS/W ranking:");
+    for (i, (name, eff)) in ranking.iter().enumerate() {
+        println!("  {}. {:<22} {:.3}", i + 1, name, eff);
+    }
+    assert_eq!(
+        ranking.last().map(|(n, _)| n.contains("SSS") || n.contains("SAS(r=1)")),
+        Some(true),
+        "the unbalanced schedules must rank last (§4/§5.2.2)"
+    );
+
+    // pmlib-style trace for one run: what the 250 ms sensors would see.
+    let st = simulate(&model, &ScheduleSpec::sss(), GemmShape::square(r));
+    let samples = PmlibSampler::default().sample(&power, st.time_s, &st.activity);
+    println!("\npmlib trace of {} ({} samples @ 250 ms):", st.label, samples.len());
+    for s in samples.iter().take(8) {
+        println!(
+            "  t={:>6.2}s  total {:>5.2} W  (A15 rail {:>5.2} W, A7 rail {:>5.2} W)",
+            s.t_s, s.total_w, s.big_w, s.little_w
+        );
+    }
+    if samples.len() > 8 {
+        println!("  ... ({} more)", samples.len() - 8);
+    }
+}

@@ -1,0 +1,75 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! 1. Run one GEMM through the native asymmetric executor (CA-DAS).
+//! 2. Verify it against the naive oracle.
+//! 3. Simulate the same problem on the virtual Exynos 5422 and print
+//!    the paper-style GFLOPS / GFLOPS/W numbers.
+//! 4. If `make artifacts` has been run, execute the same problem through
+//!    the PJRT runtime (the Pallas-lowered HLO) and cross-check.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use amp_gemm::blis::gemm::{gemm_naive, GemmShape};
+use amp_gemm::model::PerfModel;
+use amp_gemm::native::gemm_parallel;
+use amp_gemm::runtime::worker::PjrtHandle;
+use amp_gemm::sched::ScheduleSpec;
+use amp_gemm::sim::simulate;
+use amp_gemm::soc::SocSpec;
+use amp_gemm::util::rng::Rng;
+use amp_gemm::util::stats::{gemm_tolerance, max_abs_diff};
+use std::path::Path;
+
+fn main() {
+    let soc = SocSpec::exynos5422();
+    println!("SoC: {}\n", soc.name);
+
+    // --- 1+2: native CA-DAS GEMM, verified -------------------------
+    let r = 256;
+    let shape = GemmShape::square(r);
+    let mut rng = Rng::new(2015);
+    let a = rng.fill_matrix(r * r);
+    let b = rng.fill_matrix(r * r);
+    let mut c = vec![0.0; r * r];
+    let spec = ScheduleSpec::ca_das();
+    let stats = gemm_parallel(&soc, &spec, shape, &a, &b, &mut c);
+    let mut want = vec![0.0; r * r];
+    gemm_naive(shape, &a, &b, &mut want);
+    let diff = max_abs_diff(&c, &want);
+    assert!(diff < gemm_tolerance(r), "native result diverged: {diff}");
+    println!(
+        "native {}: {}x{}x{} in {:.2} ms on {} threads ({} dynamic grabs) — verified, max|Δ| = {diff:.2e}",
+        stats.label, r, r, r, stats.wall_s * 1e3, stats.threads, stats.grabs
+    );
+
+    // --- 3: the same schedule on the virtual AMP --------------------
+    let model = PerfModel::exynos();
+    for spec in [
+        ScheduleSpec::sss(),
+        ScheduleSpec::sas(5.0),
+        ScheduleSpec::ca_das(),
+    ] {
+        let st = simulate(&model, &spec, GemmShape::square(2048));
+        println!(
+            "sim    {:<16} r=2048: {:>6.2} GFLOPS, {:>5.3} GFLOPS/W",
+            st.label, st.gflops, st.gflops_per_watt
+        );
+    }
+
+    // --- 4: PJRT artifact path (optional) ---------------------------
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.txt").exists() {
+        let h = PjrtHandle::spawn(dir).expect("runtime");
+        let shape = GemmShape::square(256);
+        let (name, c_pjrt) = h
+            .execute(shape, "big", a.clone(), b.clone())
+            .expect("pjrt execute");
+        let d = max_abs_diff(&c_pjrt, &want);
+        assert!(d < gemm_tolerance(r));
+        println!("pjrt   {name}: verified against the same oracle, max|Δ| = {d:.2e}");
+        h.shutdown();
+    } else {
+        println!("(run `make artifacts` to enable the PJRT quickstart step)");
+    }
+    println!("\nquickstart OK");
+}

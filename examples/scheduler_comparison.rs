@@ -1,0 +1,64 @@
+//! Scheduler comparison: every strategy of the paper on one problem
+//! size, as a markdown table — the "§5 at a glance" view.
+//!
+//! Run: `cargo run --release --example scheduler_comparison [-- --size 4096]`
+
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::figures::ideal_gflops;
+use amp_gemm::model::PerfModel;
+use amp_gemm::sched::{CoarseLoop, FineLoop, ScheduleSpec, Strategy};
+use amp_gemm::sim::simulate;
+use amp_gemm::soc::CoreType;
+use amp_gemm::util::cli::Args;
+use amp_gemm::util::table::Table;
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    let r = args.usize_or("size", 4096).expect("--size");
+    let model = PerfModel::exynos();
+
+    let mut specs: Vec<ScheduleSpec> = vec![
+        ScheduleSpec::cluster_only(CoreType::Little, 4),
+        ScheduleSpec::cluster_only(CoreType::Big, 4),
+        ScheduleSpec::sss(),
+    ];
+    for ratio in [1.0, 3.0, 5.0, 7.0] {
+        specs.push(ScheduleSpec::sas(ratio));
+    }
+    for ratio in [3.0, 5.0] {
+        specs.push(ScheduleSpec::ca_sas(ratio));
+    }
+    specs.push(ScheduleSpec::das());
+    specs.push(ScheduleSpec::ca_das());
+    specs.push(ScheduleSpec::new(
+        Strategy::CaDas,
+        CoarseLoop::Loop3,
+        FineLoop::Loop5,
+    ));
+
+    let mut table = Table::new(
+        &format!("All schedulers at r = {r} (virtual Exynos 5422)"),
+        &["schedule", "GFLOPS", "% of ideal", "GFLOPS/W", "busy util %", "grabs"],
+    );
+    let ideal = ideal_gflops(&model, r);
+    let mut best: Option<(String, f64)> = None;
+    for spec in &specs {
+        let st = simulate(&model, spec, GemmShape::square(r));
+        table.push_row(vec![
+            st.label.clone(),
+            format!("{:.2}", st.gflops),
+            format!("{:.0}%", st.gflops / ideal * 100.0),
+            format!("{:.3}", st.gflops_per_watt),
+            format!("{:.0}%", st.mean_busy_utilization() * 100.0),
+            st.grabs.to_string(),
+        ]);
+        if best.as_ref().map(|(_, g)| st.gflops > *g).unwrap_or(true) {
+            best = Some((st.label.clone(), st.gflops));
+        }
+    }
+    println!("{}", table.to_markdown());
+    let (name, g) = best.unwrap();
+    println!("ideal aggregate: {ideal:.2} GFLOPS");
+    println!("best schedule:   {name} at {g:.2} GFLOPS ({:.0}% of ideal)", g / ideal * 100.0);
+    assert!(name.starts_with("CA-DAS L3+L4"), "paper's winner should win");
+}

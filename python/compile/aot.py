@@ -1,0 +1,80 @@
+"""AOT lowering: JAX model → HLO *text* artifacts + manifest.
+
+The interchange format is HLO text, NOT a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (`make artifacts`); the Rust binary is then
+self-contained. Python never runs on the request path.
+
+Manifest format (one artifact per line):
+    name m n k dtype variant file
+"""
+
+import argparse
+import sys
+from pathlib import Path
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile.model import GemmSpec, default_artifact_specs, make_gemm  # noqa: E402
+
+MANIFEST_NAME = "manifest.txt"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec: GemmSpec) -> str:
+    dtype = {"f64": jax.numpy.float64, "f32": jax.numpy.float32}[spec.dtype]
+    a = jax.ShapeDtypeStruct((spec.m, spec.k), dtype)
+    b = jax.ShapeDtypeStruct((spec.k, spec.n), dtype)
+    lowered = jax.jit(make_gemm(spec)).lower(a, b)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: Path, specs=None, verbose: bool = True) -> Path:
+    specs = specs if specs is not None else default_artifact_specs()
+    out_dir.mkdir(parents=True, exist_ok=True)
+    lines = []
+    for spec in specs:
+        text = lower_spec(spec)
+        fname = f"{spec.name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        lines.append(
+            f"{spec.name} {spec.m} {spec.n} {spec.k} {spec.dtype} {spec.variant} {fname}"
+        )
+        if verbose:
+            print(f"  lowered {spec.name}: {len(text)} chars", file=sys.stderr)
+    manifest = out_dir / MANIFEST_NAME
+    manifest.write_text("\n".join(lines) + "\n")
+    if verbose:
+        print(f"wrote {len(specs)} artifacts + {manifest}", file=sys.stderr)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the smallest artifact (CI smoke)")
+    args = ap.parse_args()
+    specs = None
+    if args.quick:
+        specs = [GemmSpec("gemm_big_64", 64, 64, 64, "big")]
+    build(Path(args.out), specs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Layer-1 Pallas blocked GEMM.
+
+The five-loop cache-blocked structure of BLIS GEMM (paper Fig. 1/2),
+re-expressed for the TPU memory model (DESIGN.md §4 Hardware-Adaptation):
+
+* the paper's (mc, kc, nc) cache parameters become the `BlockSpec` block
+  shapes (bm, bk, bn) — the declaration of what resides in VMEM
+  (the TPU's explicitly-managed analogue of the L1/L2 the paper tunes);
+* the grid (n/bn, m/bm, k/bk) walks the same jc → ic → pc traversal, and
+  the innermost grid axis accumulates into `o_ref` exactly as Loop 2
+  accumulates into C — sequential, race-free (the paper's reason never
+  to parallelize Loop 2);
+* the per-block `jnp.dot` is the MXU-tile "micro-kernel".
+
+`interpret=True` everywhere: real-TPU lowering emits Mosaic custom-calls
+that the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _gemm_body(a_ref, b_ref, o_ref):
+    # Zero-initialize on the first k step, then accumulate: the Loop-2
+    # discipline (C updated by one block-panel product per pc step).
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm_blocked(a: jax.Array, b: jax.Array, *, bm: int = 128, bn: int = 128,
+                 bk: int = 256) -> jax.Array:
+    """C = A·B with explicit (bm, bn, bk) VMEM blocking.
+
+    Arbitrary shapes are zero-padded up to block multiples (the same
+    job the paper's edge micro-kernels do) and the result sliced back.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    assert a.dtype == b.dtype
+
+    bm_, bn_, bk_ = min(bm, max(m, 1)), min(bn, max(n, 1)), min(bk, max(k, 1))
+    mp = -(-m // bm_) * bm_
+    np_ = -(-n // bn_) * bn_
+    kp = -(-k // bk_) * bk_
+    a_p = _pad_to(a, mp, kp)
+    b_p = _pad_to(b, kp, np_)
+
+    grid = (np_ // bn_, mp // bm_, kp // bk_)
+    out = pl.pallas_call(
+        _gemm_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda jn, im, lk: (im, lk)),
+            pl.BlockSpec((bk_, bn_), lambda jn, im, lk: (lk, jn)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda jn, im, lk: (im, jn)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def gemm_accum(a: jax.Array, b: jax.Array, c: jax.Array, **blocks) -> jax.Array:
+    """The paper's BLAS semantics: C += A·B."""
+    return c + gemm_blocked(a, b, **blocks)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, itemsize: int = 8) -> int:
+    """Estimated VMEM residency of one grid step (A block + B block +
+    O block), the quantity DESIGN.md §7 budgets against the 16 MiB VMEM.
+    Double-buffering doubles the input blocks."""
+    a = bm * bk * itemsize
+    b = bk * bn * itemsize
+    o = bm * bn * itemsize
+    return 2 * (a + b) + o

@@ -1,0 +1,44 @@
+"""Layer-1 Pallas micro-kernel.
+
+The paper's innermost unit (Fig. 1 "Micro-kernel"): an (mr×kc) packed A
+slice times a (kc×nr) packed B micro-panel producing an mr×nr register
+block, implemented on the CPU interpret path as a single VMEM-resident
+contraction.
+
+Hardware adaptation (DESIGN.md §4): the ARM NEON 4×4 rank-1-update loop
+does not port mechanically to TPU. The insight that *does* port is that
+the micro-kernel operands are sized to the innermost memory level; here
+both panels are declared VMEM-resident via `pallas_call` with no grid,
+and the rank-1 loop collapses into one `jnp.dot` that the TPU backend
+would map onto the MXU systolic array (`preferred_element_type` pins the
+accumulator width). `interpret=True` everywhere: the CPU PJRT plugin
+cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _micro_body(a_ref, b_ref, o_ref):
+    # One MXU-shaped contraction over the whole kc depth: the TPU
+    # analogue of the paper's kc-long rank-1 update loop.
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...],
+                         preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def micro_kernel(a_panel: jax.Array, b_panel: jax.Array) -> jax.Array:
+    """(mr, kc) @ (kc, nr) -> (mr, nr), single-invocation Pallas call."""
+    mr, kc = a_panel.shape
+    kc2, nr = b_panel.shape
+    assert kc == kc2, f"panel depth mismatch: {kc} vs {kc2}"
+    return pl.pallas_call(
+        _micro_body,
+        out_shape=jax.ShapeDtypeStruct((mr, nr), a_panel.dtype),
+        interpret=True,
+    )(a_panel, b_panel)

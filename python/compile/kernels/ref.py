@@ -1,0 +1,35 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the build-time ground truth: every Pallas kernel in this
+package is validated against them by pytest/hypothesis before the AOT
+artifacts are emitted (the CORE correctness signal of the L1 layer).
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C = A·B with accumulation in the operand dtype (paper: f64)."""
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def gemm_accum_ref(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """The BLAS semantics the paper's GEMM implements: C += A·B."""
+    return c + gemm_ref(a, b)
+
+
+def micro_kernel_ref(a_panel: jax.Array, b_panel: jax.Array) -> jax.Array:
+    """Reference for the (mr×kc)·(kc×nr) micro-kernel, computed the way
+    the paper's kernel does: as a sum of kc rank-1 outer products."""
+    mr, kc = a_panel.shape
+    kc2, nr = b_panel.shape
+    assert kc == kc2
+
+    def body(l, acc):
+        return acc + jnp.outer(a_panel[:, l], b_panel[l, :])
+
+    init = jnp.zeros((mr, nr), dtype=a_panel.dtype)
+    return jax.lax.fori_loop(0, kc, body, init)

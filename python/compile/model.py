@@ -1,0 +1,83 @@
+"""Layer-2 JAX model: the GEMM compute graph the Rust runtime executes.
+
+One jitted function per *core-type variant*: the paper's duplicated
+control trees (§5.3) become distinct AOT artifacts with different
+blocking, chosen by the Rust coordinator at dispatch time. Block shapes
+derive from the paper's cache parameters, re-quantized for the TPU
+memory model (DESIGN.md §4): the "big" variant uses large VMEM blocks
+(the 2 MiB-L2 analogue), the "little" variant small ones (512 KiB L2).
+"""
+
+from dataclasses import dataclass
+
+import jax
+
+from compile.kernels.gemm import gemm_accum, gemm_blocked, vmem_footprint_bytes
+
+jax.config.update("jax_enable_x64", True)
+
+#: TPU-adapted blocking per core-type variant. MXU-tile-aligned (mult.
+#: of 128 where the shape allows) and VMEM-bounded; the ratio between
+#: the two mirrors the paper's A15 (152, 952) vs A7 (80, 352) asymmetry.
+VARIANTS = {
+    "big": dict(bm=128, bn=128, bk=512),
+    "little": dict(bm=64, bn=128, bk=128),
+}
+
+
+@dataclass(frozen=True)
+class GemmSpec:
+    """One artifact's static description (also the manifest schema)."""
+
+    name: str
+    m: int
+    n: int
+    k: int
+    variant: str
+    dtype: str = "f64"
+
+    def blocks(self):
+        return VARIANTS[self.variant]
+
+    def vmem_bytes(self) -> int:
+        b = self.blocks()
+        itemsize = 8 if self.dtype == "f64" else 4
+        return vmem_footprint_bytes(b["bm"], b["bn"], b["bk"], itemsize)
+
+
+def make_gemm(spec: GemmSpec):
+    """The jitted C = A·B for one artifact (pure function of (A, B))."""
+    blocks = spec.blocks()
+
+    def fn(a, b):
+        return (gemm_blocked(a, b, **blocks),)
+
+    return fn
+
+
+def make_gemm_accum(spec: GemmSpec):
+    """C += A·B variant taking (A, B, C)."""
+    blocks = spec.blocks()
+
+    def fn(a, b, c):
+        return (gemm_accum(a, b, c, **blocks),)
+
+    return fn
+
+
+def default_artifact_specs():
+    """The artifact set `make artifacts` builds: square problems at the
+    runtime service's supported shapes, for both core-type variants,
+    plus one rectangular sanity shape."""
+    specs = []
+    for r in (64, 128, 256, 512):
+        for variant in ("big", "little"):
+            specs.append(GemmSpec(f"gemm_{variant}_{r}", r, r, r, variant))
+    specs.append(GemmSpec("gemm_big_96x160x224", 96, 160, 224, "big"))
+    return specs
+
+
+def validate_vmem_budget(spec: GemmSpec, budget_bytes: int = 16 * 2**20) -> bool:
+    """DESIGN.md §7: every variant's working set must clear the 16 MiB
+    VMEM budget (with double buffering)."""
+    return spec.vmem_bytes() <= budget_bytes

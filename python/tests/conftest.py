@@ -1,0 +1,6 @@
+"""Make `compile.*` importable when pytest runs from the repo root
+(the Makefile runs pytest from python/; CI runs it from /root/repo)."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

@@ -1,0 +1,83 @@
+"""L2 model + AOT pipeline tests: variant semantics, VMEM budgets,
+HLO-text emission and manifest integrity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot
+from compile.kernels.ref import gemm_ref
+from compile.model import (GemmSpec, VARIANTS, default_artifact_specs,
+                           make_gemm, make_gemm_accum, validate_vmem_budget)
+
+RNG = np.random.default_rng(7)
+
+
+def rand(shape):
+    return jnp.asarray(RNG.uniform(-1, 1, size=shape))
+
+
+class TestModel:
+    def test_both_variants_compute_gemm(self):
+        spec_b = GemmSpec("t_big", 96, 80, 112, "big")
+        spec_l = GemmSpec("t_little", 96, 80, 112, "little")
+        a, b = rand((96, 112)), rand((112, 80))
+        want = gemm_ref(a, b)
+        for spec in (spec_b, spec_l):
+            (got,) = make_gemm(spec)(a, b)
+            np.testing.assert_allclose(got, want, atol=1e-9, err_msg=spec.variant)
+
+    def test_accum_variant(self):
+        spec = GemmSpec("t", 32, 32, 32, "little")
+        a, b, c = rand((32, 32)), rand((32, 32)), rand((32, 32))
+        (got,) = make_gemm_accum(spec)(a, b, c)
+        np.testing.assert_allclose(got, c + gemm_ref(a, b), atol=1e-10)
+
+    def test_variants_are_asymmetric(self):
+        # The big variant's VMEM working set must exceed the little one's,
+        # mirroring the paper's A15-vs-A7 cache-parameter asymmetry.
+        big = GemmSpec("b", 512, 512, 512, "big").vmem_bytes()
+        little = GemmSpec("l", 512, 512, 512, "little").vmem_bytes()
+        assert big > 2 * little
+
+    def test_vmem_budget_all_variants(self):
+        for spec in default_artifact_specs():
+            assert validate_vmem_budget(spec), spec
+
+    def test_default_specs_cover_both_variants_and_shapes(self):
+        specs = default_artifact_specs()
+        variants = {s.variant for s in specs}
+        assert variants == set(VARIANTS)
+        assert any(s.m != s.n or s.n != s.k for s in specs), "needs a rectangular case"
+        names = [s.name for s in specs]
+        assert len(names) == len(set(names)), "artifact names must be unique"
+
+
+class TestAot:
+    def test_hlo_text_emission(self):
+        spec = GemmSpec("t_small", 16, 16, 16, "little")
+        text = aot.lower_spec(spec)
+        assert "HloModule" in text
+        assert "f64" in text
+        # The blocked kernel lowers to a loop/fusion structure containing
+        # a dot — make sure real compute is present, not a stub.
+        assert "dot(" in text or "dot " in text
+
+    def test_build_writes_manifest_and_artifacts(self, tmp_path):
+        specs = [
+            GemmSpec("m_one", 16, 16, 16, "big"),
+            GemmSpec("m_two", 8, 24, 16, "little"),
+        ]
+        manifest = aot.build(tmp_path, specs, verbose=False)
+        lines = manifest.read_text().strip().splitlines()
+        assert len(lines) == 2
+        name, m, n, k, dtype, variant, fname = lines[0].split()
+        assert (name, m, n, k, dtype, variant) == ("m_one", "16", "16", "16", "f64", "big")
+        assert (tmp_path / fname).exists()
+        assert "HloModule" in (tmp_path / fname).read_text()
+
+    def test_f32_spec_lowers(self):
+        text = aot.lower_spec(GemmSpec("t_f32", 8, 8, 8, "little", dtype="f32"))
+        assert "f32" in text

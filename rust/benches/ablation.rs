@@ -1,0 +1,9 @@
+//! Future-work ablation suite (§6 roadmap): core counts, DVFS, ARMv8
+//! port, per-core micro-kernels. See figures::ablation.
+fn main() {
+    let fig = amp_gemm::figures::ablation::run(false);
+    println!("{}", fig.to_markdown());
+    if !fig.passed() {
+        std::process::exit(1);
+    }
+}

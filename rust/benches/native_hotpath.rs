@@ -1,0 +1,98 @@
+//! Hot-path benchmarks for the native executor (EXPERIMENTS.md §Perf):
+//! micro-kernel throughput, packing bandwidth, sequential blocked GEMM
+//! and the full parallel executor across schedules.
+
+use amp_gemm::blis::gemm::{gemm_blocked, GemmShape, Workspace};
+use amp_gemm::blis::microkernel::{micro_kernel_4x4, micro_kernel_8x4, micro_kernel_generic};
+use amp_gemm::blis::packing::{pack_a, pack_b};
+use amp_gemm::blis::params::BlisParams;
+use amp_gemm::native::gemm_parallel;
+use amp_gemm::sched::ScheduleSpec;
+use amp_gemm::soc::{CoreType, SocSpec};
+use amp_gemm::util::benchkit::Bencher;
+use amp_gemm::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(0xBE7C);
+
+    // ---- micro-kernel: the innermost hot path ----------------------
+    for kc in [352usize, 952] {
+        let a = rng.fill_matrix(4 * kc);
+        let bb = rng.fill_matrix(4 * kc);
+        let mut c = vec![0.0; 16];
+        let flops = 2.0 * 4.0 * 4.0 * kc as f64;
+        b.bench_throughput(&format!("micro_kernel_4x4 kc={kc}"), flops, "flop", || {
+            micro_kernel_4x4(kc, &a, &bb, &mut c, 4);
+            c[0]
+        });
+        b.bench_throughput(&format!("micro_kernel_generic 4x4 kc={kc}"), flops, "flop", || {
+            micro_kernel_generic(4, 4, kc, &a, &bb, &mut c, 4, 4, 4);
+            c[0]
+        });
+    }
+
+    // 8x4 per-core-type register block (§6 future work).
+    {
+        let kc = 952;
+        let a = rng.fill_matrix(8 * kc);
+        let bb = rng.fill_matrix(4 * kc);
+        let mut c = vec![0.0; 32];
+        let flops = 2.0 * 8.0 * 4.0 * kc as f64;
+        b.bench_throughput("micro_kernel_8x4 kc=952", flops, "flop", || {
+            micro_kernel_8x4(kc, &a, &bb, &mut c, 4);
+            c[0]
+        });
+    }
+
+    // ---- packing routines ------------------------------------------
+    let p = BlisParams::a15_opt();
+    let big_src = rng.fill_matrix(512 * 1024);
+    let mut buf = Vec::new();
+    let pa_bytes = (p.mc * p.kc * 8) as f64;
+    b.bench_throughput("pack_a 152x952", pa_bytes, "byte", || {
+        pack_a(&big_src, 1024, 0, 0, p.mc, p.kc.min(1024), p.mr, &mut buf);
+        buf.len()
+    });
+    let pb_bytes = (p.kc.min(512) * 1024 * 8) as f64;
+    b.bench_throughput("pack_b 512x1024", pb_bytes, "byte", || {
+        pack_b(&big_src, 1024, 0, 0, p.kc.min(512), 1024, p.nr, &mut buf);
+        buf.len()
+    });
+
+    // ---- sequential blocked GEMM ------------------------------------
+    for r in [256usize, 512] {
+        let a = rng.fill_matrix(r * r);
+        let bb = rng.fill_matrix(r * r);
+        let mut c = vec![0.0; r * r];
+        let mut ws = Workspace::default();
+        let flops = 2.0 * (r as f64).powi(3);
+        b.bench_throughput(&format!("gemm_blocked seq r={r}"), flops, "flop", || {
+            c.iter_mut().for_each(|x| *x = 0.0);
+            gemm_blocked(&p, GemmShape::square(r), &a, &bb, &mut c, &mut ws);
+            c[0]
+        });
+    }
+
+    // ---- parallel executor across schedules -------------------------
+    let soc = SocSpec::exynos5422();
+    let r = 512;
+    let a = rng.fill_matrix(r * r);
+    let bb = rng.fill_matrix(r * r);
+    let flops = 2.0 * (r as f64).powi(3);
+    for spec in [
+        ScheduleSpec::cluster_only(CoreType::Big, 4),
+        ScheduleSpec::sss(),
+        ScheduleSpec::sas(5.0),
+        ScheduleSpec::ca_das(),
+    ] {
+        let mut c = vec![0.0; r * r];
+        b.bench_throughput(&format!("gemm_parallel {} r={r}", spec.label()), flops, "flop", || {
+            c.iter_mut().for_each(|x| *x = 0.0);
+            gemm_parallel(&soc, &spec, GemmShape::square(r), &a, &bb, &mut c);
+            c[0]
+        });
+    }
+
+    b.report("native hot path");
+}

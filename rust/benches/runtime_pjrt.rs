@@ -1,0 +1,43 @@
+//! PJRT runtime benchmarks: artifact execution latency/throughput per
+//! shape and variant, plus dispatch overhead through the runtime-thread
+//! handle (EXPERIMENTS.md §Perf). Requires `make artifacts`.
+
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::runtime::worker::PjrtHandle;
+use amp_gemm::util::benchkit::Bencher;
+use amp_gemm::util::rng::Rng;
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP runtime_pjrt: run `make artifacts` first");
+        return;
+    }
+    let h = PjrtHandle::spawn(dir).expect("runtime");
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(0x915);
+
+    for (r, variant) in [(64usize, "big"), (128, "big"), (256, "big"), (512, "big"), (256, "little")] {
+        let a = rng.fill_matrix(r * r);
+        let bb = rng.fill_matrix(r * r);
+        let flops = 2.0 * (r as f64).powi(3);
+        let shape = GemmShape::square(r);
+        b.bench_throughput(
+            &format!("pjrt exec gemm_{variant}_{r}"),
+            flops,
+            "flop",
+            || {
+                h.execute(shape, variant, a.clone(), bb.clone())
+                    .expect("execute")
+                    .1[0]
+            },
+        );
+    }
+
+    // Pure dispatch overhead: the names() round-trip has no compute.
+    b.bench("handle round-trip (names)", || h.names().unwrap().len());
+
+    b.report("PJRT runtime");
+    h.shutdown();
+}

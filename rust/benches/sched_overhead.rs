@@ -1,0 +1,75 @@
+//! Scheduling-machinery micro-benchmarks: partitioners, the dynamic
+//! chunk queue (the §5.4 critical section), control-tree construction
+//! and the coordinator's batch grouping. None of these may show up in
+//! a GEMM profile — this bench keeps them honest (EXPERIMENTS.md §Perf).
+
+use amp_gemm::blis::control_tree::{Parallelism, TreeSet};
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::coordinator::{Backend, Coordinator, Request};
+use amp_gemm::partition::{split_ratio, split_symmetric, DynamicQueue};
+use amp_gemm::sched::ScheduleSpec;
+use amp_gemm::soc::SocSpec;
+use amp_gemm::util::benchkit::Bencher;
+use amp_gemm::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bencher::default();
+
+    b.bench("split_symmetric 4096/8", || split_symmetric(4096, 8, 4).len());
+    b.bench("split_ratio 6144 r=5", || split_ratio(6144, 5.0, 4).0.len);
+
+    b.bench("dynamic queue drain 6144/152", || {
+        let q = DynamicQueue::new(6144);
+        let mut n = 0;
+        while q.grab(152).is_some() {
+            n += 1;
+        }
+        n
+    });
+
+    b.bench("dynamic queue contended drain (8 threads)", || {
+        let q = Arc::new(DynamicQueue::new(20_000));
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let q = q.clone();
+                s.spawn(move || {
+                    let size = if t < 4 { 152 } else { 32 };
+                    while q.grab(size).is_some() {}
+                });
+            }
+        });
+        q.remaining()
+    });
+
+    b.bench("TreeSet::cache_aware construction", || {
+        TreeSet::cache_aware(
+            Parallelism { loop3_ways: 2, loop4_ways: 4, ..Parallelism::sequential() },
+            Parallelism { loop3_ways: 2, loop4_ways: 4, ..Parallelism::sequential() },
+            true,
+        )
+        .is_cache_aware()
+    });
+
+    // Coordinator batch grouping + dispatch overhead (sim backend: the
+    // virtual run is microseconds, so this measures the plumbing).
+    let coord = Coordinator::new(SocSpec::exynos5422());
+    let mut rng = Rng::new(1);
+    let reqs: Vec<Request> = (0..16)
+        .map(|i| {
+            let r = [256usize, 512][i % 2];
+            Request {
+                id: i as u64,
+                shape: GemmShape::square(r),
+                a: Arc::new(rng.fill_matrix(1)),
+                b: Arc::new(rng.fill_matrix(1)),
+                backend: Backend::Sim(ScheduleSpec::ca_das()),
+            }
+        })
+        .collect();
+    b.bench("coordinator batch of 16 sim jobs", || {
+        coord.execute_batch(reqs.clone()).len()
+    });
+
+    b.report("scheduling machinery");
+}

@@ -1,0 +1,32 @@
+//! DES engine throughput: simulated runs per second across strategies
+//! and problem sizes. The engine must stay fast enough that the full
+//! figure suite regenerates in seconds (EXPERIMENTS.md §Perf).
+
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::model::PerfModel;
+use amp_gemm::sched::ScheduleSpec;
+use amp_gemm::sim::simulate;
+use amp_gemm::util::benchkit::Bencher;
+
+fn main() {
+    let model = PerfModel::exynos();
+    let mut b = Bencher::default();
+
+    for r in [512usize, 2048, 6144] {
+        for spec in [
+            ScheduleSpec::sas(5.0),
+            ScheduleSpec::ca_das(),
+        ] {
+            b.bench(&format!("simulate {} r={r}", spec.label()), || {
+                simulate(&model, &spec, GemmShape::square(r)).time_s
+            });
+        }
+    }
+
+    // The figure-suite workload: every strategy at the quick sizes.
+    b.bench("full quick figure suite", || {
+        amp_gemm::figures::run_all(&model, true).len()
+    });
+
+    b.report("sim engine");
+}

@@ -1,0 +1,388 @@
+//! Control trees (paper §5.1).
+//!
+//! BLIS drives every operation from a recursive *control tree* encoding
+//! which loops run, their strides (the cache parameters), where packing
+//! happens, and — for multi-threaded execution — which loops are
+//! parallelized and how many ways. The paper's key implementation move
+//! is *duplicating* this structure: one tree for "fast" (big) threads
+//! and one for "slow" (LITTLE) threads, so each cluster runs its own
+//! cache-aware strides (§5.3) and, in CA-DAS, its own dynamic chunk
+//! size (§5.4).
+//!
+//! We reproduce the tree as a typed recursive structure plus builders
+//! for the GEMM algorithm of Fig. 1, with validation of the paper's
+//! constraints (Loop 2 must never be parallelized — race on C; packing
+//! must sit exactly where Fig. 1 puts it).
+
+use crate::blis::params::BlisParams;
+use crate::soc::CoreType;
+
+/// The five loops of the BLIS GEMM (Fig. 1), outermost first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum LoopId {
+    /// jc over n, stride nc.
+    Loop1,
+    /// pc over k, stride kc (packs Bc; never parallel).
+    Loop2,
+    /// ic over m, stride mc (packs Ac).
+    Loop3,
+    /// jr over nc, stride nr.
+    Loop4,
+    /// ir over mc, stride mr.
+    Loop5,
+}
+
+impl LoopId {
+    pub const ALL: [LoopId; 5] = [
+        LoopId::Loop1,
+        LoopId::Loop2,
+        LoopId::Loop3,
+        LoopId::Loop4,
+        LoopId::Loop5,
+    ];
+
+    pub fn index(self) -> usize {
+        match self {
+            LoopId::Loop1 => 1,
+            LoopId::Loop2 => 2,
+            LoopId::Loop3 => 3,
+            LoopId::Loop4 => 4,
+            LoopId::Loop5 => 5,
+        }
+    }
+}
+
+/// Which operand a packing node materializes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackBuf {
+    /// `Bc` (kc×nc), packed inside Loop 2.
+    B,
+    /// `Ac` (mc×kc), packed inside Loop 3.
+    A,
+}
+
+/// A node of the control tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Node {
+    /// A blocked loop with its stride and parallelization degree.
+    Loop {
+        id: LoopId,
+        stride: usize,
+        /// 1 = sequential; >1 = iteration space partitioned this many
+        /// ways across threads (static) or served dynamically.
+        ways: usize,
+        child: Box<Node>,
+    },
+    /// Packing of one operand, then the child subtree.
+    Pack { buf: PackBuf, child: Box<Node> },
+    /// The micro-kernel leaf (mr×nr rank-1 update loop).
+    MicroKernel,
+}
+
+impl Node {
+    /// Walk the tree depth-first, calling `f` on every node.
+    pub fn visit<'a>(&'a self, f: &mut impl FnMut(&'a Node)) {
+        f(self);
+        match self {
+            Node::Loop { child, .. } | Node::Pack { child, .. } => child.visit(f),
+            Node::MicroKernel => {}
+        }
+    }
+
+    fn find_loop(&self, id: LoopId) -> Option<(&Node, usize, usize)> {
+        let mut found = None;
+        self.visit(&mut |n| {
+            if let Node::Loop { id: nid, stride, ways, .. } = n {
+                if *nid == id && found.is_none() {
+                    found = Some((n, *stride, *ways));
+                }
+            }
+        });
+        found
+    }
+}
+
+/// Degrees of parallelism for the four parallelizable loops. (Loop 2 is
+/// deliberately absent: §3.1 — "multiple threads simultaneously update
+/// the same parts of C".)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Parallelism {
+    pub loop1_ways: usize,
+    pub loop3_ways: usize,
+    pub loop4_ways: usize,
+    pub loop5_ways: usize,
+}
+
+impl Parallelism {
+    pub fn sequential() -> Self {
+        Parallelism {
+            loop1_ways: 1,
+            loop3_ways: 1,
+            loop4_ways: 1,
+            loop5_ways: 1,
+        }
+    }
+
+    /// Total thread count this parallelization implies.
+    pub fn total_ways(&self) -> usize {
+        self.loop1_ways * self.loop3_ways * self.loop4_ways * self.loop5_ways
+    }
+}
+
+/// A full control tree: the blocking parameters plus the tree built from
+/// them. One per thread *type* — the CA-* configurations instantiate two.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlTree {
+    pub params: BlisParams,
+    pub par: Parallelism,
+    pub root: Node,
+}
+
+impl ControlTree {
+    /// Build the standard GEMM tree of Fig. 1 with the given strides and
+    /// parallelization.
+    pub fn gemm(params: BlisParams, par: Parallelism) -> Self {
+        params.validate();
+        assert!(par.loop1_ways >= 1 && par.loop3_ways >= 1);
+        assert!(par.loop4_ways >= 1 && par.loop5_ways >= 1);
+        let root = Node::Loop {
+            id: LoopId::Loop1,
+            stride: params.nc,
+            ways: par.loop1_ways,
+            child: Box::new(Node::Loop {
+                id: LoopId::Loop2,
+                stride: params.kc,
+                ways: 1,
+                child: Box::new(Node::Pack {
+                    buf: PackBuf::B,
+                    child: Box::new(Node::Loop {
+                        id: LoopId::Loop3,
+                        stride: params.mc,
+                        ways: par.loop3_ways,
+                        child: Box::new(Node::Pack {
+                            buf: PackBuf::A,
+                            child: Box::new(Node::Loop {
+                                id: LoopId::Loop4,
+                                stride: params.nr,
+                                ways: par.loop4_ways,
+                                child: Box::new(Node::Loop {
+                                    id: LoopId::Loop5,
+                                    stride: params.mr,
+                                    ways: par.loop5_ways,
+                                    child: Box::new(Node::MicroKernel),
+                                }),
+                            }),
+                        }),
+                    }),
+                }),
+            }),
+        };
+        let tree = ControlTree { params, par, root };
+        tree.validate();
+        tree
+    }
+
+    /// Sequential tree with the given parameters.
+    pub fn sequential(params: BlisParams) -> Self {
+        ControlTree::gemm(params, Parallelism::sequential())
+    }
+
+    /// Structural invariants of the Fig. 1 algorithm.
+    pub fn validate(&self) {
+        // Loop order 1,2,3,4,5 outermost→innermost; Pack B directly
+        // under Loop 2; Pack A directly under Loop 3; Loop 2 sequential.
+        let mut seq = Vec::new();
+        self.root.visit(&mut |n| {
+            if let Node::Loop { id, ways, .. } = n {
+                seq.push(*id);
+                if *id == LoopId::Loop2 {
+                    assert_eq!(*ways, 1, "Loop 2 must never be parallelized (race on C)");
+                }
+            }
+        });
+        assert_eq!(seq, LoopId::ALL.to_vec(), "loop nesting order broken");
+
+        let (_, s1, _) = self.root.find_loop(LoopId::Loop1).unwrap();
+        assert_eq!(s1, self.params.nc);
+        let (_, s4, _) = self.root.find_loop(LoopId::Loop4).unwrap();
+        assert_eq!(s4, self.params.nr);
+    }
+
+    /// Stride of a loop.
+    pub fn stride(&self, id: LoopId) -> usize {
+        self.root.find_loop(id).expect("loop exists").1
+    }
+
+    /// Parallelization ways of a loop.
+    pub fn ways(&self, id: LoopId) -> usize {
+        self.root.find_loop(id).expect("loop exists").2
+    }
+
+    /// Trip count of a loop for a problem extent along its dimension.
+    pub fn trips(&self, id: LoopId, m: usize, n: usize, k: usize) -> usize {
+        let (extent, stride) = match id {
+            LoopId::Loop1 => (n, self.params.nc),
+            LoopId::Loop2 => (k, self.params.kc),
+            LoopId::Loop3 => (m, self.params.mc),
+            LoopId::Loop4 => (n.min(self.params.nc), self.params.nr),
+            LoopId::Loop5 => (m.min(self.params.mc), self.params.mr),
+        };
+        extent.div_ceil(stride)
+    }
+}
+
+/// The pair of control trees bound to thread types (§5.3): the paper's
+/// "two different control-trees ... for fast and slow threads".
+#[derive(Debug, Clone, PartialEq)]
+pub struct TreeSet {
+    pub big: ControlTree,
+    pub little: ControlTree,
+}
+
+impl TreeSet {
+    /// Architecture-oblivious: one configuration for every thread
+    /// (the original BLIS behaviour, §4 / plain SAS §5.2).
+    pub fn single(params: BlisParams, par: Parallelism) -> Self {
+        TreeSet {
+            big: ControlTree::gemm(params, par),
+            little: ControlTree::gemm(params, par),
+        }
+    }
+
+    /// Cache-aware: per-cluster parameters (CA-SAS §5.3 / CA-DAS §5.4).
+    /// `shared_bc` = the coarse loop is Loop 3, so `Bc` (hence `kc`) is
+    /// shared and the LITTLE tree must use the common-kc refit.
+    pub fn cache_aware(par_big: Parallelism, par_little: Parallelism, shared_bc: bool) -> Self {
+        let big = ControlTree::gemm(BlisParams::cache_aware_for(CoreType::Big, shared_bc), par_big);
+        let little = ControlTree::gemm(
+            BlisParams::cache_aware_for(CoreType::Little, shared_bc),
+            par_little,
+        );
+        if shared_bc {
+            assert_eq!(
+                big.params.kc, little.params.kc,
+                "shared Bc requires a common kc across trees (§5.3)"
+            );
+        }
+        TreeSet { big, little }
+    }
+
+    pub fn for_core(&self, t: CoreType) -> &ControlTree {
+        match t {
+            CoreType::Big => &self.big,
+            CoreType::Little => &self.little,
+        }
+    }
+
+    pub fn is_cache_aware(&self) -> bool {
+        self.big.params != self.little.params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_tree_structure_matches_fig1() {
+        let t = ControlTree::sequential(BlisParams::a15_opt());
+        // Strides map to the cache parameters.
+        assert_eq!(t.stride(LoopId::Loop1), 4096);
+        assert_eq!(t.stride(LoopId::Loop2), 952);
+        assert_eq!(t.stride(LoopId::Loop3), 152);
+        assert_eq!(t.stride(LoopId::Loop4), 4);
+        assert_eq!(t.stride(LoopId::Loop5), 4);
+        // Pack nodes sit where Fig. 1 puts them.
+        let mut packs = Vec::new();
+        let mut loops_seen = 0;
+        t.root.visit(&mut |n| match n {
+            Node::Loop { .. } => loops_seen += 1,
+            Node::Pack { buf, .. } => packs.push((*buf, loops_seen)),
+            Node::MicroKernel => {}
+        });
+        assert_eq!(packs, vec![(PackBuf::B, 2), (PackBuf::A, 3)]);
+    }
+
+    #[test]
+    fn trip_counts() {
+        let t = ControlTree::sequential(BlisParams::a15_opt());
+        // r = 4096: Loop 1 takes 1 trip (nc=4096), Loop 2 ⌈4096/952⌉=5.
+        assert_eq!(t.trips(LoopId::Loop1, 4096, 4096, 4096), 1);
+        assert_eq!(t.trips(LoopId::Loop2, 4096, 4096, 4096), 5);
+        assert_eq!(t.trips(LoopId::Loop3, 4096, 4096, 4096), 27);
+        assert_eq!(t.trips(LoopId::Loop4, 4096, 4096, 4096), 1024);
+        assert_eq!(t.trips(LoopId::Loop5, 4096, 4096, 4096), 38);
+    }
+
+    #[test]
+    fn parallel_ways_recorded() {
+        let par = Parallelism {
+            loop1_ways: 2,
+            loop3_ways: 1,
+            loop4_ways: 4,
+            loop5_ways: 1,
+        };
+        let t = ControlTree::gemm(BlisParams::a15_opt(), par);
+        assert_eq!(t.ways(LoopId::Loop1), 2);
+        assert_eq!(t.ways(LoopId::Loop4), 4);
+        assert_eq!(par.total_ways(), 8);
+    }
+
+    #[test]
+    fn loop2_parallelization_is_impossible_by_construction() {
+        // Parallelism has no loop2 field; the built tree always has
+        // ways=1 there, and validate() enforces it.
+        let t = ControlTree::sequential(BlisParams::a7_opt());
+        assert_eq!(t.ways(LoopId::Loop2), 1);
+    }
+
+    #[test]
+    fn cache_aware_treeset_loop1_coarse() {
+        // Independent buffers: each cluster its own optimum.
+        let s = TreeSet::cache_aware(
+            Parallelism { loop1_ways: 2, loop4_ways: 4, ..Parallelism::sequential() },
+            Parallelism { loop1_ways: 2, loop4_ways: 4, ..Parallelism::sequential() },
+            false,
+        );
+        assert_eq!(s.big.params, BlisParams::a15_opt());
+        assert_eq!(s.little.params, BlisParams::a7_opt());
+        assert!(s.is_cache_aware());
+    }
+
+    #[test]
+    fn cache_aware_treeset_loop3_coarse_shares_kc() {
+        // Shared Bc: common kc = 952, LITTLE refits mc = 32 (§5.3).
+        let s = TreeSet::cache_aware(
+            Parallelism { loop3_ways: 2, loop4_ways: 4, ..Parallelism::sequential() },
+            Parallelism { loop3_ways: 2, loop4_ways: 4, ..Parallelism::sequential() },
+            true,
+        );
+        assert_eq!(s.little.params, BlisParams::a7_shared_kc());
+        assert_eq!(s.big.params.kc, s.little.params.kc);
+    }
+
+    #[test]
+    fn single_treeset_is_oblivious() {
+        let s = TreeSet::single(BlisParams::a15_opt(), Parallelism::sequential());
+        assert!(!s.is_cache_aware());
+        assert_eq!(s.for_core(CoreType::Little).params, BlisParams::a15_opt());
+    }
+
+    #[test]
+    fn visit_covers_all_nodes() {
+        let t = ControlTree::sequential(BlisParams::a7_opt());
+        let mut count = 0;
+        t.root.visit(&mut |_| count += 1);
+        // 5 loops + 2 packs + 1 micro-kernel.
+        assert_eq!(count, 8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_ways_rejected() {
+        ControlTree::gemm(
+            BlisParams::a15_opt(),
+            Parallelism { loop1_ways: 0, ..Parallelism::sequential() },
+        );
+    }
+}

@@ -1,0 +1,286 @@
+//! Single-threaded five-loop BLIS GEMM (Fig. 1) over row-major f64
+//! matrices: `C(m×n) += A(m×k) · B(k×n)`.
+//!
+//! This is both the sequential reference used to verify the parallel
+//! executors and the per-thread body they are built from: Loop 1 (jc/nc)
+//! → Loop 2 (pc/kc, pack `Bc`) → Loop 3 (ic/mc, pack `Ac`) → macro-kernel
+//! (Loop 4 jr/nr × Loop 5 ir/mr around the micro-kernel).
+
+use crate::blis::microkernel::micro_kernel;
+use crate::blis::packing::{a_panel, b_panel, pack_a, pack_b};
+use crate::blis::params::BlisParams;
+
+/// A GEMM problem over borrowed row-major buffers.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmShape {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl GemmShape {
+    pub fn square(r: usize) -> Self {
+        GemmShape { m: r, n: r, k: r }
+    }
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+}
+
+/// Naive triple loop — the correctness oracle for everything else.
+pub fn gemm_naive(shape: GemmShape, a: &[f64], b: &[f64], c: &mut [f64]) {
+    let GemmShape { m, n, k } = shape;
+    assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
+    for i in 0..m {
+        for l in 0..k {
+            let ail = a[i * k + l];
+            if ail == 0.0 {
+                continue;
+            }
+            let b_row = &b[l * n..l * n + n];
+            let c_row = &mut c[i * n..i * n + n];
+            for j in 0..n {
+                c_row[j] += ail * b_row[j];
+            }
+        }
+    }
+}
+
+/// Reusable packing workspace — one per thread in the parallel
+/// executors, so the hot loop never allocates.
+#[derive(Debug, Default, Clone)]
+pub struct Workspace {
+    pub ac: Vec<f64>,
+    pub bc: Vec<f64>,
+}
+
+/// The macro-kernel: Loops 4+5 over one packed (`Ac`, `Bc`) pair,
+/// updating the `mc_eff × nc_eff` block of C at (row0, col0).
+/// `jr_range`/`ir_range` select a sub-range of micro-kernel columns/rows
+/// (in units of nr/mr panels) — the hook the fine-grain (intra-cluster)
+/// parallelization uses to split Loop 4 and/or Loop 5 (§3.1).
+#[allow(clippy::too_many_arguments)]
+pub fn macro_kernel(
+    p: &BlisParams,
+    ac: &[f64],
+    bc: &[f64],
+    kc_eff: usize,
+    mc_eff: usize,
+    nc_eff: usize,
+    c: &mut [f64],
+    ldc: usize,
+    row0: usize,
+    col0: usize,
+    jr_range: std::ops::Range<usize>,
+    ir_range: std::ops::Range<usize>,
+) {
+    let n_jr = nc_eff.div_ceil(p.nr);
+    let n_ir = mc_eff.div_ceil(p.mr);
+    debug_assert!(jr_range.end <= n_jr && ir_range.end <= n_ir);
+
+    for jr in jr_range {
+        let n_eff = (nc_eff - jr * p.nr).min(p.nr);
+        let br = b_panel(bc, jr, p.nr, kc_eff);
+        for ir in ir_range.clone() {
+            let m_eff = (mc_eff - ir * p.mr).min(p.mr);
+            let ap = a_panel(ac, ir, p.mr, kc_eff);
+            let c_off = (row0 + ir * p.mr) * ldc + col0 + jr * p.nr;
+            micro_kernel(
+                p.mr,
+                p.nr,
+                kc_eff,
+                ap,
+                br,
+                &mut c[c_off..],
+                ldc,
+                m_eff,
+                n_eff,
+            );
+        }
+    }
+}
+
+/// Full sequential blocked GEMM with blocking parameters `p`.
+pub fn gemm_blocked(
+    p: &BlisParams,
+    shape: GemmShape,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    ws: &mut Workspace,
+) {
+    let GemmShape { m, n, k } = shape;
+    assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
+
+    // Loop 1: jc over n in steps of nc.
+    let mut jc = 0;
+    while jc < n {
+        let nc_eff = (n - jc).min(p.nc);
+        // Loop 2: pc over k in steps of kc; pack Bc.
+        let mut pc = 0;
+        while pc < k {
+            let kc_eff = (k - pc).min(p.kc);
+            pack_b(b, n, pc, jc, kc_eff, nc_eff, p.nr, &mut ws.bc);
+            // Loop 3: ic over m in steps of mc; pack Ac.
+            let mut ic = 0;
+            while ic < m {
+                let mc_eff = (m - ic).min(p.mc);
+                pack_a(a, k, ic, pc, mc_eff, kc_eff, p.mr, &mut ws.ac);
+                macro_kernel(
+                    p,
+                    &ws.ac,
+                    &ws.bc,
+                    kc_eff,
+                    mc_eff,
+                    nc_eff,
+                    c,
+                    n,
+                    ic,
+                    jc,
+                    0..nc_eff.div_ceil(p.nr),
+                    0..mc_eff.div_ceil(p.mr),
+                );
+                ic += p.mc;
+            }
+            pc += p.kc;
+        }
+        jc += p.nc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::{gemm_tolerance, max_abs_diff};
+
+    fn check_blocked(p: &BlisParams, m: usize, n: usize, k: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = rng.fill_matrix(m * k);
+        let b = rng.fill_matrix(k * n);
+        let c0 = rng.fill_matrix(m * n);
+        let mut c_ref = c0.clone();
+        let mut c_blk = c0.clone();
+        gemm_naive(GemmShape { m, n, k }, &a, &b, &mut c_ref);
+        let mut ws = Workspace::default();
+        gemm_blocked(p, GemmShape { m, n, k }, &a, &b, &mut c_blk, &mut ws);
+        let d = max_abs_diff(&c_ref, &c_blk);
+        assert!(d < gemm_tolerance(k), "m={m} n={n} k={k}: diff {d}");
+    }
+
+    #[test]
+    fn blocked_matches_naive_small_params() {
+        // Tiny blocking forces every loop to take multiple iterations.
+        let p = BlisParams::new(8, 5, 4, 4, 4);
+        check_blocked(&p, 17, 13, 11, 1);
+        check_blocked(&p, 4, 4, 4, 2);
+        check_blocked(&p, 1, 1, 1, 3);
+        check_blocked(&p, 9, 23, 5, 4);
+    }
+
+    #[test]
+    fn blocked_matches_naive_paper_params() {
+        // Paper parameters on a small problem: single iteration of outer
+        // loops plus edge handling everywhere.
+        check_blocked(&BlisParams::a15_opt(), 100, 100, 100, 5);
+        check_blocked(&BlisParams::a7_opt(), 97, 61, 43, 6);
+        check_blocked(&BlisParams::a7_shared_kc(), 64, 64, 64, 7);
+    }
+
+    #[test]
+    fn blocked_matches_naive_multi_block() {
+        // Exceeds mc/kc for the A7 params: all five loops iterate.
+        check_blocked(&BlisParams::a7_opt(), 200, 96, 800, 8);
+    }
+
+    #[test]
+    fn blocked_with_8x4_register_block_matches() {
+        // §6 future work: the per-core 8×4 micro-kernel, end to end.
+        check_blocked(&BlisParams::a15_opt_8x4(), 100, 64, 80, 12);
+        check_blocked(&BlisParams::a15_opt_8x4(), 31, 17, 23, 13);
+    }
+
+    #[test]
+    fn non_square_extremes() {
+        let p = BlisParams::new(16, 8, 8, 4, 4);
+        check_blocked(&p, 1, 64, 3, 9); // row vector-ish
+        check_blocked(&p, 64, 1, 3, 10); // column vector-ish
+        check_blocked(&p, 3, 3, 200, 11); // deep k
+    }
+
+    #[test]
+    fn macro_kernel_subranges_compose() {
+        // Splitting jr/ir ranges must give the same C as the full sweep —
+        // the invariant the intra-cluster Loop-4/5 parallelization rests on.
+        let mut rng = Rng::new(42);
+        let p = BlisParams::new(16, 6, 8, 4, 4);
+        let (mc_eff, nc_eff, kc_eff) = (7, 14, 6);
+        let mut ws_a = Vec::new();
+        let mut ws_b = Vec::new();
+        let a_src = rng.fill_matrix(mc_eff * kc_eff);
+        let b_src = rng.fill_matrix(kc_eff * nc_eff);
+        pack_a(&a_src, kc_eff, 0, 0, mc_eff, kc_eff, p.mr, &mut ws_a);
+        pack_b(&b_src, nc_eff, 0, 0, kc_eff, nc_eff, p.nr, &mut ws_b);
+
+        let ldc = nc_eff;
+        let n_jr = nc_eff.div_ceil(p.nr);
+        let n_ir = mc_eff.div_ceil(p.mr);
+
+        let mut c_full = vec![0.0; mc_eff * ldc];
+        macro_kernel(&p, &ws_a, &ws_b, kc_eff, mc_eff, nc_eff, &mut c_full, ldc, 0, 0, 0..n_jr, 0..n_ir);
+
+        let mut c_split = vec![0.0; mc_eff * ldc];
+        let mid_jr = n_jr / 2;
+        let mid_ir = n_ir / 2;
+        for jr in [0..mid_jr, mid_jr..n_jr] {
+            for ir in [0..mid_ir, mid_ir..n_ir] {
+                macro_kernel(
+                    &p, &ws_a, &ws_b, kc_eff, mc_eff, nc_eff, &mut c_split, ldc, 0, 0,
+                    jr.clone(), ir,
+                );
+            }
+        }
+        assert!(max_abs_diff(&c_full, &c_split) < 1e-12);
+    }
+
+    #[test]
+    fn gemm_shape_helpers() {
+        let s = GemmShape::square(128);
+        assert_eq!((s.m, s.n, s.k), (128, 128, 128));
+        assert_eq!(s.flops(), 2.0 * 128f64.powi(3));
+    }
+
+    /// Property: random shapes and random (legal) blockings agree with
+    /// the oracle.
+    #[test]
+    fn prop_blocked_equals_naive() {
+        crate::util::prop::check(
+            &crate::util::prop::Config { cases: 48, seed: 0xB10C },
+            |r| {
+                let m = r.gen_range(1, 40);
+                let n = r.gen_range(1, 40);
+                let k = r.gen_range(1, 40);
+                let mr = r.gen_range(1, 5);
+                let nr = r.gen_range(1, 5);
+                let mc = mr * r.gen_range(1, 5);
+                let nc = nr * r.gen_range(1, 5);
+                let kc = r.gen_range(1, 12);
+                (m, n, k, BlisParams::new(nc, kc, mc, nr, mr), r.next_u64())
+            },
+            |&(m, n, k, p, seed)| {
+                let mut rng = Rng::new(seed);
+                let a = rng.fill_matrix(m * k);
+                let b = rng.fill_matrix(k * n);
+                let mut c_ref = vec![0.0; m * n];
+                let mut c_blk = vec![0.0; m * n];
+                gemm_naive(GemmShape { m, n, k }, &a, &b, &mut c_ref);
+                gemm_blocked(&p, GemmShape { m, n, k }, &a, &b, &mut c_blk, &mut Workspace::default());
+                let d = max_abs_diff(&c_ref, &c_blk);
+                if d > gemm_tolerance(k) {
+                    return Err(format!("diff {d}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,358 @@
+//! Native f64 micro-kernel: the innermost compute of the BLIS GEMM
+//! (Fig. 1, "Micro-kernel"): `C(mr×nr) += A_slice(mr×kc) · Br(kc×nr)`,
+//! implemented as a loop of rank-1 updates over packed micro-panels —
+//! the same structure the paper's hand-tuned NEON kernel has (mr=nr=4).
+//!
+//! Operand layout (produced by [`crate::blis::packing`]):
+//! * `a`: column-major `mr×kc` slice — element (i, l) at `a[l*mr + i]`;
+//! * `b`: row-major `kc×nr` micro-panel — element (l, j) at `b[l*nr + j]`;
+//! * `c`: an `mr×nr` window into the output, row stride `ldc` (row-major
+//!   storage of C throughout this crate).
+//!
+//! The generic path handles any (mr, nr); the `4×4` fast path keeps the
+//! accumulators in 16 named locals so rustc maps them to registers —
+//! the hot path of the native executor (EXPERIMENTS.md §Perf).
+
+/// Generic micro-kernel for arbitrary register blocking. `m_eff`/`n_eff`
+/// handle edge tiles (≤ mr/nr): only the first `m_eff` rows and `n_eff`
+/// columns of the register block are written back.
+#[allow(clippy::too_many_arguments)]
+pub fn micro_kernel_generic(
+    mr: usize,
+    nr: usize,
+    kc: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    m_eff: usize,
+    n_eff: usize,
+) {
+    debug_assert!(a.len() >= mr * kc);
+    debug_assert!(b.len() >= kc * nr);
+    debug_assert!(m_eff <= mr && n_eff <= nr);
+    // Accumulate the full register block, write back the live window —
+    // exactly what a padded edge micro-kernel does.
+    let mut acc = vec![0.0f64; mr * nr];
+    for l in 0..kc {
+        let a_col = &a[l * mr..l * mr + mr];
+        let b_row = &b[l * nr..l * nr + nr];
+        for i in 0..mr {
+            let ai = a_col[i];
+            let row = &mut acc[i * nr..i * nr + nr];
+            for j in 0..nr {
+                row[j] += ai * b_row[j];
+            }
+        }
+    }
+    for i in 0..m_eff {
+        for j in 0..n_eff {
+            c[i * ldc + j] += acc[i * nr + j];
+        }
+    }
+}
+
+/// Specialized 4×4 micro-kernel (the paper's register blocking for both
+/// core types, §3.3). Fully-interior tiles only (`m_eff = n_eff = 4`).
+#[inline]
+pub fn micro_kernel_4x4(kc: usize, a: &[f64], b: &[f64], c: &mut [f64], ldc: usize) {
+    debug_assert!(a.len() >= 4 * kc);
+    debug_assert!(b.len() >= 4 * kc);
+    debug_assert!(c.len() >= 3 * ldc + 4);
+
+    let (mut c00, mut c01, mut c02, mut c03) = (0.0f64, 0.0, 0.0, 0.0);
+    let (mut c10, mut c11, mut c12, mut c13) = (0.0f64, 0.0, 0.0, 0.0);
+    let (mut c20, mut c21, mut c22, mut c23) = (0.0f64, 0.0, 0.0, 0.0);
+    let (mut c30, mut c31, mut c32, mut c33) = (0.0f64, 0.0, 0.0, 0.0);
+
+    // SAFETY: bounds asserted above; the loop indexes strictly below
+    // 4*kc for both panels.
+    unsafe {
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        for l in 0..kc {
+            let a0 = *pa.add(4 * l);
+            let a1 = *pa.add(4 * l + 1);
+            let a2 = *pa.add(4 * l + 2);
+            let a3 = *pa.add(4 * l + 3);
+            let b0 = *pb.add(4 * l);
+            let b1 = *pb.add(4 * l + 1);
+            let b2 = *pb.add(4 * l + 2);
+            let b3 = *pb.add(4 * l + 3);
+
+            c00 += a0 * b0;
+            c01 += a0 * b1;
+            c02 += a0 * b2;
+            c03 += a0 * b3;
+            c10 += a1 * b0;
+            c11 += a1 * b1;
+            c12 += a1 * b2;
+            c13 += a1 * b3;
+            c20 += a2 * b0;
+            c21 += a2 * b1;
+            c22 += a2 * b2;
+            c23 += a2 * b3;
+            c30 += a3 * b0;
+            c31 += a3 * b1;
+            c32 += a3 * b2;
+            c33 += a3 * b3;
+        }
+    }
+
+    c[0] += c00;
+    c[1] += c01;
+    c[2] += c02;
+    c[3] += c03;
+    c[ldc] += c10;
+    c[ldc + 1] += c11;
+    c[ldc + 2] += c12;
+    c[ldc + 3] += c13;
+    c[2 * ldc] += c20;
+    c[2 * ldc + 1] += c21;
+    c[2 * ldc + 2] += c22;
+    c[2 * ldc + 3] += c23;
+    c[3 * ldc] += c30;
+    c[3 * ldc + 1] += c31;
+    c[3 * ldc + 2] += c32;
+    c[3 * ldc + 3] += c33;
+}
+
+/// Specialized 8×4 micro-kernel — the §6 future-work per-core-type
+/// register blocking for the big cores (each `Br` row is loaded once
+/// per *eight* C rows instead of four). Interior tiles only.
+#[inline]
+pub fn micro_kernel_8x4(kc: usize, a: &[f64], b: &[f64], c: &mut [f64], ldc: usize) {
+    debug_assert!(a.len() >= 8 * kc);
+    debug_assert!(b.len() >= 4 * kc);
+    debug_assert!(c.len() >= 7 * ldc + 4);
+
+    let mut acc = [[0.0f64; 4]; 8];
+    // SAFETY: bounds asserted above.
+    unsafe {
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        for l in 0..kc {
+            let b0 = *pb.add(4 * l);
+            let b1 = *pb.add(4 * l + 1);
+            let b2 = *pb.add(4 * l + 2);
+            let b3 = *pb.add(4 * l + 3);
+            for (i, row) in acc.iter_mut().enumerate() {
+                let ai = *pa.add(8 * l + i);
+                row[0] += ai * b0;
+                row[1] += ai * b1;
+                row[2] += ai * b2;
+                row[3] += ai * b3;
+            }
+        }
+    }
+    for (i, row) in acc.iter().enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            c[i * ldc + j] += v;
+        }
+    }
+}
+
+/// Dispatch: use the 4×4 fast path when the tile is interior and the
+/// blocking is the paper's 4×4; otherwise fall back to the generic path.
+#[allow(clippy::too_many_arguments)]
+pub fn micro_kernel(
+    mr: usize,
+    nr: usize,
+    kc: usize,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    m_eff: usize,
+    n_eff: usize,
+) {
+    if mr == 4 && nr == 4 && m_eff == 4 && n_eff == 4 {
+        micro_kernel_4x4(kc, a, b, c, ldc);
+    } else if mr == 8 && nr == 4 && m_eff == 8 && n_eff == 4 {
+        micro_kernel_8x4(kc, a, b, c, ldc);
+    } else {
+        micro_kernel_generic(mr, nr, kc, a, b, c, ldc, m_eff, n_eff);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Reference: dense mr×nr += (mr×kc)·(kc×nr) on the packed layouts.
+    fn reference(
+        mr: usize,
+        nr: usize,
+        kc: usize,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+        ldc: usize,
+        m_eff: usize,
+        n_eff: usize,
+    ) {
+        for i in 0..m_eff {
+            for j in 0..n_eff {
+                let mut s = 0.0;
+                for l in 0..kc {
+                    s += a[l * mr + i] * b[l * nr + j];
+                }
+                c[i * ldc + j] += s;
+            }
+        }
+    }
+
+    fn random_case(rng: &mut Rng, mr: usize, nr: usize, kc: usize) -> (Vec<f64>, Vec<f64>) {
+        (rng.fill_matrix(mr * kc), rng.fill_matrix(kc * nr))
+    }
+
+    #[test]
+    fn fast_path_matches_reference() {
+        let mut rng = Rng::new(100);
+        for kc in [1usize, 2, 7, 64, 352, 952] {
+            let (a, b) = random_case(&mut rng, 4, 4, kc);
+            let mut c_fast = rng.fill_matrix(4 * 8);
+            let mut c_ref = c_fast.clone();
+            micro_kernel_4x4(kc, &a, &b, &mut c_fast, 8);
+            reference(4, 4, kc, &a, &b, &mut c_ref, 8, 4, 4);
+            for (x, y) in c_fast.iter().zip(&c_ref) {
+                assert!((x - y).abs() < 1e-10 * kc as f64, "kc={kc}");
+            }
+        }
+    }
+
+    #[test]
+    fn generic_path_various_blockings() {
+        let mut rng = Rng::new(101);
+        for &(mr, nr) in &[(2usize, 2usize), (4, 4), (6, 8), (8, 4), (1, 1)] {
+            let kc = 37;
+            let (a, b) = random_case(&mut rng, mr, nr, kc);
+            let ldc = nr + 3;
+            let mut c = rng.fill_matrix(mr * ldc);
+            let mut c_ref = c.clone();
+            micro_kernel_generic(mr, nr, kc, &a, &b, &mut c, ldc, mr, nr);
+            reference(mr, nr, kc, &a, &b, &mut c_ref, ldc, mr, nr);
+            for (x, y) in c.iter().zip(&c_ref) {
+                assert!((x - y).abs() < 1e-11, "mr={mr} nr={nr}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_8x4_matches_reference() {
+        let mut rng = Rng::new(105);
+        for kc in [1usize, 33, 352] {
+            let (a, b) = random_case(&mut rng, 8, 4, kc);
+            let ldc = 6;
+            let mut c_fast = rng.fill_matrix(8 * ldc);
+            let mut c_ref = c_fast.clone();
+            micro_kernel_8x4(kc, &a, &b, &mut c_fast, ldc);
+            reference(8, 4, kc, &a, &b, &mut c_ref, ldc, 8, 4);
+            for (x, y) in c_fast.iter().zip(&c_ref) {
+                assert!((x - y).abs() < 1e-10 * kc as f64, "kc={kc}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_hits_8x4_path() {
+        let mut rng = Rng::new(106);
+        let (a, b) = random_case(&mut rng, 8, 4, 17);
+        let mut c_d = vec![0.0; 32];
+        let mut c_g = vec![0.0; 32];
+        micro_kernel(8, 4, 17, &a, &b, &mut c_d, 4, 8, 4);
+        micro_kernel_generic(8, 4, 17, &a, &b, &mut c_g, 4, 8, 4);
+        for (x, y) in c_d.iter().zip(&c_g) {
+            assert!((x - y).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn edge_tiles_do_not_write_outside_live_window() {
+        let mut rng = Rng::new(102);
+        let (mr, nr, kc) = (4, 4, 20);
+        let (a, b) = random_case(&mut rng, mr, nr, kc);
+        let ldc = 6;
+        let mut c = vec![7.0; mr * ldc];
+        let before = c.clone();
+        micro_kernel(mr, nr, kc, &a, &b, &mut c, ldc, 2, 3);
+        for i in 0..mr {
+            for j in 0..ldc {
+                let touched = i < 2 && j < 3;
+                if !touched {
+                    assert_eq!(c[i * ldc + j], before[i * ldc + j], "({i},{j}) clobbered");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accumulates_into_c() {
+        // C += A·B run twice doubles the update.
+        let mut rng = Rng::new(103);
+        let (a, b) = random_case(&mut rng, 4, 4, 16);
+        let mut c1 = vec![0.0; 16];
+        micro_kernel_4x4(16, &a, &b, &mut c1, 4);
+        let mut c2 = vec![0.0; 16];
+        micro_kernel_4x4(16, &a, &b, &mut c2, 4);
+        micro_kernel_4x4(16, &a, &b, &mut c2, 4);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((2.0 * x - y).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn kc_zero_is_identity() {
+        let a: Vec<f64> = vec![];
+        let b: Vec<f64> = vec![];
+        let mut c = vec![1.0; 16];
+        micro_kernel(4, 4, 0, &a, &b, &mut c, 4, 4, 4);
+        assert!(c.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn dispatch_uses_fast_and_generic_consistently() {
+        let mut rng = Rng::new(104);
+        let (a, b) = random_case(&mut rng, 4, 4, 33);
+        let mut c_d = vec![0.0; 16];
+        let mut c_g = vec![0.0; 16];
+        micro_kernel(4, 4, 33, &a, &b, &mut c_d, 4, 4, 4);
+        micro_kernel_generic(4, 4, 33, &a, &b, &mut c_g, 4, 4, 4);
+        for (x, y) in c_d.iter().zip(&c_g) {
+            assert!((x - y).abs() < 1e-11);
+        }
+    }
+
+    /// Property: random blockings, edges and strides all agree with the
+    /// dense reference.
+    #[test]
+    fn prop_micro_kernel_matches_reference() {
+        crate::util::prop::check_default(
+            |r| {
+                let mr = r.gen_range(1, 9);
+                let nr = r.gen_range(1, 9);
+                let kc = r.gen_range(1, 80);
+                let m_eff = r.gen_range(1, mr + 1);
+                let n_eff = r.gen_range(1, nr + 1);
+                let ldc = nr + r.gen_range(0, 5);
+                (mr, nr, kc, m_eff, n_eff, ldc, r.next_u64())
+            },
+            |&(mr, nr, kc, m_eff, n_eff, ldc, seed)| {
+                let mut rng = Rng::new(seed);
+                let a = rng.fill_matrix(mr * kc);
+                let b = rng.fill_matrix(kc * nr);
+                let mut c = rng.fill_matrix(mr * ldc);
+                let mut c_ref = c.clone();
+                micro_kernel(mr, nr, kc, &a, &b, &mut c, ldc, m_eff, n_eff);
+                reference(mr, nr, kc, &a, &b, &mut c_ref, ldc, m_eff, n_eff);
+                for (idx, (x, y)) in c.iter().zip(&c_ref).enumerate() {
+                    if (x - y).abs() > 1e-10 * kc as f64 {
+                        return Err(format!("mismatch at {idx}: {x} vs {y}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

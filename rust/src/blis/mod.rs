@@ -1,0 +1,15 @@
+//! The BLIS GEMM machinery: blocking parameters, control trees, packing
+//! routines, the native micro-kernel and the sequential five-loop
+//! algorithm of Fig. 1. The parallel executors (`crate::native`) and the
+//! simulator (`crate::sim`) are built on these pieces.
+
+pub mod control_tree;
+pub mod gemm;
+pub mod level3;
+pub mod microkernel;
+pub mod packing;
+pub mod params;
+
+pub use control_tree::{ControlTree, LoopId, Parallelism, TreeSet};
+pub use gemm::{gemm_blocked, gemm_naive, GemmShape, Workspace};
+pub use params::BlisParams;

@@ -1,0 +1,352 @@
+//! Packing routines (Fig. 1: "Pack into Ac / Bc").
+//!
+//! GotoBLAS/BLIS re-lay operands into contiguous, micro-kernel-friendly
+//! buffers so the inner loops stream with unit stride:
+//!
+//! * `Ac` (`mc×kc`): packed as ⌈mc/mr⌉ *row micro-panels*; within panel
+//!   `p`, element (i, l) of the source block sits at
+//!   `p*(mr*kc) + l*mr + i` — i.e. each panel is column-major mr×kc.
+//!   Edge panels (mc % mr ≠ 0) are zero-padded to full mr.
+//! * `Bc` (`kc×nc`): packed as ⌈nc/nr⌉ *column micro-panels*; within
+//!   panel `q`, element (l, j) sits at `q*(kc*nr) + l*nr + j` (row-major
+//!   kc×nr), zero-padded to full nr.
+//!
+//! All matrices in this crate are row-major; `lda`/`ldb` are row strides.
+//! Zero padding lets every interior micro-kernel run the full-register
+//! fast path; the write-back window (`m_eff`, `n_eff`) clips edges.
+
+/// Pack the `mc_eff × kc_eff` block of `a` starting at (row0, col0) into
+/// `buf` (capacity ≥ round_up(mc_eff, mr) * kc_eff).
+pub fn pack_a(
+    a: &[f64],
+    lda: usize,
+    row0: usize,
+    col0: usize,
+    mc_eff: usize,
+    kc_eff: usize,
+    mr: usize,
+    buf: &mut Vec<f64>,
+) {
+    let panels = mc_eff.div_ceil(mr);
+    buf.clear();
+    buf.resize(panels * mr * kc_eff, 0.0);
+    // Row-contiguous source reads (perf pass, EXPERIMENTS.md §Perf):
+    // each source row of A is walked once sequentially; the strided
+    // destination writes stay within the 30 KiB panel.
+    for p in 0..panels {
+        let base = p * mr * kc_eff;
+        let rows_live = (mc_eff - p * mr).min(mr);
+        for i in 0..rows_live {
+            let src_row = (row0 + p * mr + i) * lda + col0;
+            let src = &a[src_row..src_row + kc_eff];
+            for (l, &v) in src.iter().enumerate() {
+                buf[base + l * mr + i] = v;
+            }
+        }
+        // rows_live..mr remain zero (padding).
+    }
+}
+
+/// Pack the `kc_eff × nc_eff` block of `b` starting at (row0, col0) into
+/// `buf` (capacity ≥ kc_eff * round_up(nc_eff, nr)).
+pub fn pack_b(
+    b: &[f64],
+    ldb: usize,
+    row0: usize,
+    col0: usize,
+    kc_eff: usize,
+    nc_eff: usize,
+    nr: usize,
+    buf: &mut Vec<f64>,
+) {
+    let panels = nc_eff.div_ceil(nr);
+    buf.clear();
+    buf.resize(panels * kc_eff * nr, 0.0);
+    // Row-major-friendly order (perf pass, EXPERIMENTS.md §Perf): walk
+    // each source row once — it is contiguous across *all* panels — and
+    // scatter nr-wide segments with `copy_from_slice`. ~2× over the
+    // panel-outer order, which re-walked every source row per panel.
+    let full_panels = nc_eff / nr;
+    for l in 0..kc_eff {
+        let src_row = (row0 + l) * ldb + col0;
+        let src = &b[src_row..src_row + nc_eff];
+        for q in 0..full_panels {
+            let dst = q * kc_eff * nr + l * nr;
+            buf[dst..dst + nr].copy_from_slice(&src[q * nr..(q + 1) * nr]);
+        }
+        if full_panels < panels {
+            let q = full_panels;
+            let cols_live = nc_eff - q * nr;
+            let dst = q * kc_eff * nr + l * nr;
+            buf[dst..dst + cols_live].copy_from_slice(&src[q * nr..q * nr + cols_live]);
+        }
+    }
+}
+
+/// Pack only A micro-panels `[p0, p1)` into the corresponding region of
+/// `buf` (preallocated to ⌈mc_eff/mr⌉·mr·kc_eff). This is the unit the
+/// parallel executor splits among a cluster's threads: each thread owns
+/// a disjoint panel range, so concurrent packing is race-free.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_a_panels(
+    a: &[f64],
+    lda: usize,
+    row0: usize,
+    col0: usize,
+    mc_eff: usize,
+    kc_eff: usize,
+    mr: usize,
+    buf: &mut [f64],
+    p0: usize,
+    p1: usize,
+) {
+    let panels = mc_eff.div_ceil(mr);
+    debug_assert!(p1 <= panels && buf.len() >= panels * mr * kc_eff);
+    for p in p0..p1 {
+        let base = p * mr * kc_eff;
+        let rows_live = (mc_eff - p * mr).min(mr);
+        for l in 0..kc_eff {
+            let dst = base + l * mr;
+            for i in 0..rows_live {
+                buf[dst + i] = a[(row0 + p * mr + i) * lda + col0 + l];
+            }
+            for i in rows_live..mr {
+                buf[dst + i] = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack only B micro-panels `[q0, q1)` into `buf` (preallocated to
+/// kc_eff·⌈nc_eff/nr⌉·nr). See [`pack_a_panels`].
+#[allow(clippy::too_many_arguments)]
+pub fn pack_b_panels(
+    b: &[f64],
+    ldb: usize,
+    row0: usize,
+    col0: usize,
+    kc_eff: usize,
+    nc_eff: usize,
+    nr: usize,
+    buf: &mut [f64],
+    q0: usize,
+    q1: usize,
+) {
+    let panels = nc_eff.div_ceil(nr);
+    debug_assert!(q1 <= panels && buf.len() >= panels * kc_eff * nr);
+    for q in q0..q1 {
+        let base = q * kc_eff * nr;
+        let cols_live = (nc_eff - q * nr).min(nr);
+        for l in 0..kc_eff {
+            let dst = base + l * nr;
+            let src_row = (row0 + l) * ldb + col0 + q * nr;
+            for j in 0..cols_live {
+                buf[dst + j] = b[src_row + j];
+            }
+            for j in cols_live..nr {
+                buf[dst + j] = 0.0;
+            }
+        }
+    }
+}
+
+/// Bytes moved by packing an `mc×kc` A-block (read + write) — the cost
+/// input for the perf model's packing time.
+pub fn pack_a_bytes(mc_eff: usize, kc_eff: usize) -> usize {
+    2 * mc_eff * kc_eff * 8
+}
+
+/// Bytes moved by packing a `kc×nc` B-block.
+pub fn pack_b_bytes(kc_eff: usize, nc_eff: usize) -> usize {
+    2 * kc_eff * nc_eff * 8
+}
+
+/// View of one packed A micro-panel (mr×kc, column-major).
+pub fn a_panel(buf: &[f64], panel: usize, mr: usize, kc_eff: usize) -> &[f64] {
+    let base = panel * mr * kc_eff;
+    &buf[base..base + mr * kc_eff]
+}
+
+/// View of one packed B micro-panel (kc×nr, row-major).
+pub fn b_panel(buf: &[f64], panel: usize, nr: usize, kc_eff: usize) -> &[f64] {
+    let base = panel * kc_eff * nr;
+    &buf[base..base + kc_eff * nr]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_a_layout_interior() {
+        // 4×3 source block, mr=2 → 2 panels of 2×3.
+        let lda = 5;
+        let mut a = vec![0.0; 6 * lda];
+        for r in 0..6 {
+            for c in 0..lda {
+                a[r * lda + c] = (10 * r + c) as f64;
+            }
+        }
+        let mut buf = Vec::new();
+        pack_a(&a, lda, 1, 2, 4, 3, 2, &mut buf);
+        // Panel 0 rows {1,2}, cols {2,3,4}: col-major per column.
+        assert_eq!(&buf[0..2], &[12.0, 22.0]); // l=0: a[1][2], a[2][2]
+        assert_eq!(&buf[2..4], &[13.0, 23.0]);
+        assert_eq!(&buf[4..6], &[14.0, 24.0]);
+        // Panel 1 rows {3,4}.
+        assert_eq!(&buf[6..8], &[32.0, 42.0]);
+    }
+
+    #[test]
+    fn pack_a_edge_padding_zeroes() {
+        let lda = 4;
+        let a: Vec<f64> = (0..16).map(|x| x as f64 + 1.0).collect();
+        let mut buf = Vec::new();
+        // mc_eff = 3, mr = 2 → second panel has one live row + one pad row.
+        pack_a(&a, lda, 0, 0, 3, 2, 2, &mut buf);
+        assert_eq!(buf.len(), 2 * 2 * 2);
+        // Panel 1, l=0: [a[2][0], 0].
+        assert_eq!(buf[4], 9.0);
+        assert_eq!(buf[5], 0.0);
+    }
+
+    #[test]
+    fn pack_b_layout_interior() {
+        let ldb = 6;
+        let mut b = vec![0.0; 4 * ldb];
+        for r in 0..4 {
+            for c in 0..ldb {
+                b[r * ldb + c] = (10 * r + c) as f64;
+            }
+        }
+        let mut buf = Vec::new();
+        // 2×4 block at (1,1), nr=2 → 2 panels of 2×2 row-major.
+        pack_b(&b, ldb, 1, 1, 2, 4, 2, &mut buf);
+        assert_eq!(&buf[0..2], &[11.0, 12.0]); // panel 0, l=0
+        assert_eq!(&buf[2..4], &[21.0, 22.0]); // panel 0, l=1
+        assert_eq!(&buf[4..6], &[13.0, 14.0]); // panel 1, l=0
+    }
+
+    #[test]
+    fn pack_b_edge_padding_zeroes() {
+        let ldb = 3;
+        let b: Vec<f64> = (0..9).map(|x| x as f64 + 1.0).collect();
+        let mut buf = Vec::new();
+        // nc_eff = 3, nr = 2 → panel 1 has one live + one padded column.
+        pack_b(&b, ldb, 0, 0, 2, 3, 2, &mut buf);
+        assert_eq!(buf.len(), 2 * 2 * 2);
+        assert_eq!(buf[4], 3.0); // b[0][2]
+        assert_eq!(buf[5], 0.0); // pad
+    }
+
+    #[test]
+    fn panel_views_partition_buffers() {
+        let mut rng = Rng::new(55);
+        let (mc, kc, mr) = (10, 7, 4);
+        let lda = 12;
+        let a = rng.fill_matrix(mc * lda);
+        let mut buf = Vec::new();
+        pack_a(&a, lda, 0, 0, mc, kc, mr, &mut buf);
+        let panels = mc.div_ceil(mr);
+        let mut total = 0;
+        for p in 0..panels {
+            total += a_panel(&buf, p, mr, kc).len();
+        }
+        assert_eq!(total, buf.len());
+    }
+
+    #[test]
+    fn byte_accounting() {
+        assert_eq!(pack_a_bytes(152, 952), 2 * 152 * 952 * 8);
+        assert_eq!(pack_b_bytes(952, 4096), 2 * 952 * 4096 * 8);
+    }
+
+    /// Property: packing then unpacking reproduces the source block.
+    #[test]
+    fn prop_pack_roundtrip() {
+        crate::util::prop::check_default(
+            |r| {
+                let mc = r.gen_range(1, 20);
+                let kc = r.gen_range(1, 20);
+                let mr = r.gen_range(1, 6);
+                let lda = kc + r.gen_range(0, 8);
+                (mc, kc, mr, lda, r.next_u64())
+            },
+            |&(mc, kc, mr, lda, seed)| {
+                let mut rng = Rng::new(seed);
+                let a = rng.fill_matrix(mc * lda.max(kc));
+                let mut buf = Vec::new();
+                pack_a(&a, lda.max(kc), 0, 0, mc, kc, mr, &mut buf);
+                for i in 0..mc {
+                    for l in 0..kc {
+                        let p = i / mr;
+                        let got = buf[p * mr * kc + l * mr + (i % mr)];
+                        let want = a[i * lda.max(kc) + l];
+                        if got != want {
+                            return Err(format!("({i},{l}): {got} != {want}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn panel_range_packing_matches_whole() {
+        let mut rng = Rng::new(77);
+        let (mc, kc, mr) = (11, 6, 4);
+        let lda = 9;
+        let a = rng.fill_matrix(mc * lda);
+        let mut whole = Vec::new();
+        pack_a(&a, lda, 0, 0, mc, kc, mr, &mut whole);
+        let panels = mc.div_ceil(mr);
+        let mut by_parts = vec![f64::NAN; panels * mr * kc];
+        pack_a_panels(&a, lda, 0, 0, mc, kc, mr, &mut by_parts, 0, 2);
+        pack_a_panels(&a, lda, 0, 0, mc, kc, mr, &mut by_parts, 2, panels);
+        assert_eq!(whole, by_parts);
+
+        let (kcb, nc, nr) = (5, 14, 4);
+        let ldb = 17;
+        let b = rng.fill_matrix(kcb * ldb);
+        let mut whole_b = Vec::new();
+        pack_b(&b, ldb, 0, 0, kcb, nc, nr, &mut whole_b);
+        let qn = nc.div_ceil(nr);
+        let mut parts_b = vec![f64::NAN; qn * kcb * nr];
+        pack_b_panels(&b, ldb, 0, 0, kcb, nc, nr, &mut parts_b, 0, 1);
+        pack_b_panels(&b, ldb, 0, 0, kcb, nc, nr, &mut parts_b, 1, qn);
+        assert_eq!(whole_b, parts_b);
+    }
+
+    /// Property: B packing round-trip.
+    #[test]
+    fn prop_pack_b_roundtrip() {
+        crate::util::prop::check_default(
+            |r| {
+                let kc = r.gen_range(1, 20);
+                let nc = r.gen_range(1, 24);
+                let nr = r.gen_range(1, 6);
+                (kc, nc, nr, r.next_u64())
+            },
+            |&(kc, nc, nr, seed)| {
+                let mut rng = Rng::new(seed);
+                let ldb = nc + 2;
+                let b = rng.fill_matrix(kc * ldb);
+                let mut buf = Vec::new();
+                pack_b(&b, ldb, 0, 0, kc, nc, nr, &mut buf);
+                for l in 0..kc {
+                    for j in 0..nc {
+                        let q = j / nr;
+                        let got = buf[q * kc * nr + l * nr + (j % nr)];
+                        let want = b[l * ldb + j];
+                        if got != want {
+                            return Err(format!("({l},{j}): {got} != {want}"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,166 @@
+//! BLIS blocking/configuration parameters (`nc, kc, mc, nr, mr`).
+//!
+//! These are the "cache configuration parameters" of paper §3: the loop
+//! strides of the five-loop GEMM (Fig. 1) that place `Br (kc×nr)` in L1
+//! and `Ac (mc×kc)` in L2. The presets are the paper's empirically
+//! determined optima (§3.3, Fig. 4) and the shared-`kc` refit of §5.3.
+
+use crate::soc::CoreType;
+
+/// One control-tree's worth of blocking parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlisParams {
+    /// Loop 1 stride (columns of C per macro-pass). No L3 on the Exynos
+    /// 5422, so `nc` "plays a minor role" (§3.3) and is fixed at 4096.
+    pub nc: usize,
+    /// Loop 2 stride (depth of the packed panels).
+    pub kc: usize,
+    /// Loop 3 stride (rows of the `Ac` macro-panel).
+    pub mc: usize,
+    /// Loop 4 stride = micro-kernel width.
+    pub nr: usize,
+    /// Loop 5 stride = micro-kernel height.
+    pub mr: usize,
+}
+
+impl BlisParams {
+    pub fn new(nc: usize, kc: usize, mc: usize, nr: usize, mr: usize) -> Self {
+        let p = BlisParams { nc, kc, mc, nr, mr };
+        p.validate();
+        p
+    }
+
+    /// Paper §3.3: optimum for a Cortex-A15 core: (mc, kc) = (152, 952).
+    pub fn a15_opt() -> Self {
+        BlisParams::new(4096, 952, 152, 4, 4)
+    }
+
+    /// Paper §3.3: optimum for a Cortex-A7 core: (mc, kc) = (80, 352).
+    pub fn a7_opt() -> Self {
+        BlisParams::new(4096, 352, 80, 4, 4)
+    }
+
+    /// §6 future work: a per-core-type micro-kernel for the big cores
+    /// with an 8×4 register block (halves `Br` traffic per flop on the
+    /// out-of-order A15). `mc = 152` is already a multiple of 8.
+    pub fn a15_opt_8x4() -> Self {
+        BlisParams::new(4096, 952, 152, 4, 8)
+    }
+
+    /// Paper §5.3: when Loop 3 is the inter-cluster loop the `Bc` buffer
+    /// is shared, forcing a common `kc = 952`; the A7's `mc` then refits
+    /// to 32 (suboptimal for the A7, but `Ac` fits its 512 KiB L2 again).
+    pub fn a7_shared_kc() -> Self {
+        BlisParams::new(4096, 952, 32, 4, 4)
+    }
+
+    /// The architecture's tuned optimum by core type.
+    pub fn optimal_for(core: CoreType) -> Self {
+        match core {
+            CoreType::Big => BlisParams::a15_opt(),
+            CoreType::Little => BlisParams::a7_opt(),
+        }
+    }
+
+    /// Parameters used by a *cache-aware* configuration for `core`, given
+    /// the coarse-grain loop choice: parallelizing Loop 3 across clusters
+    /// shares `Bc`, forcing the common-`kc` variant on the LITTLE cores
+    /// (§5.3/§5.4); parallelizing Loop 1 keeps independent buffers.
+    pub fn cache_aware_for(core: CoreType, shared_bc: bool) -> Self {
+        match (core, shared_bc) {
+            (CoreType::Big, _) => BlisParams::a15_opt(),
+            (CoreType::Little, false) => BlisParams::a7_opt(),
+            (CoreType::Little, true) => BlisParams::a7_shared_kc(),
+        }
+    }
+
+    pub fn validate(&self) {
+        assert!(self.mr > 0 && self.nr > 0, "register block must be non-empty");
+        assert!(self.mc >= self.mr, "mc ({}) < mr ({})", self.mc, self.mr);
+        assert!(self.nc >= self.nr, "nc ({}) < nr ({})", self.nc, self.nr);
+        assert!(self.kc > 0);
+        assert_eq!(self.mc % self.mr, 0, "mc must be a multiple of mr");
+        assert_eq!(self.nc % self.nr, 0, "nc must be a multiple of nr");
+    }
+
+    /// Micro-panel `Br` footprint in bytes (f64 elements).
+    pub fn br_bytes(&self) -> usize {
+        self.kc * self.nr * 8
+    }
+
+    /// Macro-panel `Ac` footprint in bytes.
+    pub fn ac_bytes(&self) -> usize {
+        self.mc * self.kc * 8
+    }
+
+    /// Loop-4 parallelism available: ⌈nc/nr⌉ micro-kernel columns (§3.1).
+    pub fn loop4_parallelism(&self) -> usize {
+        self.nc.div_ceil(self.nr)
+    }
+
+    /// Loop-5 parallelism available: ⌈mc/mr⌉ micro-kernel rows (§3.1).
+    pub fn loop5_parallelism(&self) -> usize {
+        self.mc.div_ceil(self.mr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper() {
+        let a15 = BlisParams::a15_opt();
+        assert_eq!((a15.mc, a15.kc, a15.nc, a15.mr, a15.nr), (152, 952, 4096, 4, 4));
+        let a7 = BlisParams::a7_opt();
+        assert_eq!((a7.mc, a7.kc), (80, 352));
+        let shared = BlisParams::a7_shared_kc();
+        assert_eq!((shared.mc, shared.kc), (32, 952));
+    }
+
+    #[test]
+    fn loop4_exceeds_loop5_parallelism() {
+        // §3.1: Loop 4 (⌈nc/nr⌉) offers far more concurrency than
+        // Loop 5 (⌈mc/mr⌉) — the reason Fig. 11/12 favor Loop 4.
+        for p in [BlisParams::a15_opt(), BlisParams::a7_opt()] {
+            assert!(p.loop4_parallelism() > 10 * p.loop5_parallelism());
+        }
+    }
+
+    #[test]
+    fn footprints() {
+        assert_eq!(BlisParams::a15_opt().br_bytes(), 30_464);
+        assert_eq!(BlisParams::a15_opt().ac_bytes(), 1_157_632);
+        assert_eq!(BlisParams::a7_opt().ac_bytes(), 225_280);
+        assert_eq!(BlisParams::a7_shared_kc().ac_bytes(), 243_712);
+    }
+
+    #[test]
+    fn cache_aware_selection() {
+        use CoreType::*;
+        assert_eq!(BlisParams::cache_aware_for(Big, true), BlisParams::a15_opt());
+        assert_eq!(BlisParams::cache_aware_for(Little, false), BlisParams::a7_opt());
+        assert_eq!(
+            BlisParams::cache_aware_for(Little, true),
+            BlisParams::a7_shared_kc()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of mr")]
+    fn mc_must_be_multiple_of_mr() {
+        BlisParams::new(4096, 100, 33, 4, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "mc")]
+    fn mc_smaller_than_mr_rejected() {
+        BlisParams::new(4096, 100, 2, 4, 4);
+    }
+
+    #[test]
+    fn optimal_for_maps_core_types() {
+        assert_eq!(BlisParams::optimal_for(CoreType::Big), BlisParams::a15_opt());
+        assert_eq!(BlisParams::optimal_for(CoreType::Little), BlisParams::a7_opt());
+    }
+}

@@ -1,0 +1,265 @@
+//! Analytical BLIS footprint analysis.
+//!
+//! The fast counterpart of the trace-driven simulator: given blocking
+//! parameters and a core's cache geometry, report whether the micro-panel
+//! `Br = kc×nr` fits the L1 budget and the macro-panel `Ac = mc×kc` fits
+//! the L2 budget, and translate overflows into throughput penalties.
+//!
+//! Budgets are *effective* capacities — a fraction of the nominal cache
+//! reserved for the resident panel, the rest left for the streaming
+//! operands (the A micro-slice + C block through L1; the Bc stream + C
+//! through L2). The fractions are calibrated so the model's optimum
+//! lands at the paper's empirically-found parameters
+//! (§3.3: A15 (mc,kc) = (152, 952), A7 (80, 352); §5.3: shared-kc A7
+//! refit mc ≈ 32):
+//!
+//! * A15: Br(952×4×8) = 30.4 KiB ≈ 0.93 × 32 KiB L1 → `L1_FILL = 0.95`;
+//!   Ac(152×952×8) = 1.158 MiB ≈ 0.552 × 2 MiB L2 → `L2_FILL_BIG`.
+//! * A7: Ac(80×352×8) = 225 KiB ≈ 0.43 × 512 KiB L2 → `L2_FILL_LITTLE`
+//!   (the in-order A7 needs more L2 headroom for the Bc stream).
+//!
+//! Overflow penalties are "soft floors": once a panel no longer fits,
+//! the micro-kernel degrades towards a bandwidth-bound floor rather than
+//! collapsing — matching the paper's observation that the A7 running
+//! with A15-optimal parameters is slower but far from useless (the SAS
+//! optimum ratio of 5–6 in Fig. 9 *is* that penalty, see DESIGN.md §5).
+
+use crate::blis::params::BlisParams;
+use crate::soc::{ClusterSpec, CoreType};
+
+/// Fraction of L1d usable by the resident `Br` micro-panel.
+pub const L1_FILL: f64 = 0.95;
+/// Fraction of L2 usable by the resident `Ac` macro-panel, per core type.
+pub const L2_FILL_BIG: f64 = 0.5525;
+pub const L2_FILL_LITTLE: f64 = 0.4297;
+
+/// Penalty floors/slopes (dimensionless). See module docs.
+const L1_OVERFLOW_FLOOR: f64 = 0.60;
+const L1_OVERFLOW_SLOPE: f64 = 4.0;
+const L2_OVERFLOW_FLOOR: f64 = 0.72;
+const L2_OVERFLOW_SLOPE: f64 = 1.35;
+
+/// Element size: the paper evaluates IEEE double precision throughout.
+pub const ELEM_BYTES: usize = 8;
+
+/// Report of panel footprints vs cache budgets for one configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FitReport {
+    pub br_bytes: usize,
+    pub ac_bytes: usize,
+    pub bc_bytes: usize,
+    pub l1_budget_bytes: f64,
+    pub l2_budget_bytes: f64,
+    /// br_bytes / l1_budget (≤ 1 means fits).
+    pub l1_pressure: f64,
+    /// ac_bytes / l2_budget.
+    pub l2_pressure: f64,
+}
+
+impl FitReport {
+    pub fn br_fits(&self) -> bool {
+        self.l1_pressure <= 1.0
+    }
+    pub fn ac_fits(&self) -> bool {
+        self.l2_pressure <= 1.0
+    }
+
+    /// Throughput multiplier from L1 pressure (1.0 when `Br` fits).
+    pub fn l1_penalty(&self) -> f64 {
+        soft_floor_penalty(self.l1_pressure, L1_OVERFLOW_FLOOR, L1_OVERFLOW_SLOPE)
+    }
+
+    /// Throughput multiplier from L2 pressure (1.0 when `Ac` fits).
+    pub fn l2_penalty(&self) -> f64 {
+        soft_floor_penalty(self.l2_pressure, L2_OVERFLOW_FLOOR, L2_OVERFLOW_SLOPE)
+    }
+
+    pub fn combined_penalty(&self) -> f64 {
+        self.l1_penalty() * self.l2_penalty()
+    }
+}
+
+/// 1.0 while `pressure ≤ 1`; beyond that decays hyperbolically towards
+/// `floor` with rate `slope` (bandwidth-bound asymptote).
+fn soft_floor_penalty(pressure: f64, floor: f64, slope: f64) -> f64 {
+    if pressure <= 1.0 {
+        1.0
+    } else {
+        let overflow = pressure - 1.0;
+        floor + (1.0 - floor) / (1.0 + slope * overflow)
+    }
+}
+
+/// Analytical footprint model bound to one cluster's cache geometry.
+#[derive(Debug, Clone)]
+pub struct FootprintAnalysis {
+    core_type: CoreType,
+    l1_bytes: usize,
+    l2_bytes: usize,
+}
+
+impl FootprintAnalysis {
+    pub fn for_cluster(cluster: &ClusterSpec) -> Self {
+        FootprintAnalysis {
+            core_type: cluster.core.core_type,
+            l1_bytes: cluster.core.l1d.size_bytes,
+            l2_bytes: cluster.l2.size_bytes,
+        }
+    }
+
+    pub fn l2_fill(&self) -> f64 {
+        match self.core_type {
+            CoreType::Big => L2_FILL_BIG,
+            CoreType::Little => L2_FILL_LITTLE,
+        }
+    }
+
+    /// L1 budget in bytes for the resident Br micro-panel.
+    pub fn l1_budget(&self) -> f64 {
+        L1_FILL * self.l1_bytes as f64
+    }
+
+    /// L2 budget in bytes for the resident Ac macro-panel. When `sharers`
+    /// cores pack independent `Ac` panels into the same physical L2
+    /// (Loop 3 parallelized within a cluster, paper §3.1), each gets a
+    /// 1/sharers slice.
+    pub fn l2_budget(&self, sharers: usize) -> f64 {
+        assert!(sharers >= 1);
+        self.l2_fill() * self.l2_bytes as f64 / sharers as f64
+    }
+
+    /// Full fit report for a parameter set.
+    pub fn fit(&self, p: &BlisParams) -> FitReport {
+        self.fit_shared(p, 1)
+    }
+
+    /// Fit report with `sharers` cores dividing the L2 (see `l2_budget`).
+    pub fn fit_shared(&self, p: &BlisParams, sharers: usize) -> FitReport {
+        let br = p.kc * p.nr * ELEM_BYTES;
+        let ac = p.mc * p.kc * ELEM_BYTES;
+        let bc = p.kc * p.nc * ELEM_BYTES;
+        let l1b = self.l1_budget();
+        let l2b = self.l2_budget(sharers);
+        FitReport {
+            br_bytes: br,
+            ac_bytes: ac,
+            bc_bytes: bc,
+            l1_budget_bytes: l1b,
+            l2_budget_bytes: l2b,
+            l1_pressure: br as f64 / l1b,
+            l2_pressure: ac as f64 / l2b,
+        }
+    }
+
+    /// Largest `kc` (multiple of 8) whose `Br` fits the L1 budget —
+    /// the analytic upper bound on the Fig. 4 search range.
+    pub fn max_kc_for_l1(&self, nr: usize) -> usize {
+        let raw = self.l1_budget() / (nr * ELEM_BYTES) as f64;
+        (raw as usize) / 8 * 8
+    }
+
+    /// Largest `mc` (multiple of `mr`) whose `Ac` fits the L2 budget
+    /// at the given `kc`.
+    pub fn max_mc_for_l2(&self, kc: usize, mr: usize) -> usize {
+        let raw = self.l2_budget(1) / (kc * ELEM_BYTES) as f64;
+        ((raw as usize) / mr * mr).max(mr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blis::params::BlisParams;
+    use crate::soc::SocSpec;
+
+    fn big() -> FootprintAnalysis {
+        FootprintAnalysis::for_cluster(&SocSpec::exynos5422().big)
+    }
+    fn little() -> FootprintAnalysis {
+        FootprintAnalysis::for_cluster(&SocSpec::exynos5422().little)
+    }
+
+    #[test]
+    fn paper_optimal_a15_params_fit() {
+        let fit = big().fit(&BlisParams::a15_opt());
+        assert!(fit.br_fits(), "Br must fit A15 L1: {fit:?}");
+        assert!(fit.ac_fits(), "Ac must fit A15 L2: {fit:?}");
+        assert_eq!(fit.combined_penalty(), 1.0);
+    }
+
+    #[test]
+    fn paper_optimal_a7_params_fit() {
+        let fit = little().fit(&BlisParams::a7_opt());
+        assert!(fit.br_fits());
+        assert!(fit.ac_fits());
+    }
+
+    #[test]
+    fn a15_params_overflow_a7_l2() {
+        // The §4 architecture-oblivious mismatch: Ac = 1.16 MiB ≫ 512 KiB.
+        let fit = little().fit(&BlisParams::a15_opt());
+        assert!(fit.br_fits(), "Br still fits (same 32 KiB L1)");
+        assert!(!fit.ac_fits());
+        assert!(fit.l2_pressure > 4.0 && fit.l2_pressure < 6.5);
+        // Calibrated penalty ≈ 0.75 → SAS ratio optimum lands at 5–6.
+        let pen = fit.l2_penalty();
+        assert!((0.72..0.80).contains(&pen), "penalty {pen}");
+    }
+
+    #[test]
+    fn footprint_numbers_match_paper() {
+        let fit = big().fit(&BlisParams::a15_opt());
+        assert_eq!(fit.br_bytes, 952 * 4 * 8); // 30464 B ≈ 29.75 KiB
+        assert_eq!(fit.ac_bytes, 152 * 952 * 8); // ≈ 1.158 MiB
+        let fit7 = little().fit(&BlisParams::a7_opt());
+        assert_eq!(fit7.ac_bytes, 80 * 352 * 8); // 225 KiB
+    }
+
+    #[test]
+    fn penalty_is_one_inside_budget_and_monotone_outside() {
+        let mut last = 1.0;
+        for pressure in [0.5, 1.0, 1.2, 2.0, 4.0, 8.0] {
+            let p = soft_floor_penalty(pressure, 0.72, 1.35);
+            assert!(p <= last + 1e-12, "penalty must be non-increasing");
+            assert!(p >= 0.72, "never below floor");
+            last = p;
+        }
+        assert_eq!(soft_floor_penalty(0.9, 0.72, 1.35), 1.0);
+    }
+
+    #[test]
+    fn max_kc_bound_contains_paper_value() {
+        let bound = big().max_kc_for_l1(4);
+        assert!(bound >= 952, "bound {bound} must admit the paper's kc");
+        assert!(bound < 1100);
+    }
+
+    #[test]
+    fn max_mc_bound_near_paper_value() {
+        let bound = big().max_mc_for_l2(952, 4);
+        assert!((140..=168).contains(&bound), "bound {bound}");
+        let bound7 = little().max_mc_for_l2(352, 4);
+        assert!((72..=92).contains(&bound7), "bound {bound7}");
+    }
+
+    #[test]
+    fn shared_kc_refit_lands_near_paper_mc32() {
+        // §5.3: kc pinned to 952 on the A7 → mc refits to ≈ 32.
+        let bound = little().max_mc_for_l2(952, 4);
+        assert!((24..=40).contains(&bound), "bound {bound}");
+    }
+
+    #[test]
+    fn l2_sharers_divide_budget() {
+        let a = little();
+        assert!((a.l2_budget(4) - a.l2_budget(1) / 4.0).abs() < 1e-9);
+        let fit_shared = a.fit_shared(&BlisParams::a7_opt(), 4);
+        assert!(!fit_shared.ac_fits(), "4 sharers: 225 KiB > 512/4 KiB budget");
+    }
+
+    #[test]
+    fn bc_footprint_reported() {
+        let fit = big().fit(&BlisParams::a15_opt());
+        assert_eq!(fit.bc_bytes, 952 * 4096 * 8);
+    }
+}

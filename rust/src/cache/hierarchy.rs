@@ -1,0 +1,210 @@
+//! Two-level cache hierarchy (private L1d → shared L2), inclusive-ish:
+//! an access goes to L1; on L1 miss it goes to L2; on L2 miss it costs a
+//! DRAM transfer. This mirrors the Exynos 5422 organization the paper's
+//! blocking analysis targets (Fig. 2: `Br` in L1, `Ac` in L2).
+
+use crate::cache::sim::CacheSim;
+use crate::soc::{CacheGeometry, ClusterSpec};
+
+/// Per-level outcome counters for a hierarchy walk.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LevelStats {
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    pub dram_accesses: u64,
+}
+
+impl LevelStats {
+    pub fn total(&self) -> u64 {
+        self.l1_hits + self.l2_hits + self.dram_accesses
+    }
+    pub fn l1_hit_rate(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.l1_hits as f64 / self.total() as f64
+        }
+    }
+    pub fn dram_rate(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.dram_accesses as f64 / self.total() as f64
+        }
+    }
+}
+
+/// One core's view: private L1 plus a (possibly shared) L2. For
+/// multi-core cluster studies, create one `Hierarchy` per core sharing
+/// an L2 partition, or model the shared L2 as `size / active_cores`
+/// (the approximation the paper itself uses when discussing Loop 3
+/// parallelization shrinking the effective `Ac`).
+#[derive(Debug, Clone)]
+pub struct Hierarchy {
+    pub l1: CacheSim,
+    pub l2: CacheSim,
+    pub stats: LevelStats,
+}
+
+impl Hierarchy {
+    pub fn new(l1_geo: CacheGeometry, l2_geo: CacheGeometry) -> Self {
+        Hierarchy {
+            l1: CacheSim::new(l1_geo),
+            l2: CacheSim::new(l2_geo),
+            stats: LevelStats::default(),
+        }
+    }
+
+    /// Build from a cluster spec, optionally dividing the shared L2
+    /// among `sharers` active cores.
+    pub fn for_cluster(cluster: &ClusterSpec, sharers: usize) -> Self {
+        assert!(sharers >= 1 && sharers <= cluster.num_cores);
+        let l2 = cluster.l2;
+        // Keep geometry legal: shrink ways, not sets, when dividing.
+        let ways = (l2.associativity / sharers).max(1);
+        let share = CacheGeometry::new(
+            l2.size_bytes / l2.associativity * ways,
+            ways,
+            l2.line_bytes,
+        );
+        Hierarchy::new(cluster.core.l1d, share)
+    }
+
+    /// Access one byte address through L1 → L2 → DRAM.
+    pub fn access(&mut self, addr: u64) {
+        if self.l1.access(addr).is_hit() {
+            self.stats.l1_hits += 1;
+            return;
+        }
+        if self.l2.access(addr).is_hit() {
+            self.stats.l2_hits += 1;
+            return;
+        }
+        self.stats.dram_accesses += 1;
+    }
+
+    /// Access each cache line of a contiguous byte range once.
+    pub fn access_range(&mut self, addr: u64, len_bytes: usize) {
+        if len_bytes == 0 {
+            return;
+        }
+        let line = self.l1.geometry().line_bytes as u64;
+        let first = addr / line * line;
+        let last = (addr + len_bytes as u64 - 1) / line * line;
+        let mut a = first;
+        loop {
+            self.access(a);
+            if a == last {
+                break;
+            }
+            a += line;
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = LevelStats::default();
+        self.l1.reset_stats();
+        self.l2.reset_stats();
+    }
+
+    pub fn flush(&mut self) {
+        self.l1.flush();
+        self.l2.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::SocSpec;
+
+    fn small() -> Hierarchy {
+        // L1: 512B (4 sets × 2 ways), L2: 4KiB (8 sets × 8 ways).
+        Hierarchy::new(
+            CacheGeometry::new(512, 2, 64),
+            CacheGeometry::new(4096, 8, 64),
+        )
+    }
+
+    #[test]
+    fn l1_hit_after_first_touch() {
+        let mut h = small();
+        h.access(0x40);
+        h.access(0x40);
+        assert_eq!(h.stats.l1_hits, 1);
+        assert_eq!(h.stats.dram_accesses, 1);
+    }
+
+    #[test]
+    fn l2_catches_l1_capacity_spill() {
+        let mut h = small();
+        // Touch 32 lines (2KiB): exceeds L1 (8 lines) but fits L2 (64 lines).
+        for i in 0..32u64 {
+            h.access(i * 64);
+        }
+        h.stats = LevelStats::default();
+        for i in 0..32u64 {
+            h.access(i * 64);
+        }
+        assert_eq!(h.stats.dram_accesses, 0, "second sweep must not hit DRAM");
+        assert!(h.stats.l2_hits > 0);
+    }
+
+    #[test]
+    fn working_set_beyond_l2_reaches_dram() {
+        let mut h = small();
+        // 256 lines = 16KiB, 4× the L2.
+        for _ in 0..2 {
+            for i in 0..256u64 {
+                h.access(i * 64);
+            }
+        }
+        assert!(h.stats.dram_accesses > 256);
+    }
+
+    #[test]
+    fn stats_total_equals_accesses() {
+        let mut h = small();
+        for i in 0..1000u64 {
+            h.access((i * 37) % 8192);
+        }
+        assert_eq!(h.stats.total(), 1000);
+        let rates = h.stats.l1_hit_rate() + h.stats.dram_rate();
+        assert!(rates <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn cluster_constructor_uses_soc_geometry() {
+        let soc = SocSpec::exynos5422();
+        let h = Hierarchy::for_cluster(&soc.big, 1);
+        assert_eq!(h.l1.geometry().size_bytes, 32 * 1024);
+        assert_eq!(h.l2.geometry().size_bytes, 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn shared_l2_partition_shrinks_with_sharers() {
+        let soc = SocSpec::exynos5422();
+        let h4 = Hierarchy::for_cluster(&soc.big, 4);
+        assert_eq!(h4.l2.geometry().size_bytes, 512 * 1024);
+        let h1 = Hierarchy::for_cluster(&soc.little, 1);
+        assert_eq!(h1.l2.geometry().size_bytes, 512 * 1024);
+    }
+
+    #[test]
+    fn access_range_walks_lines() {
+        let mut h = small();
+        h.access_range(0, 640); // 10 lines
+        assert_eq!(h.stats.total(), 10);
+    }
+
+    #[test]
+    fn reset_and_flush() {
+        let mut h = small();
+        h.access(0);
+        h.reset_stats();
+        assert_eq!(h.stats.total(), 0);
+        h.flush();
+        h.access(0);
+        assert_eq!(h.stats.dram_accesses, 1);
+    }
+}

@@ -1,0 +1,27 @@
+//! Set-associative cache simulation and BLIS footprint analysis.
+//!
+//! The paper's central configuration insight (§3.3) is that the blocking
+//! parameters must be chosen so the `kc×nr` micro-panel `Br` streams from
+//! L1 while the `mc×kc` macro-panel `Ac` stays resident in L2 — with
+//! *different* optima for the Cortex-A15 (2 MiB L2) and Cortex-A7
+//! (512 KiB L2). We reproduce that machinery with:
+//!
+//! * [`sim::CacheSim`] — an exact set-associative LRU cache simulator,
+//!   used as the ground-truth substrate (trace-driven) in tests and the
+//!   Fig. 4 ablation;
+//! * [`hierarchy::Hierarchy`] — a two-level (L1d + shared L2) stack of
+//!   simulators;
+//! * [`trace`] — synthetic address-trace generators for the micro-kernel
+//!   and the packing routines, mirroring the access pattern of Fig. 2;
+//! * [`analysis`] — the fast analytical footprint model consumed by the
+//!   performance model on every simulated micro-kernel (trace simulation
+//!   would be far too slow inside the DES loop).
+
+pub mod analysis;
+pub mod hierarchy;
+pub mod sim;
+pub mod trace;
+
+pub use analysis::{FitReport, FootprintAnalysis};
+pub use hierarchy::{Hierarchy, LevelStats};
+pub use sim::{AccessResult, CacheSim};

@@ -1,0 +1,208 @@
+//! Synthetic address-trace generators for the BLIS GEMM inner kernels.
+//!
+//! These reproduce, at cache-line granularity, the access pattern of
+//! Fig. 2: the micro-kernel streams an `mr×kc` slice of `Ac` and the
+//! `kc×nr` micro-panel `Br` while updating an `mr×nr` block of `C`;
+//! Loop 4 sweeps `jr` so `Ac` is reused `⌈nc/nr⌉` times; the packing
+//! routines stream source matrices into the contiguous packed buffers.
+//!
+//! Traces are *driven through* a [`crate::cache::Hierarchy`] to obtain
+//! ground-truth miss rates. Tests (and the Fig. 4 ablation bench) use
+//! them to validate the analytical model in [`crate::cache::analysis`]:
+//! parameters inside budget ⇒ low L2-miss traffic for `Ac`; overflowing
+//! parameters ⇒ DRAM traffic on every `Ac` sweep.
+
+use crate::blis::params::BlisParams;
+use crate::cache::hierarchy::Hierarchy;
+
+/// Byte size of one f64 element.
+const E: u64 = 8;
+
+/// Disjoint virtual base addresses for the three buffers, spaced far
+/// apart so the layouts never alias.
+const AC_BASE: u64 = 0x1000_0000;
+const BC_BASE: u64 = 0x2000_0000;
+const C_BASE: u64 = 0x3000_0000;
+const SRC_BASE: u64 = 0x4000_0000;
+
+/// Drive one full macro-kernel (Loops 4+5 over an `mc×nc` block of C)
+/// through the hierarchy. `mc_iters`/`nc_iters` default to the full
+/// panel; tests shrink them to keep traces fast.
+pub fn macro_kernel_trace(h: &mut Hierarchy, p: &BlisParams, nc_eff: usize, mc_eff: usize) {
+    let kc = p.kc as u64;
+    let (mr, nr) = (p.mr as u64, p.nr as u64);
+    let n_jr = nc_eff.div_ceil(p.nr) as u64;
+    let n_ir = mc_eff.div_ceil(p.mr) as u64;
+
+    for jr in 0..n_jr {
+        // Micro-panel Br for this jr: kc×nr contiguous in the packed Bc.
+        let br_base = BC_BASE + jr * kc * nr * E;
+        for ir in 0..n_ir {
+            // A micro-slice: mr×kc contiguous in the packed Ac.
+            let a_base = AC_BASE + ir * mr * kc * E;
+            // The rank-1 update loop: stream A-slice and Br interleaved.
+            // At line granularity, touching each line of both panels
+            // models the streaming pattern faithfully.
+            h.access_range(a_base, (mr * kc * E) as usize);
+            h.access_range(br_base, (kc * nr * E) as usize);
+            // C block: load + store of mr×nr.
+            let c_base = C_BASE + (jr * n_ir + ir) * mr * nr * E;
+            h.access_range(c_base, (mr * nr * E) as usize);
+        }
+    }
+}
+
+/// Packing of `Ac` (`mc×kc` from a column-major source with leading
+/// dimension `ld` into the contiguous packed buffer).
+pub fn pack_a_trace(h: &mut Hierarchy, p: &BlisParams, ld: usize) {
+    // Source: mc rows × kc cols, column stride ld.
+    for col in 0..p.kc as u64 {
+        let col_base = SRC_BASE + col * ld as u64 * E;
+        h.access_range(col_base, p.mc * 8);
+    }
+    // Destination: contiguous write of mc×kc.
+    h.access_range(AC_BASE, p.mc * p.kc * 8);
+}
+
+/// Result of a residency experiment: DRAM transfer counts for the
+/// first (cold) and second (warm) macro-kernel sweeps.
+#[derive(Debug, Clone, Copy)]
+pub struct ResidencyProbe {
+    pub cold_dram: u64,
+    pub warm_dram: u64,
+}
+
+impl ResidencyProbe {
+    /// Warm-to-cold DRAM ratio: ≈0 when `Ac`+`Br` stay resident,
+    /// ≈1 when the working set thrashes.
+    pub fn warm_ratio(&self) -> f64 {
+        if self.cold_dram == 0 {
+            0.0
+        } else {
+            self.warm_dram as f64 / self.cold_dram as f64
+        }
+    }
+}
+
+/// Run two identical macro-kernel sweeps and compare DRAM traffic:
+/// the second sweep re-reads the same panels, so if they fit the
+/// hierarchy its DRAM traffic collapses.
+pub fn residency_probe(h: &mut Hierarchy, p: &BlisParams, nc_eff: usize, mc_eff: usize) -> ResidencyProbe {
+    h.flush();
+    h.reset_stats();
+    macro_kernel_trace(h, p, nc_eff, mc_eff);
+    let cold = h.stats.dram_accesses;
+    h.reset_stats();
+    macro_kernel_trace(h, p, nc_eff, mc_eff);
+    ResidencyProbe {
+        cold_dram: cold,
+        warm_dram: h.stats.dram_accesses,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::SocSpec;
+
+    /// A7-geometry hierarchy (1 sharer).
+    fn little_h() -> Hierarchy {
+        Hierarchy::for_cluster(&SocSpec::exynos5422().little, 1)
+    }
+
+    #[test]
+    fn a7_opt_params_stay_resident() {
+        // Ac(225 KiB) + Br fit the 512 KiB L2 → warm sweep ~free.
+        let mut h = little_h();
+        // One jr-sweep worth: nc_eff small to keep the trace quick but
+        // larger than nr so Ac is reused.
+        let p = BlisParams::a7_opt();
+        let probe = residency_probe(&mut h, &p, 64, p.mc);
+        assert!(
+            probe.warm_ratio() < 0.05,
+            "expected residency, got warm ratio {} ({:?})",
+            probe.warm_ratio(),
+            probe
+        );
+    }
+
+    #[test]
+    fn a15_params_thrash_a7_l2() {
+        // The §4 mismatch: Ac(1.16 MiB) ≫ 512 KiB L2 → warm sweep still
+        // pulls most lines from DRAM.
+        let mut h = little_h();
+        let p = BlisParams::a15_opt();
+        let probe = residency_probe(&mut h, &p, 64, p.mc);
+        assert!(
+            probe.warm_ratio() > 0.5,
+            "expected thrashing, got warm ratio {} ({:?})",
+            probe.warm_ratio(),
+            probe
+        );
+    }
+
+    #[test]
+    fn a15_params_fit_a15_l2() {
+        let mut h = Hierarchy::for_cluster(&SocSpec::exynos5422().big, 1);
+        let p = BlisParams::a15_opt();
+        let probe = residency_probe(&mut h, &p, 64, p.mc);
+        assert!(
+            probe.warm_ratio() < 0.05,
+            "warm ratio {} ({:?})",
+            probe.warm_ratio(),
+            probe
+        );
+    }
+
+    #[test]
+    fn shared_kc_refit_restores_a7_residency() {
+        // §5.3: (mc,kc) = (32, 952) fits the A7 L2 again. Keep the jr
+        // sweep narrow (16 columns) so the streamed Bc region itself
+        // does not exceed the cache — Bc is *expected* to stream; the
+        // claim under test is Ac residency.
+        let mut h = little_h();
+        let p = BlisParams::a7_shared_kc();
+        let probe = residency_probe(&mut h, &p, 16, p.mc);
+        assert!(probe.warm_ratio() < 0.05, "warm ratio {}", probe.warm_ratio());
+    }
+
+    #[test]
+    fn br_and_ac_stream_from_cache_at_optimal_kc() {
+        // Within one jr column the working set is Ac (1.16 MiB) + one Br
+        // (30 KiB): both fit the A15 L2, so a warm re-sweep must be
+        // served from the hierarchy without DRAM traffic.
+        let mut h = Hierarchy::for_cluster(&SocSpec::exynos5422().big, 1);
+        let p = BlisParams::a15_opt();
+        h.flush();
+        macro_kernel_trace(&mut h, &p, p.nr, p.mc); // single jr column
+        let dram_cold = h.stats.dram_accesses;
+        h.reset_stats();
+        macro_kernel_trace(&mut h, &p, p.nr, p.mc);
+        assert!(
+            (h.stats.dram_accesses as f64) < 0.02 * dram_cold as f64 + 1.0,
+            "warm dram {} vs cold {}",
+            h.stats.dram_accesses,
+            dram_cold
+        );
+        // The Br re-reads across the 38 ir iterations are hierarchy hits.
+        assert!(h.stats.l1_hit_rate() + h.stats.l2_hits as f64 / h.stats.total() as f64 > 0.95);
+    }
+
+    #[test]
+    fn pack_a_touches_source_and_dest() {
+        let mut h = little_h();
+        let p = BlisParams::a7_opt();
+        pack_a_trace(&mut h, &p, 2048);
+        // ≥ one access per destination line.
+        assert!(h.stats.total() as usize >= p.mc * p.kc * 8 / 64);
+    }
+
+    #[test]
+    fn probe_is_deterministic() {
+        let p = BlisParams::a7_opt();
+        let a = residency_probe(&mut little_h(), &p, 32, p.mc);
+        let b = residency_probe(&mut little_h(), &p, 32, p.mc);
+        assert_eq!(a.cold_dram, b.cold_dram);
+        assert_eq!(a.warm_dram, b.warm_dram);
+    }
+}

@@ -1,0 +1,382 @@
+//! Layer-3 coordinator: a GEMM service over the native executor, the
+//! PJRT runtime and the simulator.
+//!
+//! The paper's contribution is the scheduling layer itself, so the
+//! coordinator is the thin-but-real driver DESIGN.md calls for: a job
+//! queue with a same-shape batcher (PJRT executables are shape-
+//! specialized — grouping identical shapes amortizes dispatch), worker
+//! threads, model-driven strategy auto-selection (the §5.2 ratio knob
+//! computed from the calibrated performance model rather than an
+//! environment variable), and metrics. `std::thread` + `mpsc` replace
+//! tokio (offline crate set, DESIGN.md §2); the workload is CPU-bound
+//! GEMM, so blocking workers are the right shape anyway.
+
+pub mod server;
+
+use crate::blis::gemm::GemmShape;
+use crate::model::PerfModel;
+use crate::native;
+use crate::runtime::worker::PjrtHandle;
+use crate::sched::ScheduleSpec;
+use crate::sim;
+use crate::soc::SocSpec;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Which engine executes a request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Backend {
+    /// Real threads + packed GEMM under a schedule (default CA-DAS).
+    Native(ScheduleSpec),
+    /// AOT artifact via PJRT; `variant` picks the control-tree analogue.
+    Pjrt { variant: String },
+    /// Virtual-time simulation (capacity planning / what-if).
+    Sim(ScheduleSpec),
+    /// Model-driven dispatch: PJRT when an exact-shape artifact exists
+    /// (compiled executable, no packing cost), native CA-DAS otherwise.
+    Auto,
+}
+
+/// One GEMM request. Operands are owned so requests can cross threads.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub shape: GemmShape,
+    pub a: Arc<Vec<f64>>,
+    pub b: Arc<Vec<f64>>,
+    pub backend: Backend,
+}
+
+/// Completed response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    /// Result matrix (empty for Sim backend).
+    pub c: Vec<f64>,
+    pub latency_s: f64,
+    pub gflops: f64,
+    pub backend_label: String,
+    /// Deterministic checksum of C (sum of elements) for cheap
+    /// cross-backend verification.
+    pub checksum: f64,
+}
+
+/// Service metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub completed: u64,
+    pub total_flops: f64,
+    pub total_latency_s: f64,
+    pub batches: u64,
+}
+
+/// The coordinator service.
+#[allow(missing_debug_implementations)]
+pub struct Coordinator {
+    soc: SocSpec,
+    model: PerfModel,
+    runtime: Option<PjrtHandle>,
+    metrics: Mutex<Metrics>,
+}
+
+impl Coordinator {
+    /// Build without a PJRT runtime (native/sim backends only).
+    pub fn new(soc: SocSpec) -> Self {
+        let model = PerfModel::new(soc.clone());
+        Coordinator {
+            soc,
+            model,
+            runtime: None,
+            metrics: Mutex::new(Metrics::default()),
+        }
+    }
+
+    /// Build with PJRT artifacts loaded from `dir` (spawns the runtime
+    /// thread; see [`PjrtHandle`]).
+    pub fn with_artifacts(soc: SocSpec, dir: &std::path::Path) -> Result<Self> {
+        let handle = PjrtHandle::spawn(dir)?;
+        let mut c = Coordinator::new(soc);
+        c.runtime = Some(handle);
+        Ok(c)
+    }
+
+    pub fn soc(&self) -> &SocSpec {
+        &self.soc
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Model-driven default schedule: CA-DAS (the paper's best).
+    pub fn auto_spec(&self) -> ScheduleSpec {
+        ScheduleSpec::ca_das()
+    }
+
+    /// Model-driven SAS ratio (§5.2's knob, computed instead of guessed):
+    /// the big:LITTLE cluster throughput ratio under the oblivious
+    /// single-tree configuration, rounded to the nearest integer.
+    pub fn auto_ratio(&self) -> f64 {
+        let p = crate::blis::params::BlisParams::a15_opt();
+        self.model.ideal_ratio(&p, &p).round().clamp(1.0, 8.0)
+    }
+
+    /// Resolve `Auto` to a concrete backend for a shape: a loaded
+    /// exact-shape artifact wins (zero compile/packing cost at request
+    /// time); otherwise the native CA-DAS executor handles any shape.
+    pub fn resolve_auto(&self, shape: GemmShape) -> Backend {
+        if let Some(rt) = &self.runtime {
+            for variant in ["big", "little"] {
+                if let Ok(true) = rt.has(shape, variant) {
+                    return Backend::Pjrt { variant: variant.to_string() };
+                }
+            }
+        }
+        Backend::Native(self.auto_spec())
+    }
+
+    /// Execute one request synchronously.
+    pub fn execute(&self, req: &Request) -> Result<Response> {
+        if req.backend == Backend::Auto {
+            let mut resolved = req.clone();
+            resolved.backend = self.resolve_auto(req.shape);
+            debug_assert!(resolved.backend != Backend::Auto);
+            return self.execute(&resolved);
+        }
+        let t0 = std::time::Instant::now();
+        let (c, label) = match &req.backend {
+            Backend::Auto => unreachable!("resolved above"),
+            Backend::Native(spec) => {
+                let mut c = vec![0.0; req.shape.m * req.shape.n];
+                let stats =
+                    native::gemm_parallel(&self.soc, spec, req.shape, &req.a, &req.b, &mut c);
+                (c, format!("native/{}", stats.label))
+            }
+            Backend::Pjrt { variant } => {
+                let rt = self
+                    .runtime
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("no PJRT runtime configured"))?;
+                let (name, c) =
+                    rt.execute(req.shape, variant, req.a.to_vec(), req.b.to_vec())?;
+                (c, format!("pjrt/{name}"))
+            }
+            Backend::Sim(spec) => {
+                let stats = sim::simulate(&self.model, spec, req.shape);
+                (Vec::new(), format!("sim/{} {:.2} GFLOPS(v)", stats.label, stats.gflops))
+            }
+        };
+        let latency = t0.elapsed().as_secs_f64();
+        let flops = req.shape.flops();
+        {
+            let mut m = self.metrics.lock().unwrap();
+            m.completed += 1;
+            m.total_flops += flops;
+            m.total_latency_s += latency;
+        }
+        Ok(Response {
+            id: req.id,
+            checksum: c.iter().sum(),
+            gflops: flops / latency / 1e9,
+            latency_s: latency,
+            backend_label: label,
+            c,
+        })
+    }
+
+    /// Batch executor: groups requests by (shape, backend kind) so PJRT
+    /// requests with the same artifact run back-to-back on the already-
+    /// compiled executable, then dispatches each group on a worker
+    /// thread. Responses are returned in request order.
+    pub fn execute_batch(&self, reqs: Vec<Request>) -> Vec<Result<Response>> {
+        let n = reqs.len();
+        // Group indices by batch key.
+        let mut groups: HashMap<String, Vec<usize>> = HashMap::new();
+        for (i, r) in reqs.iter().enumerate() {
+            groups.entry(Self::batch_key(r)).or_default().push(i);
+        }
+        {
+            let mut m = self.metrics.lock().unwrap();
+            m.batches += groups.len() as u64;
+        }
+
+        let (tx, rx) = mpsc::channel::<(usize, Result<Response>)>();
+        std::thread::scope(|s| {
+            for (_, idxs) in groups {
+                let tx = tx.clone();
+                let reqs = &reqs;
+                s.spawn(move || {
+                    for i in idxs {
+                        let resp = self.execute(&reqs[i]);
+                        tx.send((i, resp)).expect("result channel");
+                    }
+                });
+            }
+            drop(tx);
+        });
+        let mut out: Vec<Option<Result<Response>>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|o| o.expect("all jobs complete")).collect()
+    }
+
+    fn batch_key(r: &Request) -> String {
+        let kind = match &r.backend {
+            Backend::Native(s) => format!("native/{}", s.label()),
+            Backend::Pjrt { variant } => format!("pjrt/{variant}"),
+            Backend::Sim(s) => format!("sim/{}", s.label()),
+            Backend::Auto => "auto".to_string(),
+        };
+        format!("{}:{}x{}x{}", kind, r.shape.m, r.shape.n, r.shape.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blis::gemm::gemm_naive;
+    use crate::util::rng::Rng;
+    use crate::util::stats::{gemm_tolerance, max_abs_diff};
+    use std::path::Path;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn request(id: u64, r: usize, seed: u64, backend: Backend) -> (Request, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let a = rng.fill_matrix(r * r);
+        let b = rng.fill_matrix(r * r);
+        let mut want = vec![0.0; r * r];
+        gemm_naive(GemmShape::square(r), &a, &b, &mut want);
+        (
+            Request {
+                id,
+                shape: GemmShape::square(r),
+                a: Arc::new(a),
+                b: Arc::new(b),
+                backend,
+            },
+            want,
+        )
+    }
+
+    #[test]
+    fn native_backend_correct() {
+        let c = Coordinator::new(SocSpec::exynos5422());
+        let (req, want) = request(1, 96, 5, Backend::Native(ScheduleSpec::ca_das()));
+        let resp = c.execute(&req).unwrap();
+        assert!(max_abs_diff(&resp.c, &want) < gemm_tolerance(96));
+        assert!(resp.backend_label.starts_with("native/CA-DAS"));
+        assert_eq!(c.metrics().completed, 1);
+    }
+
+    #[test]
+    fn sim_backend_returns_virtual_stats() {
+        let c = Coordinator::new(SocSpec::exynos5422());
+        let (req, _) = request(2, 512, 6, Backend::Sim(ScheduleSpec::sas(5.0)));
+        let resp = c.execute(&req).unwrap();
+        assert!(resp.c.is_empty());
+        assert!(resp.backend_label.contains("GFLOPS(v)"));
+    }
+
+    #[test]
+    fn pjrt_backend_correct_and_matches_native() {
+        if !artifacts_dir().join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let c = Coordinator::with_artifacts(SocSpec::exynos5422(), &artifacts_dir()).unwrap();
+        let (req, want) = request(3, 128, 7, Backend::Pjrt { variant: "big".into() });
+        let resp = c.execute(&req).unwrap();
+        assert!(max_abs_diff(&resp.c, &want) < gemm_tolerance(128));
+
+        // Same request through the native path: checksums agree.
+        let (req_n, _) = request(4, 128, 7, Backend::Native(ScheduleSpec::ca_das()));
+        let resp_n = c.execute(&req_n).unwrap();
+        assert!((resp.checksum - resp_n.checksum).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pjrt_without_runtime_errors() {
+        let c = Coordinator::new(SocSpec::exynos5422());
+        let (req, _) = request(5, 64, 8, Backend::Pjrt { variant: "big".into() });
+        assert!(c.execute(&req).is_err());
+    }
+
+    #[test]
+    fn pjrt_unknown_shape_errors() {
+        if !artifacts_dir().join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let c = Coordinator::with_artifacts(SocSpec::exynos5422(), &artifacts_dir()).unwrap();
+        let (req, _) = request(6, 99, 9, Backend::Pjrt { variant: "big".into() });
+        let err = c.execute(&req).unwrap_err().to_string();
+        assert!(err.contains("no artifact"), "{err}");
+    }
+
+    #[test]
+    fn batch_groups_and_preserves_order() {
+        let c = Coordinator::new(SocSpec::exynos5422());
+        let mut reqs = Vec::new();
+        let mut wants = Vec::new();
+        for (i, r) in [64usize, 96, 64, 96, 64].iter().enumerate() {
+            let (req, want) = request(i as u64, *r, 20 + i as u64, Backend::Native(ScheduleSpec::sas(5.0)));
+            reqs.push(req);
+            wants.push(want);
+        }
+        let resps = c.execute_batch(reqs);
+        assert_eq!(resps.len(), 5);
+        for (i, (resp, want)) in resps.iter().zip(&wants).enumerate() {
+            let resp = resp.as_ref().unwrap();
+            assert_eq!(resp.id, i as u64);
+            assert!(max_abs_diff(&resp.c, want) < gemm_tolerance(96));
+        }
+        // 2 distinct shapes × 1 backend = 2 batch groups.
+        assert_eq!(c.metrics().batches, 2);
+        assert_eq!(c.metrics().completed, 5);
+    }
+
+    #[test]
+    fn auto_backend_resolves_by_artifact_availability() {
+        // Without a runtime, Auto always resolves to native CA-DAS.
+        let c = Coordinator::new(SocSpec::exynos5422());
+        assert_eq!(
+            c.resolve_auto(GemmShape::square(128)),
+            Backend::Native(ScheduleSpec::ca_das())
+        );
+        let (req, want) = request(10, 96, 30, Backend::Auto);
+        let resp = c.execute(&req).unwrap();
+        assert!(resp.backend_label.starts_with("native/"));
+        assert!(max_abs_diff(&resp.c, &want) < gemm_tolerance(96));
+
+        // With artifacts, exact shapes go to PJRT, odd shapes to native.
+        if artifacts_dir().join("manifest.txt").exists() {
+            let c = Coordinator::with_artifacts(SocSpec::exynos5422(), &artifacts_dir()).unwrap();
+            assert!(matches!(
+                c.resolve_auto(GemmShape::square(128)),
+                Backend::Pjrt { .. }
+            ));
+            assert_eq!(
+                c.resolve_auto(GemmShape::square(99)),
+                Backend::Native(ScheduleSpec::ca_das())
+            );
+            let (req, want) = request(11, 128, 31, Backend::Auto);
+            let resp = c.execute(&req).unwrap();
+            assert!(resp.backend_label.starts_with("pjrt/"), "{}", resp.backend_label);
+            assert!(max_abs_diff(&resp.c, &want) < gemm_tolerance(128));
+        }
+    }
+
+    #[test]
+    fn auto_ratio_matches_paper_knob() {
+        let c = Coordinator::new(SocSpec::exynos5422());
+        // §5.2.2/Fig. 9: the right ratio is ≈ 5.
+        assert_eq!(c.auto_ratio(), 5.0);
+        assert_eq!(c.auto_spec(), ScheduleSpec::ca_das());
+    }
+}

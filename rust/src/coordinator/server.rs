@@ -1,0 +1,287 @@
+//! Line-protocol TCP front-end for the coordinator (std::net — see
+//! DESIGN.md §2 for the no-tokio substitution).
+//!
+//! Protocol (one request per line, whitespace-separated):
+//!
+//! ```text
+//! GEMM <m> <n> <k> <seed> <backend>   backend ∈ native|pjrt|pjrt:<variant>|sim
+//! PING
+//! STATS
+//! QUIT
+//! ```
+//!
+//! Operands are generated server-side from the deterministic seed
+//! (xorshift64*, same generator as the test suite) so the protocol stays
+//! tiny while results remain verifiable: the response carries a checksum
+//! any client can recompute.
+//!
+//! Responses: `OK <id> <latency_ms> <gflops> <checksum> <backend>` or
+//! `ERR <message>`; `PONG`; `STATS <completed> <batches> <avg_gflops>`.
+
+use crate::blis::gemm::GemmShape;
+use crate::coordinator::{Backend, Coordinator, Request};
+use crate::util::rng::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A running server; dropping it does not stop the listener — call
+/// [`ServerHandle::shutdown`].
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Nudge the accept loop.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Start serving on `addr` (use port 0 for ephemeral). One thread per
+/// connection; the coordinator itself is shared.
+pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let next_id = Arc::new(AtomicU64::new(1));
+    let join = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if stop2.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let coord = coordinator.clone();
+            let ids = next_id.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(coord, ids, stream);
+            });
+        }
+    });
+    Ok(ServerHandle {
+        addr: local,
+        stop,
+        join: Some(join),
+    })
+}
+
+fn handle_conn(
+    coord: Arc<Coordinator>,
+    ids: Arc<AtomicU64>,
+    stream: TcpStream,
+) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let reply = match handle_line(&coord, &ids, line.trim()) {
+            LineResult::Reply(s) => s,
+            LineResult::Quit => break,
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+enum LineResult {
+    Reply(String),
+    Quit,
+}
+
+fn handle_line(coord: &Coordinator, ids: &AtomicU64, line: &str) -> LineResult {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    match parts.as_slice() {
+        [] => LineResult::Reply("ERR empty request".into()),
+        ["PING"] => LineResult::Reply("PONG".into()),
+        ["QUIT"] => LineResult::Quit,
+        ["STATS"] => {
+            let m = coord.metrics();
+            let avg = if m.total_latency_s > 0.0 {
+                m.total_flops / m.total_latency_s / 1e9
+            } else {
+                0.0
+            };
+            LineResult::Reply(format!("STATS {} {} {:.3}", m.completed, m.batches, avg))
+        }
+        ["GEMM", m, n, k, seed, backend] => {
+            match gemm_request(coord, ids, m, n, k, seed, backend) {
+                Ok(s) => LineResult::Reply(s),
+                Err(e) => LineResult::Reply(format!("ERR {e}")),
+            }
+        }
+        _ => LineResult::Reply(format!("ERR unrecognized request '{line}'")),
+    }
+}
+
+fn gemm_request(
+    coord: &Coordinator,
+    ids: &AtomicU64,
+    m: &str,
+    n: &str,
+    k: &str,
+    seed: &str,
+    backend: &str,
+) -> Result<String, String> {
+    let parse = |s: &str, what: &str| -> Result<usize, String> {
+        s.parse::<usize>()
+            .map_err(|_| format!("bad {what} '{s}'"))
+            .and_then(|v| {
+                if v == 0 || v > 4096 {
+                    Err(format!("{what} out of range (1..=4096): {v}"))
+                } else {
+                    Ok(v)
+                }
+            })
+    };
+    let (m, n, k) = (parse(m, "m")?, parse(n, "n")?, parse(k, "k")?);
+    let seed: u64 = seed.parse().map_err(|_| format!("bad seed '{seed}'"))?;
+    let backend = match backend {
+        "native" => Backend::Native(coord.auto_spec()),
+        "sim" => Backend::Sim(coord.auto_spec()),
+        "pjrt" => Backend::Pjrt { variant: "big".into() },
+        "auto" => Backend::Auto,
+        other => match other.split_once(':') {
+            Some(("pjrt", v)) => Backend::Pjrt { variant: v.to_string() },
+            _ => return Err(format!("unknown backend '{other}'")),
+        },
+    };
+    let mut rng = Rng::new(seed);
+    let a = rng.fill_matrix(m * k);
+    let b = rng.fill_matrix(k * n);
+    let req = Request {
+        id: ids.fetch_add(1, Ordering::SeqCst),
+        shape: GemmShape { m, n, k },
+        a: Arc::new(a),
+        b: Arc::new(b),
+        backend,
+    };
+    let resp = coord.execute(&req).map_err(|e| e.to_string())?;
+    Ok(format!(
+        "OK {} {:.3} {:.3} {:.6e} {}",
+        resp.id,
+        resp.latency_s * 1e3,
+        resp.gflops,
+        resp.checksum,
+        resp.backend_label.replace(' ', "_")
+    ))
+}
+
+/// Minimal blocking client for examples and tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn call(&mut self, line: &str) -> std::io::Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        Ok(reply.trim_end().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::SocSpec;
+
+    fn start() -> (Arc<Coordinator>, ServerHandle) {
+        let coord = Arc::new(Coordinator::new(SocSpec::exynos5422()));
+        let h = serve(coord.clone(), "127.0.0.1:0").unwrap();
+        (coord, h)
+    }
+
+    #[test]
+    fn ping_pong() {
+        let (_c, h) = start();
+        let mut cl = Client::connect(h.addr).unwrap();
+        assert_eq!(cl.call("PING").unwrap(), "PONG");
+        h.shutdown();
+    }
+
+    #[test]
+    fn gemm_native_roundtrip_and_checksum_determinism() {
+        let (_c, h) = start();
+        let mut cl = Client::connect(h.addr).unwrap();
+        let r1 = cl.call("GEMM 64 64 64 42 native").unwrap();
+        assert!(r1.starts_with("OK "), "{r1}");
+        let checksum1: f64 = r1.split_whitespace().nth(4).unwrap().parse().unwrap();
+        let r2 = cl.call("GEMM 64 64 64 42 native").unwrap();
+        let checksum2: f64 = r2.split_whitespace().nth(4).unwrap().parse().unwrap();
+        assert_eq!(checksum1, checksum2, "same seed → same checksum");
+        let r3 = cl.call("GEMM 64 64 64 43 native").unwrap();
+        let checksum3: f64 = r3.split_whitespace().nth(4).unwrap().parse().unwrap();
+        assert_ne!(checksum1, checksum3);
+        h.shutdown();
+    }
+
+    #[test]
+    fn sim_backend_over_wire() {
+        let (_c, h) = start();
+        let mut cl = Client::connect(h.addr).unwrap();
+        let r = cl.call("GEMM 1024 1024 1024 1 sim").unwrap();
+        assert!(r.starts_with("OK "), "{r}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let (_c, h) = start();
+        let mut cl = Client::connect(h.addr).unwrap();
+        cl.call("GEMM 32 32 32 1 native").unwrap();
+        cl.call("GEMM 32 32 32 2 native").unwrap();
+        let stats = cl.call("STATS").unwrap();
+        let completed: u64 = stats.split_whitespace().nth(1).unwrap().parse().unwrap();
+        assert_eq!(completed, 2, "{stats}");
+        h.shutdown();
+    }
+
+    #[test]
+    fn errors_are_reported_not_fatal() {
+        let (_c, h) = start();
+        let mut cl = Client::connect(h.addr).unwrap();
+        assert!(cl.call("GEMM 0 1 1 1 native").unwrap().starts_with("ERR"));
+        assert!(cl.call("GEMM 64 64 64 1 warp").unwrap().starts_with("ERR"));
+        assert!(cl.call("BOGUS").unwrap().starts_with("ERR"));
+        // Connection still alive afterwards.
+        assert_eq!(cl.call("PING").unwrap(), "PONG");
+        h.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (_c, h) = start();
+        let addr = h.addr;
+        let mut joins = Vec::new();
+        for seed in 0..4 {
+            joins.push(std::thread::spawn(move || {
+                let mut cl = Client::connect(addr).unwrap();
+                let r = cl.call(&format!("GEMM 48 48 48 {seed} native")).unwrap();
+                assert!(r.starts_with("OK "), "{r}");
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        h.shutdown();
+    }
+}

@@ -1,0 +1,190 @@
+//! Ablations beyond the paper's evaluation — its §6 roadmap, made
+//! runnable:
+//!
+//! * **core-count ablation** ("architectures with different number of
+//!   big/LITTLE cores"): CA-DAS and the best SAS on 2+4 / 4+4 / 2+6 /
+//!   6+2 configurations;
+//! * **DVFS ablation** (§5.2's ratio knob under frequency changes):
+//!   the model-derived SAS ratio and the CA-DAS robustness across
+//!   operating points;
+//! * **ARMv8 port** (Juno r0 descriptor): the schedulers on a 2×A57 +
+//!   4×A53 machine, no recalibration;
+//! * **per-core micro-kernels** ("different micro-kernels, tuned to
+//!   each type of core"): the modelled effect of an 8×4 big-core
+//!   register block.
+
+use crate::blis::gemm::GemmShape;
+use crate::blis::params::BlisParams;
+use crate::figures::{Assertion, FigureResult};
+use crate::model::PerfModel;
+use crate::sched::ScheduleSpec;
+use crate::sim::simulate;
+use crate::soc::{CoreType, SocSpec};
+use crate::util::table::Table;
+
+pub fn run(_quick: bool) -> FigureResult {
+    let r = 4096;
+    let mut tables = Vec::new();
+    let mut assertions = Vec::new();
+
+    // ---- 1. core counts --------------------------------------------
+    let mut t1 = Table::new(
+        "Ablation: big+LITTLE core counts (r = 4096)",
+        &["config", "ideal", "CA-DAS", "% of ideal", "best SAS ratio", "SAS @ best"],
+    );
+    for (nb, nl) in [(2usize, 4usize), (4, 4), (2, 6), (6, 2)] {
+        let model = PerfModel::new(SocSpec::custom_counts(nb, nl));
+        let ideal = simulate(&model, &ScheduleSpec::cluster_only(CoreType::Big, nb), GemmShape::square(r)).gflops
+            + simulate(&model, &ScheduleSpec::cluster_only(CoreType::Little, nl), GemmShape::square(r)).gflops;
+        let cadas = simulate(&model, &ScheduleSpec::ca_das(), GemmShape::square(r)).gflops;
+        let (mut best_ratio, mut best_g) = (1, 0.0);
+        for ratio in 1..=12 {
+            let g = simulate(&model, &ScheduleSpec::sas(ratio as f64), GemmShape::square(r)).gflops;
+            if g > best_g {
+                best_g = g;
+                best_ratio = ratio;
+            }
+        }
+        t1.push_row(vec![
+            format!("{nb}+{nl}"),
+            format!("{ideal:.2}"),
+            format!("{cadas:.2}"),
+            format!("{:.0}%", cadas / ideal * 100.0),
+            best_ratio.to_string(),
+            format!("{best_g:.2}"),
+        ]);
+        assertions.push(Assertion::check(
+            &format!("{nb}+{nl}: CA-DAS ≥ 90 % of ideal without retuning"),
+            cadas > 0.90 * ideal,
+            format!("{cadas:.2} vs ideal {ideal:.2}"),
+        ));
+    }
+    tables.push(t1);
+
+    // ---- 2. DVFS ----------------------------------------------------
+    let mut t2 = Table::new(
+        "Ablation: DVFS operating points (Exynos, r = 4096)",
+        &["freqs GHz (big/LITTLE)", "model ratio", "best swept SAS ratio", "CA-DAS % of ideal"],
+    );
+    let mut dvfs_ratios = Vec::new();
+    for (fb, fl) in [(1.6, 1.4), (1.2, 1.4), (0.8, 1.4), (1.6, 0.7)] {
+        let model = PerfModel::new(SocSpec::exynos5422().with_freqs(fb, fl));
+        let p = BlisParams::a15_opt();
+        let model_ratio = model.ideal_ratio(&p, &p);
+        let (mut best_ratio, mut best_g) = (1, 0.0);
+        for ratio in 1..=12 {
+            let g = simulate(&model, &ScheduleSpec::sas(ratio as f64), GemmShape::square(r)).gflops;
+            if g > best_g {
+                best_g = g;
+                best_ratio = ratio;
+            }
+        }
+        let ideal = simulate(&model, &ScheduleSpec::cluster_only(CoreType::Big, 4), GemmShape::square(r)).gflops
+            + simulate(&model, &ScheduleSpec::cluster_only(CoreType::Little, 4), GemmShape::square(r)).gflops;
+        let cadas = simulate(&model, &ScheduleSpec::ca_das(), GemmShape::square(r)).gflops;
+        t2.push_row(vec![
+            format!("{fb}/{fl}"),
+            format!("{model_ratio:.2}"),
+            best_ratio.to_string(),
+            format!("{:.0}%", cadas / ideal * 100.0),
+        ]);
+        dvfs_ratios.push((model_ratio, best_ratio as f64, cadas / ideal));
+    }
+    tables.push(t2);
+    assertions.push(Assertion::check(
+        "model ratio tracks the swept optimum across operating points (±1.5)",
+        dvfs_ratios.iter().all(|(m, b, _)| (m - b).abs() <= 1.5),
+        format!("{dvfs_ratios:?}"),
+    ));
+    assertions.push(Assertion::check(
+        "CA-DAS needs no ratio and stays ≥ 88 % of ideal at every point",
+        dvfs_ratios.iter().all(|(_, _, frac)| *frac >= 0.88),
+        format!("{dvfs_ratios:?}"),
+    ));
+
+    // ---- 3. ARMv8 (Juno) --------------------------------------------
+    let juno = PerfModel::new(SocSpec::juno_r0());
+    let mut t3 = Table::new(
+        "Ablation: ARMv8 Juno r0 (2×A57 + 4×A53, r = 4096)",
+        &["schedule", "GFLOPS", "GFLOPS/W"],
+    );
+    let j_ideal = simulate(&juno, &ScheduleSpec::cluster_only(CoreType::Big, 2), GemmShape::square(r)).gflops
+        + simulate(&juno, &ScheduleSpec::cluster_only(CoreType::Little, 4), GemmShape::square(r)).gflops;
+    let mut j_cadas = 0.0;
+    let mut j_sss = 0.0;
+    for spec in [
+        ScheduleSpec::cluster_only(CoreType::Big, 2),
+        ScheduleSpec::cluster_only(CoreType::Little, 4),
+        ScheduleSpec::sss(),
+        ScheduleSpec::sas(3.0),
+        ScheduleSpec::ca_das(),
+    ] {
+        let st = simulate(&juno, &spec, GemmShape::square(r));
+        t3.push_row(vec![
+            st.label.clone(),
+            format!("{:.2}", st.gflops),
+            format!("{:.3}", st.gflops_per_watt),
+        ]);
+        if spec == ScheduleSpec::ca_das() {
+            j_cadas = st.gflops;
+        }
+        if spec == ScheduleSpec::sss() {
+            j_sss = st.gflops;
+        }
+    }
+    tables.push(t3);
+    assertions.push(Assertion::check(
+        "the scheduling story ports to ARMv8: CA-DAS ≈ ideal, ≫ SSS",
+        j_cadas > 0.88 * j_ideal && j_cadas > 1.3 * j_sss,
+        format!("CA-DAS {j_cadas:.2}, SSS {j_sss:.2}, ideal {j_ideal:.2}"),
+    ));
+
+    // ---- 4. per-core micro-kernels -----------------------------------
+    let model = PerfModel::exynos();
+    let mut t4 = Table::new(
+        "Ablation: per-core-type micro-kernels (modelled single core)",
+        &["core", "4x4 GFLOPS", "8x4 GFLOPS", "delta"],
+    );
+    let b44 = model.steady_rate_gflops(CoreType::Big, &BlisParams::a15_opt(), 1);
+    let b84 = model.steady_rate_gflops(CoreType::Big, &BlisParams::a15_opt_8x4(), 1);
+    let l44 = model.steady_rate_gflops(CoreType::Little, &BlisParams::a7_opt(), 1);
+    let a7_84 = BlisParams::new(4096, 352, 80, 4, 8);
+    let l84 = model.steady_rate_gflops(CoreType::Little, &a7_84, 1);
+    t4.push_row(vec![
+        "Cortex-A15".into(),
+        format!("{b44:.3}"),
+        format!("{b84:.3}"),
+        format!("{:+.1}%", (b84 / b44 - 1.0) * 100.0),
+    ]);
+    t4.push_row(vec![
+        "Cortex-A7".into(),
+        format!("{l44:.3}"),
+        format!("{l84:.3}"),
+        format!("{:+.1}%", (l84 / l44 - 1.0) * 100.0),
+    ]);
+    tables.push(t4);
+    assertions.push(Assertion::check(
+        "8×4 helps the big core, hurts the LITTLE — per-core kernels pay",
+        b84 > b44 && l84 < l44,
+        format!("big {b44:.3}→{b84:.3}, LITTLE {l44:.3}→{l84:.3}"),
+    ));
+
+    FigureResult {
+        id: "ablation",
+        title: "Future-work ablations (§6): core counts, DVFS, ARMv8, per-core micro-kernels",
+        tables,
+        assertions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_suite_passes() {
+        let fig = run(true);
+        assert!(fig.passed(), "{}", fig.to_markdown());
+        assert_eq!(fig.tables.len(), 4);
+    }
+}

@@ -1,0 +1,82 @@
+//! Fig. 10: SAS vs CA-SAS (one vs two control trees) at distribution
+//! ratios 1, 3, 5 (coarse Loop 1 + fine Loop 4). Paper findings (§5.3.1):
+//! the two-control-tree version wins on both metrics, with the gains
+//! visible only when too much work lands on the A7 cluster (ratios < 5);
+//! at ratio 5 the curves coincide.
+
+use crate::figures::{sim_square, sizes, Assertion, FigureResult};
+use crate::model::PerfModel;
+use crate::sched::ScheduleSpec;
+use crate::util::table::Table;
+
+pub fn run(model: &PerfModel, quick: bool) -> FigureResult {
+    let rs = sizes(quick);
+    let ratios = [1.0, 3.0, 5.0];
+    let mut cols = vec!["r".to_string()];
+    for r in ratios {
+        cols.push(format!("SAS(r={r:.0})"));
+        cols.push(format!("CA-SAS(r={r:.0})"));
+    }
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut perf = Table::new("Fig10 SAS vs CA-SAS, performance [GFLOPS]", &col_refs);
+    let mut eff = Table::new("Fig10 SAS vs CA-SAS, energy [GFLOPS/W]", &col_refs);
+
+    let r_max = *rs.last().unwrap();
+    let mut at_max = Vec::new(); // (sas, casas, sas_eff, casas_eff) per ratio
+    for &r in &rs {
+        let mut prow = vec![r as f64];
+        let mut erow = vec![r as f64];
+        for &ratio in &ratios {
+            let sas = sim_square(model, &ScheduleSpec::sas(ratio), r);
+            let ca = sim_square(model, &ScheduleSpec::ca_sas(ratio), r);
+            prow.extend([sas.gflops, ca.gflops]);
+            erow.extend([sas.gflops_per_watt, ca.gflops_per_watt]);
+            if r == r_max {
+                at_max.push((sas.gflops, ca.gflops, sas.gflops_per_watt, ca.gflops_per_watt));
+            }
+        }
+        perf.push_f64_row(&prow, 3);
+        eff.push_f64_row(&erow, 3);
+    }
+
+    let assertions = vec![
+        Assertion::check(
+            "CA-SAS clearly better at ratio 1 (work-heavy A7, §5.3.1)",
+            at_max[0].1 > 1.05 * at_max[0].0,
+            format!("CA {:.2} vs SAS {:.2}", at_max[0].1, at_max[0].0),
+        ),
+        Assertion::check(
+            "CA-SAS clearly better at ratio 3",
+            at_max[1].1 > 1.05 * at_max[1].0,
+            format!("CA {:.2} vs SAS {:.2}", at_max[1].1, at_max[1].0),
+        ),
+        Assertion::check(
+            "no visible difference at ratio 5 (big cluster critical)",
+            (at_max[2].1 / at_max[2].0 - 1.0).abs() < 0.05,
+            format!("CA {:.2} vs SAS {:.2}", at_max[2].1, at_max[2].0),
+        ),
+        Assertion::check(
+            "CA-SAS never worse on energy",
+            at_max.iter().all(|t| t.3 >= t.2 * 0.98),
+            format!("pairs (SAS, CA) eff: {:?}", at_max.iter().map(|t| (t.2, t.3)).collect::<Vec<_>>()),
+        ),
+        Assertion::check(
+            "CA-SAS gains shrink as the ratio grows",
+            (at_max[0].1 / at_max[0].0) > (at_max[1].1 / at_max[1].0)
+                && (at_max[1].1 / at_max[1].0) > (at_max[2].1 / at_max[2].0),
+            format!(
+                "gains: r1 {:.2}×, r3 {:.2}×, r5 {:.2}×",
+                at_max[0].1 / at_max[0].0,
+                at_max[1].1 / at_max[1].0,
+                at_max[2].1 / at_max[2].0
+            ),
+        ),
+    ];
+
+    FigureResult {
+        id: "fig10",
+        title: "SAS vs CA-SAS at ratios 1, 3, 5",
+        tables: vec![perf, eff],
+        assertions,
+    }
+}

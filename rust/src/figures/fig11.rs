@@ -1,0 +1,83 @@
+//! Fig. 11: CA-SAS at ratio 5 with the four coarse×fine combinations
+//! (Loop 1/Loop 3 × Loop 4/Loop 5). Paper findings (§5.3.1): fine-grain
+//! Loop 4 tracks the ideal much closer than Loop 5; under Loop 4 the
+//! choice of coarse loop is indistinguishable, while under Loop 5 the
+//! difference shows (Loop 3 forces the shared-kc refit on the A7).
+
+use crate::figures::{ideal_gflops, sim_square, sizes, Assertion, FigureResult};
+use crate::model::PerfModel;
+use crate::sched::{CoarseLoop, FineLoop, ScheduleSpec, Strategy};
+use crate::util::table::Table;
+
+pub fn run(model: &PerfModel, quick: bool) -> FigureResult {
+    let rs = sizes(quick);
+    let combos = [
+        (CoarseLoop::Loop1, FineLoop::Loop4),
+        (CoarseLoop::Loop3, FineLoop::Loop4),
+        (CoarseLoop::Loop1, FineLoop::Loop5),
+        (CoarseLoop::Loop3, FineLoop::Loop5),
+    ];
+    let mut cols = vec!["r".to_string()];
+    cols.extend(combos.iter().map(|(c, f)| format!("{}+{}", c.name(), f.name())));
+    cols.push("Ideal".into());
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut perf = Table::new("Fig11 CA-SAS(r=5) loop combinations, performance [GFLOPS]", &col_refs);
+    let mut eff = Table::new("Fig11 CA-SAS(r=5) loop combinations, energy [GFLOPS/W]", &col_refs);
+
+    let r_max = *rs.last().unwrap();
+    let mut at_max = [0.0f64; 4];
+    for &r in &rs {
+        let mut prow = vec![r as f64];
+        let mut erow = vec![r as f64];
+        for (i, &(coarse, fine)) in combos.iter().enumerate() {
+            let spec = ScheduleSpec::new(Strategy::CaSas { ratio: 5.0 }, coarse, fine);
+            let st = sim_square(model, &spec, r);
+            prow.push(st.gflops);
+            erow.push(st.gflops_per_watt);
+            if r == r_max {
+                at_max[i] = st.gflops;
+            }
+        }
+        prow.push(ideal_gflops(model, r));
+        erow.push(f64::NAN);
+        perf.push_f64_row(&prow, 3);
+        eff.push_f64_row(&erow, 3);
+    }
+
+    let ideal = ideal_gflops(model, r_max);
+    let assertions = vec![
+        Assertion::check(
+            "Loop-4 fine grain tracks the ideal closer than Loop 5",
+            at_max[0] > at_max[2] && at_max[1] > at_max[3],
+            format!(
+                "L4: {:.2}/{:.2} vs L5: {:.2}/{:.2}",
+                at_max[0], at_max[1], at_max[2], at_max[3]
+            ),
+        ),
+        Assertion::check(
+            "under Loop 4, coarse L1 ≈ coarse L3 (§5.3.1)",
+            (at_max[0] / at_max[1] - 1.0).abs() < 0.05,
+            format!("L1+L4 {:.2} vs L3+L4 {:.2}", at_max[0], at_max[1]),
+        ),
+        Assertion::check(
+            "under Loop 5, the coarse-loop choice matters",
+            (at_max[2] / at_max[3] - 1.0).abs()
+                > (at_max[0] / at_max[1] - 1.0).abs(),
+            format!("L5 gap {:.3} vs L4 gap {:.3}",
+                (at_max[2] / at_max[3] - 1.0).abs(),
+                (at_max[0] / at_max[1] - 1.0).abs()),
+        ),
+        Assertion::check(
+            "best combination approaches the ideal",
+            at_max[0].max(at_max[1]) > 0.90 * ideal,
+            format!("best {:.2} vs ideal {:.2}", at_max[0].max(at_max[1]), ideal),
+        ),
+    ];
+
+    FigureResult {
+        id: "fig11",
+        title: "CA-SAS(r=5): coarse Loop 1/3 × fine Loop 4/5",
+        tables: vec![perf, eff],
+        assertions,
+    }
+}

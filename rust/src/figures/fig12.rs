@@ -1,0 +1,99 @@
+//! Fig. 12: the dynamic schedulers — CA-DAS and DAS (coarse Loop 3
+//! dynamic, fine Loop 4 or Loop 5) against the best CA-SAS (ratio 5).
+//! Paper findings (§5.4.1): CA-DAS with Loop 4 is the best overall; the
+//! two-control-tree version matters a lot (DAS suffers load imbalance
+//! from its uniform chunk size); Loop-5 fine grain falls behind the
+//! static approach.
+
+use crate::figures::{ideal_gflops, sim_square, sizes, Assertion, FigureResult};
+use crate::model::PerfModel;
+use crate::sched::{CoarseLoop, FineLoop, ScheduleSpec, Strategy};
+use crate::util::table::Table;
+
+pub fn run(model: &PerfModel, quick: bool) -> FigureResult {
+    let rs = sizes(quick);
+    let series: Vec<(&str, ScheduleSpec)> = vec![
+        ("CA-DAS L4", ScheduleSpec::new(Strategy::CaDas, CoarseLoop::Loop3, FineLoop::Loop4)),
+        ("CA-DAS L5", ScheduleSpec::new(Strategy::CaDas, CoarseLoop::Loop3, FineLoop::Loop5)),
+        ("DAS L4", ScheduleSpec::new(Strategy::Das, CoarseLoop::Loop3, FineLoop::Loop4)),
+        ("DAS L5", ScheduleSpec::new(Strategy::Das, CoarseLoop::Loop3, FineLoop::Loop5)),
+        ("CA-SAS(r=5) L4", ScheduleSpec::ca_sas(5.0)),
+    ];
+    let mut cols = vec!["r"];
+    cols.extend(series.iter().map(|(n, _)| *n));
+    cols.push("Ideal");
+    let mut perf = Table::new("Fig12 dynamic schedulers, performance [GFLOPS]", &cols);
+    let mut eff = Table::new("Fig12 dynamic schedulers, energy [GFLOPS/W]", &cols);
+
+    let r_max = *rs.last().unwrap();
+    let mut at_max = vec![0.0f64; series.len()];
+    let mut eff_at_max = vec![0.0f64; series.len()];
+    // Per-size CA-DAS/DAS gap: the paper's "severe load unbalance for
+    // certain problem sizes" (§5.4.1) — the DAS deficit is size-dependent
+    // (it shrinks as the chunk count amortizes the uniform-chunk tail).
+    let mut das_gap = Vec::new();
+    for &r in &rs {
+        let mut prow = vec![r as f64];
+        let mut erow = vec![r as f64];
+        let mut row_g = vec![0.0f64; series.len()];
+        for (i, (_, spec)) in series.iter().enumerate() {
+            let st = sim_square(model, spec, r);
+            prow.push(st.gflops);
+            erow.push(st.gflops_per_watt);
+            row_g[i] = st.gflops;
+            if r == r_max {
+                at_max[i] = st.gflops;
+                eff_at_max[i] = st.gflops_per_watt;
+            }
+        }
+        das_gap.push(row_g[0] / row_g[2]);
+        prow.push(ideal_gflops(model, r));
+        erow.push(f64::NAN);
+        perf.push_f64_row(&prow, 3);
+        eff.push_f64_row(&erow, 3);
+    }
+    let max_gap = das_gap.iter().cloned().fold(0.0, f64::max);
+    let min_gap = das_gap.iter().cloned().fold(f64::INFINITY, f64::min);
+
+    let ideal = ideal_gflops(model, r_max);
+    let assertions = vec![
+        Assertion::check(
+            "CA-DAS + Loop 4 is the best configuration (§5.4.1)",
+            at_max[0] >= at_max.iter().cloned().fold(0.0, f64::max) - 1e-9,
+            format!("{:?}", at_max),
+        ),
+        Assertion::check(
+            "two control trees matter: CA-DAS ≥ DAS everywhere, with a \
+             severe DAS deficit at some sizes (§5.4.1)",
+            min_gap > 0.99 && max_gap > 1.05,
+            format!("CA-DAS/DAS gap across sizes: min {min_gap:.3}, max {max_gap:.3}"),
+        ),
+        Assertion::check(
+            "CA-DAS L4 matches/beats the best static CA-SAS",
+            at_max[0] > 0.97 * at_max[4],
+            format!("CA-DAS {:.2} vs CA-SAS(r=5) {:.2}", at_max[0], at_max[4]),
+        ),
+        Assertion::check(
+            "Loop-5 dynamic falls behind the static approach (§5.4.1)",
+            at_max[1] < at_max[4],
+            format!("CA-DAS L5 {:.2} vs CA-SAS {:.2}", at_max[1], at_max[4]),
+        ),
+        Assertion::check(
+            "CA-DAS approaches the ideal",
+            at_max[0] > 0.90 * ideal,
+            format!("{:.2} vs ideal {:.2}", at_max[0], ideal),
+        ),
+        Assertion::check(
+            "CA-DAS also best on energy among dynamic variants",
+            eff_at_max[0] >= eff_at_max[1].max(eff_at_max[2]).max(eff_at_max[3]) - 1e-9,
+            format!("{:?}", eff_at_max),
+        ),
+    ];
+
+    FigureResult {
+        id: "fig12",
+        title: "Dynamic CA-DAS / DAS vs best CA-SAS",
+        tables: vec![perf, eff],
+        assertions,
+    }
+}

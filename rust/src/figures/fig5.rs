@@ -1,0 +1,95 @@
+//! Fig. 5: performance (GFLOPS) and energy efficiency (GFLOPS/W) of the
+//! BLIS GEMM using exclusively one type of core, 1–4 threads, across
+//! problem sizes. Paper anchors (§3.4): A15 ≈ +2.8 GFLOPS/core up to 3
+//! cores, smaller 4th-core increment, cluster peak ≈ 9.6; A7 peak ≈ 2.4;
+//! best A15 efficiency with 3 cores; full-A7 efficiency ≈ 2× single-A7.
+
+use crate::figures::{sim_square, sizes, Assertion, FigureResult};
+use crate::model::PerfModel;
+use crate::sched::ScheduleSpec;
+use crate::soc::CoreType;
+use crate::util::table::Table;
+
+pub fn run(model: &PerfModel, quick: bool) -> FigureResult {
+    let rs = sizes(quick);
+    let mut perf = Table::new(
+        "Fig5 performance: isolated clusters, 1–4 threads [GFLOPS]",
+        &["r", "A15x1", "A15x2", "A15x3", "A15x4", "A7x1", "A7x2", "A7x3", "A7x4"],
+    );
+    let mut eff = Table::new(
+        "Fig5 energy efficiency [GFLOPS/W, whole SoC]",
+        &["r", "A15x1", "A15x2", "A15x3", "A15x4", "A7x1", "A7x2", "A7x3", "A7x4"],
+    );
+
+    let mut peak_perf = vec![0.0f64; 8];
+    let mut peak_eff = vec![0.0f64; 8];
+    for &r in &rs {
+        let mut prow = vec![r as f64];
+        let mut erow = vec![r as f64];
+        for (idx, (core, t)) in CoreType::ALL
+            .iter()
+            .flat_map(|&c| (1..=4).map(move |t| (c, t)))
+            .enumerate()
+        {
+            let st = sim_square(model, &ScheduleSpec::cluster_only(core, t), r);
+            prow.push(st.gflops);
+            erow.push(st.gflops_per_watt);
+            peak_perf[idx] = peak_perf[idx].max(st.gflops);
+            peak_eff[idx] = peak_eff[idx].max(st.gflops_per_watt);
+        }
+        perf.push_f64_row(&prow, 3);
+        eff.push_f64_row(&erow, 3);
+    }
+
+    let mut assertions = Vec::new();
+    assertions.push(Assertion::check(
+        "A15 cluster peak ≈ 9.6 GFLOPS",
+        (9.0..10.1).contains(&peak_perf[3]),
+        format!("{:.2} GFLOPS (paper 9.6)", peak_perf[3]),
+    ));
+    assertions.push(Assertion::check(
+        "A7 cluster peak ≈ 2.4 GFLOPS",
+        (2.1..2.6).contains(&peak_perf[7]),
+        format!("{:.2} GFLOPS (paper ≈2.4)", peak_perf[7]),
+    ));
+    let inc3 = peak_perf[2] - peak_perf[1];
+    let inc4 = peak_perf[3] - peak_perf[2];
+    assertions.push(Assertion::check(
+        "4th A15 core adds much less than the 3rd",
+        inc4 < 0.65 * inc3,
+        format!("3rd +{inc3:.2}, 4th +{inc4:.2} (paper +2.8 vs +1.4)"),
+    ));
+    assertions.push(Assertion::check(
+        "best A15 efficiency at 3 cores",
+        peak_eff[2] > peak_eff[3] && peak_eff[2] > peak_eff[1] && peak_eff[2] > peak_eff[0],
+        format!(
+            "A15 eff by threads: {:.3} {:.3} {:.3} {:.3}",
+            peak_eff[0], peak_eff[1], peak_eff[2], peak_eff[3]
+        ),
+    ));
+    assertions.push(Assertion::check(
+        "full-A7 efficiency ≈ 2× single-A7",
+        (1.6..2.7).contains(&(peak_eff[7] / peak_eff[4])),
+        format!("ratio {:.2} (paper ≈2×)", peak_eff[7] / peak_eff[4]),
+    ));
+    assertions.push(Assertion::check(
+        "4×A7 more energy-efficient than 1×A15, though slower",
+        peak_eff[7] > peak_eff[0] && peak_perf[7] < peak_perf[0],
+        format!(
+            "eff {:.3} vs {:.3}; perf {:.2} vs {:.2}",
+            peak_eff[7], peak_eff[0], peak_perf[7], peak_perf[0]
+        ),
+    ));
+    assertions.push(Assertion::check(
+        "full clusters have similar efficiency (§3.4)",
+        (peak_eff[7] / peak_eff[3] - 1.0).abs() < 0.20,
+        format!("full-A7 {:.3} vs full-A15 {:.3}", peak_eff[7], peak_eff[3]),
+    ));
+
+    FigureResult {
+        id: "fig5",
+        title: "Isolated-cluster performance and energy efficiency vs threads",
+        tables: vec![perf, eff],
+        assertions,
+    }
+}

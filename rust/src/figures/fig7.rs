@@ -1,0 +1,69 @@
+//! Fig. 7: the architecture-oblivious SSS configuration (coarse Loop 1 +
+//! fine Loop 4, A15 parameters everywhere) against the isolated clusters
+//! and the Ideal aggregate. Paper finding (§4): SSS on all 8 cores
+//! reaches only ≈ 40 % of the A15-only peak and has the worst energy
+//! efficiency of any configuration.
+
+use crate::figures::{ideal_gflops, sim_square, sizes, Assertion, FigureResult};
+use crate::model::PerfModel;
+use crate::sched::ScheduleSpec;
+use crate::soc::CoreType;
+use crate::util::table::Table;
+
+pub fn run(model: &PerfModel, quick: bool) -> FigureResult {
+    let rs = sizes(quick);
+    let mut perf = Table::new(
+        "Fig7 performance [GFLOPS]",
+        &["r", "SSS(8 cores)", "A15x4", "A7x4", "Ideal"],
+    );
+    let mut eff = Table::new(
+        "Fig7 energy efficiency [GFLOPS/W]",
+        &["r", "SSS(8 cores)", "A15x4", "A7x4"],
+    );
+
+    let mut last = (0.0, 0.0, 0.0); // (sss, a15, ideal) at largest r
+    let mut sss_eff_worst_everywhere = true;
+    for &r in &rs {
+        let sss = sim_square(model, &ScheduleSpec::sss(), r);
+        let a15 = sim_square(model, &ScheduleSpec::cluster_only(CoreType::Big, 4), r);
+        let a7 = sim_square(model, &ScheduleSpec::cluster_only(CoreType::Little, 4), r);
+        let ideal = ideal_gflops(model, r);
+        perf.push_f64_row(&[r as f64, sss.gflops, a15.gflops, a7.gflops, ideal], 3);
+        eff.push_f64_row(
+            &[r as f64, sss.gflops_per_watt, a15.gflops_per_watt, a7.gflops_per_watt],
+            3,
+        );
+        if sss.gflops_per_watt >= a15.gflops_per_watt
+            || sss.gflops_per_watt >= a7.gflops_per_watt
+        {
+            sss_eff_worst_everywhere = false;
+        }
+        last = (sss.gflops, a15.gflops, ideal);
+    }
+
+    let frac = last.0 / last.1;
+    let assertions = vec![
+        Assertion::check(
+            "SSS ≈ 40 % of the A15-only peak (§4)",
+            (0.32..0.50).contains(&frac),
+            format!("SSS {:.2} / A15x4 {:.2} = {:.0} % (paper ≈40 %)", last.0, last.1, frac * 100.0),
+        ),
+        Assertion::check(
+            "SSS far below Ideal",
+            last.0 < 0.45 * last.2,
+            format!("SSS {:.2} vs Ideal {:.2}", last.0, last.2),
+        ),
+        Assertion::check(
+            "SSS is the worst energy configuration at every size (§4)",
+            sss_eff_worst_everywhere,
+            "SSS GFLOPS/W below both isolated clusters across sizes".to_string(),
+        ),
+    ];
+
+    FigureResult {
+        id: "fig7",
+        title: "Architecture-oblivious SSS vs isolated clusters and Ideal",
+        tables: vec![perf, eff],
+        assertions,
+    }
+}

@@ -1,0 +1,107 @@
+//! Fig. 9: SAS (coarse Loop 1 + fine Loop 4) with distribution ratios
+//! 1–7. Paper findings (§5.2.2): worst at ratio 1; performance grows up
+//! to ratio 5–6 then declines; at the largest size the best ratio beats
+//! the A15-only configuration by ≈ 20 %; small problems cannot exploit
+//! the asymmetry; a well-balanced SAS matches A15-only GFLOPS/W while
+//! unbalanced ratios crater it.
+
+use crate::figures::{ideal_gflops, sim_square, sizes, Assertion, FigureResult};
+use crate::model::PerfModel;
+use crate::sched::ScheduleSpec;
+use crate::soc::CoreType;
+use crate::util::table::Table;
+
+pub fn run(model: &PerfModel, quick: bool) -> FigureResult {
+    let rs = sizes(quick);
+    let ratios: Vec<usize> = (1..=7).collect();
+    let mut cols = vec!["r".to_string()];
+    cols.extend(ratios.iter().map(|r| format!("SAS(r={r})")));
+    cols.push("A15x4".into());
+    cols.push("Ideal".into());
+    let col_refs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut perf = Table::new("Fig9 SAS ratio sweep, performance [GFLOPS]", &col_refs);
+    let mut eff = Table::new("Fig9 SAS ratio sweep, energy [GFLOPS/W]", &col_refs);
+
+    let r_max = *rs.last().unwrap();
+    let mut big_curve = Vec::new(); // gflops by ratio at r_max
+    let mut eff_curve = Vec::new();
+    let mut a15_at_max = (0.0, 0.0);
+    for &r in &rs {
+        let mut prow = vec![r as f64];
+        let mut erow = vec![r as f64];
+        for &ratio in &ratios {
+            let st = sim_square(model, &ScheduleSpec::sas(ratio as f64), r);
+            prow.push(st.gflops);
+            erow.push(st.gflops_per_watt);
+            if r == r_max {
+                big_curve.push(st.gflops);
+                eff_curve.push(st.gflops_per_watt);
+            }
+        }
+        let a15 = sim_square(model, &ScheduleSpec::cluster_only(CoreType::Big, 4), r);
+        prow.push(a15.gflops);
+        prow.push(ideal_gflops(model, r));
+        erow.push(a15.gflops_per_watt);
+        erow.push(f64::NAN);
+        if r == r_max {
+            a15_at_max = (a15.gflops, a15.gflops_per_watt);
+        }
+        perf.push_f64_row(&prow, 3);
+        eff.push_f64_row(&erow, 3);
+    }
+
+    let best_ratio = 1 + big_curve
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    let best = big_curve[best_ratio - 1];
+    let mut assertions = vec![
+        Assertion::check(
+            "performance peaks at ratio 5–6 (§5.2.2)",
+            (5..=6).contains(&best_ratio),
+            format!("best ratio {best_ratio}; curve {big_curve:?}"),
+        ),
+        Assertion::check(
+            "ratio 1 (homogeneous) is the worst",
+            big_curve.iter().skip(1).all(|&g| g > big_curve[0]),
+            format!("r=1 gives {:.2} GFLOPS", big_curve[0]),
+        ),
+        Assertion::check(
+            "best SAS ≈ +20 % over A15-only at the largest size",
+            (1.10..1.30).contains(&(best / a15_at_max.0)),
+            format!("{:.2} vs {:.2} (+{:.0} %)", best, a15_at_max.0, (best / a15_at_max.0 - 1.0) * 100.0),
+        ),
+        Assertion::check(
+            "declines above ratio 6 but stays above the r=1 floor",
+            big_curve[6] < best && big_curve[6] > big_curve[0],
+            format!("r=7: {:.2}", big_curve[6]),
+        ),
+        Assertion::check(
+            "balanced SAS matches A15-only energy efficiency (§5.2.2)",
+            (eff_curve[best_ratio - 1] / a15_at_max.1 - 1.0).abs() < 0.20,
+            format!("{:.3} vs {:.3}", eff_curve[best_ratio - 1], a15_at_max.1),
+        ),
+        Assertion::check(
+            "unbalanced ratio 1 craters energy efficiency",
+            eff_curve[0] < 0.7 * eff_curve[best_ratio - 1],
+            format!("r=1 {:.3} vs best {:.3}", eff_curve[0], eff_curve[best_ratio - 1]),
+        ),
+    ];
+
+    // Small-size claim: the best large-size ratio underperforms at small r.
+    let small = sim_square(model, &ScheduleSpec::sas(best_ratio as f64), rs[0]);
+    assertions.push(Assertion::check(
+        "small problems cannot exploit the asymmetry",
+        small.gflops < 0.85 * best,
+        format!("r={}: {:.2} vs r={}: {:.2}", rs[0], small.gflops, r_max, best),
+    ));
+
+    FigureResult {
+        id: "fig9",
+        title: "SAS with distribution ratios 1–7 (Loop 1 + Loop 4)",
+        tables: vec![perf, eff],
+        assertions,
+    }
+}

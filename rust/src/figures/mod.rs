@@ -1,0 +1,208 @@
+//! Regeneration harness for every evaluation figure in the paper.
+//!
+//! The paper's evaluation is entirely figures (no numeric tables):
+//! Fig. 4 (cache-parameter search), Fig. 5 (isolated clusters), Fig. 7
+//! (architecture-oblivious SSS), Fig. 9 (SAS ratio sweep), Fig. 10
+//! (SAS vs CA-SAS), Fig. 11 (CA-SAS loop combinations), Fig. 12
+//! (dynamic CA-DAS/DAS). Figures 1–3, 6 and 8 are diagrams, not data.
+//!
+//! Each module produces the figure's data series as [`Table`]s (CSV +
+//! markdown) plus *shape assertions* — machine-checked statements of the
+//! qualitative claims the paper draws from that figure (who wins, where
+//! the crossover sits, by roughly what factor). `cargo test` runs all of
+//! them in quick mode; `amp-gemm figures` and `cargo bench` regenerate
+//! the full versions. EXPERIMENTS.md records paper-vs-measured.
+
+pub mod ablation;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig4;
+pub mod fig5;
+pub mod fig7;
+pub mod fig9;
+
+use crate::model::PerfModel;
+use crate::sched::ScheduleSpec;
+use crate::sim::{simulate, RunStats};
+use crate::soc::CoreType;
+use crate::util::table::Table;
+use std::io;
+use std::path::Path;
+
+/// One machine-checked qualitative claim from a figure.
+#[derive(Debug, Clone)]
+pub struct Assertion {
+    pub name: String,
+    pub pass: bool,
+    pub detail: String,
+}
+
+impl Assertion {
+    pub fn check(name: &str, pass: bool, detail: String) -> Self {
+        Assertion {
+            name: name.to_string(),
+            pass,
+            detail,
+        }
+    }
+}
+
+/// A regenerated figure: its data tables plus shape assertions.
+#[derive(Debug, Clone)]
+pub struct FigureResult {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub tables: Vec<Table>,
+    pub assertions: Vec<Assertion>,
+}
+
+impl FigureResult {
+    pub fn passed(&self) -> bool {
+        self.assertions.iter().all(|a| a.pass)
+    }
+
+    /// Write every table as `<dir>/<id>_<n>.csv`.
+    pub fn write_csvs(&self, dir: &Path) -> io::Result<Vec<std::path::PathBuf>> {
+        let mut paths = Vec::new();
+        for (i, t) in self.tables.iter().enumerate() {
+            let path = dir.join(format!("{}_{}.csv", self.id, i));
+            t.write_csv(&path)?;
+            paths.push(path);
+        }
+        Ok(paths)
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("## {} — {}\n\n", self.id, self.title);
+        for t in &self.tables {
+            out.push_str(&t.to_markdown());
+            out.push('\n');
+        }
+        out.push_str("**Shape assertions**\n\n");
+        for a in &self.assertions {
+            out.push_str(&format!(
+                "- [{}] {}: {}\n",
+                if a.pass { "PASS" } else { "FAIL" },
+                a.name,
+                a.detail
+            ));
+        }
+        out
+    }
+}
+
+/// Problem sizes (square, r = m = n = k, double precision as in §3.2).
+pub fn sizes(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![512, 1024, 2048, 4096]
+    } else {
+        vec![256, 512, 768, 1024, 1536, 2048, 2560, 3072, 4096, 5120, 6144]
+    }
+}
+
+/// Convenience wrapper: simulate a square problem.
+pub fn sim_square(model: &PerfModel, spec: &ScheduleSpec, r: usize) -> RunStats {
+    simulate(model, spec, crate::blis::gemm::GemmShape::square(r))
+}
+
+/// The "Ideal" line of Fig. 7/9/10/11/12: the aggregated performance of
+/// the two isolated clusters at the same problem size.
+pub fn ideal_gflops(model: &PerfModel, r: usize) -> f64 {
+    let big = sim_square(model, &ScheduleSpec::cluster_only(CoreType::Big, 4), r);
+    let little = sim_square(model, &ScheduleSpec::cluster_only(CoreType::Little, 4), r);
+    big.gflops + little.gflops
+}
+
+/// Run one figure by number (4, 5, 7, 9, 10, 11, 12).
+pub fn run_figure(id: usize, model: &PerfModel, quick: bool) -> Option<FigureResult> {
+    match id {
+        4 => Some(fig4::run(model)),
+        5 => Some(fig5::run(model, quick)),
+        7 => Some(fig7::run(model, quick)),
+        9 => Some(fig9::run(model, quick)),
+        10 => Some(fig10::run(model, quick)),
+        11 => Some(fig11::run(model, quick)),
+        12 => Some(fig12::run(model, quick)),
+        _ => None,
+    }
+}
+
+/// All figure ids with data content.
+pub const FIGURE_IDS: [usize; 7] = [4, 5, 7, 9, 10, 11, 12];
+
+/// Run the complete evaluation.
+pub fn run_all(model: &PerfModel, quick: bool) -> Vec<FigureResult> {
+    FIGURE_IDS
+        .iter()
+        .map(|&id| run_figure(id, model, quick).unwrap())
+        .collect()
+}
+
+/// Shared entry point for the per-figure bench binaries
+/// (`cargo bench --bench figN`): regenerate the figure in full mode,
+/// time the regeneration, print the data series + shape assertions and
+/// write the CSVs. Exits non-zero if any assertion fails so `make bench`
+/// doubles as a reproduction gate.
+pub fn bench_figure_main(id: usize) {
+    let model = PerfModel::exynos();
+    let mut b = crate::util::benchkit::Bencher::quick();
+    let mut result: Option<FigureResult> = None;
+    b.bench(&format!("fig{id} regeneration (full sweep)"), || {
+        result = run_figure(id, &model, false);
+    });
+    let fig = result.expect("known figure id");
+    println!("{}", fig.to_markdown());
+    b.report(&format!("fig{id} bench"));
+    let out = Path::new("results");
+    let paths = fig.write_csvs(out).expect("write csvs");
+    println!("\nwrote {} CSVs under results/", paths.len());
+    if !fig.passed() {
+        eprintln!("FAIL: shape assertions did not hold");
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_figures_regenerate_and_pass_quick() {
+        let model = PerfModel::exynos();
+        for fig in run_all(&model, true) {
+            assert!(
+                fig.passed(),
+                "{} failed assertions:\n{}",
+                fig.id,
+                fig.to_markdown()
+            );
+            assert!(!fig.tables.is_empty());
+        }
+    }
+
+    #[test]
+    fn unknown_figure_is_none() {
+        assert!(run_figure(6, &PerfModel::exynos(), true).is_none());
+    }
+
+    #[test]
+    fn csv_export_works() {
+        let model = PerfModel::exynos();
+        let fig = run_figure(9, &model, true).unwrap();
+        let dir = std::env::temp_dir().join("amp_gemm_figtest");
+        let _ = std::fs::remove_dir_all(&dir);
+        let paths = fig.write_csvs(&dir).unwrap();
+        assert!(!paths.is_empty());
+        assert!(paths.iter().all(|p| p.exists()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ideal_is_above_each_cluster() {
+        let model = PerfModel::exynos();
+        let ideal = ideal_gflops(&model, 2048);
+        let big = sim_square(&model, &ScheduleSpec::cluster_only(CoreType::Big, 4), 2048);
+        assert!(ideal > big.gflops);
+    }
+}

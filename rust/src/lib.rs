@@ -1,0 +1,38 @@
+//! # amp-gemm
+//!
+//! Reproduction of *Architecture-Aware Configuration and Scheduling of
+//! Matrix Multiplication on Asymmetric Multicore Processors* (Catalán,
+//! Igual, Mayo, Rodríguez-Sánchez, Quintana-Ortí; 2015) as a three-layer
+//! Rust + JAX + Pallas system. See DESIGN.md for the system inventory,
+//! the hardware-substitution rationale and the experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! * `soc`, `cache`, `model`, `energy`, `sim` — the simulated Exynos
+//!   5422 substrate (descriptor, cache simulator, calibrated performance
+//!   and power models, discrete-event engine);
+//! * `blis`, `partition`, `sched` — the paper's contribution: BLIS
+//!   control trees, loop partitioning and the SSS/SAS/CA-SAS/DAS/CA-DAS
+//!   scheduling strategies;
+//! * `native` — real multithreaded packed GEMM applying those
+//!   strategies (numerics verified against the oracle);
+//! * `runtime`, `coordinator` — the PJRT artifact runtime (HLO text →
+//!   compile → execute) and the GEMM service on top;
+//! * `search`, `figures` — the empirical (mc,kc) search and the
+//!   regeneration harness for every evaluation figure in the paper;
+//! * `util` — deterministic RNG, stats, tables, mini-prop, benchkit, CLI.
+
+pub mod blis;
+pub mod cache;
+pub mod coordinator;
+pub mod energy;
+pub mod figures;
+pub mod model;
+pub mod native;
+pub mod partition;
+pub mod runtime;
+pub mod sched;
+pub mod search;
+pub mod sim;
+pub mod soc;
+pub mod util;

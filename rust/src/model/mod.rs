@@ -1,0 +1,365 @@
+//! Analytical performance model of the BLIS GEMM kernels on the
+//! asymmetric SoC.
+//!
+//! This is the hardware-substitution core (DESIGN.md §1): where the paper
+//! measures wall time on the Exynos 5422, we compute it from a calibrated
+//! model. The model has exactly the structure the paper's analysis
+//! appeals to:
+//!
+//! `rate(core, cfg) = peak(core) · eff_k(kc) · eff_m(rows/jr-column)
+//!                    · L1/L2 fit penalties · cluster contention`
+//!
+//! * `eff_k` — C-block load/store and loop overhead amortized over the
+//!   kc rank-1 updates of one micro-kernel;
+//! * `eff_m` — `Br` L1-warmup amortized over the micro-kernels a thread
+//!   executes per jr column (this is why fine-grain Loop 5 parallelism,
+//!   which divides those rows 4-ways, loses to Loop 4 — Fig. 11/12);
+//! * fit penalties — from [`crate::cache::FootprintAnalysis`]; the §4
+//!   "architecture-oblivious" mismatch (A15 parameters on the A7) enters
+//!   here;
+//! * contention — the 4th A15 core's diminishing return (§3.4).
+//!
+//! All constants live in [`calibration`] with paper-anchored tests.
+
+pub mod calibration;
+
+use crate::blis::params::BlisParams;
+use crate::cache::analysis::FootprintAnalysis;
+use crate::soc::{CoreType, SocSpec};
+use calibration as cal;
+
+/// Execution-context inputs that vary per scheduling decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MicroCtx {
+    /// Depth of this micro-kernel's rank-1 loop (kc, or the k-remainder).
+    pub kc_eff: usize,
+    /// Rows of the macro-panel this thread sweeps per jr column
+    /// (= mc for Loop-4-only fine grain; mc/threads under Loop 5).
+    pub rows_per_jr: usize,
+    /// Busy cores in this cluster (contention input).
+    pub active_in_cluster: usize,
+    /// Whether the other cluster is simultaneously computing.
+    pub other_cluster_active: bool,
+}
+
+/// The calibrated performance model, bound to one SoC descriptor.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    pub soc: SocSpec,
+    fit_big: FootprintAnalysis,
+    fit_little: FootprintAnalysis,
+}
+
+impl PerfModel {
+    pub fn new(soc: SocSpec) -> Self {
+        let fit_big = FootprintAnalysis::for_cluster(&soc.big);
+        let fit_little = FootprintAnalysis::for_cluster(&soc.little);
+        PerfModel {
+            soc,
+            fit_big,
+            fit_little,
+        }
+    }
+
+    pub fn exynos() -> Self {
+        PerfModel::new(SocSpec::exynos5422())
+    }
+
+    fn fit(&self, core: CoreType) -> &FootprintAnalysis {
+        match core {
+            CoreType::Big => &self.fit_big,
+            CoreType::Little => &self.fit_little,
+        }
+    }
+
+    /// Amortization of per-micro-kernel overhead over the kc updates.
+    pub fn eff_k(&self, core: CoreType, kc_eff: usize) -> f64 {
+        let kc = kc_eff.max(1) as f64;
+        kc / (kc + cal::hk(core))
+    }
+
+    /// Amortization of `Br` warmup over the rows swept per jr column.
+    pub fn eff_m(&self, core: CoreType, rows: usize) -> f64 {
+        let m = rows.max(1) as f64;
+        m / (m + cal::hm(core))
+    }
+
+    /// Cache-fit penalty of a configuration on a core type (≤ 1).
+    pub fn cache_penalty(&self, core: CoreType, p: &BlisParams) -> f64 {
+        self.fit(core).fit(p).combined_penalty()
+    }
+
+    /// Ideal peak of one core on this SoC: derived from the descriptor
+    /// (freq × flops/cycle), so DVFS variants and other AMPs (Juno,
+    /// custom counts) are modelled without re-calibration. For the
+    /// Exynos descriptor this equals the calibration constants.
+    pub fn peak(&self, core: CoreType) -> f64 {
+        self.soc.cluster(core).core.peak_gflops()
+    }
+
+    /// Sustained GFLOPS of one core running micro-kernels configured by
+    /// `p` under context `ctx`.
+    pub fn core_rate_gflops(&self, core: CoreType, p: &BlisParams, ctx: &MicroCtx) -> f64 {
+        let mut rate = self.peak(core)
+            * cal::register_block_factor(core, p.mr, p.nr)
+            * self.eff_k(core, ctx.kc_eff)
+            * self.eff_m(core, ctx.rows_per_jr)
+            * self.cache_penalty(core, p)
+            * cal::cluster_scale(core, ctx.active_in_cluster);
+        if ctx.other_cluster_active {
+            rate *= cal::BOTH_CLUSTERS_FACTOR;
+        }
+        rate
+    }
+
+    /// Steady-state rate at the configured blocking (full tiles, whole
+    /// cluster view): convenience for figure generation and ratio
+    /// auto-selection.
+    pub fn steady_rate_gflops(&self, core: CoreType, p: &BlisParams, active: usize) -> f64 {
+        let ctx = MicroCtx {
+            kc_eff: p.kc,
+            rows_per_jr: p.mc,
+            active_in_cluster: active,
+            other_cluster_active: false,
+        };
+        self.core_rate_gflops(core, p, &ctx)
+    }
+
+    /// Cluster-aggregate steady rate with `n` active cores.
+    pub fn cluster_rate_gflops(&self, core: CoreType, p: &BlisParams, n: usize) -> f64 {
+        self.steady_rate_gflops(core, p, n) * n as f64
+    }
+
+    /// Time (s) for one micro-kernel of `mr×nr×kc_eff` in context.
+    /// Partial edge tiles are charged the full `mr×nr` register block —
+    /// exactly the padding cost real micro-kernels pay.
+    pub fn micro_kernel_time(&self, core: CoreType, p: &BlisParams, ctx: &MicroCtx) -> f64 {
+        let flops = 2.0 * p.mr as f64 * p.nr as f64 * ctx.kc_eff.max(1) as f64;
+        flops / (self.core_rate_gflops(core, p, ctx) * 1e9)
+    }
+
+    /// Time (s) for one thread's share of packing: `bytes` of payload
+    /// through the core's effective packing bandwidth (read + write
+    /// already folded into the calibrated bandwidth).
+    pub fn pack_time(&self, core: CoreType, bytes: usize) -> f64 {
+        bytes as f64 / (cal::pack_bw_gbs(core) * 1e9)
+    }
+
+    /// Intra-cluster barrier cost (per synchronization point).
+    pub fn barrier_time(&self, core: CoreType) -> f64 {
+        cal::barrier_s(core)
+    }
+
+    /// Dynamic-chunk critical-section cost (§5.4).
+    pub fn grab_time(&self, core: CoreType) -> f64 {
+        cal::grab_s(core)
+    }
+
+    /// The big:LITTLE per-cluster throughput ratio under a configuration —
+    /// what the SAS `ratio` knob should be set to (§5.2). `p_little` is
+    /// the configuration the LITTLE cluster actually runs (A15 params for
+    /// plain SAS; A7 params for CA-SAS).
+    pub fn ideal_ratio(&self, p_big: &BlisParams, p_little: &BlisParams) -> f64 {
+        let nb = self.soc.big.num_cores;
+        let nl = self.soc.little.num_cores;
+        self.cluster_rate_gflops(CoreType::Big, p_big, nb)
+            / self.cluster_rate_gflops(CoreType::Little, p_little, nl)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> PerfModel {
+        PerfModel::exynos()
+    }
+
+    /// §3.4 anchor: single A15 core at its optimum ≈ 2.85–2.95 GFLOPS.
+    #[test]
+    fn anchor_single_a15() {
+        let r = model().steady_rate_gflops(CoreType::Big, &BlisParams::a15_opt(), 1);
+        assert!((2.80..3.00).contains(&r), "A15 single-core rate {r}");
+    }
+
+    /// §3.4 anchor: single A7 core at its optimum ≈ 0.58–0.62 GFLOPS.
+    #[test]
+    fn anchor_single_a7() {
+        let r = model().steady_rate_gflops(CoreType::Little, &BlisParams::a7_opt(), 1);
+        assert!((0.55..0.63).contains(&r), "A7 single-core rate {r}");
+    }
+
+    /// §3.4 anchor: full A15 cluster ≈ 9.6 GFLOPS, 4th core diminishing.
+    #[test]
+    fn anchor_a15_cluster_scaling() {
+        let m = model();
+        let p = BlisParams::a15_opt();
+        let r: Vec<f64> = (1..=4)
+            .map(|n| m.cluster_rate_gflops(CoreType::Big, &p, n))
+            .collect();
+        assert!((9.2..10.0).contains(&r[3]), "4-core peak {}", r[3]);
+        let inc3 = r[2] - r[1];
+        let inc4 = r[3] - r[2];
+        assert!(inc4 < 0.6 * inc3, "4th-core increment must diminish: {inc3} vs {inc4}");
+        // First increments ≈ 2.8–3.0 GFLOPS per core.
+        assert!((2.7..3.1).contains(&(r[1] - r[0])));
+    }
+
+    /// §3.4 anchor: full A7 cluster ≈ 2.3–2.4 GFLOPS, near-linear.
+    #[test]
+    fn anchor_a7_cluster_scaling() {
+        let m = model();
+        let p = BlisParams::a7_opt();
+        let r4 = m.cluster_rate_gflops(CoreType::Little, &p, 4);
+        assert!((2.2..2.5).contains(&r4), "A7 cluster {r4}");
+    }
+
+    /// Fig. 7 anchor: ideal aggregate ≈ 11.9–12 GFLOPS.
+    #[test]
+    fn anchor_ideal_aggregate() {
+        let m = model();
+        let ideal = m.cluster_rate_gflops(CoreType::Big, &BlisParams::a15_opt(), 4)
+            + m.cluster_rate_gflops(CoreType::Little, &BlisParams::a7_opt(), 4);
+        assert!((11.5..12.4).contains(&ideal), "ideal {ideal}");
+    }
+
+    /// §4 anchor: A15 parameters on the A7 → ×0.75–0.88 of its optimum;
+    /// the resulting SAS ratio optimum is ≈ 5 (Fig. 9).
+    #[test]
+    fn anchor_oblivious_penalty_and_sas_ratio() {
+        let m = model();
+        let a15 = BlisParams::a15_opt();
+        let opt = m.cluster_rate_gflops(CoreType::Little, &BlisParams::a7_opt(), 4);
+        let bad = m.cluster_rate_gflops(CoreType::Little, &a15, 4);
+        let frac = bad / opt;
+        assert!((0.75..0.90).contains(&frac), "penalty fraction {frac}");
+        let ratio = m.ideal_ratio(&a15, &a15);
+        assert!((4.4..5.6).contains(&ratio), "SAS ideal ratio {ratio}");
+        // With cache-aware LITTLE parameters the ratio drops toward 4.
+        let ca = m.ideal_ratio(&a15, &BlisParams::a7_opt());
+        assert!(ca < ratio, "CA ratio {ca} must be below oblivious {ratio}");
+        assert!((3.6..4.6).contains(&ca));
+    }
+
+    /// Fig. 11 mechanism: Loop-5 fine grain divides rows/jr-column and
+    /// must lose throughput relative to Loop 4.
+    #[test]
+    fn loop5_fine_grain_penalized() {
+        let m = model();
+        let p = BlisParams::a15_opt();
+        let full = m.eff_m(CoreType::Big, p.mc);
+        let quarter = m.eff_m(CoreType::Big, p.mc / 4);
+        assert!(quarter < full);
+        assert!(quarter / full > 0.80, "loss should be a few %–20 %");
+    }
+
+    #[test]
+    fn micro_kernel_time_scales_with_kc() {
+        let m = model();
+        let p = BlisParams::a15_opt();
+        let base = MicroCtx {
+            kc_eff: p.kc,
+            rows_per_jr: p.mc,
+            active_in_cluster: 1,
+            other_cluster_active: false,
+        };
+        let t_full = m.micro_kernel_time(CoreType::Big, &p, &base);
+        let t_half = m.micro_kernel_time(
+            CoreType::Big,
+            &p,
+            &MicroCtx { kc_eff: p.kc / 2, ..base },
+        );
+        assert!(t_half < t_full);
+        assert!(t_half > 0.4 * t_full, "sub-linear due to eff_k");
+    }
+
+    #[test]
+    fn pack_time_proportional_to_bytes() {
+        let m = model();
+        let t1 = m.pack_time(CoreType::Big, 1 << 20);
+        let t2 = m.pack_time(CoreType::Big, 2 << 20);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+        assert!(m.pack_time(CoreType::Little, 1 << 20) > t1, "LITTLE packs slower");
+    }
+
+    #[test]
+    fn overheads_positive_and_asymmetric() {
+        let m = model();
+        assert!(m.barrier_time(CoreType::Little) > m.barrier_time(CoreType::Big));
+        assert!(m.grab_time(CoreType::Little) > m.grab_time(CoreType::Big));
+    }
+
+    #[test]
+    fn both_clusters_factor_applies() {
+        let m = model();
+        let p = BlisParams::a15_opt();
+        let solo = MicroCtx {
+            kc_eff: p.kc,
+            rows_per_jr: p.mc,
+            active_in_cluster: 4,
+            other_cluster_active: false,
+        };
+        let both = MicroCtx { other_cluster_active: true, ..solo };
+        assert!(
+            m.core_rate_gflops(CoreType::Big, &p, &both)
+                < m.core_rate_gflops(CoreType::Big, &p, &solo)
+        );
+    }
+
+    /// §5.2: DVFS changes the right ratio — downclocking the big cluster
+    /// must pull the SAS ratio towards 1.
+    #[test]
+    fn dvfs_shifts_the_sas_ratio() {
+        let base = PerfModel::exynos();
+        let down = PerfModel::new(SocSpec::exynos5422().with_freqs(0.8, 1.4));
+        let p = BlisParams::a15_opt();
+        let r_base = base.ideal_ratio(&p, &p);
+        let r_down = down.ideal_ratio(&p, &p);
+        assert!(r_down < 0.6 * r_base, "downclocked ratio {r_down} vs {r_base}");
+        // And the Exynos descriptor's derived peaks match calibration.
+        assert!((base.peak(CoreType::Big) - 3.2).abs() < 1e-12);
+        assert!((base.peak(CoreType::Little) - 0.7).abs() < 1e-12);
+    }
+
+    /// §6 roadmap: the ARMv8 Juno descriptor is modelled without any
+    /// recalibration — 2 fast A57s against 4 slow A53s gives a smaller
+    /// cluster ratio than the Exynos.
+    #[test]
+    fn juno_armv8_descriptor_models() {
+        let juno = PerfModel::new(SocSpec::juno_r0());
+        let p = BlisParams::a15_opt();
+        let ratio = juno.ideal_ratio(&p, &p);
+        assert!(ratio > 1.0 && ratio < 4.0, "Juno cluster ratio {ratio}");
+        let peak = juno.peak(CoreType::Big);
+        assert!((peak - 4.4).abs() < 1e-9, "A57 peak {peak}");
+    }
+
+    /// §6 future work: an 8×4 big-core micro-kernel buys ~5 %; on the
+    /// in-order LITTLE core it loses.
+    #[test]
+    fn per_core_register_blocking() {
+        let m = model();
+        let p44 = BlisParams::a15_opt();
+        let p84 = BlisParams::a15_opt_8x4();
+        let r44 = m.steady_rate_gflops(CoreType::Big, &p44, 1);
+        let r84 = m.steady_rate_gflops(CoreType::Big, &p84, 1);
+        assert!(r84 > r44 * 1.02 && r84 < r44 * 1.10, "{r44} vs {r84}");
+        let l44 = m.steady_rate_gflops(CoreType::Little, &BlisParams::a7_opt(), 1);
+        let mut l84p = BlisParams::a7_opt();
+        l84p = BlisParams::new(l84p.nc, l84p.kc, l84p.mc, l84p.nr, 8);
+        let l84 = m.steady_rate_gflops(CoreType::Little, &l84p, 1);
+        assert!(l84 < l44, "LITTLE must lose with 8×4: {l44} vs {l84}");
+    }
+
+    #[test]
+    fn shared_kc_params_beat_a15_params_on_a7() {
+        // §5.3: mc=32/kc=952 on the A7 is suboptimal vs (80,352) but much
+        // better than the A15 parameters whose Ac misses the 512 KiB L2.
+        let m = model();
+        let shared = m.steady_rate_gflops(CoreType::Little, &BlisParams::a7_shared_kc(), 1);
+        let oblivious = m.steady_rate_gflops(CoreType::Little, &BlisParams::a15_opt(), 1);
+        let opt = m.steady_rate_gflops(CoreType::Little, &BlisParams::a7_opt(), 1);
+        assert!(shared > oblivious, "shared {shared} vs oblivious {oblivious}");
+        assert!(shared < opt, "shared {shared} vs opt {opt}");
+    }
+}

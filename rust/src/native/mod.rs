@@ -1,0 +1,557 @@
+//! Real multithreaded executor: the paper's schedules with actual
+//! threads, actual packed buffers and actual micro-kernels.
+//!
+//! This is the *numerics* half of the hardware substitution (DESIGN.md
+//! §1): the DES in `crate::sim` produces the paper's timing shapes; this
+//! executor proves every scheduling strategy computes the right matrix.
+//! The thread structure mirrors the simulator phase-for-phase:
+//!
+//! * one worker thread per simulated core, grouped into two "clusters";
+//! * per-cluster shared packed buffers (`Bc`, `Ac`), with packing split
+//!   by micro-panel ranges among the cluster's threads (disjoint
+//!   writes), separated from compute by a cluster barrier;
+//! * coarse Loop-1 (static): clusters own disjoint column ranges of C
+//!   and never synchronize until the join;
+//! * coarse Loop-3 (static): clusters own disjoint row ranges; a global
+//!   barrier per (jc, pc) keeps both clusters on the same shared-`kc`
+//!   `Bc` block (each cluster packs its own copy of the identical
+//!   block — same constraint, race-free);
+//! * dynamic (DAS/CA-DAS): the cluster lead grabs row chunks from the
+//!   shared [`DynamicQueue`] inside the §5.4 critical section and
+//!   broadcasts to its teammates.
+//!
+//! Safety: all `C` writes are disjoint by construction (distinct jr/ir
+//! panel ranges within a macro-kernel; distinct row/column blocks across
+//! clusters; dynamic chunks are disjoint by the queue). Packed-buffer
+//! writes are disjoint panel ranges, and packing and compute phases are
+//! separated by barriers.
+
+use crate::blis::control_tree::ControlTree;
+use crate::blis::gemm::{macro_kernel, GemmShape};
+use crate::blis::packing::{pack_a_panels, pack_b_panels};
+use crate::partition::{split_symmetric, split_weighted, Chunk, DynamicQueue};
+use crate::sched::{CoarseLoop, ScheduleSpec, Strategy};
+use crate::soc::{CoreType, SocSpec};
+use std::cell::UnsafeCell;
+use std::sync::{Barrier, Mutex};
+use std::time::Instant;
+
+/// Result of a native run.
+#[derive(Debug, Clone)]
+pub struct NativeStats {
+    pub label: String,
+    pub shape: GemmShape,
+    pub wall_s: f64,
+    pub gflops: f64,
+    pub threads: usize,
+    pub grabs: u64,
+}
+
+/// Shared mutable buffer with externally-enforced disjoint access.
+struct SharedBuf(UnsafeCell<Vec<f64>>);
+// SAFETY: phases guarantee disjoint writes / read-only sharing, enforced
+// by the barriers in the worker protocol below.
+unsafe impl Sync for SharedBuf {}
+
+impl SharedBuf {
+    fn new(len: usize) -> Self {
+        SharedBuf(UnsafeCell::new(vec![0.0; len]))
+    }
+    /// SAFETY: caller must respect the phase protocol.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice_mut(&self) -> &mut [f64] {
+        unsafe { (*self.0.get()).as_mut_slice() }
+    }
+    unsafe fn slice(&self) -> &[f64] {
+        unsafe { (*self.0.get()).as_slice() }
+    }
+}
+
+/// Raw pointer to C, sendable across the scoped threads.
+#[derive(Clone, Copy)]
+struct CPtr(*mut f64, usize /* len */);
+unsafe impl Send for CPtr {}
+unsafe impl Sync for CPtr {}
+
+/// Per-cluster shared state.
+struct ClusterShared {
+    bc: SharedBuf,
+    ac: SharedBuf,
+    barrier: Barrier,
+    /// Dynamic-chunk broadcast slot (lead writes, teammates read).
+    slot: Mutex<Option<Chunk>>,
+    grabs: Mutex<u64>,
+}
+
+impl ClusterShared {
+    fn new(tree: &ControlTree, threads: usize, m: usize, n: usize, k: usize) -> Self {
+        let p = &tree.params;
+        let kc = p.kc.min(k.max(1));
+        let nc = p.nc.min(n.max(1));
+        let mc = p.mc.min(m.max(1));
+        ClusterShared {
+            bc: SharedBuf::new(kc * nc.div_ceil(p.nr) * p.nr),
+            ac: SharedBuf::new(mc.div_ceil(p.mr) * p.mr * kc),
+            barrier: Barrier::new(threads),
+            slot: Mutex::new(None),
+            grabs: Mutex::new(0),
+        }
+    }
+}
+
+/// Inputs shared by every worker.
+struct Job<'a> {
+    a: &'a [f64],
+    b: &'a [f64],
+    c: CPtr,
+    shape: GemmShape,
+}
+
+/// What a cluster's coarse-grain assignment is.
+enum CoarseWork<'q> {
+    /// Own column range of C (coarse Loop 1): sweep full m.
+    Columns(Chunk),
+    /// Own row range of C (coarse Loop 3, static): sweep full n jointly.
+    Rows(Chunk),
+    /// Dynamic row chunks from the shared queue (one queue per (jc, pc)).
+    Dynamic(&'q [DynamicQueue]),
+}
+
+/// Run `spec` on real threads. Returns wall-clock stats; the result is
+/// accumulated into `c` (`C += A·B`).
+pub fn gemm_parallel(
+    soc: &SocSpec,
+    spec: &ScheduleSpec,
+    shape: GemmShape,
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+) -> NativeStats {
+    spec.validate().expect("invalid spec");
+    let GemmShape { m, n, k } = shape;
+    assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
+    let (tb, tl) = spec.threads(soc);
+    let trees = spec.tree_set(soc);
+    let total = tb + tl;
+    assert!(total > 0);
+
+    let c_ptr = CPtr(c.as_mut_ptr(), c.len());
+    let job = Job { a, b, c: c_ptr, shape };
+
+    let big_shared = ClusterShared::new(&trees.big, tb.max(1), m, n, k);
+    let little_shared = ClusterShared::new(&trees.little, tl.max(1), m, n, k);
+    // Global barrier across both clusters for shared-Bc coordination.
+    let global = Barrier::new(total);
+
+    // Static coarse assignments.
+    let (big_work, little_work, queues);
+    match (spec.strategy, spec.coarse) {
+        (Strategy::ClusterOnly { .. }, _) => {
+            queues = Vec::new();
+            let full_n = Chunk { start: 0, len: n };
+            big_work = CoarseWork::Columns(full_n);
+            little_work = CoarseWork::Columns(full_n);
+        }
+        (Strategy::Das | Strategy::CaDas, _) => {
+            // One queue per (jc, pc) iteration, shared by both clusters.
+            let nc = trees.big.params.nc;
+            let kc = trees.big.params.kc;
+            let iters = n.div_ceil(nc).max(1) * k.div_ceil(kc).max(1);
+            queues = (0..iters).map(|_| DynamicQueue::new(m)).collect::<Vec<_>>();
+            big_work = CoarseWork::Dynamic(&[]); // placeholder, set below
+            little_work = CoarseWork::Dynamic(&[]);
+            // (replaced after queues are alive — see spawn below)
+            let _ = (big_work, little_work);
+            return run_workers(
+                soc, spec, &trees, &job, tb, tl, &big_shared, &little_shared, &global,
+                CoarseWork::Dynamic(&queues), CoarseWork::Dynamic(&queues),
+            );
+        }
+        (_, CoarseLoop::Loop1) => {
+            queues = Vec::new();
+            let (wb, wl) = spec.coarse_weights().expect("static");
+            let parts = split_weighted(n, &[wb, wl], trees.big.params.nr);
+            big_work = CoarseWork::Columns(parts[0]);
+            little_work = CoarseWork::Columns(parts[1]);
+        }
+        (_, CoarseLoop::Loop3) => {
+            queues = Vec::new();
+            let (wb, wl) = spec.coarse_weights().expect("static");
+            let parts = split_weighted(m, &[wb, wl], trees.big.params.mr);
+            big_work = CoarseWork::Rows(parts[0]);
+            little_work = CoarseWork::Rows(parts[1]);
+        }
+    }
+    let _ = &queues;
+    run_workers(
+        soc, spec, &trees, &job, tb, tl, &big_shared, &little_shared, &global, big_work,
+        little_work,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_workers(
+    soc: &SocSpec,
+    spec: &ScheduleSpec,
+    trees: &crate::blis::control_tree::TreeSet,
+    job: &Job,
+    tb: usize,
+    tl: usize,
+    big_shared: &ClusterShared,
+    little_shared: &ClusterShared,
+    global: &Barrier,
+    big_work: CoarseWork,
+    little_work: CoarseWork,
+) -> NativeStats {
+    let needs_global = matches!(big_work, CoarseWork::Rows(_) | CoarseWork::Dynamic(_))
+        && tb > 0
+        && tl > 0;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for local in 0..tb {
+            let w = match &big_work {
+                CoarseWork::Columns(c) => CoarseWork::Columns(*c),
+                CoarseWork::Rows(c) => CoarseWork::Rows(*c),
+                CoarseWork::Dynamic(q) => CoarseWork::Dynamic(q),
+            };
+            let tree = &trees.big;
+            handles.push(s.spawn(move || {
+                cluster_worker(
+                    CoreType::Big, local, tb, tree, job, big_shared, global, needs_global, w,
+                )
+            }));
+        }
+        for local in 0..tl {
+            let w = match &little_work {
+                CoarseWork::Columns(c) => CoarseWork::Columns(*c),
+                CoarseWork::Rows(c) => CoarseWork::Rows(*c),
+                CoarseWork::Dynamic(q) => CoarseWork::Dynamic(q),
+            };
+            let tree = &trees.little;
+            handles.push(s.spawn(move || {
+                cluster_worker(
+                    CoreType::Little, local, tl, tree, job, little_shared, global, needs_global, w,
+                )
+            }));
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let grabs = *big_shared.grabs.lock().unwrap() + *little_shared.grabs.lock().unwrap();
+    let _ = soc;
+    NativeStats {
+        label: spec.label(),
+        shape: job.shape,
+        wall_s: wall,
+        gflops: job.shape.flops() / wall / 1e9,
+        threads: tb + tl,
+        grabs,
+    }
+}
+
+/// The per-thread body. All threads of a cluster execute the same outer
+/// loops in lockstep; phases are separated by the cluster barrier.
+#[allow(clippy::too_many_arguments)]
+fn cluster_worker(
+    _core: CoreType,
+    local: usize,
+    team: usize,
+    tree: &ControlTree,
+    job: &Job,
+    shared: &ClusterShared,
+    global: &Barrier,
+    needs_global: bool,
+    work: CoarseWork,
+) {
+    let p = tree.params;
+    let GemmShape { m, n, k } = job.shape;
+
+    // Column range this cluster owns (Loop-1 coarse) or full n.
+    let (n_range, m_static): (Chunk, Option<Chunk>) = match &work {
+        CoarseWork::Columns(cols) => (*cols, Some(Chunk { start: 0, len: m })),
+        CoarseWork::Rows(rows) => (Chunk { start: 0, len: n }, Some(*rows)),
+        CoarseWork::Dynamic(_) => (Chunk { start: 0, len: n }, None),
+    };
+    if n_range.is_empty() {
+        return;
+    }
+
+    let mut q_idx = 0usize;
+    let mut jc = 0;
+    while jc < n_range.len {
+        let nc_eff = (n_range.len - jc).min(p.nc);
+        let mut pc = 0;
+        while pc < k {
+            let kc_eff = (k - pc).min(p.kc);
+
+            // --- pack Bc: split micro-panels among the team ---
+            let q_panels = nc_eff.div_ceil(p.nr);
+            let shares = split_symmetric(q_panels, team, 1);
+            // SAFETY: disjoint panel ranges per thread; barrier below
+            // separates packing from reads.
+            unsafe {
+                let bc = shared.bc.slice_mut();
+                let sh = shares[local];
+                pack_b_panels(
+                    job.b, n, pc, n_range.start + jc, kc_eff, nc_eff, p.nr, bc, sh.start,
+                    sh.end(),
+                );
+            }
+            shared.barrier.wait();
+
+            // --- the m space for this (jc, pc) ---
+            match &work {
+                CoarseWork::Columns(_) | CoarseWork::Rows(_) => {
+                    let rows = m_static.unwrap();
+                    let mut ic = 0;
+                    while ic < rows.len {
+                        let mc_eff = (rows.len - ic).min(p.mc);
+                        process_chunk(
+                            tree, job, shared, local, team,
+                            Chunk { start: rows.start + ic, len: mc_eff },
+                            n_range.start + jc, nc_eff, pc, kc_eff,
+                        );
+                        ic += p.mc;
+                    }
+                }
+                CoarseWork::Dynamic(queues) => {
+                    let q = &queues[q_idx];
+                    loop {
+                        // Lead grabs inside the critical section (§5.4)
+                        // and broadcasts through the slot.
+                        if local == 0 {
+                            let g = q.grab(p.mc);
+                            if g.is_some() {
+                                *shared.grabs.lock().unwrap() += 1;
+                            }
+                            *shared.slot.lock().unwrap() = g;
+                        }
+                        shared.barrier.wait();
+                        let chunk = *shared.slot.lock().unwrap();
+                        shared.barrier.wait();
+                        let Some(chunk) = chunk else { break };
+                        process_chunk(
+                            tree, job, shared, local, team, chunk, n_range.start + jc,
+                            nc_eff, pc, kc_eff,
+                        );
+                    }
+                }
+            }
+
+            // Shared-Bc coordination point (coarse Loop 3 / dynamic).
+            if needs_global {
+                global.wait();
+            }
+            pc += p.kc;
+            q_idx += 1;
+        }
+        jc += p.nc;
+    }
+}
+
+/// Pack `Ac` for one row chunk and run the fine-partitioned macro-kernel.
+#[allow(clippy::too_many_arguments)]
+fn process_chunk(
+    tree: &ControlTree,
+    job: &Job,
+    shared: &ClusterShared,
+    local: usize,
+    team: usize,
+    rows: Chunk,
+    col0: usize,
+    nc_eff: usize,
+    pc: usize,
+    kc_eff: usize,
+) {
+    let p = tree.params;
+    let GemmShape { n, k, .. } = job.shape;
+    let mc_eff = rows.len;
+
+    // --- pack Ac (disjoint panel ranges) ---
+    let panels = mc_eff.div_ceil(p.mr);
+    let shares = split_symmetric(panels, team, 1);
+    unsafe {
+        let ac = shared.ac.slice_mut();
+        let sh = shares[local];
+        pack_a_panels(
+            job.a, k, rows.start, pc, mc_eff, kc_eff, p.mr, ac, sh.start, sh.end(),
+        );
+    }
+    shared.barrier.wait();
+
+    // --- fine-grain macro-kernel split ---
+    let n_jr = nc_eff.div_ceil(p.nr);
+    let n_ir = panels;
+    let w4 = tree.par.loop4_ways.min(team).max(1);
+    let w5 = (team / w4).max(1);
+    let (i4, i5) = (local % w4, local / w4);
+    let jr_parts = split_symmetric(n_jr, w4, 1);
+    let ir_parts = split_symmetric(n_ir, w5, 1);
+    let (jr, ir) = (jr_parts[i4], ir_parts[i5.min(w5 - 1)]);
+
+    // SAFETY: C windows are disjoint across threads (distinct jr/ir
+    // panel ranges; distinct row/col blocks across clusters).
+    unsafe {
+        let c_all = std::slice::from_raw_parts_mut(job.c.0, job.c.1);
+        let ac = shared.ac.slice();
+        let bc = shared.bc.slice();
+        macro_kernel(
+            &p, ac, bc, kc_eff, mc_eff, nc_eff, c_all, n, rows.start, col0,
+            jr.start..jr.end(), ir.start..ir.end(),
+        );
+    }
+    shared.barrier.wait();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blis::gemm::gemm_naive;
+    use crate::util::rng::Rng;
+    use crate::util::stats::{gemm_tolerance, max_abs_diff};
+
+    fn soc() -> SocSpec {
+        SocSpec::exynos5422()
+    }
+
+    fn check(spec: ScheduleSpec, m: usize, n: usize, k: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = rng.fill_matrix(m * k);
+        let b = rng.fill_matrix(k * n);
+        let c0 = rng.fill_matrix(m * n);
+        let mut c_ref = c0.clone();
+        gemm_naive(GemmShape { m, n, k }, &a, &b, &mut c_ref);
+        let mut c_par = c0.clone();
+        let stats = gemm_parallel(&soc(), &spec, GemmShape { m, n, k }, &a, &b, &mut c_par);
+        let d = max_abs_diff(&c_ref, &c_par);
+        assert!(
+            d < gemm_tolerance(k),
+            "{} m={m} n={n} k={k}: diff {d}",
+            stats.label
+        );
+    }
+
+    #[test]
+    fn sss_correct() {
+        check(ScheduleSpec::sss(), 96, 120, 64, 1);
+        check(ScheduleSpec::sss(), 37, 53, 29, 2);
+    }
+
+    #[test]
+    fn sas_correct_various_ratios() {
+        for (i, r) in [1.0, 3.0, 5.0, 7.0].iter().enumerate() {
+            check(ScheduleSpec::sas(*r), 88, 88, 40, 10 + i as u64);
+        }
+    }
+
+    #[test]
+    fn ca_sas_correct_loop1_and_loop3() {
+        check(ScheduleSpec::ca_sas(5.0), 100, 100, 60, 20);
+        check(
+            ScheduleSpec::new(
+                Strategy::CaSas { ratio: 3.0 },
+                CoarseLoop::Loop3,
+                crate::sched::FineLoop::Loop4,
+            ),
+            100, 64, 60, 21,
+        );
+    }
+
+    #[test]
+    fn dynamic_correct() {
+        check(ScheduleSpec::das(), 120, 72, 48, 30);
+        check(ScheduleSpec::ca_das(), 120, 72, 48, 31);
+        check(ScheduleSpec::ca_das(), 333, 41, 77, 32);
+    }
+
+    #[test]
+    fn fine_loop_variants_correct() {
+        use crate::sched::FineLoop;
+        for (i, fine) in [FineLoop::Loop4, FineLoop::Loop5, FineLoop::Both]
+            .into_iter()
+            .enumerate()
+        {
+            check(
+                ScheduleSpec::new(Strategy::CaDas, CoarseLoop::Loop3, fine),
+                90, 90, 50, 40 + i as u64,
+            );
+            check(
+                ScheduleSpec::new(Strategy::Sas { ratio: 5.0 }, CoarseLoop::Loop1, fine),
+                90, 90, 50, 50 + i as u64,
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_only_correct() {
+        for t in 1..=4 {
+            check(ScheduleSpec::cluster_only(CoreType::Big, t), 64, 64, 64, 60 + t as u64);
+            check(
+                ScheduleSpec::cluster_only(CoreType::Little, t),
+                48, 80, 32, 70 + t as u64,
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        check(ScheduleSpec::ca_das(), 1, 1, 1, 80);
+        check(ScheduleSpec::sas(5.0), 1, 200, 3, 81);
+        check(ScheduleSpec::sss(), 200, 1, 3, 82);
+        check(ScheduleSpec::ca_das(), 5, 5, 400, 83);
+    }
+
+    #[test]
+    fn dynamic_grabs_happen() {
+        let mut rng = Rng::new(90);
+        let (m, n, k) = (640, 64, 32);
+        let a = rng.fill_matrix(m * k);
+        let b = rng.fill_matrix(k * n);
+        let mut c = vec![0.0; m * n];
+        let stats = gemm_parallel(
+            &soc(), &ScheduleSpec::ca_das(), GemmShape { m, n, k }, &a, &b, &mut c,
+        );
+        // 640 rows / (mc 152 or 32) → several grabs.
+        assert!(stats.grabs >= 4, "grabs {}", stats.grabs);
+    }
+
+    /// Property: random shapes × every strategy family agree with naive.
+    #[test]
+    fn prop_all_strategies_correct() {
+        crate::util::prop::check(
+            &crate::util::prop::Config { cases: 24, seed: 0xAB5 },
+            |r| {
+                let m = r.gen_range(1, 150);
+                let n = r.gen_range(1, 150);
+                let k = r.gen_range(1, 100);
+                let strat = r.gen_range(0, 6);
+                (m, n, k, strat, r.next_u64())
+            },
+            |&(m, n, k, strat, seed)| {
+                let spec = match strat {
+                    0 => ScheduleSpec::sss(),
+                    1 => ScheduleSpec::sas(5.0),
+                    2 => ScheduleSpec::ca_sas(3.0),
+                    3 => ScheduleSpec::das(),
+                    4 => ScheduleSpec::ca_das(),
+                    _ => ScheduleSpec::cluster_only(CoreType::Big, 4),
+                };
+                let mut rng = Rng::new(seed);
+                let a = rng.fill_matrix(m * k);
+                let b = rng.fill_matrix(k * n);
+                let mut c_ref = vec![0.0; m * n];
+                let mut c_par = vec![0.0; m * n];
+                gemm_naive(GemmShape { m, n, k }, &a, &b, &mut c_ref);
+                gemm_parallel(&soc(), &spec, GemmShape { m, n, k }, &a, &b, &mut c_par);
+                let d = max_abs_diff(&c_ref, &c_par);
+                if d > gemm_tolerance(k) {
+                    return Err(format!("{}: diff {d}", spec.label()));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,303 @@
+//! Loop iteration-space partitioning.
+//!
+//! Three flavours, matching the paper's scheduling vocabulary:
+//!
+//! * **symmetric static** — BLIS's default: the range divided into
+//!   near-equal contiguous chunks, one per way (§3.1/§4);
+//! * **weighted static** — the SAS ratio mechanism (§5.2): chunks sized
+//!   proportionally to per-way weights (e.g. `[ratio, 1]` for the
+//!   big/LITTLE clusters);
+//! * **dynamic queue** — the CA-DAS mechanism (§5.4): ways grab chunks
+//!   of *their own* size (the grabber's `mc`) from a shared range under
+//!   a critical section.
+//!
+//! All partitioners round chunk boundaries to a stride (the register
+//! blocking `nr`/`mr`, or `mc`/`nc` for coarse loops) so no micro-kernel
+//! ever straddles two ways. Invariants (tested): chunks are disjoint,
+//! contiguous, cover the range exactly, and interior boundaries are
+//! stride-aligned.
+
+use std::sync::Mutex;
+
+/// A contiguous chunk `[start, start+len)` of an iteration space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk {
+    pub start: usize,
+    pub len: usize,
+}
+
+impl Chunk {
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// Split `[0, extent)` into `ways` chunks proportional to `weights`,
+/// with interior boundaries aligned to `stride`. Zero-weight ways get
+/// empty chunks. Rounding error accumulates into the *last non-empty*
+/// way so coverage is exact.
+pub fn split_weighted(extent: usize, weights: &[f64], stride: usize) -> Vec<Chunk> {
+    assert!(stride > 0);
+    assert!(!weights.is_empty());
+    assert!(weights.iter().all(|&w| w >= 0.0));
+    let total_w: f64 = weights.iter().sum();
+    assert!(total_w > 0.0, "at least one positive weight");
+
+    let units = extent.div_ceil(stride); // whole strides (last may be short)
+    let mut acc = 0.0;
+    let mut prev_units = 0usize;
+    let mut chunks = Vec::with_capacity(weights.len());
+    for (i, &w) in weights.iter().enumerate() {
+        acc += w;
+        // Cumulative boundary in units, rounded to nearest.
+        let mut b = ((acc / total_w) * units as f64).round() as usize;
+        if i + 1 == weights.len() {
+            b = units; // exact coverage
+        }
+        let b = b.clamp(prev_units, units);
+        let start = (prev_units * stride).min(extent);
+        let end = (b * stride).min(extent);
+        chunks.push(Chunk {
+            start,
+            len: end.saturating_sub(start),
+        });
+        prev_units = b;
+    }
+    chunks
+}
+
+/// BLIS default: equal-share split (all weights 1).
+pub fn split_symmetric(extent: usize, ways: usize, stride: usize) -> Vec<Chunk> {
+    split_weighted(extent, &vec![1.0; ways], stride)
+}
+
+/// The big/LITTLE two-way split with the SAS performance `ratio`
+/// (§5.2: "fast threads are assigned `ratio` times more computations").
+/// Returns `(big_chunk, little_chunk)`.
+pub fn split_ratio(extent: usize, ratio: f64, stride: usize) -> (Chunk, Chunk) {
+    assert!(ratio > 0.0);
+    let v = split_weighted(extent, &[ratio, 1.0], stride);
+    (v[0], v[1])
+}
+
+/// Dynamic chunk queue over `[0, extent)` (§5.4). Each grab takes up to
+/// `size` iterations from the front; the caller's control tree supplies
+/// its own `size` (`mc` of the grabbing cluster in CA-DAS). Thread-safe:
+/// the native executor's "critical section" is exactly this mutex; the
+/// simulator models its cost in virtual time separately.
+#[derive(Debug)]
+pub struct DynamicQueue {
+    inner: Mutex<usize>,
+    extent: usize,
+}
+
+impl DynamicQueue {
+    pub fn new(extent: usize) -> Self {
+        DynamicQueue {
+            inner: Mutex::new(0),
+            extent,
+        }
+    }
+
+    /// Grab the next chunk of at most `size`; `None` when exhausted.
+    pub fn grab(&self, size: usize) -> Option<Chunk> {
+        assert!(size > 0);
+        let mut next = self.inner.lock().unwrap();
+        if *next >= self.extent {
+            return None;
+        }
+        let start = *next;
+        let len = size.min(self.extent - start);
+        *next += len;
+        Some(Chunk { start, len })
+    }
+
+    /// Remaining iterations (racy snapshot; exact under the sim's
+    /// single-threaded virtual time).
+    pub fn remaining(&self) -> usize {
+        self.extent - *self.inner.lock().unwrap()
+    }
+
+    pub fn extent(&self) -> usize {
+        self.extent
+    }
+}
+
+/// Check the partition invariants; used by tests and debug assertions.
+pub fn validate_partition(extent: usize, stride: usize, chunks: &[Chunk]) -> Result<(), String> {
+    let mut pos = 0usize;
+    for (i, c) in chunks.iter().enumerate() {
+        if c.start != pos {
+            return Err(format!("chunk {i} starts at {} expected {pos}", c.start));
+        }
+        if !c.is_empty() && c.end() != extent && c.end() % stride != 0 {
+            return Err(format!(
+                "chunk {i} interior boundary {} not stride-aligned",
+                c.end()
+            ));
+        }
+        pos = c.end();
+    }
+    if pos != extent {
+        return Err(format!("coverage ends at {pos}, expected {extent}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn symmetric_split_even() {
+        let cs = split_symmetric(16, 4, 4);
+        assert_eq!(
+            cs,
+            vec![
+                Chunk { start: 0, len: 4 },
+                Chunk { start: 4, len: 4 },
+                Chunk { start: 8, len: 4 },
+                Chunk { start: 12, len: 4 }
+            ]
+        );
+    }
+
+    #[test]
+    fn symmetric_split_with_remainder() {
+        let cs = split_symmetric(18, 4, 4);
+        validate_partition(18, 4, &cs).unwrap();
+        assert_eq!(cs.iter().map(|c| c.len).sum::<usize>(), 18);
+    }
+
+    #[test]
+    fn ratio_split_matches_paper_example() {
+        // Fig. 8: ratio 3 → fast cluster gets 3× the slow cluster's share.
+        let (big, little) = split_ratio(1600, 3.0, 4);
+        assert_eq!(big.len, 1200);
+        assert_eq!(little.len, 400);
+        validate_partition(1600, 4, &[big, little]).unwrap();
+    }
+
+    #[test]
+    fn ratio_one_is_symmetric() {
+        let (b, l) = split_ratio(1024, 1.0, 4);
+        assert_eq!(b.len, 512);
+        assert_eq!(l.len, 512);
+    }
+
+    #[test]
+    fn extreme_ratio_starves_little() {
+        let (b, l) = split_ratio(64, 100.0, 4);
+        assert_eq!(b.len, 64);
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn tiny_extent_smaller_than_stride() {
+        let cs = split_symmetric(3, 2, 4);
+        validate_partition(3, 4, &cs).unwrap();
+        assert_eq!(cs[0].len + cs[1].len, 3);
+    }
+
+    #[test]
+    fn zero_extent_all_empty() {
+        let cs = split_weighted(0, &[5.0, 1.0], 8);
+        assert!(cs.iter().all(|c| c.is_empty()));
+        validate_partition(0, 8, &cs).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "positive weight")]
+    fn all_zero_weights_rejected() {
+        split_weighted(10, &[0.0, 0.0], 1);
+    }
+
+    #[test]
+    fn dynamic_queue_drains_exactly() {
+        let q = DynamicQueue::new(100);
+        let mut total = 0;
+        let mut chunks = Vec::new();
+        let mut big_turn = true;
+        while let Some(c) = q.grab(if big_turn { 32 } else { 8 }) {
+            total += c.len;
+            chunks.push(c);
+            big_turn = !big_turn;
+        }
+        assert_eq!(total, 100);
+        validate_partition(100, 1, &chunks).unwrap();
+        assert_eq!(q.remaining(), 0);
+        assert!(q.grab(32).is_none());
+    }
+
+    #[test]
+    fn dynamic_queue_last_chunk_short() {
+        let q = DynamicQueue::new(10);
+        assert_eq!(q.grab(8), Some(Chunk { start: 0, len: 8 }));
+        assert_eq!(q.grab(8), Some(Chunk { start: 8, len: 2 }));
+        assert_eq!(q.grab(8), None);
+    }
+
+    #[test]
+    fn dynamic_queue_concurrent_drain_is_exact() {
+        // The §5.4 critical section under real contention.
+        let q = std::sync::Arc::new(DynamicQueue::new(10_000));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let size = if t < 4 { 152 } else { 32 };
+                let mut got = 0usize;
+                while let Some(c) = q.grab(size) {
+                    got += c.len;
+                }
+                got
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 10_000);
+    }
+
+    #[test]
+    fn prop_weighted_partition_invariants() {
+        prop::check_default(
+            |r| {
+                let extent = r.gen_range(0, 5000);
+                let stride = *r.choose(&[1usize, 4, 8, 152, 4096]);
+                let ways = r.gen_range(1, 9);
+                let weights: Vec<f64> = (0..ways).map(|_| r.gen_f64(0.1, 8.0)).collect();
+                (extent, stride, weights)
+            },
+            |(extent, stride, weights)| {
+                let cs = split_weighted(*extent, weights, *stride);
+                validate_partition(*extent, *stride, &cs)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_weighted_shares_track_weights() {
+        prop::check_default(
+            |r| {
+                let extent = r.gen_range(1000, 20_000);
+                let ratio = r.gen_f64(1.0, 8.0);
+                (extent, ratio)
+            },
+            |&(extent, ratio)| {
+                let (b, l) = split_ratio(extent, ratio, 4);
+                if l.len < 40 {
+                    return Ok(()); // rounding dominates tiny shares
+                }
+                let got = b.len as f64 / l.len as f64;
+                let slack = 0.15 + 80.0 * ratio / extent as f64;
+                if (got / ratio - 1.0).abs() > slack {
+                    return Err(format!("ratio {ratio} got {got} (slack {slack})"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

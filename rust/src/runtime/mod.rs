@@ -1,0 +1,289 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
+//!
+//! The request-path half of the three-layer architecture: Python/JAX
+//! lowers the Layer-2 GEMM (calling the Layer-1 Pallas kernel) to HLO
+//! text once at build time (`make artifacts`); this module loads those
+//! files with the `xla` crate (`PjRtClient::cpu` →
+//! `HloModuleProto::from_text_file` → compile → execute) and serves
+//! them to the coordinator with no Python anywhere near the hot path.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod worker;
+
+use crate::blis::gemm::GemmShape;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One line of `artifacts/manifest.txt`:
+/// `name m n k dtype variant file`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub dtype: String,
+    pub variant: String,
+    pub file: String,
+}
+
+impl ArtifactSpec {
+    pub fn shape(&self) -> GemmShape {
+        GemmShape {
+            m: self.m,
+            n: self.n,
+            k: self.k,
+        }
+    }
+
+    fn parse_line(line: &str) -> Result<ArtifactSpec> {
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 7 {
+            bail!("manifest line has {} fields, expected 7: '{line}'", parts.len());
+        }
+        Ok(ArtifactSpec {
+            name: parts[0].to_string(),
+            m: parts[1].parse().context("bad m")?,
+            n: parts[2].parse().context("bad n")?,
+            k: parts[3].parse().context("bad k")?,
+            dtype: parts[4].to_string(),
+            variant: parts[5].to_string(),
+            file: parts[6].to_string(),
+        })
+    }
+}
+
+/// Parse `<dir>/manifest.txt`.
+pub fn parse_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(ArtifactSpec::parse_line)
+        .collect()
+}
+
+/// A compiled artifact ready to execute.
+struct Loaded {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The artifact store: a PJRT CPU client plus compiled executables,
+/// keyed by artifact name. One compiled executable per model variant
+/// and shape — compiled once at load, reused across requests.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    loaded: HashMap<String, Loaded>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a runtime over a PJRT CPU client.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            loaded: HashMap::new(),
+            dir: artifact_dir.to_path_buf(),
+        })
+    }
+
+    /// Load + compile every artifact in the manifest.
+    pub fn load_all(&mut self) -> Result<usize> {
+        let specs = parse_manifest(&self.dir)?;
+        let n = specs.len();
+        for spec in specs {
+            self.load(spec)?;
+        }
+        Ok(n)
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&mut self, spec: ArtifactSpec) -> Result<()> {
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
+        self.loaded.insert(spec.name.clone(), Loaded { spec, exe });
+        Ok(())
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.loaded.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.loaded.get(name).map(|l| &l.spec)
+    }
+
+    /// Find a loaded artifact matching shape + variant.
+    pub fn find(&self, shape: GemmShape, variant: &str) -> Option<&ArtifactSpec> {
+        self.loaded
+            .values()
+            .map(|l| &l.spec)
+            .find(|s| s.m == shape.m && s.n == shape.n && s.k == shape.k && s.variant == variant)
+    }
+
+    /// Execute `C = A·B` for a loaded artifact. `a` is row-major m×k,
+    /// `b` is k×n; returns row-major m×n.
+    pub fn execute(&self, name: &str, a: &[f64], b: &[f64]) -> Result<Vec<f64>> {
+        let l = self
+            .loaded
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        let (m, n, k) = (l.spec.m, l.spec.n, l.spec.k);
+        if a.len() != m * k || b.len() != k * n {
+            bail!(
+                "operand sizes {}/{} do not match artifact {name} ({m}x{k}, {k}x{n})",
+                a.len(),
+                b.len()
+            );
+        }
+        let lit_a = xla::Literal::vec1(a)
+            .reshape(&[m as i64, k as i64])
+            .map_err(|e| anyhow!("reshape A: {e:?}"))?;
+        let lit_b = xla::Literal::vec1(b)
+            .reshape(&[k as i64, n as i64])
+            .map_err(|e| anyhow!("reshape B: {e:?}"))?;
+        let result = l
+            .exe
+            .execute::<xla::Literal>(&[lit_a, lit_b])
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blis::gemm::gemm_naive;
+    use crate::util::rng::Rng;
+    use crate::util::stats::{gemm_tolerance, max_abs_diff};
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn manifest_line_parsing() {
+        let s = ArtifactSpec::parse_line("gemm_big_64 64 64 64 f64 big gemm_big_64.hlo.txt").unwrap();
+        assert_eq!(s.name, "gemm_big_64");
+        assert_eq!((s.m, s.n, s.k), (64, 64, 64));
+        assert_eq!(s.variant, "big");
+        assert!(ArtifactSpec::parse_line("too few fields").is_err());
+    }
+
+    #[test]
+    fn manifest_parses_from_disk() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let specs = parse_manifest(&artifacts_dir()).unwrap();
+        assert!(specs.len() >= 9);
+        assert!(specs.iter().any(|s| s.variant == "big"));
+        assert!(specs.iter().any(|s| s.variant == "little"));
+    }
+
+    #[test]
+    fn execute_matches_naive_gemm() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+        let specs = parse_manifest(&artifacts_dir()).unwrap();
+        let spec = specs.iter().find(|s| s.name == "gemm_big_64").unwrap().clone();
+        rt.load(spec).unwrap();
+
+        let mut rng = Rng::new(11);
+        let a = rng.fill_matrix(64 * 64);
+        let b = rng.fill_matrix(64 * 64);
+        let got = rt.execute("gemm_big_64", &a, &b).unwrap();
+        let mut want = vec![0.0; 64 * 64];
+        gemm_naive(GemmShape { m: 64, n: 64, k: 64 }, &a, &b, &mut want);
+        let d = max_abs_diff(&got, &want);
+        assert!(d < gemm_tolerance(64), "diff {d}");
+    }
+
+    #[test]
+    fn rectangular_artifact_matches() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+        let specs = parse_manifest(&artifacts_dir()).unwrap();
+        let spec = specs
+            .iter()
+            .find(|s| s.name == "gemm_big_96x160x224")
+            .unwrap()
+            .clone();
+        let (m, n, k) = (spec.m, spec.n, spec.k);
+        rt.load(spec).unwrap();
+        let mut rng = Rng::new(12);
+        let a = rng.fill_matrix(m * k);
+        let b = rng.fill_matrix(k * n);
+        let got = rt.execute("gemm_big_96x160x224", &a, &b).unwrap();
+        let mut want = vec![0.0; m * n];
+        gemm_naive(GemmShape { m, n, k }, &a, &b, &mut want);
+        assert!(max_abs_diff(&got, &want) < gemm_tolerance(k));
+    }
+
+    #[test]
+    fn wrong_operand_sizes_rejected() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+        let specs = parse_manifest(&artifacts_dir()).unwrap();
+        let spec = specs.iter().find(|s| s.name == "gemm_big_64").unwrap().clone();
+        rt.load(spec).unwrap();
+        assert!(rt.execute("gemm_big_64", &[0.0; 10], &[0.0; 10]).is_err());
+        assert!(rt.execute("nope", &[], &[]).is_err());
+    }
+
+    #[test]
+    fn find_by_shape_and_variant() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+        rt.load_all().unwrap();
+        let s = GemmShape { m: 128, n: 128, k: 128 };
+        assert!(rt.find(s, "big").is_some());
+        assert!(rt.find(s, "little").is_some());
+        assert!(rt.find(GemmShape { m: 7, n: 7, k: 7 }, "big").is_none());
+        assert!(rt.names().len() >= 9);
+    }
+}

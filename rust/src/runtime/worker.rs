@@ -1,0 +1,226 @@
+//! Thread-confined PJRT runtime.
+//!
+//! The `xla` crate's client/executable handles are `!Send` (internally
+//! `Rc`), so they cannot live inside a shared `Mutex`. Instead a single
+//! dedicated thread owns the [`Runtime`] and serves execution requests
+//! over channels — the standard actor pattern. Latency impact is
+//! negligible: one channel hop around a millisecond-scale GEMM.
+
+use crate::blis::gemm::GemmShape;
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use std::sync::mpsc;
+
+enum Msg {
+    Execute {
+        shape: GemmShape,
+        variant: String,
+        a: Vec<f64>,
+        b: Vec<f64>,
+        reply: mpsc::Sender<Result<(String, Vec<f64>)>>,
+    },
+    Names {
+        reply: mpsc::Sender<Vec<String>>,
+    },
+    Has {
+        shape: GemmShape,
+        variant: String,
+        reply: mpsc::Sender<bool>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send`+`Sync` handle to the runtime thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl PjrtHandle {
+    /// Spawn the runtime thread, loading every artifact in `dir`.
+    /// Blocks until loading finishes so failures surface immediately.
+    pub fn spawn(dir: &Path) -> Result<PjrtHandle> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize>>();
+        let dir = dir.to_path_buf();
+        std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || {
+                let mut rt = match Runtime::new(&dir).and_then(|mut rt| {
+                    let n = rt.load_all()?;
+                    Ok((rt, n))
+                }) {
+                    Ok((rt, n)) => {
+                        let _ = ready_tx.send(Ok(n));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for msg in rx {
+                    match msg {
+                        Msg::Execute { shape, variant, a, b, reply } => {
+                            let result = (|| {
+                                let spec = rt
+                                    .find(shape, &variant)
+                                    .ok_or_else(|| {
+                                        anyhow!(
+                                            "no artifact for {}x{}x{} variant {variant}",
+                                            shape.m, shape.n, shape.k
+                                        )
+                                    })?
+                                    .clone();
+                                let c = rt.execute(&spec.name, &a, &b)?;
+                                Ok((spec.name, c))
+                            })();
+                            let _ = reply.send(result);
+                        }
+                        Msg::Names { reply } => {
+                            let _ = reply
+                                .send(rt.names().iter().map(|s| s.to_string()).collect());
+                        }
+                        Msg::Has { shape, variant, reply } => {
+                            let _ = reply.send(rt.find(shape, &variant).is_some());
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+                // rt dropped here, on its owning thread.
+                let _ = &mut rt;
+            })
+            .map_err(|e| anyhow!("spawning runtime thread: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread died during load"))??;
+        Ok(PjrtHandle { tx })
+    }
+
+    /// Execute `C = A·B` on the artifact matching (shape, variant).
+    /// Returns (artifact name, result).
+    pub fn execute(
+        &self,
+        shape: GemmShape,
+        variant: &str,
+        a: Vec<f64>,
+        b: Vec<f64>,
+    ) -> Result<(String, Vec<f64>)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Execute {
+                shape,
+                variant: variant.to_string(),
+                a,
+                b,
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped reply"))?
+    }
+
+    pub fn names(&self) -> Result<Vec<String>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Names { reply })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped reply"))
+    }
+
+    /// Is an exact-shape artifact loaded for this (shape, variant)?
+    pub fn has(&self, shape: GemmShape, variant: &str) -> Result<bool> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Has {
+                shape,
+                variant: variant.to_string(),
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped reply"))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blis::gemm::gemm_naive;
+    use crate::util::rng::Rng;
+    use crate::util::stats::{gemm_tolerance, max_abs_diff};
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn handle_executes_from_other_threads() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let h = PjrtHandle::spawn(&artifacts_dir()).unwrap();
+        let mut joins = Vec::new();
+        for seed in 0..4u64 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(seed);
+                let a = rng.fill_matrix(64 * 64);
+                let b = rng.fill_matrix(64 * 64);
+                let shape = GemmShape::square(64);
+                let (name, c) = h.execute(shape, "big", a.clone(), b.clone()).unwrap();
+                assert_eq!(name, "gemm_big_64");
+                let mut want = vec![0.0; 64 * 64];
+                gemm_naive(shape, &a, &b, &mut want);
+                assert!(max_abs_diff(&c, &want) < gemm_tolerance(64));
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        h.shutdown();
+    }
+
+    #[test]
+    fn missing_artifact_is_error_not_panic() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let h = PjrtHandle::spawn(&artifacts_dir()).unwrap();
+        let err = h
+            .execute(GemmShape::square(33), "big", vec![0.0; 33 * 33], vec![0.0; 33 * 33])
+            .unwrap_err();
+        assert!(err.to_string().contains("no artifact"));
+        h.shutdown();
+    }
+
+    #[test]
+    fn bad_dir_fails_at_spawn() {
+        let err = match PjrtHandle::spawn(Path::new("/nonexistent-dir")) {
+            Err(e) => e,
+            Ok(_) => panic!("spawn should fail for a missing manifest"),
+        };
+        assert!(err.to_string().contains("manifest"), "{err}");
+    }
+
+    #[test]
+    fn names_listed() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let h = PjrtHandle::spawn(&artifacts_dir()).unwrap();
+        let names = h.names().unwrap();
+        assert!(names.iter().any(|n| n == "gemm_little_256"));
+        h.shutdown();
+    }
+}

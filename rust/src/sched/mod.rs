@@ -1,0 +1,368 @@
+//! Scheduling strategies (paper §4–§5).
+//!
+//! A [`ScheduleSpec`] describes one complete configuration of the
+//! multi-threaded GEMM:
+//!
+//! * the **strategy** — who gets how much work and with which control
+//!   tree(s): isolated clusters (§3.4), symmetric-static SSS (§4),
+//!   static-asymmetric SAS (§5.2), cache-aware CA-SAS (§5.3), dynamic
+//!   DAS / CA-DAS (§5.4);
+//! * the **coarse-grain loop** distributing micro-kernels between the
+//!   two clusters (Loop 1 or Loop 3, §5.2.1);
+//! * the **fine-grain loop** distributing a macro-kernel among the cores
+//!   of one cluster (Loop 4, Loop 5 or both, §5.2.1).
+//!
+//! Both the DES simulator (`crate::sim`) and the real-thread executor
+//! (`crate::native`) consume the same spec, so the shapes measured in
+//! the figures and the numerics verified in tests come from one
+//! description of the schedule.
+
+use crate::blis::control_tree::{Parallelism, TreeSet};
+use crate::blis::params::BlisParams;
+use crate::soc::{CoreType, SocSpec};
+
+/// Which outer loop distributes work *between clusters* (§5.2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CoarseLoop {
+    /// Loop 1 (jc over n): independent `Ac`/`Bc` buffers per cluster.
+    Loop1,
+    /// Loop 3 (ic over m): shared `Bc` buffer → common `kc` (§5.3).
+    Loop3,
+}
+
+impl CoarseLoop {
+    pub fn shares_bc(self) -> bool {
+        matches!(self, CoarseLoop::Loop3)
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            CoarseLoop::Loop1 => "L1",
+            CoarseLoop::Loop3 => "L3",
+        }
+    }
+}
+
+/// Which inner loop(s) distribute a macro-kernel *within a cluster*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FineLoop {
+    /// Loop 4 (jr over nc): ⌈nc/nr⌉-way concurrency — the good choice.
+    Loop4,
+    /// Loop 5 (ir over mc): only ⌈mc/mr⌉-way — scarcer (§3.1).
+    Loop5,
+    /// Both (2×2 within a 4-core cluster).
+    Both,
+}
+
+impl FineLoop {
+    pub fn name(self) -> &'static str {
+        match self {
+            FineLoop::Loop4 => "L4",
+            FineLoop::Loop5 => "L5",
+            FineLoop::Both => "L4+L5",
+        }
+    }
+
+    /// (loop4_ways, loop5_ways) for a cluster of `threads` cores.
+    pub fn ways(self, threads: usize) -> (usize, usize) {
+        match self {
+            FineLoop::Loop4 => (threads, 1),
+            FineLoop::Loop5 => (1, threads),
+            FineLoop::Both => {
+                // Factor threads as evenly as possible (4 → 2×2).
+                let a = (1..=threads)
+                    .filter(|d| threads % d == 0)
+                    .min_by_key(|&d| (threads / d).abs_diff(d))
+                    .unwrap_or(1);
+                (a, threads / a)
+            }
+        }
+    }
+}
+
+/// The workload-distribution strategy across the AMP.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Strategy {
+    /// Only one cluster, `threads` cores, its optimal parameters
+    /// (§3.4's isolated-cluster baselines and the Fig. 5 curves).
+    ClusterOnly { core: CoreType, threads: usize },
+    /// Symmetric-static: both clusters, equal shares, single control
+    /// tree with the big cluster's parameters (§4, Fig. 6/7).
+    Sss,
+    /// Static-asymmetric with a performance `ratio` (big gets `ratio`×
+    /// the LITTLE share), single (big-parameter) control tree (§5.2).
+    Sas { ratio: f64 },
+    /// SAS plus duplicated cache-aware control trees (§5.3).
+    CaSas { ratio: f64 },
+    /// Dynamic distribution, single control tree (§5.4 "DAS").
+    Das,
+    /// Dynamic distribution, duplicated control trees (§5.4 "CA-DAS").
+    CaDas,
+}
+
+impl Strategy {
+    pub fn is_dynamic(self) -> bool {
+        matches!(self, Strategy::Das | Strategy::CaDas)
+    }
+    pub fn is_cache_aware(self) -> bool {
+        matches!(self, Strategy::CaSas { .. } | Strategy::CaDas)
+    }
+    pub fn ratio(self) -> Option<f64> {
+        match self {
+            Strategy::Sas { ratio } | Strategy::CaSas { ratio } => Some(ratio),
+            _ => None,
+        }
+    }
+}
+
+/// A complete schedule description.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduleSpec {
+    pub strategy: Strategy,
+    pub coarse: CoarseLoop,
+    pub fine: FineLoop,
+}
+
+impl ScheduleSpec {
+    pub fn new(strategy: Strategy, coarse: CoarseLoop, fine: FineLoop) -> Self {
+        let s = ScheduleSpec {
+            strategy,
+            coarse,
+            fine,
+        };
+        s.validate().expect("invalid schedule spec");
+        s
+    }
+
+    /// The paper's preferred instantiations.
+    pub fn sss() -> Self {
+        // §4: Loop 1 across clusters + Loop 4 within.
+        ScheduleSpec::new(Strategy::Sss, CoarseLoop::Loop1, FineLoop::Loop4)
+    }
+    pub fn sas(ratio: f64) -> Self {
+        // §5.2.2: reported combination Loop 1 + Loop 4.
+        ScheduleSpec::new(Strategy::Sas { ratio }, CoarseLoop::Loop1, FineLoop::Loop4)
+    }
+    pub fn ca_sas(ratio: f64) -> Self {
+        ScheduleSpec::new(Strategy::CaSas { ratio }, CoarseLoop::Loop1, FineLoop::Loop4)
+    }
+    pub fn ca_das() -> Self {
+        // §5.4: dynamic over Loop 3 + fine Loop 4.
+        ScheduleSpec::new(Strategy::CaDas, CoarseLoop::Loop3, FineLoop::Loop4)
+    }
+    pub fn das() -> Self {
+        ScheduleSpec::new(Strategy::Das, CoarseLoop::Loop3, FineLoop::Loop4)
+    }
+    pub fn cluster_only(core: CoreType, threads: usize) -> Self {
+        ScheduleSpec::new(
+            Strategy::ClusterOnly { core, threads },
+            CoarseLoop::Loop1,
+            FineLoop::Loop4,
+        )
+    }
+
+    /// §5.4: `nc` (Loop 1's stride) is far too large a quantum for
+    /// dynamic distribution — the dynamic strategies must target Loop 3.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.strategy.is_dynamic() && self.coarse != CoarseLoop::Loop3 {
+            return Err("dynamic strategies require the coarse loop to be Loop 3 (§5.4)".into());
+        }
+        if let Strategy::ClusterOnly { threads, .. } = self.strategy {
+            if threads == 0 {
+                return Err("ClusterOnly needs at least one thread".into());
+            }
+        }
+        if let Some(r) = self.strategy.ratio() {
+            if !(r > 0.0) {
+                return Err(format!("ratio must be positive, got {r}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Threads used on each cluster `(big, little)`.
+    pub fn threads(&self, soc: &SocSpec) -> (usize, usize) {
+        match self.strategy {
+            Strategy::ClusterOnly { core, threads } => match core {
+                CoreType::Big => (threads.min(soc.big.num_cores), 0),
+                CoreType::Little => (0, threads.min(soc.little.num_cores)),
+            },
+            _ => (soc.big.num_cores, soc.little.num_cores),
+        }
+    }
+
+    /// The control tree pair this schedule runs with.
+    pub fn tree_set(&self, soc: &SocSpec) -> TreeSet {
+        let (tb, tl) = self.threads(soc);
+        let par = |threads: usize, coarse_ways: usize| {
+            let (w4, w5) = self.fine.ways(threads.max(1));
+            Parallelism {
+                loop1_ways: if self.coarse == CoarseLoop::Loop1 { coarse_ways } else { 1 },
+                loop3_ways: if self.coarse == CoarseLoop::Loop3 { coarse_ways } else { 1 },
+                loop4_ways: w4,
+                loop5_ways: w5,
+            }
+        };
+        match self.strategy {
+            Strategy::ClusterOnly { core, .. } => {
+                let params = BlisParams::optimal_for(core);
+                TreeSet::single(params, par(tb.max(tl), 1))
+            }
+            // Architecture-oblivious configurations run the big cluster's
+            // optimal parameters everywhere (§4: "cache configuration
+            // parameters are set to those that are optimal for the
+            // Cortex-A15"), including plain SAS and DAS.
+            Strategy::Sss | Strategy::Sas { .. } | Strategy::Das => {
+                TreeSet::single(BlisParams::a15_opt(), par(tb, 2))
+            }
+            Strategy::CaSas { .. } | Strategy::CaDas => TreeSet::cache_aware(
+                par(tb, 2),
+                par(tl, 2),
+                self.coarse.shares_bc(),
+            ),
+        }
+    }
+
+    /// Static coarse-split weights `(big, little)`; `None` for dynamic
+    /// strategies and isolated clusters.
+    pub fn coarse_weights(&self) -> Option<(f64, f64)> {
+        match self.strategy {
+            Strategy::Sss => Some((1.0, 1.0)),
+            Strategy::Sas { ratio } | Strategy::CaSas { ratio } => Some((ratio, 1.0)),
+            Strategy::Das | Strategy::CaDas | Strategy::ClusterOnly { .. } => None,
+        }
+    }
+
+    /// Human-readable label used in figures and CLI output.
+    pub fn label(&self) -> String {
+        let base = match self.strategy {
+            Strategy::ClusterOnly { core, threads } => {
+                return format!("{}x{}", threads, core.name());
+            }
+            Strategy::Sss => "SSS".to_string(),
+            Strategy::Sas { ratio } => format!("SAS(r={ratio:.0})"),
+            Strategy::CaSas { ratio } => format!("CA-SAS(r={ratio:.0})"),
+            Strategy::Das => "DAS".to_string(),
+            Strategy::CaDas => "CA-DAS".to_string(),
+        };
+        format!("{base} {}+{}", self.coarse.name(), self.fine.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn soc() -> SocSpec {
+        SocSpec::exynos5422()
+    }
+
+    #[test]
+    fn paper_default_specs_validate() {
+        for s in [
+            ScheduleSpec::sss(),
+            ScheduleSpec::sas(5.0),
+            ScheduleSpec::ca_sas(3.0),
+            ScheduleSpec::das(),
+            ScheduleSpec::ca_das(),
+            ScheduleSpec::cluster_only(CoreType::Big, 4),
+        ] {
+            s.validate().unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid schedule spec")]
+    fn dynamic_on_loop1_rejected() {
+        // §5.4: Loop 1's nc quantum is too coarse for dynamic scheduling.
+        ScheduleSpec::new(Strategy::CaDas, CoarseLoop::Loop1, FineLoop::Loop4);
+    }
+
+    #[test]
+    fn sss_uses_single_a15_tree() {
+        let ts = ScheduleSpec::sss().tree_set(&soc());
+        assert!(!ts.is_cache_aware());
+        assert_eq!(ts.big.params, BlisParams::a15_opt());
+        assert_eq!(ts.little.params, BlisParams::a15_opt());
+        // 2-way Loop 1 × 4-way Loop 4 = the paper's 8-way layout (Fig. 6).
+        assert_eq!(ts.big.par.loop1_ways, 2);
+        assert_eq!(ts.big.par.loop4_ways, 4);
+    }
+
+    #[test]
+    fn ca_sas_loop1_uses_independent_optima() {
+        let ts = ScheduleSpec::ca_sas(5.0).tree_set(&soc());
+        assert!(ts.is_cache_aware());
+        assert_eq!(ts.little.params, BlisParams::a7_opt());
+    }
+
+    #[test]
+    fn ca_strategies_on_loop3_share_kc() {
+        let spec = ScheduleSpec::new(Strategy::CaSas { ratio: 5.0 }, CoarseLoop::Loop3, FineLoop::Loop4);
+        let ts = spec.tree_set(&soc());
+        assert_eq!(ts.little.params, BlisParams::a7_shared_kc());
+        let dyn_ts = ScheduleSpec::ca_das().tree_set(&soc());
+        assert_eq!(dyn_ts.little.params, BlisParams::a7_shared_kc());
+        assert_eq!(dyn_ts.big.params.kc, dyn_ts.little.params.kc);
+    }
+
+    #[test]
+    fn das_is_oblivious_dynamic() {
+        let ts = ScheduleSpec::das().tree_set(&soc());
+        assert!(!ts.is_cache_aware());
+        assert!(Strategy::Das.is_dynamic());
+        assert!(!Strategy::Das.is_cache_aware());
+    }
+
+    #[test]
+    fn threads_accounting() {
+        assert_eq!(ScheduleSpec::sss().threads(&soc()), (4, 4));
+        assert_eq!(
+            ScheduleSpec::cluster_only(CoreType::Little, 3).threads(&soc()),
+            (0, 3)
+        );
+        assert_eq!(
+            ScheduleSpec::cluster_only(CoreType::Big, 9).threads(&soc()),
+            (4, 0),
+            "clamped to cluster size"
+        );
+    }
+
+    #[test]
+    fn fine_loop_ways() {
+        assert_eq!(FineLoop::Loop4.ways(4), (4, 1));
+        assert_eq!(FineLoop::Loop5.ways(4), (1, 4));
+        assert_eq!(FineLoop::Both.ways(4), (2, 2));
+        assert_eq!(FineLoop::Both.ways(3), (1, 3));
+        assert_eq!(FineLoop::Loop4.ways(1), (1, 1));
+    }
+
+    #[test]
+    fn coarse_weights() {
+        assert_eq!(ScheduleSpec::sss().coarse_weights(), Some((1.0, 1.0)));
+        assert_eq!(ScheduleSpec::sas(5.0).coarse_weights(), Some((5.0, 1.0)));
+        assert_eq!(ScheduleSpec::ca_das().coarse_weights(), None);
+    }
+
+    #[test]
+    fn labels_are_descriptive() {
+        assert_eq!(ScheduleSpec::sss().label(), "SSS L1+L4");
+        assert_eq!(ScheduleSpec::sas(5.0).label(), "SAS(r=5) L1+L4");
+        assert_eq!(ScheduleSpec::ca_das().label(), "CA-DAS L3+L4");
+        assert_eq!(
+            ScheduleSpec::cluster_only(CoreType::Big, 4).label(),
+            "4xCortex-A15"
+        );
+    }
+
+    #[test]
+    fn cluster_only_uses_that_clusters_optimum() {
+        let ts = ScheduleSpec::cluster_only(CoreType::Little, 4).tree_set(&soc());
+        assert_eq!(ts.big.params, BlisParams::a7_opt());
+    }
+
+    #[test]
+    #[should_panic]
+    fn nonpositive_ratio_rejected() {
+        ScheduleSpec::sas(0.0);
+    }
+}

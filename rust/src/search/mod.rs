@@ -1,0 +1,197 @@
+//! Empirical search for the cache configuration parameters (mc, kc) —
+//! the §3.3 experiment behind Fig. 4.
+//!
+//! The paper fixes `nc = 4096` (no L3 cache), `mr = nr = 4` (the tuned
+//! micro-kernel) and sweeps (mc, kc) per core type, first on a coarse
+//! grid to locate the promising region, then on a fine grid inside it.
+//! We run the same two-phase protocol against the calibrated performance
+//! model (where the paper ran wall-clock GEMMs), and additionally support
+//! the §5.3 constrained refit: `kc` pinned to the big cluster's 952 and
+//! only `mc` swept for the LITTLE cores (finding mc ≈ 32).
+
+use crate::blis::params::BlisParams;
+use crate::model::PerfModel;
+use crate::soc::CoreType;
+use crate::util::table::Table;
+
+/// One sampled configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchPoint {
+    pub mc: usize,
+    pub kc: usize,
+    pub gflops: f64,
+}
+
+/// Result of a (coarse or fine) sweep.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub core: CoreType,
+    pub points: Vec<SearchPoint>,
+    pub best: SearchPoint,
+}
+
+impl SearchResult {
+    /// Heatmap table (rows = mc, cols = kc) as the paper plots it.
+    pub fn to_table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["mc", "kc", "gflops"]);
+        for p in &self.points {
+            t.push_row(vec![
+                p.mc.to_string(),
+                p.kc.to_string(),
+                format!("{:.4}", p.gflops),
+            ]);
+        }
+        t
+    }
+}
+
+/// Rate of a single core with candidate parameters (single-thread, the
+/// §3.3 setup).
+fn rate(model: &PerfModel, core: CoreType, mc: usize, kc: usize) -> f64 {
+    let p = BlisParams::new(4096, kc, mc, 4, 4);
+    model.steady_rate_gflops(core, &p, 1)
+}
+
+fn sweep(
+    model: &PerfModel,
+    core: CoreType,
+    mc_range: (usize, usize, usize),
+    kc_range: (usize, usize, usize),
+) -> SearchResult {
+    let mut points = Vec::new();
+    let mut best = SearchPoint { mc: 0, kc: 0, gflops: f64::NEG_INFINITY };
+    let mut mc = mc_range.0;
+    while mc <= mc_range.1 {
+        let mut kc = kc_range.0;
+        while kc <= kc_range.1 {
+            let g = rate(model, core, mc, kc);
+            let pt = SearchPoint { mc, kc, gflops: g };
+            points.push(pt);
+            if g > best.gflops {
+                best = pt;
+            }
+            kc += kc_range.2;
+        }
+        mc += mc_range.2;
+    }
+    SearchResult { core, points, best }
+}
+
+/// Coarse sweep over the full plausible region (§3.3's first phase).
+pub fn coarse_search(model: &PerfModel, core: CoreType) -> SearchResult {
+    // mc up to ~400 rows, kc up to the L1 bound neighbourhood.
+    sweep(model, core, (16, 400, 16), (64, 1024, 32))
+}
+
+/// Fine sweep around a coarse optimum (§3.3's second phase).
+pub fn fine_search(model: &PerfModel, core: CoreType, around: SearchPoint) -> SearchResult {
+    let mc_lo = around.mc.saturating_sub(32).max(4);
+    let kc_lo = around.kc.saturating_sub(64).max(8);
+    sweep(model, core, (mc_lo, around.mc + 32, 4), (kc_lo, around.kc + 64, 8))
+}
+
+/// Full two-phase search: coarse → fine, as in Fig. 4.
+pub fn two_phase_search(model: &PerfModel, core: CoreType) -> (SearchResult, SearchResult) {
+    let coarse = coarse_search(model, core);
+    let fine = fine_search(model, core, coarse.best);
+    (coarse, fine)
+}
+
+/// §5.3 constrained refit: kc pinned (shared `Bc`), sweep mc only.
+pub fn shared_kc_refit(model: &PerfModel, core: CoreType, kc: usize) -> SearchResult {
+    let mut points = Vec::new();
+    let mut best = SearchPoint { mc: 0, kc, gflops: f64::NEG_INFINITY };
+    let mut mc = 4;
+    while mc <= 160 {
+        let g = rate(model, core, mc, kc);
+        let pt = SearchPoint { mc, kc, gflops: g };
+        points.push(pt);
+        if g > best.gflops {
+            best = pt;
+        }
+        mc += 4;
+    }
+    SearchResult { core, points, best }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> PerfModel {
+        PerfModel::exynos()
+    }
+
+    /// Fig. 4: the A15 optimum lands near the paper's (152, 952).
+    #[test]
+    fn a15_optimum_near_paper() {
+        let (_, fine) = two_phase_search(&model(), CoreType::Big);
+        let b = fine.best;
+        assert!(
+            (136..=168).contains(&b.mc) && (888..=1000).contains(&b.kc),
+            "A15 optimum ({}, {})",
+            b.mc,
+            b.kc
+        );
+        assert!((2.7..3.0).contains(&b.gflops), "gflops {}", b.gflops);
+    }
+
+    /// Fig. 4: the A7 optimum lands near the paper's (80, 352).
+    #[test]
+    fn a7_optimum_near_paper() {
+        let (_, fine) = two_phase_search(&model(), CoreType::Little);
+        let b = fine.best;
+        assert!(
+            (64..=96).contains(&b.mc) && (320..=390).contains(&b.kc),
+            "A7 optimum ({}, {})",
+            b.mc,
+            b.kc
+        );
+    }
+
+    /// §5.3: with kc pinned to 952, the A7's best mc collapses to ≈ 32.
+    #[test]
+    fn shared_kc_refit_near_mc32() {
+        let r = shared_kc_refit(&model(), CoreType::Little, 952);
+        assert!(
+            (24..=40).contains(&r.best.mc),
+            "shared-kc refit mc {}",
+            r.best.mc
+        );
+        // And it is worse than the unconstrained optimum but better than
+        // the oblivious A15 parameters (§5.3's observation).
+        let opt = rate(&model(), CoreType::Little, 80, 352);
+        let oblivious = rate(&model(), CoreType::Little, 152, 952);
+        assert!(r.best.gflops < opt);
+        assert!(r.best.gflops > oblivious);
+    }
+
+    #[test]
+    fn coarse_grid_covers_paper_region() {
+        let c = coarse_search(&model(), CoreType::Big);
+        assert!(c.points.len() > 500);
+        assert!(c.points.iter().any(|p| p.mc == 144 && p.kc == 928));
+    }
+
+    #[test]
+    fn fine_search_refines_coarse() {
+        let (coarse, fine) = two_phase_search(&model(), CoreType::Little);
+        assert!(fine.best.gflops >= coarse.best.gflops - 1e-12);
+    }
+
+    #[test]
+    fn heatmap_table_shape() {
+        let c = shared_kc_refit(&model(), CoreType::Little, 952);
+        let t = c.to_table("refit");
+        assert_eq!(t.columns, vec!["mc", "kc", "gflops"]);
+        assert_eq!(t.rows.len(), c.points.len());
+    }
+
+    #[test]
+    fn big_outperforms_little_everywhere() {
+        let m = model();
+        for &(mc, kc) in &[(80usize, 352usize), (152, 952), (32, 952)] {
+            assert!(rate(&m, CoreType::Big, mc, kc) > rate(&m, CoreType::Little, mc, kc));
+        }
+    }
+}

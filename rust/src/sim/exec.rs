@@ -1,0 +1,679 @@
+//! The discrete-event simulator: executes a [`ScheduleSpec`] over the
+//! virtual Exynos 5422 and returns makespan, per-core activity, DRAM
+//! traffic and energy.
+//!
+//! The simulation unit is a *cluster phase*: a packing pass or one
+//! macro-kernel's fine-grain partition across a cluster's threads. Each
+//! phase advances the cluster's virtual clock by the slowest thread's
+//! share (plus barrier cost) and accrues per-thread busy/poll time —
+//! exactly the lockstep structure of the real executor in
+//! `crate::native`. Coarse-grain interaction between the two clusters
+//! happens at three points, mirroring the paper:
+//!
+//! * static Loop-1 coarse: none until the final join (§4/§5.2 — the
+//!   early cluster polls while the other finishes);
+//! * static/dynamic Loop-3 coarse: a global barrier per (jc, pc) pair,
+//!   because `Bc` is shared and must not be repacked while in use;
+//! * dynamic: a virtual critical section serializes chunk grabs
+//!   (§5.4), ordered by cluster virtual time.
+
+use crate::blis::control_tree::ControlTree;
+use crate::blis::gemm::GemmShape;
+use crate::blis::packing::{pack_a_bytes, pack_b_bytes};
+use crate::cache::analysis::FootprintAnalysis;
+use crate::energy::{CoreActivity, PowerModel};
+use crate::model::{MicroCtx, PerfModel};
+use crate::partition::{split_weighted, Chunk};
+use crate::sched::{CoarseLoop, ScheduleSpec, Strategy};
+use crate::sim::stats::RunStats;
+use crate::sim::timeline::{PhaseKind, Timeline};
+use crate::soc::CoreType;
+
+/// Widest cluster the stack-allocated phase buffers support (perf pass:
+/// avoids a Vec allocation per simulated phase, EXPERIMENTS.md §Perf).
+const MAX_CLUSTER_THREADS: usize = 16;
+
+/// One cluster's simulated execution state.
+struct ClusterSim<'m> {
+    core: CoreType,
+    threads: usize,
+    tree: ControlTree,
+    model: &'m PerfModel,
+    clock: f64,
+    busy: Vec<f64>,
+    poll: Vec<f64>,
+    grabs: u64,
+    barriers: u64,
+    dram_bytes: f64,
+    /// Whether the complementary cluster also computes in this run.
+    other_active: bool,
+    /// Does this cluster's `Ac` overflow its L2 (per-jr re-streaming)?
+    ac_overflows: bool,
+    /// Phase-level trace of this cluster's virtual time.
+    timeline: Timeline,
+    /// Whether to record timeline segments (perf: plain `simulate` skips
+    /// recording; `simulate_traced` enables it).
+    record: bool,
+}
+
+impl<'m> ClusterSim<'m> {
+    fn new(
+        model: &'m PerfModel,
+        core: CoreType,
+        threads: usize,
+        tree: ControlTree,
+        other_active: bool,
+    ) -> Self {
+        let cluster = model.soc.cluster(core);
+        assert!(threads <= MAX_CLUSTER_THREADS, "cluster too wide for the sim");
+        let fit = FootprintAnalysis::for_cluster(cluster).fit(&tree.params);
+        ClusterSim {
+            core,
+            threads,
+            tree,
+            model,
+            clock: 0.0,
+            busy: vec![0.0; threads],
+            poll: vec![0.0; threads],
+            grabs: 0,
+            barriers: 0,
+            dram_bytes: 0.0,
+            other_active,
+            ac_overflows: !fit.ac_fits(),
+            timeline: Timeline::default(),
+            record: false,
+        }
+    }
+
+    /// Run one lockstep phase: each thread works `per_thread[i]` seconds,
+    /// everyone waits for the slowest, then (optionally) pays a barrier.
+    fn run_phase(&mut self, kind: PhaseKind, per_thread: &[f64], barrier: bool) {
+        debug_assert_eq!(per_thread.len(), self.threads);
+        let span = per_thread.iter().cloned().fold(0.0, f64::max);
+        let b = if barrier {
+            self.barriers += 1;
+            self.model.barrier_time(self.core)
+        } else {
+            0.0
+        };
+        for i in 0..self.threads {
+            self.busy[i] += per_thread[i];
+            self.poll[i] += span - per_thread[i] + b;
+        }
+        if self.record {
+            self.timeline.push(self.core, kind, self.clock, self.clock + span);
+            self.timeline
+                .push(self.core, PhaseKind::Barrier, self.clock + span, self.clock + span + b);
+        }
+        self.clock += span + b;
+    }
+
+    /// Packing phase: `bytes` of payload split evenly among threads.
+    fn pack_phase(&mut self, kind: PhaseKind, bytes: usize, barrier: bool) {
+        let share = bytes as f64 / self.threads as f64;
+        let t = self.model.pack_time(self.core, share.ceil() as usize);
+        let v = [t; MAX_CLUSTER_THREADS];
+        self.dram_bytes += bytes as f64;
+        self.run_phase(kind, &v[..self.threads], barrier);
+    }
+
+    /// Per-thread compute times for one macro-kernel over an
+    /// `mc_eff × nc_eff × kc_eff` block under this cluster's fine-grain
+    /// parallelization.
+    fn macro_times(&self, mc_eff: usize, nc_eff: usize, kc_eff: usize) -> [f64; MAX_CLUSTER_THREADS] {
+        let p = &self.tree.params;
+        let n_jr = nc_eff.div_ceil(p.nr);
+        let n_ir = mc_eff.div_ceil(p.mr);
+        let w4 = self.tree.par.loop4_ways.min(self.threads).max(1);
+        let w5 = (self.threads / w4).max(1);
+
+        // Static symmetric fine split (BLIS default within a cluster).
+        let jr_share = |i: usize| n_jr / w4 + usize::from(i < n_jr % w4);
+        let ir_share = |i: usize| n_ir / w5 + usize::from(i < n_ir % w5);
+
+        let mut times = [0.0; MAX_CLUSTER_THREADS];
+        for t in 0..self.threads {
+            let (i4, i5) = (t % w4, t / w4);
+            let jr_n = jr_share(i4);
+            let ir_n = ir_share(i5);
+            if jr_n == 0 || ir_n == 0 {
+                continue;
+            }
+            let rows_per_jr = (ir_n * p.mr).min(mc_eff);
+            let ctx = MicroCtx {
+                kc_eff,
+                rows_per_jr,
+                active_in_cluster: self.threads,
+                other_cluster_active: self.other_active,
+            };
+            let t_micro = self.model.micro_kernel_time(self.core, p, &ctx);
+            times[t] = (jr_n * ir_n) as f64 * t_micro;
+        }
+        times
+    }
+
+    /// Process one Loop-3 chunk: pack `Ac`, barrier, macro-kernel, barrier.
+    fn process_ic_chunk(&mut self, mc_eff: usize, nc_eff: usize, kc_eff: usize) {
+        let pa = pack_a_bytes(mc_eff, kc_eff);
+        self.pack_phase(PhaseKind::PackA, pa, true);
+        if self.ac_overflows {
+            // Ac re-streams from DRAM on every jr column (§4's penalty
+            // visible on the DRAM rail).
+            let n_jr = nc_eff.div_ceil(self.tree.params.nr) as f64;
+            self.dram_bytes += (mc_eff * kc_eff * 8) as f64 * (n_jr - 1.0).max(0.0);
+        }
+        let times = self.macro_times(mc_eff, nc_eff, kc_eff);
+        self.run_phase(PhaseKind::Compute, &times[..self.threads], true);
+    }
+
+    /// Walk this cluster's own (jc, pc, ic) nest over sub-ranges of the
+    /// problem — the Loop-1-coarse execution body.
+    fn run_own_nest(&mut self, m_range: Chunk, n_range: Chunk, k: usize) {
+        if m_range.is_empty() || n_range.is_empty() || k == 0 {
+            return;
+        }
+        let p = self.tree.params;
+        let mut jc = 0;
+        while jc < n_range.len {
+            let nc_eff = (n_range.len - jc).min(p.nc);
+            let mut pc = 0;
+            while pc < k {
+                let kc_eff = (k - pc).min(p.kc);
+                self.pack_phase(PhaseKind::PackB, pack_b_bytes(kc_eff, nc_eff), true);
+                let mut ic = 0;
+                while ic < m_range.len {
+                    let mc_eff = (m_range.len - ic).min(p.mc);
+                    self.process_ic_chunk(mc_eff, nc_eff, kc_eff);
+                    ic += p.mc;
+                }
+                pc += p.kc;
+            }
+            jc += p.nc;
+        }
+        // C is read+written once per pc block.
+        let pc_trips = k.div_ceil(p.kc) as f64;
+        self.dram_bytes += 16.0 * (m_range.len * n_range.len) as f64 * pc_trips;
+    }
+
+    /// Advance the cluster's clock to `t`, charging the gap as poll time
+    /// (fast threads "remain idle but active, polling", §5.2.2).
+    fn sync_to(&mut self, t: f64) {
+        if t > self.clock {
+            let gap = t - self.clock;
+            for i in 0..self.threads {
+                self.poll[i] += gap;
+            }
+            if self.record {
+                self.timeline.push(self.core, PhaseKind::Poll, self.clock, t);
+            }
+            self.clock = t;
+        }
+    }
+}
+
+/// Simulate one GEMM run under `spec`. Deterministic.
+pub fn simulate(model: &PerfModel, spec: &ScheduleSpec, shape: GemmShape) -> RunStats {
+    simulate_impl(model, spec, shape, false).0
+}
+
+/// Like [`simulate`], additionally returning the merged phase-level
+/// [`Timeline`] of both clusters (Gantt export, structure tests).
+pub fn simulate_traced(
+    model: &PerfModel,
+    spec: &ScheduleSpec,
+    shape: GemmShape,
+) -> (RunStats, Timeline) {
+    simulate_impl(model, spec, shape, true)
+}
+
+fn simulate_impl(
+    model: &PerfModel,
+    spec: &ScheduleSpec,
+    shape: GemmShape,
+    record: bool,
+) -> (RunStats, Timeline) {
+    spec.validate().expect("invalid spec");
+    let soc = &model.soc;
+    let (tb, tl) = spec.threads(soc);
+    let trees = spec.tree_set(soc);
+    let both = tb > 0 && tl > 0;
+
+    let mut big = ClusterSim::new(model, CoreType::Big, tb.max(1), trees.big.clone(), both);
+    let mut little =
+        ClusterSim::new(model, CoreType::Little, tl.max(1), trees.little.clone(), both);
+    big.record = record;
+    little.record = record;
+    // Zero-thread clusters are fully idle: model them as absent.
+    let big_on = tb > 0;
+    let little_on = tl > 0;
+
+    let GemmShape { m, n, k } = shape;
+    let full_m = Chunk { start: 0, len: m };
+    let full_n = Chunk { start: 0, len: n };
+
+    match (spec.strategy, spec.coarse) {
+        (Strategy::ClusterOnly { .. }, _) => {
+            if big_on {
+                big.run_own_nest(full_m, full_n, k);
+            } else {
+                little.run_own_nest(full_m, full_n, k);
+            }
+        }
+        // ---- static coarse split of Loop 1 (independent buffers) ----
+        (Strategy::Sss | Strategy::Sas { .. } | Strategy::CaSas { .. }, CoarseLoop::Loop1) => {
+            let (wb, wl) = spec.coarse_weights().expect("static");
+            let parts = split_weighted(n, &[wb, wl], trees.big.params.nr);
+            big.run_own_nest(full_m, parts[0], k);
+            little.run_own_nest(full_m, parts[1], k);
+            let t_end = big.clock.max(little.clock);
+            big.sync_to(t_end);
+            little.sync_to(t_end);
+        }
+        // ---- static coarse split of Loop 3 (shared Bc) ----
+        (Strategy::Sss | Strategy::Sas { .. } | Strategy::CaSas { .. }, CoarseLoop::Loop3) => {
+            let (wb, wl) = spec.coarse_weights().expect("static");
+            let parts = split_weighted(m, &[wb, wl], trees.big.params.mr);
+            run_shared_bc(&mut big, &mut little, shape, |big, little, nc_eff, kc_eff| {
+                walk_m_range(big, parts[0], nc_eff, kc_eff);
+                walk_m_range(little, parts[1], nc_eff, kc_eff);
+            });
+        }
+        // ---- dynamic distribution over Loop 3 (shared Bc) ----
+        (Strategy::Das | Strategy::CaDas, _) => {
+            run_shared_bc(&mut big, &mut little, shape, |big, little, nc_eff, kc_eff| {
+                dynamic_m_loop(big, little, m, nc_eff, kc_eff);
+            });
+        }
+    }
+
+    // Gather global results.
+    let time_s = if big_on && little_on {
+        big.clock.max(little.clock)
+    } else if big_on {
+        big.clock
+    } else {
+        little.clock
+    };
+    let mut activity = vec![CoreActivity::default(); soc.total_cores()];
+    if big_on {
+        for (i, gid) in soc.core_ids(CoreType::Big).take(tb).enumerate() {
+            activity[gid] = CoreActivity {
+                busy_s: big.busy[i],
+                poll_s: (big.poll[i]).min(time_s - big.busy[i]).max(0.0),
+            };
+        }
+    }
+    if little_on {
+        for (i, gid) in soc.core_ids(CoreType::Little).take(tl).enumerate() {
+            activity[gid] = CoreActivity {
+                busy_s: little.busy[i],
+                poll_s: (little.poll[i]).min(time_s - little.busy[i]).max(0.0),
+            };
+        }
+    }
+    let dram_bytes = big.dram_bytes * (big_on as u8 as f64)
+        + little.dram_bytes * (little_on as u8 as f64);
+    let power = PowerModel::new(soc.clone());
+    let energy = power.integrate(time_s, &activity, dram_bytes);
+    let flops = shape.flops();
+    let mut timeline = Timeline::default();
+    if big_on {
+        timeline.segments.extend(big.timeline.segments.iter().copied());
+    }
+    if little_on {
+        timeline.segments.extend(little.timeline.segments.iter().copied());
+    }
+    let stats = RunStats {
+        label: spec.label(),
+        shape,
+        time_s,
+        flops,
+        gflops: flops / time_s / 1e9,
+        activity,
+        dram_bytes,
+        gflops_per_watt: energy.gflops_per_watt(flops),
+        energy,
+        grabs: big.grabs + little.grabs,
+        barriers: big.barriers + little.barriers,
+    };
+    (stats, timeline)
+}
+
+/// Shared-`Bc` outer structure (coarse Loop 3, §5.3/§5.4): Loop 1 and
+/// Loop 2 are walked jointly; both clusters cooperate packing `Bc`, sync
+/// globally, run `body` over the m space, and sync again before the next
+/// `Bc`.
+fn run_shared_bc<'m>(
+    big: &mut ClusterSim<'m>,
+    little: &mut ClusterSim<'m>,
+    shape: GemmShape,
+    mut body: impl FnMut(&mut ClusterSim<'m>, &mut ClusterSim<'m>, usize, usize),
+) {
+    let GemmShape { m, n, k } = shape;
+    let nc = big.tree.params.nc;
+    let kc = big.tree.params.kc;
+    assert_eq!(
+        kc, little.tree.params.kc,
+        "shared Bc requires a common kc (§5.3)"
+    );
+    let total_threads = big.threads + little.threads;
+    let mut jc = 0;
+    while jc < n {
+        let nc_eff = (n - jc).min(nc);
+        let mut pc = 0;
+        while pc < k {
+            let kc_eff = (k - pc).min(kc);
+            // Cooperative Bc pack: even byte split across all 8 threads.
+            let bytes = pack_b_bytes(kc_eff, nc_eff);
+            let share = bytes / total_threads + 1;
+            let tb = [big.model.pack_time(CoreType::Big, share); MAX_CLUSTER_THREADS];
+            let tl = [little.model.pack_time(CoreType::Little, share); MAX_CLUSTER_THREADS];
+            big.dram_bytes += bytes as f64 * big.threads as f64 / total_threads as f64;
+            little.dram_bytes += bytes as f64 * little.threads as f64 / total_threads as f64;
+            big.run_phase(PhaseKind::PackB, &tb[..big.threads], true);
+            little.run_phase(PhaseKind::PackB, &tl[..little.threads], true);
+            global_sync(big, little);
+
+            body(big, little, nc_eff, kc_eff);
+            global_sync(big, little);
+            pc += kc;
+        }
+        jc += nc;
+    }
+    // C traffic: read+write once per pc block.
+    let pc_trips = k.div_ceil(kc) as f64;
+    big.dram_bytes += 16.0 * (m * n) as f64 * pc_trips * 0.5;
+    little.dram_bytes += 16.0 * (m * n) as f64 * pc_trips * 0.5;
+}
+
+/// Static walk of a cluster's m sub-range (coarse Loop 3).
+fn walk_m_range(cl: &mut ClusterSim, range: Chunk, nc_eff: usize, kc_eff: usize) {
+    let mc = cl.tree.params.mc;
+    let mut ic = 0;
+    while ic < range.len {
+        let mc_eff = (range.len - ic).min(mc);
+        cl.process_ic_chunk(mc_eff, nc_eff, kc_eff);
+        ic += mc;
+    }
+}
+
+/// Dynamic m-loop (§5.4): both clusters grab chunks of their own `mc`
+/// from a shared queue; grabs serialize through a virtual critical
+/// section in virtual-time order.
+fn dynamic_m_loop<'m>(
+    big: &mut ClusterSim<'m>,
+    little: &mut ClusterSim<'m>,
+    m: usize,
+    nc_eff: usize,
+    kc_eff: usize,
+) {
+    let mut next = 0usize; // queue head
+    let mut cs_free = 0.0f64; // critical-section availability (virtual t)
+
+    // Event loop: the cluster with the earliest clock grabs next.
+    loop {
+        if next >= m {
+            break;
+        }
+        let big_first = big.clock <= little.clock;
+        let cl: &mut ClusterSim = if big_first { big } else { little };
+
+        // Enter the critical section.
+        let t_start = cl.clock.max(cs_free);
+        let wait = t_start - cl.clock;
+        if wait > 0.0 {
+            for i in 0..cl.threads {
+                cl.poll[i] += wait;
+            }
+            if cl.record {
+                cl.timeline.push(cl.core, PhaseKind::Poll, cl.clock, t_start);
+            }
+            cl.clock = t_start;
+        }
+        let g = cl.model.grab_time(cl.core);
+        if cl.record {
+            cl.timeline.push(cl.core, PhaseKind::Grab, cl.clock, cl.clock + g);
+        }
+        cl.clock += g;
+        for i in 0..cl.threads {
+            cl.poll[i] += g; // broadcast wait while the lead thread grabs
+        }
+        cs_free = cl.clock;
+        cl.grabs += 1;
+
+        let mc = cl.tree.params.mc;
+        let take = mc.min(m - next);
+        next += take;
+        cl.process_ic_chunk(take, nc_eff, kc_eff);
+    }
+}
+
+/// Sync both clusters to the same virtual instant (global barrier),
+/// charging poll time to the early one.
+fn global_sync(big: &mut ClusterSim, little: &mut ClusterSim) {
+    let t = big.clock.max(little.clock);
+    big.sync_to(t);
+    little.sync_to(t);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{FineLoop, ScheduleSpec, Strategy};
+    use crate::soc::CoreType;
+
+    fn model() -> PerfModel {
+        PerfModel::exynos()
+    }
+
+    fn run(spec: ScheduleSpec, r: usize) -> RunStats {
+        simulate(&model(), &spec, GemmShape::square(r))
+    }
+
+    /// §3.4: isolated-cluster peaks at a large size.
+    #[test]
+    fn isolated_cluster_peaks() {
+        let big4 = run(ScheduleSpec::cluster_only(CoreType::Big, 4), 4096);
+        assert!((8.8..10.0).contains(&big4.gflops), "A15×4: {}", big4.gflops);
+        let little4 = run(ScheduleSpec::cluster_only(CoreType::Little, 4), 4096);
+        assert!((2.0..2.5).contains(&little4.gflops), "A7×4: {}", little4.gflops);
+        let big1 = run(ScheduleSpec::cluster_only(CoreType::Big, 1), 4096);
+        assert!((2.6..3.0).contains(&big1.gflops), "A15×1: {}", big1.gflops);
+    }
+
+    /// §4: SSS on 8 cores delivers ≈ 40 % of the A15-only peak.
+    #[test]
+    fn sss_is_architecture_oblivious_disaster() {
+        let sss = run(ScheduleSpec::sss(), 4096);
+        let a15 = run(ScheduleSpec::cluster_only(CoreType::Big, 4), 4096);
+        let frac = sss.gflops / a15.gflops;
+        assert!((0.32..0.50).contains(&frac), "SSS fraction {frac}");
+        // Big cores poll more than half the run (§4's imbalance).
+        let big_poll: f64 = sss.activity[..4].iter().map(|a| a.poll_s).sum();
+        let big_busy: f64 = sss.activity[..4].iter().map(|a| a.busy_s).sum();
+        assert!(big_poll > big_busy, "big cluster should mostly poll");
+    }
+
+    /// Fig. 9: SAS performance peaks at ratio 5–6 and beats A15-only by
+    /// ≈ 20 % at large sizes.
+    #[test]
+    fn sas_ratio_sweep_shape() {
+        let g: Vec<f64> = (1..=7)
+            .map(|r| run(ScheduleSpec::sas(r as f64), 4096).gflops)
+            .collect();
+        let best = (1..=7).max_by(|&a, &b| g[a - 1].partial_cmp(&g[b - 1]).unwrap()).unwrap();
+        assert!(
+            (5..=6).contains(&best),
+            "best ratio {best}, curve {g:?}"
+        );
+        let a15 = run(ScheduleSpec::cluster_only(CoreType::Big, 4), 4096).gflops;
+        let gain = g[best - 1] / a15;
+        assert!((1.10..1.30).contains(&gain), "gain over A15-only {gain}");
+        // Ratio 1 (homogeneous) is the worst.
+        let worst = (1..=7).min_by(|&a, &b| g[a - 1].partial_cmp(&g[b - 1]).unwrap()).unwrap();
+        assert_eq!(worst, 1, "curve {g:?}");
+    }
+
+    /// Fig. 10: CA-SAS ≥ SAS, with visible gains at ratios below 5.
+    #[test]
+    fn ca_sas_beats_sas_at_low_ratio() {
+        for ratio in [1.0, 3.0] {
+            let sas = run(ScheduleSpec::sas(ratio), 4096).gflops;
+            let ca = run(ScheduleSpec::ca_sas(ratio), 4096).gflops;
+            assert!(ca > sas * 1.05, "ratio {ratio}: CA {ca} vs SAS {sas}");
+        }
+        // At ratio 5, the difference vanishes (big cluster is critical).
+        let sas5 = run(ScheduleSpec::sas(5.0), 4096).gflops;
+        let ca5 = run(ScheduleSpec::ca_sas(5.0), 4096).gflops;
+        assert!((ca5 / sas5 - 1.0).abs() < 0.05, "{sas5} vs {ca5}");
+    }
+
+    /// Fig. 12: CA-DAS (L3 dynamic + L4 fine) is the best configuration
+    /// and clearly beats oblivious DAS.
+    #[test]
+    fn ca_das_wins() {
+        let cadas = run(ScheduleSpec::ca_das(), 4096);
+        let das = run(ScheduleSpec::das(), 4096);
+        assert!(cadas.gflops > das.gflops * 1.05, "{} vs {}", cadas.gflops, das.gflops);
+        let best_casas = run(ScheduleSpec::ca_sas(5.0), 4096).gflops;
+        assert!(
+            cadas.gflops > best_casas * 0.97,
+            "CA-DAS {} should match/beat best CA-SAS {best_casas}",
+            cadas.gflops
+        );
+        // Close to the ideal aggregate.
+        let ideal = run(ScheduleSpec::cluster_only(CoreType::Big, 4), 4096).gflops
+            + run(ScheduleSpec::cluster_only(CoreType::Little, 4), 4096).gflops;
+        assert!(cadas.gflops > 0.90 * ideal, "CA-DAS {} vs ideal {ideal}", cadas.gflops);
+        assert!(cadas.grabs > 0, "dynamic runs must grab chunks");
+    }
+
+    /// Fig. 11/12: fine-grain Loop 4 beats Loop 5.
+    #[test]
+    fn loop4_fine_beats_loop5() {
+        let l4 = run(
+            ScheduleSpec::new(Strategy::CaDas, CoarseLoop::Loop3, FineLoop::Loop4),
+            4096,
+        );
+        let l5 = run(
+            ScheduleSpec::new(Strategy::CaDas, CoarseLoop::Loop3, FineLoop::Loop5),
+            4096,
+        );
+        assert!(l4.gflops > l5.gflops * 1.03, "{} vs {}", l4.gflops, l5.gflops);
+    }
+
+    /// §5.2.2: small problems can't exploit the asymmetry (SAS at small
+    /// r falls below its large-size efficiency).
+    #[test]
+    fn small_problems_underperform() {
+        let small = run(ScheduleSpec::sas(5.0), 256);
+        let large = run(ScheduleSpec::sas(5.0), 4096);
+        assert!(small.gflops < 0.8 * large.gflops, "{} vs {}", small.gflops, large.gflops);
+    }
+
+    /// Energy shape (§4/Fig. 7): SSS has by far the worst GFLOPS/W;
+    /// well-balanced SAS ≈ A15-only.
+    #[test]
+    fn energy_ordering() {
+        let sss = run(ScheduleSpec::sss(), 4096);
+        let sas5 = run(ScheduleSpec::sas(5.0), 4096);
+        let a15 = run(ScheduleSpec::cluster_only(CoreType::Big, 4), 4096);
+        assert!(sss.gflops_per_watt < 0.7 * a15.gflops_per_watt);
+        let rel = (sas5.gflops_per_watt / a15.gflops_per_watt - 1.0).abs();
+        assert!(rel < 0.20, "SAS vs A15-only efficiency rel diff {rel}");
+    }
+
+    /// Work conservation: busy time × rate ≈ flops for every strategy
+    /// (sanity on the phase accounting).
+    #[test]
+    fn activity_is_consistent() {
+        for spec in [
+            ScheduleSpec::sss(),
+            ScheduleSpec::sas(3.0),
+            ScheduleSpec::ca_sas(5.0),
+            ScheduleSpec::das(),
+            ScheduleSpec::ca_das(),
+            ScheduleSpec::cluster_only(CoreType::Big, 2),
+            ScheduleSpec::cluster_only(CoreType::Little, 3),
+        ] {
+            let st = run(spec, 1024);
+            assert!(st.time_s > 0.0);
+            assert!(st.gflops > 0.0);
+            for (id, a) in st.activity.iter().enumerate() {
+                assert!(
+                    a.busy_s + a.poll_s <= st.time_s * 1.0000001 + 1e-12,
+                    "{}: core {id} busy {} poll {} > T {}",
+                    st.label,
+                    a.busy_s,
+                    a.poll_s,
+                    st.time_s
+                );
+            }
+            // Energy must be finite and positive.
+            assert!(st.energy.energy_j > 0.0);
+            assert!(st.gflops_per_watt > 0.0);
+        }
+    }
+
+    /// Loop-1 vs Loop-3 static coarse under Loop-4 fine: no noticeable
+    /// difference (Fig. 11's observation).
+    #[test]
+    fn coarse_loop_choice_irrelevant_under_l4() {
+        let l1 = run(
+            ScheduleSpec::new(Strategy::CaSas { ratio: 5.0 }, CoarseLoop::Loop1, FineLoop::Loop4),
+            4096,
+        );
+        let l3 = run(
+            ScheduleSpec::new(Strategy::CaSas { ratio: 5.0 }, CoarseLoop::Loop3, FineLoop::Loop4),
+            4096,
+        );
+        let rel = (l1.gflops / l3.gflops - 1.0).abs();
+        assert!(rel < 0.10, "L1 {} vs L3 {}", l1.gflops, l3.gflops);
+    }
+
+    /// Timeline structure: valid per-cluster ordering, span == makespan,
+    /// and the SSS imbalance shows as a long big-cluster poll tail.
+    #[test]
+    fn timeline_structure() {
+        use crate::sim::timeline::PhaseKind;
+        let (st, tl) = super::simulate_traced(&model(), &ScheduleSpec::sss(), GemmShape::square(2048));
+        tl.validate().unwrap();
+        assert!((tl.span() - st.time_s).abs() < 1e-9);
+        let big_poll = tl.total(CoreType::Big, PhaseKind::Poll);
+        assert!(big_poll > 0.5 * st.time_s, "SSS big poll tail {big_poll} of {}", st.time_s);
+        let (st2, tl2) =
+            super::simulate_traced(&model(), &ScheduleSpec::ca_das(), GemmShape::square(2048));
+        tl2.validate().unwrap();
+        assert!(tl2.total(CoreType::Big, PhaseKind::Grab) > 0.0);
+        let poll2 = tl2.total(CoreType::Big, PhaseKind::Poll);
+        assert!(poll2 < 0.1 * st2.time_s, "CA-DAS big poll {poll2} of {}", st2.time_s);
+        // Compute dominates everything else for the balanced schedule.
+        let compute = tl2.total(CoreType::Big, PhaseKind::Compute);
+        assert!(compute > 0.8 * st2.time_s);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = run(ScheduleSpec::ca_das(), 1536);
+        let b = run(ScheduleSpec::ca_das(), 1536);
+        assert_eq!(a.time_s, b.time_s);
+        assert_eq!(a.grabs, b.grabs);
+        assert_eq!(a.energy.energy_j, b.energy.energy_j);
+    }
+
+    #[test]
+    fn non_square_shapes() {
+        let st = simulate(
+            &model(),
+            &ScheduleSpec::ca_das(),
+            GemmShape { m: 1000, n: 300, k: 2000 },
+        );
+        assert!(st.gflops > 1.0);
+        let tall = simulate(
+            &model(),
+            &ScheduleSpec::sas(5.0),
+            GemmShape { m: 8192, n: 64, k: 64 },
+        );
+        assert!(tall.time_s > 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Discrete-event simulation of GEMM schedules on the virtual AMP.
+//!
+//! `simulate(model, spec, shape)` is the workhorse behind every figure:
+//! it executes a [`crate::sched::ScheduleSpec`] in virtual time over the
+//! calibrated [`crate::model::PerfModel`] and returns a [`RunStats`]
+//! with makespan, GFLOPS, per-core activity, DRAM traffic and the
+//! energy report. See DESIGN.md §1 for why time is virtual while the
+//! numerics run for real in `crate::native`.
+
+pub mod exec;
+pub mod stats;
+pub mod timeline;
+
+pub use exec::{simulate, simulate_traced};
+pub use timeline::{PhaseKind, Timeline};
+pub use stats::RunStats;

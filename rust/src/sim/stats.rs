@@ -1,0 +1,50 @@
+//! Result types for simulated GEMM runs.
+
+use crate::blis::gemm::GemmShape;
+use crate::energy::{CoreActivity, EnergyReport};
+
+/// Everything a figure needs from one simulated run.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    pub label: String,
+    pub shape: GemmShape,
+    /// Virtual makespan (seconds).
+    pub time_s: f64,
+    /// Useful flops (2·m·n·k).
+    pub flops: f64,
+    pub gflops: f64,
+    /// Per-core activity, indexed by global SoC core id.
+    pub activity: Vec<CoreActivity>,
+    /// Total DRAM payload moved (packing, C updates, overflow streams).
+    pub dram_bytes: f64,
+    pub energy: EnergyReport,
+    pub gflops_per_watt: f64,
+    /// Dynamic-scheduling chunk grabs (0 for static).
+    pub grabs: u64,
+    /// Intra-cluster + global synchronization points.
+    pub barriers: u64,
+}
+
+impl RunStats {
+    /// Fraction of the makespan each core spent computing.
+    pub fn utilization(&self) -> Vec<f64> {
+        self.activity
+            .iter()
+            .map(|a| if self.time_s > 0.0 { a.busy_s / self.time_s } else { 0.0 })
+            .collect()
+    }
+
+    /// Aggregate busy fraction over cores that did any work.
+    pub fn mean_busy_utilization(&self) -> f64 {
+        let used: Vec<f64> = self
+            .utilization()
+            .into_iter()
+            .filter(|&u| u > 0.0)
+            .collect();
+        if used.is_empty() {
+            0.0
+        } else {
+            used.iter().sum::<f64>() / used.len() as f64
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Phase-level timeline recording for simulated runs.
+//!
+//! The aggregate [`crate::sim::RunStats`] answers "how fast / how much
+//! energy"; the timeline answers *why*: which cluster was packing,
+//! computing, grabbing or polling at each point of virtual time. It
+//! powers the Gantt-style CSV export (plot-ready), the per-phase
+//! breakdown in the energy example, and regression tests on the
+//! schedule *structure* (e.g. SSS's long big-cluster poll tail).
+
+use crate::soc::CoreType;
+use crate::util::table::Table;
+
+/// What a cluster is doing during a segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PhaseKind {
+    PackB,
+    PackA,
+    Compute,
+    Grab,
+    Barrier,
+    Poll,
+}
+
+impl PhaseKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PhaseKind::PackB => "pack_b",
+            PhaseKind::PackA => "pack_a",
+            PhaseKind::Compute => "compute",
+            PhaseKind::Grab => "grab",
+            PhaseKind::Barrier => "barrier",
+            PhaseKind::Poll => "poll",
+        }
+    }
+    pub const ALL: [PhaseKind; 6] = [
+        PhaseKind::PackB,
+        PhaseKind::PackA,
+        PhaseKind::Compute,
+        PhaseKind::Grab,
+        PhaseKind::Barrier,
+        PhaseKind::Poll,
+    ];
+}
+
+/// One contiguous span of a cluster's virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    pub cluster: CoreType,
+    pub kind: PhaseKind,
+    pub t0: f64,
+    pub t1: f64,
+}
+
+impl Segment {
+    pub fn dur(&self) -> f64 {
+        self.t1 - self.t0
+    }
+}
+
+/// A recorded timeline (per-cluster segments, in emission order).
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    pub segments: Vec<Segment>,
+}
+
+impl Timeline {
+    pub fn push(&mut self, cluster: CoreType, kind: PhaseKind, t0: f64, t1: f64) {
+        debug_assert!(t1 >= t0 - 1e-15, "segment must not run backwards");
+        if t1 > t0 {
+            self.segments.push(Segment { cluster, kind, t0, t1 });
+        }
+    }
+
+    /// Total time a cluster spent in a phase kind.
+    pub fn total(&self, cluster: CoreType, kind: PhaseKind) -> f64 {
+        self.segments
+            .iter()
+            .filter(|s| s.cluster == cluster && s.kind == kind)
+            .map(Segment::dur)
+            .sum()
+    }
+
+    /// End of the last segment (the makespan seen by the timeline).
+    pub fn span(&self) -> f64 {
+        self.segments.iter().map(|s| s.t1).fold(0.0, f64::max)
+    }
+
+    /// Verify per-cluster segments are non-overlapping and ordered —
+    /// the structural invariant of a lockstep cluster.
+    pub fn validate(&self) -> Result<(), String> {
+        for cluster in CoreType::ALL {
+            let mut last_end = 0.0f64;
+            for s in self.segments.iter().filter(|s| s.cluster == cluster) {
+                if s.t0 < last_end - 1e-9 {
+                    return Err(format!(
+                        "{:?} segment at {} overlaps previous end {}",
+                        cluster, s.t0, last_end
+                    ));
+                }
+                last_end = s.t1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-cluster × per-phase breakdown table.
+    pub fn breakdown(&self) -> Table {
+        let mut t = Table::new(
+            "Timeline breakdown [s]",
+            &["cluster", "pack_b", "pack_a", "compute", "grab", "barrier", "poll", "total"],
+        );
+        for cluster in CoreType::ALL {
+            let vals: Vec<f64> = PhaseKind::ALL
+                .iter()
+                .map(|&k| self.total(cluster, k))
+                .collect();
+            let total: f64 = vals.iter().sum();
+            let mut row = vec![cluster.short().to_string()];
+            row.extend(vals.iter().map(|v| format!("{v:.4}")));
+            row.push(format!("{total:.4}"));
+            t.push_row(row);
+        }
+        t
+    }
+
+    /// Gantt-style CSV (one row per segment): plot-ready.
+    pub fn to_gantt_table(&self) -> Table {
+        let mut t = Table::new("Gantt segments", &["cluster", "phase", "t0", "t1"]);
+        for s in &self.segments {
+            t.push_row(vec![
+                s.cluster.short().to_string(),
+                s.kind.name().to_string(),
+                format!("{:.6}", s.t0),
+                format!("{:.6}", s.t1),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Timeline {
+        let mut tl = Timeline::default();
+        tl.push(CoreType::Big, PhaseKind::PackB, 0.0, 0.1);
+        tl.push(CoreType::Big, PhaseKind::Compute, 0.1, 0.9);
+        tl.push(CoreType::Big, PhaseKind::Poll, 0.9, 1.0);
+        tl.push(CoreType::Little, PhaseKind::PackB, 0.0, 0.3);
+        tl.push(CoreType::Little, PhaseKind::Compute, 0.3, 1.0);
+        tl
+    }
+
+    #[test]
+    fn totals_and_span() {
+        let tl = sample();
+        assert!((tl.total(CoreType::Big, PhaseKind::Compute) - 0.8).abs() < 1e-12);
+        assert!((tl.total(CoreType::Little, PhaseKind::Poll)).abs() < 1e-12);
+        assert!((tl.span() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_length_segments_dropped() {
+        let mut tl = Timeline::default();
+        tl.push(CoreType::Big, PhaseKind::Grab, 0.5, 0.5);
+        assert!(tl.segments.is_empty());
+    }
+
+    #[test]
+    fn validate_catches_overlap() {
+        let mut tl = sample();
+        assert!(tl.validate().is_ok());
+        tl.push(CoreType::Big, PhaseKind::Compute, 0.5, 0.6); // overlaps
+        assert!(tl.validate().is_err());
+    }
+
+    #[test]
+    fn breakdown_table_shape() {
+        let t = sample().breakdown();
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.columns.len(), 8);
+    }
+
+    #[test]
+    fn gantt_rows_match_segments() {
+        let tl = sample();
+        assert_eq!(tl.to_gantt_table().rows.len(), tl.segments.len());
+    }
+}

@@ -1,0 +1,326 @@
+//! SoC descriptors for asymmetric multicore processors.
+//!
+//! The paper's testbed is the Samsung Exynos 5422 (ODROID-XU3): an ARM
+//! big.LITTLE SoC with a quad-core Cortex-A15 ("big") cluster @ 1.6 GHz
+//! sharing a 2 MiB L2, and a quad-core Cortex-A7 ("LITTLE") cluster
+//! @ 1.4 GHz sharing a 512 KiB L2; every core has a private 32+32 KiB L1
+//! and both clusters see a shared DDR3 through coherent 128-bit buses
+//! (paper §3.2, Fig. 3). Since that hardware is not available here, this
+//! module is the authoritative *descriptor* the simulator, cache model,
+//! perf model and energy model all consume (DESIGN.md §1).
+//!
+//! A generic builder supports the paper's future-work ablations
+//! (different big/LITTLE core counts, ARMv8-class cache sizes).
+
+/// Which of the two asymmetric core types a core belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CoreType {
+    /// Fast, out-of-order core (Cortex-A15 in the paper).
+    Big,
+    /// Slow, in-order, low-power core (Cortex-A7).
+    Little,
+}
+
+impl CoreType {
+    pub const ALL: [CoreType; 2] = [CoreType::Big, CoreType::Little];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CoreType::Big => "Cortex-A15",
+            CoreType::Little => "Cortex-A7",
+        }
+    }
+
+    pub fn short(self) -> &'static str {
+        match self {
+            CoreType::Big => "big",
+            CoreType::Little => "LITTLE",
+        }
+    }
+
+    pub fn other(self) -> CoreType {
+        match self {
+            CoreType::Big => CoreType::Little,
+            CoreType::Little => CoreType::Big,
+        }
+    }
+}
+
+/// Geometry of one cache level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheGeometry {
+    pub size_bytes: usize,
+    pub associativity: usize,
+    pub line_bytes: usize,
+}
+
+impl CacheGeometry {
+    pub fn new(size_bytes: usize, associativity: usize, line_bytes: usize) -> Self {
+        let g = CacheGeometry {
+            size_bytes,
+            associativity,
+            line_bytes,
+        };
+        g.validate();
+        g
+    }
+
+    pub fn num_sets(&self) -> usize {
+        self.size_bytes / (self.associativity * self.line_bytes)
+    }
+
+    pub fn validate(&self) {
+        assert!(self.line_bytes.is_power_of_two(), "line size must be 2^k");
+        assert!(self.associativity >= 1);
+        assert_eq!(
+            self.size_bytes % (self.associativity * self.line_bytes),
+            0,
+            "cache size must be sets*ways*line"
+        );
+        assert!(self.num_sets().is_power_of_two(), "set count must be 2^k");
+    }
+}
+
+/// Per-core-type microarchitectural description.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoreSpec {
+    pub core_type: CoreType,
+    pub freq_ghz: f64,
+    /// Private L1 data cache.
+    pub l1d: CacheGeometry,
+    /// Double-precision flops/cycle the FPU can retire from the
+    /// micro-kernel's rank-1 update sequence under ideal conditions.
+    /// (A15: NEON-VFPv4 FMA pipe; A7: simpler in-order VFP.)
+    pub dp_flops_per_cycle: f64,
+}
+
+impl CoreSpec {
+    /// Ideal peak double-precision GFLOPS of one core.
+    pub fn peak_gflops(&self) -> f64 {
+        self.freq_ghz * self.dp_flops_per_cycle
+    }
+}
+
+/// A cluster: n identical cores sharing one L2.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub core: CoreSpec,
+    pub num_cores: usize,
+    /// Shared, unified L2 cache of the cluster.
+    pub l2: CacheGeometry,
+}
+
+/// Whole-SoC description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SocSpec {
+    pub name: String,
+    pub big: ClusterSpec,
+    pub little: ClusterSpec,
+    /// Sustained DRAM bandwidth observable by one cluster (GB/s).
+    pub dram_bw_gbs: f64,
+    pub dram_total_bytes: usize,
+}
+
+impl SocSpec {
+    /// The paper's testbed (§3.2, Fig. 3).
+    pub fn exynos5422() -> SocSpec {
+        SocSpec {
+            name: "Samsung Exynos 5422 (ODROID-XU3)".to_string(),
+            big: ClusterSpec {
+                core: CoreSpec {
+                    core_type: CoreType::Big,
+                    freq_ghz: 1.6,
+                    l1d: CacheGeometry::new(32 * 1024, 2, 64),
+                    // Calibrated so the modelled single-core optimum lands
+                    // at the paper's ~2.85 GFLOPS (model/calibration.rs).
+                    dp_flops_per_cycle: 2.0,
+                },
+                num_cores: 4,
+                l2: CacheGeometry::new(2 * 1024 * 1024, 16, 64),
+            },
+            little: ClusterSpec {
+                core: CoreSpec {
+                    core_type: CoreType::Little,
+                    freq_ghz: 1.4,
+                    l1d: CacheGeometry::new(32 * 1024, 4, 64),
+                    dp_flops_per_cycle: 0.5,
+                },
+                num_cores: 4,
+                l2: CacheGeometry::new(512 * 1024, 8, 64),
+            },
+            dram_bw_gbs: 3.2,
+            dram_total_bytes: 2 * 1024 * 1024 * 1024,
+        }
+    }
+
+    /// Generic big.LITTLE-style SoC for ablation studies (paper §6
+    /// future work: "architectures with different number of big/LITTLE
+    /// cores"). Scales the Exynos descriptor's core counts.
+    pub fn custom_counts(num_big: usize, num_little: usize) -> SocSpec {
+        assert!(num_big >= 1 && num_little >= 1);
+        let mut soc = SocSpec::exynos5422();
+        soc.name = format!("custom big.LITTLE {num_big}+{num_little}");
+        soc.big.num_cores = num_big;
+        soc.little.num_cores = num_little;
+        soc
+    }
+
+    /// DVFS variant: same silicon, different operating points (§5.2:
+    /// the SAS ratio knob exists precisely because "changes in the core
+    /// frequency ... affect the performance ratio between core types").
+    pub fn with_freqs(mut self, big_ghz: f64, little_ghz: f64) -> SocSpec {
+        assert!(big_ghz > 0.0 && little_ghz > 0.0);
+        self.name = format!("{} @ {big_ghz}/{little_ghz} GHz", self.name);
+        self.big.core.freq_ghz = big_ghz;
+        self.little.core.freq_ghz = little_ghz;
+        self
+    }
+
+    /// ARM Juno r0 development board — the paper's §6 "port to a 64-bit
+    /// ARMv8 architecture" roadmap item: 2× Cortex-A57 @ 1.1 GHz with a
+    /// 2 MiB shared L2, plus 4× Cortex-A53 @ 850 MHz with a 1 MiB L2.
+    /// The A57's wider NEON datapath retires more dp flops per cycle.
+    pub fn juno_r0() -> SocSpec {
+        SocSpec {
+            name: "ARM Juno r0 (ARMv8: 2×A57 + 4×A53)".to_string(),
+            big: ClusterSpec {
+                core: CoreSpec {
+                    core_type: CoreType::Big,
+                    freq_ghz: 1.1,
+                    l1d: CacheGeometry::new(32 * 1024, 2, 64),
+                    dp_flops_per_cycle: 4.0,
+                },
+                num_cores: 2,
+                l2: CacheGeometry::new(2 * 1024 * 1024, 16, 64),
+            },
+            little: ClusterSpec {
+                core: CoreSpec {
+                    core_type: CoreType::Little,
+                    freq_ghz: 0.85,
+                    l1d: CacheGeometry::new(32 * 1024, 4, 64),
+                    dp_flops_per_cycle: 1.0,
+                },
+                num_cores: 4,
+                l2: CacheGeometry::new(1024 * 1024, 16, 64),
+            },
+            dram_bw_gbs: 5.0,
+            dram_total_bytes: 8 * 1024 * 1024 * 1024,
+        }
+    }
+
+    pub fn cluster(&self, t: CoreType) -> &ClusterSpec {
+        match t {
+            CoreType::Big => &self.big,
+            CoreType::Little => &self.little,
+        }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.big.num_cores + self.little.num_cores
+    }
+
+    /// Global core id range for a cluster: big cores come first
+    /// ([0, nb)), then LITTLE ([nb, nb+nl)). The simulator, native
+    /// executor and energy meter all share this numbering.
+    pub fn core_ids(&self, t: CoreType) -> std::ops::Range<usize> {
+        match t {
+            CoreType::Big => 0..self.big.num_cores,
+            CoreType::Little => self.big.num_cores..self.total_cores(),
+        }
+    }
+
+    pub fn core_type_of(&self, core_id: usize) -> CoreType {
+        assert!(core_id < self.total_cores(), "core id {core_id} out of range");
+        if core_id < self.big.num_cores {
+            CoreType::Big
+        } else {
+            CoreType::Little
+        }
+    }
+
+    /// Ideal aggregate peak (sum of single-core peaks) — upper bound
+    /// reference only; the perf model applies efficiency + contention.
+    pub fn aggregate_peak_gflops(&self) -> f64 {
+        self.big.core.peak_gflops() * self.big.num_cores as f64
+            + self.little.core.peak_gflops() * self.little.num_cores as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exynos_matches_paper_spec() {
+        let soc = SocSpec::exynos5422();
+        assert_eq!(soc.big.num_cores, 4);
+        assert_eq!(soc.little.num_cores, 4);
+        assert_eq!(soc.big.core.freq_ghz, 1.6);
+        assert_eq!(soc.little.core.freq_ghz, 1.4);
+        assert_eq!(soc.big.l2.size_bytes, 2 * 1024 * 1024);
+        assert_eq!(soc.little.l2.size_bytes, 512 * 1024);
+        assert_eq!(soc.big.core.l1d.size_bytes, 32 * 1024);
+        assert_eq!(soc.little.core.l1d.size_bytes, 32 * 1024);
+    }
+
+    #[test]
+    fn l2_ratio_is_four() {
+        let soc = SocSpec::exynos5422();
+        assert_eq!(soc.big.l2.size_bytes / soc.little.l2.size_bytes, 4);
+    }
+
+    #[test]
+    fn core_id_mapping_round_trips() {
+        let soc = SocSpec::exynos5422();
+        for id in soc.core_ids(CoreType::Big) {
+            assert_eq!(soc.core_type_of(id), CoreType::Big);
+        }
+        for id in soc.core_ids(CoreType::Little) {
+            assert_eq!(soc.core_type_of(id), CoreType::Little);
+        }
+        assert_eq!(soc.total_cores(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn core_type_of_out_of_range_panics() {
+        SocSpec::exynos5422().core_type_of(8);
+    }
+
+    #[test]
+    fn cache_geometry_sets() {
+        let g = CacheGeometry::new(32 * 1024, 2, 64);
+        assert_eq!(g.num_sets(), 256);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_cache_geometry_rejected() {
+        CacheGeometry::new(33 * 1024, 2, 64);
+    }
+
+    #[test]
+    fn big_cores_faster_than_little() {
+        let soc = SocSpec::exynos5422();
+        assert!(soc.big.core.peak_gflops() > 3.0 * soc.little.core.peak_gflops());
+    }
+
+    #[test]
+    fn custom_counts_builder() {
+        let soc = SocSpec::custom_counts(2, 6);
+        assert_eq!(soc.total_cores(), 8);
+        assert_eq!(soc.core_ids(CoreType::Little), 2..8);
+    }
+
+    #[test]
+    fn core_type_helpers() {
+        assert_eq!(CoreType::Big.other(), CoreType::Little);
+        assert_eq!(CoreType::Big.name(), "Cortex-A15");
+        assert_eq!(CoreType::Little.short(), "LITTLE");
+    }
+
+    #[test]
+    fn aggregate_peak_positive() {
+        assert!(SocSpec::exynos5422().aggregate_peak_gflops() > 10.0);
+    }
+}

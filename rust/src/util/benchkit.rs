@@ -1,0 +1,188 @@
+//! Measurement harness for `benches/` (criterion is not available in the
+//! offline crate set). Provides warmup + sampled timing, summary stats,
+//! and markdown reporting so `cargo bench` output is self-describing.
+
+use crate::util::stats::Summary;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-sample wall time in seconds (each sample may contain many
+    /// inner iterations; times are normalized per iteration).
+    pub samples: Vec<f64>,
+    /// Optional throughput denominator (e.g. flops per iteration);
+    /// reported as (denominator / time) when present.
+    pub throughput_units: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples).expect("bench produced no samples")
+    }
+
+    /// Render one markdown row: name, mean, σ, min, optional throughput.
+    pub fn to_row(&self) -> String {
+        let s = self.summary();
+        let tput = match self.throughput_units {
+            Some((units, label)) => format!(" | {:.3} {}/s", units / s.mean / 1e9 * 1e9, label),
+            None => String::new(),
+        };
+        format!(
+            "| {} | {} | {} | {} |{}",
+            self.name,
+            fmt_time(s.mean),
+            fmt_time(s.std),
+            fmt_time(s.min),
+            tput
+        )
+    }
+}
+
+/// Human-friendly time formatting.
+pub fn fmt_time(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if seconds >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.3} µs", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+/// Benchmark runner with fixed sample/warmup policy.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub min_sample_time: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            samples: 12,
+            min_sample_time: Duration::from_millis(30),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            samples: 5,
+            min_sample_time: Duration::from_millis(10),
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, automatically choosing an inner iteration count so
+    /// each sample lasts at least `min_sample_time`. The closure's return
+    /// value is black-boxed to prevent dead-code elimination.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warmup + calibration: find iterations per sample.
+        let start = Instant::now();
+        let mut iters_done = 0u64;
+        while start.elapsed() < self.warmup || iters_done == 0 {
+            std::hint::black_box(f());
+            iters_done += 1;
+        }
+        let per_iter = start.elapsed().as_secs_f64() / iters_done as f64;
+        let inner = ((self.min_sample_time.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..inner {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / inner as f64);
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            samples,
+            throughput_units: None,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Like `bench` but reports throughput as `units_per_iter / time`.
+    pub fn bench_throughput<T>(
+        &mut self,
+        name: &str,
+        units_per_iter: f64,
+        label: &'static str,
+        f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench(name, f);
+        let last = self.results.last_mut().unwrap();
+        last.throughput_units = Some((units_per_iter, label));
+        self.results.last().unwrap()
+    }
+
+    /// Record a result measured externally (e.g. one long run).
+    pub fn record(&mut self, name: &str, samples: Vec<f64>) {
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            samples,
+            throughput_units: None,
+        });
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the markdown report for all results gathered so far.
+    pub fn report(&self, title: &str) {
+        println!("\n## {title}");
+        println!("| benchmark | mean | σ | min | throughput");
+        println!("|---|---|---|---|---");
+        for r in &self.results {
+            println!("{}", r.to_row());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_samples() {
+        let mut b = Bencher::quick();
+        let r = b.bench("noop-ish", || std::hint::black_box(1 + 1));
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.samples.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn throughput_row_contains_label() {
+        let mut b = Bencher::quick();
+        b.bench_throughput("t", 1e9, "flop", || std::hint::black_box(2 * 2));
+        let row = b.results()[0].to_row();
+        assert!(row.contains("flop/s"), "{row}");
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert_eq!(fmt_time(2.0), "2.000 s");
+        assert_eq!(fmt_time(2e-3), "2.000 ms");
+        assert_eq!(fmt_time(2e-6), "2.000 µs");
+        assert_eq!(fmt_time(2e-9), "2.0 ns");
+    }
+
+    #[test]
+    fn record_external_samples() {
+        let mut b = Bencher::quick();
+        b.record("ext", vec![1.0, 2.0, 3.0]);
+        let s = b.results()[0].summary();
+        assert_eq!(s.mean, 2.0);
+    }
+}

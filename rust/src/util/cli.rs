@@ -1,0 +1,158 @@
+//! Tiny hand-rolled CLI argument parser (`clap` is not in the offline
+//! crate set). Supports `--flag`, `--key value`, `--key=value` and
+//! positional arguments, with typed accessors and error messages that
+//! name the offending flag.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals in order plus a key→value map
+/// (bare flags map to `"true"`).
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--` terminator: rest is positional.
+                    args.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag.
+                    let takes_value = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        args.options
+                            .insert(stripped.to_string(), it.next().unwrap());
+                    } else {
+                        args.options.insert(stripped.to_string(), "true".to_string());
+                    }
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment, skipping argv[0].
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of usize, e.g. `--sizes 256,512,1024`.
+    pub fn usize_list(&self, key: &str) -> Result<Option<Vec<usize>>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| format!("--{key}: bad list element '{s}'"))
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["figures", "--fig", "4", "--verbose"]);
+        assert_eq!(a.positional, vec!["figures"]);
+        assert_eq!(a.get("fig"), Some("4"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["--out=results", "--n=5"]);
+        assert_eq!(a.get("out"), Some("results"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_bare() {
+        let a = parse(&["--quick", "--fig", "5"]);
+        assert!(a.flag("quick"));
+        assert_eq!(a.get("fig"), Some("5"));
+    }
+
+    #[test]
+    fn double_dash_terminates_options() {
+        let a = parse(&["--a", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn typed_errors_name_the_flag() {
+        let a = parse(&["--n", "abc"]);
+        let err = a.usize_or("n", 0).unwrap_err();
+        assert!(err.contains("--n"), "{err}");
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let a = parse(&["--sizes", "256,512, 1024"]);
+        assert_eq!(a.usize_list("sizes").unwrap().unwrap(), vec![256, 512, 1024]);
+        assert_eq!(a.usize_list("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("mode", "sim"), "sim");
+        assert_eq!(a.f64_or("ratio", 5.0).unwrap(), 5.0);
+    }
+}

@@ -1,0 +1,76 @@
+//! Shared utilities: deterministic RNG, statistics, table emission,
+//! a mini property-testing harness, a bench measurement kit and a tiny
+//! CLI parser. These stand in for `rand`/`proptest`/`criterion`/`clap`,
+//! which are unavailable in the offline crate set (see DESIGN.md §2).
+
+pub mod benchkit;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+pub fn round_up(x: usize, m: usize) -> usize {
+    assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Round `x` down to a multiple of `m`, but never below `m` when x > 0.
+/// Used when partitioning loop ranges so every non-empty chunk is a
+/// whole number of register-block strides.
+pub fn round_to_stride_floor(x: usize, m: usize) -> usize {
+    assert!(m > 0);
+    if x == 0 {
+        0
+    } else {
+        ((x / m).max(1)) * m
+    }
+}
+
+/// Ceiling division.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Relative difference |a-b| / max(|a|,|b|,eps) — convergence checks.
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    let denom = a.abs().max(b.abs()).max(1e-300);
+    (a - b).abs() / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 4), 0);
+        assert_eq!(round_up(1, 4), 4);
+        assert_eq!(round_up(4, 4), 4);
+        assert_eq!(round_up(5, 4), 8);
+    }
+
+    #[test]
+    fn stride_floor_never_zero_for_positive_input() {
+        assert_eq!(round_to_stride_floor(3, 4), 4);
+        assert_eq!(round_to_stride_floor(9, 4), 8);
+        assert_eq!(round_to_stride_floor(0, 4), 0);
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 3), 1);
+        assert_eq!(ceil_div(6, 3), 2);
+        assert_eq!(ceil_div(7, 3), 3);
+    }
+
+    #[test]
+    fn rel_diff_symmetric_and_zero_safe() {
+        assert_eq!(rel_diff(1.0, 1.0), 0.0);
+        assert!((rel_diff(1.0, 2.0) - 0.5).abs() < 1e-12);
+        assert_eq!(rel_diff(0.0, 0.0), 0.0);
+    }
+}

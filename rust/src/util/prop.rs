@@ -1,0 +1,142 @@
+//! Minimal deterministic property-testing harness.
+//!
+//! `proptest` is not in the offline crate set, so we provide the subset we
+//! need: run a property over many pseudo-random cases drawn from a seeded
+//! generator; on failure report the seed and case index so the exact case
+//! can be replayed. No shrinking — cases are kept small by construction.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed fixed for reproducibility; override per-test when needed.
+        Config { cases: 128, seed: 0xA11CE }
+    }
+}
+
+/// Run `prop` over `cfg.cases` cases. `gen` draws one case from the RNG.
+/// `prop` returns `Err(msg)` to fail. Panics with seed + case index on
+/// the first failure so CI output pinpoints the repro.
+pub fn check<T: std::fmt::Debug>(
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property failed (seed={:#x}, case {}/{}): {}\ncase: {:?}",
+                cfg.seed, case_idx, cfg.cases, msg, case
+            );
+        }
+    }
+}
+
+/// Convenience: run with the default config.
+pub fn check_default<T: std::fmt::Debug>(
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check(&Config::default(), gen, prop)
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Equality variant with automatic message.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            &Config { cases: 10, seed: 1 },
+            |r| r.gen_range(0, 100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            &Config { cases: 10, seed: 2 },
+            |r| r.gen_range(0, 100),
+            |&x| {
+                if x < 1000 {
+                    Err("always fails".to_string())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_assert_macros_work() {
+        check_default(
+            |r| (r.gen_range(1, 10), r.gen_range(1, 10)),
+            |&(a, b)| {
+                prop_assert!(a + b >= 2, "sum too small: {} + {}", a, b);
+                prop_assert_eq!(a + b, b + a);
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn cases_are_deterministic_across_runs() {
+        let collect = |seed| {
+            let mut v = Vec::new();
+            check(
+                &Config { cases: 16, seed },
+                |r| r.gen_range(0, 1_000_000),
+                |&x| {
+                    v.push(x);
+                    Ok(())
+                },
+            );
+            v
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+}

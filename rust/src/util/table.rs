@@ -1,0 +1,175 @@
+//! CSV and markdown table emission for figures and benches.
+//!
+//! Every paper figure is regenerated as (a) a CSV file consumable by any
+//! plotting tool and (b) a markdown table printed to stdout/EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// A rectangular table with named columns. Cells are strings; numeric
+/// helpers format with sensible precision.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row of preformatted cells. Panics on arity mismatch —
+    /// a mismatch is always a bug in the figure generator.
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.columns.len(),
+            "row arity {} != column count {} in table '{}'",
+            cells.len(),
+            self.columns.len(),
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    /// Append a row of f64 cells formatted with `prec` decimals.
+    pub fn push_f64_row(&mut self, cells: &[f64], prec: usize) {
+        self.push_row(cells.iter().map(|x| format!("{x:.prec$}")).collect());
+    }
+
+    /// Render as CSV (RFC-4180-ish; cells containing commas/quotes are quoted).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&csv_line(&self.columns));
+        for row in &self.rows {
+            out.push_str(&csv_line(row));
+        }
+        out
+    }
+
+    /// Render as a GitHub-flavored markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}", self.title);
+        let _ = writeln!(out, "| {} |", self.columns.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "| {} |", row.join(" | "));
+        }
+        out
+    }
+
+    /// Write the CSV rendering to `path`, creating parent directories.
+    pub fn write_csv(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_csv())
+    }
+
+    /// Look up a column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.columns.iter().position(|c| c == name)
+    }
+
+    /// Parse a column as f64 (panics on unparsable cells — figure
+    /// tables are machine-generated).
+    pub fn f64_column(&self, name: &str) -> Vec<f64> {
+        let idx = self
+            .col(name)
+            .unwrap_or_else(|| panic!("no column '{name}' in table '{}'", self.title));
+        self.rows
+            .iter()
+            .map(|r| r[idx].parse::<f64>().expect("non-numeric cell"))
+            .collect()
+    }
+}
+
+fn csv_line(cells: &[String]) -> String {
+    let quoted: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect();
+    format!("{}\n", quoted.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.push_row(vec!["1".into(), "x".into()]);
+        t.push_row(vec!["2.5".into(), "y,z".into()]);
+        t
+    }
+
+    #[test]
+    fn csv_rendering_quotes_commas() {
+        let csv = sample().to_csv();
+        assert_eq!(csv, "a,b\n1,x\n2.5,\"y,z\"\n");
+    }
+
+    #[test]
+    fn markdown_has_header_and_rows() {
+        let md = sample().to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("|---|---|"));
+        assert!(md.contains("| 2.5 | y,z |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.push_row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn f64_column_roundtrip() {
+        let t = sample();
+        assert_eq!(t.f64_column("a"), vec![1.0, 2.5]);
+    }
+
+    #[test]
+    fn push_f64_row_formats() {
+        let mut t = Table::new("t", &["x"]);
+        t.push_f64_row(&[1.23456], 2);
+        assert_eq!(t.rows[0][0], "1.23");
+    }
+
+    #[test]
+    fn write_csv_creates_dirs() {
+        let dir = std::env::temp_dir().join("amp_gemm_table_test");
+        let _ = fs::remove_dir_all(&dir);
+        let path = dir.join("nested/t.csv");
+        sample().write_csv(&path).unwrap();
+        assert!(path.exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quotes_escaped() {
+        let mut t = Table::new("t", &["a"]);
+        t.push_row(vec!["say \"hi\"".into()]);
+        assert!(t.to_csv().contains("\"say \"\"hi\"\"\""));
+    }
+}

@@ -1,0 +1,166 @@
+//! Coordinator + TCP service integration: protocol robustness, failure
+//! injection, concurrent mixed workloads and cross-backend agreement.
+
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::coordinator::{server, Backend, Coordinator, Request};
+use amp_gemm::sched::ScheduleSpec;
+use amp_gemm::soc::SocSpec;
+use amp_gemm::util::rng::Rng;
+use std::io::Write;
+use std::path::Path;
+use std::sync::Arc;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn start(with_artifacts: bool) -> (Arc<Coordinator>, server::ServerHandle) {
+    let coord = if with_artifacts && artifacts_dir().join("manifest.txt").exists() {
+        Coordinator::with_artifacts(SocSpec::exynos5422(), &artifacts_dir()).unwrap()
+    } else {
+        Coordinator::new(SocSpec::exynos5422())
+    };
+    let coord = Arc::new(coord);
+    let h = server::serve(coord.clone(), "127.0.0.1:0").unwrap();
+    (coord, h)
+}
+
+/// Fuzz the line protocol with garbage: the server must answer ERR (or
+/// close politely) and keep serving — never panic, never wedge.
+#[test]
+fn protocol_fuzz_never_kills_the_server() {
+    let (_c, h) = start(false);
+    let mut rng = Rng::new(0xF022);
+    let mut cl = server::Client::connect(h.addr).unwrap();
+    for _ in 0..200 {
+        let len = rng.gen_range(0, 40);
+        let garbage: String = (0..len)
+            .map(|_| {
+                let c = rng.gen_range(32, 127) as u8 as char;
+                if c == 'Q' { 'q' } else { c } // avoid accidental QUIT
+            })
+            .collect();
+        let reply = cl.call(&garbage).unwrap();
+        assert!(
+            reply.starts_with("ERR") || reply.starts_with("OK") || reply == "PONG" || reply.starts_with("STATS"),
+            "unexpected reply '{reply}' to '{garbage}'"
+        );
+    }
+    assert_eq!(cl.call("PING").unwrap(), "PONG", "server must still serve");
+    h.shutdown();
+}
+
+/// Abruptly dropped connections (no QUIT) must not leak into other
+/// sessions or take the service down.
+#[test]
+fn abrupt_disconnects_are_harmless() {
+    let (_c, h) = start(false);
+    for _ in 0..8 {
+        let mut s = std::net::TcpStream::connect(h.addr).unwrap();
+        let _ = s.write_all(b"GEMM 48 48 48 1 nat"); // half a request
+        drop(s); // vanish mid-line
+    }
+    let mut cl = server::Client::connect(h.addr).unwrap();
+    assert!(cl.call("GEMM 32 32 32 5 native").unwrap().starts_with("OK"));
+    h.shutdown();
+}
+
+/// A batch containing failing jobs (PJRT shape with no artifact) must
+/// return per-job errors without poisoning the healthy jobs.
+#[test]
+fn failure_injection_in_batches() {
+    let with = artifacts_dir().join("manifest.txt").exists();
+    let (coord, h) = start(with);
+    let rng = Rng::new(3);
+    let mk = |id: u64, r: usize, backend: Backend| Request {
+        id,
+        shape: GemmShape::square(r),
+        a: Arc::new(rng.clone().fill_matrix(r * r)),
+        b: Arc::new(rng.clone().fill_matrix(r * r)),
+        backend,
+    };
+    let reqs = vec![
+        mk(0, 48, Backend::Native(ScheduleSpec::ca_das())),
+        // 48 has no PJRT artifact → error either way (no runtime / no shape).
+        mk(1, 48, Backend::Pjrt { variant: "big".into() }),
+        mk(2, 96, Backend::Native(ScheduleSpec::sss())),
+        mk(3, 48, Backend::Sim(ScheduleSpec::das())),
+    ];
+    let out = coord.execute_batch(reqs);
+    assert!(out[0].is_ok());
+    assert!(out[1].is_err(), "injected failure must surface as Err");
+    assert!(out[2].is_ok());
+    assert!(out[3].is_ok());
+    h.shutdown();
+}
+
+/// Mixed native/sim (and PJRT when available) workload from many
+/// concurrent clients: all succeed, metrics add up.
+#[test]
+fn concurrent_mixed_workload() {
+    let with = artifacts_dir().join("manifest.txt").exists();
+    let (coord, h) = start(with);
+    let addr = h.addr;
+    let mut joins = Vec::new();
+    for t in 0..6u64 {
+        let use_pjrt = with && t % 3 == 0;
+        joins.push(std::thread::spawn(move || {
+            let mut cl = server::Client::connect(addr).unwrap();
+            let mut ok = 0;
+            for i in 0..5u64 {
+                let backend = if use_pjrt { "pjrt:big" } else if i % 2 == 0 { "native" } else { "sim" };
+                let r = if use_pjrt { 64 } else { [32, 48, 64][(i % 3) as usize] };
+                let reply = cl
+                    .call(&format!("GEMM {r} {r} {r} {} {backend}", t * 10 + i))
+                    .unwrap();
+                if reply.starts_with("OK") {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let total_ok: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    assert_eq!(total_ok, 30, "all requests must succeed");
+    assert_eq!(coord.metrics().completed, 30);
+    h.shutdown();
+}
+
+/// PJRT and native backends agree on the same request (checksum path
+/// used by external clients).
+#[test]
+fn cross_backend_checksums_agree_over_the_wire() {
+    if !artifacts_dir().join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let (_c, h) = start(true);
+    let mut cl = server::Client::connect(h.addr).unwrap();
+    let checksum = |reply: &str| -> f64 {
+        reply.split_whitespace().nth(4).unwrap().parse().unwrap()
+    };
+    for r in [64usize, 128, 256] {
+        let native = cl.call(&format!("GEMM {r} {r} {r} 77 native")).unwrap();
+        let pjrt_big = cl.call(&format!("GEMM {r} {r} {r} 77 pjrt:big")).unwrap();
+        let pjrt_little = cl.call(&format!("GEMM {r} {r} {r} 77 pjrt:little")).unwrap();
+        assert!(native.starts_with("OK") && pjrt_big.starts_with("OK"), "{native} / {pjrt_big}");
+        let (cn, cb, cl_) = (checksum(&native), checksum(&pjrt_big), checksum(&pjrt_little));
+        assert!((cn - cb).abs() < 1e-5 * cn.abs().max(1.0), "r={r}: {cn} vs {cb}");
+        assert!((cb - cl_).abs() < 1e-5 * cb.abs().max(1.0), "variants must agree: {cb} vs {cl_}");
+    }
+    h.shutdown();
+}
+
+/// Out-of-range requests are rejected with a reason, in-range accepted
+/// at the boundary.
+#[test]
+fn request_validation_boundaries() {
+    let (_c, h) = start(false);
+    let mut cl = server::Client::connect(h.addr).unwrap();
+    assert!(cl.call("GEMM 4096 1 1 1 sim").unwrap().starts_with("OK"));
+    assert!(cl.call("GEMM 4097 1 1 1 sim").unwrap().starts_with("ERR"));
+    assert!(cl.call("GEMM 1 1 0 1 sim").unwrap().starts_with("ERR"));
+    assert!(cl.call("GEMM -1 1 1 1 sim").unwrap().starts_with("ERR"));
+    assert!(cl.call("GEMM 1 1 1 99999999999999999999 sim").unwrap().starts_with("ERR"));
+    h.shutdown();
+}

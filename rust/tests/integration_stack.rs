@@ -1,0 +1,185 @@
+//! Cross-layer integration: the simulator, the native executor, the
+//! figure harness and the coordinator exercised together.
+
+use amp_gemm::blis::gemm::{gemm_naive, GemmShape};
+use amp_gemm::blis::params::BlisParams;
+use amp_gemm::figures;
+use amp_gemm::model::PerfModel;
+use amp_gemm::native::gemm_parallel;
+use amp_gemm::sched::{CoarseLoop, FineLoop, ScheduleSpec, Strategy};
+use amp_gemm::sim::simulate;
+use amp_gemm::soc::{CoreType, SocSpec};
+use amp_gemm::util::rng::Rng;
+use amp_gemm::util::stats::{gemm_tolerance, max_abs_diff};
+
+/// Every schedule the figures rely on must be *both* simulatable and
+/// natively executable, and the native result must be exact.
+#[test]
+fn every_figure_schedule_runs_on_both_engines() {
+    let soc = SocSpec::exynos5422();
+    let model = PerfModel::exynos();
+    let mut specs: Vec<ScheduleSpec> = vec![ScheduleSpec::sss(), ScheduleSpec::das(), ScheduleSpec::ca_das()];
+    for t in 1..=4 {
+        specs.push(ScheduleSpec::cluster_only(CoreType::Big, t));
+        specs.push(ScheduleSpec::cluster_only(CoreType::Little, t));
+    }
+    for r in 1..=7 {
+        specs.push(ScheduleSpec::sas(r as f64));
+    }
+    for r in [1.0, 3.0, 5.0] {
+        specs.push(ScheduleSpec::ca_sas(r));
+    }
+    for coarse in [CoarseLoop::Loop1, CoarseLoop::Loop3] {
+        for fine in [FineLoop::Loop4, FineLoop::Loop5, FineLoop::Both] {
+            specs.push(ScheduleSpec::new(Strategy::CaSas { ratio: 5.0 }, coarse, fine));
+        }
+    }
+
+    let shape = GemmShape { m: 70, n: 54, k: 38 };
+    let mut rng = Rng::new(0x517AC4);
+    let a = rng.fill_matrix(shape.m * shape.k);
+    let b = rng.fill_matrix(shape.k * shape.n);
+    let mut want = vec![0.0; shape.m * shape.n];
+    gemm_naive(shape, &a, &b, &mut want);
+
+    for spec in specs {
+        // Virtual engine.
+        let st = simulate(&model, &spec, GemmShape::square(1024));
+        assert!(st.gflops > 0.0 && st.time_s > 0.0, "{}", spec.label());
+        assert!(
+            st.gflops < model.soc.aggregate_peak_gflops(),
+            "{} exceeds aggregate peak",
+            spec.label()
+        );
+        // Real engine.
+        let mut c = vec![0.0; shape.m * shape.n];
+        gemm_parallel(&soc, &spec, shape, &a, &b, &mut c);
+        let d = max_abs_diff(&c, &want);
+        assert!(d < gemm_tolerance(shape.k), "{}: diff {d}", spec.label());
+    }
+}
+
+/// The simulated GFLOPS of any 8-core schedule is bounded by the ideal
+/// aggregate; CA-DAS dominates every other 8-core schedule at medium
+/// and large sizes (the paper's bottom line), and stays within reach of
+/// the best static schedule at small sizes, where the mc-granular
+/// dynamic chunks are coarser than a Loop-1 static column split.
+#[test]
+fn ca_das_dominates_at_scale() {
+    let model = PerfModel::exynos();
+    for r in [768usize, 1536, 3072, 6144] {
+        let ideal = figures::ideal_gflops(&model, r);
+        let cadas = simulate(&model, &ScheduleSpec::ca_das(), GemmShape::square(r)).gflops;
+        assert!(cadas <= ideal * 1.001, "r={r}: {cadas} vs ideal {ideal}");
+        for other in [
+            ScheduleSpec::sss(),
+            ScheduleSpec::sas(3.0),
+            ScheduleSpec::sas(5.0),
+            ScheduleSpec::das(),
+            ScheduleSpec::ca_sas(3.0),
+        ] {
+            let g = simulate(&model, &other, GemmShape::square(r)).gflops;
+            if r >= 2048 {
+                assert!(
+                    cadas >= g * 0.98,
+                    "r={r}: CA-DAS {cadas} vs {} {g}",
+                    other.label()
+                );
+            } else {
+                assert!(
+                    cadas >= g * 0.85,
+                    "r={r}: CA-DAS {cadas} too far below {} {g}",
+                    other.label()
+                );
+            }
+        }
+    }
+}
+
+/// Energy conservation: the per-rail energies always sum to the total,
+/// and more imbalance ⇒ more poll energy (SSS vs SAS(5)).
+#[test]
+fn energy_accounting_consistency() {
+    let model = PerfModel::exynos();
+    for spec in [ScheduleSpec::sss(), ScheduleSpec::sas(5.0), ScheduleSpec::ca_das()] {
+        let st = simulate(&model, &spec, GemmShape::square(2048));
+        let sum = st.energy.energy_big_j
+            + st.energy.energy_little_j
+            + st.energy.energy_dram_j
+            + st.energy.energy_gpu_j;
+        assert!((sum - st.energy.energy_j).abs() < 1e-9, "{}", spec.label());
+    }
+    let sss = simulate(&model, &ScheduleSpec::sss(), GemmShape::square(2048));
+    let sas = simulate(&model, &ScheduleSpec::sas(5.0), GemmShape::square(2048));
+    let poll = |st: &amp_gemm::sim::RunStats| -> f64 {
+        st.activity.iter().map(|a| a.poll_s).sum::<f64>() / st.time_s
+    };
+    assert!(poll(&sss) > 2.0 * poll(&sas), "SSS must poll far more");
+}
+
+/// The native executor agrees with the sequential blocked GEMM bit-for-
+/// bit when run single-threaded (same loop order, same summation order).
+#[test]
+fn single_thread_native_is_bitwise_sequential() {
+    use amp_gemm::blis::gemm::{gemm_blocked, Workspace};
+    let soc = SocSpec::exynos5422();
+    let shape = GemmShape { m: 61, n: 47, k: 53 };
+    let mut rng = Rng::new(9);
+    let a = rng.fill_matrix(shape.m * shape.k);
+    let b = rng.fill_matrix(shape.k * shape.n);
+
+    let mut c_seq = vec![0.0; shape.m * shape.n];
+    gemm_blocked(
+        &BlisParams::a15_opt(),
+        shape,
+        &a,
+        &b,
+        &mut c_seq,
+        &mut Workspace::default(),
+    );
+    let mut c_par = vec![0.0; shape.m * shape.n];
+    gemm_parallel(
+        &soc,
+        &ScheduleSpec::cluster_only(CoreType::Big, 1),
+        shape,
+        &a,
+        &b,
+        &mut c_par,
+    );
+    assert_eq!(c_seq, c_par, "single-thread parallel path must be bitwise identical");
+}
+
+/// Quick figure suite: regenerates, passes, and emits parseable CSVs
+/// whose numeric columns round-trip.
+#[test]
+fn figure_csvs_round_trip() {
+    let model = PerfModel::exynos();
+    for fig in figures::run_all(&model, true) {
+        assert!(fig.passed(), "{}", fig.to_markdown());
+        for t in &fig.tables {
+            let csv = t.to_csv();
+            assert!(csv.lines().count() == t.rows.len() + 1);
+            if let Some(col) = t.columns.first() {
+                if col == "r" {
+                    let rs = t.f64_column("r");
+                    assert!(rs.windows(2).all(|w| w[0] < w[1]), "sizes must ascend");
+                }
+            }
+        }
+    }
+}
+
+/// Determinism across the whole stack: same seed ⇒ identical sim stats,
+/// native checksums and figure tables.
+#[test]
+fn whole_stack_determinism() {
+    let model = PerfModel::exynos();
+    let s1 = simulate(&model, &ScheduleSpec::ca_das(), GemmShape::square(1999));
+    let s2 = simulate(&model, &ScheduleSpec::ca_das(), GemmShape::square(1999));
+    assert_eq!(s1.time_s, s2.time_s);
+    assert_eq!(s1.dram_bytes, s2.dram_bytes);
+
+    let f1 = figures::run_figure(9, &model, true).unwrap();
+    let f2 = figures::run_figure(9, &model, true).unwrap();
+    assert_eq!(f1.tables[0].rows, f2.tables[0].rows);
+}
