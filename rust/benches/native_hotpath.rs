@@ -1,4 +1,4 @@
-//! Hot-path benchmarks for the native executor (EXPERIMENTS.md §Perf):
+//! Hot-path benchmarks for the native executor (DESIGN.md §7):
 //! micro-kernel throughput, packing bandwidth, sequential blocked GEMM
 //! and the full parallel executor across schedules.
 
@@ -8,7 +8,7 @@ use amp_gemm::blis::packing::{pack_a, pack_b};
 use amp_gemm::blis::params::BlisParams;
 use amp_gemm::native::gemm_parallel;
 use amp_gemm::sched::ScheduleSpec;
-use amp_gemm::soc::{CoreType, SocSpec};
+use amp_gemm::soc::{SocSpec, BIG};
 use amp_gemm::util::benchkit::Bencher;
 use amp_gemm::util::rng::Rng;
 
@@ -81,7 +81,7 @@ fn main() {
     let bb = rng.fill_matrix(r * r);
     let flops = 2.0 * (r as f64).powi(3);
     for spec in [
-        ScheduleSpec::cluster_only(CoreType::Big, 4),
+        ScheduleSpec::cluster_only(BIG, 4),
         ScheduleSpec::sss(),
         ScheduleSpec::sas(5.0),
         ScheduleSpec::ca_das(),

@@ -1,9 +1,8 @@
 //! Scheduling-machinery micro-benchmarks: partitioners, the dynamic
 //! chunk queue (the §5.4 critical section), control-tree construction
 //! and the coordinator's batch grouping. None of these may show up in
-//! a GEMM profile — this bench keeps them honest (EXPERIMENTS.md §Perf).
+//! a GEMM profile — this bench keeps them honest (DESIGN.md §7).
 
-use amp_gemm::blis::control_tree::{Parallelism, TreeSet};
 use amp_gemm::blis::gemm::GemmShape;
 use amp_gemm::coordinator::{Backend, Coordinator, Request};
 use amp_gemm::partition::{split_ratio, split_symmetric, DynamicQueue};
@@ -42,13 +41,13 @@ fn main() {
         q.remaining()
     });
 
-    b.bench("TreeSet::cache_aware construction", || {
-        TreeSet::cache_aware(
-            Parallelism { loop3_ways: 2, loop4_ways: 4, ..Parallelism::sequential() },
-            Parallelism { loop3_ways: 2, loop4_ways: 4, ..Parallelism::sequential() },
-            true,
-        )
-        .is_cache_aware()
+    let soc = SocSpec::exynos5422();
+    b.bench("cache-aware TreeSet construction (CA-DAS)", || {
+        ScheduleSpec::ca_das().tree_set(&soc).is_cache_aware()
+    });
+    let tri = SocSpec::dynamiq_3c();
+    b.bench("cache-aware TreeSet construction (tri-cluster)", || {
+        ScheduleSpec::ca_das().tree_set(&tri).num_clusters()
     });
 
     // Coordinator batch grouping + dispatch overhead (sim backend: the

@@ -1,12 +1,12 @@
 //! The §3.3 empirical cache-parameter search (Fig. 4), as a runnable
-//! tool: coarse sweep → fine refinement → optima, for both core types,
+//! tool: coarse sweep → fine refinement → optima, for every cluster,
 //! plus the §5.3 shared-kc refit — with a terminal heatmap rendering.
 //!
 //! Run: `cargo run --release --example cache_search`
 
 use amp_gemm::model::PerfModel;
 use amp_gemm::search::{shared_kc_refit, two_phase_search, SearchResult};
-use amp_gemm::soc::CoreType;
+use amp_gemm::soc::{BIG, LITTLE};
 
 /// Coarse ASCII heatmap: rows = mc buckets, cols = kc buckets, shading
 /// by GFLOPS decile (the terminal stand-in for Fig. 4's color plots).
@@ -54,9 +54,9 @@ fn render_heatmap(result: &SearchResult, buckets: usize) {
 
 fn main() {
     let model = PerfModel::exynos();
-    for core in CoreType::ALL {
-        println!("=== {} ===", core.name());
-        let (coarse, fine) = two_phase_search(&model, core);
+    for cluster in model.soc.cluster_ids() {
+        println!("=== {} ===", model.soc[cluster].name);
+        let (coarse, fine) = two_phase_search(&model, cluster);
         render_heatmap(&coarse, 20);
         println!(
             "coarse optimum: (mc, kc) = ({}, {}) @ {:.3} GFLOPS",
@@ -67,15 +67,16 @@ fn main() {
             fine.best.mc,
             fine.best.kc,
             fine.best.gflops,
-            match core {
-                CoreType::Big => "(152, 952)",
-                CoreType::Little => "(80, 352)",
+            match cluster {
+                BIG => "(152, 952)",
+                LITTLE => "(80, 352)",
+                _ => "n/a",
             }
         );
     }
 
     println!("=== §5.3: A7 refit under shared kc = 952 ===");
-    let refit = shared_kc_refit(&model, CoreType::Little, 952);
+    let refit = shared_kc_refit(&model, LITTLE, 952);
     println!(
         "constrained optimum: mc = {} @ {:.3} GFLOPS   [paper: mc = 32]",
         refit.best.mc, refit.best.gflops

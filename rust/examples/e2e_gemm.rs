@@ -14,7 +14,7 @@
 //!      the paper's architecture-aware-vs-oblivious claim.
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_gemm`
-//! Results are recorded in EXPERIMENTS.md.
+//! The experiment index lives in DESIGN.md §6.
 
 use amp_gemm::blis::gemm::{gemm_naive, GemmShape};
 use amp_gemm::coordinator::{server, Coordinator};
@@ -23,7 +23,7 @@ use amp_gemm::model::PerfModel;
 use amp_gemm::native::gemm_parallel;
 use amp_gemm::runtime::worker::PjrtHandle;
 use amp_gemm::sched::ScheduleSpec;
-use amp_gemm::soc::{CoreType, SocSpec};
+use amp_gemm::soc::{SocSpec, BIG};
 use amp_gemm::util::rng::Rng;
 use amp_gemm::util::stats::{gemm_tolerance, max_abs_diff, Summary};
 use std::path::Path;
@@ -156,7 +156,7 @@ fn main() {
     println!("\n== stage 4: headline (paper §5 claims at r = 4096) ==");
     let r = 4096;
     let sss = figures::sim_square(&model, &ScheduleSpec::sss(), r);
-    let a15 = figures::sim_square(&model, &ScheduleSpec::cluster_only(CoreType::Big, 4), r);
+    let a15 = figures::sim_square(&model, &ScheduleSpec::cluster_only(BIG, 4), r);
     let sas5 = figures::sim_square(&model, &ScheduleSpec::sas(5.0), r);
     let cadas = figures::sim_square(&model, &ScheduleSpec::ca_das(), r);
     let ideal = figures::ideal_gflops(&model, r);
@@ -185,7 +185,7 @@ fn main() {
     );
     assert!(cadas.gflops > sas5.gflops * 0.97 && cadas.gflops > sss.gflops * 2.0);
 
-    println!("\ne2e OK in {:.1} s — CSVs in results/, summary in EXPERIMENTS.md", t_start.elapsed().as_secs_f64());
+    println!("\ne2e OK in {:.1} s — CSVs in results/, experiment index in DESIGN.md §6", t_start.elapsed().as_secs_f64());
 }
 
 fn parse_latency_ms(reply: &str) -> f64 {

@@ -10,7 +10,7 @@ use amp_gemm::energy::{PmlibSampler, PowerModel};
 use amp_gemm::model::PerfModel;
 use amp_gemm::sched::ScheduleSpec;
 use amp_gemm::sim::simulate;
-use amp_gemm::soc::CoreType;
+use amp_gemm::soc::{BIG, LITTLE};
 use amp_gemm::util::cli::Args;
 use amp_gemm::util::table::Table;
 
@@ -21,10 +21,10 @@ fn main() {
     let power = PowerModel::exynos();
 
     let specs = [
-        ScheduleSpec::cluster_only(CoreType::Big, 1),
-        ScheduleSpec::cluster_only(CoreType::Big, 3),
-        ScheduleSpec::cluster_only(CoreType::Big, 4),
-        ScheduleSpec::cluster_only(CoreType::Little, 4),
+        ScheduleSpec::cluster_only(BIG, 1),
+        ScheduleSpec::cluster_only(BIG, 3),
+        ScheduleSpec::cluster_only(BIG, 4),
+        ScheduleSpec::cluster_only(LITTLE, 4),
         ScheduleSpec::sss(),
         ScheduleSpec::sas(1.0),
         ScheduleSpec::sas(5.0),
@@ -47,8 +47,8 @@ fn main() {
             format!("{:.3}", st.time_s),
             format!("{:.2}", st.gflops),
             format!("{:.2}", st.energy.energy_j),
-            format!("{:.2}", st.energy.energy_big_j),
-            format!("{:.2}", st.energy.energy_little_j),
+            format!("{:.2}", st.energy.cluster_rail_j(BIG)),
+            format!("{:.2}", st.energy.cluster_rail_j(LITTLE)),
             format!("{:.2}", st.energy.energy_dram_j),
             format!("{:.2}", st.energy.avg_power_w),
             format!("{:.3}", poll_total),
@@ -76,7 +76,7 @@ fn main() {
     for s in samples.iter().take(8) {
         println!(
             "  t={:>6.2}s  total {:>5.2} W  (A15 rail {:>5.2} W, A7 rail {:>5.2} W)",
-            s.t_s, s.total_w, s.big_w, s.little_w
+            s.t_s, s.total_w, s.cluster_w[BIG.0], s.cluster_w[LITTLE.0]
         );
     }
     if samples.len() > 8 {

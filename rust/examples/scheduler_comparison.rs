@@ -8,7 +8,7 @@ use amp_gemm::figures::ideal_gflops;
 use amp_gemm::model::PerfModel;
 use amp_gemm::sched::{CoarseLoop, FineLoop, ScheduleSpec, Strategy};
 use amp_gemm::sim::simulate;
-use amp_gemm::soc::CoreType;
+use amp_gemm::soc::{BIG, LITTLE};
 use amp_gemm::util::cli::Args;
 use amp_gemm::util::table::Table;
 
@@ -18,8 +18,8 @@ fn main() {
     let model = PerfModel::exynos();
 
     let mut specs: Vec<ScheduleSpec> = vec![
-        ScheduleSpec::cluster_only(CoreType::Little, 4),
-        ScheduleSpec::cluster_only(CoreType::Big, 4),
+        ScheduleSpec::cluster_only(LITTLE, 4),
+        ScheduleSpec::cluster_only(BIG, 4),
         ScheduleSpec::sss(),
     ];
     for ratio in [1.0, 3.0, 5.0, 7.0] {

@@ -1,0 +1,121 @@
+//! Topology sweep: the same four schedulers — SSS, SAS, CA-SAS and
+//! CA-DAS — across three different cluster topologies, with zero
+//! per-topology scheduler code:
+//!
+//! * the paper's Samsung Exynos 5422 (two clusters: 4 big + 4 LITTLE),
+//! * a tri-cluster DynamIQ-style SoC (2 big + 3 mid + 4 LITTLE),
+//! * a symmetric 4-core SMP (the degenerate single-cluster case).
+//!
+//! SAS/CA-SAS weight vectors are derived from the performance model
+//! (`PerfModel::sas_weights` / `ca_sas_weights`) — on the Exynos these
+//! land at the paper's ratio ≈ 5; on the tri-cluster they become a
+//! 3-way vector; on the SMP they collapse to `[1]`.
+//!
+//! The Exynos block double-checks the pre-refactor figure anchors
+//! (Fig. 7/9/12), so this example is also the regression gate for the
+//! N-cluster generalization.
+//!
+//! Run: `cargo run --release --example topology_sweep [-- --size 4096]`
+
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::figures::ideal_gflops;
+use amp_gemm::model::PerfModel;
+use amp_gemm::sched::ScheduleSpec;
+use amp_gemm::sim::simulate;
+use amp_gemm::soc::{SocSpec, BIG};
+use amp_gemm::util::cli::Args;
+use amp_gemm::util::table::Table;
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    let r = args.usize_or("size", 4096).expect("--size");
+
+    for soc in [
+        SocSpec::exynos5422(),
+        SocSpec::dynamiq_3c(),
+        SocSpec::symmetric(4),
+    ] {
+        let model = PerfModel::new(soc.clone());
+        let ideal = ideal_gflops(&model, r);
+
+        let specs = vec![
+            ScheduleSpec::sss(),
+            ScheduleSpec::sas_weighted(model.sas_weights()),
+            ScheduleSpec::ca_sas_weighted(model.ca_sas_weights()),
+            ScheduleSpec::ca_das(),
+        ];
+
+        let mut table = Table::new(
+            &format!("{} — r = {r} (ideal {ideal:.2} GFLOPS)", soc.name),
+            &["schedule", "GFLOPS", "% of ideal", "GFLOPS/W", "grabs"],
+        );
+        let mut by_name = Vec::new();
+        for spec in &specs {
+            let st = simulate(&model, spec, GemmShape::square(r));
+            table.push_row(vec![
+                st.label.clone(),
+                format!("{:.2}", st.gflops),
+                format!("{:.0}%", st.gflops / ideal * 100.0),
+                format!("{:.3}", st.gflops_per_watt),
+                st.grabs.to_string(),
+            ]);
+            by_name.push(st);
+        }
+        println!("{}", table.to_markdown());
+
+        // Cross-topology invariants of the paper's story.
+        let (sss, cadas) = (&by_name[0], &by_name[3]);
+        assert!(
+            cadas.gflops <= ideal * 1.001,
+            "CA-DAS cannot beat the ideal aggregate"
+        );
+        if soc.num_clusters() > 1 {
+            assert!(
+                cadas.gflops > 0.85 * ideal,
+                "{}: CA-DAS {:.2} must approach the ideal {ideal:.2}",
+                soc.name,
+                cadas.gflops
+            );
+            assert!(
+                cadas.gflops > 1.5 * sss.gflops,
+                "{}: asymmetry-aware must crush oblivious SSS",
+                soc.name
+            );
+        } else {
+            // Degenerate SMP: everything collapses to plain BLIS.
+            for st in &by_name {
+                assert!(
+                    (st.gflops / sss.gflops - 1.0).abs() < 0.05,
+                    "symmetric SMP: {} must match SSS",
+                    st.label
+                );
+            }
+        }
+
+        // Exynos block: the pre-refactor figure anchors must reproduce.
+        if soc.name.contains("Exynos") {
+            let a15 = simulate(&model, &ScheduleSpec::cluster_only(BIG, 4), GemmShape::square(r));
+            let sas5 = simulate(&model, &ScheduleSpec::sas(5.0), GemmShape::square(r));
+            let frac = sss.gflops / a15.gflops;
+            assert!(
+                (0.32..0.50).contains(&frac),
+                "Fig. 7 anchor: SSS ≈ 40 % of A15-only, got {frac:.2}"
+            );
+            let gain = sas5.gflops / a15.gflops;
+            assert!(
+                (1.10..1.30).contains(&gain),
+                "Fig. 9 anchor: SAS(5) ≈ +20 % over A15-only, got {gain:.2}"
+            );
+            assert!(
+                cadas.gflops > 0.90 * ideal,
+                "Fig. 12 anchor: CA-DAS within 10 % of ideal"
+            );
+            println!(
+                "Exynos anchors hold: SSS/A15x4 = {frac:.2}, SAS(5)/A15x4 = {gain:.2}, \
+                 CA-DAS = {:.0} % of ideal\n",
+                cadas.gflops / ideal * 100.0
+            );
+        }
+    }
+    println!("topology sweep: all invariants hold");
+}

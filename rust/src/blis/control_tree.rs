@@ -15,7 +15,7 @@
 //! must sit exactly where Fig. 1 puts it).
 
 use crate::blis::params::BlisParams;
-use crate::soc::CoreType;
+use crate::soc::ClusterId;
 
 /// The five loops of the BLIS GEMM (Fig. 1), outermost first.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -231,51 +231,59 @@ impl ControlTree {
     }
 }
 
-/// The pair of control trees bound to thread types (§5.3): the paper's
-/// "two different control-trees ... for fast and slow threads".
+/// The control trees bound to clusters (§5.3, generalized): the paper's
+/// "two different control-trees ... for fast and slow threads" becomes
+/// one tree per cluster, indexed by [`ClusterId`]. A cache-oblivious
+/// configuration simply holds N identical trees.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TreeSet {
-    pub big: ControlTree,
-    pub little: ControlTree,
+    /// One control tree per cluster, indexed by `ClusterId`.
+    pub trees: Vec<ControlTree>,
 }
 
 impl TreeSet {
-    /// Architecture-oblivious: one configuration for every thread
-    /// (the original BLIS behaviour, §4 / plain SAS §5.2).
-    pub fn single(params: BlisParams, par: Parallelism) -> Self {
+    /// Architecture-oblivious: one configuration replicated to every
+    /// cluster (the original BLIS behaviour, §4 / plain SAS §5.2).
+    pub fn single(params: BlisParams, par: Parallelism, num_clusters: usize) -> Self {
+        assert!(num_clusters >= 1);
         TreeSet {
-            big: ControlTree::gemm(params, par),
-            little: ControlTree::gemm(params, par),
+            trees: vec![ControlTree::gemm(params, par); num_clusters],
         }
     }
 
-    /// Cache-aware: per-cluster parameters (CA-SAS §5.3 / CA-DAS §5.4).
-    /// `shared_bc` = the coarse loop is Loop 3, so `Bc` (hence `kc`) is
-    /// shared and the LITTLE tree must use the common-kc refit.
-    pub fn cache_aware(par_big: Parallelism, par_little: Parallelism, shared_bc: bool) -> Self {
-        let big = ControlTree::gemm(BlisParams::cache_aware_for(CoreType::Big, shared_bc), par_big);
-        let little = ControlTree::gemm(
-            BlisParams::cache_aware_for(CoreType::Little, shared_bc),
-            par_little,
-        );
+    /// Cache-aware: one pre-built tree per cluster (CA-SAS §5.3 /
+    /// CA-DAS §5.4). `shared_bc` = the coarse loop is Loop 3, so the
+    /// `Bc = kc×nc` buffer is shared and every tree must agree on both
+    /// `kc` and `nc` — otherwise the clusters' joint (jc, pc) walks
+    /// would desynchronize.
+    pub fn from_trees(trees: Vec<ControlTree>, shared_bc: bool) -> Self {
+        assert!(!trees.is_empty());
         if shared_bc {
-            assert_eq!(
-                big.params.kc, little.params.kc,
+            let kc = trees[0].params.kc;
+            assert!(
+                trees.iter().all(|t| t.params.kc == kc),
                 "shared Bc requires a common kc across trees (§5.3)"
             );
+            let nc = trees[0].params.nc;
+            assert!(
+                trees.iter().all(|t| t.params.nc == nc),
+                "shared Bc requires a common nc across trees (§5.3)"
+            );
         }
-        TreeSet { big, little }
+        TreeSet { trees }
     }
 
-    pub fn for_core(&self, t: CoreType) -> &ControlTree {
-        match t {
-            CoreType::Big => &self.big,
-            CoreType::Little => &self.little,
-        }
+    pub fn for_cluster(&self, c: ClusterId) -> &ControlTree {
+        &self.trees[c.0]
     }
 
+    pub fn num_clusters(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// True when at least two clusters run different blocking parameters.
     pub fn is_cache_aware(&self) -> bool {
-        self.big.params != self.little.params
+        self.trees.iter().any(|t| t.params != self.trees[0].params)
     }
 }
 
@@ -337,35 +345,59 @@ mod tests {
     }
 
     #[test]
-    fn cache_aware_treeset_loop1_coarse() {
+    fn cache_aware_treeset_from_per_cluster_trees() {
         // Independent buffers: each cluster its own optimum.
-        let s = TreeSet::cache_aware(
-            Parallelism { loop1_ways: 2, loop4_ways: 4, ..Parallelism::sequential() },
-            Parallelism { loop1_ways: 2, loop4_ways: 4, ..Parallelism::sequential() },
+        let par = Parallelism { loop1_ways: 2, loop4_ways: 4, ..Parallelism::sequential() };
+        let s = TreeSet::from_trees(
+            vec![
+                ControlTree::gemm(BlisParams::a15_opt(), par),
+                ControlTree::gemm(BlisParams::a7_opt(), par),
+            ],
             false,
         );
-        assert_eq!(s.big.params, BlisParams::a15_opt());
-        assert_eq!(s.little.params, BlisParams::a7_opt());
+        assert_eq!(s.for_cluster(ClusterId(0)).params, BlisParams::a15_opt());
+        assert_eq!(s.for_cluster(ClusterId(1)).params, BlisParams::a7_opt());
         assert!(s.is_cache_aware());
+        assert_eq!(s.num_clusters(), 2);
     }
 
     #[test]
-    fn cache_aware_treeset_loop3_coarse_shares_kc() {
+    fn shared_bc_treeset_requires_common_kc() {
         // Shared Bc: common kc = 952, LITTLE refits mc = 32 (§5.3).
-        let s = TreeSet::cache_aware(
-            Parallelism { loop3_ways: 2, loop4_ways: 4, ..Parallelism::sequential() },
-            Parallelism { loop3_ways: 2, loop4_ways: 4, ..Parallelism::sequential() },
+        let par = Parallelism { loop3_ways: 2, loop4_ways: 4, ..Parallelism::sequential() };
+        let s = TreeSet::from_trees(
+            vec![
+                ControlTree::gemm(BlisParams::a15_opt(), par),
+                ControlTree::gemm(BlisParams::a7_shared_kc(), par),
+            ],
             true,
         );
-        assert_eq!(s.little.params, BlisParams::a7_shared_kc());
-        assert_eq!(s.big.params.kc, s.little.params.kc);
+        assert_eq!(s.for_cluster(ClusterId(1)).params, BlisParams::a7_shared_kc());
+        assert_eq!(
+            s.for_cluster(ClusterId(0)).params.kc,
+            s.for_cluster(ClusterId(1)).params.kc
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "common kc")]
+    fn shared_bc_with_mismatched_kc_rejected() {
+        let par = Parallelism::sequential();
+        TreeSet::from_trees(
+            vec![
+                ControlTree::gemm(BlisParams::a15_opt(), par),
+                ControlTree::gemm(BlisParams::a7_opt(), par),
+            ],
+            true,
+        );
     }
 
     #[test]
     fn single_treeset_is_oblivious() {
-        let s = TreeSet::single(BlisParams::a15_opt(), Parallelism::sequential());
+        let s = TreeSet::single(BlisParams::a15_opt(), Parallelism::sequential(), 3);
         assert!(!s.is_cache_aware());
-        assert_eq!(s.for_core(CoreType::Little).params, BlisParams::a15_opt());
+        assert_eq!(s.num_clusters(), 3);
+        assert_eq!(s.for_cluster(ClusterId(2)).params, BlisParams::a15_opt());
     }
 
     #[test]

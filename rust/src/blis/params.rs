@@ -4,8 +4,11 @@
 //! strides of the five-loop GEMM (Fig. 1) that place `Br (kc×nr)` in L1
 //! and `Ac (mc×kc)` in L2. The presets are the paper's empirically
 //! determined optima (§3.3, Fig. 4) and the shared-`kc` refit of §5.3.
-
-use crate::soc::CoreType;
+//!
+//! This module is topology-agnostic: *which* parameters a cluster runs
+//! is data carried by `soc::ClusterSpec` (its `tuned` field), and the
+//! shared-`Bc` refit is a pure function of the pinned `kc` and the
+//! cluster's L2 size ([`BlisParams::shared_kc_refit`]).
 
 /// One control-tree's worth of blocking parameters.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -54,24 +57,20 @@ impl BlisParams {
         BlisParams::new(4096, 952, 32, 4, 4)
     }
 
-    /// The architecture's tuned optimum by core type.
-    pub fn optimal_for(core: CoreType) -> Self {
-        match core {
-            CoreType::Big => BlisParams::a15_opt(),
-            CoreType::Little => BlisParams::a7_opt(),
+    /// Refit for a *shared-`Bc`* configuration (§5.3): `kc` is pinned to
+    /// the common value (the lead cluster's), and `mc` shrinks so the
+    /// `Ac = mc×kc` macro-panel occupies at most half the given L2 —
+    /// leaving the other half for the `Bc` stream and C traffic. If the
+    /// pinned `kc` already equals this configuration's own `kc`, no
+    /// refit is needed. For the Exynos LITTLE cluster (512 KiB L2,
+    /// kc = 952) this lands exactly on the paper's mc = 32.
+    pub fn shared_kc_refit(&self, kc: usize, l2_bytes: usize) -> BlisParams {
+        if kc == self.kc {
+            return *self;
         }
-    }
-
-    /// Parameters used by a *cache-aware* configuration for `core`, given
-    /// the coarse-grain loop choice: parallelizing Loop 3 across clusters
-    /// shares `Bc`, forcing the common-`kc` variant on the LITTLE cores
-    /// (§5.3/§5.4); parallelizing Loop 1 keeps independent buffers.
-    pub fn cache_aware_for(core: CoreType, shared_bc: bool) -> Self {
-        match (core, shared_bc) {
-            (CoreType::Big, _) => BlisParams::a15_opt(),
-            (CoreType::Little, false) => BlisParams::a7_opt(),
-            (CoreType::Little, true) => BlisParams::a7_shared_kc(),
-        }
+        let budget = l2_bytes / 2;
+        let mc = ((budget / (kc * 8)) / self.mr * self.mr).max(self.mr);
+        BlisParams::new(self.nc, kc, mc, self.nr, self.mr)
     }
 
     pub fn validate(&self) {
@@ -136,14 +135,25 @@ mod tests {
     }
 
     #[test]
-    fn cache_aware_selection() {
-        use CoreType::*;
-        assert_eq!(BlisParams::cache_aware_for(Big, true), BlisParams::a15_opt());
-        assert_eq!(BlisParams::cache_aware_for(Little, false), BlisParams::a7_opt());
-        assert_eq!(
-            BlisParams::cache_aware_for(Little, true),
-            BlisParams::a7_shared_kc()
-        );
+    fn shared_kc_refit_reproduces_paper_values() {
+        // §5.3: A7 optimum refit at the shared kc = 952 on a 512 KiB L2
+        // must reproduce the paper's mc = 32 exactly.
+        let refit = BlisParams::a7_opt().shared_kc_refit(952, 512 * 1024);
+        assert_eq!(refit, BlisParams::a7_shared_kc());
+        // Same kc → identity (the lead cluster keeps its own optimum).
+        let same = BlisParams::a15_opt().shared_kc_refit(952, 2 * 1024 * 1024);
+        assert_eq!(same, BlisParams::a15_opt());
+    }
+
+    #[test]
+    fn shared_kc_refit_scales_with_l2() {
+        // A 1 MiB L2 admits roughly twice the refit mc of a 512 KiB L2.
+        let small = BlisParams::a7_opt().shared_kc_refit(952, 512 * 1024);
+        let large = BlisParams::a7_opt().shared_kc_refit(952, 1024 * 1024);
+        assert!(large.mc >= 2 * small.mc - 4);
+        // Never below one register block, even for tiny caches.
+        let tiny = BlisParams::a7_opt().shared_kc_refit(952, 16 * 1024);
+        assert_eq!(tiny.mc, tiny.mr);
     }
 
     #[test]
@@ -156,11 +166,5 @@ mod tests {
     #[should_panic(expected = "mc")]
     fn mc_smaller_than_mr_rejected() {
         BlisParams::new(4096, 100, 2, 4, 4);
-    }
-
-    #[test]
-    fn optimal_for_maps_core_types() {
-        assert_eq!(BlisParams::optimal_for(CoreType::Big), BlisParams::a15_opt());
-        assert_eq!(BlisParams::optimal_for(CoreType::Little), BlisParams::a7_opt());
     }
 }

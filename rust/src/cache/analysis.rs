@@ -14,9 +14,11 @@
 //! refit mc ≈ 32):
 //!
 //! * A15: Br(952×4×8) = 30.4 KiB ≈ 0.93 × 32 KiB L1 → `L1_FILL = 0.95`;
-//!   Ac(152×952×8) = 1.158 MiB ≈ 0.552 × 2 MiB L2 → `L2_FILL_BIG`.
-//! * A7: Ac(80×352×8) = 225 KiB ≈ 0.43 × 512 KiB L2 → `L2_FILL_LITTLE`
-//!   (the in-order A7 needs more L2 headroom for the Bc stream).
+//!   Ac(152×952×8) = 1.158 MiB ≈ 0.552 × 2 MiB L2 → the A15 cluster's
+//!   `tuning.l2_fill`.
+//! * A7: Ac(80×352×8) = 225 KiB ≈ 0.43 × 512 KiB L2 → the A7 cluster's
+//!   `tuning.l2_fill` (the in-order A7 needs more L2 headroom for the
+//!   Bc stream).
 //!
 //! Overflow penalties are "soft floors": once a panel no longer fits,
 //! the micro-kernel degrades towards a bandwidth-bound floor rather than
@@ -25,13 +27,10 @@
 //! optimum ratio of 5–6 in Fig. 9 *is* that penalty, see DESIGN.md §5).
 
 use crate::blis::params::BlisParams;
-use crate::soc::{ClusterSpec, CoreType};
+use crate::soc::ClusterSpec;
 
 /// Fraction of L1d usable by the resident `Br` micro-panel.
 pub const L1_FILL: f64 = 0.95;
-/// Fraction of L2 usable by the resident `Ac` macro-panel, per core type.
-pub const L2_FILL_BIG: f64 = 0.5525;
-pub const L2_FILL_LITTLE: f64 = 0.4297;
 
 /// Penalty floors/slopes (dimensionless). See module docs.
 const L1_OVERFLOW_FLOOR: f64 = 0.60;
@@ -91,27 +90,27 @@ fn soft_floor_penalty(pressure: f64, floor: f64, slope: f64) -> f64 {
 }
 
 /// Analytical footprint model bound to one cluster's cache geometry.
+/// The `Ac` fill fraction comes from the cluster's own tuning (the
+/// in-order A7 needs more L2 headroom for the `Bc` stream than the
+/// out-of-order A15), so any N-cluster topology carries its own budget.
 #[derive(Debug, Clone)]
 pub struct FootprintAnalysis {
-    core_type: CoreType,
     l1_bytes: usize,
     l2_bytes: usize,
+    l2_fill: f64,
 }
 
 impl FootprintAnalysis {
     pub fn for_cluster(cluster: &ClusterSpec) -> Self {
         FootprintAnalysis {
-            core_type: cluster.core.core_type,
             l1_bytes: cluster.core.l1d.size_bytes,
             l2_bytes: cluster.l2.size_bytes,
+            l2_fill: cluster.tuning.l2_fill,
         }
     }
 
     pub fn l2_fill(&self) -> f64 {
-        match self.core_type {
-            CoreType::Big => L2_FILL_BIG,
-            CoreType::Little => L2_FILL_LITTLE,
-        }
+        self.l2_fill
     }
 
     /// L1 budget in bytes for the resident Br micro-panel.
@@ -170,13 +169,13 @@ impl FootprintAnalysis {
 mod tests {
     use super::*;
     use crate::blis::params::BlisParams;
-    use crate::soc::SocSpec;
+    use crate::soc::{SocSpec, BIG, LITTLE};
 
     fn big() -> FootprintAnalysis {
-        FootprintAnalysis::for_cluster(&SocSpec::exynos5422().big)
+        FootprintAnalysis::for_cluster(&SocSpec::exynos5422()[BIG])
     }
     fn little() -> FootprintAnalysis {
-        FootprintAnalysis::for_cluster(&SocSpec::exynos5422().little)
+        FootprintAnalysis::for_cluster(&SocSpec::exynos5422()[LITTLE])
     }
 
     #[test]

@@ -176,7 +176,7 @@ mod tests {
     #[test]
     fn cluster_constructor_uses_soc_geometry() {
         let soc = SocSpec::exynos5422();
-        let h = Hierarchy::for_cluster(&soc.big, 1);
+        let h = Hierarchy::for_cluster(&soc[crate::soc::BIG], 1);
         assert_eq!(h.l1.geometry().size_bytes, 32 * 1024);
         assert_eq!(h.l2.geometry().size_bytes, 2 * 1024 * 1024);
     }
@@ -184,9 +184,9 @@ mod tests {
     #[test]
     fn shared_l2_partition_shrinks_with_sharers() {
         let soc = SocSpec::exynos5422();
-        let h4 = Hierarchy::for_cluster(&soc.big, 4);
+        let h4 = Hierarchy::for_cluster(&soc[crate::soc::BIG], 4);
         assert_eq!(h4.l2.geometry().size_bytes, 512 * 1024);
-        let h1 = Hierarchy::for_cluster(&soc.little, 1);
+        let h1 = Hierarchy::for_cluster(&soc[crate::soc::LITTLE], 1);
         assert_eq!(h1.l2.geometry().size_bytes, 512 * 1024);
     }
 

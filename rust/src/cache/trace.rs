@@ -103,11 +103,11 @@ pub fn residency_probe(h: &mut Hierarchy, p: &BlisParams, nc_eff: usize, mc_eff:
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::soc::SocSpec;
+    use crate::soc::{SocSpec, BIG, LITTLE};
 
     /// A7-geometry hierarchy (1 sharer).
     fn little_h() -> Hierarchy {
-        Hierarchy::for_cluster(&SocSpec::exynos5422().little, 1)
+        Hierarchy::for_cluster(&SocSpec::exynos5422()[LITTLE], 1)
     }
 
     #[test]
@@ -143,7 +143,7 @@ mod tests {
 
     #[test]
     fn a15_params_fit_a15_l2() {
-        let mut h = Hierarchy::for_cluster(&SocSpec::exynos5422().big, 1);
+        let mut h = Hierarchy::for_cluster(&SocSpec::exynos5422()[BIG], 1);
         let p = BlisParams::a15_opt();
         let probe = residency_probe(&mut h, &p, 64, p.mc);
         assert!(
@@ -171,7 +171,7 @@ mod tests {
         // Within one jr column the working set is Ac (1.16 MiB) + one Br
         // (30 KiB): both fit the A15 L2, so a warm re-sweep must be
         // served from the hierarchy without DRAM traffic.
-        let mut h = Hierarchy::for_cluster(&SocSpec::exynos5422().big, 1);
+        let mut h = Hierarchy::for_cluster(&SocSpec::exynos5422()[BIG], 1);
         let p = BlisParams::a15_opt();
         h.flush();
         macro_kernel_trace(&mut h, &p, p.nr, p.mc); // single jr column

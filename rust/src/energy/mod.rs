@@ -4,18 +4,20 @@
 //! (A15 cluster, A7 cluster, DRAM, GPU) sampled every 250 ms, and reports
 //! whole-SoC GFLOPS/W — including the power of the *idle* complementary
 //! cluster (§3.4). We reproduce that accounting over the simulator's
-//! virtual timelines:
+//! virtual timelines, generalized to one sensor rail per cluster of the
+//! topology:
 //!
 //! `P(t) = P_gpu_idle + P_dram_idle + Σ_cluster P_cluster_idle
 //!        + Σ_core increment(state_core(t)) + DRAM dynamic`
 //!
 //! Core states: `Busy` (computing or packing), `Poll` (spin-waiting at a
-//! barrier or for the complementary cluster — the §5.2.2 energy drain of
-//! unbalanced schedules), `Idle`. Constants live in
+//! barrier or for another cluster — the §5.2.2 energy drain of
+//! unbalanced schedules), `Idle`. Per-cluster rails come from each
+//! cluster's `soc::ClusterTuning`; SoC-level constants live in
 //! [`crate::model::calibration`] with paper-anchored tests.
 
 use crate::model::calibration as cal;
-use crate::soc::{CoreType, SocSpec};
+use crate::soc::{ClusterId, SocSpec};
 
 /// What a core is doing during a timeline segment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -37,9 +39,9 @@ pub struct CoreActivity {
 pub struct EnergyReport {
     pub duration_s: f64,
     pub energy_j: f64,
-    /// Sensor-style breakdown (matches pmlib's four rails).
-    pub energy_big_j: f64,
-    pub energy_little_j: f64,
+    /// Sensor-style per-cluster rails, indexed by [`ClusterId`]
+    /// (pmlib's A15/A7 sensors, generalized to N clusters).
+    pub energy_clusters_j: Vec<f64>,
     pub energy_dram_j: f64,
     pub energy_gpu_j: f64,
     pub avg_power_w: f64,
@@ -50,6 +52,11 @@ impl EnergyReport {
     pub fn gflops_per_watt(&self, flops: f64) -> f64 {
         assert!(self.energy_j > 0.0);
         flops / self.energy_j / 1e9
+    }
+
+    /// One cluster's sensor rail.
+    pub fn cluster_rail_j(&self, c: ClusterId) -> f64 {
+        self.energy_clusters_j[c.0]
     }
 }
 
@@ -70,19 +77,23 @@ impl PowerModel {
 
     /// Instantaneous increment a single core adds above its cluster
     /// baseline in the given state.
-    pub fn core_increment_w(&self, core: CoreType, state: CoreState) -> f64 {
+    pub fn core_increment_w(&self, c: ClusterId, state: CoreState) -> f64 {
+        let tuning = &self.soc[c].tuning;
         match state {
-            CoreState::Busy => cal::p_core_active(core),
-            CoreState::Poll => cal::p_core_poll(core),
+            CoreState::Busy => tuning.p_core_active_w,
+            CoreState::Poll => tuning.p_core_poll_w(cal::POLL_FACTOR),
             CoreState::Idle => 0.0,
         }
     }
 
-    /// Constant baseline power of the whole SoC (both cluster idle
-    /// rails + DRAM idle + GPU idle) — drawn for the entire run.
+    /// Constant baseline power of the whole SoC (every cluster's idle
+    /// rail + DRAM idle + GPU idle) — drawn for the entire run.
     pub fn baseline_w(&self) -> f64 {
-        cal::p_cluster_idle(CoreType::Big)
-            + cal::p_cluster_idle(CoreType::Little)
+        self.soc
+            .clusters
+            .iter()
+            .map(|c| c.tuning.p_cluster_idle_w)
+            .sum::<f64>()
             + cal::P_DRAM_IDLE
             + cal::P_GPU_IDLE
     }
@@ -107,25 +118,24 @@ impl PowerModel {
             );
         }
 
-        let mut big = cal::p_cluster_idle(CoreType::Big) * duration_s;
-        let mut little = cal::p_cluster_idle(CoreType::Little) * duration_s;
+        let mut clusters: Vec<f64> = self
+            .soc
+            .clusters
+            .iter()
+            .map(|c| c.tuning.p_cluster_idle_w * duration_s)
+            .collect();
         for (id, a) in activity.iter().enumerate() {
-            let t = self.soc.core_type_of(id);
-            let e = self.core_increment_w(t, CoreState::Busy) * a.busy_s
-                + self.core_increment_w(t, CoreState::Poll) * a.poll_s;
-            match t {
-                CoreType::Big => big += e,
-                CoreType::Little => little += e,
-            }
+            let c = self.soc.cluster_of_core(id);
+            clusters[c.0] += self.core_increment_w(c, CoreState::Busy) * a.busy_s
+                + self.core_increment_w(c, CoreState::Poll) * a.poll_s;
         }
         let dram = cal::P_DRAM_IDLE * duration_s + dram_bytes * cal::DRAM_NJ_PER_BYTE * 1e-9;
         let gpu = cal::P_GPU_IDLE * duration_s;
-        let energy = big + little + dram + gpu;
+        let energy = clusters.iter().sum::<f64>() + dram + gpu;
         EnergyReport {
             duration_s,
             energy_j: energy,
-            energy_big_j: big,
-            energy_little_j: little,
+            energy_clusters_j: clusters,
             energy_dram_j: dram,
             energy_gpu_j: gpu,
             avg_power_w: if duration_s > 0.0 { energy / duration_s } else { 0.0 },
@@ -149,13 +159,13 @@ impl Default for PmlibSampler {
     }
 }
 
-/// One sampled power reading (whole SoC plus per-rail).
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// One sampled power reading (whole SoC plus per-cluster rails).
+#[derive(Debug, Clone, PartialEq)]
 pub struct PowerSample {
     pub t_s: f64,
     pub total_w: f64,
-    pub big_w: f64,
-    pub little_w: f64,
+    /// Per-cluster rail readings, indexed by [`ClusterId`].
+    pub cluster_w: Vec<f64>,
 }
 
 impl PmlibSampler {
@@ -173,27 +183,26 @@ impl PmlibSampler {
         if duration_s <= 0.0 {
             return samples;
         }
-        let mut big_w = cal::p_cluster_idle(CoreType::Big);
-        let mut little_w = cal::p_cluster_idle(CoreType::Little);
+        let mut cluster_w: Vec<f64> = model
+            .soc
+            .clusters
+            .iter()
+            .map(|c| c.tuning.p_cluster_idle_w)
+            .collect();
         for (id, a) in activity.iter().enumerate() {
-            let t = model.soc.core_type_of(id);
+            let c = model.soc.cluster_of_core(id);
             let duty_busy = (a.busy_s / duration_s).min(1.0);
             let duty_poll = (a.poll_s / duration_s).min(1.0);
-            let w = model.core_increment_w(t, CoreState::Busy) * duty_busy
-                + model.core_increment_w(t, CoreState::Poll) * duty_poll;
-            match t {
-                CoreType::Big => big_w += w,
-                CoreType::Little => little_w += w,
-            }
+            cluster_w[c.0] += model.core_increment_w(c, CoreState::Busy) * duty_busy
+                + model.core_increment_w(c, CoreState::Poll) * duty_poll;
         }
-        let total = big_w + little_w + cal::P_DRAM_IDLE + cal::P_GPU_IDLE;
+        let total = cluster_w.iter().sum::<f64>() + cal::P_DRAM_IDLE + cal::P_GPU_IDLE;
         let mut t = 0.0;
         while t < duration_s {
             samples.push(PowerSample {
                 t_s: t,
                 total_w: total,
-                big_w,
-                little_w,
+                cluster_w: cluster_w.clone(),
             });
             t += self.period_s;
         }
@@ -204,6 +213,7 @@ impl PmlibSampler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::soc::{BIG, LITTLE};
 
     fn full_busy(soc: &SocSpec, ids: std::ops::Range<usize>, dur: f64) -> Vec<CoreActivity> {
         let mut v = vec![CoreActivity::default(); soc.total_cores()];
@@ -305,6 +315,7 @@ mod tests {
         assert_eq!(samples.len(), 4, "250 ms sampling of a 1 s run");
         let avg = samples.iter().map(|s| s.total_w).sum::<f64>() / samples.len() as f64;
         assert!((avg - rep.avg_power_w).abs() < 1e-6);
+        assert_eq!(samples[0].cluster_w.len(), 2);
     }
 
     #[test]
@@ -313,8 +324,9 @@ mod tests {
         let soc = pm.soc.clone();
         let act = full_busy(&soc, 0..8, 1.0);
         let rep = pm.integrate(1.0, &act, 1e8);
-        let sum = rep.energy_big_j + rep.energy_little_j + rep.energy_dram_j + rep.energy_gpu_j;
+        let sum = rep.energy_clusters_j.iter().sum::<f64>() + rep.energy_dram_j + rep.energy_gpu_j;
         assert!((sum - rep.energy_j).abs() < 1e-9);
+        assert!(rep.cluster_rail_j(BIG) > rep.cluster_rail_j(LITTLE));
     }
 
     #[test]
@@ -325,5 +337,16 @@ mod tests {
         // flops / (energy · 1e9): 1e9 flops over baseline_w J.
         let expect = 1.0 / pm.baseline_w();
         assert!((rep.gflops_per_watt(1e9) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tri_cluster_has_three_rails() {
+        let pm = PowerModel::new(SocSpec::dynamiq_3c());
+        let soc = pm.soc.clone();
+        let act = full_busy(&soc, 0..soc.total_cores(), 1.0);
+        let rep = pm.integrate(1.0, &act, 0.0);
+        assert_eq!(rep.energy_clusters_j.len(), 3);
+        let sum = rep.energy_clusters_j.iter().sum::<f64>() + rep.energy_dram_j + rep.energy_gpu_j;
+        assert!((sum - rep.energy_j).abs() < 1e-9);
     }
 }

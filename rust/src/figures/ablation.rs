@@ -19,7 +19,7 @@ use crate::figures::{Assertion, FigureResult};
 use crate::model::PerfModel;
 use crate::sched::ScheduleSpec;
 use crate::sim::simulate;
-use crate::soc::{CoreType, SocSpec};
+use crate::soc::{SocSpec, BIG, LITTLE};
 use crate::util::table::Table;
 
 pub fn run(_quick: bool) -> FigureResult {
@@ -34,8 +34,8 @@ pub fn run(_quick: bool) -> FigureResult {
     );
     for (nb, nl) in [(2usize, 4usize), (4, 4), (2, 6), (6, 2)] {
         let model = PerfModel::new(SocSpec::custom_counts(nb, nl));
-        let ideal = simulate(&model, &ScheduleSpec::cluster_only(CoreType::Big, nb), GemmShape::square(r)).gflops
-            + simulate(&model, &ScheduleSpec::cluster_only(CoreType::Little, nl), GemmShape::square(r)).gflops;
+        let ideal = simulate(&model, &ScheduleSpec::cluster_only(BIG, nb), GemmShape::square(r)).gflops
+            + simulate(&model, &ScheduleSpec::cluster_only(LITTLE, nl), GemmShape::square(r)).gflops;
         let cadas = simulate(&model, &ScheduleSpec::ca_das(), GemmShape::square(r)).gflops;
         let (mut best_ratio, mut best_g) = (1, 0.0);
         for ratio in 1..=12 {
@@ -79,8 +79,8 @@ pub fn run(_quick: bool) -> FigureResult {
                 best_ratio = ratio;
             }
         }
-        let ideal = simulate(&model, &ScheduleSpec::cluster_only(CoreType::Big, 4), GemmShape::square(r)).gflops
-            + simulate(&model, &ScheduleSpec::cluster_only(CoreType::Little, 4), GemmShape::square(r)).gflops;
+        let ideal = simulate(&model, &ScheduleSpec::cluster_only(BIG, 4), GemmShape::square(r)).gflops
+            + simulate(&model, &ScheduleSpec::cluster_only(LITTLE, 4), GemmShape::square(r)).gflops;
         let cadas = simulate(&model, &ScheduleSpec::ca_das(), GemmShape::square(r)).gflops;
         t2.push_row(vec![
             format!("{fb}/{fl}"),
@@ -108,13 +108,13 @@ pub fn run(_quick: bool) -> FigureResult {
         "Ablation: ARMv8 Juno r0 (2×A57 + 4×A53, r = 4096)",
         &["schedule", "GFLOPS", "GFLOPS/W"],
     );
-    let j_ideal = simulate(&juno, &ScheduleSpec::cluster_only(CoreType::Big, 2), GemmShape::square(r)).gflops
-        + simulate(&juno, &ScheduleSpec::cluster_only(CoreType::Little, 4), GemmShape::square(r)).gflops;
+    let j_ideal = simulate(&juno, &ScheduleSpec::cluster_only(BIG, 2), GemmShape::square(r)).gflops
+        + simulate(&juno, &ScheduleSpec::cluster_only(LITTLE, 4), GemmShape::square(r)).gflops;
     let mut j_cadas = 0.0;
     let mut j_sss = 0.0;
     for spec in [
-        ScheduleSpec::cluster_only(CoreType::Big, 2),
-        ScheduleSpec::cluster_only(CoreType::Little, 4),
+        ScheduleSpec::cluster_only(BIG, 2),
+        ScheduleSpec::cluster_only(LITTLE, 4),
         ScheduleSpec::sss(),
         ScheduleSpec::sas(3.0),
         ScheduleSpec::ca_das(),
@@ -145,11 +145,11 @@ pub fn run(_quick: bool) -> FigureResult {
         "Ablation: per-core-type micro-kernels (modelled single core)",
         &["core", "4x4 GFLOPS", "8x4 GFLOPS", "delta"],
     );
-    let b44 = model.steady_rate_gflops(CoreType::Big, &BlisParams::a15_opt(), 1);
-    let b84 = model.steady_rate_gflops(CoreType::Big, &BlisParams::a15_opt_8x4(), 1);
-    let l44 = model.steady_rate_gflops(CoreType::Little, &BlisParams::a7_opt(), 1);
+    let b44 = model.steady_rate_gflops(BIG, &BlisParams::a15_opt(), 1);
+    let b84 = model.steady_rate_gflops(BIG, &BlisParams::a15_opt_8x4(), 1);
+    let l44 = model.steady_rate_gflops(LITTLE, &BlisParams::a7_opt(), 1);
     let a7_84 = BlisParams::new(4096, 352, 80, 4, 8);
-    let l84 = model.steady_rate_gflops(CoreType::Little, &a7_84, 1);
+    let l84 = model.steady_rate_gflops(LITTLE, &a7_84, 1);
     t4.push_row(vec![
         "Cortex-A15".into(),
         format!("{b44:.3}"),

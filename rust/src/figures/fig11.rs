@@ -6,7 +6,7 @@
 
 use crate::figures::{ideal_gflops, sim_square, sizes, Assertion, FigureResult};
 use crate::model::PerfModel;
-use crate::sched::{CoarseLoop, FineLoop, ScheduleSpec, Strategy};
+use crate::sched::{CoarseLoop, FineLoop, ScheduleSpec, Strategy, Weights};
 use crate::util::table::Table;
 
 pub fn run(model: &PerfModel, quick: bool) -> FigureResult {
@@ -30,7 +30,11 @@ pub fn run(model: &PerfModel, quick: bool) -> FigureResult {
         let mut prow = vec![r as f64];
         let mut erow = vec![r as f64];
         for (i, &(coarse, fine)) in combos.iter().enumerate() {
-            let spec = ScheduleSpec::new(Strategy::CaSas { ratio: 5.0 }, coarse, fine);
+            let spec = ScheduleSpec::new(
+                Strategy::CaSas { weights: Weights::ratio(5.0) },
+                coarse,
+                fine,
+            );
             let st = sim_square(model, &spec, r);
             prow.push(st.gflops);
             erow.push(st.gflops_per_watt);

@@ -5,14 +5,14 @@
 use crate::figures::{Assertion, FigureResult};
 use crate::model::PerfModel;
 use crate::search::{shared_kc_refit, two_phase_search};
-use crate::soc::CoreType;
+use crate::soc::{BIG, LITTLE};
 
 pub fn run(model: &PerfModel) -> FigureResult {
     let mut tables = Vec::new();
     let mut assertions = Vec::new();
 
-    let (coarse_big, fine_big) = two_phase_search(model, CoreType::Big);
-    let (coarse_little, fine_little) = two_phase_search(model, CoreType::Little);
+    let (coarse_big, fine_big) = two_phase_search(model, BIG);
+    let (coarse_little, fine_little) = two_phase_search(model, LITTLE);
 
     tables.push(coarse_big.to_table("Fig4 A15 coarse (mc,kc) sweep [GFLOPS]"));
     tables.push(fine_big.to_table("Fig4 A15 fine sweep"));
@@ -45,7 +45,7 @@ pub fn run(model: &PerfModel) -> FigureResult {
 
     // §5.3 constrained refit (reported in the text, derived from the
     // same search machinery): kc pinned to 952 → A7 mc ≈ 32.
-    let refit = shared_kc_refit(model, CoreType::Little, 952);
+    let refit = shared_kc_refit(model, LITTLE, 952);
     tables.push(refit.to_table("§5.3 A7 refit at shared kc=952"));
     assertions.push(Assertion::check(
         "A7 shared-kc refit mc ≈ 32",

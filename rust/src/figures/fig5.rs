@@ -7,7 +7,7 @@
 use crate::figures::{sim_square, sizes, Assertion, FigureResult};
 use crate::model::PerfModel;
 use crate::sched::ScheduleSpec;
-use crate::soc::CoreType;
+use crate::soc::{BIG, LITTLE};
 use crate::util::table::Table;
 
 pub fn run(model: &PerfModel, quick: bool) -> FigureResult {
@@ -26,12 +26,12 @@ pub fn run(model: &PerfModel, quick: bool) -> FigureResult {
     for &r in &rs {
         let mut prow = vec![r as f64];
         let mut erow = vec![r as f64];
-        for (idx, (core, t)) in CoreType::ALL
+        for (idx, (cluster, t)) in [BIG, LITTLE]
             .iter()
             .flat_map(|&c| (1..=4).map(move |t| (c, t)))
             .enumerate()
         {
-            let st = sim_square(model, &ScheduleSpec::cluster_only(core, t), r);
+            let st = sim_square(model, &ScheduleSpec::cluster_only(cluster, t), r);
             prow.push(st.gflops);
             erow.push(st.gflops_per_watt);
             peak_perf[idx] = peak_perf[idx].max(st.gflops);

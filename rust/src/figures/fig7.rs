@@ -7,7 +7,7 @@
 use crate::figures::{ideal_gflops, sim_square, sizes, Assertion, FigureResult};
 use crate::model::PerfModel;
 use crate::sched::ScheduleSpec;
-use crate::soc::CoreType;
+use crate::soc::{BIG, LITTLE};
 use crate::util::table::Table;
 
 pub fn run(model: &PerfModel, quick: bool) -> FigureResult {
@@ -25,8 +25,8 @@ pub fn run(model: &PerfModel, quick: bool) -> FigureResult {
     let mut sss_eff_worst_everywhere = true;
     for &r in &rs {
         let sss = sim_square(model, &ScheduleSpec::sss(), r);
-        let a15 = sim_square(model, &ScheduleSpec::cluster_only(CoreType::Big, 4), r);
-        let a7 = sim_square(model, &ScheduleSpec::cluster_only(CoreType::Little, 4), r);
+        let a15 = sim_square(model, &ScheduleSpec::cluster_only(BIG, 4), r);
+        let a7 = sim_square(model, &ScheduleSpec::cluster_only(LITTLE, 4), r);
         let ideal = ideal_gflops(model, r);
         perf.push_f64_row(&[r as f64, sss.gflops, a15.gflops, a7.gflops, ideal], 3);
         eff.push_f64_row(

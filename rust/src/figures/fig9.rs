@@ -8,7 +8,7 @@
 use crate::figures::{ideal_gflops, sim_square, sizes, Assertion, FigureResult};
 use crate::model::PerfModel;
 use crate::sched::ScheduleSpec;
-use crate::soc::CoreType;
+use crate::soc::BIG;
 use crate::util::table::Table;
 
 pub fn run(model: &PerfModel, quick: bool) -> FigureResult {
@@ -38,7 +38,7 @@ pub fn run(model: &PerfModel, quick: bool) -> FigureResult {
                 eff_curve.push(st.gflops_per_watt);
             }
         }
-        let a15 = sim_square(model, &ScheduleSpec::cluster_only(CoreType::Big, 4), r);
+        let a15 = sim_square(model, &ScheduleSpec::cluster_only(BIG, 4), r);
         prow.push(a15.gflops);
         prow.push(ideal_gflops(model, r));
         erow.push(a15.gflops_per_watt);

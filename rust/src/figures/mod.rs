@@ -11,7 +11,7 @@
 //! qualitative claims the paper draws from that figure (who wins, where
 //! the crossover sits, by roughly what factor). `cargo test` runs all of
 //! them in quick mode; `amp-gemm figures` and `cargo bench` regenerate
-//! the full versions. EXPERIMENTS.md records paper-vs-measured.
+//! the full versions. DESIGN.md §6 indexes every experiment.
 
 pub mod ablation;
 pub mod fig10;
@@ -25,7 +25,6 @@ pub mod fig9;
 use crate::model::PerfModel;
 use crate::sched::ScheduleSpec;
 use crate::sim::{simulate, RunStats};
-use crate::soc::CoreType;
 use crate::util::table::Table;
 use std::io;
 use std::path::Path;
@@ -107,11 +106,21 @@ pub fn sim_square(model: &PerfModel, spec: &ScheduleSpec, r: usize) -> RunStats 
 }
 
 /// The "Ideal" line of Fig. 7/9/10/11/12: the aggregated performance of
-/// the two isolated clusters at the same problem size.
+/// every isolated cluster at the same problem size (two clusters on the
+/// Exynos; N terms on an N-cluster topology).
 pub fn ideal_gflops(model: &PerfModel, r: usize) -> f64 {
-    let big = sim_square(model, &ScheduleSpec::cluster_only(CoreType::Big, 4), r);
-    let little = sim_square(model, &ScheduleSpec::cluster_only(CoreType::Little, 4), r);
-    big.gflops + little.gflops
+    model
+        .soc
+        .cluster_ids()
+        .map(|c| {
+            sim_square(
+                model,
+                &ScheduleSpec::cluster_only(c, model.soc[c].num_cores),
+                r,
+            )
+            .gflops
+        })
+        .sum()
 }
 
 /// Run one figure by number (4, 5, 7, 9, 10, 11, 12).
@@ -202,7 +211,7 @@ mod tests {
     fn ideal_is_above_each_cluster() {
         let model = PerfModel::exynos();
         let ideal = ideal_gflops(&model, 2048);
-        let big = sim_square(&model, &ScheduleSpec::cluster_only(CoreType::Big, 4), 2048);
+        let big = sim_square(&model, &ScheduleSpec::cluster_only(crate::soc::BIG, 4), 2048);
         assert!(ideal > big.gflops);
     }
 }

@@ -3,24 +3,38 @@
 //! Reproduction of *Architecture-Aware Configuration and Scheduling of
 //! Matrix Multiplication on Asymmetric Multicore Processors* (Catalán,
 //! Igual, Mayo, Rodríguez-Sánchez, Quintana-Ortí; 2015) as a three-layer
-//! Rust + JAX + Pallas system. See DESIGN.md for the system inventory,
-//! the hardware-substitution rationale and the experiment index, and
-//! EXPERIMENTS.md for paper-vs-measured results.
+//! Rust + JAX + Pallas system, generalized from the paper's two-cluster
+//! big.LITTLE testbed to arbitrary N-cluster topologies. See DESIGN.md
+//! for the system inventory, the hardware-substitution rationale (§1),
+//! the `Topology` model (§2) and the experiment index (§6).
 //!
 //! Layer map:
-//! * `soc`, `cache`, `model`, `energy`, `sim` — the simulated Exynos
-//!   5422 substrate (descriptor, cache simulator, calibrated performance
-//!   and power models, discrete-event engine);
-//! * `blis`, `partition`, `sched` — the paper's contribution: BLIS
-//!   control trees, loop partitioning and the SSS/SAS/CA-SAS/DAS/CA-DAS
-//!   scheduling strategies;
-//! * `native` — real multithreaded packed GEMM applying those
-//!   strategies (numerics verified against the oracle);
-//! * `runtime`, `coordinator` — the PJRT artifact runtime (HLO text →
-//!   compile → execute) and the GEMM service on top;
-//! * `search`, `figures` — the empirical (mc,kc) search and the
-//!   regeneration harness for every evaluation figure in the paper;
-//! * `util` — deterministic RNG, stats, tables, mini-prop, benchkit, CLI.
+//! * [`soc`] — the **topology descriptor**: `SocSpec` holds a
+//!   `Vec<ClusterSpec>`, each cluster carrying its core count,
+//!   frequency, cache geometry, flops/cycle, tuned BLIS parameters and
+//!   calibrated model constants (`ClusterTuning`). Cores are addressed
+//!   `(ClusterId, core_idx)`; presets cover the paper's Exynos 5422, an
+//!   ARMv8 Juno, a tri-cluster DynamIQ-style SoC and a symmetric SMP;
+//! * [`cache`], [`model`], [`energy`], [`sim`] — the simulated AMP
+//!   substrate (cache simulator, calibrated per-cluster performance and
+//!   power models, discrete-event engine);
+//! * [`blis`], [`partition`], [`sched`] — the paper's contribution:
+//!   BLIS control trees (one per cluster), N-way loop partitioning
+//!   (weighted-static and dynamic-queue) and the SSS/SAS/CA-SAS/DAS/
+//!   CA-DAS scheduling strategies driven by per-cluster weight vectors;
+//! * [`native`] — real multithreaded packed GEMM applying those
+//!   strategies on any topology (numerics verified against the oracle);
+//! * [`runtime`], [`coordinator`] — the PJRT artifact runtime (HLO text
+//!   → compile → execute) and the GEMM service on top;
+//! * [`search`], [`figures`] — the per-cluster empirical (mc, kc)
+//!   search and the regeneration harness for every evaluation figure in
+//!   the paper (plus the §6-roadmap ablations and topology sweeps);
+//! * [`util`] — deterministic RNG, stats, tables, mini-prop, benchkit,
+//!   CLI.
+//!
+//! The Exynos 5422 preset is pinned bit-for-bit to the paper's §3.2
+//! values by `tests/exynos_regression.rs`, so the generalization can
+//! never silently drift the reproduction.
 
 pub mod blis;
 pub mod cache;

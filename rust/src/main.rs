@@ -16,7 +16,7 @@ use amp_gemm::figures;
 use amp_gemm::model::PerfModel;
 use amp_gemm::sched::{CoarseLoop, FineLoop, ScheduleSpec, Strategy};
 use amp_gemm::search;
-use amp_gemm::soc::{CoreType, SocSpec};
+use amp_gemm::soc::{ClusterId, SocSpec, BIG, LITTLE};
 use amp_gemm::util::cli::Args;
 use amp_gemm::util::rng::Rng;
 use std::path::Path;
@@ -110,18 +110,31 @@ fn cmd_ablation(args: &Args) -> Result<(), String> {
 
 fn cmd_search(args: &Args) -> Result<(), String> {
     let model = PerfModel::exynos();
-    let core = match args.get_or("core", "a15") {
-        "a15" | "big" => CoreType::Big,
-        "a7" | "little" => CoreType::Little,
-        other => return Err(format!("unknown --core '{other}'")),
+    let cluster = match args.get_or("core", "a15") {
+        "a15" | "big" => BIG,
+        "a7" | "little" => LITTLE,
+        other => {
+            // Accept a raw cluster index ("0", "1", …) as well.
+            let idx: usize = other
+                .parse()
+                .map_err(|_| format!("unknown --core '{other}' (a15|a7|<cluster index>)"))?;
+            if idx >= model.soc.num_clusters() {
+                return Err(format!(
+                    "cluster index {idx} out of range: '{}' has {} clusters",
+                    model.soc.name,
+                    model.soc.num_clusters()
+                ));
+            }
+            ClusterId(idx)
+        }
     };
     if args.flag("shared-kc") {
-        let r = search::shared_kc_refit(&model, core, 952);
+        let r = search::shared_kc_refit(&model, cluster, 952);
         println!("{}", r.to_table("shared-kc refit (kc = 952)").to_markdown());
         println!("best: mc = {} @ {:.3} GFLOPS (paper: mc = 32)", r.best.mc, r.best.gflops);
         return Ok(());
     }
-    let (coarse, fine) = search::two_phase_search(&model, core);
+    let (coarse, fine) = search::two_phase_search(&model, cluster);
     println!(
         "coarse best: (mc, kc) = ({}, {}) @ {:.3} GFLOPS",
         coarse.best.mc, coarse.best.kc, coarse.best.gflops
@@ -131,9 +144,10 @@ fn cmd_search(args: &Args) -> Result<(), String> {
         fine.best.mc,
         fine.best.kc,
         fine.best.gflops,
-        match core {
-            CoreType::Big => "(152, 952)",
-            CoreType::Little => "(80, 352)",
+        match cluster {
+            BIG => "(152, 952)",
+            LITTLE => "(80, 352)",
+            _ => "n/a",
         }
     );
     Ok(())
@@ -144,8 +158,8 @@ fn parse_sched(s: &str) -> Result<ScheduleSpec, String> {
         "sss" => ScheduleSpec::sss(),
         "das" => ScheduleSpec::das(),
         "cadas" | "ca-das" => ScheduleSpec::ca_das(),
-        "a15" => ScheduleSpec::cluster_only(CoreType::Big, 4),
-        "a7" => ScheduleSpec::cluster_only(CoreType::Little, 4),
+        "a15" => ScheduleSpec::cluster_only(BIG, 4),
+        "a7" => ScheduleSpec::cluster_only(LITTLE, 4),
         other => {
             if let Some(r) = other.strip_prefix("sas") {
                 let ratio: f64 = r.parse().map_err(|_| format!("bad SAS ratio '{r}'"))?;
@@ -231,18 +245,18 @@ fn cmd_calibrate() -> Result<(), String> {
     println!("|---|---|---|");
     let a15 = BlisParams::a15_opt();
     let a7 = BlisParams::a7_opt();
-    let r1 = model.steady_rate_gflops(CoreType::Big, &a15, 1);
+    let r1 = model.steady_rate_gflops(BIG, &a15, 1);
     println!("| 1×A15 GFLOPS | ≈2.85 | {r1:.3} |");
-    let c4 = model.cluster_rate_gflops(CoreType::Big, &a15, 4);
+    let c4 = model.cluster_rate_gflops(BIG, &a15, 4);
     println!("| 4×A15 GFLOPS | 9.6 | {c4:.3} |");
-    let l1 = model.steady_rate_gflops(CoreType::Little, &a7, 1);
+    let l1 = model.steady_rate_gflops(LITTLE, &a7, 1);
     println!("| 1×A7 GFLOPS | ≈0.6 | {l1:.3} |");
-    let l4 = model.cluster_rate_gflops(CoreType::Little, &a7, 4);
+    let l4 = model.cluster_rate_gflops(LITTLE, &a7, 4);
     println!("| 4×A7 GFLOPS | ≈2.4 | {l4:.3} |");
     println!("| ideal aggregate | ≈12 | {:.3} |", c4 + l4);
     let ratio = model.ideal_ratio(&a15, &a15);
     println!("| SAS optimal ratio | 5–6 | {ratio:.2} |");
-    let bad = model.cluster_rate_gflops(CoreType::Little, &a15, 4);
+    let bad = model.cluster_rate_gflops(LITTLE, &a15, 4);
     println!("| SSS aggregate (≈2×A7-with-A15-params) | ≈40% of 9.6 | {:.3} |", 2.0 * bad);
     Ok(())
 }
@@ -266,21 +280,34 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_soc() -> Result<(), String> {
-    let soc = SocSpec::exynos5422();
-    println!("{}", soc.name);
-    for t in CoreType::ALL {
-        let cl = soc.cluster(t);
+    for soc in [
+        SocSpec::exynos5422(),
+        SocSpec::dynamiq_3c(),
+        SocSpec::symmetric(4),
+    ] {
+        println!("{}", soc.name);
+        for id in soc.cluster_ids() {
+            let cl = &soc[id];
+            println!(
+                "  {id} {} × {} ({}): {:.1} GHz, L1d {} KiB, shared L2 {} KiB, \
+                 peak {:.2} GFLOPS/core, tuned (mc, kc) = ({}, {})",
+                cl.num_cores,
+                cl.name,
+                cl.short_name,
+                cl.core.freq_ghz,
+                cl.core.l1d.size_bytes / 1024,
+                cl.l2.size_bytes / 1024,
+                cl.core.peak_gflops(),
+                cl.tuned.mc,
+                cl.tuned.kc,
+            );
+        }
         println!(
-            "  {} × {}: {:.1} GHz, L1d {} KiB, shared L2 {} KiB, peak {:.2} GFLOPS/core",
-            cl.num_cores,
-            cl.core.core_type.name(),
-            cl.core.freq_ghz,
-            cl.core.l1d.size_bytes / 1024,
-            cl.l2.size_bytes / 1024,
-            cl.core.peak_gflops()
+            "  DRAM: {:.1} GB/s, {} MiB\n",
+            soc.dram_bw_gbs,
+            soc.dram_total_bytes / (1 << 20)
         );
     }
-    println!("  DRAM: {:.1} GB/s, {} MiB", soc.dram_bw_gbs, soc.dram_total_bytes / (1 << 20));
     let _ = Strategy::Sss; // referenced for doc completeness
     let _ = (CoarseLoop::Loop1, FineLoop::Loop4);
     Ok(())

@@ -1,9 +1,18 @@
 //! Calibration constants for the performance and energy models.
 //!
-//! Every constant here is anchored to a number the paper reports
-//! (§3.4, §4, Figs. 5/7/9/10/12); the unit tests at the bottom of
-//! `model/mod.rs` and `energy/mod.rs` assert the anchors, so a change
-//! that silently un-calibrates the reproduction fails `cargo test`.
+//! Every constant is anchored to a number the paper reports (§3.4, §4,
+//! Figs. 5/7/9/10/12); the unit tests at the bottom of `model/mod.rs`
+//! and `energy/mod.rs` assert the anchors, so a change that silently
+//! un-calibrates the reproduction fails `cargo test`.
+//!
+//! Since the N-cluster topology refactor, *per-cluster* constants
+//! (amortization half-saturations, contention tables, packing bandwidth,
+//! synchronization costs, power rails, L2 fill fractions) live in the
+//! descriptor itself — `soc::ClusterTuning`, constructed by
+//! `ClusterTuning::a15()` / `a7()` / `mid()` — so that a third or fourth
+//! cluster carries its own calibration without touching the models.
+//! This module keeps the *SoC-level* constants shared by every cluster,
+//! plus the paper-anchor reference values the regression tests pin.
 //!
 //! Anchors:
 //! * single Cortex-A15 core at (mc,kc)=(152,952): ≈ 2.85–2.95 GFLOPS;
@@ -18,58 +27,21 @@
 //!   full-A7 ≈ 2× single-A7, full-A7 > single-A15, full-A7 ≈ full-A15,
 //!   SSS by far the worst (§3.4, Figs. 5/7).
 
-use crate::soc::CoreType;
-
-/// Ideal peak double-precision GFLOPS of one core at the micro-kernel
-/// (paper's hand-tuned 4×4 kernel): freq × flops/cycle.
+/// Ideal peak double-precision GFLOPS of one Exynos core at the
+/// micro-kernel (paper's hand-tuned 4×4 kernel): freq × flops/cycle.
+/// Reference values only — the model always derives peaks from the
+/// descriptor, so DVFS variants and other AMPs need no recalibration.
 pub const PEAK_GFLOPS_BIG: f64 = 3.2; // 1.6 GHz × 2 dp-flops/cycle
 pub const PEAK_GFLOPS_LITTLE: f64 = 0.7; // 1.4 GHz × 0.5 dp-flops/cycle
 
-/// Half-saturation constants of the amortization curves
-/// eff_k(kc) = kc/(kc + HK), eff_m(m_rows) = m/(m + HM).
-///
-/// eff_k amortizes the per-micro-kernel C load/store + loop overhead
-/// over the kc rank-1 updates; eff_m amortizes warming the `Br`
-/// micro-panel into L1 over the rows a thread sweeps per jr column.
-/// Ratios HK/HM are chosen so the model's (mc,kc) optimum under the L2
-/// budget lands at the paper's Fig. 4 optima (DESIGN.md §5).
-pub const HK_BIG: f64 = 42.0;
-pub const HM_BIG: f64 = 6.0;
-pub const HK_LITTLE: f64 = 35.2;
-pub const HM_LITTLE: f64 = 8.0;
-
-/// Per-core throughput multiplier as a function of the number of active
-/// cores in the same cluster (index = active−1). Models shared-L2 and
-/// bus contention: the A15 cluster saturates at the 4th core (§3.4:
-/// “the utilization of the fourth core yields a smaller increase”).
-pub const CLUSTER_SCALE_BIG: [f64; 4] = [1.0, 1.0, 0.966, 0.814];
-pub const CLUSTER_SCALE_LITTLE: [f64; 4] = [1.0, 1.0, 1.0, 1.0];
-
-/// Mild DRAM interference when both clusters are computing at once.
+/// Mild DRAM interference when multiple clusters compute at once.
 pub const BOTH_CLUSTERS_FACTOR: f64 = 0.99;
 
-/// Effective packing bandwidth per core, GB/s (source read + packed
-/// write combined). Packing is parallelized across a cluster's threads.
-pub const PACK_BW_GBS_BIG: f64 = 2.0;
-pub const PACK_BW_GBS_LITTLE: f64 = 0.8;
-
-/// Synchronization overheads (seconds). Barriers close every packing
-/// phase; the grab cost is the §5.4 critical section that hands out
-/// dynamic Loop-3 chunks.
-pub const BARRIER_S_BIG: f64 = 3.0e-6;
-pub const BARRIER_S_LITTLE: f64 = 8.0e-6;
-pub const GRAB_S_BIG: f64 = 1.5e-6;
-pub const GRAB_S_LITTLE: f64 = 4.0e-6;
-
 /// ---- Power model (energy/mod.rs), Watts ------------------------------
-/// Baselines are charged for the whole run; per-core increments apply
-/// while a core computes (ACTIVE) or spin-waits (POLL — the paper notes
-/// idle-but-polling fast threads burn energy, §5.2.2).
-pub const P_CLUSTER_IDLE_BIG: f64 = 0.60;
-pub const P_CLUSTER_IDLE_LITTLE: f64 = 0.12;
-pub const P_CORE_ACTIVE_BIG: f64 = 1.80;
-pub const P_CORE_ACTIVE_LITTLE: f64 = 0.28;
-/// Polling (spin-wait) draws a fraction of active power.
+/// Cluster baselines and per-core increments live in each cluster's
+/// `ClusterTuning` (charged for the whole run / while a core computes).
+/// Polling (spin-wait) draws a fraction of active power — the paper
+/// notes idle-but-polling fast threads burn energy, §5.2.2.
 pub const POLL_FACTOR: f64 = 0.70;
 pub const P_DRAM_IDLE: f64 = 0.18;
 pub const P_GPU_IDLE: f64 = 0.05;
@@ -79,123 +51,34 @@ pub const DRAM_NJ_PER_BYTE: f64 = 0.0625;
 /// pmlib sampling period (§3.2): 250 ms.
 pub const PMLIB_SAMPLE_PERIOD_S: f64 = 0.25;
 
-pub fn peak_gflops(core: CoreType) -> f64 {
-    match core {
-        CoreType::Big => PEAK_GFLOPS_BIG,
-        CoreType::Little => PEAK_GFLOPS_LITTLE,
-    }
-}
-
-/// Micro-kernel register-blocking factor (§6 future work: per-core-type
-/// micro-kernels with their own mr×nr). The paper's hand-tuned kernel is
-/// 4×4 on both cores; an 8×4 blocking halves the `Br` load traffic per
-/// flop and helps the out-of-order A15 (+5 %), but the added register
-/// pressure hurts the in-order A7 (−3 %). Other blockings are served by
-/// the generic path at a small penalty.
-pub fn register_block_factor(core: CoreType, mr: usize, nr: usize) -> f64 {
-    match (core, mr, nr) {
-        (_, 4, 4) => 1.0,
-        (CoreType::Big, 8, 4) => 1.05,
-        (CoreType::Little, 8, 4) => 0.97,
-        _ => 0.93,
-    }
-}
-
-pub fn hk(core: CoreType) -> f64 {
-    match core {
-        CoreType::Big => HK_BIG,
-        CoreType::Little => HK_LITTLE,
-    }
-}
-
-pub fn hm(core: CoreType) -> f64 {
-    match core {
-        CoreType::Big => HM_BIG,
-        CoreType::Little => HM_LITTLE,
-    }
-}
-
-/// Cluster contention multiplier for `active` busy cores (1-based).
-pub fn cluster_scale(core: CoreType, active: usize) -> f64 {
-    assert!(active >= 1, "need at least one active core");
-    let table = match core {
-        CoreType::Big => &CLUSTER_SCALE_BIG,
-        CoreType::Little => &CLUSTER_SCALE_LITTLE,
-    };
-    // Clamp for ablation SoCs with more cores per cluster than Exynos.
-    table[(active - 1).min(table.len() - 1)]
-}
-
-pub fn pack_bw_gbs(core: CoreType) -> f64 {
-    match core {
-        CoreType::Big => PACK_BW_GBS_BIG,
-        CoreType::Little => PACK_BW_GBS_LITTLE,
-    }
-}
-
-pub fn barrier_s(core: CoreType) -> f64 {
-    match core {
-        CoreType::Big => BARRIER_S_BIG,
-        CoreType::Little => BARRIER_S_LITTLE,
-    }
-}
-
-pub fn grab_s(core: CoreType) -> f64 {
-    match core {
-        CoreType::Big => GRAB_S_BIG,
-        CoreType::Little => GRAB_S_LITTLE,
-    }
-}
-
-pub fn p_core_active(core: CoreType) -> f64 {
-    match core {
-        CoreType::Big => P_CORE_ACTIVE_BIG,
-        CoreType::Little => P_CORE_ACTIVE_LITTLE,
-    }
-}
-
-pub fn p_core_poll(core: CoreType) -> f64 {
-    p_core_active(core) * POLL_FACTOR
-}
-
-pub fn p_cluster_idle(core: CoreType) -> f64 {
-    match core {
-        CoreType::Big => P_CLUSTER_IDLE_BIG,
-        CoreType::Little => P_CLUSTER_IDLE_LITTLE,
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::soc::{ClusterTuning, SocSpec, BIG, LITTLE};
 
     #[test]
     fn idle_big_cluster_exceeds_active_little_core() {
         // Paper §3.4: "the Cortex-A15 cluster in idle state already
         // dissipates more power than a single Cortex-A7 core in execution".
-        assert!(P_CLUSTER_IDLE_BIG > P_CORE_ACTIVE_LITTLE + P_CLUSTER_IDLE_LITTLE);
+        let (a15, a7) = (ClusterTuning::a15(), ClusterTuning::a7());
+        assert!(a15.p_cluster_idle_w > a7.p_core_active_w + a7.p_cluster_idle_w);
     }
 
     #[test]
     fn poll_power_below_active() {
-        for c in CoreType::ALL {
-            assert!(p_core_poll(c) < p_core_active(c));
-            assert!(p_core_poll(c) > 0.5 * p_core_active(c));
+        for t in [ClusterTuning::a15(), ClusterTuning::mid(), ClusterTuning::a7()] {
+            assert!(t.p_core_poll_w(POLL_FACTOR) < t.p_core_active_w);
+            assert!(t.p_core_poll_w(POLL_FACTOR) > 0.5 * t.p_core_active_w);
         }
     }
 
     #[test]
     fn cluster_scale_monotone_nonincreasing() {
-        for c in CoreType::ALL {
-            for n in 1..4 {
-                assert!(cluster_scale(c, n + 1) <= cluster_scale(c, n));
+        for t in [ClusterTuning::a15(), ClusterTuning::mid(), ClusterTuning::a7()] {
+            for n in 1..8 {
+                assert!(t.scale(n + 1) <= t.scale(n));
             }
         }
-    }
-
-    #[test]
-    fn cluster_scale_clamps_beyond_table() {
-        assert_eq!(cluster_scale(CoreType::Big, 8), CLUSTER_SCALE_BIG[3]);
     }
 
     #[test]
@@ -205,8 +88,33 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn zero_active_cores_rejected() {
-        cluster_scale(CoreType::Big, 0);
+    fn descriptor_peaks_match_reference_constants() {
+        // The Exynos descriptor must derive exactly the calibrated peaks.
+        let soc = SocSpec::exynos5422();
+        assert!((soc[BIG].core.peak_gflops() - PEAK_GFLOPS_BIG).abs() < 1e-12);
+        assert!((soc[LITTLE].core.peak_gflops() - PEAK_GFLOPS_LITTLE).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exynos_tuning_matches_original_tables() {
+        // The per-cluster tuning that moved into the descriptor must
+        // stay bit-for-bit the original calibration tables.
+        let soc = SocSpec::exynos5422();
+        let b = &soc[BIG].tuning;
+        assert_eq!((b.hk, b.hm), (42.0, 6.0));
+        assert_eq!(b.cluster_scale, vec![1.0, 1.0, 0.966, 0.814]);
+        assert_eq!(
+            (b.pack_bw_gbs, b.barrier_s, b.grab_s),
+            (2.0, 3.0e-6, 1.5e-6)
+        );
+        assert_eq!((b.p_core_active_w, b.p_cluster_idle_w), (1.80, 0.60));
+        let l = &soc[LITTLE].tuning;
+        assert_eq!((l.hk, l.hm), (35.2, 8.0));
+        assert_eq!(
+            (l.pack_bw_gbs, l.barrier_s, l.grab_s),
+            (0.8, 8.0e-6, 4.0e-6)
+        );
+        assert_eq!((l.p_core_active_w, l.p_cluster_idle_w), (0.28, 0.12));
+        assert_eq!((b.l2_fill, l.l2_fill), (0.5525, 0.4297));
     }
 }

@@ -6,8 +6,8 @@
 //! model. The model has exactly the structure the paper's analysis
 //! appeals to:
 //!
-//! `rate(core, cfg) = peak(core) · eff_k(kc) · eff_m(rows/jr-column)
-//!                    · L1/L2 fit penalties · cluster contention`
+//! `rate(cluster, cfg) = peak(cluster) · eff_k(kc) · eff_m(rows/jr-col)
+//!                       · L1/L2 fit penalties · cluster contention`
 //!
 //! * `eff_k` — C-block load/store and loop overhead amortized over the
 //!   kc rank-1 updates of one micro-kernel;
@@ -19,13 +19,17 @@
 //!   here;
 //! * contention — the 4th A15 core's diminishing return (§3.4).
 //!
-//! All constants live in [`calibration`] with paper-anchored tests.
+//! Every per-cluster constant comes from the cluster's own
+//! [`crate::soc::ClusterTuning`], so the model scales to any N-cluster
+//! topology; SoC-level constants live in [`calibration`] with
+//! paper-anchored tests.
 
 pub mod calibration;
 
 use crate::blis::params::BlisParams;
 use crate::cache::analysis::FootprintAnalysis;
-use crate::soc::{CoreType, SocSpec};
+use crate::sched::Weights;
+use crate::soc::{ClusterId, SocSpec};
 use calibration as cal;
 
 /// Execution-context inputs that vary per scheduling decision.
@@ -38,7 +42,7 @@ pub struct MicroCtx {
     pub rows_per_jr: usize,
     /// Busy cores in this cluster (contention input).
     pub active_in_cluster: usize,
-    /// Whether the other cluster is simultaneously computing.
+    /// Whether at least one other cluster is simultaneously computing.
     pub other_cluster_active: bool,
 }
 
@@ -46,66 +50,63 @@ pub struct MicroCtx {
 #[derive(Debug, Clone)]
 pub struct PerfModel {
     pub soc: SocSpec,
-    fit_big: FootprintAnalysis,
-    fit_little: FootprintAnalysis,
+    /// Per-cluster footprint analyses, indexed by [`ClusterId`].
+    fits: Vec<FootprintAnalysis>,
 }
 
 impl PerfModel {
     pub fn new(soc: SocSpec) -> Self {
-        let fit_big = FootprintAnalysis::for_cluster(&soc.big);
-        let fit_little = FootprintAnalysis::for_cluster(&soc.little);
-        PerfModel {
-            soc,
-            fit_big,
-            fit_little,
-        }
+        let fits = soc
+            .clusters
+            .iter()
+            .map(FootprintAnalysis::for_cluster)
+            .collect();
+        PerfModel { soc, fits }
     }
 
     pub fn exynos() -> Self {
         PerfModel::new(SocSpec::exynos5422())
     }
 
-    fn fit(&self, core: CoreType) -> &FootprintAnalysis {
-        match core {
-            CoreType::Big => &self.fit_big,
-            CoreType::Little => &self.fit_little,
-        }
+    fn fit(&self, c: ClusterId) -> &FootprintAnalysis {
+        &self.fits[c.0]
     }
 
     /// Amortization of per-micro-kernel overhead over the kc updates.
-    pub fn eff_k(&self, core: CoreType, kc_eff: usize) -> f64 {
+    pub fn eff_k(&self, c: ClusterId, kc_eff: usize) -> f64 {
         let kc = kc_eff.max(1) as f64;
-        kc / (kc + cal::hk(core))
+        kc / (kc + self.soc[c].tuning.hk)
     }
 
     /// Amortization of `Br` warmup over the rows swept per jr column.
-    pub fn eff_m(&self, core: CoreType, rows: usize) -> f64 {
+    pub fn eff_m(&self, c: ClusterId, rows: usize) -> f64 {
         let m = rows.max(1) as f64;
-        m / (m + cal::hm(core))
+        m / (m + self.soc[c].tuning.hm)
     }
 
-    /// Cache-fit penalty of a configuration on a core type (≤ 1).
-    pub fn cache_penalty(&self, core: CoreType, p: &BlisParams) -> f64 {
-        self.fit(core).fit(p).combined_penalty()
+    /// Cache-fit penalty of a configuration on a cluster (≤ 1).
+    pub fn cache_penalty(&self, c: ClusterId, p: &BlisParams) -> f64 {
+        self.fit(c).fit(p).combined_penalty()
     }
 
     /// Ideal peak of one core on this SoC: derived from the descriptor
     /// (freq × flops/cycle), so DVFS variants and other AMPs (Juno,
-    /// custom counts) are modelled without re-calibration. For the
-    /// Exynos descriptor this equals the calibration constants.
-    pub fn peak(&self, core: CoreType) -> f64 {
-        self.soc.cluster(core).core.peak_gflops()
+    /// tri-cluster, custom counts) are modelled without re-calibration.
+    /// For the Exynos descriptor this equals the calibration constants.
+    pub fn peak(&self, c: ClusterId) -> f64 {
+        self.soc[c].core.peak_gflops()
     }
 
     /// Sustained GFLOPS of one core running micro-kernels configured by
     /// `p` under context `ctx`.
-    pub fn core_rate_gflops(&self, core: CoreType, p: &BlisParams, ctx: &MicroCtx) -> f64 {
-        let mut rate = self.peak(core)
-            * cal::register_block_factor(core, p.mr, p.nr)
-            * self.eff_k(core, ctx.kc_eff)
-            * self.eff_m(core, ctx.rows_per_jr)
-            * self.cache_penalty(core, p)
-            * cal::cluster_scale(core, ctx.active_in_cluster);
+    pub fn core_rate_gflops(&self, c: ClusterId, p: &BlisParams, ctx: &MicroCtx) -> f64 {
+        let tuning = &self.soc[c].tuning;
+        let mut rate = self.peak(c)
+            * tuning.register_block_factor(p.mr, p.nr)
+            * self.eff_k(c, ctx.kc_eff)
+            * self.eff_m(c, ctx.rows_per_jr)
+            * self.cache_penalty(c, p)
+            * tuning.scale(ctx.active_in_cluster);
         if ctx.other_cluster_active {
             rate *= cal::BOTH_CLUSTERS_FACTOR;
         }
@@ -113,63 +114,95 @@ impl PerfModel {
     }
 
     /// Steady-state rate at the configured blocking (full tiles, whole
-    /// cluster view): convenience for figure generation and ratio
+    /// cluster view): convenience for figure generation and weight
     /// auto-selection.
-    pub fn steady_rate_gflops(&self, core: CoreType, p: &BlisParams, active: usize) -> f64 {
+    pub fn steady_rate_gflops(&self, c: ClusterId, p: &BlisParams, active: usize) -> f64 {
         let ctx = MicroCtx {
             kc_eff: p.kc,
             rows_per_jr: p.mc,
             active_in_cluster: active,
             other_cluster_active: false,
         };
-        self.core_rate_gflops(core, p, &ctx)
+        self.core_rate_gflops(c, p, &ctx)
     }
 
     /// Cluster-aggregate steady rate with `n` active cores.
-    pub fn cluster_rate_gflops(&self, core: CoreType, p: &BlisParams, n: usize) -> f64 {
-        self.steady_rate_gflops(core, p, n) * n as f64
+    pub fn cluster_rate_gflops(&self, c: ClusterId, p: &BlisParams, n: usize) -> f64 {
+        self.steady_rate_gflops(c, p, n) * n as f64
     }
 
     /// Time (s) for one micro-kernel of `mr×nr×kc_eff` in context.
     /// Partial edge tiles are charged the full `mr×nr` register block —
     /// exactly the padding cost real micro-kernels pay.
-    pub fn micro_kernel_time(&self, core: CoreType, p: &BlisParams, ctx: &MicroCtx) -> f64 {
+    pub fn micro_kernel_time(&self, c: ClusterId, p: &BlisParams, ctx: &MicroCtx) -> f64 {
         let flops = 2.0 * p.mr as f64 * p.nr as f64 * ctx.kc_eff.max(1) as f64;
-        flops / (self.core_rate_gflops(core, p, ctx) * 1e9)
+        flops / (self.core_rate_gflops(c, p, ctx) * 1e9)
     }
 
     /// Time (s) for one thread's share of packing: `bytes` of payload
     /// through the core's effective packing bandwidth (read + write
     /// already folded into the calibrated bandwidth).
-    pub fn pack_time(&self, core: CoreType, bytes: usize) -> f64 {
-        bytes as f64 / (cal::pack_bw_gbs(core) * 1e9)
+    pub fn pack_time(&self, c: ClusterId, bytes: usize) -> f64 {
+        bytes as f64 / (self.soc[c].tuning.pack_bw_gbs * 1e9)
     }
 
     /// Intra-cluster barrier cost (per synchronization point).
-    pub fn barrier_time(&self, core: CoreType) -> f64 {
-        cal::barrier_s(core)
+    pub fn barrier_time(&self, c: ClusterId) -> f64 {
+        self.soc[c].tuning.barrier_s
     }
 
     /// Dynamic-chunk critical-section cost (§5.4).
-    pub fn grab_time(&self, core: CoreType) -> f64 {
-        cal::grab_s(core)
+    pub fn grab_time(&self, c: ClusterId) -> f64 {
+        self.soc[c].tuning.grab_s
     }
 
-    /// The big:LITTLE per-cluster throughput ratio under a configuration —
-    /// what the SAS `ratio` knob should be set to (§5.2). `p_little` is
-    /// the configuration the LITTLE cluster actually runs (A15 params for
-    /// plain SAS; A7 params for CA-SAS).
+    /// Per-cluster aggregate throughputs under the given per-cluster
+    /// configurations — the raw ingredients of the weighted-static
+    /// split (§5.2, generalized to N clusters).
+    pub fn cluster_rates(&self, params: &[BlisParams]) -> Vec<f64> {
+        assert_eq!(params.len(), self.soc.num_clusters());
+        self.soc
+            .cluster_ids()
+            .map(|c| self.cluster_rate_gflops(c, &params[c.0], self.soc[c].num_cores))
+            .collect()
+    }
+
+    /// Model-derived weight vector for *oblivious* SAS: every cluster
+    /// runs the lead cluster's parameters (§5.2's ratio knob, N-way).
+    pub fn sas_weights(&self) -> Weights {
+        let lead = self.soc[self.soc.lead()].tuned;
+        let rates = self.cluster_rates(&vec![lead; self.soc.num_clusters()]);
+        Weights::from_slice(&rates)
+    }
+
+    /// Model-derived weight vector for *cache-aware* SAS: every cluster
+    /// runs its own tuned parameters (§5.3).
+    pub fn ca_sas_weights(&self) -> Weights {
+        let params: Vec<BlisParams> = self.soc.clusters.iter().map(|c| c.tuned).collect();
+        Weights::from_slice(&self.cluster_rates(&params))
+    }
+
+    /// The two-cluster per-cluster throughput ratio under a
+    /// configuration — what the paper's SAS `ratio` knob should be set
+    /// to (§5.2). `p_little` is the configuration the slow cluster
+    /// actually runs (lead params for plain SAS; its own tuned params
+    /// for CA-SAS). For N > 2 clusters use [`PerfModel::cluster_rates`].
     pub fn ideal_ratio(&self, p_big: &BlisParams, p_little: &BlisParams) -> f64 {
-        let nb = self.soc.big.num_cores;
-        let nl = self.soc.little.num_cores;
-        self.cluster_rate_gflops(CoreType::Big, p_big, nb)
-            / self.cluster_rate_gflops(CoreType::Little, p_little, nl)
+        assert_eq!(
+            self.soc.num_clusters(),
+            2,
+            "ideal_ratio is the 2-cluster shorthand; use cluster_rates"
+        );
+        let (b, l) = (ClusterId(0), ClusterId(1));
+        self.cluster_rate_gflops(b, p_big, self.soc[b].num_cores)
+            / self.cluster_rate_gflops(l, p_little, self.soc[l].num_cores)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::soc::{BIG, LITTLE};
 
     fn model() -> PerfModel {
         PerfModel::exynos()
@@ -178,14 +211,14 @@ mod tests {
     /// §3.4 anchor: single A15 core at its optimum ≈ 2.85–2.95 GFLOPS.
     #[test]
     fn anchor_single_a15() {
-        let r = model().steady_rate_gflops(CoreType::Big, &BlisParams::a15_opt(), 1);
+        let r = model().steady_rate_gflops(BIG, &BlisParams::a15_opt(), 1);
         assert!((2.80..3.00).contains(&r), "A15 single-core rate {r}");
     }
 
     /// §3.4 anchor: single A7 core at its optimum ≈ 0.58–0.62 GFLOPS.
     #[test]
     fn anchor_single_a7() {
-        let r = model().steady_rate_gflops(CoreType::Little, &BlisParams::a7_opt(), 1);
+        let r = model().steady_rate_gflops(LITTLE, &BlisParams::a7_opt(), 1);
         assert!((0.55..0.63).contains(&r), "A7 single-core rate {r}");
     }
 
@@ -195,7 +228,7 @@ mod tests {
         let m = model();
         let p = BlisParams::a15_opt();
         let r: Vec<f64> = (1..=4)
-            .map(|n| m.cluster_rate_gflops(CoreType::Big, &p, n))
+            .map(|n| m.cluster_rate_gflops(BIG, &p, n))
             .collect();
         assert!((9.2..10.0).contains(&r[3]), "4-core peak {}", r[3]);
         let inc3 = r[2] - r[1];
@@ -210,7 +243,7 @@ mod tests {
     fn anchor_a7_cluster_scaling() {
         let m = model();
         let p = BlisParams::a7_opt();
-        let r4 = m.cluster_rate_gflops(CoreType::Little, &p, 4);
+        let r4 = m.cluster_rate_gflops(LITTLE, &p, 4);
         assert!((2.2..2.5).contains(&r4), "A7 cluster {r4}");
     }
 
@@ -218,8 +251,8 @@ mod tests {
     #[test]
     fn anchor_ideal_aggregate() {
         let m = model();
-        let ideal = m.cluster_rate_gflops(CoreType::Big, &BlisParams::a15_opt(), 4)
-            + m.cluster_rate_gflops(CoreType::Little, &BlisParams::a7_opt(), 4);
+        let ideal = m.cluster_rate_gflops(BIG, &BlisParams::a15_opt(), 4)
+            + m.cluster_rate_gflops(LITTLE, &BlisParams::a7_opt(), 4);
         assert!((11.5..12.4).contains(&ideal), "ideal {ideal}");
     }
 
@@ -229,8 +262,8 @@ mod tests {
     fn anchor_oblivious_penalty_and_sas_ratio() {
         let m = model();
         let a15 = BlisParams::a15_opt();
-        let opt = m.cluster_rate_gflops(CoreType::Little, &BlisParams::a7_opt(), 4);
-        let bad = m.cluster_rate_gflops(CoreType::Little, &a15, 4);
+        let opt = m.cluster_rate_gflops(LITTLE, &BlisParams::a7_opt(), 4);
+        let bad = m.cluster_rate_gflops(LITTLE, &a15, 4);
         let frac = bad / opt;
         assert!((0.75..0.90).contains(&frac), "penalty fraction {frac}");
         let ratio = m.ideal_ratio(&a15, &a15);
@@ -247,8 +280,8 @@ mod tests {
     fn loop5_fine_grain_penalized() {
         let m = model();
         let p = BlisParams::a15_opt();
-        let full = m.eff_m(CoreType::Big, p.mc);
-        let quarter = m.eff_m(CoreType::Big, p.mc / 4);
+        let full = m.eff_m(BIG, p.mc);
+        let quarter = m.eff_m(BIG, p.mc / 4);
         assert!(quarter < full);
         assert!(quarter / full > 0.80, "loss should be a few %–20 %");
     }
@@ -263,9 +296,9 @@ mod tests {
             active_in_cluster: 1,
             other_cluster_active: false,
         };
-        let t_full = m.micro_kernel_time(CoreType::Big, &p, &base);
+        let t_full = m.micro_kernel_time(BIG, &p, &base);
         let t_half = m.micro_kernel_time(
-            CoreType::Big,
+            BIG,
             &p,
             &MicroCtx { kc_eff: p.kc / 2, ..base },
         );
@@ -276,17 +309,17 @@ mod tests {
     #[test]
     fn pack_time_proportional_to_bytes() {
         let m = model();
-        let t1 = m.pack_time(CoreType::Big, 1 << 20);
-        let t2 = m.pack_time(CoreType::Big, 2 << 20);
+        let t1 = m.pack_time(BIG, 1 << 20);
+        let t2 = m.pack_time(BIG, 2 << 20);
         assert!((t2 / t1 - 2.0).abs() < 1e-9);
-        assert!(m.pack_time(CoreType::Little, 1 << 20) > t1, "LITTLE packs slower");
+        assert!(m.pack_time(LITTLE, 1 << 20) > t1, "LITTLE packs slower");
     }
 
     #[test]
     fn overheads_positive_and_asymmetric() {
         let m = model();
-        assert!(m.barrier_time(CoreType::Little) > m.barrier_time(CoreType::Big));
-        assert!(m.grab_time(CoreType::Little) > m.grab_time(CoreType::Big));
+        assert!(m.barrier_time(LITTLE) > m.barrier_time(BIG));
+        assert!(m.grab_time(LITTLE) > m.grab_time(BIG));
     }
 
     #[test]
@@ -300,10 +333,7 @@ mod tests {
             other_cluster_active: false,
         };
         let both = MicroCtx { other_cluster_active: true, ..solo };
-        assert!(
-            m.core_rate_gflops(CoreType::Big, &p, &both)
-                < m.core_rate_gflops(CoreType::Big, &p, &solo)
-        );
+        assert!(m.core_rate_gflops(BIG, &p, &both) < m.core_rate_gflops(BIG, &p, &solo));
     }
 
     /// §5.2: DVFS changes the right ratio — downclocking the big cluster
@@ -317,8 +347,8 @@ mod tests {
         let r_down = down.ideal_ratio(&p, &p);
         assert!(r_down < 0.6 * r_base, "downclocked ratio {r_down} vs {r_base}");
         // And the Exynos descriptor's derived peaks match calibration.
-        assert!((base.peak(CoreType::Big) - 3.2).abs() < 1e-12);
-        assert!((base.peak(CoreType::Little) - 0.7).abs() < 1e-12);
+        assert!((base.peak(BIG) - 3.2).abs() < 1e-12);
+        assert!((base.peak(LITTLE) - 0.7).abs() < 1e-12);
     }
 
     /// §6 roadmap: the ARMv8 Juno descriptor is modelled without any
@@ -330,7 +360,7 @@ mod tests {
         let p = BlisParams::a15_opt();
         let ratio = juno.ideal_ratio(&p, &p);
         assert!(ratio > 1.0 && ratio < 4.0, "Juno cluster ratio {ratio}");
-        let peak = juno.peak(CoreType::Big);
+        let peak = juno.peak(BIG);
         assert!((peak - 4.4).abs() < 1e-9, "A57 peak {peak}");
     }
 
@@ -341,13 +371,13 @@ mod tests {
         let m = model();
         let p44 = BlisParams::a15_opt();
         let p84 = BlisParams::a15_opt_8x4();
-        let r44 = m.steady_rate_gflops(CoreType::Big, &p44, 1);
-        let r84 = m.steady_rate_gflops(CoreType::Big, &p84, 1);
+        let r44 = m.steady_rate_gflops(BIG, &p44, 1);
+        let r84 = m.steady_rate_gflops(BIG, &p84, 1);
         assert!(r84 > r44 * 1.02 && r84 < r44 * 1.10, "{r44} vs {r84}");
-        let l44 = m.steady_rate_gflops(CoreType::Little, &BlisParams::a7_opt(), 1);
-        let mut l84p = BlisParams::a7_opt();
-        l84p = BlisParams::new(l84p.nc, l84p.kc, l84p.mc, l84p.nr, 8);
-        let l84 = m.steady_rate_gflops(CoreType::Little, &l84p, 1);
+        let l44 = m.steady_rate_gflops(LITTLE, &BlisParams::a7_opt(), 1);
+        let base = BlisParams::a7_opt();
+        let l84p = BlisParams::new(base.nc, base.kc, base.mc, base.nr, 8);
+        let l84 = m.steady_rate_gflops(LITTLE, &l84p, 1);
         assert!(l84 < l44, "LITTLE must lose with 8×4: {l44} vs {l84}");
     }
 
@@ -356,10 +386,39 @@ mod tests {
         // §5.3: mc=32/kc=952 on the A7 is suboptimal vs (80,352) but much
         // better than the A15 parameters whose Ac misses the 512 KiB L2.
         let m = model();
-        let shared = m.steady_rate_gflops(CoreType::Little, &BlisParams::a7_shared_kc(), 1);
-        let oblivious = m.steady_rate_gflops(CoreType::Little, &BlisParams::a15_opt(), 1);
-        let opt = m.steady_rate_gflops(CoreType::Little, &BlisParams::a7_opt(), 1);
+        let shared = m.steady_rate_gflops(LITTLE, &BlisParams::a7_shared_kc(), 1);
+        let oblivious = m.steady_rate_gflops(LITTLE, &BlisParams::a15_opt(), 1);
+        let opt = m.steady_rate_gflops(LITTLE, &BlisParams::a7_opt(), 1);
         assert!(shared > oblivious, "shared {shared} vs oblivious {oblivious}");
         assert!(shared < opt, "shared {shared} vs opt {opt}");
+    }
+
+    /// The N-way weight machinery: Exynos SAS weights encode ≈ the
+    /// paper's ratio-5 knob; the tri-cluster vector is strictly ordered.
+    #[test]
+    fn auto_weights_track_cluster_rates() {
+        let m = model();
+        let w = m.sas_weights();
+        assert_eq!(w.len(), 2);
+        let ws = w.as_slice();
+        let ratio = ws[0] / ws[1];
+        assert!((4.4..5.6).contains(&ratio), "oblivious weight ratio {ratio}");
+        let ca = m.ca_sas_weights();
+        let cs = ca.as_slice();
+        assert!(cs[0] / cs[1] < ratio, "CA weights shift toward the LITTLE");
+
+        let tri = PerfModel::new(SocSpec::dynamiq_3c());
+        let tw = tri.ca_sas_weights();
+        assert_eq!(tw.len(), 3);
+        let t = tw.as_slice();
+        assert!(t[0] > t[1] && t[1] > t[2], "descending cluster rates: {t:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "2-cluster shorthand")]
+    fn ideal_ratio_rejects_other_topologies() {
+        let tri = PerfModel::new(SocSpec::dynamiq_3c());
+        let p = BlisParams::a15_opt();
+        tri.ideal_ratio(&p, &p);
     }
 }

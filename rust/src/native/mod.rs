@@ -4,21 +4,23 @@
 //! This is the *numerics* half of the hardware substitution (DESIGN.md
 //! §1): the DES in `crate::sim` produces the paper's timing shapes; this
 //! executor proves every scheduling strategy computes the right matrix.
-//! The thread structure mirrors the simulator phase-for-phase:
+//! The thread structure mirrors the simulator phase-for-phase and is
+//! cluster-count-agnostic — one worker team per cluster of the topology:
 //!
-//! * one worker thread per simulated core, grouped into two "clusters";
+//! * one worker thread per simulated core, grouped into per-cluster
+//!   teams;
 //! * per-cluster shared packed buffers (`Bc`, `Ac`), with packing split
 //!   by micro-panel ranges among the cluster's threads (disjoint
 //!   writes), separated from compute by a cluster barrier;
 //! * coarse Loop-1 (static): clusters own disjoint column ranges of C
 //!   and never synchronize until the join;
 //! * coarse Loop-3 (static): clusters own disjoint row ranges; a global
-//!   barrier per (jc, pc) keeps both clusters on the same shared-`kc`
+//!   barrier per (jc, pc) keeps every cluster on the same shared-`kc`
 //!   `Bc` block (each cluster packs its own copy of the identical
 //!   block — same constraint, race-free);
-//! * dynamic (DAS/CA-DAS): the cluster lead grabs row chunks from the
-//!   shared [`DynamicQueue`] inside the §5.4 critical section and
-//!   broadcasts to its teammates.
+//! * dynamic (DAS/CA-DAS): each cluster's lead grabs row chunks of the
+//!   cluster's *own* `mc` from the shared [`DynamicQueue`] inside the
+//!   §5.4 critical section and broadcasts to its teammates.
 //!
 //! Safety: all `C` writes are disjoint by construction (distinct jr/ir
 //! panel ranges within a macro-kernel; distinct row/column blocks across
@@ -31,7 +33,7 @@ use crate::blis::gemm::{macro_kernel, GemmShape};
 use crate::blis::packing::{pack_a_panels, pack_b_panels};
 use crate::partition::{split_symmetric, split_weighted, Chunk, DynamicQueue};
 use crate::sched::{CoarseLoop, ScheduleSpec, Strategy};
-use crate::soc::{CoreType, SocSpec};
+use crate::soc::SocSpec;
 use std::cell::UnsafeCell;
 use std::sync::{Barrier, Mutex};
 use std::time::Instant;
@@ -108,6 +110,7 @@ struct Job<'a> {
 }
 
 /// What a cluster's coarse-grain assignment is.
+#[derive(Clone, Copy)]
 enum CoarseWork<'q> {
     /// Own column range of C (coarse Loop 1): sweep full m.
     Columns(Chunk),
@@ -127,127 +130,103 @@ pub fn gemm_parallel(
     b: &[f64],
     c: &mut [f64],
 ) -> NativeStats {
-    spec.validate().expect("invalid spec");
+    spec.validate_for(soc).expect("invalid spec");
     let GemmShape { m, n, k } = shape;
     assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
-    let (tb, tl) = spec.threads(soc);
+    let th = spec.threads(soc);
     let trees = spec.tree_set(soc);
-    let total = tb + tl;
+    let total: usize = th.iter().sum();
     assert!(total > 0);
+    let active_clusters = th.iter().filter(|&&t| t > 0).count();
 
     let c_ptr = CPtr(c.as_mut_ptr(), c.len());
     let job = Job { a, b, c: c_ptr, shape };
 
-    let big_shared = ClusterShared::new(&trees.big, tb.max(1), m, n, k);
-    let little_shared = ClusterShared::new(&trees.little, tl.max(1), m, n, k);
-    // Global barrier across both clusters for shared-Bc coordination.
+    // Packed-buffer state only for clusters that actually run threads —
+    // idle clusters of a wide topology must not cost Bc/Ac allocations.
+    let shareds: Vec<Option<ClusterShared>> = soc
+        .cluster_ids()
+        .map(|ci| {
+            (th[ci.0] > 0).then(|| ClusterShared::new(trees.for_cluster(ci), th[ci.0], m, n, k))
+        })
+        .collect();
+    // Global barrier across every spawned thread for shared-Bc
+    // coordination.
     let global = Barrier::new(total);
+    let lead_tree = trees.for_cluster(soc.lead());
 
-    // Static coarse assignments.
-    let (big_work, little_work, queues);
-    match (spec.strategy, spec.coarse) {
+    // Dynamic strategies: one queue per (jc, pc) iteration, shared by
+    // every cluster. Built up-front so the per-cluster assignments can
+    // borrow it.
+    let queues: Vec<DynamicQueue> = if spec.strategy.is_dynamic() {
+        let nc = lead_tree.params.nc;
+        let kc = lead_tree.params.kc;
+        let iters = n.div_ceil(nc).max(1) * k.div_ceil(kc).max(1);
+        (0..iters).map(|_| DynamicQueue::new(m)).collect()
+    } else {
+        Vec::new()
+    };
+
+    // Per-cluster coarse assignments, indexed by ClusterId.
+    let works: Vec<CoarseWork> = match (&spec.strategy, spec.coarse) {
         (Strategy::ClusterOnly { .. }, _) => {
-            queues = Vec::new();
             let full_n = Chunk { start: 0, len: n };
-            big_work = CoarseWork::Columns(full_n);
-            little_work = CoarseWork::Columns(full_n);
+            vec![CoarseWork::Columns(full_n); soc.num_clusters()]
         }
         (Strategy::Das | Strategy::CaDas, _) => {
-            // One queue per (jc, pc) iteration, shared by both clusters.
-            let nc = trees.big.params.nc;
-            let kc = trees.big.params.kc;
-            let iters = n.div_ceil(nc).max(1) * k.div_ceil(kc).max(1);
-            queues = (0..iters).map(|_| DynamicQueue::new(m)).collect::<Vec<_>>();
-            big_work = CoarseWork::Dynamic(&[]); // placeholder, set below
-            little_work = CoarseWork::Dynamic(&[]);
-            // (replaced after queues are alive — see spawn below)
-            let _ = (big_work, little_work);
-            return run_workers(
-                soc, spec, &trees, &job, tb, tl, &big_shared, &little_shared, &global,
-                CoarseWork::Dynamic(&queues), CoarseWork::Dynamic(&queues),
-            );
+            vec![CoarseWork::Dynamic(&queues); soc.num_clusters()]
         }
         (_, CoarseLoop::Loop1) => {
-            queues = Vec::new();
-            let (wb, wl) = spec.coarse_weights().expect("static");
-            let parts = split_weighted(n, &[wb, wl], trees.big.params.nr);
-            big_work = CoarseWork::Columns(parts[0]);
-            little_work = CoarseWork::Columns(parts[1]);
+            let w = spec.coarse_weights(soc).expect("static");
+            let parts = split_weighted(n, &w, lead_tree.params.nr);
+            parts.into_iter().map(CoarseWork::Columns).collect()
         }
         (_, CoarseLoop::Loop3) => {
-            queues = Vec::new();
-            let (wb, wl) = spec.coarse_weights().expect("static");
-            let parts = split_weighted(m, &[wb, wl], trees.big.params.mr);
-            big_work = CoarseWork::Rows(parts[0]);
-            little_work = CoarseWork::Rows(parts[1]);
+            let w = spec.coarse_weights(soc).expect("static");
+            let parts = split_weighted(m, &w, lead_tree.params.mr);
+            parts.into_iter().map(CoarseWork::Rows).collect()
         }
-    }
-    let _ = &queues;
-    run_workers(
-        soc, spec, &trees, &job, tb, tl, &big_shared, &little_shared, &global, big_work,
-        little_work,
-    )
-}
+    };
 
-#[allow(clippy::too_many_arguments)]
-fn run_workers(
-    soc: &SocSpec,
-    spec: &ScheduleSpec,
-    trees: &crate::blis::control_tree::TreeSet,
-    job: &Job,
-    tb: usize,
-    tl: usize,
-    big_shared: &ClusterShared,
-    little_shared: &ClusterShared,
-    global: &Barrier,
-    big_work: CoarseWork,
-    little_work: CoarseWork,
-) -> NativeStats {
-    let needs_global = matches!(big_work, CoarseWork::Rows(_) | CoarseWork::Dynamic(_))
-        && tb > 0
-        && tl > 0;
+    let needs_global = active_clusters > 1
+        && works
+            .iter()
+            .any(|w| matches!(w, CoarseWork::Rows(_) | CoarseWork::Dynamic(_)));
+
     let t0 = Instant::now();
     std::thread::scope(|s| {
         let mut handles = Vec::new();
-        for local in 0..tb {
-            let w = match &big_work {
-                CoarseWork::Columns(c) => CoarseWork::Columns(*c),
-                CoarseWork::Rows(c) => CoarseWork::Rows(*c),
-                CoarseWork::Dynamic(q) => CoarseWork::Dynamic(q),
-            };
-            let tree = &trees.big;
-            handles.push(s.spawn(move || {
-                cluster_worker(
-                    CoreType::Big, local, tb, tree, job, big_shared, global, needs_global, w,
-                )
-            }));
-        }
-        for local in 0..tl {
-            let w = match &little_work {
-                CoarseWork::Columns(c) => CoarseWork::Columns(*c),
-                CoarseWork::Rows(c) => CoarseWork::Rows(*c),
-                CoarseWork::Dynamic(q) => CoarseWork::Dynamic(q),
-            };
-            let tree = &trees.little;
-            handles.push(s.spawn(move || {
-                cluster_worker(
-                    CoreType::Little, local, tl, tree, job, little_shared, global, needs_global, w,
-                )
-            }));
+        for ci in soc.cluster_ids() {
+            let team = th[ci.0];
+            if team == 0 {
+                continue;
+            }
+            let tree = trees.for_cluster(ci);
+            let shared = shareds[ci.0].as_ref().expect("active cluster has shared state");
+            let work = works[ci.0];
+            let (global, job) = (&global, &job);
+            for local in 0..team {
+                handles.push(s.spawn(move || {
+                    cluster_worker(local, team, tree, job, shared, global, needs_global, work)
+                }));
+            }
         }
         for h in handles {
             h.join().expect("worker panicked");
         }
     });
     let wall = t0.elapsed().as_secs_f64();
-    let grabs = *big_shared.grabs.lock().unwrap() + *little_shared.grabs.lock().unwrap();
-    let _ = soc;
+    let grabs: u64 = shareds
+        .iter()
+        .flatten()
+        .map(|sh| *sh.grabs.lock().unwrap())
+        .sum();
     NativeStats {
-        label: spec.label(),
+        label: spec.label_on(soc),
         shape: job.shape,
         wall_s: wall,
         gflops: job.shape.flops() / wall / 1e9,
-        threads: tb + tl,
+        threads: total,
         grabs,
     }
 }
@@ -256,7 +235,6 @@ fn run_workers(
 /// loops in lockstep; phases are separated by the cluster barrier.
 #[allow(clippy::too_many_arguments)]
 fn cluster_worker(
-    _core: CoreType,
     local: usize,
     team: usize,
     tree: &ControlTree,
@@ -321,7 +299,8 @@ fn cluster_worker(
                     let q = &queues[q_idx];
                     loop {
                         // Lead grabs inside the critical section (§5.4)
-                        // and broadcasts through the slot.
+                        // and broadcasts through the slot. The grab size
+                        // is this cluster's own mc — the CA-DAS move.
                         if local == 0 {
                             let g = q.grab(p.mc);
                             if g.is_some() {
@@ -388,20 +367,24 @@ fn process_chunk(
     let w4 = tree.par.loop4_ways.min(team).max(1);
     let w5 = (team / w4).max(1);
     let (i4, i5) = (local % w4, local / w4);
-    let jr_parts = split_symmetric(n_jr, w4, 1);
-    let ir_parts = split_symmetric(n_ir, w5, 1);
-    let (jr, ir) = (jr_parts[i4], ir_parts[i5.min(w5 - 1)]);
+    // A thread beyond the w4×w5 grid computes nothing (it still takes
+    // the barriers below) — a duplicate assignment here would race on C.
+    if i5 < w5 {
+        let jr_parts = split_symmetric(n_jr, w4, 1);
+        let ir_parts = split_symmetric(n_ir, w5, 1);
+        let (jr, ir) = (jr_parts[i4], ir_parts[i5]);
 
-    // SAFETY: C windows are disjoint across threads (distinct jr/ir
-    // panel ranges; distinct row/col blocks across clusters).
-    unsafe {
-        let c_all = std::slice::from_raw_parts_mut(job.c.0, job.c.1);
-        let ac = shared.ac.slice();
-        let bc = shared.bc.slice();
-        macro_kernel(
-            &p, ac, bc, kc_eff, mc_eff, nc_eff, c_all, n, rows.start, col0,
-            jr.start..jr.end(), ir.start..ir.end(),
-        );
+        // SAFETY: C windows are disjoint across threads (distinct jr/ir
+        // panel ranges; distinct row/col blocks across clusters).
+        unsafe {
+            let c_all = std::slice::from_raw_parts_mut(job.c.0, job.c.1);
+            let ac = shared.ac.slice();
+            let bc = shared.bc.slice();
+            macro_kernel(
+                &p, ac, bc, kc_eff, mc_eff, nc_eff, c_all, n, rows.start, col0,
+                jr.start..jr.end(), ir.start..ir.end(),
+            );
+        }
     }
     shared.barrier.wait();
 }
@@ -410,6 +393,8 @@ fn process_chunk(
 mod tests {
     use super::*;
     use crate::blis::gemm::gemm_naive;
+    use crate::sched::Weights;
+    use crate::soc::{BIG, LITTLE};
     use crate::util::rng::Rng;
     use crate::util::stats::{gemm_tolerance, max_abs_diff};
 
@@ -417,7 +402,7 @@ mod tests {
         SocSpec::exynos5422()
     }
 
-    fn check(spec: ScheduleSpec, m: usize, n: usize, k: usize, seed: u64) {
+    fn check_on(soc: &SocSpec, spec: ScheduleSpec, m: usize, n: usize, k: usize, seed: u64) {
         let mut rng = Rng::new(seed);
         let a = rng.fill_matrix(m * k);
         let b = rng.fill_matrix(k * n);
@@ -425,13 +410,18 @@ mod tests {
         let mut c_ref = c0.clone();
         gemm_naive(GemmShape { m, n, k }, &a, &b, &mut c_ref);
         let mut c_par = c0.clone();
-        let stats = gemm_parallel(&soc(), &spec, GemmShape { m, n, k }, &a, &b, &mut c_par);
+        let stats = gemm_parallel(soc, &spec, GemmShape { m, n, k }, &a, &b, &mut c_par);
         let d = max_abs_diff(&c_ref, &c_par);
         assert!(
             d < gemm_tolerance(k),
-            "{} m={m} n={n} k={k}: diff {d}",
-            stats.label
+            "{} on {} m={m} n={n} k={k}: diff {d}",
+            stats.label,
+            soc.name
         );
+    }
+
+    fn check(spec: ScheduleSpec, m: usize, n: usize, k: usize, seed: u64) {
+        check_on(&soc(), spec, m, n, k, seed);
     }
 
     #[test]
@@ -452,7 +442,7 @@ mod tests {
         check(ScheduleSpec::ca_sas(5.0), 100, 100, 60, 20);
         check(
             ScheduleSpec::new(
-                Strategy::CaSas { ratio: 3.0 },
+                Strategy::CaSas { weights: Weights::ratio(3.0) },
                 CoarseLoop::Loop3,
                 crate::sched::FineLoop::Loop4,
             ),
@@ -479,7 +469,11 @@ mod tests {
                 90, 90, 50, 40 + i as u64,
             );
             check(
-                ScheduleSpec::new(Strategy::Sas { ratio: 5.0 }, CoarseLoop::Loop1, fine),
+                ScheduleSpec::new(
+                    Strategy::Sas { weights: Weights::ratio(5.0) },
+                    CoarseLoop::Loop1,
+                    fine,
+                ),
                 90, 90, 50, 50 + i as u64,
             );
         }
@@ -488,9 +482,9 @@ mod tests {
     #[test]
     fn cluster_only_correct() {
         for t in 1..=4 {
-            check(ScheduleSpec::cluster_only(CoreType::Big, t), 64, 64, 64, 60 + t as u64);
+            check(ScheduleSpec::cluster_only(BIG, t), 64, 64, 64, 60 + t as u64);
             check(
-                ScheduleSpec::cluster_only(CoreType::Little, t),
+                ScheduleSpec::cluster_only(LITTLE, t),
                 48, 80, 32, 70 + t as u64,
             );
         }
@@ -518,6 +512,31 @@ mod tests {
         assert!(stats.grabs >= 4, "grabs {}", stats.grabs);
     }
 
+    /// The generalized executor on non-Exynos topologies: a tri-cluster
+    /// DynamIQ-style SoC (9 threads, three distinct control trees) and
+    /// the symmetric single-cluster degenerate case.
+    #[test]
+    fn other_topologies_correct() {
+        let tri = SocSpec::dynamiq_3c();
+        check_on(&tri, ScheduleSpec::sss(), 96, 88, 44, 100);
+        check_on(
+            &tri,
+            ScheduleSpec::sas_weighted(Weights::from_slice(&[6.0, 3.0, 1.0])),
+            120, 80, 36, 101,
+        );
+        check_on(
+            &tri,
+            ScheduleSpec::ca_sas_weighted(Weights::from_slice(&[5.0, 2.0, 1.0])),
+            77, 91, 53, 102,
+        );
+        check_on(&tri, ScheduleSpec::ca_das(), 200, 60, 40, 103);
+        check_on(&tri, ScheduleSpec::cluster_only(crate::soc::ClusterId(1), 3), 64, 64, 32, 104);
+
+        let smp = SocSpec::symmetric(4);
+        check_on(&smp, ScheduleSpec::sss(), 90, 90, 45, 110);
+        check_on(&smp, ScheduleSpec::ca_das(), 150, 70, 38, 111);
+    }
+
     /// Property: random shapes × every strategy family agree with naive.
     #[test]
     fn prop_all_strategies_correct() {
@@ -537,7 +556,7 @@ mod tests {
                     2 => ScheduleSpec::ca_sas(3.0),
                     3 => ScheduleSpec::das(),
                     4 => ScheduleSpec::ca_das(),
-                    _ => ScheduleSpec::cluster_only(CoreType::Big, 4),
+                    _ => ScheduleSpec::cluster_only(BIG, 4),
                 };
                 let mut rng = Rng::new(seed);
                 let a = rng.fill_matrix(m * k);

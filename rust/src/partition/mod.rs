@@ -4,12 +4,14 @@
 //!
 //! * **symmetric static** — BLIS's default: the range divided into
 //!   near-equal contiguous chunks, one per way (§3.1/§4);
-//! * **weighted static** — the SAS ratio mechanism (§5.2): chunks sized
-//!   proportionally to per-way weights (e.g. `[ratio, 1]` for the
-//!   big/LITTLE clusters);
+//! * **weighted static** — the SAS mechanism (§5.2), N-way: chunks
+//!   sized proportionally to per-way weights (the paper's `[ratio, 1]`
+//!   big/LITTLE split is the two-cluster case; a tri-cluster SoC feeds
+//!   a three-entry vector, and so on);
 //! * **dynamic queue** — the CA-DAS mechanism (§5.4): ways grab chunks
 //!   of *their own* size (the grabber's `mc`) from a shared range under
-//!   a critical section.
+//!   a critical section — any number of clusters, each with its own
+//!   native chunk size.
 //!
 //! All partitioners round chunk boundaries to a stride (the register
 //! blocking `nr`/`mr`, or `mc`/`nc` for coarse loops) so no micro-kernel
@@ -274,6 +276,98 @@ mod tests {
             |(extent, stride, weights)| {
                 let cs = split_weighted(*extent, weights, *stride);
                 validate_partition(*extent, *stride, &cs)
+            },
+        );
+    }
+
+    /// N-cluster weighted-static invariants: for 1–6 clusters with
+    /// heavily skewed weight vectors (up to 3 orders of magnitude, plus
+    /// zero-weight clusters), the chunks stay disjoint, contiguous,
+    /// exactly covering, and stride-aligned at interior boundaries.
+    #[test]
+    fn prop_n_cluster_weighted_invariants() {
+        prop::check_default(
+            |r| {
+                let extent = r.gen_range(0, 30_000);
+                let stride = *r.choose(&[1usize, 4, 32, 80, 152]);
+                let clusters = r.gen_range(1, 7); // 1..=6 clusters
+                let weights: Vec<f64> = (0..clusters)
+                    .map(|_| {
+                        // Skewed: zero, tiny, or huge weights mixed.
+                        match r.gen_range(0, 4) {
+                            0 if clusters > 1 => 0.0,
+                            1 => r.gen_f64(0.01, 0.1),
+                            2 => r.gen_f64(0.5, 2.0),
+                            _ => r.gen_f64(10.0, 100.0),
+                        }
+                    })
+                    .collect();
+                (extent, stride, weights)
+            },
+            |(extent, stride, weights)| {
+                if weights.iter().sum::<f64>() <= 0.0 {
+                    return Ok(()); // all-zero vectors are rejected by assert
+                }
+                let cs = split_weighted(*extent, weights, *stride);
+                if cs.len() != weights.len() {
+                    return Err(format!("{} chunks for {} ways", cs.len(), weights.len()));
+                }
+                validate_partition(*extent, *stride, &cs)?;
+                // A zero-weight cluster must never get more than the
+                // rounding quantum of work.
+                for (i, (&w, c)) in weights.iter().zip(&cs).enumerate() {
+                    if w == 0.0 && c.len > *stride {
+                        return Err(format!(
+                            "zero-weight way {i} got {} iterations (stride {stride})",
+                            c.len
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// N-cluster dynamic queue: clusters with different native chunk
+    /// sizes drain a shared range; the grabbed chunks must be disjoint,
+    /// contiguous, exactly covering, and every non-final chunk must be
+    /// exactly the grabbing cluster's own size (the CA-DAS contract).
+    #[test]
+    fn prop_n_cluster_dynamic_queue_invariants() {
+        prop::check_default(
+            |r| {
+                let extent = r.gen_range(1, 8_000);
+                let clusters = r.gen_range(1, 7); // 1..=6 clusters
+                let sizes: Vec<usize> = (0..clusters)
+                    .map(|_| *r.choose(&[32usize, 68, 80, 152, 300]))
+                    .collect();
+                (extent, sizes, r.next_u64())
+            },
+            |(extent, sizes, seed)| {
+                let q = DynamicQueue::new(*extent);
+                let mut order = crate::util::rng::Rng::new(*seed);
+                let mut chunks = Vec::new();
+                loop {
+                    // A random cluster reaches the critical section next.
+                    let who = order.gen_range(0, sizes.len());
+                    match q.grab(sizes[who]) {
+                        Some(c) => {
+                            if c.len != sizes[who] && c.end() != *extent {
+                                return Err(format!(
+                                    "non-final chunk {c:?} not the grabber's size {}",
+                                    sizes[who]
+                                ));
+                            }
+                            chunks.push(c);
+                        }
+                        None => break,
+                    }
+                }
+                validate_partition(*extent, 1, &chunks)?;
+                if q.remaining() != 0 {
+                    return Err(format!("{} iterations left undrained", q.remaining()));
+                }
+                Ok(())
             },
         );
     }

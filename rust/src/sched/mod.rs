@@ -1,4 +1,4 @@
-//! Scheduling strategies (paper §4–§5).
+//! Scheduling strategies (paper §4–§5), generalized to N clusters.
 //!
 //! A [`ScheduleSpec`] describes one complete configuration of the
 //! multi-threaded GEMM:
@@ -7,19 +7,94 @@
 //!   tree(s): isolated clusters (§3.4), symmetric-static SSS (§4),
 //!   static-asymmetric SAS (§5.2), cache-aware CA-SAS (§5.3), dynamic
 //!   DAS / CA-DAS (§5.4);
-//! * the **coarse-grain loop** distributing micro-kernels between the
-//!   two clusters (Loop 1 or Loop 3, §5.2.1);
+//! * the **coarse-grain loop** distributing micro-kernels between
+//!   clusters (Loop 1 or Loop 3, §5.2.1);
 //! * the **fine-grain loop** distributing a macro-kernel among the cores
 //!   of one cluster (Loop 4, Loop 5 or both, §5.2.1).
+//!
+//! The paper's big:LITTLE `ratio` is the two-cluster special case of an
+//! N-way weight vector ([`Weights`]): SAS/CA-SAS feed it straight into
+//! the weighted-static partitioner, so the same machinery schedules a
+//! tri-cluster DynamIQ SoC or a symmetric SMP. Cache-aware strategies
+//! derive each cluster's control tree from *that cluster's* tuned
+//! parameters (and its own shared-`kc` refit under Loop 3), instead of
+//! a hard-coded big/LITTLE pair.
 //!
 //! Both the DES simulator (`crate::sim`) and the real-thread executor
 //! (`crate::native`) consume the same spec, so the shapes measured in
 //! the figures and the numerics verified in tests come from one
 //! description of the schedule.
 
-use crate::blis::control_tree::{Parallelism, TreeSet};
+use crate::blis::control_tree::{ControlTree, Parallelism, TreeSet};
 use crate::blis::params::BlisParams;
-use crate::soc::{CoreType, SocSpec};
+use crate::soc::{ClusterId, SocSpec};
+
+/// Upper bound on clusters a [`Weights`] vector can address. Keeps
+/// `ScheduleSpec` `Copy` (stack array, no allocation); far above any
+/// real AMP topology.
+pub const MAX_CLUSTERS: usize = 8;
+
+/// Per-cluster work-distribution weights for the static-asymmetric
+/// strategies: cluster `i` receives a share proportional to `w[i]`
+/// (§5.2's `ratio` is `Weights::ratio(r)` = `[r, 1]`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Weights {
+    w: [f64; MAX_CLUSTERS],
+    n: usize,
+}
+
+impl Weights {
+    /// Build from explicit per-cluster weights (one per cluster, in
+    /// [`ClusterId`] order).
+    pub fn from_slice(ws: &[f64]) -> Self {
+        assert!(
+            (1..=MAX_CLUSTERS).contains(&ws.len()),
+            "need 1..={MAX_CLUSTERS} weights, got {}",
+            ws.len()
+        );
+        assert!(
+            ws.iter().all(|&x| x.is_finite() && x >= 0.0),
+            "weights must be finite and non-negative: {ws:?}"
+        );
+        assert!(ws.iter().sum::<f64>() > 0.0, "at least one positive weight");
+        let mut w = [0.0; MAX_CLUSTERS];
+        w[..ws.len()].copy_from_slice(ws);
+        Weights { w, n: ws.len() }
+    }
+
+    /// The paper's two-cluster ratio: the fast cluster gets `ratio`
+    /// times the slow cluster's share (§5.2).
+    pub fn ratio(ratio: f64) -> Self {
+        assert!(ratio > 0.0, "ratio must be positive, got {ratio}");
+        Weights::from_slice(&[ratio, 1.0])
+    }
+
+    /// Equal shares for `n` clusters.
+    pub fn uniform(n: usize) -> Self {
+        Weights::from_slice(&vec![1.0; n])
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.w[..self.n]
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// The two-cluster ratio this weight vector encodes, if it does.
+    pub fn as_ratio(&self) -> Option<f64> {
+        if self.n == 2 && self.w[1] == 1.0 {
+            Some(self.w[0])
+        } else {
+            None
+        }
+    }
+}
 
 /// Which outer loop distributes work *between clusters* (§5.2.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -84,18 +159,19 @@ impl FineLoop {
 pub enum Strategy {
     /// Only one cluster, `threads` cores, its optimal parameters
     /// (§3.4's isolated-cluster baselines and the Fig. 5 curves).
-    ClusterOnly { core: CoreType, threads: usize },
-    /// Symmetric-static: both clusters, equal shares, single control
-    /// tree with the big cluster's parameters (§4, Fig. 6/7).
+    ClusterOnly { cluster: ClusterId, threads: usize },
+    /// Symmetric-static: every cluster an equal share, single control
+    /// tree with the lead cluster's parameters (§4, Fig. 6/7).
     Sss,
-    /// Static-asymmetric with a performance `ratio` (big gets `ratio`×
-    /// the LITTLE share), single (big-parameter) control tree (§5.2).
-    Sas { ratio: f64 },
-    /// SAS plus duplicated cache-aware control trees (§5.3).
-    CaSas { ratio: f64 },
+    /// Static-asymmetric with per-cluster `weights`, single
+    /// (lead-parameter) control tree (§5.2).
+    Sas { weights: Weights },
+    /// SAS plus per-cluster cache-aware control trees (§5.3).
+    CaSas { weights: Weights },
     /// Dynamic distribution, single control tree (§5.4 "DAS").
     Das,
-    /// Dynamic distribution, duplicated control trees (§5.4 "CA-DAS").
+    /// Dynamic distribution, per-cluster control trees (§5.4 "CA-DAS"):
+    /// each cluster grabs chunks of its own native `mc`.
     CaDas,
 }
 
@@ -106,9 +182,9 @@ impl Strategy {
     pub fn is_cache_aware(self) -> bool {
         matches!(self, Strategy::CaSas { .. } | Strategy::CaDas)
     }
-    pub fn ratio(self) -> Option<f64> {
+    pub fn weights(self) -> Option<Weights> {
         match self {
-            Strategy::Sas { ratio } | Strategy::CaSas { ratio } => Some(ratio),
+            Strategy::Sas { weights } | Strategy::CaSas { weights } => Some(weights),
             _ => None,
         }
     }
@@ -138,12 +214,20 @@ impl ScheduleSpec {
         // §4: Loop 1 across clusters + Loop 4 within.
         ScheduleSpec::new(Strategy::Sss, CoarseLoop::Loop1, FineLoop::Loop4)
     }
+    /// Two-cluster SAS with the paper's big:LITTLE ratio (§5.2.2:
+    /// reported combination Loop 1 + Loop 4).
     pub fn sas(ratio: f64) -> Self {
-        // §5.2.2: reported combination Loop 1 + Loop 4.
-        ScheduleSpec::new(Strategy::Sas { ratio }, CoarseLoop::Loop1, FineLoop::Loop4)
+        ScheduleSpec::sas_weighted(Weights::ratio(ratio))
+    }
+    /// N-cluster SAS with an explicit weight vector.
+    pub fn sas_weighted(weights: Weights) -> Self {
+        ScheduleSpec::new(Strategy::Sas { weights }, CoarseLoop::Loop1, FineLoop::Loop4)
     }
     pub fn ca_sas(ratio: f64) -> Self {
-        ScheduleSpec::new(Strategy::CaSas { ratio }, CoarseLoop::Loop1, FineLoop::Loop4)
+        ScheduleSpec::ca_sas_weighted(Weights::ratio(ratio))
+    }
+    pub fn ca_sas_weighted(weights: Weights) -> Self {
+        ScheduleSpec::new(Strategy::CaSas { weights }, CoarseLoop::Loop1, FineLoop::Loop4)
     }
     pub fn ca_das() -> Self {
         // §5.4: dynamic over Loop 3 + fine Loop 4.
@@ -152,9 +236,9 @@ impl ScheduleSpec {
     pub fn das() -> Self {
         ScheduleSpec::new(Strategy::Das, CoarseLoop::Loop3, FineLoop::Loop4)
     }
-    pub fn cluster_only(core: CoreType, threads: usize) -> Self {
+    pub fn cluster_only(cluster: ClusterId, threads: usize) -> Self {
         ScheduleSpec::new(
-            Strategy::ClusterOnly { core, threads },
+            Strategy::ClusterOnly { cluster, threads },
             CoarseLoop::Loop1,
             FineLoop::Loop4,
         )
@@ -171,28 +255,58 @@ impl ScheduleSpec {
                 return Err("ClusterOnly needs at least one thread".into());
             }
         }
-        if let Some(r) = self.strategy.ratio() {
-            if !(r > 0.0) {
-                return Err(format!("ratio must be positive, got {r}"));
+        Ok(())
+    }
+
+    /// Validate against a concrete topology: weight vectors must name
+    /// exactly one weight per cluster, and `ClusterOnly` must address an
+    /// existing cluster.
+    pub fn validate_for(&self, soc: &SocSpec) -> Result<(), String> {
+        self.validate()?;
+        if let Some(w) = self.strategy.weights() {
+            if w.len() != soc.num_clusters() {
+                return Err(format!(
+                    "weight vector has {} entries but '{}' has {} clusters",
+                    w.len(),
+                    soc.name,
+                    soc.num_clusters()
+                ));
+            }
+        }
+        if let Strategy::ClusterOnly { cluster, .. } = self.strategy {
+            if cluster.0 >= soc.num_clusters() {
+                return Err(format!(
+                    "cluster {cluster} does not exist on '{}' ({} clusters)",
+                    soc.name,
+                    soc.num_clusters()
+                ));
             }
         }
         Ok(())
     }
 
-    /// Threads used on each cluster `(big, little)`.
-    pub fn threads(&self, soc: &SocSpec) -> (usize, usize) {
+    /// Threads used on each cluster, indexed by [`ClusterId`].
+    pub fn threads(&self, soc: &SocSpec) -> Vec<usize> {
         match self.strategy {
-            Strategy::ClusterOnly { core, threads } => match core {
-                CoreType::Big => (threads.min(soc.big.num_cores), 0),
-                CoreType::Little => (0, threads.min(soc.little.num_cores)),
-            },
-            _ => (soc.big.num_cores, soc.little.num_cores),
+            Strategy::ClusterOnly { cluster, threads } => soc
+                .cluster_ids()
+                .map(|c| {
+                    if c == cluster {
+                        threads.min(soc[c].num_cores)
+                    } else {
+                        0
+                    }
+                })
+                .collect(),
+            _ => soc.clusters.iter().map(|c| c.num_cores).collect(),
         }
     }
 
-    /// The control tree pair this schedule runs with.
+    /// The per-cluster control trees this schedule runs with.
     pub fn tree_set(&self, soc: &SocSpec) -> TreeSet {
-        let (tb, tl) = self.threads(soc);
+        self.validate_for(soc).expect("invalid schedule spec for topology");
+        let th = self.threads(soc);
+        let n_cl = soc.num_clusters();
         let par = |threads: usize, coarse_ways: usize| {
             let (w4, w5) = self.fine.ways(threads.max(1));
             Parallelism {
@@ -202,55 +316,119 @@ impl ScheduleSpec {
                 loop5_ways: w5,
             }
         };
+        // Parallelism is always derived from each cluster's OWN thread
+        // count — replicating the lead cluster's fine-grain ways onto a
+        // differently-sized cluster would hand surplus threads duplicate
+        // (jr, ir) assignments. Only the *blocking parameters* are
+        // lead-replicated for the oblivious strategies.
         match self.strategy {
-            Strategy::ClusterOnly { core, .. } => {
-                let params = BlisParams::optimal_for(core);
-                TreeSet::single(params, par(tb.max(tl), 1))
+            Strategy::ClusterOnly { cluster, .. } => {
+                let params = soc[cluster].tuned;
+                let trees = soc
+                    .cluster_ids()
+                    .map(|c| ControlTree::gemm(params, par(th[c.0].max(1), 1)))
+                    .collect();
+                TreeSet::from_trees(trees, false)
             }
-            // Architecture-oblivious configurations run the big cluster's
-            // optimal parameters everywhere (§4: "cache configuration
-            // parameters are set to those that are optimal for the
-            // Cortex-A15"), including plain SAS and DAS.
+            // Architecture-oblivious configurations run the lead
+            // cluster's optimal parameters everywhere (§4: "cache
+            // configuration parameters are set to those that are optimal
+            // for the Cortex-A15"), including plain SAS and DAS.
             Strategy::Sss | Strategy::Sas { .. } | Strategy::Das => {
-                TreeSet::single(BlisParams::a15_opt(), par(tb, 2))
+                let params = soc[soc.lead()].tuned;
+                let trees = soc
+                    .cluster_ids()
+                    .map(|c| ControlTree::gemm(params, par(th[c.0].max(1), n_cl)))
+                    .collect();
+                TreeSet::from_trees(trees, self.coarse.shares_bc())
             }
-            Strategy::CaSas { .. } | Strategy::CaDas => TreeSet::cache_aware(
-                par(tb, 2),
-                par(tl, 2),
-                self.coarse.shares_bc(),
-            ),
+            // Cache-aware configurations build one tree per cluster from
+            // that cluster's own tuned parameters; under a shared Bc
+            // (coarse Loop 3) every cluster refits to the lead kc AND
+            // the lead nc — the Bc buffer is kc×nc, so the joint
+            // (jc, pc) walk needs both strides common.
+            Strategy::CaSas { .. } | Strategy::CaDas => {
+                let shared = self.coarse.shares_bc();
+                let lead = soc[soc.lead()].tuned;
+                let trees: Vec<ControlTree> = soc
+                    .cluster_ids()
+                    .map(|c| {
+                        let params = if shared {
+                            let p = soc[c].params_shared_kc(lead.kc);
+                            BlisParams::new(lead.nc, p.kc, p.mc, p.nr, p.mr)
+                        } else {
+                            soc[c].tuned
+                        };
+                        ControlTree::gemm(params, par(th[c.0], n_cl))
+                    })
+                    .collect();
+                TreeSet::from_trees(trees, shared)
+            }
         }
     }
 
-    /// Static coarse-split weights `(big, little)`; `None` for dynamic
+    /// Static coarse-split weights, one per cluster; `None` for dynamic
     /// strategies and isolated clusters.
-    pub fn coarse_weights(&self) -> Option<(f64, f64)> {
+    pub fn coarse_weights(&self, soc: &SocSpec) -> Option<Vec<f64>> {
         match self.strategy {
-            Strategy::Sss => Some((1.0, 1.0)),
-            Strategy::Sas { ratio } | Strategy::CaSas { ratio } => Some((ratio, 1.0)),
+            Strategy::Sss => Some(vec![1.0; soc.num_clusters()]),
+            Strategy::Sas { weights } | Strategy::CaSas { weights } => {
+                assert_eq!(
+                    weights.len(),
+                    soc.num_clusters(),
+                    "weight vector does not match the topology"
+                );
+                Some(weights.as_slice().to_vec())
+            }
             Strategy::Das | Strategy::CaDas | Strategy::ClusterOnly { .. } => None,
         }
     }
 
-    /// Human-readable label used in figures and CLI output.
+    /// Human-readable label used in figures and CLI output. Needs no
+    /// topology: two-cluster ratios print as the paper's `SAS(r=N)`,
+    /// general weight vectors as `SAS[w0:w1:…]`.
     pub fn label(&self) -> String {
-        let base = match self.strategy {
-            Strategy::ClusterOnly { core, threads } => {
-                return format!("{}x{}", threads, core.name());
+        let fmt_w = |w: &Weights| -> String {
+            match w.as_ratio() {
+                Some(r) => format!("(r={r:.0})"),
+                None => format!(
+                    "[{}]",
+                    w.as_slice()
+                        .iter()
+                        .map(|x| format!("{x:.1}"))
+                        .collect::<Vec<_>>()
+                        .join(":")
+                ),
+            }
+        };
+        let base = match &self.strategy {
+            Strategy::ClusterOnly { cluster, threads } => {
+                return format!("{}x{}", threads, cluster);
             }
             Strategy::Sss => "SSS".to_string(),
-            Strategy::Sas { ratio } => format!("SAS(r={ratio:.0})"),
-            Strategy::CaSas { ratio } => format!("CA-SAS(r={ratio:.0})"),
+            Strategy::Sas { weights } => format!("SAS{}", fmt_w(weights)),
+            Strategy::CaSas { weights } => format!("CA-SAS{}", fmt_w(weights)),
             Strategy::Das => "DAS".to_string(),
             Strategy::CaDas => "CA-DAS".to_string(),
         };
         format!("{base} {}+{}", self.coarse.name(), self.fine.name())
+    }
+
+    /// Label with the cluster's microarchitecture name resolved (the
+    /// figure-friendly variant of [`ScheduleSpec::label`]).
+    pub fn label_on(&self, soc: &SocSpec) -> String {
+        if let Strategy::ClusterOnly { cluster, threads } = self.strategy {
+            format!("{}x{}", threads, soc[cluster].name)
+        } else {
+            self.label()
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::soc::{BIG, LITTLE};
 
     fn soc() -> SocSpec {
         SocSpec::exynos5422()
@@ -264,9 +442,10 @@ mod tests {
             ScheduleSpec::ca_sas(3.0),
             ScheduleSpec::das(),
             ScheduleSpec::ca_das(),
-            ScheduleSpec::cluster_only(CoreType::Big, 4),
+            ScheduleSpec::cluster_only(BIG, 4),
         ] {
             s.validate().unwrap();
+            s.validate_for(&soc()).unwrap();
         }
     }
 
@@ -278,31 +457,38 @@ mod tests {
     }
 
     #[test]
-    fn sss_uses_single_a15_tree() {
+    fn sss_uses_single_lead_tree() {
         let ts = ScheduleSpec::sss().tree_set(&soc());
         assert!(!ts.is_cache_aware());
-        assert_eq!(ts.big.params, BlisParams::a15_opt());
-        assert_eq!(ts.little.params, BlisParams::a15_opt());
+        assert_eq!(ts.for_cluster(BIG).params, BlisParams::a15_opt());
+        assert_eq!(ts.for_cluster(LITTLE).params, BlisParams::a15_opt());
         // 2-way Loop 1 × 4-way Loop 4 = the paper's 8-way layout (Fig. 6).
-        assert_eq!(ts.big.par.loop1_ways, 2);
-        assert_eq!(ts.big.par.loop4_ways, 4);
+        assert_eq!(ts.for_cluster(BIG).par.loop1_ways, 2);
+        assert_eq!(ts.for_cluster(BIG).par.loop4_ways, 4);
     }
 
     #[test]
     fn ca_sas_loop1_uses_independent_optima() {
         let ts = ScheduleSpec::ca_sas(5.0).tree_set(&soc());
         assert!(ts.is_cache_aware());
-        assert_eq!(ts.little.params, BlisParams::a7_opt());
+        assert_eq!(ts.for_cluster(LITTLE).params, BlisParams::a7_opt());
     }
 
     #[test]
     fn ca_strategies_on_loop3_share_kc() {
-        let spec = ScheduleSpec::new(Strategy::CaSas { ratio: 5.0 }, CoarseLoop::Loop3, FineLoop::Loop4);
+        let spec = ScheduleSpec::new(
+            Strategy::CaSas { weights: Weights::ratio(5.0) },
+            CoarseLoop::Loop3,
+            FineLoop::Loop4,
+        );
         let ts = spec.tree_set(&soc());
-        assert_eq!(ts.little.params, BlisParams::a7_shared_kc());
+        assert_eq!(ts.for_cluster(LITTLE).params, BlisParams::a7_shared_kc());
         let dyn_ts = ScheduleSpec::ca_das().tree_set(&soc());
-        assert_eq!(dyn_ts.little.params, BlisParams::a7_shared_kc());
-        assert_eq!(dyn_ts.big.params.kc, dyn_ts.little.params.kc);
+        assert_eq!(dyn_ts.for_cluster(LITTLE).params, BlisParams::a7_shared_kc());
+        assert_eq!(
+            dyn_ts.for_cluster(BIG).params.kc,
+            dyn_ts.for_cluster(LITTLE).params.kc
+        );
     }
 
     #[test]
@@ -315,14 +501,14 @@ mod tests {
 
     #[test]
     fn threads_accounting() {
-        assert_eq!(ScheduleSpec::sss().threads(&soc()), (4, 4));
+        assert_eq!(ScheduleSpec::sss().threads(&soc()), vec![4, 4]);
         assert_eq!(
-            ScheduleSpec::cluster_only(CoreType::Little, 3).threads(&soc()),
-            (0, 3)
+            ScheduleSpec::cluster_only(LITTLE, 3).threads(&soc()),
+            vec![0, 3]
         );
         assert_eq!(
-            ScheduleSpec::cluster_only(CoreType::Big, 9).threads(&soc()),
-            (4, 0),
+            ScheduleSpec::cluster_only(BIG, 9).threads(&soc()),
+            vec![4, 0],
             "clamped to cluster size"
         );
     }
@@ -338,9 +524,13 @@ mod tests {
 
     #[test]
     fn coarse_weights() {
-        assert_eq!(ScheduleSpec::sss().coarse_weights(), Some((1.0, 1.0)));
-        assert_eq!(ScheduleSpec::sas(5.0).coarse_weights(), Some((5.0, 1.0)));
-        assert_eq!(ScheduleSpec::ca_das().coarse_weights(), None);
+        let s = soc();
+        assert_eq!(ScheduleSpec::sss().coarse_weights(&s), Some(vec![1.0, 1.0]));
+        assert_eq!(
+            ScheduleSpec::sas(5.0).coarse_weights(&s),
+            Some(vec![5.0, 1.0])
+        );
+        assert_eq!(ScheduleSpec::ca_das().coarse_weights(&s), None);
     }
 
     #[test]
@@ -348,21 +538,85 @@ mod tests {
         assert_eq!(ScheduleSpec::sss().label(), "SSS L1+L4");
         assert_eq!(ScheduleSpec::sas(5.0).label(), "SAS(r=5) L1+L4");
         assert_eq!(ScheduleSpec::ca_das().label(), "CA-DAS L3+L4");
+        assert_eq!(ScheduleSpec::cluster_only(BIG, 4).label(), "4xc0");
         assert_eq!(
-            ScheduleSpec::cluster_only(CoreType::Big, 4).label(),
+            ScheduleSpec::cluster_only(BIG, 4).label_on(&soc()),
             "4xCortex-A15"
         );
+        // N-way weight vectors print in full.
+        let w = ScheduleSpec::sas_weighted(Weights::from_slice(&[4.0, 2.0, 1.0]));
+        assert_eq!(w.label(), "SAS[4.0:2.0:1.0] L1+L4");
     }
 
     #[test]
     fn cluster_only_uses_that_clusters_optimum() {
-        let ts = ScheduleSpec::cluster_only(CoreType::Little, 4).tree_set(&soc());
-        assert_eq!(ts.big.params, BlisParams::a7_opt());
+        let ts = ScheduleSpec::cluster_only(LITTLE, 4).tree_set(&soc());
+        assert_eq!(ts.for_cluster(BIG).params, BlisParams::a7_opt());
     }
 
     #[test]
     #[should_panic]
     fn nonpositive_ratio_rejected() {
         ScheduleSpec::sas(0.0);
+    }
+
+    #[test]
+    fn weights_helpers() {
+        let w = Weights::from_slice(&[3.0, 2.0, 1.0]);
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.as_slice(), &[3.0, 2.0, 1.0]);
+        assert_eq!(w.as_ratio(), None);
+        assert_eq!(Weights::ratio(5.0).as_ratio(), Some(5.0));
+        assert_eq!(Weights::uniform(4).as_slice(), &[1.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive weight")]
+    fn all_zero_weight_vector_rejected() {
+        Weights::from_slice(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn tri_cluster_tree_set_has_three_distinct_trees() {
+        let tri = SocSpec::dynamiq_3c();
+        let spec = ScheduleSpec::ca_sas_weighted(Weights::from_slice(&[6.0, 3.0, 1.0]));
+        let ts = spec.tree_set(&tri);
+        assert_eq!(ts.num_clusters(), 3);
+        assert!(ts.is_cache_aware());
+        for c in tri.cluster_ids() {
+            assert_eq!(ts.for_cluster(c).params, tri[c].tuned);
+        }
+        // Shared-Bc dynamic: all three refit to the lead kc.
+        let dyn_ts = ScheduleSpec::ca_das().tree_set(&tri);
+        let kc = tri[tri.lead()].tuned.kc;
+        for c in tri.cluster_ids() {
+            assert_eq!(dyn_ts.for_cluster(c).params.kc, kc);
+        }
+    }
+
+    #[test]
+    fn symmetric_topology_degenerates() {
+        let smp = SocSpec::symmetric(4);
+        for spec in [
+            ScheduleSpec::sss(),
+            ScheduleSpec::sas_weighted(Weights::uniform(1)),
+            ScheduleSpec::das(),
+            ScheduleSpec::ca_das(),
+        ] {
+            spec.validate_for(&smp).unwrap();
+            let ts = spec.tree_set(&smp);
+            assert_eq!(ts.num_clusters(), 1);
+            assert!(!ts.is_cache_aware());
+        }
+    }
+
+    #[test]
+    fn mismatched_weight_vector_rejected_per_topology() {
+        let tri = SocSpec::dynamiq_3c();
+        // A two-cluster ratio cannot schedule a tri-cluster SoC.
+        assert!(ScheduleSpec::sas(5.0).validate_for(&tri).is_err());
+        assert!(ScheduleSpec::cluster_only(ClusterId(7), 2)
+            .validate_for(&tri)
+            .is_err());
     }
 }

@@ -2,16 +2,18 @@
 //! the §3.3 experiment behind Fig. 4.
 //!
 //! The paper fixes `nc = 4096` (no L3 cache), `mr = nr = 4` (the tuned
-//! micro-kernel) and sweeps (mc, kc) per core type, first on a coarse
+//! micro-kernel) and sweeps (mc, kc) per cluster, first on a coarse
 //! grid to locate the promising region, then on a fine grid inside it.
 //! We run the same two-phase protocol against the calibrated performance
 //! model (where the paper ran wall-clock GEMMs), and additionally support
-//! the §5.3 constrained refit: `kc` pinned to the big cluster's 952 and
-//! only `mc` swept for the LITTLE cores (finding mc ≈ 32).
+//! the §5.3 constrained refit: `kc` pinned to the lead cluster's 952 and
+//! only `mc` swept (finding mc ≈ 32 for the Exynos LITTLE cluster).
+//! Everything is keyed by [`ClusterId`], so the same search tunes any
+//! cluster of any topology — the data-driven path to new presets.
 
 use crate::blis::params::BlisParams;
 use crate::model::PerfModel;
-use crate::soc::CoreType;
+use crate::soc::ClusterId;
 use crate::util::table::Table;
 
 /// One sampled configuration.
@@ -25,7 +27,7 @@ pub struct SearchPoint {
 /// Result of a (coarse or fine) sweep.
 #[derive(Debug, Clone)]
 pub struct SearchResult {
-    pub core: CoreType,
+    pub cluster: ClusterId,
     pub points: Vec<SearchPoint>,
     pub best: SearchPoint,
 }
@@ -47,14 +49,14 @@ impl SearchResult {
 
 /// Rate of a single core with candidate parameters (single-thread, the
 /// §3.3 setup).
-fn rate(model: &PerfModel, core: CoreType, mc: usize, kc: usize) -> f64 {
+fn rate(model: &PerfModel, cluster: ClusterId, mc: usize, kc: usize) -> f64 {
     let p = BlisParams::new(4096, kc, mc, 4, 4);
-    model.steady_rate_gflops(core, &p, 1)
+    model.steady_rate_gflops(cluster, &p, 1)
 }
 
 fn sweep(
     model: &PerfModel,
-    core: CoreType,
+    cluster: ClusterId,
     mc_range: (usize, usize, usize),
     kc_range: (usize, usize, usize),
 ) -> SearchResult {
@@ -64,7 +66,7 @@ fn sweep(
     while mc <= mc_range.1 {
         let mut kc = kc_range.0;
         while kc <= kc_range.1 {
-            let g = rate(model, core, mc, kc);
+            let g = rate(model, cluster, mc, kc);
             let pt = SearchPoint { mc, kc, gflops: g };
             points.push(pt);
             if g > best.gflops {
@@ -74,36 +76,36 @@ fn sweep(
         }
         mc += mc_range.2;
     }
-    SearchResult { core, points, best }
+    SearchResult { cluster, points, best }
 }
 
 /// Coarse sweep over the full plausible region (§3.3's first phase).
-pub fn coarse_search(model: &PerfModel, core: CoreType) -> SearchResult {
+pub fn coarse_search(model: &PerfModel, cluster: ClusterId) -> SearchResult {
     // mc up to ~400 rows, kc up to the L1 bound neighbourhood.
-    sweep(model, core, (16, 400, 16), (64, 1024, 32))
+    sweep(model, cluster, (16, 400, 16), (64, 1024, 32))
 }
 
 /// Fine sweep around a coarse optimum (§3.3's second phase).
-pub fn fine_search(model: &PerfModel, core: CoreType, around: SearchPoint) -> SearchResult {
+pub fn fine_search(model: &PerfModel, cluster: ClusterId, around: SearchPoint) -> SearchResult {
     let mc_lo = around.mc.saturating_sub(32).max(4);
     let kc_lo = around.kc.saturating_sub(64).max(8);
-    sweep(model, core, (mc_lo, around.mc + 32, 4), (kc_lo, around.kc + 64, 8))
+    sweep(model, cluster, (mc_lo, around.mc + 32, 4), (kc_lo, around.kc + 64, 8))
 }
 
 /// Full two-phase search: coarse → fine, as in Fig. 4.
-pub fn two_phase_search(model: &PerfModel, core: CoreType) -> (SearchResult, SearchResult) {
-    let coarse = coarse_search(model, core);
-    let fine = fine_search(model, core, coarse.best);
+pub fn two_phase_search(model: &PerfModel, cluster: ClusterId) -> (SearchResult, SearchResult) {
+    let coarse = coarse_search(model, cluster);
+    let fine = fine_search(model, cluster, coarse.best);
     (coarse, fine)
 }
 
 /// §5.3 constrained refit: kc pinned (shared `Bc`), sweep mc only.
-pub fn shared_kc_refit(model: &PerfModel, core: CoreType, kc: usize) -> SearchResult {
+pub fn shared_kc_refit(model: &PerfModel, cluster: ClusterId, kc: usize) -> SearchResult {
     let mut points = Vec::new();
     let mut best = SearchPoint { mc: 0, kc, gflops: f64::NEG_INFINITY };
     let mut mc = 4;
     while mc <= 160 {
-        let g = rate(model, core, mc, kc);
+        let g = rate(model, cluster, mc, kc);
         let pt = SearchPoint { mc, kc, gflops: g };
         points.push(pt);
         if g > best.gflops {
@@ -111,12 +113,13 @@ pub fn shared_kc_refit(model: &PerfModel, core: CoreType, kc: usize) -> SearchRe
         }
         mc += 4;
     }
-    SearchResult { core, points, best }
+    SearchResult { cluster, points, best }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::soc::{SocSpec, BIG, LITTLE};
 
     fn model() -> PerfModel {
         PerfModel::exynos()
@@ -125,7 +128,7 @@ mod tests {
     /// Fig. 4: the A15 optimum lands near the paper's (152, 952).
     #[test]
     fn a15_optimum_near_paper() {
-        let (_, fine) = two_phase_search(&model(), CoreType::Big);
+        let (_, fine) = two_phase_search(&model(), BIG);
         let b = fine.best;
         assert!(
             (136..=168).contains(&b.mc) && (888..=1000).contains(&b.kc),
@@ -139,7 +142,7 @@ mod tests {
     /// Fig. 4: the A7 optimum lands near the paper's (80, 352).
     #[test]
     fn a7_optimum_near_paper() {
-        let (_, fine) = two_phase_search(&model(), CoreType::Little);
+        let (_, fine) = two_phase_search(&model(), LITTLE);
         let b = fine.best;
         assert!(
             (64..=96).contains(&b.mc) && (320..=390).contains(&b.kc),
@@ -152,7 +155,7 @@ mod tests {
     /// §5.3: with kc pinned to 952, the A7's best mc collapses to ≈ 32.
     #[test]
     fn shared_kc_refit_near_mc32() {
-        let r = shared_kc_refit(&model(), CoreType::Little, 952);
+        let r = shared_kc_refit(&model(), LITTLE, 952);
         assert!(
             (24..=40).contains(&r.best.mc),
             "shared-kc refit mc {}",
@@ -160,28 +163,28 @@ mod tests {
         );
         // And it is worse than the unconstrained optimum but better than
         // the oblivious A15 parameters (§5.3's observation).
-        let opt = rate(&model(), CoreType::Little, 80, 352);
-        let oblivious = rate(&model(), CoreType::Little, 152, 952);
+        let opt = rate(&model(), LITTLE, 80, 352);
+        let oblivious = rate(&model(), LITTLE, 152, 952);
         assert!(r.best.gflops < opt);
         assert!(r.best.gflops > oblivious);
     }
 
     #[test]
     fn coarse_grid_covers_paper_region() {
-        let c = coarse_search(&model(), CoreType::Big);
+        let c = coarse_search(&model(), BIG);
         assert!(c.points.len() > 500);
         assert!(c.points.iter().any(|p| p.mc == 144 && p.kc == 928));
     }
 
     #[test]
     fn fine_search_refines_coarse() {
-        let (coarse, fine) = two_phase_search(&model(), CoreType::Little);
+        let (coarse, fine) = two_phase_search(&model(), LITTLE);
         assert!(fine.best.gflops >= coarse.best.gflops - 1e-12);
     }
 
     #[test]
     fn heatmap_table_shape() {
-        let c = shared_kc_refit(&model(), CoreType::Little, 952);
+        let c = shared_kc_refit(&model(), LITTLE, 952);
         let t = c.to_table("refit");
         assert_eq!(t.columns, vec!["mc", "kc", "gflops"]);
         assert_eq!(t.rows.len(), c.points.len());
@@ -191,7 +194,24 @@ mod tests {
     fn big_outperforms_little_everywhere() {
         let m = model();
         for &(mc, kc) in &[(80usize, 352usize), (152, 952), (32, 952)] {
-            assert!(rate(&m, CoreType::Big, mc, kc) > rate(&m, CoreType::Little, mc, kc));
+            assert!(rate(&m, BIG, mc, kc) > rate(&m, LITTLE, mc, kc));
         }
+    }
+
+    /// The same machinery tunes every cluster of a tri-cluster topology:
+    /// the mid cluster's optimum sits between the big and LITTLE ones,
+    /// tracking its 1 MiB L2.
+    #[test]
+    fn tri_cluster_per_cluster_optima_ordered() {
+        let tri = PerfModel::new(SocSpec::dynamiq_3c());
+        let mut acs = Vec::new();
+        for c in tri.soc.cluster_ids() {
+            let (_, fine) = two_phase_search(&tri, c);
+            acs.push(fine.best.mc * fine.best.kc);
+        }
+        assert!(
+            acs[0] > acs[1] && acs[1] > acs[2],
+            "Ac footprints must track L2 sizes: {acs:?}"
+        );
     }
 }

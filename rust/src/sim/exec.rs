@@ -1,5 +1,5 @@
 //! The discrete-event simulator: executes a [`ScheduleSpec`] over the
-//! virtual Exynos 5422 and returns makespan, per-core activity, DRAM
+//! virtual AMP topology and returns makespan, per-core activity, DRAM
 //! traffic and energy.
 //!
 //! The simulation unit is a *cluster phase*: a packing pass or one
@@ -7,15 +7,18 @@
 //! phase advances the cluster's virtual clock by the slowest thread's
 //! share (plus barrier cost) and accrues per-thread busy/poll time —
 //! exactly the lockstep structure of the real executor in
-//! `crate::native`. Coarse-grain interaction between the two clusters
-//! happens at three points, mirroring the paper:
+//! `crate::native`. The engine is cluster-count-agnostic: it drives one
+//! [`ClusterSim`] per active cluster of the topology. Coarse-grain
+//! interaction between clusters happens at three points, mirroring the
+//! paper:
 //!
-//! * static Loop-1 coarse: none until the final join (§4/§5.2 — the
-//!   early cluster polls while the other finishes);
+//! * static Loop-1 coarse: none until the final join (§4/§5.2 — early
+//!   clusters poll while the others finish);
 //! * static/dynamic Loop-3 coarse: a global barrier per (jc, pc) pair,
 //!   because `Bc` is shared and must not be repacked while in use;
 //! * dynamic: a virtual critical section serializes chunk grabs
-//!   (§5.4), ordered by cluster virtual time.
+//!   (§5.4), ordered by cluster virtual time — any cluster grabs chunks
+//!   of its *own* native `mc`.
 
 use crate::blis::control_tree::ControlTree;
 use crate::blis::gemm::GemmShape;
@@ -27,15 +30,15 @@ use crate::partition::{split_weighted, Chunk};
 use crate::sched::{CoarseLoop, ScheduleSpec, Strategy};
 use crate::sim::stats::RunStats;
 use crate::sim::timeline::{PhaseKind, Timeline};
-use crate::soc::CoreType;
+use crate::soc::ClusterId;
 
 /// Widest cluster the stack-allocated phase buffers support (perf pass:
-/// avoids a Vec allocation per simulated phase, EXPERIMENTS.md §Perf).
+/// avoids a Vec allocation per simulated phase, DESIGN.md §7).
 const MAX_CLUSTER_THREADS: usize = 16;
 
 /// One cluster's simulated execution state.
 struct ClusterSim<'m> {
-    core: CoreType,
+    cluster: ClusterId,
     threads: usize,
     tree: ControlTree,
     model: &'m PerfModel,
@@ -45,7 +48,7 @@ struct ClusterSim<'m> {
     grabs: u64,
     barriers: u64,
     dram_bytes: f64,
-    /// Whether the complementary cluster also computes in this run.
+    /// Whether at least one other cluster also computes in this run.
     other_active: bool,
     /// Does this cluster's `Ac` overflow its L2 (per-jr re-streaming)?
     ac_overflows: bool,
@@ -59,16 +62,16 @@ struct ClusterSim<'m> {
 impl<'m> ClusterSim<'m> {
     fn new(
         model: &'m PerfModel,
-        core: CoreType,
+        cluster: ClusterId,
         threads: usize,
         tree: ControlTree,
         other_active: bool,
     ) -> Self {
-        let cluster = model.soc.cluster(core);
+        let spec = &model.soc[cluster];
         assert!(threads <= MAX_CLUSTER_THREADS, "cluster too wide for the sim");
-        let fit = FootprintAnalysis::for_cluster(cluster).fit(&tree.params);
+        let fit = FootprintAnalysis::for_cluster(spec).fit(&tree.params);
         ClusterSim {
-            core,
+            cluster,
             threads,
             tree,
             model,
@@ -92,7 +95,7 @@ impl<'m> ClusterSim<'m> {
         let span = per_thread.iter().cloned().fold(0.0, f64::max);
         let b = if barrier {
             self.barriers += 1;
-            self.model.barrier_time(self.core)
+            self.model.barrier_time(self.cluster)
         } else {
             0.0
         };
@@ -101,9 +104,9 @@ impl<'m> ClusterSim<'m> {
             self.poll[i] += span - per_thread[i] + b;
         }
         if self.record {
-            self.timeline.push(self.core, kind, self.clock, self.clock + span);
+            self.timeline.push(self.cluster, kind, self.clock, self.clock + span);
             self.timeline
-                .push(self.core, PhaseKind::Barrier, self.clock + span, self.clock + span + b);
+                .push(self.cluster, PhaseKind::Barrier, self.clock + span, self.clock + span + b);
         }
         self.clock += span + b;
     }
@@ -111,7 +114,7 @@ impl<'m> ClusterSim<'m> {
     /// Packing phase: `bytes` of payload split evenly among threads.
     fn pack_phase(&mut self, kind: PhaseKind, bytes: usize, barrier: bool) {
         let share = bytes as f64 / self.threads as f64;
-        let t = self.model.pack_time(self.core, share.ceil() as usize);
+        let t = self.model.pack_time(self.cluster, share.ceil() as usize);
         let v = [t; MAX_CLUSTER_THREADS];
         self.dram_bytes += bytes as f64;
         self.run_phase(kind, &v[..self.threads], barrier);
@@ -120,7 +123,12 @@ impl<'m> ClusterSim<'m> {
     /// Per-thread compute times for one macro-kernel over an
     /// `mc_eff × nc_eff × kc_eff` block under this cluster's fine-grain
     /// parallelization.
-    fn macro_times(&self, mc_eff: usize, nc_eff: usize, kc_eff: usize) -> [f64; MAX_CLUSTER_THREADS] {
+    fn macro_times(
+        &self,
+        mc_eff: usize,
+        nc_eff: usize,
+        kc_eff: usize,
+    ) -> [f64; MAX_CLUSTER_THREADS] {
         let p = &self.tree.params;
         let n_jr = nc_eff.div_ceil(p.nr);
         let n_ir = mc_eff.div_ceil(p.mr);
@@ -134,6 +142,9 @@ impl<'m> ClusterSim<'m> {
         let mut times = [0.0; MAX_CLUSTER_THREADS];
         for t in 0..self.threads {
             let (i4, i5) = (t % w4, t / w4);
+            if i5 >= w5 {
+                continue; // surplus thread beyond the w4×w5 grid: no work
+            }
             let jr_n = jr_share(i4);
             let ir_n = ir_share(i5);
             if jr_n == 0 || ir_n == 0 {
@@ -146,7 +157,7 @@ impl<'m> ClusterSim<'m> {
                 active_in_cluster: self.threads,
                 other_cluster_active: self.other_active,
             };
-            let t_micro = self.model.micro_kernel_time(self.core, p, &ctx);
+            let t_micro = self.model.micro_kernel_time(self.cluster, p, &ctx);
             times[t] = (jr_n * ir_n) as f64 * t_micro;
         }
         times
@@ -204,7 +215,7 @@ impl<'m> ClusterSim<'m> {
                 self.poll[i] += gap;
             }
             if self.record {
-                self.timeline.push(self.core, PhaseKind::Poll, self.clock, t);
+                self.timeline.push(self.cluster, PhaseKind::Poll, self.clock, t);
             }
             self.clock = t;
         }
@@ -217,7 +228,7 @@ pub fn simulate(model: &PerfModel, spec: &ScheduleSpec, shape: GemmShape) -> Run
 }
 
 /// Like [`simulate`], additionally returning the merged phase-level
-/// [`Timeline`] of both clusters (Gantt export, structure tests).
+/// [`Timeline`] of every cluster (Gantt export, structure tests).
 pub fn simulate_traced(
     model: &PerfModel,
     spec: &ScheduleSpec,
@@ -232,99 +243,90 @@ fn simulate_impl(
     shape: GemmShape,
     record: bool,
 ) -> (RunStats, Timeline) {
-    spec.validate().expect("invalid spec");
+    spec.validate_for(&model.soc).expect("invalid spec");
     let soc = &model.soc;
-    let (tb, tl) = spec.threads(soc);
+    let th = spec.threads(soc);
     let trees = spec.tree_set(soc);
-    let both = tb > 0 && tl > 0;
+    let n_active = th.iter().filter(|&&t| t > 0).count();
 
-    let mut big = ClusterSim::new(model, CoreType::Big, tb.max(1), trees.big.clone(), both);
-    let mut little =
-        ClusterSim::new(model, CoreType::Little, tl.max(1), trees.little.clone(), both);
-    big.record = record;
-    little.record = record;
-    // Zero-thread clusters are fully idle: model them as absent.
-    let big_on = tb > 0;
-    let little_on = tl > 0;
+    // One ClusterSim per *active* cluster, in ClusterId order.
+    let mut sims: Vec<ClusterSim> = soc
+        .cluster_ids()
+        .filter(|c| th[c.0] > 0)
+        .map(|c| {
+            let mut sim = ClusterSim::new(
+                model,
+                c,
+                th[c.0],
+                trees.for_cluster(c).clone(),
+                n_active > 1,
+            );
+            sim.record = record;
+            sim
+        })
+        .collect();
+    assert!(!sims.is_empty(), "no active cluster");
 
     let GemmShape { m, n, k } = shape;
     let full_m = Chunk { start: 0, len: m };
     let full_n = Chunk { start: 0, len: n };
+    let lead_tree = trees.for_cluster(soc.lead());
 
-    match (spec.strategy, spec.coarse) {
+    match (&spec.strategy, spec.coarse) {
         (Strategy::ClusterOnly { .. }, _) => {
-            if big_on {
-                big.run_own_nest(full_m, full_n, k);
-            } else {
-                little.run_own_nest(full_m, full_n, k);
-            }
+            sims[0].run_own_nest(full_m, full_n, k);
         }
         // ---- static coarse split of Loop 1 (independent buffers) ----
         (Strategy::Sss | Strategy::Sas { .. } | Strategy::CaSas { .. }, CoarseLoop::Loop1) => {
-            let (wb, wl) = spec.coarse_weights().expect("static");
-            let parts = split_weighted(n, &[wb, wl], trees.big.params.nr);
-            big.run_own_nest(full_m, parts[0], k);
-            little.run_own_nest(full_m, parts[1], k);
-            let t_end = big.clock.max(little.clock);
-            big.sync_to(t_end);
-            little.sync_to(t_end);
+            let w = spec.coarse_weights(soc).expect("static");
+            let parts = split_weighted(n, &w, lead_tree.params.nr);
+            for sim in sims.iter_mut() {
+                sim.run_own_nest(full_m, parts[sim.cluster.0], k);
+            }
+            let t_end = sims.iter().map(|s| s.clock).fold(0.0, f64::max);
+            for sim in sims.iter_mut() {
+                sim.sync_to(t_end);
+            }
         }
         // ---- static coarse split of Loop 3 (shared Bc) ----
         (Strategy::Sss | Strategy::Sas { .. } | Strategy::CaSas { .. }, CoarseLoop::Loop3) => {
-            let (wb, wl) = spec.coarse_weights().expect("static");
-            let parts = split_weighted(m, &[wb, wl], trees.big.params.mr);
-            run_shared_bc(&mut big, &mut little, shape, |big, little, nc_eff, kc_eff| {
-                walk_m_range(big, parts[0], nc_eff, kc_eff);
-                walk_m_range(little, parts[1], nc_eff, kc_eff);
+            let w = spec.coarse_weights(soc).expect("static");
+            let parts = split_weighted(m, &w, lead_tree.params.mr);
+            run_shared_bc(&mut sims, shape, |sims, nc_eff, kc_eff| {
+                for sim in sims.iter_mut() {
+                    walk_m_range(sim, parts[sim.cluster.0], nc_eff, kc_eff);
+                }
             });
         }
         // ---- dynamic distribution over Loop 3 (shared Bc) ----
         (Strategy::Das | Strategy::CaDas, _) => {
-            run_shared_bc(&mut big, &mut little, shape, |big, little, nc_eff, kc_eff| {
-                dynamic_m_loop(big, little, m, nc_eff, kc_eff);
+            run_shared_bc(&mut sims, shape, |sims, nc_eff, kc_eff| {
+                dynamic_m_loop(sims, m, nc_eff, kc_eff);
             });
         }
     }
 
     // Gather global results.
-    let time_s = if big_on && little_on {
-        big.clock.max(little.clock)
-    } else if big_on {
-        big.clock
-    } else {
-        little.clock
-    };
+    let time_s = sims.iter().map(|s| s.clock).fold(0.0, f64::max);
     let mut activity = vec![CoreActivity::default(); soc.total_cores()];
-    if big_on {
-        for (i, gid) in soc.core_ids(CoreType::Big).take(tb).enumerate() {
+    for sim in &sims {
+        for (i, gid) in soc.core_ids(sim.cluster).take(sim.threads).enumerate() {
             activity[gid] = CoreActivity {
-                busy_s: big.busy[i],
-                poll_s: (big.poll[i]).min(time_s - big.busy[i]).max(0.0),
+                busy_s: sim.busy[i],
+                poll_s: (sim.poll[i]).min(time_s - sim.busy[i]).max(0.0),
             };
         }
     }
-    if little_on {
-        for (i, gid) in soc.core_ids(CoreType::Little).take(tl).enumerate() {
-            activity[gid] = CoreActivity {
-                busy_s: little.busy[i],
-                poll_s: (little.poll[i]).min(time_s - little.busy[i]).max(0.0),
-            };
-        }
-    }
-    let dram_bytes = big.dram_bytes * (big_on as u8 as f64)
-        + little.dram_bytes * (little_on as u8 as f64);
+    let dram_bytes: f64 = sims.iter().map(|s| s.dram_bytes).sum();
     let power = PowerModel::new(soc.clone());
     let energy = power.integrate(time_s, &activity, dram_bytes);
     let flops = shape.flops();
     let mut timeline = Timeline::default();
-    if big_on {
-        timeline.segments.extend(big.timeline.segments.iter().copied());
-    }
-    if little_on {
-        timeline.segments.extend(little.timeline.segments.iter().copied());
+    for sim in &sims {
+        timeline.segments.extend(sim.timeline.segments.iter().copied());
     }
     let stats = RunStats {
-        label: spec.label(),
+        label: spec.label_on(soc),
         shape,
         time_s,
         flops,
@@ -333,57 +335,58 @@ fn simulate_impl(
         dram_bytes,
         gflops_per_watt: energy.gflops_per_watt(flops),
         energy,
-        grabs: big.grabs + little.grabs,
-        barriers: big.barriers + little.barriers,
+        grabs: sims.iter().map(|s| s.grabs).sum(),
+        barriers: sims.iter().map(|s| s.barriers).sum(),
     };
     (stats, timeline)
 }
 
 /// Shared-`Bc` outer structure (coarse Loop 3, §5.3/§5.4): Loop 1 and
-/// Loop 2 are walked jointly; both clusters cooperate packing `Bc`, sync
-/// globally, run `body` over the m space, and sync again before the next
-/// `Bc`.
+/// Loop 2 are walked jointly; every cluster cooperates packing `Bc`,
+/// syncs globally, runs `body` over the m space, and syncs again before
+/// the next `Bc`.
 fn run_shared_bc<'m>(
-    big: &mut ClusterSim<'m>,
-    little: &mut ClusterSim<'m>,
+    sims: &mut [ClusterSim<'m>],
     shape: GemmShape,
-    mut body: impl FnMut(&mut ClusterSim<'m>, &mut ClusterSim<'m>, usize, usize),
+    mut body: impl FnMut(&mut [ClusterSim<'m>], usize, usize),
 ) {
     let GemmShape { m, n, k } = shape;
-    let nc = big.tree.params.nc;
-    let kc = big.tree.params.kc;
-    assert_eq!(
-        kc, little.tree.params.kc,
-        "shared Bc requires a common kc (§5.3)"
+    let nc = sims[0].tree.params.nc;
+    let kc = sims[0].tree.params.kc;
+    assert!(
+        sims.iter().all(|s| s.tree.params.kc == kc && s.tree.params.nc == nc),
+        "shared Bc requires common (nc, kc) strides (§5.3)"
     );
-    let total_threads = big.threads + little.threads;
+    let total_threads: usize = sims.iter().map(|s| s.threads).sum();
     let mut jc = 0;
     while jc < n {
         let nc_eff = (n - jc).min(nc);
         let mut pc = 0;
         while pc < k {
             let kc_eff = (k - pc).min(kc);
-            // Cooperative Bc pack: even byte split across all 8 threads.
+            // Cooperative Bc pack: even byte split across all threads.
             let bytes = pack_b_bytes(kc_eff, nc_eff);
             let share = bytes / total_threads + 1;
-            let tb = [big.model.pack_time(CoreType::Big, share); MAX_CLUSTER_THREADS];
-            let tl = [little.model.pack_time(CoreType::Little, share); MAX_CLUSTER_THREADS];
-            big.dram_bytes += bytes as f64 * big.threads as f64 / total_threads as f64;
-            little.dram_bytes += bytes as f64 * little.threads as f64 / total_threads as f64;
-            big.run_phase(PhaseKind::PackB, &tb[..big.threads], true);
-            little.run_phase(PhaseKind::PackB, &tl[..little.threads], true);
-            global_sync(big, little);
+            for sim in sims.iter_mut() {
+                let t = sim.model.pack_time(sim.cluster, share);
+                let v = [t; MAX_CLUSTER_THREADS];
+                sim.dram_bytes += bytes as f64 * sim.threads as f64 / total_threads as f64;
+                sim.run_phase(PhaseKind::PackB, &v[..sim.threads], true);
+            }
+            global_sync(sims);
 
-            body(big, little, nc_eff, kc_eff);
-            global_sync(big, little);
+            body(sims, nc_eff, kc_eff);
+            global_sync(sims);
             pc += kc;
         }
         jc += nc;
     }
-    // C traffic: read+write once per pc block.
+    // C traffic: read+write once per pc block, split across clusters.
     let pc_trips = k.div_ceil(kc) as f64;
-    big.dram_bytes += 16.0 * (m * n) as f64 * pc_trips * 0.5;
-    little.dram_bytes += 16.0 * (m * n) as f64 * pc_trips * 0.5;
+    let c_share = 16.0 * (m * n) as f64 * pc_trips / sims.len() as f64;
+    for sim in sims.iter_mut() {
+        sim.dram_bytes += c_share;
+    }
 }
 
 /// Static walk of a cluster's m sub-range (coarse Loop 3).
@@ -397,26 +400,22 @@ fn walk_m_range(cl: &mut ClusterSim, range: Chunk, nc_eff: usize, kc_eff: usize)
     }
 }
 
-/// Dynamic m-loop (§5.4): both clusters grab chunks of their own `mc`
+/// Dynamic m-loop (§5.4): every cluster grabs chunks of its own `mc`
 /// from a shared queue; grabs serialize through a virtual critical
-/// section in virtual-time order.
-fn dynamic_m_loop<'m>(
-    big: &mut ClusterSim<'m>,
-    little: &mut ClusterSim<'m>,
-    m: usize,
-    nc_eff: usize,
-    kc_eff: usize,
-) {
+/// section in virtual-time order (ties go to the lowest cluster id).
+fn dynamic_m_loop(sims: &mut [ClusterSim], m: usize, nc_eff: usize, kc_eff: usize) {
     let mut next = 0usize; // queue head
     let mut cs_free = 0.0f64; // critical-section availability (virtual t)
 
     // Event loop: the cluster with the earliest clock grabs next.
-    loop {
-        if next >= m {
-            break;
+    while next < m {
+        let mut idx = 0;
+        for (i, sim) in sims.iter().enumerate().skip(1) {
+            if sim.clock < sims[idx].clock {
+                idx = i;
+            }
         }
-        let big_first = big.clock <= little.clock;
-        let cl: &mut ClusterSim = if big_first { big } else { little };
+        let cl = &mut sims[idx];
 
         // Enter the critical section.
         let t_start = cl.clock.max(cs_free);
@@ -426,13 +425,13 @@ fn dynamic_m_loop<'m>(
                 cl.poll[i] += wait;
             }
             if cl.record {
-                cl.timeline.push(cl.core, PhaseKind::Poll, cl.clock, t_start);
+                cl.timeline.push(cl.cluster, PhaseKind::Poll, cl.clock, t_start);
             }
             cl.clock = t_start;
         }
-        let g = cl.model.grab_time(cl.core);
+        let g = cl.model.grab_time(cl.cluster);
         if cl.record {
-            cl.timeline.push(cl.core, PhaseKind::Grab, cl.clock, cl.clock + g);
+            cl.timeline.push(cl.cluster, PhaseKind::Grab, cl.clock, cl.clock + g);
         }
         cl.clock += g;
         for i in 0..cl.threads {
@@ -448,19 +447,20 @@ fn dynamic_m_loop<'m>(
     }
 }
 
-/// Sync both clusters to the same virtual instant (global barrier),
-/// charging poll time to the early one.
-fn global_sync(big: &mut ClusterSim, little: &mut ClusterSim) {
-    let t = big.clock.max(little.clock);
-    big.sync_to(t);
-    little.sync_to(t);
+/// Sync every cluster to the same virtual instant (global barrier),
+/// charging poll time to the early ones.
+fn global_sync(sims: &mut [ClusterSim]) {
+    let t = sims.iter().map(|s| s.clock).fold(0.0, f64::max);
+    for sim in sims.iter_mut() {
+        sim.sync_to(t);
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sched::{FineLoop, ScheduleSpec, Strategy};
-    use crate::soc::CoreType;
+    use crate::sched::{FineLoop, ScheduleSpec, Strategy, Weights};
+    use crate::soc::{SocSpec, BIG, LITTLE};
 
     fn model() -> PerfModel {
         PerfModel::exynos()
@@ -473,11 +473,11 @@ mod tests {
     /// §3.4: isolated-cluster peaks at a large size.
     #[test]
     fn isolated_cluster_peaks() {
-        let big4 = run(ScheduleSpec::cluster_only(CoreType::Big, 4), 4096);
+        let big4 = run(ScheduleSpec::cluster_only(BIG, 4), 4096);
         assert!((8.8..10.0).contains(&big4.gflops), "A15×4: {}", big4.gflops);
-        let little4 = run(ScheduleSpec::cluster_only(CoreType::Little, 4), 4096);
+        let little4 = run(ScheduleSpec::cluster_only(LITTLE, 4), 4096);
         assert!((2.0..2.5).contains(&little4.gflops), "A7×4: {}", little4.gflops);
-        let big1 = run(ScheduleSpec::cluster_only(CoreType::Big, 1), 4096);
+        let big1 = run(ScheduleSpec::cluster_only(BIG, 1), 4096);
         assert!((2.6..3.0).contains(&big1.gflops), "A15×1: {}", big1.gflops);
     }
 
@@ -485,7 +485,7 @@ mod tests {
     #[test]
     fn sss_is_architecture_oblivious_disaster() {
         let sss = run(ScheduleSpec::sss(), 4096);
-        let a15 = run(ScheduleSpec::cluster_only(CoreType::Big, 4), 4096);
+        let a15 = run(ScheduleSpec::cluster_only(BIG, 4), 4096);
         let frac = sss.gflops / a15.gflops;
         assert!((0.32..0.50).contains(&frac), "SSS fraction {frac}");
         // Big cores poll more than half the run (§4's imbalance).
@@ -506,7 +506,7 @@ mod tests {
             (5..=6).contains(&best),
             "best ratio {best}, curve {g:?}"
         );
-        let a15 = run(ScheduleSpec::cluster_only(CoreType::Big, 4), 4096).gflops;
+        let a15 = run(ScheduleSpec::cluster_only(BIG, 4), 4096).gflops;
         let gain = g[best - 1] / a15;
         assert!((1.10..1.30).contains(&gain), "gain over A15-only {gain}");
         // Ratio 1 (homogeneous) is the worst.
@@ -542,8 +542,8 @@ mod tests {
             cadas.gflops
         );
         // Close to the ideal aggregate.
-        let ideal = run(ScheduleSpec::cluster_only(CoreType::Big, 4), 4096).gflops
-            + run(ScheduleSpec::cluster_only(CoreType::Little, 4), 4096).gflops;
+        let ideal = run(ScheduleSpec::cluster_only(BIG, 4), 4096).gflops
+            + run(ScheduleSpec::cluster_only(LITTLE, 4), 4096).gflops;
         assert!(cadas.gflops > 0.90 * ideal, "CA-DAS {} vs ideal {ideal}", cadas.gflops);
         assert!(cadas.grabs > 0, "dynamic runs must grab chunks");
     }
@@ -577,7 +577,7 @@ mod tests {
     fn energy_ordering() {
         let sss = run(ScheduleSpec::sss(), 4096);
         let sas5 = run(ScheduleSpec::sas(5.0), 4096);
-        let a15 = run(ScheduleSpec::cluster_only(CoreType::Big, 4), 4096);
+        let a15 = run(ScheduleSpec::cluster_only(BIG, 4), 4096);
         assert!(sss.gflops_per_watt < 0.7 * a15.gflops_per_watt);
         let rel = (sas5.gflops_per_watt / a15.gflops_per_watt - 1.0).abs();
         assert!(rel < 0.20, "SAS vs A15-only efficiency rel diff {rel}");
@@ -593,8 +593,8 @@ mod tests {
             ScheduleSpec::ca_sas(5.0),
             ScheduleSpec::das(),
             ScheduleSpec::ca_das(),
-            ScheduleSpec::cluster_only(CoreType::Big, 2),
-            ScheduleSpec::cluster_only(CoreType::Little, 3),
+            ScheduleSpec::cluster_only(BIG, 2),
+            ScheduleSpec::cluster_only(LITTLE, 3),
         ] {
             let st = run(spec, 1024);
             assert!(st.time_s > 0.0);
@@ -619,12 +619,13 @@ mod tests {
     /// difference (Fig. 11's observation).
     #[test]
     fn coarse_loop_choice_irrelevant_under_l4() {
+        let w = Weights::ratio(5.0);
         let l1 = run(
-            ScheduleSpec::new(Strategy::CaSas { ratio: 5.0 }, CoarseLoop::Loop1, FineLoop::Loop4),
+            ScheduleSpec::new(Strategy::CaSas { weights: w }, CoarseLoop::Loop1, FineLoop::Loop4),
             4096,
         );
         let l3 = run(
-            ScheduleSpec::new(Strategy::CaSas { ratio: 5.0 }, CoarseLoop::Loop3, FineLoop::Loop4),
+            ScheduleSpec::new(Strategy::CaSas { weights: w }, CoarseLoop::Loop3, FineLoop::Loop4),
             4096,
         );
         let rel = (l1.gflops / l3.gflops - 1.0).abs();
@@ -636,19 +637,20 @@ mod tests {
     #[test]
     fn timeline_structure() {
         use crate::sim::timeline::PhaseKind;
-        let (st, tl) = super::simulate_traced(&model(), &ScheduleSpec::sss(), GemmShape::square(2048));
+        let (st, tl) =
+            super::simulate_traced(&model(), &ScheduleSpec::sss(), GemmShape::square(2048));
         tl.validate().unwrap();
         assert!((tl.span() - st.time_s).abs() < 1e-9);
-        let big_poll = tl.total(CoreType::Big, PhaseKind::Poll);
+        let big_poll = tl.total(BIG, PhaseKind::Poll);
         assert!(big_poll > 0.5 * st.time_s, "SSS big poll tail {big_poll} of {}", st.time_s);
         let (st2, tl2) =
             super::simulate_traced(&model(), &ScheduleSpec::ca_das(), GemmShape::square(2048));
         tl2.validate().unwrap();
-        assert!(tl2.total(CoreType::Big, PhaseKind::Grab) > 0.0);
-        let poll2 = tl2.total(CoreType::Big, PhaseKind::Poll);
+        assert!(tl2.total(BIG, PhaseKind::Grab) > 0.0);
+        let poll2 = tl2.total(BIG, PhaseKind::Poll);
         assert!(poll2 < 0.1 * st2.time_s, "CA-DAS big poll {poll2} of {}", st2.time_s);
         // Compute dominates everything else for the balanced schedule.
-        let compute = tl2.total(CoreType::Big, PhaseKind::Compute);
+        let compute = tl2.total(BIG, PhaseKind::Compute);
         assert!(compute > 0.8 * st2.time_s);
     }
 
@@ -675,5 +677,62 @@ mod tests {
             GemmShape { m: 8192, n: 64, k: 64 },
         );
         assert!(tall.time_s > 0.0);
+    }
+
+    /// The N-cluster engine on a tri-cluster topology: every strategy
+    /// family runs, is bounded by the aggregate, and CA-DAS stays close
+    /// to the three-cluster ideal without any per-topology retuning.
+    #[test]
+    fn tri_cluster_topology_simulates() {
+        let tri = PerfModel::new(SocSpec::dynamiq_3c());
+        let ideal: f64 = tri
+            .soc
+            .cluster_ids()
+            .map(|c| {
+                simulate(
+                    &tri,
+                    &ScheduleSpec::cluster_only(c, tri.soc[c].num_cores),
+                    GemmShape::square(4096),
+                )
+                .gflops
+            })
+            .sum();
+        let w = tri.ca_sas_weights();
+        for spec in [
+            ScheduleSpec::sss(),
+            ScheduleSpec::sas_weighted(tri.sas_weights()),
+            ScheduleSpec::ca_sas_weighted(w),
+            ScheduleSpec::das(),
+            ScheduleSpec::ca_das(),
+        ] {
+            let st = simulate(&tri, &spec, GemmShape::square(4096));
+            assert!(st.gflops > 0.0 && st.gflops < ideal * 1.001, "{}", st.label);
+            assert_eq!(st.activity.len(), 9);
+        }
+        let cadas = simulate(&tri, &ScheduleSpec::ca_das(), GemmShape::square(4096));
+        assert!(
+            cadas.gflops > 0.85 * ideal,
+            "tri-cluster CA-DAS {} vs ideal {ideal}",
+            cadas.gflops
+        );
+        assert!(cadas.grabs > 0);
+    }
+
+    /// Symmetric degenerate case: on a single-cluster SMP the
+    /// asymmetric machinery collapses — SSS, uniform SAS and the
+    /// dynamic strategies all land within a few percent.
+    #[test]
+    fn symmetric_topology_collapses_strategies() {
+        let smp = PerfModel::new(SocSpec::symmetric(4));
+        let sss = simulate(&smp, &ScheduleSpec::sss(), GemmShape::square(2048)).gflops;
+        let sas = simulate(
+            &smp,
+            &ScheduleSpec::sas_weighted(Weights::uniform(1)),
+            GemmShape::square(2048),
+        )
+        .gflops;
+        let cadas = simulate(&smp, &ScheduleSpec::ca_das(), GemmShape::square(2048)).gflops;
+        assert!((sss / sas - 1.0).abs() < 1e-9, "SSS {sss} vs SAS {sas}");
+        assert!((cadas / sss - 1.0).abs() < 0.05, "CA-DAS {cadas} vs SSS {sss}");
     }
 }

@@ -6,8 +6,10 @@
 //! powers the Gantt-style CSV export (plot-ready), the per-phase
 //! breakdown in the energy example, and regression tests on the
 //! schedule *structure* (e.g. SSS's long big-cluster poll tail).
+//! Segments are keyed by [`ClusterId`], so a timeline carries any
+//! number of clusters.
 
-use crate::soc::CoreType;
+use crate::soc::{ClusterId, SocSpec};
 use crate::util::table::Table;
 
 /// What a cluster is doing during a segment.
@@ -45,7 +47,7 @@ impl PhaseKind {
 /// One contiguous span of a cluster's virtual time.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Segment {
-    pub cluster: CoreType,
+    pub cluster: ClusterId,
     pub kind: PhaseKind,
     pub t0: f64,
     pub t1: f64,
@@ -64,7 +66,7 @@ pub struct Timeline {
 }
 
 impl Timeline {
-    pub fn push(&mut self, cluster: CoreType, kind: PhaseKind, t0: f64, t1: f64) {
+    pub fn push(&mut self, cluster: ClusterId, kind: PhaseKind, t0: f64, t1: f64) {
         debug_assert!(t1 >= t0 - 1e-15, "segment must not run backwards");
         if t1 > t0 {
             self.segments.push(Segment { cluster, kind, t0, t1 });
@@ -72,7 +74,7 @@ impl Timeline {
     }
 
     /// Total time a cluster spent in a phase kind.
-    pub fn total(&self, cluster: CoreType, kind: PhaseKind) -> f64 {
+    pub fn total(&self, cluster: ClusterId, kind: PhaseKind) -> f64 {
         self.segments
             .iter()
             .filter(|s| s.cluster == cluster && s.kind == kind)
@@ -85,15 +87,23 @@ impl Timeline {
         self.segments.iter().map(|s| s.t1).fold(0.0, f64::max)
     }
 
+    /// Cluster ids that appear in this timeline, ascending.
+    pub fn clusters(&self) -> Vec<ClusterId> {
+        let mut ids: Vec<ClusterId> = self.segments.iter().map(|s| s.cluster).collect();
+        ids.sort();
+        ids.dedup();
+        ids
+    }
+
     /// Verify per-cluster segments are non-overlapping and ordered —
     /// the structural invariant of a lockstep cluster.
     pub fn validate(&self) -> Result<(), String> {
-        for cluster in CoreType::ALL {
+        for cluster in self.clusters() {
             let mut last_end = 0.0f64;
             for s in self.segments.iter().filter(|s| s.cluster == cluster) {
                 if s.t0 < last_end - 1e-9 {
                     return Err(format!(
-                        "{:?} segment at {} overlaps previous end {}",
+                        "{} segment at {} overlaps previous end {}",
                         cluster, s.t0, last_end
                     ));
                 }
@@ -103,19 +113,24 @@ impl Timeline {
         Ok(())
     }
 
-    /// Per-cluster × per-phase breakdown table.
-    pub fn breakdown(&self) -> Table {
+    /// Per-cluster × per-phase breakdown table. Pass the SoC to label
+    /// rows with cluster short names; without it rows use `c0`, `c1`, …
+    pub fn breakdown(&self, soc: Option<&SocSpec>) -> Table {
         let mut t = Table::new(
             "Timeline breakdown [s]",
             &["cluster", "pack_b", "pack_a", "compute", "grab", "barrier", "poll", "total"],
         );
-        for cluster in CoreType::ALL {
+        for cluster in self.clusters() {
             let vals: Vec<f64> = PhaseKind::ALL
                 .iter()
                 .map(|&k| self.total(cluster, k))
                 .collect();
             let total: f64 = vals.iter().sum();
-            let mut row = vec![cluster.short().to_string()];
+            let label = match soc {
+                Some(s) => s[cluster].short_name.clone(),
+                None => cluster.label(),
+            };
+            let mut row = vec![label];
             row.extend(vals.iter().map(|v| format!("{v:.4}")));
             row.push(format!("{total:.4}"));
             t.push_row(row);
@@ -128,7 +143,7 @@ impl Timeline {
         let mut t = Table::new("Gantt segments", &["cluster", "phase", "t0", "t1"]);
         for s in &self.segments {
             t.push_row(vec![
-                s.cluster.short().to_string(),
+                s.cluster.label(),
                 s.kind.name().to_string(),
                 format!("{:.6}", s.t0),
                 format!("{:.6}", s.t1),
@@ -141,29 +156,31 @@ impl Timeline {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::soc::{BIG, LITTLE};
 
     fn sample() -> Timeline {
         let mut tl = Timeline::default();
-        tl.push(CoreType::Big, PhaseKind::PackB, 0.0, 0.1);
-        tl.push(CoreType::Big, PhaseKind::Compute, 0.1, 0.9);
-        tl.push(CoreType::Big, PhaseKind::Poll, 0.9, 1.0);
-        tl.push(CoreType::Little, PhaseKind::PackB, 0.0, 0.3);
-        tl.push(CoreType::Little, PhaseKind::Compute, 0.3, 1.0);
+        tl.push(BIG, PhaseKind::PackB, 0.0, 0.1);
+        tl.push(BIG, PhaseKind::Compute, 0.1, 0.9);
+        tl.push(BIG, PhaseKind::Poll, 0.9, 1.0);
+        tl.push(LITTLE, PhaseKind::PackB, 0.0, 0.3);
+        tl.push(LITTLE, PhaseKind::Compute, 0.3, 1.0);
         tl
     }
 
     #[test]
     fn totals_and_span() {
         let tl = sample();
-        assert!((tl.total(CoreType::Big, PhaseKind::Compute) - 0.8).abs() < 1e-12);
-        assert!((tl.total(CoreType::Little, PhaseKind::Poll)).abs() < 1e-12);
+        assert!((tl.total(BIG, PhaseKind::Compute) - 0.8).abs() < 1e-12);
+        assert!((tl.total(LITTLE, PhaseKind::Poll)).abs() < 1e-12);
         assert!((tl.span() - 1.0).abs() < 1e-12);
+        assert_eq!(tl.clusters(), vec![BIG, LITTLE]);
     }
 
     #[test]
     fn zero_length_segments_dropped() {
         let mut tl = Timeline::default();
-        tl.push(CoreType::Big, PhaseKind::Grab, 0.5, 0.5);
+        tl.push(BIG, PhaseKind::Grab, 0.5, 0.5);
         assert!(tl.segments.is_empty());
     }
 
@@ -171,20 +188,34 @@ mod tests {
     fn validate_catches_overlap() {
         let mut tl = sample();
         assert!(tl.validate().is_ok());
-        tl.push(CoreType::Big, PhaseKind::Compute, 0.5, 0.6); // overlaps
+        tl.push(BIG, PhaseKind::Compute, 0.5, 0.6); // overlaps
         assert!(tl.validate().is_err());
     }
 
     #[test]
     fn breakdown_table_shape() {
-        let t = sample().breakdown();
+        let t = sample().breakdown(None);
         assert_eq!(t.rows.len(), 2);
         assert_eq!(t.columns.len(), 8);
+        assert_eq!(t.rows[0][0], "c0");
+        let named = sample().breakdown(Some(&SocSpec::exynos5422()));
+        assert_eq!(named.rows[0][0], "big");
     }
 
     #[test]
     fn gantt_rows_match_segments() {
         let tl = sample();
         assert_eq!(tl.to_gantt_table().rows.len(), tl.segments.len());
+    }
+
+    #[test]
+    fn many_cluster_timeline_validates() {
+        let mut tl = Timeline::default();
+        for i in 0..5 {
+            tl.push(ClusterId(i), PhaseKind::Compute, 0.0, 1.0 + i as f64);
+        }
+        tl.validate().unwrap();
+        assert_eq!(tl.clusters().len(), 5);
+        assert!((tl.span() - 5.0).abs() < 1e-12);
     }
 }

@@ -9,42 +9,57 @@
 //! module is the authoritative *descriptor* the simulator, cache model,
 //! perf model and energy model all consume (DESIGN.md §1).
 //!
-//! A generic builder supports the paper's future-work ablations
-//! (different big/LITTLE core counts, ARMv8-class cache sizes).
+//! # The N-cluster `Topology` model
+//!
+//! The descriptor is *not* limited to two clusters: a [`SocSpec`] holds a
+//! `Vec<ClusterSpec>` and every consumer (schedulers, partitioners, the
+//! DES simulator, the native executor, the energy meter) iterates over
+//! clusters addressed by [`ClusterId`] instead of branching on a
+//! big/LITTLE enum. This is what lets the same scheduling code run on
+//! the paper's Exynos 5422, a tri-cluster DynamIQ-style SoC
+//! ([`SocSpec::dynamiq_3c`]), a symmetric SMP ([`SocSpec::symmetric`])
+//! and ARMv8 boards ([`SocSpec::juno_r0`]) without modification
+//! (DESIGN.md §2).
+//!
+//! Each [`ClusterSpec`] carries everything that used to be keyed on the
+//! core *type*: core count, frequency, cache geometry, flops/cycle, the
+//! tuned BLIS blocking parameters, and the calibrated per-cluster model
+//! constants ([`ClusterTuning`]: amortization, contention, packing
+//! bandwidth, synchronization costs and power rails).
+//!
+//! Conventions:
+//! * clusters are ordered fastest-first in the presets; [`BIG`] and
+//!   [`LITTLE`] name indices 0 and 1 for two-cluster code and tests;
+//! * global core ids are contiguous per cluster, cluster 0 first —
+//!   the simulator, native executor and energy meter all share this
+//!   numbering ([`SocSpec::core_ids`]).
 
-/// Which of the two asymmetric core types a core belongs to.
+use crate::blis::params::BlisParams;
+
+/// Index of a cluster within a [`SocSpec`]. Cores are addressed as
+/// `(ClusterId, core_idx)`; [`SocSpec::core_ids`] maps a cluster to its
+/// global core-id range.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub enum CoreType {
-    /// Fast, out-of-order core (Cortex-A15 in the paper).
-    Big,
-    /// Slow, in-order, low-power core (Cortex-A7).
-    Little,
-}
+pub struct ClusterId(pub usize);
 
-impl CoreType {
-    pub const ALL: [CoreType; 2] = [CoreType::Big, CoreType::Little];
-
-    pub fn name(self) -> &'static str {
-        match self {
-            CoreType::Big => "Cortex-A15",
-            CoreType::Little => "Cortex-A7",
-        }
-    }
-
-    pub fn short(self) -> &'static str {
-        match self {
-            CoreType::Big => "big",
-            CoreType::Little => "LITTLE",
-        }
-    }
-
-    pub fn other(self) -> CoreType {
-        match self {
-            CoreType::Big => CoreType::Little,
-            CoreType::Little => CoreType::Big,
-        }
+impl ClusterId {
+    /// Stable short label ("c0", "c1", …) for tables and traces that
+    /// have no [`SocSpec`] at hand.
+    pub fn label(self) -> String {
+        format!("c{}", self.0)
     }
 }
+
+impl std::fmt::Display for ClusterId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "c{}", self.0)
+    }
+}
+
+/// Conventional index of the fast cluster in two-cluster presets.
+pub const BIG: ClusterId = ClusterId(0);
+/// Conventional index of the slow cluster in two-cluster presets.
+pub const LITTLE: ClusterId = ClusterId(1);
 
 /// Geometry of one cache level.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -81,10 +96,9 @@ impl CacheGeometry {
     }
 }
 
-/// Per-core-type microarchitectural description.
+/// Per-core microarchitectural description.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CoreSpec {
-    pub core_type: CoreType,
     pub freq_ghz: f64,
     /// Private L1 data cache.
     pub l1d: CacheGeometry,
@@ -101,53 +115,210 @@ impl CoreSpec {
     }
 }
 
-/// A cluster: n identical cores sharing one L2.
+/// Calibrated per-cluster model constants. These used to be global
+/// `CoreType`-keyed tables in `model::calibration`; making them part of
+/// the descriptor is what lets a third (or fourth…) cluster carry its
+/// own amortization curve, contention profile and power rail without
+/// touching the models. Every Exynos value is anchored to a number the
+/// paper reports (§3.4, §4, Figs. 5/7/9/10/12) and pinned by the
+/// regression tests in `tests/exynos_regression.rs`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterTuning {
+    /// Half-saturation constant of `eff_k(kc) = kc/(kc + hk)`: per-
+    /// micro-kernel C load/store + loop overhead amortized over the kc
+    /// rank-1 updates.
+    pub hk: f64,
+    /// Half-saturation constant of `eff_m(rows) = rows/(rows + hm)`:
+    /// `Br` L1-warmup amortized over the rows swept per jr column.
+    pub hm: f64,
+    /// Per-core throughput multiplier vs. active cores in the cluster
+    /// (index = active−1, clamped at the end for wider clusters).
+    /// Models shared-L2/bus contention (§3.4: the 4th A15 core yields a
+    /// smaller increase).
+    pub cluster_scale: Vec<f64>,
+    /// Effective packing bandwidth per core, GB/s (read + packed write).
+    pub pack_bw_gbs: f64,
+    /// Intra-cluster barrier cost, seconds.
+    pub barrier_s: f64,
+    /// Dynamic-chunk critical-section cost (§5.4), seconds.
+    pub grab_s: f64,
+    /// Power increment of one computing core above the cluster baseline,
+    /// Watts.
+    pub p_core_active_w: f64,
+    /// Always-on cluster rail baseline, Watts.
+    pub p_cluster_idle_w: f64,
+    /// Fraction of the shared L2 usable by the resident `Ac` macro-panel
+    /// (the rest is headroom for the `Bc` stream + C traffic).
+    pub l2_fill: f64,
+    /// Micro-kernel throughput factor of an 8×4 register blocking
+    /// relative to the paper's 4×4 (§6 future work: >1 on out-of-order
+    /// cores, <1 on in-order ones).
+    pub reg_8x4_factor: f64,
+}
+
+impl ClusterTuning {
+    /// Cortex-A15-class tuning (out-of-order, big rail).
+    pub fn a15() -> Self {
+        ClusterTuning {
+            hk: 42.0,
+            hm: 6.0,
+            cluster_scale: vec![1.0, 1.0, 0.966, 0.814],
+            pack_bw_gbs: 2.0,
+            barrier_s: 3.0e-6,
+            grab_s: 1.5e-6,
+            p_core_active_w: 1.80,
+            p_cluster_idle_w: 0.60,
+            l2_fill: 0.5525,
+            reg_8x4_factor: 1.05,
+        }
+    }
+
+    /// Cortex-A7-class tuning (in-order, low-power rail).
+    pub fn a7() -> Self {
+        ClusterTuning {
+            hk: 35.2,
+            hm: 8.0,
+            cluster_scale: vec![1.0, 1.0, 1.0, 1.0],
+            pack_bw_gbs: 0.8,
+            barrier_s: 8.0e-6,
+            grab_s: 4.0e-6,
+            p_core_active_w: 0.28,
+            p_cluster_idle_w: 0.12,
+            l2_fill: 0.4297,
+            reg_8x4_factor: 0.97,
+        }
+    }
+
+    /// Mid-class tuning for tri-cluster (DynamIQ-style) descriptors:
+    /// between the A15 and A7 profiles.
+    pub fn mid() -> Self {
+        ClusterTuning {
+            hk: 38.0,
+            hm: 7.0,
+            cluster_scale: vec![1.0, 1.0, 0.98, 0.90],
+            pack_bw_gbs: 1.4,
+            barrier_s: 5.0e-6,
+            grab_s: 2.5e-6,
+            p_core_active_w: 0.90,
+            p_cluster_idle_w: 0.30,
+            l2_fill: 0.50,
+            reg_8x4_factor: 1.02,
+        }
+    }
+
+    /// Contention multiplier for `active` busy cores (1-based; clamped
+    /// beyond the table for ablation SoCs with wider clusters).
+    pub fn scale(&self, active: usize) -> f64 {
+        assert!(active >= 1, "need at least one active core");
+        self.cluster_scale[(active - 1).min(self.cluster_scale.len() - 1)]
+    }
+
+    /// Micro-kernel register-blocking factor (§6 future work: per-core
+    /// micro-kernels with their own mr×nr). The paper's hand-tuned
+    /// kernel is 4×4 everywhere; 8×4 halves `Br` load traffic per flop;
+    /// other blockings fall back to a generic path at a small penalty.
+    pub fn register_block_factor(&self, mr: usize, nr: usize) -> f64 {
+        match (mr, nr) {
+            (4, 4) => 1.0,
+            (8, 4) => self.reg_8x4_factor,
+            _ => 0.93,
+        }
+    }
+
+    pub fn p_core_poll_w(&self, poll_factor: f64) -> f64 {
+        self.p_core_active_w * poll_factor
+    }
+}
+
+/// A cluster: n identical cores sharing one L2, plus the tuned BLIS
+/// blocking parameters and the calibrated model constants for this
+/// class of core.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterSpec {
+    /// Microarchitecture name, e.g. "Cortex-A15".
+    pub name: String,
+    /// Scheduling-role shorthand, e.g. "big" / "LITTLE" / "mid" / "smp".
+    pub short_name: String,
     pub core: CoreSpec,
     pub num_cores: usize,
     /// Shared, unified L2 cache of the cluster.
     pub l2: CacheGeometry,
+    /// Empirically tuned blocking optimum for this cluster (§3.3 for the
+    /// Exynos clusters; derived analogously for other presets).
+    pub tuned: BlisParams,
+    pub tuning: ClusterTuning,
 }
 
-/// Whole-SoC description.
+impl ClusterSpec {
+    /// Blocking parameters this cluster runs under a *shared-`Bc`*
+    /// cache-aware configuration (§5.3): `kc` is pinned to the common
+    /// value and `mc` refits so `Ac` still fits this cluster's L2.
+    /// For the Exynos LITTLE cluster at kc = 952 this reproduces the
+    /// paper's mc = 32 exactly.
+    pub fn params_shared_kc(&self, kc: usize) -> BlisParams {
+        self.tuned.shared_kc_refit(kc, self.l2.size_bytes)
+    }
+
+    /// Ideal aggregate peak of the cluster (sum of single-core peaks).
+    pub fn peak_gflops(&self) -> f64 {
+        self.core.peak_gflops() * self.num_cores as f64
+    }
+}
+
+/// Whole-SoC description: the N-cluster topology plus shared memory.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SocSpec {
     pub name: String,
-    pub big: ClusterSpec,
-    pub little: ClusterSpec,
+    /// The clusters, fastest-first by convention in all presets.
+    pub clusters: Vec<ClusterSpec>,
     /// Sustained DRAM bandwidth observable by one cluster (GB/s).
     pub dram_bw_gbs: f64,
     pub dram_total_bytes: usize,
 }
 
+impl std::ops::Index<ClusterId> for SocSpec {
+    type Output = ClusterSpec;
+    fn index(&self, id: ClusterId) -> &ClusterSpec {
+        &self.clusters[id.0]
+    }
+}
+
 impl SocSpec {
-    /// The paper's testbed (§3.2, Fig. 3).
+    /// The paper's testbed (§3.2, Fig. 3) — bit-for-bit the original
+    /// two-cluster descriptor, so every figure reproduces unchanged.
     pub fn exynos5422() -> SocSpec {
         SocSpec {
             name: "Samsung Exynos 5422 (ODROID-XU3)".to_string(),
-            big: ClusterSpec {
-                core: CoreSpec {
-                    core_type: CoreType::Big,
-                    freq_ghz: 1.6,
-                    l1d: CacheGeometry::new(32 * 1024, 2, 64),
-                    // Calibrated so the modelled single-core optimum lands
-                    // at the paper's ~2.85 GFLOPS (model/calibration.rs).
-                    dp_flops_per_cycle: 2.0,
+            clusters: vec![
+                ClusterSpec {
+                    name: "Cortex-A15".to_string(),
+                    short_name: "big".to_string(),
+                    core: CoreSpec {
+                        freq_ghz: 1.6,
+                        l1d: CacheGeometry::new(32 * 1024, 2, 64),
+                        // Calibrated so the modelled single-core optimum
+                        // lands at the paper's ~2.85 GFLOPS.
+                        dp_flops_per_cycle: 2.0,
+                    },
+                    num_cores: 4,
+                    l2: CacheGeometry::new(2 * 1024 * 1024, 16, 64),
+                    tuned: BlisParams::a15_opt(),
+                    tuning: ClusterTuning::a15(),
                 },
-                num_cores: 4,
-                l2: CacheGeometry::new(2 * 1024 * 1024, 16, 64),
-            },
-            little: ClusterSpec {
-                core: CoreSpec {
-                    core_type: CoreType::Little,
-                    freq_ghz: 1.4,
-                    l1d: CacheGeometry::new(32 * 1024, 4, 64),
-                    dp_flops_per_cycle: 0.5,
+                ClusterSpec {
+                    name: "Cortex-A7".to_string(),
+                    short_name: "LITTLE".to_string(),
+                    core: CoreSpec {
+                        freq_ghz: 1.4,
+                        l1d: CacheGeometry::new(32 * 1024, 4, 64),
+                        dp_flops_per_cycle: 0.5,
+                    },
+                    num_cores: 4,
+                    l2: CacheGeometry::new(512 * 1024, 8, 64),
+                    tuned: BlisParams::a7_opt(),
+                    tuning: ClusterTuning::a7(),
                 },
-                num_cores: 4,
-                l2: CacheGeometry::new(512 * 1024, 8, 64),
-            },
+            ],
             dram_bw_gbs: 3.2,
             dram_total_bytes: 2 * 1024 * 1024 * 1024,
         }
@@ -160,19 +331,25 @@ impl SocSpec {
         assert!(num_big >= 1 && num_little >= 1);
         let mut soc = SocSpec::exynos5422();
         soc.name = format!("custom big.LITTLE {num_big}+{num_little}");
-        soc.big.num_cores = num_big;
-        soc.little.num_cores = num_little;
+        soc.clusters[BIG.0].num_cores = num_big;
+        soc.clusters[LITTLE.0].num_cores = num_little;
         soc
     }
 
-    /// DVFS variant: same silicon, different operating points (§5.2:
-    /// the SAS ratio knob exists precisely because "changes in the core
-    /// frequency ... affect the performance ratio between core types").
-    pub fn with_freqs(mut self, big_ghz: f64, little_ghz: f64) -> SocSpec {
-        assert!(big_ghz > 0.0 && little_ghz > 0.0);
-        self.name = format!("{} @ {big_ghz}/{little_ghz} GHz", self.name);
-        self.big.core.freq_ghz = big_ghz;
-        self.little.core.freq_ghz = little_ghz;
+    /// DVFS variant for two-cluster descriptors: same silicon, different
+    /// operating points (§5.2: "changes in the core frequency ... affect
+    /// the performance ratio between core types").
+    pub fn with_freqs(self, big_ghz: f64, little_ghz: f64) -> SocSpec {
+        assert_eq!(self.clusters.len(), 2, "with_freqs is the 2-cluster shorthand");
+        self.with_cluster_freq(BIG, big_ghz)
+            .with_cluster_freq(LITTLE, little_ghz)
+    }
+
+    /// DVFS knob for any cluster of any topology.
+    pub fn with_cluster_freq(mut self, id: ClusterId, ghz: f64) -> SocSpec {
+        assert!(ghz > 0.0);
+        self.name = format!("{} [{} @ {ghz} GHz]", self.name, id);
+        self.clusters[id.0].core.freq_ghz = ghz;
         self
     }
 
@@ -183,66 +360,175 @@ impl SocSpec {
     pub fn juno_r0() -> SocSpec {
         SocSpec {
             name: "ARM Juno r0 (ARMv8: 2×A57 + 4×A53)".to_string(),
-            big: ClusterSpec {
-                core: CoreSpec {
-                    core_type: CoreType::Big,
-                    freq_ghz: 1.1,
-                    l1d: CacheGeometry::new(32 * 1024, 2, 64),
-                    dp_flops_per_cycle: 4.0,
+            clusters: vec![
+                ClusterSpec {
+                    name: "Cortex-A57".to_string(),
+                    short_name: "big".to_string(),
+                    core: CoreSpec {
+                        freq_ghz: 1.1,
+                        l1d: CacheGeometry::new(32 * 1024, 2, 64),
+                        dp_flops_per_cycle: 4.0,
+                    },
+                    num_cores: 2,
+                    l2: CacheGeometry::new(2 * 1024 * 1024, 16, 64),
+                    tuned: BlisParams::a15_opt(),
+                    tuning: ClusterTuning::a15(),
                 },
-                num_cores: 2,
-                l2: CacheGeometry::new(2 * 1024 * 1024, 16, 64),
-            },
-            little: ClusterSpec {
-                core: CoreSpec {
-                    core_type: CoreType::Little,
-                    freq_ghz: 0.85,
-                    l1d: CacheGeometry::new(32 * 1024, 4, 64),
-                    dp_flops_per_cycle: 1.0,
+                ClusterSpec {
+                    name: "Cortex-A53".to_string(),
+                    short_name: "LITTLE".to_string(),
+                    core: CoreSpec {
+                        freq_ghz: 0.85,
+                        l1d: CacheGeometry::new(32 * 1024, 4, 64),
+                        dp_flops_per_cycle: 1.0,
+                    },
+                    num_cores: 4,
+                    l2: CacheGeometry::new(1024 * 1024, 16, 64),
+                    tuned: BlisParams::a7_opt(),
+                    tuning: ClusterTuning::a7(),
                 },
-                num_cores: 4,
-                l2: CacheGeometry::new(1024 * 1024, 16, 64),
-            },
+            ],
             dram_bw_gbs: 5.0,
             dram_total_bytes: 8 * 1024 * 1024 * 1024,
         }
     }
 
-    pub fn cluster(&self, t: CoreType) -> &ClusterSpec {
-        match t {
-            CoreType::Big => &self.big,
-            CoreType::Little => &self.little,
+    /// Tri-cluster DynamIQ-style SoC (2 big + 3 mid + 4 LITTLE): the
+    /// shape of modern AMPs (Arm DynamIQ, Intel P/E/LP-E, Apple P/E)
+    /// that motivated generalizing beyond two clusters. Exercises the
+    /// N-way weighted-static split and three distinct cache-aware
+    /// control trees.
+    pub fn dynamiq_3c() -> SocSpec {
+        SocSpec {
+            name: "DynamIQ-style tri-cluster (2 big + 3 mid + 4 LITTLE)".to_string(),
+            clusters: vec![
+                ClusterSpec {
+                    name: "big".to_string(),
+                    short_name: "big".to_string(),
+                    core: CoreSpec {
+                        freq_ghz: 2.2,
+                        l1d: CacheGeometry::new(64 * 1024, 4, 64),
+                        dp_flops_per_cycle: 4.0,
+                    },
+                    num_cores: 2,
+                    l2: CacheGeometry::new(2 * 1024 * 1024, 16, 64),
+                    tuned: BlisParams::a15_opt(),
+                    tuning: ClusterTuning::a15(),
+                },
+                ClusterSpec {
+                    name: "mid".to_string(),
+                    short_name: "mid".to_string(),
+                    core: CoreSpec {
+                        freq_ghz: 1.8,
+                        l1d: CacheGeometry::new(32 * 1024, 4, 64),
+                        dp_flops_per_cycle: 2.0,
+                    },
+                    num_cores: 3,
+                    // 1 MiB shared L2 → its own (mc, kc) optimum, distinct
+                    // from both the big and LITTLE clusters.
+                    l2: CacheGeometry::new(1024 * 1024, 16, 64),
+                    tuned: BlisParams::new(4096, 704, 92, 4, 4),
+                    tuning: ClusterTuning::mid(),
+                },
+                ClusterSpec {
+                    name: "LITTLE".to_string(),
+                    short_name: "LITTLE".to_string(),
+                    core: CoreSpec {
+                        freq_ghz: 1.4,
+                        l1d: CacheGeometry::new(32 * 1024, 4, 64),
+                        dp_flops_per_cycle: 0.5,
+                    },
+                    num_cores: 4,
+                    l2: CacheGeometry::new(512 * 1024, 8, 64),
+                    tuned: BlisParams::a7_opt(),
+                    tuning: ClusterTuning::a7(),
+                },
+            ],
+            dram_bw_gbs: 12.0,
+            dram_total_bytes: 4 * 1024 * 1024 * 1024,
         }
+    }
+
+    /// Symmetric SMP degenerate case: one cluster of identical cores.
+    /// On this topology SSS, SAS(uniform weights) and DAS must all
+    /// collapse to the same plain BLIS-style parallel GEMM — the sanity
+    /// anchor of the N-cluster generalization.
+    pub fn symmetric(num_cores: usize) -> SocSpec {
+        assert!(num_cores >= 1);
+        SocSpec {
+            name: format!("symmetric SMP ({num_cores}×A15-class)"),
+            clusters: vec![ClusterSpec {
+                name: "Cortex-A15".to_string(),
+                short_name: "smp".to_string(),
+                core: CoreSpec {
+                    freq_ghz: 1.6,
+                    l1d: CacheGeometry::new(32 * 1024, 2, 64),
+                    dp_flops_per_cycle: 2.0,
+                },
+                num_cores,
+                l2: CacheGeometry::new(2 * 1024 * 1024, 16, 64),
+                tuned: BlisParams::a15_opt(),
+                tuning: ClusterTuning::a15(),
+            }],
+            dram_bw_gbs: 3.2,
+            dram_total_bytes: 2 * 1024 * 1024 * 1024,
+        }
+    }
+
+    pub fn num_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    /// Iterate every cluster id, in order.
+    pub fn cluster_ids(&self) -> impl Iterator<Item = ClusterId> {
+        (0..self.clusters.len()).map(ClusterId)
+    }
+
+    pub fn cluster(&self, id: ClusterId) -> &ClusterSpec {
+        &self.clusters[id.0]
+    }
+
+    /// The cluster with the highest per-core peak (ties → lowest index).
+    /// Architecture-oblivious configurations run its tuned parameters
+    /// everywhere (§4: "cache configuration parameters are set to those
+    /// that are optimal for the Cortex-A15").
+    pub fn lead(&self) -> ClusterId {
+        let mut best = ClusterId(0);
+        for id in self.cluster_ids() {
+            if self[id].core.peak_gflops() > self[best].core.peak_gflops() {
+                best = id;
+            }
+        }
+        best
     }
 
     pub fn total_cores(&self) -> usize {
-        self.big.num_cores + self.little.num_cores
+        self.clusters.iter().map(|c| c.num_cores).sum()
     }
 
-    /// Global core id range for a cluster: big cores come first
-    /// ([0, nb)), then LITTLE ([nb, nb+nl)). The simulator, native
-    /// executor and energy meter all share this numbering.
-    pub fn core_ids(&self, t: CoreType) -> std::ops::Range<usize> {
-        match t {
-            CoreType::Big => 0..self.big.num_cores,
-            CoreType::Little => self.big.num_cores..self.total_cores(),
-        }
+    /// Global core id range of a cluster: cluster 0's cores come first,
+    /// then cluster 1's, and so on. The simulator, native executor and
+    /// energy meter all share this numbering.
+    pub fn core_ids(&self, id: ClusterId) -> std::ops::Range<usize> {
+        let start: usize = self.clusters[..id.0].iter().map(|c| c.num_cores).sum();
+        start..start + self.clusters[id.0].num_cores
     }
 
-    pub fn core_type_of(&self, core_id: usize) -> CoreType {
-        assert!(core_id < self.total_cores(), "core id {core_id} out of range");
-        if core_id < self.big.num_cores {
-            CoreType::Big
-        } else {
-            CoreType::Little
+    pub fn cluster_of_core(&self, core_id: usize) -> ClusterId {
+        let mut start = 0;
+        for id in self.cluster_ids() {
+            start += self[id].num_cores;
+            if core_id < start {
+                return id;
+            }
         }
+        panic!("core id {core_id} out of range");
     }
 
     /// Ideal aggregate peak (sum of single-core peaks) — upper bound
     /// reference only; the perf model applies efficiency + contention.
     pub fn aggregate_peak_gflops(&self) -> f64 {
-        self.big.core.peak_gflops() * self.big.num_cores as f64
-            + self.little.core.peak_gflops() * self.little.num_cores as f64
+        self.clusters.iter().map(ClusterSpec::peak_gflops).sum()
     }
 }
 
@@ -253,38 +539,45 @@ mod tests {
     #[test]
     fn exynos_matches_paper_spec() {
         let soc = SocSpec::exynos5422();
-        assert_eq!(soc.big.num_cores, 4);
-        assert_eq!(soc.little.num_cores, 4);
-        assert_eq!(soc.big.core.freq_ghz, 1.6);
-        assert_eq!(soc.little.core.freq_ghz, 1.4);
-        assert_eq!(soc.big.l2.size_bytes, 2 * 1024 * 1024);
-        assert_eq!(soc.little.l2.size_bytes, 512 * 1024);
-        assert_eq!(soc.big.core.l1d.size_bytes, 32 * 1024);
-        assert_eq!(soc.little.core.l1d.size_bytes, 32 * 1024);
+        assert_eq!(soc.num_clusters(), 2);
+        assert_eq!(soc[BIG].num_cores, 4);
+        assert_eq!(soc[LITTLE].num_cores, 4);
+        assert_eq!(soc[BIG].core.freq_ghz, 1.6);
+        assert_eq!(soc[LITTLE].core.freq_ghz, 1.4);
+        assert_eq!(soc[BIG].l2.size_bytes, 2 * 1024 * 1024);
+        assert_eq!(soc[LITTLE].l2.size_bytes, 512 * 1024);
+        assert_eq!(soc[BIG].core.l1d.size_bytes, 32 * 1024);
+        assert_eq!(soc[LITTLE].core.l1d.size_bytes, 32 * 1024);
+        assert_eq!(soc[BIG].name, "Cortex-A15");
+        assert_eq!(soc[LITTLE].short_name, "LITTLE");
     }
 
     #[test]
     fn l2_ratio_is_four() {
         let soc = SocSpec::exynos5422();
-        assert_eq!(soc.big.l2.size_bytes / soc.little.l2.size_bytes, 4);
+        assert_eq!(soc[BIG].l2.size_bytes / soc[LITTLE].l2.size_bytes, 4);
     }
 
     #[test]
     fn core_id_mapping_round_trips() {
-        let soc = SocSpec::exynos5422();
-        for id in soc.core_ids(CoreType::Big) {
-            assert_eq!(soc.core_type_of(id), CoreType::Big);
+        for soc in [SocSpec::exynos5422(), SocSpec::dynamiq_3c(), SocSpec::symmetric(6)] {
+            let mut seen = 0;
+            for id in soc.cluster_ids() {
+                for gid in soc.core_ids(id) {
+                    assert_eq!(soc.cluster_of_core(gid), id);
+                    assert_eq!(gid, seen);
+                    seen += 1;
+                }
+            }
+            assert_eq!(seen, soc.total_cores());
         }
-        for id in soc.core_ids(CoreType::Little) {
-            assert_eq!(soc.core_type_of(id), CoreType::Little);
-        }
-        assert_eq!(soc.total_cores(), 8);
+        assert_eq!(SocSpec::exynos5422().total_cores(), 8);
     }
 
     #[test]
     #[should_panic(expected = "out of range")]
-    fn core_type_of_out_of_range_panics() {
-        SocSpec::exynos5422().core_type_of(8);
+    fn cluster_of_core_out_of_range_panics() {
+        SocSpec::exynos5422().cluster_of_core(8);
     }
 
     #[test]
@@ -302,25 +595,84 @@ mod tests {
     #[test]
     fn big_cores_faster_than_little() {
         let soc = SocSpec::exynos5422();
-        assert!(soc.big.core.peak_gflops() > 3.0 * soc.little.core.peak_gflops());
+        assert!(soc[BIG].core.peak_gflops() > 3.0 * soc[LITTLE].core.peak_gflops());
+        assert_eq!(soc.lead(), BIG);
     }
 
     #[test]
     fn custom_counts_builder() {
         let soc = SocSpec::custom_counts(2, 6);
         assert_eq!(soc.total_cores(), 8);
-        assert_eq!(soc.core_ids(CoreType::Little), 2..8);
-    }
-
-    #[test]
-    fn core_type_helpers() {
-        assert_eq!(CoreType::Big.other(), CoreType::Little);
-        assert_eq!(CoreType::Big.name(), "Cortex-A15");
-        assert_eq!(CoreType::Little.short(), "LITTLE");
+        assert_eq!(soc.core_ids(LITTLE), 2..8);
     }
 
     #[test]
     fn aggregate_peak_positive() {
         assert!(SocSpec::exynos5422().aggregate_peak_gflops() > 10.0);
+    }
+
+    #[test]
+    fn tri_cluster_topology_is_well_formed() {
+        let soc = SocSpec::dynamiq_3c();
+        assert_eq!(soc.num_clusters(), 3);
+        assert_eq!(soc.total_cores(), 9);
+        assert_eq!(soc.lead(), ClusterId(0));
+        // Strictly descending per-core peaks, distinct L2 geometries.
+        for w in soc.clusters.windows(2) {
+            assert!(w[0].core.peak_gflops() > w[1].core.peak_gflops());
+        }
+        for c in &soc.clusters {
+            c.tuned.validate();
+            c.l2.validate();
+        }
+    }
+
+    #[test]
+    fn symmetric_preset_degenerates_to_one_cluster() {
+        let soc = SocSpec::symmetric(4);
+        assert_eq!(soc.num_clusters(), 1);
+        assert_eq!(soc.core_ids(ClusterId(0)), 0..4);
+        assert_eq!(soc.lead(), ClusterId(0));
+    }
+
+    #[test]
+    fn shared_kc_refit_reproduces_paper_mc32() {
+        // §5.3: the Exynos LITTLE cluster at the shared kc = 952 must
+        // land on the paper's (mc, kc) = (32, 952) bit-for-bit.
+        let soc = SocSpec::exynos5422();
+        assert_eq!(soc[LITTLE].params_shared_kc(952), BlisParams::a7_shared_kc());
+        // The big cluster's own kc needs no refit.
+        assert_eq!(soc[BIG].params_shared_kc(952), BlisParams::a15_opt());
+    }
+
+    #[test]
+    fn dvfs_builders() {
+        let soc = SocSpec::exynos5422().with_freqs(0.8, 1.4);
+        assert_eq!(soc[BIG].core.freq_ghz, 0.8);
+        assert_eq!(soc[LITTLE].core.freq_ghz, 1.4);
+        let tri = SocSpec::dynamiq_3c().with_cluster_freq(ClusterId(1), 1.2);
+        assert_eq!(tri.clusters[1].core.freq_ghz, 1.2);
+    }
+
+    #[test]
+    fn tuning_helpers() {
+        let t = ClusterTuning::a15();
+        assert_eq!(t.scale(8), t.cluster_scale[3], "clamps beyond table");
+        assert_eq!(t.register_block_factor(4, 4), 1.0);
+        assert_eq!(t.register_block_factor(8, 4), 1.05);
+        assert_eq!(t.register_block_factor(2, 8), 0.93);
+        assert!(ClusterTuning::a7().register_block_factor(8, 4) < 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_active_cores_rejected() {
+        ClusterTuning::a15().scale(0);
+    }
+
+    #[test]
+    fn cluster_id_labels() {
+        assert_eq!(BIG.label(), "c0");
+        assert_eq!(format!("{LITTLE}"), "c1");
     }
 }

@@ -1,0 +1,118 @@
+//! Regression guard: pins the `exynos5422()` preset to the paper's §3.2
+//! hardware description and the §3.3/§3.4 calibration anchors, so the
+//! N-cluster topology generalization (or any future refactor) can never
+//! silently drift the reproduction. Every constant asserted here is a
+//! number the paper states outright.
+
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::blis::params::BlisParams;
+use amp_gemm::model::PerfModel;
+use amp_gemm::sched::ScheduleSpec;
+use amp_gemm::sim::simulate;
+use amp_gemm::soc::{SocSpec, BIG, LITTLE};
+
+/// §3.2: the Exynos 5422 hardware description, field by field.
+#[test]
+fn paper_section_3_2_hardware_constants() {
+    let soc = SocSpec::exynos5422();
+    assert_eq!(soc.num_clusters(), 2, "Exynos 5422 is big.LITTLE");
+    assert_eq!(soc.total_cores(), 8);
+
+    // Cortex-A15 cluster: 4 cores @ 1.6 GHz, 32 KiB L1d, 2 MiB L2.
+    let big = &soc[BIG];
+    assert_eq!(big.name, "Cortex-A15");
+    assert_eq!(big.num_cores, 4);
+    assert_eq!(big.core.freq_ghz, 1.6);
+    assert_eq!(big.core.l1d.size_bytes, 32 * 1024);
+    assert_eq!(big.core.l1d.line_bytes, 64);
+    assert_eq!(big.l2.size_bytes, 2 * 1024 * 1024);
+    assert_eq!(big.core.dp_flops_per_cycle, 2.0);
+    assert_eq!(big.core.peak_gflops(), 3.2);
+
+    // Cortex-A7 cluster: 4 cores @ 1.4 GHz, 32 KiB L1d, 512 KiB L2.
+    let little = &soc[LITTLE];
+    assert_eq!(little.name, "Cortex-A7");
+    assert_eq!(little.num_cores, 4);
+    assert_eq!(little.core.freq_ghz, 1.4);
+    assert_eq!(little.core.l1d.size_bytes, 32 * 1024);
+    assert_eq!(little.l2.size_bytes, 512 * 1024);
+    assert_eq!(little.core.dp_flops_per_cycle, 0.5);
+    assert_eq!(little.core.peak_gflops(), 0.7);
+
+    // Shared DRAM.
+    assert_eq!(soc.dram_bw_gbs, 3.2);
+    assert_eq!(soc.dram_total_bytes, 2 * 1024 * 1024 * 1024);
+}
+
+/// §3.3: the tuned blocking parameters carried by the descriptor are
+/// exactly the paper's empirically found optima.
+#[test]
+fn paper_section_3_3_tuned_blocking_parameters() {
+    let soc = SocSpec::exynos5422();
+    assert_eq!(soc[BIG].tuned, BlisParams::new(4096, 952, 152, 4, 4));
+    assert_eq!(soc[LITTLE].tuned, BlisParams::new(4096, 352, 80, 4, 4));
+    // §5.3 shared-kc refit: (mc, kc) = (32, 952) on the LITTLE cluster.
+    assert_eq!(
+        soc[LITTLE].params_shared_kc(952),
+        BlisParams::new(4096, 952, 32, 4, 4)
+    );
+}
+
+/// §3.4 + Fig. 5/7 anchors: the calibrated model's headline rates.
+#[test]
+fn paper_section_3_4_performance_anchors() {
+    let m = PerfModel::exynos();
+    let a15 = BlisParams::a15_opt();
+    let a7 = BlisParams::a7_opt();
+
+    let single_a15 = m.steady_rate_gflops(BIG, &a15, 1);
+    assert!((2.80..3.00).contains(&single_a15), "1×A15 {single_a15}");
+    let quad_a15 = m.cluster_rate_gflops(BIG, &a15, 4);
+    assert!((9.2..10.0).contains(&quad_a15), "4×A15 {quad_a15}");
+    let single_a7 = m.steady_rate_gflops(LITTLE, &a7, 1);
+    assert!((0.55..0.63).contains(&single_a7), "1×A7 {single_a7}");
+    let quad_a7 = m.cluster_rate_gflops(LITTLE, &a7, 4);
+    assert!((2.2..2.5).contains(&quad_a7), "4×A7 {quad_a7}");
+    // Fig. 9: the SAS knob's sweet spot.
+    let ratio = m.ideal_ratio(&a15, &a15);
+    assert!((4.4..5.6).contains(&ratio), "SAS ideal ratio {ratio}");
+}
+
+/// End-to-end guard: the headline simulated figures on the Exynos
+/// preset. If any future topology work shifts these, the reproduction
+/// has drifted even though unit-level constants may still pass.
+#[test]
+fn simulated_headline_figures_pinned() {
+    let m = PerfModel::exynos();
+    let r = GemmShape::square(4096);
+    let a15 = simulate(&m, &ScheduleSpec::cluster_only(BIG, 4), r).gflops;
+    let a7 = simulate(&m, &ScheduleSpec::cluster_only(LITTLE, 4), r).gflops;
+    let sss = simulate(&m, &ScheduleSpec::sss(), r).gflops;
+    let sas5 = simulate(&m, &ScheduleSpec::sas(5.0), r).gflops;
+    let cadas = simulate(&m, &ScheduleSpec::ca_das(), r).gflops;
+
+    assert!((8.8..10.0).contains(&a15), "A15x4 {a15}");
+    assert!((2.0..2.5).contains(&a7), "A7x4 {a7}");
+    assert!((0.32..0.50).contains(&(sss / a15)), "SSS fraction {}", sss / a15);
+    assert!((1.10..1.30).contains(&(sas5 / a15)), "SAS(5) gain {}", sas5 / a15);
+    assert!(cadas > 0.90 * (a15 + a7), "CA-DAS {cadas} vs ideal {}", a15 + a7);
+}
+
+/// The preset must stay bit-for-bit stable across calls (no hidden
+/// global state, no drift between the model and the descriptor).
+#[test]
+fn preset_is_pure() {
+    assert_eq!(SocSpec::exynos5422(), SocSpec::exynos5422());
+    let a = simulate(
+        &PerfModel::exynos(),
+        &ScheduleSpec::ca_das(),
+        GemmShape::square(1024),
+    );
+    let b = simulate(
+        &PerfModel::exynos(),
+        &ScheduleSpec::ca_das(),
+        GemmShape::square(1024),
+    );
+    assert_eq!(a.time_s, b.time_s);
+    assert_eq!(a.energy.energy_j, b.energy.energy_j);
+}

@@ -6,9 +6,9 @@ use amp_gemm::blis::params::BlisParams;
 use amp_gemm::figures;
 use amp_gemm::model::PerfModel;
 use amp_gemm::native::gemm_parallel;
-use amp_gemm::sched::{CoarseLoop, FineLoop, ScheduleSpec, Strategy};
+use amp_gemm::sched::{CoarseLoop, FineLoop, ScheduleSpec, Strategy, Weights};
 use amp_gemm::sim::simulate;
-use amp_gemm::soc::{CoreType, SocSpec};
+use amp_gemm::soc::{SocSpec, BIG, LITTLE};
 use amp_gemm::util::rng::Rng;
 use amp_gemm::util::stats::{gemm_tolerance, max_abs_diff};
 
@@ -20,8 +20,8 @@ fn every_figure_schedule_runs_on_both_engines() {
     let model = PerfModel::exynos();
     let mut specs: Vec<ScheduleSpec> = vec![ScheduleSpec::sss(), ScheduleSpec::das(), ScheduleSpec::ca_das()];
     for t in 1..=4 {
-        specs.push(ScheduleSpec::cluster_only(CoreType::Big, t));
-        specs.push(ScheduleSpec::cluster_only(CoreType::Little, t));
+        specs.push(ScheduleSpec::cluster_only(BIG, t));
+        specs.push(ScheduleSpec::cluster_only(LITTLE, t));
     }
     for r in 1..=7 {
         specs.push(ScheduleSpec::sas(r as f64));
@@ -31,7 +31,11 @@ fn every_figure_schedule_runs_on_both_engines() {
     }
     for coarse in [CoarseLoop::Loop1, CoarseLoop::Loop3] {
         for fine in [FineLoop::Loop4, FineLoop::Loop5, FineLoop::Both] {
-            specs.push(ScheduleSpec::new(Strategy::CaSas { ratio: 5.0 }, coarse, fine));
+            specs.push(ScheduleSpec::new(
+                Strategy::CaSas { weights: Weights::ratio(5.0) },
+                coarse,
+                fine,
+            ));
         }
     }
 
@@ -103,8 +107,7 @@ fn energy_accounting_consistency() {
     let model = PerfModel::exynos();
     for spec in [ScheduleSpec::sss(), ScheduleSpec::sas(5.0), ScheduleSpec::ca_das()] {
         let st = simulate(&model, &spec, GemmShape::square(2048));
-        let sum = st.energy.energy_big_j
-            + st.energy.energy_little_j
+        let sum = st.energy.energy_clusters_j.iter().sum::<f64>()
             + st.energy.energy_dram_j
             + st.energy.energy_gpu_j;
         assert!((sum - st.energy.energy_j).abs() < 1e-9, "{}", spec.label());
@@ -140,7 +143,7 @@ fn single_thread_native_is_bitwise_sequential() {
     let mut c_par = vec![0.0; shape.m * shape.n];
     gemm_parallel(
         &soc,
-        &ScheduleSpec::cluster_only(CoreType::Big, 1),
+        &ScheduleSpec::cluster_only(BIG, 1),
         shape,
         &a,
         &b,
