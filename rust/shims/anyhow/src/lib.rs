@@ -1,0 +1,129 @@
+//! Offline stand-in for the `anyhow` crate: the build environment has
+//! no crate registry, so the workspace carries the small subset of the
+//! API it actually uses — a string-backed [`Error`], the [`Result`]
+//! alias, the [`anyhow!`]/[`bail!`] macros and the [`Context`] trait.
+//! Mirrors the real crate's shape so swapping the dependency line back
+//! to crates.io anyhow requires no source changes.
+
+/// String-backed error value. Like the real `anyhow::Error`, it
+/// deliberately does NOT implement `std::error::Error` — that is what
+/// makes the blanket [`From`] conversion below coherent.
+pub struct Error(String);
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` macro's
+    /// entry point).
+    pub fn msg<M: std::fmt::Display>(m: M) -> Error {
+        Error(m.to_string())
+    }
+
+    /// Prefix the error with additional context.
+    pub fn context<C: std::fmt::Display>(self, c: C) -> Error {
+        Error(format!("{c}: {}", self.0))
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// `anyhow`-style result alias with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Attach context to failible values (`Result` of any displayable
+/// error, or `Option`).
+pub trait Context<T> {
+    fn context<C: std::fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: std::fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{c}: {e}")))
+    }
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: std::fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error(c.to_string()))
+    }
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<usize> {
+        let n: usize = s.parse().context("bad number")?;
+        if n == 0 {
+            bail!("zero is not allowed: '{s}'");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn macro_and_question_mark_paths() {
+        assert_eq!(parse("7").unwrap(), 7);
+        let e = parse("x").unwrap_err().to_string();
+        assert!(e.starts_with("bad number:"), "{e}");
+        let z = parse("0").unwrap_err().to_string();
+        assert!(z.contains("zero is not allowed"), "{z}");
+    }
+
+    #[test]
+    fn option_and_with_context() {
+        let none: Option<usize> = None;
+        let e = none.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        let io: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = io.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert!(e.to_string().starts_with("step 3:"), "{e}");
+    }
+
+    #[test]
+    fn from_std_error_via_question_mark() {
+        fn io_fail() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io_fail().is_err());
+        let e = Error::msg("base").context("outer");
+        assert_eq!(format!("{e:?}"), "outer: base");
+    }
+}

@@ -27,16 +27,25 @@
 //! optimum ratio of 5–6 in Fig. 9 *is* that penalty, see DESIGN.md §5).
 
 use crate::blis::params::BlisParams;
-use crate::soc::ClusterSpec;
+use crate::soc::{ClusterId, ClusterSpec, SocSpec};
 
 /// Fraction of L1d usable by the resident `Br` micro-panel.
 pub const L1_FILL: f64 = 0.95;
+
+/// Fraction of a system-level cache usable by one cluster's spilled
+/// `Ac` panel (the SLC is shared by every cluster plus the `Bc`/C
+/// streams, so the budget is conservative).
+pub const L3_FILL: f64 = 0.50;
 
 /// Penalty floors/slopes (dimensionless). See module docs.
 const L1_OVERFLOW_FLOOR: f64 = 0.60;
 const L1_OVERFLOW_SLOPE: f64 = 4.0;
 const L2_OVERFLOW_FLOOR: f64 = 0.72;
 const L2_OVERFLOW_SLOPE: f64 = 1.35;
+/// Raised floor when an `Ac` spill is caught by the SLC: re-streams come
+/// from the L3 at far better latency/bandwidth than DRAM, so the
+/// bandwidth-bound asymptote is milder.
+const L2_SLC_CAUGHT_FLOOR: f64 = 0.88;
 
 /// Element size: the paper evaluates IEEE double precision throughout.
 pub const ELEM_BYTES: usize = 8;
@@ -53,6 +62,9 @@ pub struct FitReport {
     pub l1_pressure: f64,
     /// ac_bytes / l2_budget.
     pub l2_pressure: f64,
+    /// ac_bytes / l3_budget on SoCs with a system-level cache; `None`
+    /// on two-level hierarchies (all paper presets).
+    pub l3_pressure: Option<f64>,
 }
 
 impl FitReport {
@@ -62,6 +74,11 @@ impl FitReport {
     pub fn ac_fits(&self) -> bool {
         self.l2_pressure <= 1.0
     }
+    /// Whether a spilled `Ac` is caught by the system-level cache
+    /// (`false` when there is no L3).
+    pub fn ac_fits_l3(&self) -> bool {
+        self.l3_pressure.is_some_and(|p| p <= 1.0)
+    }
 
     /// Throughput multiplier from L1 pressure (1.0 when `Br` fits).
     pub fn l1_penalty(&self) -> f64 {
@@ -69,8 +86,16 @@ impl FitReport {
     }
 
     /// Throughput multiplier from L2 pressure (1.0 when `Ac` fits).
+    /// When the SoC has a system-level cache that catches the spill,
+    /// the overflow decays towards a milder (SLC-bandwidth) floor than
+    /// the DRAM-bound one.
     pub fn l2_penalty(&self) -> f64 {
-        soft_floor_penalty(self.l2_pressure, L2_OVERFLOW_FLOOR, L2_OVERFLOW_SLOPE)
+        let floor = if self.ac_fits_l3() {
+            L2_SLC_CAUGHT_FLOOR
+        } else {
+            L2_OVERFLOW_FLOOR
+        };
+        soft_floor_penalty(self.l2_pressure, floor, L2_OVERFLOW_SLOPE)
     }
 
     pub fn combined_penalty(&self) -> f64 {
@@ -98,6 +123,8 @@ pub struct FootprintAnalysis {
     l1_bytes: usize,
     l2_bytes: usize,
     l2_fill: f64,
+    /// System-level cache capacity, when the SoC has one.
+    l3_bytes: Option<usize>,
 }
 
 impl FootprintAnalysis {
@@ -106,7 +133,18 @@ impl FootprintAnalysis {
             l1_bytes: cluster.core.l1d.size_bytes,
             l2_bytes: cluster.l2.size_bytes,
             l2_fill: cluster.tuning.l2_fill,
+            l3_bytes: None,
         }
+    }
+
+    /// Like [`FootprintAnalysis::for_cluster`], additionally picking up
+    /// the SoC's system-level cache so spilled `Ac` panels can be
+    /// credited to the SLC instead of DRAM. Identical to the two-level
+    /// analysis when `soc.l3` is `None` (all paper presets).
+    pub fn for_cluster_in(soc: &SocSpec, id: ClusterId) -> Self {
+        let mut a = FootprintAnalysis::for_cluster(&soc[id]);
+        a.l3_bytes = soc.l3.map(|g| g.size_bytes);
+        a
     }
 
     pub fn l2_fill(&self) -> f64 {
@@ -147,6 +185,7 @@ impl FootprintAnalysis {
             l2_budget_bytes: l2b,
             l1_pressure: br as f64 / l1b,
             l2_pressure: ac as f64 / l2b,
+            l3_pressure: self.l3_bytes.map(|b| ac as f64 / (L3_FILL * b as f64)),
         }
     }
 
@@ -260,5 +299,51 @@ mod tests {
     fn bc_footprint_reported() {
         let fit = big().fit(&BlisParams::a15_opt());
         assert_eq!(fit.bc_bytes, 952 * 4096 * 8);
+    }
+
+    #[test]
+    fn two_level_socs_report_no_l3_pressure() {
+        let a = FootprintAnalysis::for_cluster_in(&SocSpec::exynos5422(), LITTLE);
+        let fit = a.fit(&BlisParams::a15_opt());
+        assert_eq!(fit.l3_pressure, None);
+        assert!(!fit.ac_fits_l3());
+        // Bit-for-bit with the plain two-level analysis.
+        let plain = little().fit(&BlisParams::a15_opt());
+        assert_eq!(fit.l2_penalty(), plain.l2_penalty());
+        assert_eq!(fit.combined_penalty(), plain.combined_penalty());
+    }
+
+    #[test]
+    fn slc_catches_ac_spill_on_pe_hybrid() {
+        // The P/E preset: P-class Ac (1.16 MiB) overflows the E
+        // cluster's 512 KiB L2 but fits the 12 MiB SLC budget, so the
+        // overflow penalty is milder than the DRAM-bound floor.
+        let pe = SocSpec::pe_hybrid();
+        let with_slc = FootprintAnalysis::for_cluster_in(&pe, LITTLE);
+        let fit = with_slc.fit(&BlisParams::a15_opt());
+        assert!(!fit.ac_fits(), "Ac must overflow the E-cluster L2");
+        assert!(fit.ac_fits_l3(), "…and land in the SLC: {fit:?}");
+        let without = FootprintAnalysis::for_cluster(&pe[LITTLE]).fit(&BlisParams::a15_opt());
+        assert!(
+            fit.l2_penalty() > without.l2_penalty(),
+            "SLC-caught spill {} must beat DRAM-bound spill {}",
+            fit.l2_penalty(),
+            without.l2_penalty()
+        );
+        // Inside-budget configurations are not affected by the SLC.
+        let small_fit = with_slc.fit(&BlisParams::a7_opt());
+        assert_eq!(small_fit.combined_penalty(), 1.0);
+    }
+
+    #[test]
+    fn ac_overflowing_the_slc_too_falls_back_to_dram_floor() {
+        // A tiny 1 MiB SLC: the 1.16 MiB Ac overflows it as well, so the
+        // penalty reverts to the two-level DRAM-bound floor.
+        let soc = SocSpec::exynos5422()
+            .with_l3(crate::soc::CacheGeometry::new(1024 * 1024, 16, 64));
+        let a = FootprintAnalysis::for_cluster_in(&soc, LITTLE);
+        let fit = a.fit(&BlisParams::a15_opt());
+        assert!(!fit.ac_fits_l3());
+        assert_eq!(fit.l2_penalty(), little().fit(&BlisParams::a15_opt()).l2_penalty());
     }
 }

@@ -1,22 +1,28 @@
-//! Two-level cache hierarchy (private L1d → shared L2), inclusive-ish:
-//! an access goes to L1; on L1 miss it goes to L2; on L2 miss it costs a
-//! DRAM transfer. This mirrors the Exynos 5422 organization the paper's
-//! blocking analysis targets (Fig. 2: `Br` in L1, `Ac` in L2).
+//! Multi-level cache hierarchy (private L1d → shared L2 → optional
+//! L3/SLC), inclusive-ish: an access goes to L1; on L1 miss it goes to
+//! L2; on L2 miss it goes to the system-level cache when the SoC has one
+//! ([`crate::soc::SocSpec::l3`]); whatever misses the last level costs a
+//! DRAM transfer. The two-level default mirrors the Exynos 5422
+//! organization the paper's blocking analysis targets (Fig. 2: `Br` in
+//! L1, `Ac` in L2); the third level models the Intel/Apple P/E shapes
+//! of the ROADMAP's hierarchy item.
 
 use crate::cache::sim::CacheSim;
-use crate::soc::{CacheGeometry, ClusterSpec};
+use crate::soc::{CacheGeometry, ClusterId, ClusterSpec, SocSpec};
 
 /// Per-level outcome counters for a hierarchy walk.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct LevelStats {
     pub l1_hits: u64,
     pub l2_hits: u64,
+    /// Hits in the system-level cache; always 0 on two-level SoCs.
+    pub l3_hits: u64,
     pub dram_accesses: u64,
 }
 
 impl LevelStats {
     pub fn total(&self) -> u64 {
-        self.l1_hits + self.l2_hits + self.dram_accesses
+        self.l1_hits + self.l2_hits + self.l3_hits + self.dram_accesses
     }
     pub fn l1_hit_rate(&self) -> f64 {
         if self.total() == 0 {
@@ -43,6 +49,8 @@ impl LevelStats {
 pub struct Hierarchy {
     pub l1: CacheSim,
     pub l2: CacheSim,
+    /// System-level cache behind the L2, when the SoC has one.
+    pub l3: Option<CacheSim>,
     pub stats: LevelStats,
 }
 
@@ -51,8 +59,15 @@ impl Hierarchy {
         Hierarchy {
             l1: CacheSim::new(l1_geo),
             l2: CacheSim::new(l2_geo),
+            l3: None,
             stats: LevelStats::default(),
         }
+    }
+
+    /// Attach an L3/SLC level behind the L2 (builder style).
+    pub fn with_l3(mut self, l3_geo: CacheGeometry) -> Self {
+        self.l3 = Some(CacheSim::new(l3_geo));
+        self
     }
 
     /// Build from a cluster spec, optionally dividing the shared L2
@@ -70,7 +85,18 @@ impl Hierarchy {
         Hierarchy::new(cluster.core.l1d, share)
     }
 
-    /// Access one byte address through L1 → L2 → DRAM.
+    /// Build one core's view within a whole-SoC descriptor: the
+    /// cluster's L1/L2 as in [`Hierarchy::for_cluster`], plus the SoC's
+    /// system-level cache when present.
+    pub fn for_soc_cluster(soc: &SocSpec, id: ClusterId, sharers: usize) -> Self {
+        let h = Hierarchy::for_cluster(&soc[id], sharers);
+        match soc.l3 {
+            Some(geo) => h.with_l3(geo),
+            None => h,
+        }
+    }
+
+    /// Access one byte address through L1 → L2 → (L3 →) DRAM.
     pub fn access(&mut self, addr: u64) {
         if self.l1.access(addr).is_hit() {
             self.stats.l1_hits += 1;
@@ -79,6 +105,12 @@ impl Hierarchy {
         if self.l2.access(addr).is_hit() {
             self.stats.l2_hits += 1;
             return;
+        }
+        if let Some(l3) = &mut self.l3 {
+            if l3.access(addr).is_hit() {
+                self.stats.l3_hits += 1;
+                return;
+            }
         }
         self.stats.dram_accesses += 1;
     }
@@ -105,11 +137,17 @@ impl Hierarchy {
         self.stats = LevelStats::default();
         self.l1.reset_stats();
         self.l2.reset_stats();
+        if let Some(l3) = &mut self.l3 {
+            l3.reset_stats();
+        }
     }
 
     pub fn flush(&mut self) {
         self.l1.flush();
         self.l2.flush();
+        if let Some(l3) = &mut self.l3 {
+            l3.flush();
+        }
     }
 }
 
@@ -206,5 +244,41 @@ mod tests {
         h.flush();
         h.access(0);
         assert_eq!(h.stats.dram_accesses, 1);
+    }
+
+    #[test]
+    fn l3_catches_l2_capacity_spill() {
+        // L3 of 16 KiB (4× the L2): a working set that spills the L2
+        // must be served by the SLC, not DRAM, on the second sweep.
+        let mut h = small().with_l3(CacheGeometry::new(16 * 1024, 8, 64));
+        for i in 0..128u64 {
+            h.access(i * 64); // 8 KiB: 2× the L2, half the L3
+        }
+        h.stats = LevelStats::default();
+        for i in 0..128u64 {
+            h.access(i * 64);
+        }
+        assert_eq!(h.stats.dram_accesses, 0, "second sweep served by SLC");
+        assert!(h.stats.l3_hits > 0);
+        // A two-level hierarchy on the same trace pays DRAM instead.
+        let mut two = small();
+        for _ in 0..2 {
+            for i in 0..128u64 {
+                two.access(i * 64);
+            }
+        }
+        assert!(two.stats.dram_accesses > 128);
+    }
+
+    #[test]
+    fn soc_constructor_attaches_slc_only_when_present() {
+        let pe = SocSpec::pe_hybrid();
+        let h = Hierarchy::for_soc_cluster(&pe, crate::soc::LITTLE, 1);
+        assert_eq!(
+            h.l3.as_ref().map(|c| c.geometry().size_bytes),
+            Some(12 * 1024 * 1024)
+        );
+        let exynos = Hierarchy::for_soc_cluster(&SocSpec::exynos5422(), crate::soc::BIG, 1);
+        assert!(exynos.l3.is_none());
     }
 }

@@ -3,25 +3,33 @@
 //!
 //! The paper's contribution is the scheduling layer itself, so the
 //! coordinator is the thin-but-real driver DESIGN.md calls for: a job
-//! queue with a same-shape batcher (PJRT executables are shape-
+//! queue with a same-shape [`Batcher`] (PJRT executables are shape-
 //! specialized — grouping identical shapes amortizes dispatch), worker
 //! threads, model-driven strategy auto-selection (the §5.2 ratio knob
 //! computed from the calibrated performance model rather than an
 //! environment variable), and metrics. `std::thread` + `mpsc` replace
 //! tokio (offline crate set, DESIGN.md §2); the workload is CPU-bound
 //! GEMM, so blocking workers are the right shape anyway.
+//!
+//! Scale-out: the [`FleetDispatcher`] front-end shards same-shape
+//! batches across the boards of a [`crate::fleet::Fleet`] under a
+//! board-level strategy (fleet-SSS/SAS/DAS), merges responses back in
+//! request order, and aggregates per-board metrics — the coordinator's
+//! single-SoC job queue lifted one level (DESIGN.md §3, "Fleet layer").
 
 pub mod server;
 
 use crate::blis::gemm::GemmShape;
+use crate::fleet::{Fleet, FleetStrategy};
 use crate::model::PerfModel;
 use crate::native;
+use crate::partition::DynamicQueue;
 use crate::runtime::worker::PjrtHandle;
 use crate::sched::ScheduleSpec;
 use crate::sim;
 use crate::soc::SocSpec;
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -70,6 +78,67 @@ pub struct Metrics {
     pub total_flops: f64,
     pub total_latency_s: f64,
     pub batches: u64,
+}
+
+/// Largest same-shape group one worker executes back-to-back; bigger
+/// runs split into several groups so a huge batch still parallelizes.
+pub const MAX_GROUP_LEN: usize = 64;
+
+/// Order-preserving same-shape batcher: items accumulate into per-key
+/// groups; a group is emitted the moment it reaches `max_group`, and
+/// [`Batcher::drain`] flushes every partially-filled group immediately,
+/// in first-arrival order. The drain is what guarantees a trailing
+/// odd-sized group never waits on a timeout path — when the queue is
+/// empty, partial groups ship as-is.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    max_group: usize,
+    /// Pending groups, in first-arrival order of their opening item.
+    groups: Vec<(String, Vec<T>)>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_group: usize) -> Self {
+        assert!(max_group >= 1, "groups need at least one slot");
+        Batcher {
+            max_group,
+            groups: Vec::new(),
+        }
+    }
+
+    /// Items waiting in partially-filled groups.
+    pub fn pending(&self) -> usize {
+        self.groups.iter().map(|(_, g)| g.len()).sum()
+    }
+
+    /// Add one item under its batch key; returns the completed group
+    /// when this item fills one.
+    pub fn push(&mut self, key: String, item: T) -> Option<Vec<T>> {
+        let idx = match self.groups.iter().position(|(k, _)| *k == key) {
+            Some(i) => {
+                self.groups[i].1.push(item);
+                i
+            }
+            None => {
+                self.groups.push((key, vec![item]));
+                self.groups.len() - 1
+            }
+        };
+        if self.groups[idx].1.len() >= self.max_group {
+            Some(self.groups.remove(idx).1)
+        } else {
+            None
+        }
+    }
+
+    /// Flush every pending group — partially filled ones included — in
+    /// first-arrival order.
+    pub fn drain(&mut self) -> Vec<Vec<T>> {
+        std::mem::take(&mut self.groups)
+            .into_iter()
+            .map(|(_, g)| g)
+            .collect()
+    }
 }
 
 /// The coordinator service.
@@ -186,17 +255,23 @@ impl Coordinator {
         })
     }
 
-    /// Batch executor: groups requests by (shape, backend kind) so PJRT
-    /// requests with the same artifact run back-to-back on the already-
-    /// compiled executable, then dispatches each group on a worker
-    /// thread. Responses are returned in request order.
+    /// Batch executor: groups requests by (shape, backend kind) through
+    /// the [`Batcher`] so PJRT requests with the same artifact run
+    /// back-to-back on the already-compiled executable, then dispatches
+    /// each group on a worker thread. Group formation is deterministic
+    /// (first-arrival order) and the final drain flushes partially-
+    /// filled trailing groups immediately instead of leaving them on a
+    /// timeout path. Responses are returned in request order.
     pub fn execute_batch(&self, reqs: Vec<Request>) -> Vec<Result<Response>> {
         let n = reqs.len();
-        // Group indices by batch key.
-        let mut groups: HashMap<String, Vec<usize>> = HashMap::new();
+        let mut batcher = Batcher::new(MAX_GROUP_LEN);
+        let mut groups: Vec<Vec<usize>> = Vec::new();
         for (i, r) in reqs.iter().enumerate() {
-            groups.entry(Self::batch_key(r)).or_default().push(i);
+            if let Some(g) = batcher.push(Self::batch_key(r), i) {
+                groups.push(g);
+            }
         }
+        groups.extend(batcher.drain());
         {
             let mut m = self.metrics.lock().unwrap();
             m.batches += groups.len() as u64;
@@ -204,11 +279,11 @@ impl Coordinator {
 
         let (tx, rx) = mpsc::channel::<(usize, Result<Response>)>();
         std::thread::scope(|s| {
-            for (_, idxs) in groups {
+            for idxs in &groups {
                 let tx = tx.clone();
                 let reqs = &reqs;
                 s.spawn(move || {
-                    for i in idxs {
+                    for &i in idxs {
                         let resp = self.execute(&reqs[i]);
                         tx.send((i, resp)).expect("result channel");
                     }
@@ -231,6 +306,164 @@ impl Coordinator {
             Backend::Auto => "auto".to_string(),
         };
         format!("{}:{}x{}x{}", kind, r.shape.m, r.shape.n, r.shape.k)
+    }
+}
+
+/// Per-board and fleet-aggregate service metrics.
+#[derive(Debug, Clone)]
+pub struct FleetMetrics {
+    /// One `(board name, metrics)` entry per board, in fleet order.
+    pub boards: Vec<(String, Metrics)>,
+    /// Same-shape groups the dispatcher has sharded.
+    pub batches: u64,
+}
+
+impl FleetMetrics {
+    /// Requests completed across all boards.
+    pub fn completed(&self) -> u64 {
+        self.boards.iter().map(|(_, m)| m.completed).sum()
+    }
+
+    /// Total useful flops across all boards.
+    pub fn total_flops(&self) -> f64 {
+        self.boards.iter().map(|(_, m)| m.total_flops).sum()
+    }
+}
+
+/// Multi-board front-end: shards same-shape batches across the boards
+/// of a [`Fleet`], merges responses back in request order, and
+/// aggregates per-board metrics — the board-level twin of
+/// [`Coordinator::execute_batch`] (cluster : SoC :: board : fleet).
+///
+/// Each board gets its own [`Coordinator`] bound to that board's SoC
+/// descriptor and executes its shard under the board's own engine
+/// ([`crate::fleet::Board::backend`]); the request-level `backend`
+/// field is overridden by the dispatcher. Static strategies ship each
+/// board one contiguous shard; fleet-DAS runs one puller thread per
+/// board grabbing chunks of the board's own grain from a shared
+/// [`DynamicQueue`] — the §5.4 critical section, one level up.
+#[allow(missing_debug_implementations)]
+pub struct FleetDispatcher {
+    fleet: Fleet,
+    coords: Vec<Coordinator>,
+    batches: AtomicU64,
+}
+
+impl FleetDispatcher {
+    pub fn new(fleet: Fleet) -> Self {
+        let coords = fleet
+            .boards
+            .iter()
+            .map(|b| Coordinator::new(b.soc().clone()))
+            .collect();
+        FleetDispatcher {
+            fleet,
+            coords,
+            batches: AtomicU64::new(0),
+        }
+    }
+
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    pub fn metrics(&self) -> FleetMetrics {
+        FleetMetrics {
+            boards: self
+                .fleet
+                .boards
+                .iter()
+                .zip(&self.coords)
+                .map(|(b, c)| (b.name.clone(), c.metrics()))
+                .collect(),
+            batches: self.batches.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Execute one request on one board, under the board's engine; the
+    /// response label is prefixed with the board name.
+    fn execute_on(&self, board: usize, req: &Request) -> Result<Response> {
+        let mut r = req.clone();
+        r.backend = self.fleet.boards[board].backend.clone();
+        self.coords[board].execute(&r).map(|mut resp| {
+            resp.backend_label =
+                format!("{}/{}", self.fleet.boards[board].name, resp.backend_label);
+            resp
+        })
+    }
+
+    /// Shard a batch across the fleet and execute it. Requests of mixed
+    /// shapes are first grouped by the same-shape [`Batcher`] (partial
+    /// trailing groups flush on drain); each group is then split across
+    /// boards by `strategy`. Responses come back in request order.
+    pub fn dispatch(
+        &self,
+        reqs: Vec<Request>,
+        strategy: FleetStrategy,
+    ) -> Vec<Result<Response>> {
+        let n = reqs.len();
+        let mut batcher = Batcher::new(MAX_GROUP_LEN);
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            let key = format!("{}x{}x{}", r.shape.m, r.shape.n, r.shape.k);
+            if let Some(g) = batcher.push(key, i) {
+                groups.push(g);
+            }
+        }
+        groups.extend(batcher.drain());
+        self.batches.fetch_add(groups.len() as u64, Ordering::SeqCst);
+
+        let grains = self.fleet.grains();
+        let (tx, rx) = mpsc::channel::<(usize, Result<Response>)>();
+        std::thread::scope(|s| {
+            for group in &groups {
+                match strategy {
+                    FleetStrategy::Sss | FleetStrategy::Sas => {
+                        let shards = self.fleet.static_shards(group.len(), strategy);
+                        let mut offset = 0;
+                        for (b, &share) in shards.iter().enumerate() {
+                            if share == 0 {
+                                continue;
+                            }
+                            let idxs = &group[offset..offset + share];
+                            offset += share;
+                            let tx = tx.clone();
+                            let reqs = &reqs;
+                            s.spawn(move || {
+                                for &i in idxs {
+                                    tx.send((i, self.execute_on(b, &reqs[i])))
+                                        .expect("result channel");
+                                }
+                            });
+                        }
+                    }
+                    FleetStrategy::Das => {
+                        let queue = Arc::new(DynamicQueue::new(group.len()));
+                        for b in 0..self.fleet.num_boards() {
+                            let queue = queue.clone();
+                            let grain = grains[b];
+                            let tx = tx.clone();
+                            let reqs = &reqs;
+                            let group = &group[..];
+                            s.spawn(move || {
+                                while let Some(chunk) = queue.grab(grain) {
+                                    for &i in &group[chunk.start..chunk.end()] {
+                                        tx.send((i, self.execute_on(b, &reqs[i])))
+                                            .expect("result channel");
+                                    }
+                                }
+                            });
+                        }
+                    }
+                }
+            }
+            drop(tx);
+        });
+        let mut out: Vec<Option<Result<Response>>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|o| o.expect("all shards complete")).collect()
     }
 }
 
@@ -378,5 +611,102 @@ mod tests {
         // §5.2.2/Fig. 9: the right ratio is ≈ 5.
         assert_eq!(c.auto_ratio(), 5.0);
         assert_eq!(c.auto_spec(), ScheduleSpec::ca_das());
+    }
+
+    /// ISSUE satellite: the batcher's drain must flush partially-filled
+    /// same-shape groups immediately, in first-arrival order — a
+    /// trailing odd-sized group never waits on a timeout path.
+    #[test]
+    fn batcher_drain_order_pinned() {
+        // max_group large: nothing fills, everything rides the drain.
+        let mut b: Batcher<usize> = Batcher::new(MAX_GROUP_LEN);
+        for (i, key) in ["A", "B", "A", "C", "B"].iter().enumerate() {
+            assert_eq!(b.push(key.to_string(), i), None);
+        }
+        assert_eq!(b.pending(), 5);
+        let groups = b.drain();
+        // First-arrival order of each group's opening item, trailing
+        // odd-sized C group included.
+        assert_eq!(groups, vec![vec![0, 2], vec![1, 4], vec![3]]);
+        assert_eq!(b.pending(), 0);
+        assert!(b.drain().is_empty(), "drain leaves the batcher empty");
+    }
+
+    #[test]
+    fn batcher_emits_full_groups_inline() {
+        let mut b: Batcher<usize> = Batcher::new(2);
+        assert_eq!(b.push("A".into(), 0), None);
+        assert_eq!(b.push("B".into(), 1), None);
+        // Second A completes that group immediately.
+        assert_eq!(b.push("A".into(), 2), Some(vec![0, 2]));
+        assert_eq!(b.push("C".into(), 3), None);
+        assert_eq!(b.push("B".into(), 4), Some(vec![1, 4]));
+        // A new A group reopens after the flush.
+        assert_eq!(b.push("A".into(), 5), None);
+        assert_eq!(b.drain(), vec![vec![3], vec![5]]);
+    }
+
+    fn fleet_dispatcher() -> FleetDispatcher {
+        use crate::fleet::Board;
+        FleetDispatcher::new(Fleet::new(vec![
+            Board::native("exynos", SocSpec::exynos5422()),
+            Board::native("smp2", SocSpec::symmetric(2)),
+        ]))
+    }
+
+    /// The fleet front-end on every strategy: responses merge back in
+    /// request order and the numerics survive the board hop.
+    #[test]
+    fn fleet_dispatcher_shards_and_preserves_order() {
+        for strategy in [FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das] {
+            let d = fleet_dispatcher();
+            let mut reqs = Vec::new();
+            let mut wants = Vec::new();
+            for (i, r) in [64usize, 96, 64, 96, 64, 64].iter().enumerate() {
+                let (req, want) = request(i as u64, *r, 50 + i as u64, Backend::Auto);
+                reqs.push(req);
+                wants.push(want);
+            }
+            let resps = d.dispatch(reqs, strategy);
+            assert_eq!(resps.len(), 6);
+            for (i, (resp, want)) in resps.iter().zip(&wants).enumerate() {
+                let resp = resp.as_ref().unwrap_or_else(|e| {
+                    panic!("{}: request {i} failed: {e}", strategy.label())
+                });
+                assert_eq!(resp.id, i as u64);
+                assert!(
+                    max_abs_diff(&resp.c, want) < gemm_tolerance(96),
+                    "{}: request {i} numerics",
+                    strategy.label()
+                );
+                assert!(
+                    resp.backend_label.contains("native/"),
+                    "board engines are native: {}",
+                    resp.backend_label
+                );
+            }
+            let m = d.metrics();
+            assert_eq!(m.completed(), 6, "{}", strategy.label());
+            assert_eq!(m.batches, 2, "2 same-shape groups, {}", strategy.label());
+            assert_eq!(m.boards.len(), 2);
+            if strategy == FleetStrategy::Sas {
+                // Weighted shards favour the faster Exynos board (the
+                // dynamic split depends on host thread timing, so only
+                // the deterministic static split is pinned here).
+                assert!(
+                    m.boards[0].1.completed > m.boards[1].1.completed,
+                    "{}: {:?}",
+                    strategy.label(),
+                    m.boards
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_dispatcher_exposes_fleet() {
+        let d = fleet_dispatcher();
+        assert_eq!(d.fleet().num_boards(), 2);
+        assert_eq!(d.metrics().completed(), 0);
     }
 }

@@ -1,0 +1,154 @@
+//! Fleet-throughput-scaling report (no paper counterpart — the §6
+//! "scale-out" roadmap item): the intra-SoC evaluation story retold at
+//! the board level.
+//!
+//! Three tables:
+//! 1. board-level strategy comparison on a heterogeneous two-board
+//!    fleet — fleet-SSS (equal shards) vs fleet-SAS (throughput-
+//!    weighted) vs fleet-DAS (dynamic queue), with per-board shares;
+//! 2. homogeneous scaling — sustained req/s for 1–4 Exynos boards
+//!    under fleet-DAS;
+//! 3. capacity planning — boards needed to sustain rising request-rate
+//!    targets.
+//!
+//! Shape assertions mirror the paper's Figs. 7/9/12 one level up: the
+//! oblivious equal split loses to both throughput-aware strategies on a
+//! skewed fleet, and scaling is near-linear (boards share nothing but
+//! the dispatcher).
+
+use crate::blis::gemm::GemmShape;
+use crate::figures::{Assertion, FigureResult};
+use crate::fleet::sim::{boards_to_sustain, simulate_fleet};
+use crate::fleet::{Board, Fleet, FleetStrategy};
+use crate::util::table::Table;
+
+pub fn run(quick: bool) -> FigureResult {
+    let r = if quick { 1024 } else { 2048 };
+    let batch = if quick { 32 } else { 64 };
+    let shape = GemmShape::square(r);
+
+    // --- Table 1: strategies on a skewed heterogeneous fleet. ---
+    let fleet = Fleet::parse("exynos5422,dynamiq_3c").expect("presets");
+    let mut cmp = Table::new(
+        &format!(
+            "Fleet strategies — exynos5422 + dynamiq_3c, r = {r}, batch = {batch}"
+        ),
+        &["strategy", "makespan [s]", "GFLOPS", "req/s", "energy [J]", "GFLOPS/W", "items/board"],
+    );
+    let mut by_strategy = Vec::new();
+    for strategy in [FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das] {
+        let st = simulate_fleet(&fleet, strategy, shape, batch);
+        cmp.push_row(vec![
+            strategy.label().to_string(),
+            format!("{:.3}", st.makespan_s),
+            format!("{:.2}", st.gflops),
+            format!("{:.2}", st.throughput_rps),
+            format!("{:.1}", st.energy_j),
+            format!("{:.3}", st.gflops_per_watt),
+            st.boards
+                .iter()
+                .map(|b| b.items.to_string())
+                .collect::<Vec<_>>()
+                .join("+"),
+        ]);
+        by_strategy.push(st);
+    }
+    let (sss, sas, das) = (&by_strategy[0], &by_strategy[1], &by_strategy[2]);
+
+    // --- Table 2: homogeneous fleet-DAS scaling. ---
+    let exynos = Board::from_preset("exynos5422").expect("preset");
+    let mut scaling = Table::new(
+        &format!("Fleet-DAS scaling — n × exynos5422, r = {r}, batch = {batch}"),
+        &["boards", "req/s", "speedup", "GFLOPS", "GFLOPS/W"],
+    );
+    let mut rps = Vec::new();
+    for n in 1..=4 {
+        let st = simulate_fleet(&Fleet::homogeneous(n, &exynos), FleetStrategy::Das, shape, batch);
+        rps.push(st.throughput_rps);
+        scaling.push_row(vec![
+            n.to_string(),
+            format!("{:.2}", st.throughput_rps),
+            format!("{:.2}x", st.throughput_rps / rps[0]),
+            format!("{:.2}", st.gflops),
+            format!("{:.3}", st.gflops_per_watt),
+        ]);
+    }
+
+    // --- Table 3: capacity planning against rising rate targets. ---
+    let mut capacity = Table::new(
+        "Capacity planning — Exynos boards to sustain a target req/s",
+        &["target [req/s]", "boards"],
+    );
+    let mut plan = Vec::new();
+    for mult in [0.5, 1.5, 2.5, 3.5] {
+        let target = mult * rps[0];
+        let need = boards_to_sustain(&exynos, shape, batch, target, 8);
+        capacity.push_row(vec![
+            format!("{target:.2}"),
+            need.map_or("> 8".to_string(), |n| n.to_string()),
+        ]);
+        plan.push(need);
+    }
+
+    let assertions = vec![
+        Assertion::check(
+            "fleet-DAS beats equal-shard fleet-SSS on a heterogeneous fleet",
+            das.makespan_s < 0.90 * sss.makespan_s,
+            format!("DAS {:.3}s vs SSS {:.3}s", das.makespan_s, sss.makespan_s),
+        ),
+        Assertion::check(
+            "throughput-weighted fleet-SAS also beats fleet-SSS",
+            sas.makespan_s < 0.95 * sss.makespan_s,
+            format!("SAS {:.3}s vs SSS {:.3}s", sas.makespan_s, sss.makespan_s),
+        ),
+        Assertion::check(
+            "dynamic tracks the weighted-static optimum",
+            (sas.makespan_s / das.makespan_s - 1.0).abs() < 0.20,
+            format!("SAS {:.3}s vs DAS {:.3}s", sas.makespan_s, das.makespan_s),
+        ),
+        Assertion::check(
+            "balanced shards also win on energy (idle boards burn rails)",
+            das.gflops_per_watt > sss.gflops_per_watt,
+            format!("DAS {:.3} vs SSS {:.3} GFLOPS/W", das.gflops_per_watt, sss.gflops_per_watt),
+        ),
+        Assertion::check(
+            "every strategy completes the whole batch",
+            by_strategy.iter().all(|st| st.items_completed() == batch),
+            format!(
+                "completed {:?}",
+                by_strategy.iter().map(|st| st.items_completed()).collect::<Vec<_>>()
+            ),
+        ),
+        Assertion::check(
+            "homogeneous scaling is monotone and near-linear",
+            rps.windows(2).all(|w| w[1] > w[0]) && rps[3] > 3.0 * rps[0],
+            format!("req/s by boards: {rps:?}"),
+        ),
+        Assertion::check(
+            "capacity plan grows with the rate target",
+            plan[0] == Some(1)
+                && plan
+                    .windows(2)
+                    .all(|w| w[1].unwrap_or(9) >= w[0].unwrap_or(9)),
+            format!("boards needed: {plan:?}"),
+        ),
+    ];
+
+    FigureResult {
+        id: "fleet",
+        title: "Fleet scale-out: board-level SSS/SAS/DAS and throughput scaling",
+        tables: vec![cmp, scaling, capacity],
+        assertions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fleet_report_passes_quick() {
+        let fig = super::run(true);
+        assert!(fig.passed(), "{}", fig.to_markdown());
+        assert_eq!(fig.tables.len(), 3);
+        assert_eq!(fig.id, "fleet");
+    }
+}

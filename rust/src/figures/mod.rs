@@ -12,9 +12,14 @@
 //! the crossover sits, by roughly what factor). `cargo test` runs all of
 //! them in quick mode; `amp-gemm figures` and `cargo bench` regenerate
 //! the full versions. DESIGN.md §6 indexes every experiment.
+//!
+//! Beyond the paper: [`ablation`] covers the §6 future-work knobs and
+//! [`fleet`] is the multi-board throughput-scaling report
+//! (`amp-gemm fleet --report`).
 
 pub mod ablation;
 pub mod fig10;
+pub mod fleet;
 pub mod fig11;
 pub mod fig12;
 pub mod fig4;

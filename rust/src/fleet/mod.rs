@@ -1,0 +1,409 @@
+//! Multi-board scale-out: sharding GEMM batches across a rack of
+//! heterogeneous SoCs.
+//!
+//! The paper schedules micro-kernels across asymmetric clusters *inside*
+//! one SoC. A rack of heterogeneous boards is the same problem one level
+//! up — `cluster : SoC :: board : fleet` — so this layer reuses the
+//! intra-SoC scheduling machinery at the inter-device granularity
+//! (DESIGN.md §3, "Fleet layer"; the direction of Catalán et al.'s
+//! follow-on multi-device work, arXiv:1511.02171):
+//!
+//! * a [`Board`] wraps one [`SocSpec`] (any preset, so fleets are
+//!   heterogeneous by construction), its calibrated
+//!   [`crate::model::PerfModel`], the intra-board [`ScheduleSpec`] it
+//!   runs, and the [`crate::coordinator::Backend`] engine that executes
+//!   requests on it;
+//! * a [`Fleet`] is a `Vec<Board>`; its [`Fleet::weights`] vector is
+//!   derived from each board's calibrated aggregate throughput via the
+//!   [`Weighted`] trait — exactly how `PerfModel::ca_sas_weights`
+//!   derives the per-cluster vector one level down;
+//! * [`FleetStrategy`] lifts the paper's vocabulary to the board level:
+//!   **fleet-SSS** (equal shards — the architecture-oblivious baseline),
+//!   **fleet-SAS** (throughput-weighted static shards) and **fleet-DAS**
+//!   (a dynamic queue where each board grabs chunks of its own native
+//!   batch grain, mirroring how each cluster grabs its own `mc` in
+//!   CA-DAS);
+//! * [`sim`] executes a fleet strategy in deterministic virtual time for
+//!   capacity-planning sweeps; the real request path is
+//!   [`crate::coordinator::FleetDispatcher`].
+
+pub mod sim;
+
+use crate::model::PerfModel;
+use crate::sched::{ScheduleSpec, Weighted, Weights, MAX_WAYS};
+use crate::soc::SocSpec;
+
+/// Index of a board within a [`Fleet`] (the board-level analogue of
+/// [`crate::soc::ClusterId`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BoardId(pub usize);
+
+impl std::fmt::Display for BoardId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "b{}", self.0)
+    }
+}
+
+/// Per-chunk dispatch cost at the board level, seconds of virtual time:
+/// the inter-board analogue of `ClusterTuning::grab_s` — an RPC to a
+/// board plus a queue pop instead of an in-memory critical section.
+/// Charged once per shard under the static strategies and once per grab
+/// under fleet-DAS, so the dynamic quantum trades balance against
+/// dispatch overhead exactly like `mc` does one level down (§5.4).
+pub const DISPATCH_S: f64 = 2.0e-3;
+
+/// One board of the fleet: a SoC descriptor plus the engine that runs
+/// GEMMs on it.
+#[derive(Debug, Clone)]
+pub struct Board {
+    /// Short name used in tables and labels (usually the preset token).
+    pub name: String,
+    /// The intra-board schedule every request runs under (default
+    /// CA-DAS — the paper's best).
+    pub sched: ScheduleSpec,
+    /// Execution engine for the real request path
+    /// ([`crate::coordinator::FleetDispatcher`]); the virtual-time
+    /// [`sim`] ignores it.
+    pub backend: crate::coordinator::Backend,
+    model: PerfModel,
+}
+
+impl Board {
+    /// A board executed in virtual time (capacity planning).
+    pub fn sim(name: &str, soc: SocSpec) -> Board {
+        let sched = ScheduleSpec::ca_das();
+        Board {
+            name: name.to_string(),
+            sched,
+            backend: crate::coordinator::Backend::Sim(sched),
+            model: PerfModel::new(soc),
+        }
+    }
+
+    /// A board executed by the real-thread native engine.
+    pub fn native(name: &str, soc: SocSpec) -> Board {
+        let sched = ScheduleSpec::ca_das();
+        Board {
+            name: name.to_string(),
+            sched,
+            backend: crate::coordinator::Backend::Native(sched),
+            model: PerfModel::new(soc),
+        }
+    }
+
+    /// Build a sim board from a preset token (the `--boards` CLI
+    /// vocabulary): `exynos5422`, `juno_r0`, `dynamiq_3c`, `pe_hybrid`
+    /// or `symmetric<N>`.
+    pub fn from_preset(token: &str) -> Result<Board, String> {
+        let soc = match token {
+            "exynos5422" | "exynos" => SocSpec::exynos5422(),
+            "juno_r0" | "juno" => SocSpec::juno_r0(),
+            "dynamiq_3c" | "dynamiq" => SocSpec::dynamiq_3c(),
+            "pe_hybrid" => SocSpec::pe_hybrid(),
+            other => match other.strip_prefix("symmetric") {
+                Some(n) => {
+                    let n: usize = n
+                        .parse()
+                        .map_err(|_| format!("bad symmetric core count in '{other}'"))?;
+                    if n == 0 {
+                        return Err("symmetric board needs at least one core".into());
+                    }
+                    SocSpec::symmetric(n)
+                }
+                None => {
+                    return Err(format!(
+                        "unknown board preset '{other}' \
+                         (exynos5422|juno_r0|dynamiq_3c|pe_hybrid|symmetric<N>)"
+                    ))
+                }
+            },
+        };
+        Ok(Board::sim(token, soc))
+    }
+
+    pub fn soc(&self) -> &SocSpec {
+        &self.model.soc
+    }
+
+    pub fn model(&self) -> &PerfModel {
+        &self.model
+    }
+
+    /// Calibrated aggregate steady-state throughput of the board,
+    /// GFLOPS: every cluster on its own tuned parameters (the sum of the
+    /// per-cluster rates behind `PerfModel::ca_sas_weights`). This is
+    /// the board's weight in the fleet-SAS split.
+    pub fn throughput_gflops(&self) -> f64 {
+        self.model.ca_sas_weights().as_slice().iter().sum()
+    }
+}
+
+impl Weighted for Board {
+    fn weight(&self) -> f64 {
+        self.throughput_gflops()
+    }
+}
+
+/// Board-level work-distribution strategy — the paper's intra-SoC
+/// vocabulary lifted one level (§4/§5.2/§5.4 one level up).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FleetStrategy {
+    /// Equal shards per board — the architecture-oblivious baseline
+    /// (the board-level SSS of §4).
+    Sss,
+    /// Static shards proportional to each board's calibrated aggregate
+    /// throughput (the board-level SAS of §5.2, with the weight vector
+    /// computed from the model instead of guessed).
+    Sas,
+    /// Dynamic queue: each board grabs chunks of its own native batch
+    /// grain (the board-level CA-DAS of §5.4).
+    Das,
+}
+
+impl FleetStrategy {
+    pub fn label(self) -> &'static str {
+        match self {
+            FleetStrategy::Sss => "fleet-SSS",
+            FleetStrategy::Sas => "fleet-SAS",
+            FleetStrategy::Das => "fleet-DAS",
+        }
+    }
+
+    pub fn is_dynamic(self) -> bool {
+        matches!(self, FleetStrategy::Das)
+    }
+
+    pub fn parse(s: &str) -> Result<FleetStrategy, String> {
+        match s {
+            "sss" => Ok(FleetStrategy::Sss),
+            "sas" => Ok(FleetStrategy::Sas),
+            "das" => Ok(FleetStrategy::Das),
+            other => Err(format!("unknown fleet strategy '{other}' (sss|sas|das)")),
+        }
+    }
+}
+
+/// A rack of boards sharing one batch queue.
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    pub boards: Vec<Board>,
+}
+
+impl Fleet {
+    pub fn new(boards: Vec<Board>) -> Fleet {
+        assert!(
+            (1..=MAX_WAYS).contains(&boards.len()),
+            "a fleet needs 1..={MAX_WAYS} boards, got {}",
+            boards.len()
+        );
+        Fleet { boards }
+    }
+
+    /// Parse a comma-separated preset list (`exynos5422,juno_r0,…`)
+    /// into a fleet of sim boards. Repeated tokens are distinct boards.
+    /// (`split(',')` always yields at least one token, so an empty list
+    /// surfaces as an unknown-preset error for `""`.)
+    pub fn parse(list: &str) -> Result<Fleet, String> {
+        let boards: Vec<Board> = list
+            .split(',')
+            .map(|t| Board::from_preset(t.trim()))
+            .collect::<Result<_, _>>()?;
+        if boards.len() > MAX_WAYS {
+            return Err(format!(
+                "a fleet holds at most {MAX_WAYS} boards, got {}",
+                boards.len()
+            ));
+        }
+        Ok(Fleet::new(boards))
+    }
+
+    /// A homogeneous fleet of `n` identical boards (capacity planning:
+    /// "how many Exynos boards to sustain X req/s?").
+    pub fn homogeneous(n: usize, board: &Board) -> Fleet {
+        Fleet::new(
+            (0..n)
+                .map(|i| {
+                    let mut b = board.clone();
+                    b.name = format!("{}#{i}", board.name);
+                    b
+                })
+                .collect(),
+        )
+    }
+
+    pub fn num_boards(&self) -> usize {
+        self.boards.len()
+    }
+
+    /// Iterate every board id, in order.
+    pub fn board_ids(&self) -> impl Iterator<Item = BoardId> {
+        (0..self.boards.len()).map(BoardId)
+    }
+
+    /// Fleet-SAS weight vector: one entry per board, proportional to the
+    /// board's calibrated aggregate throughput — the same derivation as
+    /// the per-cluster `ca_sas_weights` one level down.
+    pub fn weights(&self) -> Weights {
+        Weights::from_weighted(&self.boards)
+    }
+
+    /// Per-board dynamic-queue grains: each board grabs chunks sized to
+    /// its own throughput relative to the slowest board (the board-level
+    /// analogue of "each cluster grabs its own `mc`", §5.4), so one
+    /// grab's worth of work takes every board roughly the same time.
+    pub fn grains(&self) -> Vec<usize> {
+        let rates: Vec<f64> = self.boards.iter().map(Board::throughput_gflops).collect();
+        let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+        rates
+            .iter()
+            .map(|&r| ((r / min).round() as usize).max(1))
+            .collect()
+    }
+
+    /// Static shard sizes for a batch of `batch` same-shape items under
+    /// an SSS/SAS strategy (items are indivisible, stride 1). The shards
+    /// always sum to `batch`; a zero shard means that board idles.
+    /// Panics for the dynamic strategy — its shards emerge from the
+    /// queue drain.
+    pub fn static_shards(&self, batch: usize, strategy: FleetStrategy) -> Vec<usize> {
+        let weights = match strategy {
+            FleetStrategy::Sss => vec![1.0; self.num_boards()],
+            FleetStrategy::Sas => self.weights().as_slice().to_vec(),
+            FleetStrategy::Das => panic!("fleet-DAS shards come from the dynamic queue"),
+        };
+        crate::partition::split_weighted(batch, &weights, 1)
+            .into_iter()
+            .map(|c| c.len)
+            .collect()
+    }
+
+    /// Sum of every board's calibrated aggregate throughput — the
+    /// fleet-level "ideal" reference line.
+    pub fn aggregate_throughput_gflops(&self) -> f64 {
+        self.boards.iter().map(Board::throughput_gflops).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn board_presets_parse() {
+        for token in ["exynos5422", "juno_r0", "dynamiq_3c", "pe_hybrid", "symmetric4"] {
+            let b = Board::from_preset(token).unwrap();
+            assert!(b.throughput_gflops() > 0.0, "{token}");
+        }
+        assert!(Board::from_preset("warp9").is_err());
+        assert!(Board::from_preset("symmetricX").is_err());
+        assert!(Board::from_preset("symmetric0").is_err());
+    }
+
+    #[test]
+    fn fleet_parses_heterogeneous_list() {
+        let f = Fleet::parse("exynos5422, juno_r0").unwrap();
+        assert_eq!(f.num_boards(), 2);
+        assert_eq!(f.boards[0].name, "exynos5422");
+        assert!(Fleet::parse("exynos5422,warp").is_err());
+        // Oversized board lists error cleanly instead of panicking.
+        let nine = vec!["exynos5422"; 9].join(",");
+        let err = Fleet::parse(&nine).unwrap_err();
+        assert!(err.contains("at most"), "{err}");
+    }
+
+    #[test]
+    fn weights_track_board_throughput() {
+        let f = Fleet::parse("exynos5422,exynos5422").unwrap();
+        let w = f.weights();
+        assert_eq!(w.len(), 2);
+        let ws = w.as_slice();
+        assert!((ws[0] / ws[1] - 1.0).abs() < 1e-12, "identical boards, equal weights");
+        // The Exynos board sustains ≈ the Fig. 7 ideal aggregate.
+        assert!((11.5..12.4).contains(&ws[0]), "Exynos aggregate {}", ws[0]);
+    }
+
+    #[test]
+    fn grains_scale_with_throughput() {
+        let ex = Board::from_preset("exynos5422").unwrap();
+        let slow = Board::from_preset("symmetric1").unwrap();
+        let f = Fleet::new(vec![ex, slow]);
+        let g = f.grains();
+        assert_eq!(g[1], 1, "slowest board grabs single items");
+        assert!(g[0] >= 3, "fast board grabs proportionally bigger chunks: {g:?}");
+    }
+
+    #[test]
+    fn homogeneous_builder_names_boards() {
+        let f = Fleet::homogeneous(3, &Board::from_preset("exynos5422").unwrap());
+        assert_eq!(f.num_boards(), 3);
+        assert_eq!(f.boards[2].name, "exynos5422#2");
+    }
+
+    #[test]
+    #[should_panic(expected = "fleet needs")]
+    fn empty_fleet_rejected() {
+        Fleet::new(Vec::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "dynamic queue")]
+    fn das_has_no_static_shards() {
+        Fleet::parse("exynos5422")
+            .unwrap()
+            .static_shards(8, FleetStrategy::Das);
+    }
+
+    /// ISSUE satellite: fleet-SAS board shards must sum to the batch
+    /// size for 1–4 boards of mixed presets (the board-level version of
+    /// the 1–6-cluster partition property tests).
+    #[test]
+    fn prop_fleet_static_shards_sum_to_batch() {
+        let presets = ["exynos5422", "juno_r0", "dynamiq_3c", "pe_hybrid", "symmetric2"];
+        prop::check_default(
+            |r| {
+                let n = r.gen_range(1, 5); // 1..=4 boards
+                let toks: Vec<&str> =
+                    (0..n).map(|_| *r.choose(&presets)).collect();
+                (toks.join(","), r.gen_range(0, 300))
+            },
+            |(list, batch)| {
+                let fleet = Fleet::parse(list).map_err(|e| e.to_string())?;
+                for strategy in [FleetStrategy::Sss, FleetStrategy::Sas] {
+                    let shards = fleet.static_shards(*batch, strategy);
+                    if shards.len() != fleet.num_boards() {
+                        return Err(format!(
+                            "{} shards for {} boards",
+                            shards.len(),
+                            fleet.num_boards()
+                        ));
+                    }
+                    let total: usize = shards.iter().sum();
+                    if total != *batch {
+                        return Err(format!(
+                            "{} shards {shards:?} sum to {total}, batch {batch}",
+                            strategy.label()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn strategy_labels_and_parse() {
+        assert_eq!(FleetStrategy::parse("das").unwrap(), FleetStrategy::Das);
+        assert!(FleetStrategy::parse("warp").is_err());
+        assert_eq!(FleetStrategy::Sas.label(), "fleet-SAS");
+        assert!(FleetStrategy::Das.is_dynamic());
+        assert!(!FleetStrategy::Sss.is_dynamic());
+    }
+
+    #[test]
+    fn board_id_displays() {
+        assert_eq!(format!("{}", BoardId(2)), "b2");
+        let f = Fleet::parse("exynos5422,juno_r0").unwrap();
+        assert_eq!(f.board_ids().count(), 2);
+    }
+}

@@ -1,0 +1,388 @@
+//! Deterministic virtual-time simulation of a fleet draining one batch
+//! of same-shape GEMMs.
+//!
+//! The unit of work is one GEMM item; each board's per-item virtual time
+//! and energy come from one intra-SoC DES run
+//! ([`crate::sim::simulate`]) under the board's own schedule, so the
+//! fleet layer composes the calibrated single-board model instead of
+//! inventing a second one. Boards process their items serially (the
+//! coordinator pins one outstanding batch per board); the fleet makespan
+//! is the slowest board's finish time, and fleet energy charges every
+//! board's idle tail at its baseline power until the makespan — the
+//! §3.4 accounting ("the idle cluster still burns its rail") one level
+//! up.
+//!
+//! Capacity planning ("how many Exynos boards sustain X req/s?") is
+//! [`boards_to_sustain`]: grow a homogeneous fleet until the simulated
+//! sustained rate reaches the target.
+
+use crate::blis::gemm::GemmShape;
+use crate::energy::PowerModel;
+use crate::fleet::{Fleet, FleetStrategy, DISPATCH_S};
+use crate::sim::simulate;
+
+/// One board's share of a simulated fleet run.
+#[derive(Debug, Clone)]
+pub struct BoardStats {
+    pub name: String,
+    /// Items this board executed.
+    pub items: usize,
+    /// Dispatches it received (1 per static shard; 1 per dynamic grab).
+    pub grabs: u64,
+    /// Virtual time spent computing (items × per-item time).
+    pub busy_s: f64,
+    /// Virtual instant the board went idle.
+    pub finish_s: f64,
+    /// Sustained rate over the board's own active window.
+    pub gflops: f64,
+    /// Board energy over the whole fleet run, idle tail included.
+    pub energy_j: f64,
+}
+
+/// Aggregated result of one simulated fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    pub label: String,
+    pub shape: GemmShape,
+    pub batch: usize,
+    /// Virtual makespan: the slowest board's finish time.
+    pub makespan_s: f64,
+    /// Useful flops of the whole batch over the makespan.
+    pub gflops: f64,
+    /// Sustained batch-item throughput, requests per second.
+    pub throughput_rps: f64,
+    /// Whole-fleet energy (every board charged to the makespan).
+    pub energy_j: f64,
+    pub gflops_per_watt: f64,
+    /// Per-board breakdown, in fleet order.
+    pub boards: Vec<BoardStats>,
+}
+
+impl FleetStats {
+    /// Items executed across all boards (= `batch`, asserted in tests).
+    pub fn items_completed(&self) -> usize {
+        self.boards.iter().map(|b| b.items).sum()
+    }
+}
+
+/// Simulate one batch of `batch` same-shape GEMMs over the fleet under
+/// a board-level strategy. Deterministic: pure virtual time, no host
+/// clock, no RNG.
+pub fn simulate_fleet(
+    fleet: &Fleet,
+    strategy: FleetStrategy,
+    shape: GemmShape,
+    batch: usize,
+) -> FleetStats {
+    assert!(batch > 0, "empty batch");
+    let n = fleet.num_boards();
+
+    // One intra-SoC DES run per board gives the per-item time/energy;
+    // every item of the batch has the same shape, so one run suffices —
+    // and identical boards (homogeneous capacity sweeps are fleets of
+    // clones) share a single run instead of re-simulating it.
+    let mut per_item: Vec<crate::sim::RunStats> = Vec::with_capacity(n);
+    for (i, b) in fleet.boards.iter().enumerate() {
+        let cached = fleet.boards[..i]
+            .iter()
+            .position(|p| p.soc() == b.soc() && p.sched == b.sched);
+        let st = match cached {
+            Some(j) => per_item[j].clone(),
+            None => simulate(b.model(), &b.sched, shape),
+        };
+        per_item.push(st);
+    }
+    let baseline_w: Vec<f64> = fleet
+        .boards
+        .iter()
+        .map(|b| PowerModel::new(b.soc().clone()).baseline_w())
+        .collect();
+
+    let mut items = vec![0usize; n];
+    let mut grabs = vec![0u64; n];
+    let mut clock = vec![0.0f64; n];
+
+    match strategy {
+        FleetStrategy::Sss | FleetStrategy::Sas => {
+            for (b, &share) in fleet.static_shards(batch, strategy).iter().enumerate() {
+                if share > 0 {
+                    items[b] = share;
+                    grabs[b] = 1; // the whole shard ships in one dispatch
+                    clock[b] = DISPATCH_S + share as f64 * per_item[b].time_s;
+                }
+            }
+        }
+        FleetStrategy::Das => {
+            // Event loop mirroring the intra-SoC dynamic m-loop (§5.4):
+            // the board with the earliest clock grabs the next chunk of
+            // its own grain (ties go to the lowest board id).
+            let grains = fleet.grains();
+            let mut next = 0usize;
+            while next < batch {
+                let mut idx = 0;
+                for b in 1..n {
+                    if clock[b] < clock[idx] {
+                        idx = b;
+                    }
+                }
+                let take = grains[idx].min(batch - next);
+                next += take;
+                items[idx] += take;
+                grabs[idx] += 1;
+                clock[idx] += DISPATCH_S + take as f64 * per_item[idx].time_s;
+            }
+        }
+    }
+
+    let makespan = clock.iter().cloned().fold(0.0, f64::max);
+    let flops_item = shape.flops();
+    let boards: Vec<BoardStats> = (0..n)
+        .map(|b| {
+            let busy = items[b] as f64 * per_item[b].time_s;
+            // Active window at run power, everything else (dispatch
+            // waits + idle tail to the fleet makespan) at baseline.
+            let energy =
+                items[b] as f64 * per_item[b].energy.energy_j + baseline_w[b] * (makespan - busy);
+            BoardStats {
+                name: fleet.boards[b].name.clone(),
+                items: items[b],
+                grabs: grabs[b],
+                busy_s: busy,
+                finish_s: clock[b],
+                gflops: if clock[b] > 0.0 {
+                    items[b] as f64 * flops_item / clock[b] / 1e9
+                } else {
+                    0.0
+                },
+                energy_j: energy,
+            }
+        })
+        .collect();
+
+    let total_flops = batch as f64 * flops_item;
+    let energy_j: f64 = boards.iter().map(|b| b.energy_j).sum();
+    FleetStats {
+        label: format!(
+            "{} [{}]",
+            strategy.label(),
+            fleet
+                .boards
+                .iter()
+                .map(|b| b.name.as_str())
+                .collect::<Vec<_>>()
+                .join("+")
+        ),
+        shape,
+        batch,
+        makespan_s: makespan,
+        gflops: total_flops / makespan / 1e9,
+        throughput_rps: batch as f64 / makespan,
+        energy_j,
+        gflops_per_watt: total_flops / energy_j / 1e9,
+        boards,
+    }
+}
+
+/// Capacity planning: the smallest homogeneous fleet of `board` clones
+/// sustaining `target_rps` requests per second on `shape` batches of
+/// `batch` items, up to `max_boards` (clamped to the fleet capacity,
+/// [`crate::sched::MAX_WAYS`]). `None` if even the largest fleet can't.
+pub fn boards_to_sustain(
+    board: &crate::fleet::Board,
+    shape: GemmShape,
+    batch: usize,
+    target_rps: f64,
+    max_boards: usize,
+) -> Option<usize> {
+    assert!(target_rps > 0.0 && max_boards >= 1);
+    for n in 1..=max_boards.min(crate::sched::MAX_WAYS) {
+        let fleet = Fleet::homogeneous(n, board);
+        let st = simulate_fleet(&fleet, FleetStrategy::Das, shape, batch);
+        if st.throughput_rps >= target_rps {
+            return Some(n);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::Board;
+    use crate::util::prop;
+
+    fn hetero() -> Fleet {
+        Fleet::parse("exynos5422,juno_r0").unwrap()
+    }
+
+    /// A strongly asymmetric two-board pair (≈ 1.7× aggregate
+    /// throughput gap) for strict win assertions; exynos vs juno is
+    /// heterogeneous but nearly throughput-matched.
+    fn skewed() -> Fleet {
+        Fleet::parse("exynos5422,dynamiq_3c").unwrap()
+    }
+
+    /// The ISSUE acceptance criterion: on a heterogeneous two-board
+    /// fleet, dynamic fleet-DAS beats the equal-shard fleet-SSS in
+    /// virtual time — the paper's intra-SoC result one level up.
+    #[test]
+    fn das_beats_sss_on_heterogeneous_fleet() {
+        let shape = GemmShape::square(1024);
+        let sss = simulate_fleet(&skewed(), FleetStrategy::Sss, shape, 32);
+        let das = simulate_fleet(&skewed(), FleetStrategy::Das, shape, 32);
+        assert!(
+            das.makespan_s < 0.90 * sss.makespan_s,
+            "fleet-DAS {:.3}s must beat fleet-SSS {:.3}s",
+            das.makespan_s,
+            sss.makespan_s
+        );
+        // The oblivious equal split leaves the faster board idling at
+        // baseline; the balanced schedule also wins on energy.
+        assert!(das.gflops_per_watt > sss.gflops_per_watt);
+        // And on the nearly-matched exynos+juno pair the dynamic queue
+        // must never lose materially to the equal split.
+        let sss2 = simulate_fleet(&hetero(), FleetStrategy::Sss, shape, 32);
+        let das2 = simulate_fleet(&hetero(), FleetStrategy::Das, shape, 32);
+        assert!(
+            das2.makespan_s < 1.02 * sss2.makespan_s,
+            "fleet-DAS {:.3}s vs fleet-SSS {:.3}s on a matched pair",
+            das2.makespan_s,
+            sss2.makespan_s
+        );
+    }
+
+    #[test]
+    fn sas_tracks_das_within_quantization() {
+        let shape = GemmShape::square(1024);
+        let sas = simulate_fleet(&skewed(), FleetStrategy::Sas, shape, 64);
+        let das = simulate_fleet(&skewed(), FleetStrategy::Das, shape, 64);
+        let rel = (sas.makespan_s / das.makespan_s - 1.0).abs();
+        assert!(rel < 0.20, "fleet-SAS {:.3}s vs fleet-DAS {:.3}s", sas.makespan_s, das.makespan_s);
+    }
+
+    #[test]
+    fn single_board_fleet_degenerates() {
+        let f = Fleet::parse("exynos5422").unwrap();
+        let shape = GemmShape::square(512);
+        let st = simulate_fleet(&f, FleetStrategy::Das, shape, 8);
+        assert_eq!(st.items_completed(), 8);
+        assert_eq!(st.boards.len(), 1);
+        // Makespan = dispatches + 8 serial items.
+        let item = simulate(f.boards[0].model(), &f.boards[0].sched, shape).time_s;
+        assert!(st.makespan_s >= 8.0 * item);
+        assert!(st.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let shape = GemmShape::square(768);
+        let a = simulate_fleet(&hetero(), FleetStrategy::Das, shape, 24);
+        let b = simulate_fleet(&hetero(), FleetStrategy::Das, shape, 24);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(
+            a.boards.iter().map(|x| x.items).collect::<Vec<_>>(),
+            b.boards.iter().map(|x| x.items).collect::<Vec<_>>()
+        );
+    }
+
+    /// ISSUE satellite: fleet-DAS completes every item for 1–4 boards of
+    /// mixed presets (the board-level queue-drain property test).
+    #[test]
+    fn prop_das_completes_all_items_on_mixed_fleets() {
+        let presets = ["exynos5422", "juno_r0", "dynamiq_3c", "symmetric2"];
+        prop::check_default(
+            |r| {
+                let n = r.gen_range(1, 5); // 1..=4 boards
+                let toks: Vec<&str> = (0..n).map(|_| *r.choose(&presets)).collect();
+                (toks.join(","), r.gen_range(1, 50))
+            },
+            |(list, batch)| {
+                let fleet = Fleet::parse(list).map_err(|e| e.to_string())?;
+                let st =
+                    simulate_fleet(&fleet, FleetStrategy::Das, GemmShape::square(256), *batch);
+                if st.items_completed() != *batch {
+                    return Err(format!(
+                        "{} of {batch} items completed: {:?}",
+                        st.items_completed(),
+                        st.boards.iter().map(|b| b.items).collect::<Vec<_>>()
+                    ));
+                }
+                // Per-board accounting must be consistent.
+                for b in &st.boards {
+                    if b.finish_s > st.makespan_s + 1e-12 {
+                        return Err(format!("board {} finishes after the makespan", b.name));
+                    }
+                    if b.items > 0 && b.grabs == 0 {
+                        return Err(format!("board {} has items but no grabs", b.name));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn static_strategies_complete_and_weight_shards() {
+        let shape = GemmShape::square(512);
+        let sss = simulate_fleet(&hetero(), FleetStrategy::Sss, shape, 40);
+        assert_eq!(sss.items_completed(), 40);
+        assert_eq!(sss.boards[0].items, sss.boards[1].items, "SSS splits equally");
+        let sas = simulate_fleet(&hetero(), FleetStrategy::Sas, shape, 40);
+        assert_eq!(sas.items_completed(), 40);
+        // The Exynos board out-rates the Juno r0 → bigger SAS shard.
+        let w = hetero().weights();
+        if w.as_slice()[0] > w.as_slice()[1] {
+            assert!(sas.boards[0].items > sas.boards[1].items, "{:?}", sas.boards);
+        } else {
+            assert!(sas.boards[1].items > sas.boards[0].items, "{:?}", sas.boards);
+        }
+    }
+
+    #[test]
+    fn energy_accounts_idle_tail() {
+        // A single-item batch: one board executes, the other idles the
+        // whole run — its rails must still be charged at baseline for
+        // the full makespan (the §3.4 idle-cluster accounting, one
+        // level up).
+        let shape = GemmShape::square(512);
+        let st = simulate_fleet(&hetero(), FleetStrategy::Sss, shape, 1);
+        assert_eq!(st.items_completed(), 1);
+        let idle = st.boards.iter().find(|b| b.items == 0).expect("one idle board");
+        assert!(idle.energy_j > 0.0, "idle board still burns its rails");
+        let sum: f64 = st.boards.iter().map(|b| b.energy_j).sum();
+        assert!((sum - st.energy_j).abs() < 1e-9);
+        assert!(st.gflops_per_watt > 0.0);
+    }
+
+    #[test]
+    fn capacity_planning_grows_with_target() {
+        let ex = Board::from_preset("exynos5422").unwrap();
+        let shape = GemmShape::square(1024);
+        let one = simulate_fleet(&Fleet::homogeneous(1, &ex), FleetStrategy::Das, shape, 16);
+        let rps1 = one.throughput_rps;
+        assert_eq!(boards_to_sustain(&ex, shape, 16, 0.5 * rps1, 8), Some(1));
+        let n = boards_to_sustain(&ex, shape, 16, 2.5 * rps1, 8).unwrap();
+        assert!(n >= 3, "2.5× one board's rate needs ≥ 3 boards, got {n}");
+        assert_eq!(boards_to_sustain(&ex, shape, 16, 1e9, 2), None);
+    }
+
+    #[test]
+    fn fleet_scaling_is_near_linear() {
+        let ex = Board::from_preset("exynos5422").unwrap();
+        let shape = GemmShape::square(1024);
+        let rps: Vec<f64> = (1..=4)
+            .map(|n| {
+                simulate_fleet(&Fleet::homogeneous(n, &ex), FleetStrategy::Das, shape, 32)
+                    .throughput_rps
+            })
+            .collect();
+        for w in rps.windows(2) {
+            assert!(w[1] > w[0], "throughput must grow with boards: {rps:?}");
+        }
+        assert!(
+            rps[3] > 3.0 * rps[0],
+            "4 boards must sustain > 3× one board: {rps:?}"
+        );
+    }
+}

@@ -21,14 +21,21 @@
 //! * [`blis`], [`partition`], [`sched`] — the paper's contribution:
 //!   BLIS control trees (one per cluster), N-way loop partitioning
 //!   (weighted-static and dynamic-queue) and the SSS/SAS/CA-SAS/DAS/
-//!   CA-DAS scheduling strategies driven by per-cluster weight vectors;
+//!   CA-DAS scheduling strategies driven by per-way weight vectors
+//!   (clusters of a SoC, or boards of a fleet — `sched::Weighted`);
 //! * [`native`] — real multithreaded packed GEMM applying those
 //!   strategies on any topology (numerics verified against the oracle);
 //! * [`runtime`], [`coordinator`] — the PJRT artifact runtime (HLO text
-//!   → compile → execute) and the GEMM service on top;
+//!   → compile → execute), the GEMM service on top, the same-shape
+//!   request batcher and the multi-board `FleetDispatcher` front-end;
+//! * [`fleet`] — the scale-out layer: a `Fleet` of heterogeneous
+//!   `Board`s sharded by the board-level fleet-SSS/SAS/DAS strategies
+//!   (cluster : SoC :: board : fleet), with a deterministic virtual-time
+//!   multi-board simulator for capacity planning;
 //! * [`search`], [`figures`] — the per-cluster empirical (mc, kc)
 //!   search and the regeneration harness for every evaluation figure in
-//!   the paper (plus the §6-roadmap ablations and topology sweeps);
+//!   the paper (plus the §6-roadmap ablations, topology sweeps and the
+//!   fleet-throughput-scaling report);
 //! * [`util`] — deterministic RNG, stats, tables, mini-prop, benchkit,
 //!   CLI.
 //!
@@ -41,6 +48,7 @@ pub mod cache;
 pub mod coordinator;
 pub mod energy;
 pub mod figures;
+pub mod fleet;
 pub mod model;
 pub mod native;
 pub mod partition;

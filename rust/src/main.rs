@@ -8,17 +8,24 @@
 //!   one GEMM;
 //! * `calibrate` — print model-vs-paper anchor table;
 //! * `serve    [--addr HOST:PORT] [--artifacts DIR]` — TCP GEMM service;
+//! * `fleet    [--boards P1,P2,…] [--size R] [--batch N]` — multi-board
+//!   virtual-time sweep: per-board and fleet-aggregate GFLOPS/energy
+//!   under fleet-SSS/SAS/DAS (`--report` regenerates the full
+//!   fleet-scaling report);
 //! * `soc` — show the simulated SoC descriptor.
 
 use amp_gemm::blis::gemm::GemmShape;
 use amp_gemm::coordinator::{server, Backend, Coordinator, Request};
 use amp_gemm::figures;
+use amp_gemm::fleet::sim::simulate_fleet;
+use amp_gemm::fleet::{Fleet, FleetStrategy};
 use amp_gemm::model::PerfModel;
 use amp_gemm::sched::{CoarseLoop, FineLoop, ScheduleSpec, Strategy};
 use amp_gemm::search;
 use amp_gemm::soc::{ClusterId, SocSpec, BIG, LITTLE};
 use amp_gemm::util::cli::Args;
 use amp_gemm::util::rng::Rng;
+use amp_gemm::util::table::Table;
 use std::path::Path;
 use std::sync::Arc;
 
@@ -38,6 +45,7 @@ fn main() {
         "gemm" => cmd_gemm(&args),
         "calibrate" => cmd_calibrate(),
         "serve" => cmd_serve(&args),
+        "fleet" => cmd_fleet(&args),
         "soc" => cmd_soc(),
         _ => {
             print_help();
@@ -55,7 +63,7 @@ fn print_help() {
         "amp-gemm — architecture-aware GEMM scheduling on asymmetric multicores
 (reproduction of Catalán et al. 2015; see DESIGN.md)
 
-USAGE: amp-gemm <figures|search|gemm|calibrate|serve|soc> [options]
+USAGE: amp-gemm <figures|search|gemm|calibrate|serve|fleet|soc> [options]
 
   figures   [--fig N] [--quick] [--out results]   regenerate paper figures
   ablation  [--out results]                        §6 future-work ablations
@@ -63,6 +71,8 @@ USAGE: amp-gemm <figures|search|gemm|calibrate|serve|soc> [options]
   gemm      --size R [--sched cadas|das|sas5|...] [--backend native|sim|pjrt]
   calibrate                                        model-vs-paper anchors
   serve     [--addr 127.0.0.1:7070] [--artifacts artifacts]
+  fleet     [--boards exynos5422,juno_r0] [--size R] [--batch N] [--sched sss|sas|das]
+  fleet     --report [--quick] [--out results]      fixed-fleet scaling report
   soc                                              simulated SoC descriptor"
     );
 }
@@ -277,6 +287,82 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// Deterministic multi-board virtual-time sweep: shard a same-shape
+/// batch across the given board presets under every fleet strategy and
+/// report per-board plus fleet-aggregate GFLOPS/energy. `--report`
+/// regenerates the full fleet-scaling report (tables + assertions)
+/// instead.
+fn cmd_fleet(args: &Args) -> Result<(), String> {
+    if args.flag("report") {
+        // The report runs a fixed fleet/shape matrix (its assertions are
+        // calibrated to them); the sweep flags apply to the ad-hoc mode.
+        for flag in ["boards", "size", "batch", "m", "n", "k", "sched"] {
+            if args.get(flag).is_some() {
+                return Err(format!(
+                    "--{flag} does not combine with --report (the report's \
+                     fleet and shape are fixed); drop --report for an ad-hoc sweep"
+                ));
+            }
+        }
+        let fig = figures::fleet::run(args.flag("quick"));
+        println!("{}", fig.to_markdown());
+        let out = Path::new(args.get_or("out", "results"));
+        let paths = fig.write_csvs(out).map_err(|e| e.to_string())?;
+        println!("wrote {} CSVs under {}", paths.len(), out.display());
+        if !fig.passed() {
+            return Err("fleet report assertions failed".into());
+        }
+        return Ok(());
+    }
+
+    let fleet = Fleet::parse(args.get_or("boards", "exynos5422,juno_r0"))?;
+    let r = args.usize_or("size", 2048)?;
+    let m = args.usize_or("m", r)?;
+    let n = args.usize_or("n", r)?;
+    let k = args.usize_or("k", r)?;
+    let batch = args.usize_or("batch", 32)?;
+    if batch == 0 {
+        return Err("--batch must be at least 1".into());
+    }
+    let shape = GemmShape { m, n, k };
+
+    println!(
+        "fleet of {} boards, {}x{}x{} × {batch} items (virtual time)\n",
+        fleet.num_boards(),
+        m,
+        n,
+        k
+    );
+    let strategies = match args.get("sched") {
+        Some(s) => vec![FleetStrategy::parse(s)?],
+        None => vec![FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das],
+    };
+    for strategy in strategies {
+        let st = simulate_fleet(&fleet, strategy, shape, batch);
+        let mut table = Table::new(
+            &format!(
+                "{} — makespan {:.3} s, {:.2} GFLOPS, {:.2} req/s, {:.1} J, {:.3} GFLOPS/W",
+                st.label, st.makespan_s, st.gflops, st.throughput_rps, st.energy_j,
+                st.gflops_per_watt
+            ),
+            &["board", "items", "grabs", "busy [s]", "finish [s]", "GFLOPS", "energy [J]"],
+        );
+        for b in &st.boards {
+            table.push_row(vec![
+                b.name.clone(),
+                b.items.to_string(),
+                b.grabs.to_string(),
+                format!("{:.3}", b.busy_s),
+                format!("{:.3}", b.finish_s),
+                format!("{:.2}", b.gflops),
+                format!("{:.1}", b.energy_j),
+            ]);
+        }
+        println!("{}", table.to_markdown());
+    }
+    Ok(())
 }
 
 fn cmd_soc() -> Result<(), String> {

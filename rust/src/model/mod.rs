@@ -56,10 +56,11 @@ pub struct PerfModel {
 
 impl PerfModel {
     pub fn new(soc: SocSpec) -> Self {
+        // L3/SLC-aware per-cluster analyses: identical to the two-level
+        // ones when the descriptor has no system-level cache.
         let fits = soc
-            .clusters
-            .iter()
-            .map(FootprintAnalysis::for_cluster)
+            .cluster_ids()
+            .map(|c| FootprintAnalysis::for_cluster_in(&soc, c))
             .collect();
         PerfModel { soc, fits }
     }

@@ -29,27 +29,38 @@ use crate::blis::control_tree::{ControlTree, Parallelism, TreeSet};
 use crate::blis::params::BlisParams;
 use crate::soc::{ClusterId, SocSpec};
 
-/// Upper bound on clusters a [`Weights`] vector can address. Keeps
-/// `ScheduleSpec` `Copy` (stack array, no allocation); far above any
-/// real AMP topology.
-pub const MAX_CLUSTERS: usize = 8;
+/// Upper bound on ways a [`Weights`] vector can address — clusters of
+/// one SoC, or boards of a fleet. Keeps `ScheduleSpec` `Copy` (stack
+/// array, no allocation); far above any real AMP topology or rack.
+pub const MAX_WAYS: usize = 8;
 
-/// Per-cluster work-distribution weights for the static-asymmetric
-/// strategies: cluster `i` receives a share proportional to `w[i]`
-/// (§5.2's `ratio` is `Weights::ratio(r)` = `[r, 1]`).
+/// Anything the weighted-static partitioner can divide work across: a
+/// *way* with a throughput-proportional weight. Clusters of one SoC are
+/// the paper's case (§5.2); boards of a [`crate::fleet::Fleet`] are the
+/// same machinery one level up (cluster : SoC :: board : fleet).
+pub trait Weighted {
+    /// Relative throughput of this way (any positive unit; only ratios
+    /// matter to the partitioner).
+    fn weight(&self) -> f64;
+}
+
+/// Per-way work-distribution weights for the static-asymmetric
+/// strategies: way `i` (a cluster, or a board at the fleet level)
+/// receives a share proportional to `w[i]` (§5.2's `ratio` is
+/// `Weights::ratio(r)` = `[r, 1]`).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Weights {
-    w: [f64; MAX_CLUSTERS],
+    w: [f64; MAX_WAYS],
     n: usize,
 }
 
 impl Weights {
-    /// Build from explicit per-cluster weights (one per cluster, in
-    /// [`ClusterId`] order).
+    /// Build from explicit per-way weights (one per cluster in
+    /// [`ClusterId`] order, or one per board in fleet order).
     pub fn from_slice(ws: &[f64]) -> Self {
         assert!(
-            (1..=MAX_CLUSTERS).contains(&ws.len()),
-            "need 1..={MAX_CLUSTERS} weights, got {}",
+            (1..=MAX_WAYS).contains(&ws.len()),
+            "need 1..={MAX_WAYS} weights, got {}",
             ws.len()
         );
         assert!(
@@ -57,9 +68,17 @@ impl Weights {
             "weights must be finite and non-negative: {ws:?}"
         );
         assert!(ws.iter().sum::<f64>() > 0.0, "at least one positive weight");
-        let mut w = [0.0; MAX_CLUSTERS];
+        let mut w = [0.0; MAX_WAYS];
         w[..ws.len()].copy_from_slice(ws);
         Weights { w, n: ws.len() }
+    }
+
+    /// Build from anything carrying its own weight — the generic entry
+    /// point the fleet layer uses to turn a `&[Board]` into the same
+    /// vector a `&[ClusterSpec]`-derived rate table produces.
+    pub fn from_weighted<T: Weighted>(items: &[T]) -> Self {
+        let ws: Vec<f64> = items.iter().map(Weighted::weight).collect();
+        Weights::from_slice(&ws)
     }
 
     /// The paper's two-cluster ratio: the fast cluster gets `ratio`
@@ -574,6 +593,18 @@ mod tests {
     #[should_panic(expected = "positive weight")]
     fn all_zero_weight_vector_rejected() {
         Weights::from_slice(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn weights_from_weighted_things() {
+        struct Way(f64);
+        impl Weighted for Way {
+            fn weight(&self) -> f64 {
+                self.0
+            }
+        }
+        let w = Weights::from_weighted(&[Way(6.0), Way(3.0), Way(1.0)]);
+        assert_eq!(w.as_slice(), &[6.0, 3.0, 1.0]);
     }
 
     #[test]

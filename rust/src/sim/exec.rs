@@ -67,9 +67,10 @@ impl<'m> ClusterSim<'m> {
         tree: ControlTree,
         other_active: bool,
     ) -> Self {
-        let spec = &model.soc[cluster];
         assert!(threads <= MAX_CLUSTER_THREADS, "cluster too wide for the sim");
-        let fit = FootprintAnalysis::for_cluster(spec).fit(&tree.params);
+        // SLC-aware: an Ac spill caught by the system-level cache
+        // re-streams from the L3, not DRAM (no extra DRAM traffic).
+        let fit = FootprintAnalysis::for_cluster_in(&model.soc, cluster).fit(&tree.params);
         ClusterSim {
             cluster,
             threads,
@@ -82,7 +83,7 @@ impl<'m> ClusterSim<'m> {
             barriers: 0,
             dram_bytes: 0.0,
             other_active,
-            ac_overflows: !fit.ac_fits(),
+            ac_overflows: !fit.ac_fits() && !fit.ac_fits_l3(),
             timeline: Timeline::default(),
             record: false,
         }

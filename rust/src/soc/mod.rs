@@ -271,6 +271,12 @@ pub struct SocSpec {
     pub name: String,
     /// The clusters, fastest-first by convention in all presets.
     pub clusters: Vec<ClusterSpec>,
+    /// Optional system-level cache (L3/SLC) behind every cluster's L2,
+    /// shared by all clusters — the Intel P/E/LP-E and Apple P/E shape
+    /// (ROADMAP ">2-level cache hierarchies"). `None` for the paper's
+    /// Exynos testbed and all pre-existing presets, so the two-level
+    /// analysis reproduces bit-for-bit.
+    pub l3: Option<CacheGeometry>,
     /// Sustained DRAM bandwidth observable by one cluster (GB/s).
     pub dram_bw_gbs: f64,
     pub dram_total_bytes: usize,
@@ -319,6 +325,7 @@ impl SocSpec {
                     tuning: ClusterTuning::a7(),
                 },
             ],
+            l3: None,
             dram_bw_gbs: 3.2,
             dram_total_bytes: 2 * 1024 * 1024 * 1024,
         }
@@ -388,6 +395,7 @@ impl SocSpec {
                     tuning: ClusterTuning::a7(),
                 },
             ],
+            l3: None,
             dram_bw_gbs: 5.0,
             dram_total_bytes: 8 * 1024 * 1024 * 1024,
         }
@@ -444,6 +452,7 @@ impl SocSpec {
                     tuning: ClusterTuning::a7(),
                 },
             ],
+            l3: None,
             dram_bw_gbs: 12.0,
             dram_total_bytes: 4 * 1024 * 1024 * 1024,
         }
@@ -470,9 +479,63 @@ impl SocSpec {
                 tuned: BlisParams::a15_opt(),
                 tuning: ClusterTuning::a15(),
             }],
+            l3: None,
             dram_bw_gbs: 3.2,
             dram_total_bytes: 2 * 1024 * 1024 * 1024,
         }
+    }
+
+    /// Synthetic Intel-style P/E hybrid: 4 performance cores against
+    /// 4 efficiency cores, both clusters backed by a shared 12 MiB
+    /// system-level cache. The only preset with `l3: Some(..)` — it
+    /// exercises the three-level footprint analysis (an `Ac` macro-panel
+    /// that spills a small E-cluster L2 lands in the SLC instead of
+    /// DRAM) without perturbing the paper's two-level Exynos presets.
+    pub fn pe_hybrid() -> SocSpec {
+        SocSpec {
+            name: "synthetic P/E hybrid (4P + 4E, 12 MiB SLC)".to_string(),
+            clusters: vec![
+                ClusterSpec {
+                    name: "P-core".to_string(),
+                    short_name: "big".to_string(),
+                    core: CoreSpec {
+                        freq_ghz: 2.4,
+                        l1d: CacheGeometry::new(48 * 1024, 12, 64),
+                        dp_flops_per_cycle: 4.0,
+                    },
+                    num_cores: 4,
+                    l2: CacheGeometry::new(2 * 1024 * 1024, 16, 64),
+                    tuned: BlisParams::a15_opt(),
+                    tuning: ClusterTuning::a15(),
+                },
+                ClusterSpec {
+                    name: "E-core".to_string(),
+                    short_name: "LITTLE".to_string(),
+                    core: CoreSpec {
+                        freq_ghz: 1.8,
+                        l1d: CacheGeometry::new(32 * 1024, 8, 64),
+                        dp_flops_per_cycle: 2.0,
+                    },
+                    num_cores: 4,
+                    // Small module-shared L2: the A15-class Ac (1.16 MiB)
+                    // overflows it but fits the SLC.
+                    l2: CacheGeometry::new(512 * 1024, 8, 64),
+                    tuned: BlisParams::a7_opt(),
+                    tuning: ClusterTuning::mid(),
+                },
+            ],
+            l3: Some(CacheGeometry::new(12 * 1024 * 1024, 12, 64)),
+            dram_bw_gbs: 20.0,
+            dram_total_bytes: 16 * 1024 * 1024 * 1024,
+        }
+    }
+
+    /// Attach (or replace) a system-level cache on any descriptor —
+    /// the ablation knob for >2-level hierarchies.
+    pub fn with_l3(mut self, geo: CacheGeometry) -> SocSpec {
+        geo.validate();
+        self.l3 = Some(geo);
+        self
     }
 
     pub fn num_clusters(&self) -> usize {
@@ -668,6 +731,41 @@ mod tests {
     #[should_panic]
     fn zero_active_cores_rejected() {
         ClusterTuning::a15().scale(0);
+    }
+
+    #[test]
+    fn existing_presets_have_no_l3() {
+        // Bit-for-bit guard: the two-level presets must not grow an SLC.
+        for soc in [
+            SocSpec::exynos5422(),
+            SocSpec::juno_r0(),
+            SocSpec::dynamiq_3c(),
+            SocSpec::symmetric(4),
+            SocSpec::custom_counts(2, 6),
+        ] {
+            assert!(soc.l3.is_none(), "{} must stay two-level", soc.name);
+        }
+    }
+
+    #[test]
+    fn pe_hybrid_preset_has_slc() {
+        let soc = SocSpec::pe_hybrid();
+        assert_eq!(soc.num_clusters(), 2);
+        let l3 = soc.l3.expect("P/E preset carries an SLC");
+        assert_eq!(l3.size_bytes, 12 * 1024 * 1024);
+        l3.validate();
+        assert!(soc[BIG].core.peak_gflops() > soc[LITTLE].core.peak_gflops());
+        // The P-class Ac overflows the E cluster's small L2 but is far
+        // smaller than the SLC — the three-level analysis test case.
+        let ac = soc[BIG].tuned.mc * soc[BIG].tuned.kc * 8;
+        assert!(ac > soc[LITTLE].l2.size_bytes);
+        assert!(ac < l3.size_bytes);
+    }
+
+    #[test]
+    fn with_l3_builder_attaches_slc() {
+        let soc = SocSpec::exynos5422().with_l3(CacheGeometry::new(4 * 1024 * 1024, 16, 64));
+        assert_eq!(soc.l3.unwrap().size_bytes, 4 * 1024 * 1024);
     }
 
     #[test]
