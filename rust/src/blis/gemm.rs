@@ -11,7 +11,7 @@ use crate::blis::packing::{a_panel, b_panel, pack_a, pack_b};
 use crate::blis::params::BlisParams;
 
 /// A GEMM problem over borrowed row-major buffers.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GemmShape {
     pub m: usize,
     pub n: usize,

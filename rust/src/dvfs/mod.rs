@@ -1,0 +1,441 @@
+//! DVFS operating-point schedules with online weight retuning.
+//!
+//! The paper tunes and schedules GEMM for one fixed frequency pair on
+//! the Exynos 5422, but a deployed big.LITTLE SoC runs under a governor
+//! that moves each cluster through its operating points — and the
+//! scheduler/governor interplay is exactly where asymmetric gains are
+//! won or lost (arXiv:1509.02058), while the perf/energy optimum shifts
+//! with the voltage-frequency point (arXiv:1507.05129). This layer
+//! (DESIGN.md §4) adds that axis on top of the N-cluster descriptor:
+//!
+//! * every [`crate::soc::ClusterSpec`] carries an OPP ladder
+//!   ([`OppTable`]; the paper presets get the Exynos A15/A7 `cpufreq`
+//!   tables capped at the §3.2 operating point);
+//! * a [`Governor`] plans a [`DvfsSchedule`] — timed per-cluster OPP
+//!   transitions in *virtual* time — with `performance`, `powersave`
+//!   and `ondemand`-style policies;
+//! * [`DvfsSchedule::soc_at`] derives the descriptor in effect at any
+//!   instant (frequency from the ladder, power rails scaled by the CMOS
+//!   `f·V²` law), and [`DvfsSchedule::weights_at`] recomputes the
+//!   normalized [`Weights`] vector there — the *online retuning*
+//!   primitive: the first place in this codebase where the weight
+//!   vector is a function of time rather than a constant;
+//! * [`sim`] replays a schedule through the calibrated engine,
+//!   repartitioning SAS shares at every transition (online) or keeping
+//!   the stale boot-time split (the baseline it must beat).
+
+pub mod sim;
+
+pub use crate::soc::{OperatingPoint, OppTable};
+
+use crate::model::PerfModel;
+use crate::sched::Weights;
+use crate::soc::{ClusterId, SocSpec};
+
+/// One timed OPP switch: at virtual instant `t_s`, `cluster` moves to
+/// ladder rung `opp`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transition {
+    pub t_s: f64,
+    pub cluster: ClusterId,
+    pub opp: usize,
+}
+
+/// A replayable plan of per-cluster operating points over virtual time:
+/// an initial OPP per cluster plus a time-sorted list of transitions.
+/// Governors produce these; the DVFS engine ([`sim::simulate_dvfs`])
+/// and the fleet simulator replay them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DvfsSchedule {
+    /// Initial ladder rung per cluster, in [`ClusterId`] order.
+    pub initial: Vec<usize>,
+    /// Transitions sorted by time (ties by cluster id).
+    pub transitions: Vec<Transition>,
+}
+
+impl DvfsSchedule {
+    /// Build from raw parts; transitions are sorted into replay order.
+    pub fn new(initial: Vec<usize>, mut transitions: Vec<Transition>) -> Self {
+        transitions.sort_by(|a, b| {
+            a.t_s
+                .partial_cmp(&b.t_s)
+                .expect("transition times must be comparable")
+                .then(a.cluster.cmp(&b.cluster))
+        });
+        DvfsSchedule { initial, transitions }
+    }
+
+    /// Every cluster pinned at its nominal (boot) rung forever — the
+    /// schedule under which the DVFS path is provably a no-op.
+    pub fn nominal(soc: &SocSpec) -> Self {
+        DvfsSchedule::new(
+            soc.clusters.iter().map(|c| c.opps.nominal_idx()).collect(),
+            Vec::new(),
+        )
+    }
+
+    /// Every cluster pinned at the given rungs (no transitions).
+    pub fn pinned(opps: &[usize]) -> Self {
+        DvfsSchedule::new(opps.to_vec(), Vec::new())
+    }
+
+    /// Check the plan against a topology: one initial rung per cluster,
+    /// every rung inside its ladder, times finite and non-negative.
+    pub fn validate(&self, soc: &SocSpec) -> Result<(), String> {
+        if self.initial.len() != soc.num_clusters() {
+            return Err(format!(
+                "schedule has {} initial OPPs but '{}' has {} clusters",
+                self.initial.len(),
+                soc.name,
+                soc.num_clusters()
+            ));
+        }
+        for (i, &opp) in self.initial.iter().enumerate() {
+            if opp >= soc.clusters[i].opps.len() {
+                return Err(format!(
+                    "initial OPP {opp} out of range for cluster c{i} \
+                     ({} ladder points)",
+                    soc.clusters[i].opps.len()
+                ));
+            }
+        }
+        for tr in &self.transitions {
+            if tr.cluster.0 >= soc.num_clusters() {
+                return Err(format!("transition names missing cluster {}", tr.cluster));
+            }
+            if tr.opp >= soc[tr.cluster].opps.len() {
+                return Err(format!(
+                    "transition OPP {} out of range for {} ({} ladder points)",
+                    tr.opp,
+                    tr.cluster,
+                    soc[tr.cluster].opps.len()
+                ));
+            }
+            if !tr.t_s.is_finite() || tr.t_s < 0.0 {
+                return Err(format!("transition time must be finite and >= 0, got {}", tr.t_s));
+            }
+        }
+        Ok(())
+    }
+
+    /// A schedule with no transitions holds one operating point forever.
+    pub fn is_static(&self) -> bool {
+        self.transitions.is_empty()
+    }
+
+    /// The rung `cluster` runs at instant `t` (transitions at exactly
+    /// `t` have already fired).
+    pub fn opp_at(&self, cluster: ClusterId, t: f64) -> usize {
+        let mut opp = self.initial[cluster.0];
+        for tr in &self.transitions {
+            if tr.t_s > t {
+                break;
+            }
+            if tr.cluster == cluster {
+                opp = tr.opp;
+            }
+        }
+        opp
+    }
+
+    /// Distinct future transition instants, ascending (t = 0 switches
+    /// are folded into the initial state by [`DvfsSchedule::opp_at`]).
+    pub fn boundaries(&self) -> Vec<f64> {
+        let mut ts: Vec<f64> = self
+            .transitions
+            .iter()
+            .map(|tr| tr.t_s)
+            .filter(|&t| t > 0.0)
+            .collect();
+        ts.sort_by(|a, b| a.partial_cmp(b).expect("finite times"));
+        ts.dedup();
+        ts
+    }
+
+    /// The descriptor in effect at instant `t`: every cluster moved to
+    /// its scheduled rung via [`SocSpec::at_opp`]. At the nominal rung
+    /// this is bit-for-bit `base`.
+    pub fn soc_at(&self, base: &SocSpec, t: f64) -> SocSpec {
+        let mut soc = base.clone();
+        for c in base.cluster_ids() {
+            soc = soc.at_opp(c, self.opp_at(c, t));
+        }
+        soc
+    }
+
+    /// The *online-retuned* weight vector at instant `t`: the
+    /// analytical model's per-cluster throughputs under the descriptor
+    /// in effect, normalized to shares. With a static schedule this is
+    /// exactly the boot-time static vector — the degenerate-case
+    /// property the tests pin.
+    pub fn weights_at(&self, base: &SocSpec, t: f64, cache_aware: bool) -> Weights {
+        PerfModel::new(self.soc_at(base, t))
+            .auto_weights(cache_aware)
+            .normalized()
+    }
+}
+
+/// A DVFS policy: plans a [`DvfsSchedule`] over a virtual-time horizon
+/// for a given topology — the simulated counterpart of a `cpufreq`
+/// governor (arXiv:1509.02058's scheduler/governor interplay).
+pub trait Governor {
+    fn name(&self) -> &'static str;
+    /// Plan per-cluster OPP transitions over `[0, horizon_s)`.
+    fn plan(&self, soc: &SocSpec, horizon_s: f64) -> DvfsSchedule;
+}
+
+/// Pin every cluster at the ladder top (= the nominal rung for every
+/// preset): the schedule is static and the descriptor identical to the
+/// boot descriptor, so results reproduce the fixed-frequency pins
+/// bit-for-bit.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Performance;
+
+impl Governor for Performance {
+    fn name(&self) -> &'static str {
+        "performance"
+    }
+    fn plan(&self, soc: &SocSpec, _horizon_s: f64) -> DvfsSchedule {
+        DvfsSchedule::pinned(
+            &soc.clusters
+                .iter()
+                .map(|c| c.opps.len() - 1)
+                .collect::<Vec<_>>(),
+        )
+    }
+}
+
+/// Pin every cluster at the ladder bottom: slowest, lowest-voltage
+/// point — the energy-to-solution end of the Pareto frontier.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Powersave;
+
+impl Governor for Powersave {
+    fn name(&self) -> &'static str {
+        "powersave"
+    }
+    fn plan(&self, soc: &SocSpec, _horizon_s: f64) -> DvfsSchedule {
+        DvfsSchedule::pinned(&vec![0; soc.num_clusters()])
+    }
+}
+
+/// `ondemand`-style ramp driven by virtual time: a compute-bound GEMM
+/// pins utilization at 100 %, so the governor walks each cluster up one
+/// rung per sampling period from the bottom until the ladder top.
+/// Because the A15 and A7 ladders scale differently rung-by-rung, the
+/// per-cluster throughput *ratio* shifts at every step — exactly the
+/// situation where stale boot-time SAS weights go wrong.
+#[derive(Debug, Clone, Copy)]
+pub struct Ondemand {
+    /// Governor sampling period (virtual seconds per rung).
+    pub period_s: f64,
+}
+
+impl Ondemand {
+    pub fn new(period_s: f64) -> Self {
+        assert!(
+            period_s.is_finite() && period_s > 0.0,
+            "ondemand period must be positive, got {period_s}"
+        );
+        Ondemand { period_s }
+    }
+}
+
+impl Default for Ondemand {
+    fn default() -> Self {
+        Ondemand::new(0.5)
+    }
+}
+
+impl Governor for Ondemand {
+    fn name(&self) -> &'static str {
+        "ondemand"
+    }
+    fn plan(&self, soc: &SocSpec, horizon_s: f64) -> DvfsSchedule {
+        let mut transitions = Vec::new();
+        for c in soc.cluster_ids() {
+            for rung in 1..soc[c].opps.len() {
+                let t = rung as f64 * self.period_s;
+                if t >= horizon_s {
+                    break;
+                }
+                transitions.push(Transition { t_s: t, cluster: c, opp: rung });
+            }
+        }
+        DvfsSchedule::new(vec![0; soc.num_clusters()], transitions)
+    }
+}
+
+/// Parse a governor token: `performance`, `powersave`,
+/// `ondemand[:PERIOD_MS]`.
+pub fn parse_governor(s: &str) -> Result<Box<dyn Governor>, String> {
+    match s {
+        "performance" => Ok(Box::new(Performance)),
+        "powersave" => Ok(Box::new(Powersave)),
+        "ondemand" => Ok(Box::new(Ondemand::default())),
+        other => match other.strip_prefix("ondemand:") {
+            Some(ms) => {
+                let ms: f64 = ms
+                    .parse()
+                    .map_err(|_| format!("bad ondemand period '{ms}' (milliseconds)"))?;
+                if !ms.is_finite() || ms <= 0.0 {
+                    return Err(format!("ondemand period must be positive, got {ms} ms"));
+                }
+                Ok(Box::new(Ondemand::new(ms / 1e3)))
+            }
+            None => Err(format!(
+                "unknown governor '{other}' (performance|powersave|ondemand[:ms])"
+            )),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::{BIG, LITTLE};
+
+    fn soc() -> SocSpec {
+        SocSpec::exynos5422()
+    }
+
+    #[test]
+    fn nominal_schedule_is_identity() {
+        let s = soc();
+        let plan = DvfsSchedule::nominal(&s);
+        assert!(plan.is_static());
+        plan.validate(&s).unwrap();
+        assert_eq!(plan.soc_at(&s, 0.0), s);
+        assert_eq!(plan.soc_at(&s, 123.0), s);
+        assert_eq!(plan.opp_at(BIG, 5.0), 4);
+    }
+
+    #[test]
+    fn performance_governor_pins_nominal() {
+        let s = soc();
+        let plan = Performance.plan(&s, 10.0);
+        assert!(plan.is_static());
+        assert_eq!(plan, DvfsSchedule::nominal(&s));
+        assert_eq!(plan.soc_at(&s, 3.0), s);
+    }
+
+    #[test]
+    fn powersave_governor_pins_bottom() {
+        let s = soc();
+        let plan = Powersave.plan(&s, 10.0);
+        assert!(plan.is_static());
+        let low = plan.soc_at(&s, 0.0);
+        assert_eq!(low[BIG].core.freq_ghz, 0.8);
+        assert_eq!(low[LITTLE].core.freq_ghz, 0.5);
+        assert!(low[BIG].tuning.p_core_active_w < s[BIG].tuning.p_core_active_w);
+    }
+
+    #[test]
+    fn ondemand_ramps_one_rung_per_period() {
+        let s = soc();
+        let plan = Ondemand::new(0.5).plan(&s, 10.0);
+        plan.validate(&s).unwrap();
+        assert!(!plan.is_static());
+        // 4 upward steps per cluster, shared instants.
+        assert_eq!(plan.transitions.len(), 8);
+        assert_eq!(plan.boundaries(), vec![0.5, 1.0, 1.5, 2.0]);
+        assert_eq!(plan.opp_at(BIG, 0.0), 0);
+        assert_eq!(plan.opp_at(BIG, 0.5), 1, "transition at exactly t has fired");
+        assert_eq!(plan.opp_at(BIG, 0.49), 0);
+        assert_eq!(plan.opp_at(LITTLE, 9.0), 4);
+        // Mid-ramp descriptor: big at rung 2 (1.2 GHz), little at 1.0.
+        let mid = plan.soc_at(&s, 1.2);
+        assert_eq!(mid[BIG].core.freq_ghz, 1.2);
+        assert_eq!(mid[LITTLE].core.freq_ghz, 1.0);
+        // A short horizon truncates the ramp.
+        let short = Ondemand::new(0.5).plan(&s, 1.2);
+        assert_eq!(short.boundaries(), vec![0.5, 1.0]);
+    }
+
+    #[test]
+    fn retuned_weights_shift_along_the_ramp() {
+        let s = soc();
+        let plan = Ondemand::new(0.5).plan(&s, 10.0);
+        let boot = plan.weights_at(&s, 0.0, true);
+        let end = plan.weights_at(&s, 9.0, true);
+        let sum: f64 = boot.as_slice().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "normalized sum {sum}");
+        // At the bottom rungs the big cluster's frequency advantage is
+        // larger (0.8 vs 0.5 GHz = 1.6x, against 1.6 vs 1.4 = 1.14x at
+        // the top), so its share must shrink as the ramp completes.
+        assert!(
+            boot.share(0) > end.share(0) + 0.01,
+            "boot big share {} vs end {}",
+            boot.share(0),
+            end.share(0)
+        );
+        // And the end-of-ramp weights are exactly the static ones.
+        let statics = PerfModel::new(s.clone()).auto_weights(true).normalized();
+        assert_eq!(end.as_slice(), statics.as_slice());
+    }
+
+    #[test]
+    fn schedule_validation_catches_bad_plans() {
+        let s = soc();
+        assert!(DvfsSchedule::pinned(&[0]).validate(&s).is_err(), "wrong arity");
+        assert!(DvfsSchedule::pinned(&[0, 9]).validate(&s).is_err(), "bad rung");
+        let bad_cluster = DvfsSchedule::new(
+            vec![4, 4],
+            vec![Transition { t_s: 1.0, cluster: ClusterId(7), opp: 0 }],
+        );
+        assert!(bad_cluster.validate(&s).is_err());
+        let bad_time = DvfsSchedule::new(
+            vec![4, 4],
+            vec![Transition { t_s: -1.0, cluster: BIG, opp: 0 }],
+        );
+        assert!(bad_time.validate(&s).is_err());
+        let bad_rung = DvfsSchedule::new(
+            vec![4, 4],
+            vec![Transition { t_s: 1.0, cluster: BIG, opp: 17 }],
+        );
+        assert!(bad_rung.validate(&s).is_err());
+    }
+
+    #[test]
+    fn transitions_sort_into_replay_order() {
+        let plan = DvfsSchedule::new(
+            vec![0, 0],
+            vec![
+                Transition { t_s: 2.0, cluster: BIG, opp: 2 },
+                Transition { t_s: 1.0, cluster: LITTLE, opp: 1 },
+                Transition { t_s: 1.0, cluster: BIG, opp: 1 },
+            ],
+        );
+        assert_eq!(plan.transitions[0].t_s, 1.0);
+        assert_eq!(plan.transitions[0].cluster, BIG);
+        assert_eq!(plan.transitions[1].cluster, LITTLE);
+        assert_eq!(plan.transitions[2].t_s, 2.0);
+        assert_eq!(plan.boundaries(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn governor_parser() {
+        assert_eq!(parse_governor("performance").unwrap().name(), "performance");
+        assert_eq!(parse_governor("powersave").unwrap().name(), "powersave");
+        assert_eq!(parse_governor("ondemand").unwrap().name(), "ondemand");
+        assert_eq!(parse_governor("ondemand:250").unwrap().name(), "ondemand");
+        assert!(parse_governor("ondemand:-5").is_err());
+        assert!(parse_governor("ondemand:x").is_err());
+        assert!(parse_governor("turbo").is_err());
+    }
+
+    #[test]
+    fn weights_at_handles_any_topology() {
+        for s in [SocSpec::dynamiq_3c(), SocSpec::symmetric(4), SocSpec::juno_r0()] {
+            let plan = Ondemand::default().plan(&s, 10.0);
+            plan.validate(&s).unwrap();
+            for t in [0.0, 0.7, 2.0, 50.0] {
+                let w = plan.weights_at(&s, t, true);
+                assert_eq!(w.len(), s.num_clusters());
+                let sum: f64 = w.as_slice().iter().sum();
+                assert!((sum - 1.0).abs() < 1e-9, "{}: sum {sum}", s.name);
+                assert!(w.as_slice().iter().all(|x| x.is_finite() && *x > 0.0));
+            }
+        }
+    }
+}

@@ -1,0 +1,600 @@
+//! Replay of a [`DvfsSchedule`] through the calibrated engine, with
+//! online weight retuning.
+//!
+//! Two regimes, one entry point ([`simulate_dvfs`]):
+//!
+//! * **static schedule** (no transitions) — the run delegates to the
+//!   DES (`crate::sim::simulate`) on the descriptor at the pinned
+//!   operating point. Under the `performance` governor that descriptor
+//!   is bit-for-bit the boot descriptor, so the DVFS path reproduces
+//!   the fixed-frequency pins exactly (the regression-test guarantee);
+//! * **transitions present** — an epoch-fluid replay: virtual time is
+//!   cut at every OPP transition; each epoch's per-cluster throughputs
+//!   are recomputed from the analytical model at the descriptor in
+//!   effect, calibrated against one DES run of the same epoch's
+//!   configuration so the fluid aggregate equals the DES aggregate at
+//!   every fixed point (no cross-regime optimism). Static-asymmetric
+//!   shares are then either **retuned online** — the un-executed work
+//!   is repartitioned by the epoch's fresh weight vector — or left at
+//!   the **stale boot-time split**, which is exactly what a SAS run
+//!   configured once at launch would do under a governor (§5.2's ratio
+//!   knob going wrong, arXiv:1509.02058). Dynamic strategies rebalance
+//!   through the chunk queue and need no retuning.
+//!
+//! Everything is deterministic virtual time: same schedule, same
+//! timeline, bit for bit.
+
+use crate::blis::gemm::GemmShape;
+use crate::dvfs::DvfsSchedule;
+use crate::energy::{CoreState, PowerModel};
+use crate::model::calibration as cal;
+use crate::model::PerfModel;
+use crate::sched::ScheduleSpec;
+use crate::sim;
+use crate::soc::SocSpec;
+
+/// What happens to the SAS weight vector at an OPP transition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Retune {
+    /// Keep the boot-time split — the stale baseline.
+    Boot,
+    /// Repartition the remaining work by the fresh weight vector.
+    Online,
+}
+
+impl Retune {
+    pub fn label(self) -> &'static str {
+        match self {
+            Retune::Boot => "boot weights",
+            Retune::Online => "online retune",
+        }
+    }
+}
+
+/// Strategy family the DVFS engine replays. The coarse/fine loop
+/// choices of [`ScheduleSpec`] are below the epoch granularity; what
+/// matters here is static-vs-dynamic and whose blocking parameters each
+/// cluster runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DvfsStrategy {
+    /// Static-asymmetric with model-derived weights (§5.2/§5.3).
+    Sas { cache_aware: bool },
+    /// Dynamic chunk queue (§5.4).
+    Das { cache_aware: bool },
+}
+
+impl DvfsStrategy {
+    pub fn label(self) -> &'static str {
+        match self {
+            DvfsStrategy::Sas { cache_aware: false } => "SAS",
+            DvfsStrategy::Sas { cache_aware: true } => "CA-SAS",
+            DvfsStrategy::Das { cache_aware: false } => "DAS",
+            DvfsStrategy::Das { cache_aware: true } => "CA-DAS",
+        }
+    }
+
+    pub fn is_dynamic(self) -> bool {
+        matches!(self, DvfsStrategy::Das { .. })
+    }
+
+    pub fn cache_aware(self) -> bool {
+        match self {
+            DvfsStrategy::Sas { cache_aware } | DvfsStrategy::Das { cache_aware } => cache_aware,
+        }
+    }
+
+    /// The equivalent fixed-frequency schedule spec (weights from the
+    /// given model — i.e. from the operating point it was built at).
+    pub fn to_spec(self, model: &PerfModel) -> ScheduleSpec {
+        match self {
+            DvfsStrategy::Sas { cache_aware: false } => {
+                ScheduleSpec::sas_weighted(model.sas_weights())
+            }
+            DvfsStrategy::Sas { cache_aware: true } => {
+                ScheduleSpec::ca_sas_weighted(model.ca_sas_weights())
+            }
+            DvfsStrategy::Das { cache_aware: false } => ScheduleSpec::das(),
+            DvfsStrategy::Das { cache_aware: true } => ScheduleSpec::ca_das(),
+        }
+    }
+}
+
+/// Result of one DVFS replay. Deterministic; two runs of the same
+/// (schedule, strategy, retune, shape) compare equal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DvfsStats {
+    pub label: String,
+    pub shape: GemmShape,
+    /// Virtual makespan (seconds).
+    pub time_s: f64,
+    pub gflops: f64,
+    pub energy_j: f64,
+    pub gflops_per_watt: f64,
+    /// Fraction of the problem's flops each cluster executed (indexed
+    /// by cluster; flop-exact in the epoch replay, busy-time-derived on
+    /// the static DES fast path for dynamic strategies).
+    pub cluster_share: Vec<f64>,
+    /// Virtual instant each cluster retired its last flop.
+    pub cluster_finish_s: Vec<f64>,
+    /// OPP transitions that fired before the makespan.
+    pub transitions_applied: usize,
+    /// Weight-vector recomputations (online SAS retuning events).
+    pub retunes: usize,
+    /// Chunk grabs (dynamic strategies).
+    pub grabs: u64,
+}
+
+/// One epoch of the fluid replay: the descriptor (and therefore rates,
+/// powers and weights) in effect over `[t0, t1)`.
+struct Epoch {
+    t0: f64,
+    t1: f64,
+    /// DES-calibrated per-cluster throughput, flops/s.
+    rate: Vec<f64>,
+    /// Cluster power while computing / while polling at the join, W.
+    p_busy: Vec<f64>,
+    p_poll: Vec<f64>,
+    /// Normalized per-cluster shares at this operating point.
+    weights: Vec<f64>,
+}
+
+/// Simulate one GEMM under `strat` while the OPP `schedule` plays out,
+/// with `retune` governing the SAS weight vector at transitions.
+pub fn simulate_dvfs(
+    base: &SocSpec,
+    strat: DvfsStrategy,
+    shape: GemmShape,
+    schedule: &DvfsSchedule,
+    retune: Retune,
+) -> DvfsStats {
+    schedule.validate(base).expect("invalid DVFS schedule");
+    let label = format!("{} [{}]", strat.label(), retune.label());
+    let n = base.num_clusters();
+
+    if schedule.is_static() {
+        // Fixed operating point: the DES is exact — and bit-for-bit the
+        // pre-DVFS results when the point is nominal.
+        let model = PerfModel::new(schedule.soc_at(base, 0.0));
+        let spec = strat.to_spec(&model);
+        let st = sim::simulate(&model, &spec, shape);
+        let cluster_share = match strat {
+            DvfsStrategy::Sas { cache_aware } => {
+                model.auto_weights(cache_aware).normalized().as_slice().to_vec()
+            }
+            DvfsStrategy::Das { .. } => {
+                let mut busy = vec![0.0; n];
+                for c in model.soc.cluster_ids() {
+                    for gid in model.soc.core_ids(c) {
+                        busy[c.0] += st.activity[gid].busy_s;
+                    }
+                }
+                let total: f64 = busy.iter().sum();
+                busy.iter().map(|b| b / total).collect()
+            }
+        };
+        return DvfsStats {
+            label,
+            shape,
+            time_s: st.time_s,
+            gflops: st.gflops,
+            energy_j: st.energy.energy_j,
+            gflops_per_watt: st.gflops_per_watt,
+            cluster_share,
+            cluster_finish_s: vec![st.time_s; n],
+            transitions_applied: 0,
+            retunes: 0,
+            grabs: st.grabs,
+        };
+    }
+
+    // ---- epoch-fluid replay over the transition boundaries ----
+    let (epochs, bytes_per_flop) = build_epochs(base, strat, shape, schedule);
+    let f_total = shape.flops();
+    let (finish, executed, retunes, grabs) = if strat.is_dynamic() {
+        let (f, e, g) = run_das(base, strat, shape, &epochs);
+        (f, e, 0, g)
+    } else {
+        let (f, e, r) = run_sas(&epochs, f_total, retune);
+        (f, e, r, 0)
+    };
+
+    let makespan = finish.iter().cloned().fold(0.0, f64::max);
+    let energy_j = integrate_energy(&epochs, &finish, makespan)
+        + bytes_per_flop * f_total * cal::DRAM_NJ_PER_BYTE * 1e-9;
+    let transitions_applied = schedule
+        .transitions
+        .iter()
+        .filter(|tr| tr.t_s < makespan)
+        .count();
+    DvfsStats {
+        label,
+        shape,
+        time_s: makespan,
+        gflops: f_total / makespan / 1e9,
+        energy_j,
+        gflops_per_watt: f_total / energy_j / 1e9,
+        cluster_share: executed.iter().map(|e| e / f_total).collect(),
+        cluster_finish_s: finish,
+        transitions_applied,
+        retunes,
+        grabs,
+    }
+}
+
+/// Cut virtual time at every transition and compute each epoch's
+/// DES-calibrated per-cluster rates, rail powers and weight vector.
+fn build_epochs(
+    base: &SocSpec,
+    strat: DvfsStrategy,
+    shape: GemmShape,
+    schedule: &DvfsSchedule,
+) -> (Vec<Epoch>, f64) {
+    let mut times = vec![0.0];
+    times.extend(schedule.boundaries());
+    let mut epochs = Vec::with_capacity(times.len());
+    let mut bytes_per_flop = 0.0;
+    for (i, &t0) in times.iter().enumerate() {
+        let t1 = times.get(i + 1).copied().unwrap_or(f64::INFINITY);
+        let soc_t = schedule.soc_at(base, t0);
+        let model = PerfModel::new(soc_t);
+        let params = model.family_params(strat.cache_aware());
+        let analytic: Vec<f64> = model
+            .soc
+            .cluster_ids()
+            .map(|c| model.cluster_rate_gflops(c, &params[c.0], model.soc[c].num_cores))
+            .collect();
+        let total: f64 = analytic.iter().sum();
+        // One DES run of this epoch's fixed-point configuration pins
+        // the fluid aggregate to the engine's (packing, barriers,
+        // cross-cluster interference included) — the epoch replay can
+        // never be optimistic relative to a fixed-frequency DES run.
+        let joint = sim::simulate(&model, &strat.to_spec(&model), shape);
+        if i == 0 {
+            bytes_per_flop = joint.dram_bytes / joint.flops;
+        }
+        let eta = joint.gflops / total;
+        let pm = PowerModel::new(model.soc.clone());
+        let p_busy: Vec<f64> = model
+            .soc
+            .cluster_ids()
+            .map(|c| {
+                model.soc[c].tuning.p_cluster_idle_w
+                    + model.soc[c].num_cores as f64 * pm.core_increment_w(c, CoreState::Busy)
+            })
+            .collect();
+        let p_poll: Vec<f64> = model
+            .soc
+            .cluster_ids()
+            .map(|c| {
+                model.soc[c].tuning.p_cluster_idle_w
+                    + model.soc[c].num_cores as f64 * pm.core_increment_w(c, CoreState::Poll)
+            })
+            .collect();
+        epochs.push(Epoch {
+            t0,
+            t1,
+            rate: analytic.iter().map(|r| r * eta * 1e9).collect(),
+            p_busy,
+            p_poll,
+            weights: analytic.iter().map(|r| r / total).collect(),
+        });
+    }
+    (epochs, bytes_per_flop)
+}
+
+/// Static-asymmetric fluid drain: each cluster owns a share of the
+/// flops; at every epoch boundary the un-executed remainder is either
+/// repartitioned by the fresh weights (online) or left alone (boot).
+/// Returns (finish instants, executed flops, retune count).
+fn run_sas(epochs: &[Epoch], f_total: f64, retune: Retune) -> (Vec<f64>, Vec<f64>, usize) {
+    let n = epochs[0].rate.len();
+    let mut remaining: Vec<f64> = epochs[0].weights.iter().map(|w| w * f_total).collect();
+    let mut executed = vec![0.0; n];
+    let mut finish = vec![0.0; n];
+    let mut retunes = 0;
+    for (i, ep) in epochs.iter().enumerate() {
+        if i > 0 && retune == Retune::Online {
+            let pool: f64 = remaining.iter().sum();
+            if pool > 0.0 {
+                for c in 0..n {
+                    remaining[c] = pool * ep.weights[c];
+                }
+                retunes += 1;
+            }
+        }
+        let dt = ep.t1 - ep.t0;
+        let mut all_done = true;
+        for c in 0..n {
+            if remaining[c] <= 0.0 {
+                continue;
+            }
+            let need = remaining[c] / ep.rate[c];
+            if need <= dt {
+                finish[c] = ep.t0 + need;
+                executed[c] += remaining[c];
+                remaining[c] = 0.0;
+            } else {
+                let done = ep.rate[c] * dt;
+                executed[c] += done;
+                remaining[c] -= done;
+                all_done = false;
+            }
+        }
+        if all_done {
+            break;
+        }
+    }
+    (finish, executed, retunes)
+}
+
+/// Dynamic fluid drain (§5.4 one epoch-level up): clusters grab chunks
+/// of their own `mc` grain from the shared m-queue; a chunk's service
+/// time integrates the cluster's rate across epoch boundaries, so a
+/// transition firing mid-chunk is handled exactly. Returns (finish
+/// instants, executed flops, grabs).
+fn run_das(
+    base: &SocSpec,
+    strat: DvfsStrategy,
+    shape: GemmShape,
+    epochs: &[Epoch],
+) -> (Vec<f64>, Vec<f64>, u64) {
+    let n = base.num_clusters();
+    let model = PerfModel::new(base.clone());
+    let params = model.family_params(strat.cache_aware());
+    let grains: Vec<usize> = params.iter().map(|p| p.mc).collect();
+    let grab_s: Vec<f64> = base.clusters.iter().map(|c| c.tuning.grab_s).collect();
+
+    let mut next_m = 0usize;
+    let mut cs_free = 0.0f64;
+    let mut clock = vec![0.0f64; n];
+    let mut executed = vec![0.0f64; n];
+    let mut grabs = 0u64;
+    while next_m < shape.m {
+        // The cluster with the earliest clock grabs (ties: lowest id).
+        let mut idx = 0;
+        for c in 1..n {
+            if clock[c] < clock[idx] {
+                idx = c;
+            }
+        }
+        let t_work = clock[idx].max(cs_free) + grab_s[idx];
+        cs_free = t_work;
+        grabs += 1;
+        let take = grains[idx].min(shape.m - next_m);
+        next_m += take;
+        let flops = 2.0 * take as f64 * shape.n as f64 * shape.k as f64;
+        clock[idx] = advance(epochs, idx, t_work, flops);
+        executed[idx] += flops;
+    }
+    (clock, executed, grabs)
+}
+
+/// Completion instant of `flops` of work for cluster `c` starting at
+/// `start`, under the piecewise-constant epoch rates.
+fn advance(epochs: &[Epoch], c: usize, start: f64, flops: f64) -> f64 {
+    let mut t = start;
+    let mut rem = flops;
+    let mut i = epochs
+        .iter()
+        .position(|e| t < e.t1)
+        .unwrap_or(epochs.len() - 1);
+    loop {
+        let ep = &epochs[i];
+        let need = rem / ep.rate[c];
+        if t + need <= ep.t1 {
+            return t + need;
+        }
+        rem -= ep.rate[c] * (ep.t1 - t);
+        t = ep.t1;
+        i += 1;
+    }
+}
+
+/// Rail energy over the run: every cluster computes until its finish
+/// instant and polls at the join thereafter (§5.2.2), at the epoch's
+/// OPP-scaled powers; DRAM+GPU idle rails run for the whole makespan.
+fn integrate_energy(epochs: &[Epoch], finish: &[f64], makespan: f64) -> f64 {
+    let mut e = (cal::P_DRAM_IDLE + cal::P_GPU_IDLE) * makespan;
+    for ep in epochs {
+        let a = ep.t0;
+        let b = ep.t1.min(makespan);
+        if b <= a {
+            continue;
+        }
+        for c in 0..finish.len() {
+            let busy = (finish[c].min(b) - a).max(0.0);
+            let poll = (b - a) - busy;
+            e += ep.p_busy[c] * busy + ep.p_poll[c] * poll;
+        }
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dvfs::{DvfsSchedule, Governor, Ondemand, Performance, Powersave, Transition};
+    use crate::soc::{BIG, LITTLE};
+
+    fn soc() -> SocSpec {
+        SocSpec::exynos5422()
+    }
+
+    /// ISSUE acceptance criterion: under an ondemand-style schedule,
+    /// SAS with online retuning beats stale-boot-weights SAS.
+    #[test]
+    fn online_retuning_beats_stale_boot_weights() {
+        let s = soc();
+        let plan = Ondemand::new(0.5).plan(&s, 30.0);
+        let shape = GemmShape::square(2048);
+        let stale = simulate_dvfs(&s, DvfsStrategy::Sas { cache_aware: true }, shape, &plan, Retune::Boot);
+        let online =
+            simulate_dvfs(&s, DvfsStrategy::Sas { cache_aware: true }, shape, &plan, Retune::Online);
+        assert!(
+            online.gflops > stale.gflops * 1.01,
+            "online {} must beat stale {} GFLOPS",
+            online.gflops,
+            stale.gflops
+        );
+        assert!(online.time_s < stale.time_s);
+        assert!(online.retunes > 0, "online path must actually retune");
+        assert_eq!(stale.retunes, 0);
+        assert!(online.transitions_applied > 0);
+        // Both execute the whole problem.
+        for st in [&stale, &online] {
+            let sum: f64 = st.cluster_share.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "{}: shares {sum}", st.label);
+        }
+        // The stale run keeps the boot split; the online run shifts
+        // work toward the LITTLE cluster as its relative speed grows.
+        assert!(
+            online.cluster_share[1] > stale.cluster_share[1],
+            "online little share {} vs stale {}",
+            online.cluster_share[1],
+            stale.cluster_share[1]
+        );
+    }
+
+    /// ISSUE satellite: the dynamic queue drains every row even when an
+    /// OPP transition fires mid-simulation.
+    #[test]
+    fn das_drains_everything_across_mid_run_transitions() {
+        let s = soc();
+        // A deliberately mid-run transition: downclock the big cluster
+        // partway through, upclock the LITTLE.
+        let plan = DvfsSchedule::new(
+            vec![4, 0],
+            vec![
+                Transition { t_s: 0.3, cluster: BIG, opp: 1 },
+                Transition { t_s: 0.6, cluster: LITTLE, opp: 4 },
+            ],
+        );
+        // Large enough that both transitions fire mid-run (the boot
+        // configuration sustains ~10 GFLOPS, so r = 2048 runs ~1.7 s).
+        let shape = GemmShape::square(2048);
+        for strat in [
+            DvfsStrategy::Das { cache_aware: true },
+            DvfsStrategy::Das { cache_aware: false },
+        ] {
+            let st = simulate_dvfs(&s, strat, shape, &plan, Retune::Online);
+            let sum: f64 = st.cluster_share.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "{}: drained {sum} of the work", st.label);
+            assert!(st.grabs > 0);
+            assert!(st.time_s.is_finite() && st.time_s > 0.0);
+            assert_eq!(st.transitions_applied, 2, "{}", st.label);
+            assert!(st.cluster_share.iter().all(|&x| x > 0.0), "both clusters work");
+        }
+    }
+
+    /// ISSUE satellite: same schedule ⇒ identical timeline, twice.
+    #[test]
+    fn virtual_time_determinism() {
+        let s = soc();
+        let plan = Ondemand::new(0.25).plan(&s, 30.0);
+        let shape = GemmShape::square(1024);
+        for strat in [
+            DvfsStrategy::Sas { cache_aware: true },
+            DvfsStrategy::Das { cache_aware: true },
+        ] {
+            let a = simulate_dvfs(&s, strat, shape, &plan, Retune::Online);
+            let b = simulate_dvfs(&s, strat, shape, &plan, Retune::Online);
+            assert_eq!(a, b, "replay must be deterministic");
+        }
+    }
+
+    /// A pinned non-nominal schedule delegates to the DES on the
+    /// at-OPP descriptor — exactly.
+    #[test]
+    fn pinned_schedule_is_the_des_at_that_opp() {
+        let s = soc();
+        let plan = Powersave.plan(&s, 10.0);
+        let shape = GemmShape::square(1024);
+        let st = simulate_dvfs(&s, DvfsStrategy::Das { cache_aware: true }, shape, &plan, Retune::Boot);
+        let low = s.at_opp(BIG, 0).at_opp(LITTLE, 0);
+        let direct = sim::simulate(&PerfModel::new(low), &ScheduleSpec::ca_das(), shape);
+        assert_eq!(st.time_s, direct.time_s);
+        assert_eq!(st.gflops, direct.gflops);
+        assert_eq!(st.energy_j, direct.energy.energy_j);
+        assert_eq!(st.grabs, direct.grabs);
+        assert_eq!(st.transitions_applied, 0);
+    }
+
+    /// Downclocking must cost performance but buy efficiency — the two
+    /// ends of the Pareto frontier (arXiv:1507.05129).
+    #[test]
+    fn powersave_trades_speed_for_efficiency() {
+        let s = soc();
+        let shape = GemmShape::square(2048);
+        let strat = DvfsStrategy::Sas { cache_aware: true };
+        let fast = simulate_dvfs(&s, strat, shape, &Performance.plan(&s, 1.0), Retune::Online);
+        let slow = simulate_dvfs(&s, strat, shape, &Powersave.plan(&s, 1.0), Retune::Online);
+        assert!(fast.gflops > 1.5 * slow.gflops, "{} vs {}", fast.gflops, slow.gflops);
+        assert!(
+            slow.gflops_per_watt > 1.2 * fast.gflops_per_watt,
+            "{} vs {}",
+            slow.gflops_per_watt,
+            fast.gflops_per_watt
+        );
+    }
+
+    /// The epoch replay can never beat the fixed-top-frequency DES: the
+    /// calibration pins every epoch's aggregate to the engine's.
+    #[test]
+    fn ramp_is_never_optimistic() {
+        let s = soc();
+        let shape = GemmShape::square(1024);
+        let strat = DvfsStrategy::Sas { cache_aware: true };
+        let top = simulate_dvfs(&s, strat, shape, &Performance.plan(&s, 1.0), Retune::Online);
+        let ramp = simulate_dvfs(
+            &s,
+            strat,
+            shape,
+            &Ondemand::new(0.1).plan(&s, 10.0),
+            Retune::Online,
+        );
+        assert!(
+            ramp.gflops < top.gflops,
+            "ramp {} must stay below the pinned top {}",
+            ramp.gflops,
+            top.gflops
+        );
+    }
+
+    /// Transitions scheduled after the run ends are not "applied".
+    #[test]
+    fn late_transitions_do_not_count() {
+        let s = soc();
+        let plan = DvfsSchedule::new(
+            vec![4, 4],
+            vec![Transition { t_s: 1e6, cluster: BIG, opp: 0 }],
+        );
+        let st = simulate_dvfs(
+            &s,
+            DvfsStrategy::Sas { cache_aware: true },
+            GemmShape::square(512),
+            &plan,
+            Retune::Online,
+        );
+        assert_eq!(st.transitions_applied, 0);
+        assert_eq!(st.retunes, 0, "nothing left to retune at the late epoch");
+    }
+
+    /// The engine runs any topology: a tri-cluster ramp drains and
+    /// stays deterministic.
+    #[test]
+    fn tri_cluster_ramp_replays() {
+        let s = SocSpec::dynamiq_3c();
+        let plan = Ondemand::new(0.2).plan(&s, 10.0);
+        let shape = GemmShape::square(1024);
+        for strat in [
+            DvfsStrategy::Sas { cache_aware: true },
+            DvfsStrategy::Das { cache_aware: true },
+        ] {
+            let st = simulate_dvfs(&s, strat, shape, &plan, Retune::Online);
+            assert_eq!(st.cluster_share.len(), 3);
+            let sum: f64 = st.cluster_share.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "{}", st.label);
+            assert!(st.energy_j > 0.0 && st.gflops > 0.0);
+        }
+    }
+}

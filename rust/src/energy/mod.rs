@@ -339,6 +339,25 @@ mod tests {
         assert!((rep.gflops_per_watt(1e9) - expect).abs() < 1e-9);
     }
 
+    /// ISSUE 3: a descriptor derived at a lower operating point carries
+    /// `f·V²`-scaled rails, so the same activity integrates to much
+    /// less energy — the mechanism behind the DVFS Pareto frontier.
+    #[test]
+    fn opp_scaled_rails_integrate_lower_energy() {
+        let low = SocSpec::exynos5422().at_opp(BIG, 0).at_opp(LITTLE, 0);
+        let pm_low = PowerModel::new(low);
+        let pm_nom = PowerModel::exynos();
+        assert!(pm_low.baseline_w() < pm_nom.baseline_w());
+        let act = full_busy(&pm_low.soc, 0..8, 1.0);
+        let e_low = pm_low.integrate(1.0, &act, 0.0).energy_j;
+        let e_nom = pm_nom.integrate(1.0, &act, 0.0).energy_j;
+        assert!(e_low < 0.5 * e_nom, "f*V^2 scaling: {e_low} J vs {e_nom} J");
+        // The DRAM/GPU floors do not scale — only the cluster rails.
+        let rep = pm_low.integrate(1.0, &full_busy(&pm_low.soc, 0..0, 1.0), 0.0);
+        assert!((rep.energy_dram_j - 0.18).abs() < 1e-12);
+        assert!((rep.energy_gpu_j - 0.05).abs() < 1e-12);
+    }
+
     #[test]
     fn tri_cluster_has_three_rails() {
         let pm = PowerModel::new(SocSpec::dynamiq_3c());

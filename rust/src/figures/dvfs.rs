@@ -1,0 +1,185 @@
+//! DVFS perf/energy report (no paper counterpart — the ROADMAP
+//! "per-cluster DVFS schedules" item, after the energy follow-up
+//! arXiv:1507.05129 and the governor-interplay study arXiv:1509.02058).
+//!
+//! Three tables on the Exynos 5422 descriptor:
+//! 1. the **OPP Pareto frontier** — CA-SAS pinned at every joint ladder
+//!    rung: GFLOPS rises with the clock while GFLOPS/W falls with the
+//!    `f·V²` law, so the performance-optimal and energy-optimal
+//!    operating points differ (the acceptance criterion);
+//! 2. **online retuning vs stale boot weights** under an
+//!    `ondemand`-style ramp — the weight vector recomputed at every
+//!    transition must beat the §5.2 ratio knob configured once at boot;
+//! 3. **governor comparison** — performance/powersave/ondemand ends of
+//!    the frontier.
+
+use crate::blis::gemm::GemmShape;
+use crate::dvfs::sim::{simulate_dvfs, DvfsStats, DvfsStrategy, Retune};
+use crate::dvfs::{DvfsSchedule, Governor, Ondemand, Performance, Powersave};
+use crate::figures::{Assertion, FigureResult};
+use crate::soc::{SocSpec, BIG, LITTLE};
+use crate::util::table::Table;
+
+pub fn run(quick: bool) -> FigureResult {
+    let soc = SocSpec::exynos5422();
+    let r = if quick { 2048 } else { 4096 };
+    let period = if quick { 0.25 } else { 0.5 };
+    let shape = GemmShape::square(r);
+    let strat = DvfsStrategy::Sas { cache_aware: true };
+
+    // --- Table 1: the joint-rung OPP Pareto frontier. ---
+    let rungs = soc[BIG].opps.len();
+    let mut pareto = Table::new(
+        &format!("OPP Pareto — CA-SAS pinned at each joint ladder rung, r = {r}"),
+        &["opp", "A15 [GHz]", "A7 [GHz]", "GFLOPS", "energy [J]", "GFLOPS/W"],
+    );
+    let mut points: Vec<DvfsStats> = Vec::new();
+    for o in 0..rungs {
+        let plan = DvfsSchedule::pinned(&[o, o]);
+        let st = simulate_dvfs(&soc, strat, shape, &plan, Retune::Online);
+        pareto.push_row(vec![
+            o.to_string(),
+            format!("{:.1}", soc[BIG].opps.get(o).freq_ghz),
+            format!("{:.1}", soc[LITTLE].opps.get(o).freq_ghz),
+            format!("{:.2}", st.gflops),
+            format!("{:.1}", st.energy_j),
+            format!("{:.3}", st.gflops_per_watt),
+        ]);
+        points.push(st);
+    }
+    let argmax = |f: &dyn Fn(&DvfsStats) -> f64| -> usize {
+        (0..points.len())
+            .max_by(|&a, &b| f(&points[a]).partial_cmp(&f(&points[b])).unwrap())
+            .unwrap()
+    };
+    let perf_opt = argmax(&|st: &DvfsStats| st.gflops);
+    let energy_opt = argmax(&|st: &DvfsStats| st.gflops_per_watt);
+
+    // --- Table 2: online retuning vs stale boot weights. ---
+    let plan = Ondemand::new(period).plan(&soc, 1e3);
+    let stale = simulate_dvfs(&soc, strat, shape, &plan, Retune::Boot);
+    let online = simulate_dvfs(&soc, strat, shape, &plan, Retune::Online);
+    let mut retune = Table::new(
+        &format!("Online retuning vs stale boot weights — ondemand ramp, period {period} s, r = {r}"),
+        &["weights", "makespan [s]", "GFLOPS", "energy [J]", "GFLOPS/W", "retunes", "A7 share"],
+    );
+    for st in [&stale, &online] {
+        retune.push_row(vec![
+            st.label.clone(),
+            format!("{:.3}", st.time_s),
+            format!("{:.2}", st.gflops),
+            format!("{:.1}", st.energy_j),
+            format!("{:.3}", st.gflops_per_watt),
+            st.retunes.to_string(),
+            format!("{:.3}", st.cluster_share[1]),
+        ]);
+    }
+
+    // --- Table 3: governor comparison. ---
+    let governors: Vec<(&str, DvfsSchedule)> = vec![
+        ("performance", Performance.plan(&soc, 1e3)),
+        ("ondemand", plan.clone()),
+        ("powersave", Powersave.plan(&soc, 1e3)),
+    ];
+    let mut gov_table = Table::new(
+        &format!("Governors — CA-SAS with online retuning, r = {r}"),
+        &["governor", "makespan [s]", "GFLOPS", "energy [J]", "GFLOPS/W"],
+    );
+    let mut gov_stats = Vec::new();
+    for (name, p) in &governors {
+        let st = if *name == "ondemand" {
+            online.clone()
+        } else {
+            simulate_dvfs(&soc, strat, shape, p, Retune::Online)
+        };
+        gov_table.push_row(vec![
+            name.to_string(),
+            format!("{:.3}", st.time_s),
+            format!("{:.2}", st.gflops),
+            format!("{:.1}", st.energy_j),
+            format!("{:.3}", st.gflops_per_watt),
+        ]);
+        gov_stats.push(st);
+    }
+    let (perf, ond, save) = (&gov_stats[0], &gov_stats[1], &gov_stats[2]);
+
+    let assertions = vec![
+        Assertion::check(
+            "performance rises monotonically along the ladder",
+            points.windows(2).all(|w| w[1].gflops > w[0].gflops),
+            format!(
+                "GFLOPS by rung: {:?}",
+                points.iter().map(|p| p.gflops).collect::<Vec<_>>()
+            ),
+        ),
+        Assertion::check(
+            "the energy-optimal OPP differs from the performance-optimal one",
+            energy_opt != perf_opt,
+            format!("energy-opt rung {energy_opt}, perf-opt rung {perf_opt}"),
+        ),
+        Assertion::check(
+            "the efficiency spread is material (f*V^2 law)",
+            points[energy_opt].gflops_per_watt > 1.2 * points[perf_opt].gflops_per_watt,
+            format!(
+                "{:.3} GFLOPS/W at rung {energy_opt} vs {:.3} at rung {perf_opt}",
+                points[energy_opt].gflops_per_watt, points[perf_opt].gflops_per_watt
+            ),
+        ),
+        Assertion::check(
+            "online retuning beats stale boot weights under the ramp",
+            online.gflops > stale.gflops * 1.02,
+            format!("online {:.2} vs stale {:.2} GFLOPS", online.gflops, stale.gflops),
+        ),
+        Assertion::check(
+            "retuning shifts work toward the cluster that sped up",
+            online.cluster_share[1] > stale.cluster_share[1],
+            format!(
+                "A7 share {:.3} online vs {:.3} stale",
+                online.cluster_share[1], stale.cluster_share[1]
+            ),
+        ),
+        Assertion::check(
+            "the performance governor is the fastest",
+            perf.gflops > ond.gflops && ond.gflops > save.gflops,
+            format!(
+                "{:.2} (performance) > {:.2} (ondemand) > {:.2} (powersave)",
+                perf.gflops, ond.gflops, save.gflops
+            ),
+        ),
+        Assertion::check(
+            "powersave is the most energy-efficient governor",
+            save.gflops_per_watt > ond.gflops_per_watt
+                && save.gflops_per_watt > perf.gflops_per_watt,
+            format!(
+                "{:.3} (powersave) vs {:.3} (ondemand) vs {:.3} (performance) GFLOPS/W",
+                save.gflops_per_watt, ond.gflops_per_watt, perf.gflops_per_watt
+            ),
+        ),
+        Assertion::check(
+            "the ramp lands between the frontier's ends on efficiency",
+            ond.gflops_per_watt > perf.gflops_per_watt,
+            format!(
+                "ondemand {:.3} vs performance {:.3} GFLOPS/W",
+                ond.gflops_per_watt, perf.gflops_per_watt
+            ),
+        ),
+    ];
+
+    FigureResult {
+        id: "dvfs",
+        title: "DVFS operating points: perf/energy Pareto frontier and online weight retuning",
+        tables: vec![pareto, retune, gov_table],
+        assertions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn dvfs_report_passes_quick() {
+        let fig = super::run(true);
+        assert!(fig.passed(), "{}", fig.to_markdown());
+        assert_eq!(fig.tables.len(), 3);
+        assert_eq!(fig.id, "dvfs");
+    }
+}

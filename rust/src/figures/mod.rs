@@ -11,13 +11,15 @@
 //! qualitative claims the paper draws from that figure (who wins, where
 //! the crossover sits, by roughly what factor). `cargo test` runs all of
 //! them in quick mode; `amp-gemm figures` and `cargo bench` regenerate
-//! the full versions. DESIGN.md §6 indexes every experiment.
+//! the full versions. DESIGN.md §7 indexes every experiment.
 //!
-//! Beyond the paper: [`ablation`] covers the §6 future-work knobs and
+//! Beyond the paper: [`ablation`] covers the §6 future-work knobs,
 //! [`fleet`] is the multi-board throughput-scaling report
-//! (`amp-gemm fleet --report`).
+//! (`amp-gemm fleet --report`) and [`dvfs`] is the operating-point
+//! Pareto-frontier / online-retuning report (`amp-gemm dvfs --report`).
 
 pub mod ablation;
+pub mod dvfs;
 pub mod fig10;
 pub mod fleet;
 pub mod fig11;

@@ -93,8 +93,23 @@ impl Board {
 
     /// Build a sim board from a preset token (the `--boards` CLI
     /// vocabulary): `exynos5422`, `juno_r0`, `dynamiq_3c`, `pe_hybrid`
-    /// or `symmetric<N>`.
+    /// or `symmetric<N>` — optionally pinned at a DVFS governor's
+    /// operating point with an `@governor` suffix
+    /// (`exynos5422@powersave`), which is how fleets become
+    /// frequency-heterogeneous: same silicon, different rungs, and the
+    /// capacity planner ([`sim::boards_to_sustain`]) prices each
+    /// accordingly.
     pub fn from_preset(token: &str) -> Result<Board, String> {
+        if let Some((preset, gov)) = token.split_once('@') {
+            let board = Board::from_preset(preset)?;
+            let gov = crate::dvfs::parse_governor(gov)?;
+            // Pin the governor's t = 0 operating point (boards hold one
+            // rung per dispatch wave; time-varying board schedules go
+            // through `sim::simulate_fleet_dvfs`).
+            let plan = gov.plan(board.soc(), 0.0);
+            let soc = plan.soc_at(board.soc(), 0.0);
+            return Ok(Board::sim(token, soc));
+        }
         let soc = match token {
             "exynos5422" | "exynos" => SocSpec::exynos5422(),
             "juno_r0" | "juno" => SocSpec::juno_r0(),
@@ -298,6 +313,33 @@ mod tests {
         assert!(Board::from_preset("warp9").is_err());
         assert!(Board::from_preset("symmetricX").is_err());
         assert!(Board::from_preset("symmetric0").is_err());
+    }
+
+    /// ISSUE 3: `@governor` pins a board at a DVFS operating point —
+    /// the per-board frequency-heterogeneity knob.
+    #[test]
+    fn governor_pinned_boards() {
+        let nominal = Board::from_preset("exynos5422").unwrap();
+        let slow = Board::from_preset("exynos5422@powersave").unwrap();
+        let fast = Board::from_preset("exynos5422@performance").unwrap();
+        assert_eq!(slow.name, "exynos5422@powersave");
+        assert_eq!(slow.soc().clusters[0].core.freq_ghz, 0.8);
+        assert_eq!(slow.soc().clusters[1].core.freq_ghz, 0.5);
+        // performance == nominal bit-for-bit (the no-op pin).
+        assert_eq!(fast.soc(), nominal.soc());
+        assert!(
+            slow.throughput_gflops() < 0.6 * nominal.throughput_gflops(),
+            "powersave board {} vs nominal {}",
+            slow.throughput_gflops(),
+            nominal.throughput_gflops()
+        );
+        // A frequency-heterogeneous fleet of identical silicon gets
+        // throughput-proportional weights.
+        let f = Fleet::parse("exynos5422,exynos5422@powersave").unwrap();
+        let w = f.weights();
+        assert!(w.as_slice()[0] > 1.5 * w.as_slice()[1], "{:?}", w.as_slice());
+        assert!(Board::from_preset("exynos5422@turbo").is_err());
+        assert!(Board::from_preset("warp9@powersave").is_err());
     }
 
     #[test]

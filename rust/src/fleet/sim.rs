@@ -17,9 +17,11 @@
 //! sustained rate reaches the target.
 
 use crate::blis::gemm::GemmShape;
+use crate::dvfs::DvfsSchedule;
 use crate::energy::PowerModel;
 use crate::fleet::{Fleet, FleetStrategy, DISPATCH_S};
 use crate::sim::simulate;
+use std::collections::HashMap;
 
 /// One board's share of a simulated fleet run.
 #[derive(Debug, Clone)]
@@ -164,6 +166,182 @@ pub fn simulate_fleet(
     FleetStats {
         label: format!(
             "{} [{}]",
+            strategy.label(),
+            fleet
+                .boards
+                .iter()
+                .map(|b| b.name.as_str())
+                .collect::<Vec<_>>()
+                .join("+")
+        ),
+        shape,
+        batch,
+        makespan_s: makespan,
+        gflops: total_flops / makespan / 1e9,
+        throughput_rps: batch as f64 / makespan,
+        energy_j,
+        gflops_per_watt: total_flops / energy_j / 1e9,
+        boards,
+    }
+}
+
+/// Per-board DVFS replay of one batch: each board runs under its own
+/// OPP [`DvfsSchedule`] (`plans[b]`, validated against that board's
+/// topology), and an item started at virtual instant `t` executes at
+/// the operating point in effect at `t` — boards reconfigure *between*
+/// requests, the item-granular quantization a coordinator that pins one
+/// outstanding batch per board actually exhibits. When every plan is
+/// static and pins the rung each board's descriptor is already derived
+/// at, this delegates to [`simulate_fleet`] — the fleet DVFS path is a
+/// provable no-op at fixed frequency, for plain and `@governor` boards
+/// alike.
+pub fn simulate_fleet_dvfs(
+    fleet: &Fleet,
+    strategy: FleetStrategy,
+    shape: GemmShape,
+    batch: usize,
+    plans: &[DvfsSchedule],
+) -> FleetStats {
+    assert!(batch > 0, "empty batch");
+    let n = fleet.num_boards();
+    assert_eq!(plans.len(), n, "one DVFS schedule per board");
+    for (b, plan) in plans.iter().enumerate() {
+        plan.validate(fleet.boards[b].soc())
+            .expect("invalid board DVFS schedule");
+    }
+    // A static plan pinning every cluster at the rung the board's
+    // descriptor is *already* derived at (the nominal rung for plain
+    // presets, the pinned rung for `@governor` boards) is exactly the
+    // fixed-frequency simulator — delegate, so the DVFS path is a
+    // provable no-op there.
+    if plans.iter().zip(&fleet.boards).all(|(p, b)| {
+        p.is_static()
+            && b.soc()
+                .cluster_ids()
+                .all(|c| p.initial[c.0] == b.soc()[c].opps.current_idx())
+    }) {
+        return simulate_fleet(fleet, strategy, shape, batch);
+    }
+
+    // One DES run per (board, OPP vector) the schedules visit; identical
+    // boards running identical plans share one cache slot (the
+    // homogeneous-fleet dedup `simulate_fleet` also does).
+    let canon: Vec<usize> = (0..n)
+        .map(|b| {
+            (0..b)
+                .find(|&p| {
+                    fleet.boards[p].soc() == fleet.boards[b].soc()
+                        && fleet.boards[p].sched == fleet.boards[b].sched
+                        && plans[p] == plans[b]
+                })
+                .unwrap_or(b)
+        })
+        .collect();
+    let mut cache: Vec<HashMap<Vec<usize>, crate::sim::RunStats>> = vec![HashMap::new(); n];
+    let item_stats = |cache: &mut [HashMap<Vec<usize>, crate::sim::RunStats>],
+                      b: usize,
+                      t: f64|
+     -> crate::sim::RunStats {
+        let soc = fleet.boards[b].soc();
+        let key: Vec<usize> = soc.cluster_ids().map(|c| plans[b].opp_at(c, t)).collect();
+        cache[canon[b]]
+            .entry(key)
+            .or_insert_with(|| {
+                let model = crate::model::PerfModel::new(plans[b].soc_at(soc, t));
+                simulate(&model, &fleet.boards[b].sched, shape)
+            })
+            .clone()
+    };
+    // Baseline (idle-rail) power of board `b` at instant `t` — priced
+    // at the operating point in effect, not the boot point.
+    let baseline_at = |b: usize, t: f64| -> f64 {
+        PowerModel::new(plans[b].soc_at(fleet.boards[b].soc(), t)).baseline_w()
+    };
+
+    let mut items = vec![0usize; n];
+    let mut grabs = vec![0u64; n];
+    let mut clock = vec![0.0f64; n];
+    let mut busy = vec![0.0f64; n];
+    let mut energy = vec![0.0f64; n];
+    let run_items = |cache: &mut [HashMap<Vec<usize>, crate::sim::RunStats>],
+                     clock: &mut [f64],
+                     busy: &mut [f64],
+                     energy: &mut [f64],
+                     b: usize,
+                     count: usize| {
+        energy[b] += baseline_at(b, clock[b]) * DISPATCH_S;
+        clock[b] += DISPATCH_S;
+        for _ in 0..count {
+            let st = item_stats(cache, b, clock[b]);
+            clock[b] += st.time_s;
+            busy[b] += st.time_s;
+            energy[b] += st.energy.energy_j;
+        }
+    };
+
+    match strategy {
+        FleetStrategy::Sss | FleetStrategy::Sas => {
+            for (b, &share) in fleet.static_shards(batch, strategy).iter().enumerate() {
+                if share > 0 {
+                    items[b] = share;
+                    grabs[b] = 1;
+                    run_items(&mut cache, &mut clock, &mut busy, &mut energy, b, share);
+                }
+            }
+        }
+        FleetStrategy::Das => {
+            let grains = fleet.grains();
+            let mut next = 0usize;
+            while next < batch {
+                let mut idx = 0;
+                for b in 1..n {
+                    if clock[b] < clock[idx] {
+                        idx = b;
+                    }
+                }
+                let take = grains[idx].min(batch - next);
+                next += take;
+                items[idx] += take;
+                grabs[idx] += 1;
+                run_items(&mut cache, &mut clock, &mut busy, &mut energy, idx, take);
+            }
+        }
+    }
+
+    let makespan = clock.iter().cloned().fold(0.0, f64::max);
+    // Idle tail from each board's finish to the fleet makespan, priced
+    // piecewise at the operating point in effect over the tail.
+    let tail_energy = |b: usize| -> f64 {
+        let (t0, t1) = (clock[b], makespan);
+        if t1 <= t0 {
+            return 0.0;
+        }
+        let mut cuts = vec![t0];
+        cuts.extend(plans[b].boundaries().into_iter().filter(|&t| t > t0 && t < t1));
+        cuts.push(t1);
+        cuts.windows(2).map(|w| baseline_at(b, w[0]) * (w[1] - w[0])).sum()
+    };
+    let flops_item = shape.flops();
+    let boards: Vec<BoardStats> = (0..n)
+        .map(|b| BoardStats {
+            name: fleet.boards[b].name.clone(),
+            items: items[b],
+            grabs: grabs[b],
+            busy_s: busy[b],
+            finish_s: clock[b],
+            gflops: if clock[b] > 0.0 {
+                items[b] as f64 * flops_item / clock[b] / 1e9
+            } else {
+                0.0
+            },
+            energy_j: energy[b] + tail_energy(b),
+        })
+        .collect();
+    let total_flops = batch as f64 * flops_item;
+    let energy_j: f64 = boards.iter().map(|b| b.energy_j).sum();
+    FleetStats {
+        label: format!(
+            "{} +DVFS [{}]",
             strategy.label(),
             fleet
                 .boards
@@ -365,6 +543,133 @@ mod tests {
         let n = boards_to_sustain(&ex, shape, 16, 2.5 * rps1, 8).unwrap();
         assert!(n >= 3, "2.5× one board's rate needs ≥ 3 boards, got {n}");
         assert_eq!(boards_to_sustain(&ex, shape, 16, 1e9, 2), None);
+    }
+
+    /// ISSUE 3: nominal per-board schedules make the fleet DVFS path a
+    /// provable no-op (delegates to the fixed-frequency simulator).
+    #[test]
+    fn fleet_dvfs_nominal_is_a_noop() {
+        use crate::dvfs::DvfsSchedule;
+        let fleet = hetero();
+        let shape = GemmShape::square(512);
+        let plans: Vec<DvfsSchedule> = fleet
+            .boards
+            .iter()
+            .map(|b| DvfsSchedule::nominal(b.soc()))
+            .collect();
+        let a = simulate_fleet(&fleet, FleetStrategy::Das, shape, 16);
+        let b = simulate_fleet_dvfs(&fleet, FleetStrategy::Das, shape, 16, &plans);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.label, b.label, "no-op path keeps the static label");
+    }
+
+    /// ISSUE 3 satellite: fleet-DAS drains every item even when a
+    /// board's OPP transition fires mid-batch — and the dynamic queue
+    /// shifts items away from the board that slowed down.
+    #[test]
+    fn fleet_das_drains_across_mid_batch_transitions() {
+        use crate::dvfs::{DvfsSchedule, Transition};
+        use crate::soc::{ClusterId, SocSpec};
+        let ex = Board::from_preset("exynos5422").unwrap();
+        let fleet = Fleet::homogeneous(2, &ex);
+        let shape = GemmShape::square(512);
+        let batch = 40;
+        // Board 0 drops both clusters to the ladder bottom partway
+        // through the batch; board 1 stays nominal.
+        let item_s = simulate(ex.model(), &ex.sched, shape).time_s;
+        let nominal = DvfsSchedule::nominal(ex.soc());
+        let mid = 0.5 * batch as f64 / 2.0 * item_s;
+        let throttled = DvfsSchedule::new(
+            SocSpec::exynos5422()
+                .clusters
+                .iter()
+                .map(|c| c.opps.nominal_idx())
+                .collect(),
+            vec![
+                Transition { t_s: mid, cluster: ClusterId(0), opp: 0 },
+                Transition { t_s: mid, cluster: ClusterId(1), opp: 0 },
+            ],
+        );
+        let plans = vec![throttled, nominal];
+        let st = simulate_fleet_dvfs(&fleet, FleetStrategy::Das, shape, batch, &plans);
+        assert_eq!(st.items_completed(), batch, "{:?}", st.boards);
+        assert!(
+            st.boards[1].items > st.boards[0].items,
+            "the un-throttled board must absorb the imbalance: {:?}",
+            st.boards.iter().map(|b| b.items).collect::<Vec<_>>()
+        );
+        // Deterministic replay, same schedule ⇒ same timeline.
+        let again = simulate_fleet_dvfs(&fleet, FleetStrategy::Das, shape, batch, &plans);
+        assert_eq!(st.makespan_s, again.makespan_s);
+        assert_eq!(st.energy_j, again.energy_j);
+        assert_eq!(
+            st.boards.iter().map(|b| b.items).collect::<Vec<_>>(),
+            again.boards.iter().map(|b| b.items).collect::<Vec<_>>()
+        );
+        // Static sharding drains too, just slower than the queue.
+        let sss = simulate_fleet_dvfs(&fleet, FleetStrategy::Sss, shape, batch, &plans);
+        assert_eq!(sss.items_completed(), batch);
+        assert!(sss.makespan_s >= st.makespan_s);
+    }
+
+    /// An `@governor`-pinned board under a plan holding its own rung is
+    /// the fixed-frequency simulator (delegation), while a plan moving
+    /// it to the ladder top genuinely up-clocks it — `at_opp` derivation
+    /// is absolute, never compounding.
+    #[test]
+    fn fleet_dvfs_respects_board_pinned_rungs() {
+        use crate::dvfs::DvfsSchedule;
+        let slow = Board::from_preset("exynos5422@powersave").unwrap();
+        let fleet = Fleet::homogeneous(2, &slow);
+        let shape = GemmShape::square(512);
+        // Plans pinning the boards' own (bottom) rung: exact no-op.
+        let hold = vec![DvfsSchedule::pinned(&[0, 0]); 2];
+        let a = simulate_fleet(&fleet, FleetStrategy::Das, shape, 8);
+        let b = simulate_fleet_dvfs(&fleet, FleetStrategy::Das, shape, 8, &hold);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.energy_j, b.energy_j);
+        // Plans pinning the nominal rung up-clock the powersave boards.
+        let up = vec![DvfsSchedule::nominal(slow.soc()); 2];
+        let fast = simulate_fleet_dvfs(&fleet, FleetStrategy::Das, shape, 8, &up);
+        assert!(
+            fast.makespan_s < 0.7 * a.makespan_s,
+            "up-clocked {:.3}s vs powersave {:.3}s",
+            fast.makespan_s,
+            a.makespan_s
+        );
+        assert_eq!(fast.items_completed(), 8);
+    }
+
+    /// ISSUE 3: per-board DVFS heterogeneity in the capacity planner —
+    /// a powersave-pinned board sustains less, so the planner buys more
+    /// of them for the same target.
+    #[test]
+    fn capacity_planner_prices_dvfs_heterogeneity() {
+        let nominal = Board::from_preset("exynos5422").unwrap();
+        let slow = Board::from_preset("exynos5422@powersave").unwrap();
+        let shape = GemmShape::square(1024);
+        let rps1 = simulate_fleet(&Fleet::homogeneous(1, &nominal), FleetStrategy::Das, shape, 16)
+            .throughput_rps;
+        let target = 1.5 * rps1;
+        let need_nominal = boards_to_sustain(&nominal, shape, 16, target, 8).unwrap();
+        let need_slow = boards_to_sustain(&slow, shape, 16, target, 8).unwrap();
+        assert!(
+            need_slow > need_nominal,
+            "powersave boards must cost more: {need_slow} vs {need_nominal}"
+        );
+        // And a mixed-frequency fleet lands between the two.
+        let mixed = Fleet::parse("exynos5422,exynos5422@powersave").unwrap();
+        let st = simulate_fleet(&mixed, FleetStrategy::Das, shape, 32);
+        let fast2 = simulate_fleet(
+            &Fleet::homogeneous(2, &nominal),
+            FleetStrategy::Das,
+            shape,
+            32,
+        );
+        let slow2 = simulate_fleet(&Fleet::homogeneous(2, &slow), FleetStrategy::Das, shape, 32);
+        assert!(st.throughput_rps < fast2.throughput_rps);
+        assert!(st.throughput_rps > slow2.throughput_rps);
     }
 
     #[test]

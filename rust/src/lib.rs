@@ -11,10 +11,18 @@
 //! Layer map:
 //! * [`soc`] — the **topology descriptor**: `SocSpec` holds a
 //!   `Vec<ClusterSpec>`, each cluster carrying its core count,
-//!   frequency, cache geometry, flops/cycle, tuned BLIS parameters and
-//!   calibrated model constants (`ClusterTuning`). Cores are addressed
+//!   frequency, DVFS operating-point ladder (`OppTable`), cache
+//!   geometry, flops/cycle, tuned BLIS parameters and calibrated model
+//!   constants (`ClusterTuning`). Cores are addressed
 //!   `(ClusterId, core_idx)`; presets cover the paper's Exynos 5422, an
 //!   ARMv8 Juno, a tri-cluster DynamIQ-style SoC and a symmetric SMP;
+//! * [`dvfs`] — the **frequency axis**: `Governor` policies
+//!   (performance/powersave/ondemand) plan `DvfsSchedule`s of timed OPP
+//!   transitions in virtual time; the replay engine recomputes the
+//!   per-cluster throughputs and the `sched::Weights` vector at every
+//!   transition, so SAS repartitions *online* instead of keeping stale
+//!   boot-time weights (the first place the weight vector is a function
+//!   of time);
 //! * [`cache`], [`model`], [`energy`], [`sim`] — the simulated AMP
 //!   substrate (cache simulator, calibrated per-cluster performance and
 //!   power models, discrete-event engine);
@@ -33,9 +41,11 @@
 //!   (cluster : SoC :: board : fleet), with a deterministic virtual-time
 //!   multi-board simulator for capacity planning;
 //! * [`search`], [`figures`] — the per-cluster empirical (mc, kc)
-//!   search and the regeneration harness for every evaluation figure in
-//!   the paper (plus the §6-roadmap ablations, topology sweeps and the
-//!   fleet-throughput-scaling report);
+//!   search (now swept per OPP, with persisted per-point presets) and
+//!   the regeneration harness for every evaluation figure in the paper
+//!   (plus the §6-roadmap ablations, topology sweeps, the
+//!   fleet-throughput-scaling report and the DVFS perf/energy
+//!   Pareto-frontier report);
 //! * [`util`] — deterministic RNG, stats, tables, mini-prop, benchkit,
 //!   CLI.
 //!
@@ -46,6 +56,7 @@
 pub mod blis;
 pub mod cache;
 pub mod coordinator;
+pub mod dvfs;
 pub mod energy;
 pub mod figures;
 pub mod fleet;

@@ -12,6 +12,10 @@
 //!   virtual-time sweep: per-board and fleet-aggregate GFLOPS/energy
 //!   under fleet-SSS/SAS/DAS (`--report` regenerates the full
 //!   fleet-scaling report);
+//! * `dvfs     [--governor G] [--size R] [--sched S]` — replay a DVFS
+//!   schedule, comparing online weight retuning against stale boot
+//!   weights (`--report` regenerates the OPP Pareto report;
+//!   `--ladder` prints the operating-point tables);
 //! * `soc` — show the simulated SoC descriptor.
 
 use amp_gemm::blis::gemm::GemmShape;
@@ -46,6 +50,7 @@ fn main() {
         "calibrate" => cmd_calibrate(),
         "serve" => cmd_serve(&args),
         "fleet" => cmd_fleet(&args),
+        "dvfs" => cmd_dvfs(&args),
         "soc" => cmd_soc(),
         _ => {
             print_help();
@@ -63,7 +68,7 @@ fn print_help() {
         "amp-gemm — architecture-aware GEMM scheduling on asymmetric multicores
 (reproduction of Catalán et al. 2015; see DESIGN.md)
 
-USAGE: amp-gemm <figures|search|gemm|calibrate|serve|fleet|soc> [options]
+USAGE: amp-gemm <figures|search|gemm|calibrate|serve|fleet|dvfs|soc> [options]
 
   figures   [--fig N] [--quick] [--out results]   regenerate paper figures
   ablation  [--out results]                        §6 future-work ablations
@@ -73,6 +78,9 @@ USAGE: amp-gemm <figures|search|gemm|calibrate|serve|fleet|soc> [options]
   serve     [--addr 127.0.0.1:7070] [--artifacts artifacts]
   fleet     [--boards exynos5422,juno_r0] [--size R] [--batch N] [--sched sss|sas|das]
   fleet     --report [--quick] [--out results]      fixed-fleet scaling report
+  dvfs      [--governor performance|powersave|ondemand[:ms]] [--size R]
+            [--sched sas|casas|das|cadas] [--ladder] [--tune-opps]
+  dvfs      --report [--quick] [--out results]      OPP Pareto + retuning report
   soc                                              simulated SoC descriptor"
     );
 }
@@ -250,7 +258,7 @@ fn cmd_gemm(args: &Args) -> Result<(), String> {
 fn cmd_calibrate() -> Result<(), String> {
     let model = PerfModel::exynos();
     use amp_gemm::blis::params::BlisParams;
-    println!("model-vs-paper calibration anchors (see DESIGN.md §5):\n");
+    println!("model-vs-paper calibration anchors (see DESIGN.md §6):\n");
     println!("| anchor | paper | model |");
     println!("|---|---|---|");
     let a15 = BlisParams::a15_opt();
@@ -362,6 +370,105 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
         }
         println!("{}", table.to_markdown());
     }
+    Ok(())
+}
+
+/// Replay a DVFS schedule on the Exynos descriptor: print the OPP
+/// ladders, then compare SAS with online weight retuning against the
+/// stale boot-time split under the chosen governor. `--report`
+/// regenerates the full Pareto/retuning report instead; `--tune-opps`
+/// runs the §3.3 search at every ladder rung and persists the per-point
+/// presets.
+fn cmd_dvfs(args: &Args) -> Result<(), String> {
+    use amp_gemm::dvfs::sim::{simulate_dvfs, DvfsStrategy, Retune};
+    use amp_gemm::dvfs::{parse_governor, Governor};
+
+    if args.flag("report") {
+        let fig = figures::dvfs::run(args.flag("quick"));
+        println!("{}", fig.to_markdown());
+        let out = Path::new(args.get_or("out", "results"));
+        let paths = fig.write_csvs(out).map_err(|e| e.to_string())?;
+        println!("wrote {} CSVs under {}", paths.len(), out.display());
+        if !fig.passed() {
+            return Err("dvfs report assertions failed".into());
+        }
+        return Ok(());
+    }
+
+    let soc = SocSpec::exynos5422();
+    if args.flag("ladder") {
+        for id in soc.cluster_ids() {
+            let cl = &soc[id];
+            let mut t = Table::new(
+                &format!("{} OPP ladder (nominal = rung {})", cl.name, cl.opps.nominal_idx()),
+                &["opp", "GHz", "V", "power scale"],
+            );
+            for o in 0..cl.opps.len() {
+                let p = cl.opps.get(o);
+                t.push_row(vec![
+                    o.to_string(),
+                    format!("{:.2}", p.freq_ghz),
+                    format!("{:.4}", p.volt_v),
+                    format!("{:.3}", cl.opps.power_scale(o)),
+                ]);
+            }
+            println!("{}", t.to_markdown());
+        }
+        return Ok(());
+    }
+
+    if args.flag("tune-opps") {
+        let out = Path::new(args.get_or("out", "results"));
+        for id in soc.cluster_ids() {
+            let store = search::OppPresetStore::tune(&soc, id);
+            let path = out.join(format!("opp_presets_{id}.tsv"));
+            store.save(&path).map_err(|e| e.to_string())?;
+            println!(
+                "{}: tuned {} rungs, best (mc, kc) = ({}, {}) at nominal — saved {}",
+                soc[id].name,
+                store.presets.len(),
+                store.presets.last().unwrap().mc,
+                store.presets.last().unwrap().kc,
+                path.display()
+            );
+        }
+        return Ok(());
+    }
+
+    let gov = parse_governor(args.get_or("governor", "ondemand"))?;
+    let r = args.usize_or("size", 2048)?;
+    let shape = GemmShape::square(r);
+    let strat = match args.get_or("sched", "casas") {
+        "sas" => DvfsStrategy::Sas { cache_aware: false },
+        "casas" | "ca-sas" => DvfsStrategy::Sas { cache_aware: true },
+        "das" => DvfsStrategy::Das { cache_aware: false },
+        "cadas" | "ca-das" => DvfsStrategy::Das { cache_aware: true },
+        other => return Err(format!("unknown --sched '{other}' (sas|casas|das|cadas)")),
+    };
+    let plan = gov.plan(&soc, 1e3);
+    println!(
+        "{} governor on {}: {} transitions planned\n",
+        gov.name(),
+        soc.name,
+        plan.transitions.len()
+    );
+    let mut t = Table::new(
+        &format!("{} under the {} governor, r = {r}", strat.label(), gov.name()),
+        &["weights", "makespan [s]", "GFLOPS", "energy [J]", "GFLOPS/W", "retunes", "transitions"],
+    );
+    for retune in [Retune::Boot, Retune::Online] {
+        let st = simulate_dvfs(&soc, strat, shape, &plan, retune);
+        t.push_row(vec![
+            retune.label().to_string(),
+            format!("{:.3}", st.time_s),
+            format!("{:.2}", st.gflops),
+            format!("{:.1}", st.energy_j),
+            format!("{:.3}", st.gflops_per_watt),
+            st.retunes.to_string(),
+            st.transitions_applied.to_string(),
+        ]);
+    }
+    println!("{}", t.to_markdown());
     Ok(())
 }
 

@@ -183,6 +183,28 @@ impl PerfModel {
         Weights::from_slice(&self.cluster_rates(&params))
     }
 
+    /// Weight vector of a strategy family by its cache-awareness — the
+    /// single entry point the DVFS retuner recomputes at every OPP
+    /// transition (`crate::dvfs`).
+    pub fn auto_weights(&self, cache_aware: bool) -> Weights {
+        if cache_aware {
+            self.ca_sas_weights()
+        } else {
+            self.sas_weights()
+        }
+    }
+
+    /// Per-cluster blocking parameters of a strategy family: own tuned
+    /// optima when cache-aware, the lead cluster's everywhere otherwise
+    /// (§4's architecture-oblivious convention).
+    pub fn family_params(&self, cache_aware: bool) -> Vec<BlisParams> {
+        if cache_aware {
+            self.soc.clusters.iter().map(|c| c.tuned).collect()
+        } else {
+            vec![self.soc[self.soc.lead()].tuned; self.soc.num_clusters()]
+        }
+    }
+
     /// The two-cluster per-cluster throughput ratio under a
     /// configuration — what the paper's SAS `ratio` knob should be set
     /// to (§5.2). `p_little` is the configuration the slow cluster

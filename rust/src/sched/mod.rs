@@ -105,6 +105,21 @@ impl Weights {
         self.n == 0
     }
 
+    /// Normalized copy: the same proportions, summing to 1 — the
+    /// *share* form the DVFS retuner reports and the property tests
+    /// check (sum ≈ 1, monotone in each way's throughput).
+    pub fn normalized(&self) -> Weights {
+        let total: f64 = self.as_slice().iter().sum();
+        let ws: Vec<f64> = self.as_slice().iter().map(|w| w / total).collect();
+        Weights::from_slice(&ws)
+    }
+
+    /// Way `i`'s fraction of the total weight.
+    pub fn share(&self, i: usize) -> f64 {
+        assert!(i < self.n, "way {i} out of range ({} ways)", self.n);
+        self.w[i] / self.as_slice().iter().sum::<f64>()
+    }
+
     /// The two-cluster ratio this weight vector encodes, if it does.
     pub fn as_ratio(&self) -> Option<f64> {
         if self.n == 2 && self.w[1] == 1.0 {
@@ -593,6 +608,20 @@ mod tests {
     #[should_panic(expected = "positive weight")]
     fn all_zero_weight_vector_rejected() {
         Weights::from_slice(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn normalized_weights_sum_to_one() {
+        let w = Weights::from_slice(&[6.0, 3.0, 1.0]).normalized();
+        let sum: f64 = w.as_slice().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12, "sum {sum}");
+        assert!((w.share(0) - 0.6).abs() < 1e-12);
+        assert!((w.share(2) - 0.1).abs() < 1e-12);
+        // share() agrees on the raw and the normalized vector.
+        let raw = Weights::from_slice(&[6.0, 3.0, 1.0]);
+        for i in 0..3 {
+            assert!((raw.share(i) - w.as_slice()[i]).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 use crate::blis::params::BlisParams;
 use crate::model::PerfModel;
-use crate::soc::ClusterId;
+use crate::soc::{ClusterId, SocSpec};
 use crate::util::table::Table;
 
 /// One sampled configuration.
@@ -97,6 +97,126 @@ pub fn two_phase_search(model: &PerfModel, cluster: ClusterId) -> (SearchResult,
     let coarse = coarse_search(model, cluster);
     let fine = fine_search(model, cluster, coarse.best);
     (coarse, fine)
+}
+
+/// One OPP ladder rung's tuned optimum: the §3.3 search repeated at a
+/// DVFS operating point (`crate::dvfs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OppPreset {
+    /// Ladder rung index.
+    pub opp: usize,
+    pub freq_ghz: f64,
+    pub mc: usize,
+    pub kc: usize,
+    pub gflops: f64,
+}
+
+/// The full two-phase search run at every rung of one cluster's OPP
+/// ladder — the data-driven path to per-operating-point presets. (In
+/// the analytical model the cache terms are frequency-independent, so
+/// the *location* of the optimum is stable across rungs while the rate
+/// scales with the clock; the sweep both verifies that and records the
+/// per-rung rates the capacity planner and Pareto report consume.)
+pub fn tune_opp_ladder(soc: &SocSpec, cluster: ClusterId) -> Vec<OppPreset> {
+    (0..soc[cluster].opps.len())
+        .map(|opp| {
+            let model = PerfModel::new(soc.at_opp(cluster, opp));
+            let (_, fine) = two_phase_search(&model, cluster);
+            OppPreset {
+                opp,
+                freq_ghz: soc[cluster].opps.get(opp).freq_ghz,
+                mc: fine.best.mc,
+                kc: fine.best.kc,
+                gflops: fine.best.gflops,
+            }
+        })
+        .collect()
+}
+
+/// Persisted per-OPP tuned presets for one cluster of one SoC: a small
+/// line-oriented format (`# soc<TAB>cluster` header, then
+/// `opp<TAB>freq<TAB>mc<TAB>kc<TAB>gflops` rows) that round-trips
+/// exactly through f64's shortest-repr `Display`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OppPresetStore {
+    pub soc: String,
+    pub cluster: ClusterId,
+    pub presets: Vec<OppPreset>,
+}
+
+impl OppPresetStore {
+    /// Run the per-OPP sweep for `cluster` and package it for saving.
+    pub fn tune(soc: &SocSpec, cluster: ClusterId) -> OppPresetStore {
+        OppPresetStore {
+            soc: soc.name.clone(),
+            cluster,
+            presets: tune_opp_ladder(soc, cluster),
+        }
+    }
+
+    pub fn to_text(&self) -> String {
+        let mut out = format!("# {}\t{}\n", self.soc, self.cluster.0);
+        for p in &self.presets {
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{}\n",
+                p.opp, p.freq_ghz, p.mc, p.kc, p.gflops
+            ));
+        }
+        out
+    }
+
+    pub fn parse_text(s: &str) -> Result<OppPresetStore, String> {
+        let mut lines = s.lines();
+        let header = lines.next().ok_or("empty preset store")?;
+        let header = header
+            .strip_prefix("# ")
+            .ok_or_else(|| format!("bad header '{header}'"))?;
+        let (soc, cluster) = header
+            .split_once('\t')
+            .ok_or_else(|| format!("bad header '{header}'"))?;
+        let cluster: usize = cluster
+            .parse()
+            .map_err(|_| format!("bad cluster index '{cluster}'"))?;
+        let mut presets = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 5 {
+                return Err(format!("bad preset row '{line}'"));
+            }
+            presets.push(OppPreset {
+                opp: f[0].parse().map_err(|_| format!("bad opp '{}'", f[0]))?,
+                freq_ghz: f[1].parse().map_err(|_| format!("bad freq '{}'", f[1]))?,
+                mc: f[2].parse().map_err(|_| format!("bad mc '{}'", f[2]))?,
+                kc: f[3].parse().map_err(|_| format!("bad kc '{}'", f[3]))?,
+                gflops: f[4].parse().map_err(|_| format!("bad gflops '{}'", f[4]))?,
+            });
+        }
+        Ok(OppPresetStore {
+            soc: soc.to_string(),
+            cluster: ClusterId(cluster),
+            presets,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_text())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<OppPresetStore, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        OppPresetStore::parse_text(&text)
+    }
+
+    /// The tuned preset at one rung.
+    pub fn at(&self, opp: usize) -> Option<&OppPreset> {
+        self.presets.iter().find(|p| p.opp == opp)
+    }
 }
 
 /// §5.3 constrained refit: kc pinned (shared `Bc`), sweep mc only.
@@ -196,6 +316,59 @@ mod tests {
         for &(mc, kc) in &[(80usize, 352usize), (152, 952), (32, 952)] {
             assert!(rate(&m, BIG, mc, kc) > rate(&m, LITTLE, mc, kc));
         }
+    }
+
+    /// ISSUE 3: the §3.3 search swept per OPP — rates scale with the
+    /// clock while the (mc, kc) optimum stays cache-bound, and the
+    /// nominal rung reproduces the plain search exactly.
+    #[test]
+    fn opp_ladder_tuning_tracks_frequency() {
+        let soc = SocSpec::exynos5422();
+        let ladder = tune_opp_ladder(&soc, BIG);
+        assert_eq!(ladder.len(), 5);
+        for w in ladder.windows(2) {
+            assert!(w[1].gflops > w[0].gflops, "rate must grow with the clock: {ladder:?}");
+            assert!(w[1].freq_ghz > w[0].freq_ghz);
+        }
+        // The nominal rung is the plain fixed-frequency search.
+        let (_, fine) = two_phase_search(&model(), BIG);
+        let top = ladder.last().unwrap();
+        assert_eq!((top.mc, top.kc), (fine.best.mc, fine.best.kc));
+        assert_eq!(top.gflops, fine.best.gflops);
+        // The cache-bound optimum does not move with the clock.
+        for p in &ladder {
+            assert_eq!((p.mc, p.kc), (top.mc, top.kc), "optimum drifted: {p:?}");
+        }
+        // Rate at half clock ≈ half rate (frequency-linear model).
+        let rel = ladder[0].gflops / top.gflops;
+        assert!((rel - 0.5).abs() < 1e-9, "0.8/1.6 GHz ratio {rel}");
+    }
+
+    /// ISSUE 3: per-OPP presets persist and reload exactly.
+    #[test]
+    fn opp_preset_store_round_trips() {
+        let soc = SocSpec::exynos5422();
+        let store = OppPresetStore::tune(&soc, LITTLE);
+        assert_eq!(store.presets.len(), 5);
+        let text = store.to_text();
+        let back = OppPresetStore::parse_text(&text).unwrap();
+        assert_eq!(back, store, "text round-trip must be exact");
+        assert_eq!(back.at(0).unwrap().freq_ghz, 0.5);
+        assert!(back.at(9).is_none());
+
+        let dir = std::env::temp_dir().join("amp_gemm_opp_presets");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("exynos_little.tsv");
+        store.save(&path).unwrap();
+        let loaded = OppPresetStore::load(&path).unwrap();
+        assert_eq!(loaded, store, "file round-trip must be exact");
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // Malformed inputs error cleanly.
+        assert!(OppPresetStore::parse_text("").is_err());
+        assert!(OppPresetStore::parse_text("junk\n1\t2\t3\t4\t5\n").is_err());
+        assert!(OppPresetStore::parse_text("# soc\t0\n1\t2\t3\n").is_err());
+        assert!(OppPresetStore::load(std::path::Path::new("/nonexistent/x")).is_err());
     }
 
     /// The same machinery tunes every cluster of a tri-cluster topology:

@@ -96,6 +96,140 @@ impl CacheGeometry {
     }
 }
 
+/// One DVFS operating point of a cluster: a frequency/voltage pair from
+/// the cluster's OPP ladder (the `cpufreq` table of the real SoC).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatingPoint {
+    pub freq_ghz: f64,
+    pub volt_v: f64,
+}
+
+impl OperatingPoint {
+    pub fn new(freq_ghz: f64, volt_v: f64) -> Self {
+        assert!(
+            freq_ghz.is_finite() && freq_ghz > 0.0 && volt_v.is_finite() && volt_v > 0.0,
+            "operating point must have positive finite frequency and voltage \
+             ({freq_ghz} GHz, {volt_v} V)"
+        );
+        OperatingPoint { freq_ghz, volt_v }
+    }
+}
+
+/// A cluster's DVFS ladder: operating points in strictly ascending
+/// frequency (and non-decreasing voltage) order. The *last* entry is the
+/// nominal point every preset boots at — for the paper presets it is
+/// exactly the §3.2 frequency, so a schedule pinned at the nominal OPP
+/// is bit-for-bit the original descriptor.
+///
+/// Dynamic power at point `i` scales as `(f/f_nom)·(V/V_nom)²` relative
+/// to nominal ([`OppTable::power_scale`]) — the CMOS `f·V²` law the
+/// energy follow-up (arXiv:1507.05129) exploits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OppTable {
+    points: Vec<OperatingPoint>,
+    /// Rung the owning descriptor is currently derived at. Presets boot
+    /// at the nominal rung; [`SocSpec::at_opp`] moves it, so derivation
+    /// is *absolute* — re-deriving an already-derived descriptor never
+    /// compounds the rail scaling.
+    cur: usize,
+}
+
+impl OppTable {
+    pub fn new(points: Vec<OperatingPoint>) -> Self {
+        assert!(!points.is_empty(), "an OPP ladder needs at least one point");
+        for w in points.windows(2) {
+            assert!(
+                w[0].freq_ghz < w[1].freq_ghz && w[0].volt_v <= w[1].volt_v,
+                "OPP ladder must ascend in frequency and voltage: {points:?}"
+            );
+        }
+        let cur = points.len() - 1;
+        OppTable { points, cur }
+    }
+
+    /// Degenerate single-point ladder (no DVFS): the nominal frequency
+    /// at a reference 1.0 V.
+    pub fn single(freq_ghz: f64) -> Self {
+        OppTable::new(vec![OperatingPoint::new(freq_ghz, 1.0)])
+    }
+
+    /// Exynos 5422 Cortex-A15 ladder, capped at the paper's §3.2
+    /// operating point (1.6 GHz): the `cpufreq` steps the testbed's
+    /// governor walks, with the A15 rail's voltage schedule.
+    pub fn a15() -> Self {
+        OppTable::new(vec![
+            OperatingPoint::new(0.8, 0.9000),
+            OperatingPoint::new(1.0, 0.9500),
+            OperatingPoint::new(1.2, 1.0125),
+            OperatingPoint::new(1.4, 1.0875),
+            OperatingPoint::new(1.6, 1.1625),
+        ])
+    }
+
+    /// Exynos 5422 Cortex-A7 ladder, topping out at the paper's 1.4 GHz.
+    pub fn a7() -> Self {
+        OppTable::new(vec![
+            OperatingPoint::new(0.5, 0.9000),
+            OperatingPoint::new(0.8, 0.9500),
+            OperatingPoint::new(1.0, 1.0000),
+            OperatingPoint::new(1.2, 1.0500),
+            OperatingPoint::new(1.4, 1.1375),
+        ])
+    }
+
+    /// Generic five-step ladder for non-Exynos presets: 50/65/80/90/100 %
+    /// of the nominal frequency with a typical voltage schedule.
+    pub fn generic(nominal_ghz: f64) -> Self {
+        assert!(nominal_ghz.is_finite() && nominal_ghz > 0.0);
+        let steps = [(0.50, 0.90), (0.65, 0.95), (0.80, 1.00), (0.90, 1.06), (1.00, 1.13)];
+        OppTable::new(
+            steps
+                .iter()
+                .map(|&(f, v)| OperatingPoint::new(nominal_ghz * f, v))
+                .collect(),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn get(&self, idx: usize) -> OperatingPoint {
+        self.points[idx]
+    }
+
+    pub fn points(&self) -> &[OperatingPoint] {
+        &self.points
+    }
+
+    /// Index of the nominal (boot) point: the ladder top.
+    pub fn nominal_idx(&self) -> usize {
+        self.points.len() - 1
+    }
+
+    /// Rung the owning descriptor is currently derived at (the nominal
+    /// rung for freshly built presets; moved by [`SocSpec::at_opp`]).
+    pub fn current_idx(&self) -> usize {
+        self.cur
+    }
+
+    pub fn nominal(&self) -> OperatingPoint {
+        self.points[self.nominal_idx()]
+    }
+
+    /// Dynamic-power scale of point `idx` relative to nominal:
+    /// `(f/f_nom)·(V/V_nom)²`. Exactly 1.0 at the nominal point.
+    pub fn power_scale(&self, idx: usize) -> f64 {
+        let p = self.points[idx];
+        let nom = self.nominal();
+        (p.freq_ghz / nom.freq_ghz) * (p.volt_v / nom.volt_v) * (p.volt_v / nom.volt_v)
+    }
+}
+
 /// Per-core microarchitectural description.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CoreSpec {
@@ -207,10 +341,13 @@ impl ClusterTuning {
     }
 
     /// Contention multiplier for `active` busy cores (1-based; clamped
-    /// beyond the table for ablation SoCs with wider clusters).
+    /// beyond the table for ablation SoCs with wider clusters). The
+    /// degenerate input `active = 0` clamps to the single-core entry
+    /// instead of panicking: callers probing an idle cluster (e.g. the
+    /// DVFS weight retuner over arbitrary topologies) get a neutral
+    /// factor, never a NaN weight.
     pub fn scale(&self, active: usize) -> f64 {
-        assert!(active >= 1, "need at least one active core");
-        self.cluster_scale[(active - 1).min(self.cluster_scale.len() - 1)]
+        self.cluster_scale[active.saturating_sub(1).min(self.cluster_scale.len() - 1)]
     }
 
     /// Micro-kernel register-blocking factor (§6 future work: per-core
@@ -247,6 +384,11 @@ pub struct ClusterSpec {
     /// Exynos clusters; derived analogously for other presets).
     pub tuned: BlisParams,
     pub tuning: ClusterTuning,
+    /// DVFS operating-point ladder of the cluster's rail. The nominal
+    /// (last) point is the preset's boot frequency; [`SocSpec::at_opp`]
+    /// derives the descriptor at any other rung, and `crate::dvfs`
+    /// schedules walks over it.
+    pub opps: OppTable,
 }
 
 impl ClusterSpec {
@@ -310,6 +452,7 @@ impl SocSpec {
                     l2: CacheGeometry::new(2 * 1024 * 1024, 16, 64),
                     tuned: BlisParams::a15_opt(),
                     tuning: ClusterTuning::a15(),
+                    opps: OppTable::a15(),
                 },
                 ClusterSpec {
                     name: "Cortex-A7".to_string(),
@@ -323,6 +466,7 @@ impl SocSpec {
                     l2: CacheGeometry::new(512 * 1024, 8, 64),
                     tuned: BlisParams::a7_opt(),
                     tuning: ClusterTuning::a7(),
+                    opps: OppTable::a7(),
                 },
             ],
             l3: None,
@@ -352,12 +496,63 @@ impl SocSpec {
             .with_cluster_freq(LITTLE, little_ghz)
     }
 
-    /// DVFS knob for any cluster of any topology.
-    pub fn with_cluster_freq(mut self, id: ClusterId, ghz: f64) -> SocSpec {
-        assert!(ghz > 0.0);
+    /// DVFS knob for any cluster of any topology (free-form frequency;
+    /// the ladder-quantized variant is [`SocSpec::at_opp`]).
+    pub fn with_cluster_freq(self, id: ClusterId, ghz: f64) -> SocSpec {
+        self.try_with_cluster_freq(id, ghz)
+            .expect("invalid DVFS frequency")
+    }
+
+    /// Fallible [`SocSpec::with_cluster_freq`]: zero, negative or
+    /// non-finite frequencies return a clean `Err` instead of panicking
+    /// (they would otherwise poison every downstream rate and weight
+    /// with zeros or NaNs).
+    pub fn try_with_cluster_freq(mut self, id: ClusterId, ghz: f64) -> Result<SocSpec, String> {
+        if id.0 >= self.clusters.len() {
+            return Err(format!(
+                "cluster {id} does not exist on '{}' ({} clusters)",
+                self.name,
+                self.clusters.len()
+            ));
+        }
+        if !ghz.is_finite() || ghz <= 0.0 {
+            return Err(format!(
+                "cluster frequency must be positive and finite, got {ghz} GHz"
+            ));
+        }
         self.name = format!("{} [{} @ {ghz} GHz]", self.name, id);
         self.clusters[id.0].core.freq_ghz = ghz;
-        self
+        Ok(self)
+    }
+
+    /// The descriptor at one cluster's ladder point `opp`: frequency set
+    /// to the point's, and the cluster's power rails scaled by the CMOS
+    /// dynamic-power factor `(f/f_nom)·(V/V_nom)²`. Derivation is
+    /// *absolute* — the ladder remembers the rung the descriptor is
+    /// currently at ([`OppTable::current_idx`]), so re-deriving an
+    /// already-derived descriptor moves it to the requested rung instead
+    /// of compounding the rail scaling, and deriving the current rung is
+    /// exactly the identity (ratio 1.0): at the nominal rung of a
+    /// freshly built preset the result is bit-for-bit the input — the
+    /// no-op guarantee the DVFS regression tests pin. The name is kept:
+    /// an operating point is a state of the same silicon.
+    pub fn at_opp(&self, id: ClusterId, opp: usize) -> SocSpec {
+        let ladder = &self.clusters[id.0].opps;
+        assert!(
+            opp < ladder.len(),
+            "OPP index {opp} out of range: {} has {} ladder points",
+            self.clusters[id.0].name,
+            ladder.len()
+        );
+        let point = ladder.get(opp);
+        let ratio = ladder.power_scale(opp) / ladder.power_scale(ladder.current_idx());
+        let mut soc = self.clone();
+        let cl = &mut soc.clusters[id.0];
+        cl.core.freq_ghz = point.freq_ghz;
+        cl.tuning.p_core_active_w *= ratio;
+        cl.tuning.p_cluster_idle_w *= ratio;
+        cl.opps.cur = opp;
+        soc
     }
 
     /// ARM Juno r0 development board — the paper's §6 "port to a 64-bit
@@ -380,6 +575,7 @@ impl SocSpec {
                     l2: CacheGeometry::new(2 * 1024 * 1024, 16, 64),
                     tuned: BlisParams::a15_opt(),
                     tuning: ClusterTuning::a15(),
+                    opps: OppTable::generic(1.1),
                 },
                 ClusterSpec {
                     name: "Cortex-A53".to_string(),
@@ -393,6 +589,7 @@ impl SocSpec {
                     l2: CacheGeometry::new(1024 * 1024, 16, 64),
                     tuned: BlisParams::a7_opt(),
                     tuning: ClusterTuning::a7(),
+                    opps: OppTable::generic(0.85),
                 },
             ],
             l3: None,
@@ -422,6 +619,7 @@ impl SocSpec {
                     l2: CacheGeometry::new(2 * 1024 * 1024, 16, 64),
                     tuned: BlisParams::a15_opt(),
                     tuning: ClusterTuning::a15(),
+                    opps: OppTable::generic(2.2),
                 },
                 ClusterSpec {
                     name: "mid".to_string(),
@@ -437,6 +635,7 @@ impl SocSpec {
                     l2: CacheGeometry::new(1024 * 1024, 16, 64),
                     tuned: BlisParams::new(4096, 704, 92, 4, 4),
                     tuning: ClusterTuning::mid(),
+                    opps: OppTable::generic(1.8),
                 },
                 ClusterSpec {
                     name: "LITTLE".to_string(),
@@ -450,6 +649,7 @@ impl SocSpec {
                     l2: CacheGeometry::new(512 * 1024, 8, 64),
                     tuned: BlisParams::a7_opt(),
                     tuning: ClusterTuning::a7(),
+                    opps: OppTable::generic(1.4),
                 },
             ],
             l3: None,
@@ -478,6 +678,7 @@ impl SocSpec {
                 l2: CacheGeometry::new(2 * 1024 * 1024, 16, 64),
                 tuned: BlisParams::a15_opt(),
                 tuning: ClusterTuning::a15(),
+                opps: OppTable::generic(1.6),
             }],
             l3: None,
             dram_bw_gbs: 3.2,
@@ -507,6 +708,7 @@ impl SocSpec {
                     l2: CacheGeometry::new(2 * 1024 * 1024, 16, 64),
                     tuned: BlisParams::a15_opt(),
                     tuning: ClusterTuning::a15(),
+                    opps: OppTable::generic(2.4),
                 },
                 ClusterSpec {
                     name: "E-core".to_string(),
@@ -522,6 +724,7 @@ impl SocSpec {
                     l2: CacheGeometry::new(512 * 1024, 8, 64),
                     tuned: BlisParams::a7_opt(),
                     tuning: ClusterTuning::mid(),
+                    opps: OppTable::generic(1.8),
                 },
             ],
             l3: Some(CacheGeometry::new(12 * 1024 * 1024, 12, 64)),
@@ -728,9 +931,126 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn zero_active_cores_rejected() {
-        ClusterTuning::a15().scale(0);
+    fn zero_active_cores_clamps_instead_of_panicking() {
+        // ISSUE 3 satellite: the degenerate input must not panic or
+        // produce a NaN-poisoning factor.
+        for t in [ClusterTuning::a15(), ClusterTuning::mid(), ClusterTuning::a7()] {
+            let s = t.scale(0);
+            assert_eq!(s, t.scale(1), "0 active clamps to the single-core entry");
+            assert!(s.is_finite() && s > 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_frequency_rejected_cleanly() {
+        for bad in [0.0, -1.4, f64::NAN, f64::INFINITY] {
+            let err = SocSpec::exynos5422()
+                .try_with_cluster_freq(BIG, bad)
+                .unwrap_err();
+            assert!(err.contains("positive and finite"), "{err}");
+        }
+        let err = SocSpec::exynos5422()
+            .try_with_cluster_freq(ClusterId(9), 1.0)
+            .unwrap_err();
+        assert!(err.contains("does not exist"), "{err}");
+    }
+
+    #[test]
+    fn exynos_opp_ladders_match_the_paper_operating_point() {
+        let soc = SocSpec::exynos5422();
+        assert_eq!(soc[BIG].opps.len(), 5);
+        assert_eq!(soc[LITTLE].opps.len(), 5);
+        // The nominal (boot) rung is exactly the §3.2 frequency.
+        assert_eq!(soc[BIG].opps.nominal().freq_ghz, 1.6);
+        assert_eq!(soc[LITTLE].opps.nominal().freq_ghz, 1.4);
+        assert_eq!(soc[BIG].opps.nominal_idx(), 4);
+        // Every preset's ladder tops out at its boot frequency.
+        for preset in [
+            SocSpec::exynos5422(),
+            SocSpec::juno_r0(),
+            SocSpec::dynamiq_3c(),
+            SocSpec::symmetric(4),
+            SocSpec::pe_hybrid(),
+        ] {
+            for id in preset.cluster_ids() {
+                let cl = &preset[id];
+                assert_eq!(
+                    cl.opps.nominal().freq_ghz,
+                    cl.core.freq_ghz,
+                    "{}/{} ladder nominal != boot frequency",
+                    preset.name,
+                    cl.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn at_opp_nominal_is_bit_for_bit_identity() {
+        let soc = SocSpec::exynos5422();
+        let same = soc.at_opp(BIG, 4).at_opp(LITTLE, 4);
+        assert_eq!(same, soc);
+    }
+
+    #[test]
+    fn at_opp_scales_frequency_and_rails() {
+        let soc = SocSpec::exynos5422();
+        let down = soc.at_opp(BIG, 0);
+        assert_eq!(down[BIG].core.freq_ghz, 0.8);
+        // f·V² law: 0.5 × (0.9/1.1625)² ≈ 0.2997.
+        let s = soc[BIG].opps.power_scale(0);
+        assert!((0.25..0.35).contains(&s), "power scale {s}");
+        assert!((down[BIG].tuning.p_core_active_w - 1.80 * s).abs() < 1e-12);
+        assert!((down[BIG].tuning.p_cluster_idle_w - 0.60 * s).abs() < 1e-12);
+        // The LITTLE cluster is untouched.
+        assert_eq!(down[LITTLE], soc[LITTLE]);
+        // Ladder rungs are strictly slower below nominal.
+        for o in 0..soc[BIG].opps.len() - 1 {
+            assert!(soc[BIG].opps.get(o).freq_ghz < soc[BIG].opps.get(o + 1).freq_ghz);
+            assert!(soc[BIG].opps.power_scale(o) < soc[BIG].opps.power_scale(o + 1));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn at_opp_rejects_bad_index() {
+        SocSpec::exynos5422().at_opp(BIG, 9);
+    }
+
+    #[test]
+    fn at_opp_is_absolute_not_compounding() {
+        // Re-deriving an already-derived descriptor moves it, never
+        // stacks the rail scaling (the `@governor` board + schedule
+        // replay path exercises exactly this chain).
+        let soc = SocSpec::exynos5422();
+        let down = soc.at_opp(BIG, 0);
+        assert_eq!(down[BIG].opps.current_idx(), 0);
+        // Idempotent, exactly.
+        assert_eq!(down.at_opp(BIG, 0), down);
+        // Deriving back up restores the nominal frequency and rails
+        // (rails up to fp rounding of the ratio round-trip).
+        let back = down.at_opp(BIG, 4);
+        assert_eq!(back[BIG].core.freq_ghz, 1.6);
+        assert_eq!(back[BIG].opps.current_idx(), 4);
+        assert!((back[BIG].tuning.p_core_active_w - 1.80).abs() < 1e-12);
+        assert!((back[BIG].tuning.p_cluster_idle_w - 0.60).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascend")]
+    fn descending_opp_ladder_rejected() {
+        OppTable::new(vec![
+            OperatingPoint::new(1.6, 1.1),
+            OperatingPoint::new(0.8, 0.9),
+        ]);
+    }
+
+    #[test]
+    fn single_point_ladder_degenerates() {
+        let t = OppTable::single(1.6);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.nominal_idx(), 0);
+        assert_eq!(t.power_scale(0), 1.0);
     }
 
     #[test]

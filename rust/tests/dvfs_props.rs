@@ -1,0 +1,238 @@
+//! Property tests for the DVFS weight retuner (ISSUE 3 satellite,
+//! proptest-style over 1–6 clusters and random OPP ladders):
+//!
+//! * retuned `sched::Weights` always sum to 1 and are finite/positive;
+//! * they are monotone in a cluster's frequency — raising a cluster's
+//!   GHz never lowers its share;
+//! * they degenerate to the static weights when the schedule has a
+//!   single OPP;
+//! * the degenerate inputs (`scale(0)`, zero/NaN frequency) are clamped
+//!   or rejected cleanly instead of panicking or poisoning the weights.
+
+use amp_gemm::dvfs::{DvfsSchedule, Governor, Ondemand, Transition};
+use amp_gemm::model::PerfModel;
+use amp_gemm::soc::{ClusterId, ClusterSpec, OperatingPoint, OppTable, SocSpec};
+use amp_gemm::util::prop;
+use amp_gemm::util::rng::Rng;
+
+/// A random 1–6-cluster topology: donor clusters from the presets with
+/// randomized frequencies and randomized (strictly ascending) OPP
+/// ladders of 1–6 rungs, the nominal rung pinned to the boot frequency.
+fn random_soc(r: &mut Rng) -> SocSpec {
+    let exynos = SocSpec::exynos5422();
+    let tri = SocSpec::dynamiq_3c();
+    let donors: Vec<ClusterSpec> = vec![
+        exynos.clusters[0].clone(),
+        exynos.clusters[1].clone(),
+        tri.clusters[1].clone(),
+    ];
+    let n = r.gen_range(1, 7);
+    let clusters: Vec<ClusterSpec> = (0..n)
+        .map(|i| {
+            let mut cl = donors[r.gen_range(0, donors.len())].clone();
+            cl.name = format!("c{i}-{}", cl.name);
+            cl.core.freq_ghz = r.gen_f64(0.4, 2.5);
+            let rungs = r.gen_range(1, 7);
+            // Strictly ascending frequency fractions ending at 1.0, with
+            // a non-decreasing voltage schedule.
+            let lo = r.gen_f64(0.3, 0.8);
+            let points: Vec<OperatingPoint> = (0..rungs)
+                .map(|k| {
+                    // The nominal (last) rung must be *exactly* the boot
+                    // frequency — `frac = lo + (1-lo)` is not exactly 1.0
+                    // in floating point.
+                    let frac = if k + 1 == rungs {
+                        1.0
+                    } else {
+                        lo + (1.0 - lo) * k as f64 / (rungs - 1).max(1) as f64
+                    };
+                    let volt = 0.9 + 0.25 * k as f64 / (rungs - 1).max(1) as f64;
+                    OperatingPoint::new(cl.core.freq_ghz * frac, volt)
+                })
+                .collect();
+            cl.opps = if rungs == 1 {
+                OppTable::single(cl.core.freq_ghz)
+            } else {
+                OppTable::new(points)
+            };
+            cl
+        })
+        .collect();
+    SocSpec {
+        name: format!("random-{n}c"),
+        clusters,
+        l3: None,
+        dram_bw_gbs: 3.2,
+        dram_total_bytes: 2 * 1024 * 1024 * 1024,
+    }
+}
+
+/// Retuned weights always sum to 1 and stay finite and positive, at
+/// random instants of random governor plans over random topologies.
+#[test]
+fn prop_retuned_weights_sum_to_one() {
+    prop::check_default(
+        |r| {
+            let soc = random_soc(r);
+            let period = r.gen_f64(0.05, 1.0);
+            let t = r.gen_f64(0.0, 8.0);
+            let cache_aware = r.gen_bool(0.5);
+            (soc, period, t, cache_aware)
+        },
+        |(soc, period, t, cache_aware)| {
+            let plan = Ondemand::new(*period).plan(soc, 1e3);
+            plan.validate(soc)?;
+            let w = plan.weights_at(soc, *t, *cache_aware);
+            if w.len() != soc.num_clusters() {
+                return Err(format!("arity {} vs {}", w.len(), soc.num_clusters()));
+            }
+            let sum: f64 = w.as_slice().iter().sum();
+            if (sum - 1.0).abs() > 1e-9 {
+                return Err(format!("weights sum to {sum}"));
+            }
+            if !w.as_slice().iter().all(|x| x.is_finite() && *x > 0.0) {
+                return Err(format!("non-finite or non-positive share: {:?}", w.as_slice()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Monotonicity: raising one cluster's frequency never lowers its
+/// share of the retuned weight vector.
+#[test]
+fn prop_share_is_monotone_in_frequency() {
+    prop::check_default(
+        |r| {
+            let soc = random_soc(r);
+            let c = r.gen_range(0, soc.num_clusters());
+            let boost = 1.0 + r.gen_f64(0.05, 1.5);
+            let cache_aware = r.gen_bool(0.5);
+            (soc, c, boost, cache_aware)
+        },
+        |(soc, c, boost, cache_aware)| {
+            let id = ClusterId(*c);
+            let before = PerfModel::new(soc.clone())
+                .auto_weights(*cache_aware)
+                .normalized()
+                .share(*c);
+            let faster = soc
+                .clone()
+                .try_with_cluster_freq(id, soc[id].core.freq_ghz * boost)?;
+            let after = PerfModel::new(faster)
+                .auto_weights(*cache_aware)
+                .normalized()
+                .share(*c);
+            if after + 1e-12 < before {
+                return Err(format!(
+                    "share fell from {before} to {after} when c{c} sped up x{boost}"
+                ));
+            }
+            // On a multi-cluster SoC the share must strictly grow.
+            if soc.num_clusters() > 1 && after <= before {
+                return Err(format!("share did not grow: {before} -> {after}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Degeneracy: a single-OPP (static) schedule retunes to exactly the
+/// static weight vector, at any instant.
+#[test]
+fn prop_static_schedule_degenerates_to_static_weights() {
+    prop::check_default(
+        |r| {
+            let soc = random_soc(r);
+            let t = r.gen_f64(0.0, 100.0);
+            let cache_aware = r.gen_bool(0.5);
+            (soc, t, cache_aware)
+        },
+        |(soc, t, cache_aware)| {
+            let plan = DvfsSchedule::nominal(soc);
+            if !plan.is_static() {
+                return Err("nominal plan must be static".into());
+            }
+            let retuned = plan.weights_at(soc, *t, *cache_aware);
+            let statics = PerfModel::new(soc.clone())
+                .auto_weights(*cache_aware)
+                .normalized();
+            if retuned.as_slice() != statics.as_slice() {
+                return Err(format!(
+                    "retuned {:?} != static {:?}",
+                    retuned.as_slice(),
+                    statics.as_slice()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Degenerate inputs stay clean: `scale(0)` clamps, zero/negative/NaN
+/// frequencies are rejected with an `Err`, and the weights derived from
+/// any valid random descriptor never contain NaN.
+#[test]
+fn prop_degenerate_inputs_never_poison_weights() {
+    prop::check_default(
+        |r| {
+            let soc = random_soc(r);
+            let c = r.gen_range(0, soc.num_clusters());
+            (soc, c)
+        },
+        |(soc, c)| {
+            let id = ClusterId(*c);
+            // scale(0) clamps to the single-core entry.
+            let s0 = soc[id].tuning.scale(0);
+            if !(s0.is_finite() && s0 > 0.0 && s0 == soc[id].tuning.scale(1)) {
+                return Err(format!("scale(0) = {s0} must clamp to scale(1)"));
+            }
+            // Invalid frequencies error instead of panicking.
+            for bad in [0.0, -2.0, f64::NAN, f64::INFINITY] {
+                if soc.clone().try_with_cluster_freq(id, bad).is_ok() {
+                    return Err(format!("frequency {bad} must be rejected"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A hand-written multi-rung schedule over a random topology keeps
+/// `opp_at` consistent with its transition list (the replay contract
+/// the engine and the fleet simulator both rely on).
+#[test]
+fn prop_opp_at_replays_transitions_in_order() {
+    prop::check_default(
+        |r| {
+            let soc = random_soc(r);
+            let c = r.gen_range(0, soc.num_clusters());
+            let t1 = r.gen_f64(0.1, 2.0);
+            let dt = r.gen_f64(0.1, 2.0);
+            (soc, c, t1, dt)
+        },
+        |(soc, c, t1, dt)| {
+            let id = ClusterId(*c);
+            let top = soc[id].opps.len() - 1;
+            let initial: Vec<usize> = soc.clusters.iter().map(|_| 0).collect();
+            let plan = DvfsSchedule::new(
+                initial,
+                vec![
+                    Transition { t_s: *t1 + *dt, cluster: id, opp: 0 },
+                    Transition { t_s: *t1, cluster: id, opp: top },
+                ],
+            );
+            plan.validate(soc)?;
+            if plan.opp_at(id, 0.0) != 0 {
+                return Err("initial rung must hold before the first transition".into());
+            }
+            if plan.opp_at(id, *t1 + 0.5 * *dt) != top {
+                return Err("first transition must be in effect mid-window".into());
+            }
+            if plan.opp_at(id, *t1 + *dt + 1.0) != 0 {
+                return Err("second transition must win after it fires".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -116,3 +116,82 @@ fn preset_is_pure() {
     assert_eq!(a.time_s, b.time_s);
     assert_eq!(a.energy.energy_j, b.energy.energy_j);
 }
+
+/// ISSUE 3: the DVFS layer is provably a no-op at fixed frequency —
+/// `exynos5422()` under the `performance` governor at the default OPP
+/// reproduces the pre-DVFS pinned results bit-for-bit, and the retuned
+/// weight vector degenerates to the static one exactly.
+#[test]
+fn dvfs_performance_governor_is_a_bit_for_bit_noop() {
+    use amp_gemm::dvfs::sim::{simulate_dvfs, DvfsStrategy, Retune};
+    use amp_gemm::dvfs::{DvfsSchedule, Governor, Performance};
+
+    let soc = SocSpec::exynos5422();
+    // The ladders top out at the paper's §3.2 operating point.
+    assert_eq!(soc[BIG].opps.nominal().freq_ghz, 1.6);
+    assert_eq!(soc[LITTLE].opps.nominal().freq_ghz, 1.4);
+
+    let plan = Performance.plan(&soc, 1e3);
+    assert!(plan.is_static(), "performance pins one rung forever");
+    assert_eq!(plan, DvfsSchedule::nominal(&soc));
+    // The descriptor in effect is the boot descriptor, field for field.
+    assert_eq!(plan.soc_at(&soc, 0.0), soc);
+    assert_eq!(plan.soc_at(&soc, 42.0), soc);
+
+    // The retuned weights degenerate to the static vectors exactly.
+    let m = PerfModel::exynos();
+    for cache_aware in [false, true] {
+        assert_eq!(
+            plan.weights_at(&soc, 7.0, cache_aware).as_slice(),
+            m.auto_weights(cache_aware).normalized().as_slice()
+        );
+    }
+
+    // And the DVFS execution path returns the static DES results
+    // bit-for-bit, for both retuning policies and both families.
+    let shape = GemmShape::square(1024);
+    let cases = [
+        (
+            DvfsStrategy::Sas { cache_aware: true },
+            ScheduleSpec::ca_sas_weighted(m.ca_sas_weights()),
+        ),
+        (DvfsStrategy::Das { cache_aware: true }, ScheduleSpec::ca_das()),
+    ];
+    for (strat, spec) in cases {
+        let direct = simulate(&m, &spec, shape);
+        for retune in [Retune::Boot, Retune::Online] {
+            let st = simulate_dvfs(&soc, strat, shape, &plan, retune);
+            assert_eq!(st.time_s, direct.time_s, "{}", st.label);
+            assert_eq!(st.gflops, direct.gflops, "{}", st.label);
+            assert_eq!(st.energy_j, direct.energy.energy_j, "{}", st.label);
+            assert_eq!(st.grabs, direct.grabs, "{}", st.label);
+            assert_eq!(st.transitions_applied, 0);
+            assert_eq!(st.retunes, 0);
+        }
+    }
+}
+
+/// The OPP ladders themselves are part of the pinned descriptor: any
+/// drift in the Exynos frequency/voltage steps shows up here.
+#[test]
+fn dvfs_exynos_ladders_pinned() {
+    let soc = SocSpec::exynos5422();
+    let big: Vec<(f64, f64)> = (0..soc[BIG].opps.len())
+        .map(|o| (soc[BIG].opps.get(o).freq_ghz, soc[BIG].opps.get(o).volt_v))
+        .collect();
+    assert_eq!(
+        big,
+        vec![(0.8, 0.9000), (1.0, 0.9500), (1.2, 1.0125), (1.4, 1.0875), (1.6, 1.1625)]
+    );
+    let little: Vec<(f64, f64)> = (0..soc[LITTLE].opps.len())
+        .map(|o| (soc[LITTLE].opps.get(o).freq_ghz, soc[LITTLE].opps.get(o).volt_v))
+        .collect();
+    assert_eq!(
+        little,
+        vec![(0.5, 0.9000), (0.8, 0.9500), (1.0, 1.0000), (1.2, 1.0500), (1.4, 1.1375)]
+    );
+    // The power-scale law at the ladder ends (f·V² relative to nominal).
+    let s_big = soc[BIG].opps.power_scale(0);
+    assert!((s_big - 0.5 * (0.9 / 1.1625f64).powi(2)).abs() < 1e-12);
+    assert_eq!(soc[BIG].opps.power_scale(4), 1.0);
+}
