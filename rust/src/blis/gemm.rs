@@ -10,8 +10,10 @@ use crate::blis::microkernel::micro_kernel;
 use crate::blis::packing::{a_panel, b_panel, pack_a, pack_b};
 use crate::blis::params::BlisParams;
 
-/// A GEMM problem over borrowed row-major buffers.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// A GEMM problem over borrowed row-major buffers. `Hash`/`Ord` (by
+/// `(m, n, k)`) let shapes key the dispatch-layer batch caches and
+/// deterministic per-shape tallies directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct GemmShape {
     pub m: usize,
     pub n: usize,

@@ -84,20 +84,26 @@ pub struct Metrics {
 /// runs split into several groups so a huge batch still parallelizes.
 pub const MAX_GROUP_LEN: usize = 64;
 
-/// Order-preserving same-shape batcher: items accumulate into per-key
-/// groups; a group is emitted the moment it reaches `max_group`, and
+/// Order-preserving same-key batcher, generic over the batch key
+/// (ISSUE 4 generalization — the single-SoC path keys by a
+/// `(backend, shape)` string, the fleet dispatchers key by
+/// [`GemmShape`] directly): items accumulate into per-key groups; a
+/// group is emitted the moment it reaches `max_group`, and
 /// [`Batcher::drain`] flushes every partially-filled group immediately,
 /// in first-arrival order. The drain is what guarantees a trailing
 /// odd-sized group never waits on a timeout path — when the queue is
-/// empty, partial groups ship as-is.
+/// empty, partial groups ship as-is. The keyed variants
+/// ([`Batcher::push_keyed`]/[`Batcher::drain_keyed`]) return each
+/// group's key alongside its items, which is how the streaming
+/// dispatcher packs mixed-shape waves of per-shape subgroups.
 #[derive(Debug)]
-pub struct Batcher<T> {
+pub struct Batcher<K, T> {
     max_group: usize,
     /// Pending groups, in first-arrival order of their opening item.
-    groups: Vec<(String, Vec<T>)>,
+    groups: Vec<(K, Vec<T>)>,
 }
 
-impl<T> Batcher<T> {
+impl<K: PartialEq, T> Batcher<K, T> {
     pub fn new(max_group: usize) -> Self {
         assert!(max_group >= 1, "groups need at least one slot");
         Batcher {
@@ -113,7 +119,13 @@ impl<T> Batcher<T> {
 
     /// Add one item under its batch key; returns the completed group
     /// when this item fills one.
-    pub fn push(&mut self, key: String, item: T) -> Option<Vec<T>> {
+    pub fn push(&mut self, key: K, item: T) -> Option<Vec<T>> {
+        self.push_keyed(key, item).map(|(_, g)| g)
+    }
+
+    /// Like [`Batcher::push`], but a completed group comes back with
+    /// its key.
+    pub fn push_keyed(&mut self, key: K, item: T) -> Option<(K, Vec<T>)> {
         let idx = match self.groups.iter().position(|(k, _)| *k == key) {
             Some(i) => {
                 self.groups[i].1.push(item);
@@ -125,7 +137,7 @@ impl<T> Batcher<T> {
             }
         };
         if self.groups[idx].1.len() >= self.max_group {
-            Some(self.groups.remove(idx).1)
+            Some(self.groups.remove(idx))
         } else {
             None
         }
@@ -134,10 +146,12 @@ impl<T> Batcher<T> {
     /// Flush every pending group — partially filled ones included — in
     /// first-arrival order.
     pub fn drain(&mut self) -> Vec<Vec<T>> {
+        self.drain_keyed().into_iter().map(|(_, g)| g).collect()
+    }
+
+    /// Like [`Batcher::drain`], but each group comes back with its key.
+    pub fn drain_keyed(&mut self) -> Vec<(K, Vec<T>)> {
         std::mem::take(&mut self.groups)
-            .into_iter()
-            .map(|(_, g)| g)
-            .collect()
     }
 }
 
@@ -402,11 +416,10 @@ impl FleetDispatcher {
         strategy: FleetStrategy,
     ) -> Vec<Result<Response>> {
         let n = reqs.len();
-        let mut batcher = Batcher::new(MAX_GROUP_LEN);
+        let mut batcher: Batcher<GemmShape, usize> = Batcher::new(MAX_GROUP_LEN);
         let mut groups: Vec<Vec<usize>> = Vec::new();
         for (i, r) in reqs.iter().enumerate() {
-            let key = format!("{}x{}x{}", r.shape.m, r.shape.n, r.shape.k);
-            if let Some(g) = batcher.push(key, i) {
+            if let Some(g) = batcher.push(r.shape, i) {
                 groups.push(g);
             }
         }
@@ -455,6 +468,161 @@ impl FleetDispatcher {
                             });
                         }
                     }
+                }
+            }
+            drop(tx);
+        });
+        let mut out: Vec<Option<Result<Response>>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|o| o.expect("all shards complete")).collect()
+    }
+}
+
+/// One streamed request: a [`Request`] admitted at a *virtual* arrival
+/// instant. The timestamp orders admission (and therefore wave
+/// packing) deterministically; execution itself runs as fast as the
+/// boards allow.
+#[derive(Debug, Clone)]
+pub struct StreamRequest {
+    pub arrive_s: f64,
+    pub req: Request,
+}
+
+impl StreamRequest {
+    pub fn at(arrive_s: f64, req: Request) -> StreamRequest {
+        StreamRequest { arrive_s, req }
+    }
+}
+
+/// Streaming multi-board front-end (ISSUE 4 tentpole): an asynchronous
+/// admission layer over the same per-board [`Coordinator`]s as
+/// [`FleetDispatcher`]. Requests carry virtual arrival timestamps;
+/// admission order (arrival instant, ties by submission index) drives a
+/// shape-keyed [`Batcher`] that packs *mixed-shape* waves of per-shape
+/// subgroups. Execution is work-conserving — no wave barrier:
+///
+/// * static strategies (fleet-SSS/SAS) pre-split every subgroup with
+///   [`Fleet::plan_wave`] and seed one private queue per board, in wave
+///   order; a board that drains its shard of group *g* starts its shard
+///   of group *g+1* immediately;
+/// * fleet-DAS runs one puller thread per board grabbing runs of the
+///   board's own grain from the shared admission queue — a board that
+///   drains grabs the next ready group.
+///
+/// Responses always merge back in submission order. Degeneracy anchor:
+/// when every request arrives at t = 0 with one shape, the static
+/// strategies reproduce [`FleetDispatcher::dispatch`]'s responses and
+/// deterministic per-board metrics bit for bit (pinned by
+/// `tests/stream_props.rs`).
+#[allow(missing_debug_implementations)]
+pub struct StreamDispatcher {
+    inner: FleetDispatcher,
+}
+
+impl StreamDispatcher {
+    pub fn new(fleet: Fleet) -> Self {
+        StreamDispatcher {
+            inner: FleetDispatcher::new(fleet),
+        }
+    }
+
+    pub fn fleet(&self) -> &Fleet {
+        self.inner.fleet()
+    }
+
+    /// Per-board and aggregate metrics; `batches` counts the same-shape
+    /// subgroups the admission layer has packed.
+    pub fn metrics(&self) -> FleetMetrics {
+        self.inner.metrics()
+    }
+
+    /// Execute one admission stream under a board-level strategy,
+    /// returning responses in submission order.
+    pub fn dispatch_stream(
+        &self,
+        reqs: Vec<StreamRequest>,
+        strategy: FleetStrategy,
+    ) -> Vec<Result<Response>> {
+        let n = reqs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        // Admission order: virtual arrival instants, ties by submission
+        // index — the same contract (and validation) as the virtual-time
+        // twin, via the shared helper.
+        let times: Vec<f64> = reqs.iter().map(|r| r.arrive_s).collect();
+        let order = crate::fleet::sim::admission_order_by(&times);
+        // Shape-aware wave packing: same-shape subgroups of at most
+        // MAX_GROUP_LEN, in admission order.
+        let mut batcher: Batcher<GemmShape, usize> = Batcher::new(MAX_GROUP_LEN);
+        let mut groups: Vec<(GemmShape, Vec<usize>)> = Vec::new();
+        for &i in &order {
+            if let Some(g) = batcher.push_keyed(reqs[i].req.shape, i) {
+                groups.push(g);
+            }
+        }
+        groups.extend(batcher.drain_keyed());
+        self.inner.batches.fetch_add(groups.len() as u64, Ordering::SeqCst);
+
+        let nb = self.fleet().num_boards();
+        // Pre-plan outside the thread scope so spawned workers can
+        // borrow the shared inputs.
+        let mut per_board: Vec<Vec<usize>> = vec![Vec::new(); nb];
+        let mut admitted: Vec<usize> = Vec::new();
+        if strategy.is_dynamic() {
+            // The shared queue serves pure admission order (not
+            // group-major order), exactly like the virtual-time twin's
+            // ready queue — an earlier-arriving request is never queued
+            // behind a later one of another shape.
+            admitted = order;
+        } else {
+            let subgroups: Vec<(GemmShape, usize)> =
+                groups.iter().map(|(s, g)| (*s, g.len())).collect();
+            let plan = self.fleet().plan_wave(&subgroups, strategy);
+            for (gp, (_, members)) in plan.groups.iter().zip(&groups) {
+                let mut offset = 0;
+                for (b, &share) in gp.shards.iter().enumerate() {
+                    per_board[b].extend_from_slice(&members[offset..offset + share]);
+                    offset += share;
+                }
+            }
+        }
+        let grains = self.fleet().grains();
+
+        let (tx, rx) = mpsc::channel::<(usize, Result<Response>)>();
+        std::thread::scope(|s| {
+            if strategy.is_dynamic() {
+                let queue = Arc::new(DynamicQueue::new(admitted.len()));
+                for b in 0..nb {
+                    let queue = queue.clone();
+                    let grain = grains[b];
+                    let tx = tx.clone();
+                    let reqs = &reqs;
+                    let admitted = &admitted[..];
+                    s.spawn(move || {
+                        while let Some(chunk) = queue.grab(grain) {
+                            for &i in &admitted[chunk.start..chunk.end()] {
+                                tx.send((i, self.inner.execute_on(b, &reqs[i].req)))
+                                    .expect("result channel");
+                            }
+                        }
+                    });
+                }
+            } else {
+                for (b, idxs) in per_board.into_iter().enumerate() {
+                    if idxs.is_empty() {
+                        continue;
+                    }
+                    let tx = tx.clone();
+                    let reqs = &reqs;
+                    s.spawn(move || {
+                        for i in idxs {
+                            tx.send((i, self.inner.execute_on(b, &reqs[i].req)))
+                                .expect("result channel");
+                        }
+                    });
                 }
             }
             drop(tx);
@@ -619,7 +787,7 @@ mod tests {
     #[test]
     fn batcher_drain_order_pinned() {
         // max_group large: nothing fills, everything rides the drain.
-        let mut b: Batcher<usize> = Batcher::new(MAX_GROUP_LEN);
+        let mut b: Batcher<String, usize> = Batcher::new(MAX_GROUP_LEN);
         for (i, key) in ["A", "B", "A", "C", "B"].iter().enumerate() {
             assert_eq!(b.push(key.to_string(), i), None);
         }
@@ -634,7 +802,7 @@ mod tests {
 
     #[test]
     fn batcher_emits_full_groups_inline() {
-        let mut b: Batcher<usize> = Batcher::new(2);
+        let mut b: Batcher<String, usize> = Batcher::new(2);
         assert_eq!(b.push("A".into(), 0), None);
         assert_eq!(b.push("B".into(), 1), None);
         // Second A completes that group immediately.
@@ -644,6 +812,24 @@ mod tests {
         // A new A group reopens after the flush.
         assert_eq!(b.push("A".into(), 5), None);
         assert_eq!(b.drain(), vec![vec![3], vec![5]]);
+    }
+
+    /// ISSUE 4: the generic-key batcher returns each group's key with
+    /// its items — the wave-packing primitive of the streaming
+    /// dispatcher — and non-string keys group correctly.
+    #[test]
+    fn batcher_keyed_variants_carry_the_key() {
+        let mut b: Batcher<GemmShape, usize> = Batcher::new(2);
+        let s64 = GemmShape::square(64);
+        let s96 = GemmShape::square(96);
+        assert_eq!(b.push_keyed(s64, 0), None);
+        assert_eq!(b.push_keyed(s96, 1), None);
+        assert_eq!(b.push_keyed(s64, 2), Some((s64, vec![0, 2])));
+        assert_eq!(b.push_keyed(s64, 3), None);
+        assert_eq!(b.pending(), 2);
+        // Drain keeps first-arrival order of each group's opener.
+        assert_eq!(b.drain_keyed(), vec![(s96, vec![1]), (s64, vec![3])]);
+        assert_eq!(b.pending(), 0);
     }
 
     fn fleet_dispatcher() -> FleetDispatcher {
@@ -708,5 +894,106 @@ mod tests {
         let d = fleet_dispatcher();
         assert_eq!(d.fleet().num_boards(), 2);
         assert_eq!(d.metrics().completed(), 0);
+    }
+
+    fn stream_dispatcher() -> StreamDispatcher {
+        use crate::fleet::Board;
+        StreamDispatcher::new(Fleet::new(vec![
+            Board::native("exynos", SocSpec::exynos5422()),
+            Board::native("smp2", SocSpec::symmetric(2)),
+        ]))
+    }
+
+    /// ISSUE 4 degeneracy anchor: an all-at-t=0 single-shape stream
+    /// under a static strategy reproduces `FleetDispatcher::dispatch`
+    /// bit for bit — same responses (matrices, checksums, board
+    /// labels) and same deterministic per-board metrics.
+    #[test]
+    fn stream_dispatcher_degenerates_to_one_wave() {
+        for strategy in [FleetStrategy::Sss, FleetStrategy::Sas] {
+            let wave = fleet_dispatcher();
+            let stream = stream_dispatcher();
+            let mut wave_reqs = Vec::new();
+            let mut stream_reqs = Vec::new();
+            for i in 0..6u64 {
+                let (req, _) = request(i, 64, 90 + i, Backend::Auto);
+                wave_reqs.push(req.clone());
+                stream_reqs.push(StreamRequest::at(0.0, req));
+            }
+            let a = wave.dispatch(wave_reqs, strategy);
+            let b = stream.dispatch_stream(stream_reqs, strategy);
+            assert_eq!(a.len(), b.len());
+            for (i, (ra, rb)) in a.iter().zip(&b).enumerate() {
+                let (ra, rb) = (ra.as_ref().unwrap(), rb.as_ref().unwrap());
+                assert_eq!(ra.id, rb.id, "{}: request {i}", strategy.label());
+                assert_eq!(ra.c, rb.c, "{}: request {i} matrix", strategy.label());
+                assert_eq!(ra.checksum, rb.checksum);
+                assert_eq!(
+                    ra.backend_label, rb.backend_label,
+                    "{}: request {i} must land on the same board",
+                    strategy.label()
+                );
+            }
+            let (ma, mb) = (wave.metrics(), stream.metrics());
+            assert_eq!(ma.batches, mb.batches, "{}", strategy.label());
+            for ((na, a), (nb, b)) in ma.boards.iter().zip(&mb.boards) {
+                assert_eq!(na, nb);
+                assert_eq!(a.completed, b.completed, "{strategy:?} board {na}");
+                assert_eq!(a.total_flops, b.total_flops, "{strategy:?} board {na}");
+            }
+        }
+    }
+
+    /// Mixed shapes with staggered arrivals, every strategy: responses
+    /// merge in submission order (not arrival order), the numerics
+    /// survive, and every request executes exactly once.
+    #[test]
+    fn stream_dispatcher_merges_in_submission_order() {
+        for strategy in [FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das] {
+            let d = stream_dispatcher();
+            let mut reqs = Vec::new();
+            let mut wants = Vec::new();
+            // Arrival order deliberately scrambles submission order.
+            let arrive = [0.5, 0.0, 0.25, 0.0, 0.75, 0.1];
+            for (i, r) in [64usize, 96, 64, 96, 64, 64].iter().enumerate() {
+                let (req, want) = request(i as u64, *r, 70 + i as u64, Backend::Auto);
+                reqs.push(StreamRequest::at(arrive[i], req));
+                wants.push(want);
+            }
+            let resps = d.dispatch_stream(reqs, strategy);
+            assert_eq!(resps.len(), 6);
+            for (i, (resp, want)) in resps.iter().zip(&wants).enumerate() {
+                let resp = resp.as_ref().unwrap_or_else(|e| {
+                    panic!("{}: request {i} failed: {e}", strategy.label())
+                });
+                assert_eq!(resp.id, i as u64, "{}: submission order", strategy.label());
+                assert!(
+                    max_abs_diff(&resp.c, want) < gemm_tolerance(96),
+                    "{}: request {i} numerics",
+                    strategy.label()
+                );
+            }
+            let m = d.metrics();
+            assert_eq!(m.completed(), 6, "{}", strategy.label());
+            assert_eq!(m.boards.len(), 2);
+        }
+    }
+
+    #[test]
+    fn stream_dispatcher_empty_stream_is_empty() {
+        let d = stream_dispatcher();
+        assert!(d.dispatch_stream(Vec::new(), FleetStrategy::Das).is_empty());
+        assert_eq!(d.metrics().completed(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "arrival instant")]
+    fn stream_dispatcher_rejects_bad_arrivals() {
+        let d = stream_dispatcher();
+        let (req, _) = request(0, 32, 1, Backend::Auto);
+        let _ = d.dispatch_stream(
+            vec![StreamRequest::at(f64::NAN, req)],
+            FleetStrategy::Das,
+        );
     }
 }

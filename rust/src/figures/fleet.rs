@@ -15,12 +15,103 @@
 //! oblivious equal split loses to both throughput-aware strategies on a
 //! skewed fleet, and scaling is near-linear (boards share nothing but
 //! the dispatcher).
+//!
+//! Table 4 (ISSUE 4) retells the paper's static-vs-dynamic story at the
+//! *admission* level: staggered Poisson-like arrivals on the pinned
+//! exynos5422 + juno_r0 pair, replayed under today's synchronous
+//! wave-per-batch discipline (all three board strategies) and under the
+//! streaming dispatcher. Streaming must never lose on makespan and must
+//! strictly raise aggregate board utilization — continuous admission is
+//! to waves what DAS is to SSS.
 
 use crate::blis::gemm::GemmShape;
+use crate::coordinator::MAX_GROUP_LEN;
 use crate::figures::{Assertion, FigureResult};
-use crate::fleet::sim::{boards_to_sustain, simulate_fleet};
+use crate::fleet::sim::{
+    boards_to_sustain, poisson_arrivals, simulate_fleet, simulate_fleet_stream,
+    simulate_fleet_waves, Arrival, StreamStats,
+};
 use crate::fleet::{Board, Fleet, FleetStrategy};
+use crate::util::rng::Rng;
 use crate::util::table::Table;
+
+/// The pinned two-board streaming fleet (exynos5422 + juno_r0), shared
+/// by the report, `examples/stream_sweep.rs` and the golden regression
+/// test (`tests/fleet_golden.rs`).
+pub fn pinned_stream_fleet() -> Fleet {
+    Fleet::parse("exynos5422,juno_r0").expect("presets")
+}
+
+/// Staggered Poisson-like arrivals for the streaming section: three
+/// mixed shapes at an arrival rate near the pair's service capacity,
+/// so wave barriers surface as queueing delay. Deterministic (seeded
+/// [`Rng`]); `quick` halves the stream length.
+pub fn pinned_stream_arrivals(quick: bool) -> Vec<Arrival> {
+    let shapes = [
+        GemmShape::square(384),
+        GemmShape::square(512),
+        GemmShape::square(640),
+    ];
+    let count = if quick { 24 } else { 48 };
+    let mut rng = Rng::new(0x5EED_57);
+    poisson_arrivals(&mut rng, &shapes, count, 80.0)
+}
+
+/// One rendered row of the streaming table. Public so the golden test
+/// pins the exact formatting alongside the numbers.
+pub fn stream_row(st: &StreamStats) -> Vec<String> {
+    vec![
+        st.label.clone(),
+        format!("{:.3}", st.makespan_s),
+        format!("{:.2}", st.throughput_rps),
+        format!("{:.3}", st.utilization),
+        format!("{:.2}", st.mean_queue_depth),
+        st.max_queue_depth.to_string(),
+        format!("{:.1}", st.energy_j),
+    ]
+}
+
+/// Columns of the streaming-vs-wave comparison, shared by every
+/// renderer (report, `amp-gemm fleet --stream`, the example).
+const STREAM_COLUMNS: &[&str] =
+    &["mode", "makespan [s]", "req/s", "utilization", "mean depth", "max depth", "energy [J]"];
+
+/// The streaming-vs-wave comparison on any fleet and arrival stream:
+/// one row per wave-mode strategy plus the streaming dispatcher.
+/// Returns the table with the three wave replays and the stream replay
+/// for assertions — the single implementation behind the report, the
+/// CLI and `examples/stream_sweep.rs`.
+pub fn stream_table(
+    title: &str,
+    fleet: &Fleet,
+    arrivals: &[Arrival],
+) -> (Table, Vec<StreamStats>, StreamStats) {
+    let mut table = Table::new(title, STREAM_COLUMNS);
+    let mut waves = Vec::new();
+    for strategy in [FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das] {
+        let st = simulate_fleet_waves(fleet, strategy, arrivals, MAX_GROUP_LEN);
+        table.push_row(stream_row(&st));
+        waves.push(st);
+    }
+    let stream = simulate_fleet_stream(fleet, arrivals);
+    table.push_row(stream_row(&stream));
+    (table, waves, stream)
+}
+
+/// [`stream_table`] on the pinned scenario — the report's table 4 and
+/// the golden test's subject.
+pub fn stream_section(quick: bool) -> (Table, Vec<StreamStats>, StreamStats) {
+    let fleet = pinned_stream_fleet();
+    let arrivals = pinned_stream_arrivals(quick);
+    stream_table(
+        &format!(
+            "Streaming vs wave dispatch — exynos5422 + juno_r0, {} staggered arrivals",
+            arrivals.len()
+        ),
+        &fleet,
+        &arrivals,
+    )
+}
 
 pub fn run(quick: bool) -> FigureResult {
     let r = if quick { 1024 } else { 2048 };
@@ -90,7 +181,10 @@ pub fn run(quick: bool) -> FigureResult {
         plan.push(need);
     }
 
-    let assertions = vec![
+    // --- Table 4: streaming vs wave dispatch on staggered arrivals. ---
+    let (streaming, wave_stats, stream) = stream_section(quick);
+
+    let mut assertions = vec![
         Assertion::check(
             "fleet-DAS beats equal-shard fleet-SSS on a heterogeneous fleet",
             das.makespan_s < 0.90 * sss.makespan_s,
@@ -134,10 +228,49 @@ pub fn run(quick: bool) -> FigureResult {
         ),
     ];
 
+    // ISSUE 4 acceptance: continuous admission never loses on makespan
+    // and strictly raises aggregate utilization over every wave mode.
+    assertions.push(Assertion::check(
+        "streaming makespan never exceeds any wave mode's",
+        wave_stats.iter().all(|w| stream.makespan_s <= w.makespan_s),
+        format!(
+            "stream {:.3}s vs waves {:?}",
+            stream.makespan_s,
+            wave_stats.iter().map(|w| w.makespan_s).collect::<Vec<_>>()
+        ),
+    ));
+    assertions.push(Assertion::check(
+        "streaming strictly raises aggregate board utilization",
+        wave_stats.iter().all(|w| stream.utilization > w.utilization),
+        format!(
+            "stream {:.3} vs waves {:?}",
+            stream.utilization,
+            wave_stats.iter().map(|w| w.utilization).collect::<Vec<_>>()
+        ),
+    ));
+    assertions.push(Assertion::check(
+        "streaming executes every request exactly once, merged in submission order",
+        stream.items_completed() == stream.requests
+            && stream.completions.iter().all(|c| c.is_finite())
+            && stream
+                .per_shape
+                .iter()
+                .map(|(_, c)| c)
+                .sum::<usize>()
+                == stream.requests
+            && wave_stats.iter().all(|w| w.items_completed() == w.requests),
+        format!(
+            "stream {}/{} requests, per shape {:?}",
+            stream.items_completed(),
+            stream.requests,
+            stream.per_shape
+        ),
+    ));
+
     FigureResult {
         id: "fleet",
         title: "Fleet scale-out: board-level SSS/SAS/DAS and throughput scaling",
-        tables: vec![cmp, scaling, capacity],
+        tables: vec![cmp, scaling, capacity, streaming],
         assertions,
     }
 }
@@ -148,7 +281,19 @@ mod tests {
     fn fleet_report_passes_quick() {
         let fig = super::run(true);
         assert!(fig.passed(), "{}", fig.to_markdown());
-        assert_eq!(fig.tables.len(), 3);
+        assert_eq!(fig.tables.len(), 4);
         assert_eq!(fig.id, "fleet");
+    }
+
+    /// The pinned streaming scenario is stable: same fleet, same seed,
+    /// same arrivals — the precondition of the golden regression test.
+    #[test]
+    fn pinned_stream_scenario_is_deterministic() {
+        let a = super::pinned_stream_arrivals(true);
+        let b = super::pinned_stream_arrivals(true);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 24);
+        assert_eq!(super::pinned_stream_arrivals(false).len(), 48);
+        assert_eq!(super::pinned_stream_fleet().num_boards(), 2);
     }
 }

@@ -29,6 +29,7 @@
 
 pub mod sim;
 
+use crate::blis::gemm::GemmShape;
 use crate::model::PerfModel;
 use crate::sched::{ScheduleSpec, Weighted, Weights, MAX_WAYS};
 use crate::soc::SocSpec;
@@ -297,6 +298,52 @@ impl Fleet {
     pub fn aggregate_throughput_gflops(&self) -> f64 {
         self.boards.iter().map(Board::throughput_gflops).sum()
     }
+
+    /// Mixed-shape shard plan: split every same-shape subgroup of one
+    /// dispatch wave across the boards independently, under a static
+    /// strategy. Each subgroup's shards sum to its item count (the
+    /// per-shape shard-sum invariant the streaming dispatcher relies
+    /// on). Panics for fleet-DAS, whose shards emerge from the queue.
+    pub fn plan_wave(&self, groups: &[(GemmShape, usize)], strategy: FleetStrategy) -> WavePlan {
+        WavePlan {
+            groups: groups
+                .iter()
+                .map(|&(shape, count)| WaveGroupPlan {
+                    shape,
+                    shards: self.static_shards(count, strategy),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Static shard plan of one same-shape subgroup within a mixed wave.
+#[derive(Debug, Clone)]
+pub struct WaveGroupPlan {
+    pub shape: GemmShape,
+    /// Items of this subgroup assigned to each board, in fleet order.
+    pub shards: Vec<usize>,
+}
+
+/// Per-shape shard plan for one mixed-shape dispatch wave
+/// ([`Fleet::plan_wave`]): the static-strategy counterpart of the
+/// streaming queue — the `coordinator::StreamDispatcher` seeds each
+/// board's private queue from the per-group shards, in wave order.
+#[derive(Debug, Clone)]
+pub struct WavePlan {
+    pub groups: Vec<WaveGroupPlan>,
+}
+
+impl WavePlan {
+    /// Total items across every subgroup.
+    pub fn items(&self) -> usize {
+        self.groups.iter().map(|g| g.shards.iter().sum::<usize>()).sum()
+    }
+
+    /// Items assigned to board `b` across every subgroup.
+    pub fn board_items(&self, b: usize) -> usize {
+        self.groups.iter().map(|g| g.shards[b]).sum()
+    }
 }
 
 #[cfg(test)]
@@ -431,6 +478,39 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// ISSUE 4: mixed-shape wave plans shard every same-shape subgroup
+    /// independently, and each subgroup's shards sum to its item count.
+    #[test]
+    fn plan_wave_shards_each_shape_subgroup() {
+        let f = Fleet::parse("exynos5422,juno_r0").unwrap();
+        let groups = [
+            (GemmShape::square(512), 10usize),
+            (GemmShape::square(1024), 7),
+            (GemmShape::square(512), 1),
+        ];
+        for strategy in [FleetStrategy::Sss, FleetStrategy::Sas] {
+            let plan = f.plan_wave(&groups, strategy);
+            assert_eq!(plan.groups.len(), 3);
+            assert_eq!(plan.items(), 18);
+            for (g, &(shape, count)) in plan.groups.iter().zip(&groups) {
+                assert_eq!(g.shape, shape);
+                assert_eq!(g.shards.len(), f.num_boards());
+                assert_eq!(g.shards.iter().sum::<usize>(), count, "{}", strategy.label());
+            }
+            assert_eq!(plan.board_items(0) + plan.board_items(1), 18);
+            // Per-group shards must match the single-shape splitter —
+            // the wave plan is `static_shards`, shape by shape.
+            assert_eq!(plan.groups[0].shards, f.static_shards(10, strategy));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "dynamic queue")]
+    fn plan_wave_rejects_das() {
+        let f = Fleet::parse("exynos5422").unwrap();
+        f.plan_wave(&[(GemmShape::square(256), 4)], FleetStrategy::Das);
     }
 
     #[test]

@@ -15,13 +15,27 @@
 //! Capacity planning ("how many Exynos boards sustain X req/s?") is
 //! [`boards_to_sustain`]: grow a homogeneous fleet until the simulated
 //! sustained rate reaches the target.
+//!
+//! Streaming (ISSUE 4): [`simulate_fleet_stream`] replays an
+//! *arrival-driven* request stream ([`Arrival`]) through the same
+//! virtual-time machinery — boards pull same-shape runs of their own
+//! grain from the admitted-but-unexecuted queue the moment they drain
+//! (work-conserving, no wave barrier), with per-board idle-tail and
+//! queue-depth statistics. [`simulate_fleet_waves`] is the synchronous
+//! comparator: one wave per same-shape group, each wave barriered until
+//! its last member has arrived and the previous wave has finished —
+//! today's `FleetDispatcher` discipline made explicit in virtual time.
+//! When every request arrives at t = 0 with one shape, both degenerate
+//! to [`simulate_fleet`] bit-for-bit (pinned by tests).
 
 use crate::blis::gemm::GemmShape;
+use crate::coordinator::Batcher;
 use crate::dvfs::DvfsSchedule;
 use crate::energy::PowerModel;
 use crate::fleet::{Fleet, FleetStrategy, DISPATCH_S};
 use crate::sim::simulate;
-use std::collections::HashMap;
+use crate::util::rng::Rng;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 
 /// One board's share of a simulated fleet run.
 #[derive(Debug, Clone)]
@@ -361,6 +375,495 @@ pub fn simulate_fleet_dvfs(
     }
 }
 
+/// One streamed request: a GEMM shape admitted at a virtual instant.
+/// Vector index = submission order; `arrive_s` orders *admission*, so
+/// arrival order and submission order are independent.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    pub shape: GemmShape,
+    pub arrive_s: f64,
+}
+
+impl Arrival {
+    pub fn at(shape: GemmShape, arrive_s: f64) -> Arrival {
+        Arrival { shape, arrive_s }
+    }
+}
+
+/// A burst: `count` same-shape requests all arriving at t = 0 — the
+/// degenerate stream that must reproduce the one-wave batch paths.
+pub fn burst_arrivals(shape: GemmShape, count: usize) -> Vec<Arrival> {
+    vec![Arrival::at(shape, 0.0); count]
+}
+
+/// Deterministic Poisson-like request stream: exponential inter-arrival
+/// gaps at `rate_rps`, shapes drawn uniformly from `shapes`. Arrival
+/// instants are non-decreasing, so submission order == arrival order.
+pub fn poisson_arrivals(
+    rng: &mut Rng,
+    shapes: &[GemmShape],
+    count: usize,
+    rate_rps: f64,
+) -> Vec<Arrival> {
+    assert!(!shapes.is_empty(), "need at least one shape");
+    assert!(count > 0, "empty stream");
+    let mut t = 0.0;
+    (0..count)
+        .map(|_| {
+            t += rng.gen_exp(rate_rps);
+            Arrival::at(*rng.choose(shapes), t)
+        })
+        .collect()
+}
+
+/// One board's share of a streamed (or wave-replayed) run.
+#[derive(Debug, Clone)]
+pub struct StreamBoardStats {
+    pub name: String,
+    /// Requests this board executed.
+    pub items: usize,
+    /// Same-shape runs it grabbed (1 per static shard; 1 per pull).
+    pub grabs: u64,
+    /// Virtual time spent computing.
+    pub busy_s: f64,
+    /// Virtual instant the board retired its last request.
+    pub finish_s: f64,
+    /// Idle tail from the board's last completion to the makespan.
+    pub idle_tail_s: f64,
+    /// `busy_s / makespan` — the fraction of the run spent computing.
+    pub utilization: f64,
+    /// Board energy over the whole run, idle rails included.
+    pub energy_j: f64,
+}
+
+/// Aggregated result of one streamed (or wave-replayed) fleet run.
+/// Deterministic: two replays of the same arrivals compare equal.
+#[derive(Debug, Clone)]
+pub struct StreamStats {
+    pub label: String,
+    pub requests: usize,
+    /// Last completion instant, measured from t = 0.
+    pub makespan_s: f64,
+    /// Useful flops of the whole stream over the makespan.
+    pub gflops: f64,
+    pub throughput_rps: f64,
+    /// Whole-fleet energy (every board charged to the makespan).
+    pub energy_j: f64,
+    /// Aggregate busy time over `boards × makespan`.
+    pub utilization: f64,
+    /// Completion instant of every request, in submission order — the
+    /// in-order merge the dispatcher exposes to clients.
+    pub completions: Vec<f64>,
+    /// Executed requests per distinct shape, in first-submission order
+    /// (the per-shape shard-sum invariant: must equal the submitted
+    /// histogram).
+    pub per_shape: Vec<(GemmShape, usize)>,
+    /// Time-averaged depth of the arrived-but-unexecuted queue.
+    pub mean_queue_depth: f64,
+    /// Peak depth of that queue.
+    pub max_queue_depth: usize,
+    /// Per-board breakdown, in fleet order.
+    pub boards: Vec<StreamBoardStats>,
+}
+
+impl StreamStats {
+    /// Requests executed across all boards (= `requests`, pinned in
+    /// tests).
+    pub fn items_completed(&self) -> usize {
+        self.boards.iter().map(|b| b.items).sum()
+    }
+}
+
+/// Shared post-processing of a virtual-time stream/wave replay: builds
+/// [`StreamStats`] from the per-board tallies. `counts[b]` maps each
+/// shape to the number of items board `b` executed; busy time and item
+/// energy are recomputed `count × per-item` per shape (deterministic
+/// BTreeMap order), so the degenerate single-shape run reproduces
+/// [`simulate_fleet`]'s accounting bit for bit.
+#[allow(clippy::too_many_arguments)]
+fn finish_stream_stats(
+    fleet: &Fleet,
+    label: String,
+    arrivals: &[Arrival],
+    cache: &mut [HashMap<GemmShape, crate::sim::RunStats>],
+    canon: &[usize],
+    counts: &[BTreeMap<GemmShape, usize>],
+    items: &[usize],
+    grabs: &[u64],
+    finish: &[f64],
+    completions: Vec<f64>,
+    depth_events: &mut Vec<(f64, i64)>,
+) -> StreamStats {
+    let n = fleet.num_boards();
+    let makespan = finish.iter().cloned().fold(0.0, f64::max);
+    let baseline_w: Vec<f64> = fleet
+        .boards
+        .iter()
+        .map(|b| PowerModel::new(b.soc().clone()).baseline_w())
+        .collect();
+
+    let mut boards = Vec::with_capacity(n);
+    for b in 0..n {
+        let mut busy = 0.0;
+        let mut item_energy = 0.0;
+        for (&shape, &count) in &counts[b] {
+            let st = cache[canon[b]].get(&shape).expect("executed shapes are cached").clone();
+            busy += count as f64 * st.time_s;
+            item_energy += count as f64 * st.energy.energy_j;
+        }
+        boards.push(StreamBoardStats {
+            name: fleet.boards[b].name.clone(),
+            items: items[b],
+            grabs: grabs[b],
+            busy_s: busy,
+            finish_s: finish[b],
+            idle_tail_s: makespan - finish[b],
+            utilization: if makespan > 0.0 { busy / makespan } else { 0.0 },
+            energy_j: item_energy + baseline_w[b] * (makespan - busy),
+        });
+    }
+
+    // Executed-per-shape histogram, in first-submission order.
+    let mut per_shape: Vec<(GemmShape, usize)> = Vec::new();
+    for a in arrivals {
+        if !per_shape.iter().any(|(s, _)| *s == a.shape) {
+            per_shape.push((a.shape, 0));
+        }
+    }
+    for counts_b in counts {
+        for (&shape, &count) in counts_b {
+            let entry = per_shape
+                .iter_mut()
+                .find(|(s, _)| *s == shape)
+                .expect("executed shape was submitted");
+            entry.1 += count;
+        }
+    }
+
+    // Queue-depth integral: +1 at each arrival instant, -take at each
+    // grab instant; ties process arrivals first so a burst's peak is
+    // visible before the first grab drains it.
+    depth_events.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).expect("finite instants").then(b.1.cmp(&a.1))
+    });
+    let mut depth = 0i64;
+    let mut max_depth = 0i64;
+    let mut integral = 0.0;
+    let mut prev_t = 0.0;
+    for &(t, delta) in depth_events.iter() {
+        integral += depth as f64 * (t - prev_t);
+        prev_t = t;
+        depth += delta;
+        max_depth = max_depth.max(depth);
+    }
+    integral += depth as f64 * (makespan - prev_t).max(0.0);
+
+    let total_flops: f64 = arrivals.iter().map(|a| a.shape.flops()).sum();
+    let total_busy: f64 = boards.iter().map(|b| b.busy_s).sum();
+    StreamStats {
+        label,
+        requests: arrivals.len(),
+        makespan_s: makespan,
+        gflops: total_flops / makespan / 1e9,
+        throughput_rps: arrivals.len() as f64 / makespan,
+        energy_j: boards.iter().map(|b| b.energy_j).sum(),
+        utilization: total_busy / (n as f64 * makespan),
+        completions,
+        per_shape,
+        mean_queue_depth: if makespan > 0.0 { integral / makespan } else { 0.0 },
+        max_queue_depth: max_depth as usize,
+        boards,
+    }
+}
+
+fn board_names(fleet: &Fleet) -> String {
+    fleet.boards.iter().map(|b| b.name.as_str()).collect::<Vec<_>>().join("+")
+}
+
+/// Dedup map for the per-(board, shape) DES cache: identical boards
+/// share one cache slot (the homogeneous-fleet dedup of
+/// [`simulate_fleet`], lifted to mixed shapes).
+fn canonical_boards(fleet: &Fleet) -> Vec<usize> {
+    (0..fleet.num_boards())
+        .map(|b| {
+            (0..b)
+                .find(|&p| {
+                    fleet.boards[p].soc() == fleet.boards[b].soc()
+                        && fleet.boards[p].sched == fleet.boards[b].sched
+                })
+                .unwrap_or(b)
+        })
+        .collect()
+}
+
+fn stream_item_stats(
+    fleet: &Fleet,
+    cache: &mut [HashMap<GemmShape, crate::sim::RunStats>],
+    canon: &[usize],
+    b: usize,
+    shape: GemmShape,
+) -> crate::sim::RunStats {
+    cache[canon[b]]
+        .entry(shape)
+        .or_insert_with(|| simulate(fleet.boards[b].model(), &fleet.boards[b].sched, shape))
+        .clone()
+}
+
+/// Admission order over raw arrival instants: by time, ties broken by
+/// submission index (stable), with the shared validation (finite,
+/// non-negative). One implementation serves the virtual-time sims and
+/// the real-thread `coordinator::StreamDispatcher`, so the tie-break
+/// contract cannot drift between them.
+pub fn admission_order_by(times: &[f64]) -> Vec<usize> {
+    for (i, &t) in times.iter().enumerate() {
+        assert!(
+            t.is_finite() && t >= 0.0,
+            "request {i}: arrival instant must be finite and >= 0, got {t}"
+        );
+    }
+    let mut order: Vec<usize> = (0..times.len()).collect();
+    order.sort_by(|&i, &j| {
+        times[i]
+            .partial_cmp(&times[j])
+            .expect("finite arrivals")
+            .then(i.cmp(&j))
+    });
+    order
+}
+
+fn admission_order(arrivals: &[Arrival]) -> Vec<usize> {
+    let times: Vec<f64> = arrivals.iter().map(|a| a.arrive_s).collect();
+    admission_order_by(&times)
+}
+
+/// Streaming replay (the tentpole): requests are admitted continuously
+/// as they arrive; the board with the earliest clock pulls the next
+/// same-shape run (up to its own grain, [`Fleet::grains`]) from the
+/// front of the admitted queue — work-conserving backfill, no wave
+/// barrier. A board facing an empty queue idles only until the next
+/// arrival. Deterministic: pure virtual time (ties go to the lowest
+/// board id), same arrivals ⇒ same timeline, bit for bit.
+///
+/// Degeneracy anchor: when every request arrives at t = 0 with one
+/// shape, the replay is exactly [`simulate_fleet`] under fleet-DAS —
+/// same grab sequence, same clock arithmetic, bit-for-bit equal
+/// makespan/energy/per-board tallies (pinned by tests).
+pub fn simulate_fleet_stream(fleet: &Fleet, arrivals: &[Arrival]) -> StreamStats {
+    assert!(!arrivals.is_empty(), "empty stream");
+    let n = fleet.num_boards();
+    let order = admission_order(arrivals);
+    let canon = canonical_boards(fleet);
+    let mut cache: Vec<HashMap<GemmShape, crate::sim::RunStats>> = vec![HashMap::new(); n];
+    let grains = fleet.grains();
+
+    let mut clock = vec![0.0f64; n];
+    // Last-completion instant per board — distinct from the scheduling
+    // clock, which idle-waiting also advances (a board that jumps to
+    // the next arrival but loses the grab must not report that jump as
+    // its finish).
+    let mut finish = vec![0.0f64; n];
+    let mut items = vec![0usize; n];
+    let mut grabs = vec![0u64; n];
+    let mut counts: Vec<BTreeMap<GemmShape, usize>> = vec![BTreeMap::new(); n];
+    let mut completions = vec![f64::NAN; arrivals.len()];
+    let mut depth_events: Vec<(f64, i64)> = Vec::new();
+    let mut ready: VecDeque<usize> = VecDeque::new();
+    let mut next_arrival = 0usize;
+    let mut executed = 0usize;
+
+    while executed < arrivals.len() {
+        // The board with the earliest clock acts next (ties: lowest id).
+        let mut b = 0;
+        for c in 1..n {
+            if clock[c] < clock[b] {
+                b = c;
+            }
+        }
+        // Admit everything that has arrived by this board's clock.
+        while next_arrival < order.len()
+            && arrivals[order[next_arrival]].arrive_s <= clock[b]
+        {
+            let id = order[next_arrival];
+            ready.push_back(id);
+            depth_events.push((arrivals[id].arrive_s, 1));
+            next_arrival += 1;
+        }
+        if ready.is_empty() {
+            // Nothing admitted yet: idle this board to the next arrival
+            // (`admit <= clock` above guarantees it is strictly later).
+            clock[b] = arrivals[order[next_arrival]].arrive_s;
+            continue;
+        }
+        // Work-conserving grab: a consecutive same-shape run of up to
+        // the board's grain from the front of the admitted queue.
+        let shape = arrivals[*ready.front().expect("non-empty")].shape;
+        let mut run: Vec<usize> = Vec::new();
+        while run.len() < grains[b] {
+            match ready.front() {
+                Some(&id) if arrivals[id].shape == shape => {
+                    run.push(id);
+                    ready.pop_front();
+                }
+                _ => break,
+            }
+        }
+        let take = run.len();
+        let st = stream_item_stats(fleet, &mut cache, &canon, b, shape);
+        let start = clock[b];
+        depth_events.push((start, -(take as i64)));
+        clock[b] += DISPATCH_S + take as f64 * st.time_s;
+        finish[b] = clock[b];
+        for (j, &id) in run.iter().enumerate() {
+            debug_assert!(completions[id].is_nan(), "request {id} executed twice");
+            completions[id] = start + DISPATCH_S + (j + 1) as f64 * st.time_s;
+        }
+        items[b] += take;
+        grabs[b] += 1;
+        *counts[b].entry(shape).or_insert(0) += take;
+        executed += take;
+    }
+
+    finish_stream_stats(
+        fleet,
+        format!("stream [{}]", board_names(fleet)),
+        arrivals,
+        &mut cache,
+        &canon,
+        &counts,
+        &items,
+        &grabs,
+        &finish,
+        completions,
+        &mut depth_events,
+    )
+}
+
+/// Wave-mode comparator: the same arrival stream replayed under
+/// today's synchronous discipline — requests group into same-shape
+/// waves of at most `max_group` (admission order, the
+/// [`Batcher`] contract), and wave `g` starts only when its last
+/// member has arrived *and* wave `g-1` has fully finished (the wave
+/// barrier). Within a wave the batch is sharded by `strategy` exactly
+/// as [`simulate_fleet`] shards it.
+///
+/// Degeneracy: all requests at t = 0 with one shape (≤ `max_group`)
+/// form a single wave starting at 0 — bit-for-bit [`simulate_fleet`]
+/// for every strategy (pinned by tests).
+pub fn simulate_fleet_waves(
+    fleet: &Fleet,
+    strategy: FleetStrategy,
+    arrivals: &[Arrival],
+    max_group: usize,
+) -> StreamStats {
+    assert!(!arrivals.is_empty(), "empty stream");
+    let n = fleet.num_boards();
+    let order = admission_order(arrivals);
+    let canon = canonical_boards(fleet);
+    let mut cache: Vec<HashMap<GemmShape, crate::sim::RunStats>> = vec![HashMap::new(); n];
+    let grains = fleet.grains();
+
+    // Same-shape waves in admission order.
+    let mut batcher: Batcher<GemmShape, usize> = Batcher::new(max_group);
+    let mut waves: Vec<(GemmShape, Vec<usize>)> = Vec::new();
+    for &i in &order {
+        if let Some(g) = batcher.push_keyed(arrivals[i].shape, i) {
+            waves.push(g);
+        }
+    }
+    waves.extend(batcher.drain_keyed());
+
+    let mut items = vec![0usize; n];
+    let mut grabs = vec![0u64; n];
+    let mut counts: Vec<BTreeMap<GemmShape, usize>> = vec![BTreeMap::new(); n];
+    let mut finish = vec![0.0f64; n];
+    let mut completions = vec![f64::NAN; arrivals.len()];
+    let mut depth_events: Vec<(f64, i64)> = Vec::new();
+    let mut prev_end = 0.0f64;
+
+    for (shape, members) in &waves {
+        let count = members.len();
+        let ready = members
+            .iter()
+            .map(|&i| arrivals[i].arrive_s)
+            .fold(0.0, f64::max);
+        let start = prev_end.max(ready);
+        for &i in members {
+            depth_events.push((arrivals[i].arrive_s, 1));
+        }
+        depth_events.push((start, -(count as i64)));
+        // Per-item times are looked up lazily per participating board —
+        // a board whose shard is empty (or that never wins a grab)
+        // never pays a DES run for this shape; the cache makes repeats
+        // free.
+        let mut wclock = vec![start; n];
+        match strategy {
+            FleetStrategy::Sss | FleetStrategy::Sas => {
+                let shards = fleet.static_shards(count, strategy);
+                let mut offset = 0;
+                for (b, &share) in shards.iter().enumerate() {
+                    if share == 0 {
+                        continue;
+                    }
+                    let ids = &members[offset..offset + share];
+                    offset += share;
+                    let time_s = stream_item_stats(fleet, &mut cache, &canon, b, *shape).time_s;
+                    wclock[b] = start + (DISPATCH_S + share as f64 * time_s);
+                    for (j, &id) in ids.iter().enumerate() {
+                        completions[id] = start + (DISPATCH_S + (j + 1) as f64 * time_s);
+                    }
+                    items[b] += share;
+                    grabs[b] += 1;
+                    *counts[b].entry(*shape).or_insert(0) += share;
+                    finish[b] = wclock[b];
+                }
+            }
+            FleetStrategy::Das => {
+                let mut next = 0usize;
+                while next < count {
+                    let mut idx = 0;
+                    for b in 1..n {
+                        if wclock[b] < wclock[idx] {
+                            idx = b;
+                        }
+                    }
+                    let take = grains[idx].min(count - next);
+                    let t0 = wclock[idx];
+                    let time_s =
+                        stream_item_stats(fleet, &mut cache, &canon, idx, *shape).time_s;
+                    wclock[idx] += DISPATCH_S + take as f64 * time_s;
+                    for (j, &id) in members[next..next + take].iter().enumerate() {
+                        completions[id] = t0 + DISPATCH_S + (j + 1) as f64 * time_s;
+                    }
+                    next += take;
+                    items[idx] += take;
+                    grabs[idx] += 1;
+                    *counts[idx].entry(*shape).or_insert(0) += take;
+                    finish[idx] = wclock[idx];
+                }
+            }
+        }
+        // The barrier: no board starts the next wave before this one
+        // fully drains. Every wave has members, so the max is always a
+        // participating board's finish — `finish` therefore carries the
+        // run's makespan and `prev_end` only gates the next start.
+        prev_end = wclock.iter().cloned().fold(start, f64::max);
+    }
+
+    finish_stream_stats(
+        fleet,
+        format!("wave {} [{}]", strategy.label(), board_names(fleet)),
+        arrivals,
+        &mut cache,
+        &canon,
+        &counts,
+        &items,
+        &grabs,
+        &finish,
+        completions,
+        &mut depth_events,
+    )
+}
+
 /// Capacity planning: the smallest homogeneous fleet of `board` clones
 /// sustaining `target_rps` requests per second on `shape` batches of
 /// `batch` items, up to `max_boards` (clamped to the fleet capacity,
@@ -670,6 +1173,213 @@ mod tests {
         let slow2 = simulate_fleet(&Fleet::homogeneous(2, &slow), FleetStrategy::Das, shape, 32);
         assert!(st.throughput_rps < fast2.throughput_rps);
         assert!(st.throughput_rps > slow2.throughput_rps);
+    }
+
+    /// ISSUE 4 degeneracy anchor (sim layer): an all-at-t=0
+    /// single-shape stream is exactly `simulate_fleet` under fleet-DAS
+    /// — same grab sequence, bit-for-bit equal makespan, energy and
+    /// per-board tallies.
+    #[test]
+    fn stream_degenerates_to_one_wave_das_bit_for_bit() {
+        for fleet in [hetero(), skewed(), Fleet::parse("exynos5422").unwrap()] {
+            let shape = GemmShape::square(512);
+            let batch = 17;
+            let wave = simulate_fleet(&fleet, FleetStrategy::Das, shape, batch);
+            let stream = simulate_fleet_stream(&fleet, &burst_arrivals(shape, batch));
+            assert_eq!(stream.makespan_s, wave.makespan_s, "{}", wave.label);
+            assert_eq!(stream.energy_j, wave.energy_j, "{}", wave.label);
+            assert_eq!(stream.items_completed(), batch);
+            for (s, w) in stream.boards.iter().zip(&wave.boards) {
+                assert_eq!(s.items, w.items, "{}/{}", wave.label, w.name);
+                assert_eq!(s.grabs, w.grabs, "{}/{}", wave.label, w.name);
+                assert_eq!(s.busy_s, w.busy_s, "{}/{}", wave.label, w.name);
+                assert_eq!(s.finish_s, w.finish_s, "{}/{}", wave.label, w.name);
+                assert_eq!(s.energy_j, w.energy_j, "{}/{}", wave.label, w.name);
+            }
+        }
+    }
+
+    /// The wave-mode comparator degenerates the same way, for every
+    /// strategy: one all-at-t=0 single-shape wave is `simulate_fleet`
+    /// bit for bit.
+    #[test]
+    fn waves_degenerate_to_simulate_fleet_bit_for_bit() {
+        let max_group = crate::coordinator::MAX_GROUP_LEN;
+        for strategy in [FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das] {
+            let shape = GemmShape::square(512);
+            let batch = 24;
+            let direct = simulate_fleet(&hetero(), strategy, shape, batch);
+            let waves =
+                simulate_fleet_waves(&hetero(), strategy, &burst_arrivals(shape, batch), max_group);
+            assert_eq!(waves.makespan_s, direct.makespan_s, "{}", direct.label);
+            assert_eq!(waves.energy_j, direct.energy_j, "{}", direct.label);
+            for (s, w) in waves.boards.iter().zip(&direct.boards) {
+                assert_eq!(s.items, w.items, "{}/{}", direct.label, w.name);
+                assert_eq!(s.grabs, w.grabs, "{}/{}", direct.label, w.name);
+                assert_eq!(s.busy_s, w.busy_s, "{}/{}", direct.label, w.name);
+                assert_eq!(s.finish_s, w.finish_s, "{}/{}", direct.label, w.name);
+                assert_eq!(s.energy_j, w.energy_j, "{}/{}", direct.label, w.name);
+            }
+        }
+    }
+
+    /// Two different shapes arriving together: the wave barrier
+    /// serializes them, the stream runs them on different boards
+    /// concurrently — the structural streaming win.
+    #[test]
+    fn stream_parallelizes_across_shapes_where_waves_serialize() {
+        let arrivals = vec![
+            Arrival::at(GemmShape::square(512), 0.0),
+            Arrival::at(GemmShape::square(640), 0.0),
+        ];
+        let stream = simulate_fleet_stream(&hetero(), &arrivals);
+        assert_eq!(stream.items_completed(), 2);
+        // One request per board.
+        assert!(stream.boards.iter().all(|b| b.items == 1), "{:?}", stream.boards);
+        for strategy in [FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das] {
+            let waves = simulate_fleet_waves(
+                &hetero(),
+                strategy,
+                &arrivals,
+                crate::coordinator::MAX_GROUP_LEN,
+            );
+            assert_eq!(waves.items_completed(), 2);
+            assert!(
+                stream.makespan_s < waves.makespan_s,
+                "stream {:.4}s must beat {} {:.4}s",
+                stream.makespan_s,
+                waves.label,
+                waves.makespan_s
+            );
+        }
+    }
+
+    /// Work conservation on a uniform burst: splitting one burst into
+    /// barriered waves can only add idle, so the stream's makespan
+    /// never exceeds the wave replay's.
+    #[test]
+    fn stream_never_loses_to_barriered_waves_on_uniform_bursts() {
+        let shape = GemmShape::square(512);
+        let arrivals = burst_arrivals(shape, 40);
+        let stream = simulate_fleet_stream(&hetero(), &arrivals);
+        // Small groups force several waves with barriers between them.
+        let waves = simulate_fleet_waves(&hetero(), FleetStrategy::Das, &arrivals, 8);
+        assert_eq!(waves.items_completed(), 40);
+        assert!(
+            stream.makespan_s <= waves.makespan_s + 1e-12,
+            "stream {:.4}s vs barriered waves {:.4}s",
+            stream.makespan_s,
+            waves.makespan_s
+        );
+        // Utilization can shift a little with the board allocation, but
+        // removing five barriers must not *cost* utilization.
+        assert!(
+            stream.utilization >= 0.98 * waves.utilization,
+            "stream util {:.3} vs waves {:.3}",
+            stream.utilization,
+            waves.utilization
+        );
+    }
+
+    /// Streaming bookkeeping: completions merge in submission order,
+    /// every completion follows its arrival, idle tails and utilization
+    /// are consistent, and the replay is deterministic.
+    #[test]
+    fn stream_accounting_is_consistent_and_deterministic() {
+        let shapes = [GemmShape::square(256), GemmShape::square(384), GemmShape::square(512)];
+        let mut rng = Rng::new(0xBEEF);
+        let arrivals = poisson_arrivals(&mut rng, &shapes, 30, 40.0);
+        let a = simulate_fleet_stream(&skewed(), &arrivals);
+        let b = simulate_fleet_stream(&skewed(), &arrivals);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.completions, b.completions);
+        assert_eq!(a.mean_queue_depth, b.mean_queue_depth);
+        assert_eq!(a.max_queue_depth, b.max_queue_depth);
+        assert_eq!(
+            a.boards.iter().map(|x| x.items).collect::<Vec<_>>(),
+            b.boards.iter().map(|x| x.items).collect::<Vec<_>>()
+        );
+
+        assert_eq!(a.requests, 30);
+        assert_eq!(a.items_completed(), 30);
+        assert_eq!(a.completions.len(), 30);
+        for (i, (&done, arr)) in a.completions.iter().zip(&arrivals).enumerate() {
+            assert!(done.is_finite(), "request {i} never completed");
+            assert!(done > arr.arrive_s, "request {i} completed before arriving");
+            assert!(done <= a.makespan_s + 1e-12);
+        }
+        // Executed-per-shape histogram == submitted histogram.
+        for &(shape, executed) in &a.per_shape {
+            let submitted = arrivals.iter().filter(|x| x.shape == shape).count();
+            assert_eq!(executed, submitted, "{shape:?}");
+        }
+        assert_eq!(a.per_shape.iter().map(|(_, c)| c).sum::<usize>(), 30);
+        // Per-board accounting.
+        assert!(a.utilization > 0.0 && a.utilization <= 1.0, "{}", a.utilization);
+        for bd in &a.boards {
+            assert!(bd.finish_s <= a.makespan_s + 1e-12);
+            assert!((bd.idle_tail_s - (a.makespan_s - bd.finish_s)).abs() < 1e-12);
+            assert!(bd.utilization >= 0.0 && bd.utilization <= 1.0);
+            assert!(bd.busy_s <= bd.finish_s + 1e-12, "busy within active window");
+        }
+        assert!(a.max_queue_depth >= 1);
+        assert!(a.mean_queue_depth >= 0.0);
+    }
+
+    /// An arrival gap idles the whole fleet: the stream waits for the
+    /// next request instead of spinning, and the makespan extends past
+    /// the late arrival.
+    #[test]
+    fn stream_idles_across_arrival_gaps() {
+        let shape = GemmShape::square(256);
+        let arrivals = vec![Arrival::at(shape, 0.0), Arrival::at(shape, 10.0)];
+        let st = simulate_fleet_stream(&hetero(), &arrivals);
+        assert_eq!(st.items_completed(), 2);
+        assert!(st.makespan_s > 10.0, "{}", st.makespan_s);
+        assert!(st.completions[1] > 10.0);
+        assert!(st.completions[0] < 1.0, "first request served immediately");
+        // The fleet mostly idled: utilization reflects the gap.
+        assert!(st.utilization < 0.5, "{}", st.utilization);
+        // A board that idle-waits toward an arrival another board wins
+        // must report its *last completion* as finish, not the wait:
+        // here board 0 wins both grabs, so board 1 never finishes
+        // anything and its idle tail spans the whole run.
+        let idle = st.boards.iter().find(|b| b.items == 0).expect("one idle board");
+        assert_eq!(idle.finish_s, 0.0, "idle board never completed anything");
+        assert_eq!(idle.idle_tail_s, st.makespan_s);
+        let busy = st.boards.iter().find(|b| b.items == 2).expect("one busy board");
+        assert!(busy.finish_s > 10.0 && busy.idle_tail_s.abs() < 1e-12);
+    }
+
+    /// A single-board burst peaks the admission queue at the burst size
+    /// and drains it monotonically.
+    #[test]
+    fn stream_queue_depth_tracks_bursts() {
+        let f = Fleet::parse("exynos5422").unwrap();
+        let shape = GemmShape::square(256);
+        let st = simulate_fleet_stream(&f, &burst_arrivals(shape, 12));
+        assert_eq!(st.max_queue_depth, 12, "burst peak");
+        assert!(st.mean_queue_depth > 0.0 && st.mean_queue_depth <= 12.0);
+        let grain = f.grains()[0];
+        assert_eq!(st.boards[0].grabs, (12usize.div_ceil(grain)) as u64);
+    }
+
+    #[test]
+    fn poisson_arrivals_are_monotone_and_deterministic() {
+        let shapes = [GemmShape::square(128), GemmShape::square(256)];
+        let a = poisson_arrivals(&mut Rng::new(7), &shapes, 50, 10.0);
+        let b = poisson_arrivals(&mut Rng::new(7), &shapes, 50, 10.0);
+        assert_eq!(a, b, "same seed, same stream");
+        assert_eq!(a.len(), 50);
+        for w in a.windows(2) {
+            assert!(w[1].arrive_s >= w[0].arrive_s, "arrivals must be sorted");
+        }
+        assert!(a.iter().all(|x| x.arrive_s > 0.0 && x.arrive_s.is_finite()));
+        assert!(a.iter().all(|x| shapes.contains(&x.shape)));
+        // Mean inter-arrival ≈ 1/rate over 50 draws (loose bound).
+        let mean = a.last().unwrap().arrive_s / 50.0;
+        assert!((0.04..0.25).contains(&mean), "mean gap {mean}");
     }
 
     #[test]

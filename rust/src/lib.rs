@@ -34,12 +34,19 @@
 //! * [`native`] — real multithreaded packed GEMM applying those
 //!   strategies on any topology (numerics verified against the oracle);
 //! * [`runtime`], [`coordinator`] — the PJRT artifact runtime (HLO text
-//!   → compile → execute), the GEMM service on top, the same-shape
-//!   request batcher and the multi-board `FleetDispatcher` front-end;
+//!   → compile → execute), the GEMM service on top, the generic-key
+//!   request `Batcher`, the one-wave-per-batch `FleetDispatcher` and
+//!   the streaming `StreamDispatcher` front-end (timestamped admission,
+//!   mixed-shape waves of per-shape subgroups, work-conserving backfill
+//!   with no wave barrier, responses merged in submission order);
 //! * [`fleet`] — the scale-out layer: a `Fleet` of heterogeneous
 //!   `Board`s sharded by the board-level fleet-SSS/SAS/DAS strategies
-//!   (cluster : SoC :: board : fleet), with a deterministic virtual-time
-//!   multi-board simulator for capacity planning;
+//!   (cluster : SoC :: board : fleet) with mixed-shape wave shard plans,
+//!   plus deterministic virtual-time simulators — one batch wave
+//!   (`simulate_fleet`), arrival-driven streaming
+//!   (`simulate_fleet_stream`, idle-tail/queue-depth/utilization
+//!   accounting) and the synchronous wave comparator, for capacity
+//!   planning and streaming-vs-wave studies;
 //! * [`search`], [`figures`] — the per-cluster empirical (mc, kc)
 //!   search (now swept per OPP, with persisted per-point presets) and
 //!   the regeneration harness for every evaluation figure in the paper

@@ -11,7 +11,8 @@
 //! * `fleet    [--boards P1,P2,…] [--size R] [--batch N]` — multi-board
 //!   virtual-time sweep: per-board and fleet-aggregate GFLOPS/energy
 //!   under fleet-SSS/SAS/DAS (`--report` regenerates the full
-//!   fleet-scaling report);
+//!   fleet-scaling report; `--stream` replays a Poisson-like arrival
+//!   stream through the streaming dispatcher vs the wave modes);
 //! * `dvfs     [--governor G] [--size R] [--sched S]` — replay a DVFS
 //!   schedule, comparing online weight retuning against stale boot
 //!   weights (`--report` regenerates the OPP Pareto report;
@@ -78,6 +79,8 @@ USAGE: amp-gemm <figures|search|gemm|calibrate|serve|fleet|dvfs|soc> [options]
   serve     [--addr 127.0.0.1:7070] [--artifacts artifacts]
   fleet     [--boards exynos5422,juno_r0] [--size R] [--batch N] [--sched sss|sas|das]
   fleet     --report [--quick] [--out results]      fixed-fleet scaling report
+  fleet     --stream [--boards ...] [--sizes R1,R2,...] [--requests N]
+            [--rate RPS] [--seed S]                 streaming-vs-wave sweep
   dvfs      [--governor performance|powersave|ondemand[:ms]] [--size R]
             [--sched sas|casas|das|cadas] [--ladder] [--tune-opps]
   dvfs      --report [--quick] [--out results]      OPP Pareto + retuning report
@@ -303,6 +306,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 /// regenerates the full fleet-scaling report (tables + assertions)
 /// instead.
 fn cmd_fleet(args: &Args) -> Result<(), String> {
+    if args.flag("stream") {
+        if args.flag("report") {
+            return Err("--stream and --report are separate modes; pick one".into());
+        }
+        return cmd_fleet_stream(args);
+    }
     if args.flag("report") {
         // The report runs a fixed fleet/shape matrix (its assertions are
         // calibrated to them); the sweep flags apply to the ad-hoc mode.
@@ -370,6 +379,75 @@ fn cmd_fleet(args: &Args) -> Result<(), String> {
         }
         println!("{}", table.to_markdown());
     }
+    Ok(())
+}
+
+/// Streaming sweep (ISSUE 4): replay a deterministic Poisson-like
+/// arrival stream of mixed square shapes over the fleet — once per
+/// wave-mode strategy (today's synchronous one-wave-per-batch
+/// discipline) and once through the streaming dispatcher — and report
+/// makespan, utilization and queue-depth side by side, plus the
+/// stream's per-board breakdown.
+fn cmd_fleet_stream(args: &Args) -> Result<(), String> {
+    use amp_gemm::fleet::sim::poisson_arrivals;
+
+    let fleet = Fleet::parse(args.get_or("boards", "exynos5422,juno_r0"))?;
+    let sizes = args
+        .usize_list("sizes")?
+        .unwrap_or_else(|| vec![384, 512, 640]);
+    if sizes.iter().any(|&r| r == 0) {
+        return Err("--sizes entries must be at least 1".into());
+    }
+    let count = args.usize_or("requests", 32)?;
+    if count == 0 {
+        return Err("--requests must be at least 1".into());
+    }
+    let rate = args.f64_or("rate", 80.0)?;
+    if !rate.is_finite() || rate <= 0.0 {
+        return Err(format!("--rate must be a positive request rate, got {rate}"));
+    }
+    let seed = args.usize_or("seed", 42)? as u64;
+
+    let shapes: Vec<GemmShape> = sizes.iter().map(|&r| GemmShape::square(r)).collect();
+    let mut rng = Rng::new(seed);
+    let arrivals = poisson_arrivals(&mut rng, &shapes, count, rate);
+    println!(
+        "streaming {count} requests over {} boards — sizes {sizes:?}, \
+         rate {rate:.1} req/s, seed {seed} (virtual time)\n",
+        fleet.num_boards()
+    );
+
+    let (table, _, stream) = figures::fleet::stream_table(
+        &format!(
+            "streaming vs wave dispatch — {} requests, last arrival {:.3} s",
+            count,
+            arrivals.last().expect("non-empty").arrive_s
+        ),
+        &fleet,
+        &arrivals,
+    );
+    println!("{}", table.to_markdown());
+
+    let mut boards = Table::new(
+        &format!("{} — per-board breakdown", stream.label),
+        &[
+            "board", "items", "grabs", "busy [s]", "finish [s]", "idle tail [s]", "util",
+            "energy [J]",
+        ],
+    );
+    for b in &stream.boards {
+        boards.push_row(vec![
+            b.name.clone(),
+            b.items.to_string(),
+            b.grabs.to_string(),
+            format!("{:.3}", b.busy_s),
+            format!("{:.3}", b.finish_s),
+            format!("{:.3}", b.idle_tail_s),
+            format!("{:.3}", b.utilization),
+            format!("{:.1}", b.energy_j),
+        ]);
+    }
+    println!("{}", boards.to_markdown());
     Ok(())
 }
 

@@ -54,6 +54,19 @@ impl Rng {
         self.next_f64() < p
     }
 
+    /// Exponential draw with the given rate (mean `1/rate`): the
+    /// inter-arrival gap of a Poisson process — the standard generator
+    /// for staggered streaming workloads. Always finite and >= 0.
+    pub fn gen_exp(&mut self, rate: f64) -> f64 {
+        assert!(
+            rate.is_finite() && rate > 0.0,
+            "exponential rate must be positive, got {rate}"
+        );
+        // next_f64() < 1, so the argument stays in (0, 1] and the log
+        // is finite.
+        -(1.0 - self.next_f64()).ln() / rate
+    }
+
     /// Pick a random element of a slice.
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.gen_range(0, xs.len())]
@@ -135,6 +148,21 @@ mod tests {
         let n = 100_000;
         let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
         assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn gen_exp_is_positive_with_the_right_mean() {
+        let mut r = Rng::new(19);
+        let n = 100_000;
+        let rate = 4.0;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.gen_exp(rate);
+            assert!(x.is_finite() && x >= 0.0, "draw {x}");
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.01, "mean {mean}");
     }
 
     #[test]

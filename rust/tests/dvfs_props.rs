@@ -8,9 +8,20 @@
 //!   single OPP;
 //! * the degenerate inputs (`scale(0)`, zero/NaN frequency) are clamped
 //!   or rejected cleanly instead of panicking or poisoning the weights.
+//!
+//! ISSUE 4 satellite: the differential suite at the bottom pins the
+//! `dvfs::sim` replay against a fixed-point DES run on *static*
+//! schedules across all four presets (`exynos5422`, `juno_r0`,
+//! `dynamiq_3c`, `pe_hybrid`) — extending the exynos-only bit-for-bit
+//! pin in `tests/exynos_regression.rs` to every preset, and exercising
+//! the epoch-fluid machinery at a fixed operating point via a same-rung
+//! transition.
 
-use amp_gemm::dvfs::{DvfsSchedule, Governor, Ondemand, Transition};
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::dvfs::sim::{simulate_dvfs, DvfsStrategy, Retune};
+use amp_gemm::dvfs::{DvfsSchedule, Governor, Ondemand, Powersave, Transition};
 use amp_gemm::model::PerfModel;
+use amp_gemm::sim::simulate;
 use amp_gemm::soc::{ClusterId, ClusterSpec, OperatingPoint, OppTable, SocSpec};
 use amp_gemm::util::prop;
 use amp_gemm::util::rng::Rng;
@@ -196,6 +207,123 @@ fn prop_degenerate_inputs_never_poison_weights() {
             Ok(())
         },
     );
+}
+
+fn all_presets() -> Vec<SocSpec> {
+    vec![
+        SocSpec::exynos5422(),
+        SocSpec::juno_r0(),
+        SocSpec::dynamiq_3c(),
+        SocSpec::pe_hybrid(),
+    ]
+}
+
+fn nominal_rungs(soc: &SocSpec) -> Vec<usize> {
+    soc.clusters.iter().map(|c| c.opps.nominal_idx()).collect()
+}
+
+/// Differential, part 1 — *static* schedules delegate to the DES
+/// exactly, on every preset: both the nominal pin (boot descriptor)
+/// and the powersave pin (bottom rungs), for SAS and DAS families,
+/// must reproduce a direct fixed-point DES run bit for bit.
+#[test]
+fn static_schedules_match_fixed_point_des_on_every_preset() {
+    for soc in all_presets() {
+        let plans = [DvfsSchedule::nominal(&soc), Powersave.plan(&soc, 10.0)];
+        for plan in &plans {
+            assert!(plan.is_static());
+            plan.validate(&soc).unwrap();
+            let model = PerfModel::new(plan.soc_at(&soc, 0.0));
+            let shape = GemmShape::square(1024);
+            for strat in [
+                DvfsStrategy::Sas { cache_aware: true },
+                DvfsStrategy::Das { cache_aware: true },
+            ] {
+                let direct = simulate(&model, &strat.to_spec(&model), shape);
+                for retune in [Retune::Boot, Retune::Online] {
+                    let st = simulate_dvfs(&soc, strat, shape, plan, retune);
+                    assert_eq!(st.time_s, direct.time_s, "{}: {}", soc.name, st.label);
+                    assert_eq!(st.gflops, direct.gflops, "{}: {}", soc.name, st.label);
+                    assert_eq!(
+                        st.energy_j, direct.energy.energy_j,
+                        "{}: {}",
+                        soc.name, st.label
+                    );
+                    assert_eq!(st.grabs, direct.grabs, "{}: {}", soc.name, st.label);
+                    assert_eq!(st.transitions_applied, 0);
+                    assert_eq!(st.retunes, 0);
+                }
+            }
+        }
+    }
+}
+
+/// Differential, part 2 — the *epoch-fluid* replay at a fixed point:
+/// a same-rung transition forces the fluid machinery to run while the
+/// operating point never actually changes, so its calibrated rates
+/// must reproduce the fixed-point DES makespan — tightly for the SAS
+/// fluid drain (the calibration makes every cluster finish at the DES
+/// instant), within quantization for the chunk-grained DAS drain.
+#[test]
+fn forced_epoch_fluid_matches_fixed_point_des_on_every_preset() {
+    for soc in all_presets() {
+        let rungs = nominal_rungs(&soc);
+        // A "transition" to the rung already in effect: epochs split at
+        // t = 1 ms, rates identical on both sides.
+        let plan = DvfsSchedule::new(
+            rungs.clone(),
+            vec![Transition { t_s: 1e-3, cluster: ClusterId(0), opp: rungs[0] }],
+        );
+        assert!(!plan.is_static(), "the same-rung transition must force the fluid path");
+        plan.validate(&soc).unwrap();
+        let model = PerfModel::new(soc.clone());
+        // Large enough that one dynamic chunk (the slow cluster's `mc`
+        // rows) is a small fraction of the makespan — the fluid and DES
+        // drains may disagree by up to a chunk at the queue's end.
+        let shape = GemmShape::square(2048);
+
+        let sas = DvfsStrategy::Sas { cache_aware: true };
+        let direct_sas = simulate(&model, &sas.to_spec(&model), shape);
+        let fluid_sas = simulate_dvfs(&soc, sas, shape, &plan, Retune::Boot);
+        let rel = (fluid_sas.time_s / direct_sas.time_s - 1.0).abs();
+        assert!(
+            rel < 1e-6,
+            "{}: fluid SAS {} s vs DES {} s (rel {rel:e})",
+            soc.name,
+            fluid_sas.time_s,
+            direct_sas.time_s
+        );
+        assert_eq!(fluid_sas.transitions_applied, 1, "{}", soc.name);
+        let share_sum: f64 = fluid_sas.cluster_share.iter().sum();
+        assert!((share_sum - 1.0).abs() < 1e-9, "{}: shares {share_sum}", soc.name);
+
+        let das = DvfsStrategy::Das { cache_aware: true };
+        let direct_das = simulate(&model, &das.to_spec(&model), shape);
+        let fluid_das = simulate_dvfs(&soc, das, shape, &plan, Retune::Boot);
+        let rel = (fluid_das.time_s / direct_das.time_s - 1.0).abs();
+        assert!(
+            rel < 0.30,
+            "{}: fluid DAS {} s vs DES {} s (rel {rel:.3})",
+            soc.name,
+            fluid_das.time_s,
+            direct_das.time_s
+        );
+        let share_sum: f64 = fluid_das.cluster_share.iter().sum();
+        assert!((share_sum - 1.0).abs() < 1e-9, "{}: shares {share_sum}", soc.name);
+        assert!(fluid_das.grabs > 0);
+        // Energy stays in the same regime (loose sanity, both models
+        // charge busy/poll rails plus DRAM).
+        for (fluid, direct) in [
+            (fluid_sas.energy_j, direct_sas.energy.energy_j),
+            (fluid_das.energy_j, direct_das.energy.energy_j),
+        ] {
+            assert!(
+                fluid.is_finite() && fluid > 0.0 && (fluid / direct - 1.0).abs() < 0.40,
+                "{}: fluid energy {fluid} J vs DES {direct} J",
+                soc.name
+            );
+        }
+    }
 }
 
 /// A hand-written multi-rung schedule over a random topology keeps

@@ -1,0 +1,95 @@
+//! Golden regression for the `figures::fleet` report text on the
+//! pinned exynos5422 + juno_r0 two-board fleet (ISSUE 4 satellite):
+//! the streaming table's *wave-mode* rows are reconstructed here from
+//! independent `simulate_fleet_waves` runs with the format strings
+//! duplicated verbatim, so a streaming-layer change that silently
+//! shifts the wave-mode numbers (or their rendering) fails this test
+//! rather than drifting the report. The wave engine itself is tied
+//! back to the pre-streaming `simulate_fleet` numbers through the
+//! burst degeneracy, closing the loop to the pinned fleet regression
+//! suite.
+
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::coordinator::MAX_GROUP_LEN;
+use amp_gemm::figures::fleet::{pinned_stream_arrivals, pinned_stream_fleet, stream_section};
+use amp_gemm::fleet::sim::{burst_arrivals, simulate_fleet, simulate_fleet_waves, StreamStats};
+use amp_gemm::fleet::FleetStrategy;
+
+/// The report's row format, duplicated on purpose: if
+/// `figures::fleet::stream_row` changes formatting, the golden breaks.
+fn golden_row(st: &StreamStats) -> String {
+    format!(
+        "| {} | {:.3} | {:.2} | {:.3} | {:.2} | {} | {:.1} |",
+        st.label,
+        st.makespan_s,
+        st.throughput_rps,
+        st.utilization,
+        st.mean_queue_depth,
+        st.max_queue_depth,
+        st.energy_j
+    )
+}
+
+/// Title, header and every wave-mode row of the streaming table are
+/// pinned against an independent replay of the pinned scenario.
+#[test]
+fn stream_report_wave_mode_text_pinned() {
+    let (table, waves, stream) = stream_section(true);
+    let md = table.to_markdown();
+
+    // Structural golden: title and header are literal.
+    assert!(
+        md.starts_with(
+            "### Streaming vs wave dispatch — exynos5422 + juno_r0, 24 staggered arrivals\n"
+        ),
+        "table title drifted:\n{md}"
+    );
+    assert!(
+        md.contains(
+            "| mode | makespan [s] | req/s | utilization | mean depth | max depth | energy [J] |"
+        ),
+        "table header drifted:\n{md}"
+    );
+    assert_eq!(table.rows.len(), 4, "three wave modes + the stream");
+
+    // Numeric golden: wave-mode rows must equal an independent replay,
+    // rendered with the duplicated format strings.
+    let fleet = pinned_stream_fleet();
+    let arrivals = pinned_stream_arrivals(true);
+    for (strategy, reported) in
+        [FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das].iter().zip(&waves)
+    {
+        let independent = simulate_fleet_waves(&fleet, *strategy, &arrivals, MAX_GROUP_LEN);
+        let row = golden_row(&independent);
+        assert!(
+            md.contains(&row),
+            "{}: wave-mode row drifted.\nexpected: {row}\nreport:\n{md}",
+            independent.label
+        );
+        assert_eq!(reported.makespan_s, independent.makespan_s, "{}", independent.label);
+        assert_eq!(reported.energy_j, independent.energy_j, "{}", independent.label);
+    }
+    assert!(md.contains(&golden_row(&stream)), "stream row drifted:\n{md}");
+
+    // Rendering is deterministic: a second regeneration is identical.
+    let (again, _, _) = stream_section(true);
+    assert_eq!(md, again.to_markdown(), "report text must be reproducible");
+}
+
+/// Closes the loop to the pre-streaming engine: on the pinned fleet, a
+/// same-shape burst replayed through the wave comparator is
+/// `simulate_fleet` bit for bit — so the wave-mode numbers in the
+/// report are exactly the numbers the fleet regression suite pins.
+#[test]
+fn wave_mode_numbers_are_the_simulate_fleet_numbers() {
+    let fleet = pinned_stream_fleet();
+    let shape = GemmShape::square(1024);
+    for strategy in [FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das] {
+        let direct = simulate_fleet(&fleet, strategy, shape, 32);
+        let waves =
+            simulate_fleet_waves(&fleet, strategy, &burst_arrivals(shape, 32), MAX_GROUP_LEN);
+        assert_eq!(waves.makespan_s, direct.makespan_s, "{}", direct.label);
+        assert_eq!(waves.energy_j, direct.energy_j, "{}", direct.label);
+        assert_eq!(waves.items_completed(), 32);
+    }
+}

@@ -1,5 +1,11 @@
 //! Coordinator + TCP service integration: protocol robustness, failure
 //! injection, concurrent mixed workloads and cross-backend agreement.
+//!
+//! Anti-flake contract (ISSUE 4 satellite): every server in this suite
+//! binds `127.0.0.1:0` and reads the kernel-assigned port back from
+//! [`server::ServerHandle::addr`] — never a hardcoded port that could
+//! collide when cargo runs test binaries in parallel. The
+//! `parallel_servers_get_distinct_ports` test pins that property.
 
 use amp_gemm::blis::gemm::GemmShape;
 use amp_gemm::coordinator::{server, Backend, Coordinator, Request};
@@ -149,6 +155,29 @@ fn cross_backend_checksums_agree_over_the_wire() {
         assert!((cb - cl_).abs() < 1e-5 * cb.abs().max(1.0), "variants must agree: {cb} vs {cl_}");
     }
     h.shutdown();
+}
+
+/// ISSUE 4 satellite: binding port 0 must hand every concurrently
+/// running server its own kernel-assigned port — the property that
+/// keeps parallel test binaries from colliding. Each server answers on
+/// its own address and isolates its own metrics.
+#[test]
+fn parallel_servers_get_distinct_ports() {
+    let servers: Vec<_> = (0..4).map(|_| start(false)).collect();
+    let mut ports: Vec<u16> = servers.iter().map(|(_, h)| h.addr.port()).collect();
+    assert!(ports.iter().all(|&p| p != 0), "the OS must assign real ports: {ports:?}");
+    ports.sort_unstable();
+    ports.dedup();
+    assert_eq!(ports.len(), 4, "every server needs its own port");
+    for (i, (coord, h)) in servers.iter().enumerate() {
+        let mut cl = server::Client::connect(h.addr).unwrap();
+        assert_eq!(cl.call("PING").unwrap(), "PONG", "server {i}");
+        assert!(cl.call(&format!("GEMM 32 32 32 {i} native")).unwrap().starts_with("OK"));
+        assert_eq!(coord.metrics().completed, 1, "server {i} counts only its own traffic");
+    }
+    for (_, h) in servers {
+        h.shutdown();
+    }
 }
 
 /// Out-of-range requests are rejected with a reason, in-range accepted

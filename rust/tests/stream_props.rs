@@ -1,0 +1,295 @@
+//! Property tests for the streaming dispatcher (ISSUE 4 satellite):
+//! over random fleets (1–4 boards of mixed presets), random mixed
+//! shapes and random arrival orders from `util::rng`,
+//!
+//! * results merge in exact submission order (the completions vector is
+//!   submission-indexed and every entry is set exactly once);
+//! * every request executes exactly once — the per-shape shard-sum
+//!   invariant (executed histogram == submitted histogram);
+//! * the virtual-time replay is deterministic across two runs;
+//!
+//! plus the ISSUE acceptance pin: an all-at-t=0 single-shape stream
+//! through the *real-thread* `StreamDispatcher` reproduces
+//! `FleetDispatcher::dispatch` bit for bit.
+
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::coordinator::{
+    Backend, FleetDispatcher, Request, StreamDispatcher, StreamRequest, MAX_GROUP_LEN,
+};
+use amp_gemm::fleet::sim::{
+    burst_arrivals, simulate_fleet, simulate_fleet_stream, simulate_fleet_waves, Arrival,
+};
+use amp_gemm::fleet::{Board, Fleet, FleetStrategy};
+use amp_gemm::soc::SocSpec;
+use amp_gemm::util::prop;
+use amp_gemm::util::rng::Rng;
+use std::sync::Arc;
+
+const PRESETS: [&str; 4] = ["exynos5422", "juno_r0", "dynamiq_3c", "symmetric2"];
+const SIZES: [usize; 4] = [96, 128, 192, 256];
+
+/// A random fleet of 1–4 boards and a random mixed-shape stream whose
+/// arrival order is independent of submission order (instants are drawn
+/// i.i.d., including exact ties via a coarse grid).
+fn random_stream(r: &mut Rng) -> (String, Vec<Arrival>) {
+    let n = r.gen_range(1, 5); // 1..=4 boards
+    let toks: Vec<&str> = (0..n).map(|_| *r.choose(&PRESETS)).collect();
+    let count = r.gen_range(1, 25);
+    let arrivals: Vec<Arrival> = (0..count)
+        .map(|_| {
+            let shape = GemmShape::square(*r.choose(&SIZES));
+            // Coarse grid so equal instants (tie-breaking by submission
+            // index) actually occur.
+            let arrive = r.gen_range(0, 8) as f64 * 0.01;
+            Arrival::at(shape, arrive)
+        })
+        .collect();
+    (toks.join(","), arrivals)
+}
+
+/// The tentpole property: submission-order merge, exactly-once
+/// execution and bit-for-bit replay determinism on random streams.
+#[test]
+fn prop_stream_merges_in_order_exactly_once_deterministically() {
+    prop::check_default(
+        |r| random_stream(r),
+        |(list, arrivals)| {
+            let fleet = Fleet::parse(list).map_err(|e| e.to_string())?;
+            let a = simulate_fleet_stream(&fleet, arrivals);
+            // Exactly once, in total and per shape.
+            if a.items_completed() != arrivals.len() {
+                return Err(format!(
+                    "{} of {} requests executed",
+                    a.items_completed(),
+                    arrivals.len()
+                ));
+            }
+            for &(shape, executed) in &a.per_shape {
+                let submitted = arrivals.iter().filter(|x| x.shape == shape).count();
+                if executed != submitted {
+                    return Err(format!(
+                        "shape {shape:?}: executed {executed} vs submitted {submitted}"
+                    ));
+                }
+            }
+            // Submission-order merge: completions are indexed by
+            // submission order and every request finishes after it
+            // arrives.
+            if a.completions.len() != arrivals.len() {
+                return Err("completions must be submission-indexed".into());
+            }
+            for (i, (&done, arr)) in a.completions.iter().zip(arrivals.iter()).enumerate() {
+                if !done.is_finite() {
+                    return Err(format!("request {i} never completed"));
+                }
+                if done <= arr.arrive_s {
+                    return Err(format!(
+                        "request {i} completed at {done} before arriving at {}",
+                        arr.arrive_s
+                    ));
+                }
+                if done > a.makespan_s + 1e-12 {
+                    return Err(format!("request {i} completed after the makespan"));
+                }
+            }
+            // Deterministic replay, bit for bit.
+            let b = simulate_fleet_stream(&fleet, arrivals);
+            if a.makespan_s != b.makespan_s
+                || a.energy_j != b.energy_j
+                || a.completions != b.completions
+                || a.max_queue_depth != b.max_queue_depth
+            {
+                return Err("virtual-time replay must be deterministic".into());
+            }
+            // Board accounting stays coherent.
+            for bd in &a.boards {
+                if bd.finish_s > a.makespan_s + 1e-12 {
+                    return Err(format!("board {} finishes after the makespan", bd.name));
+                }
+                if bd.items > 0 && bd.grabs == 0 {
+                    return Err(format!("board {} has items but no grabs", bd.name));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The wave-mode comparator obeys the same exactly-once and
+/// submission-order contracts on random streams, for every strategy.
+#[test]
+fn prop_wave_replay_completes_in_submission_order() {
+    prop::check_default(
+        |r| {
+            let (list, arrivals) = random_stream(r);
+            let strategy = *r.choose(&[FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das]);
+            (list, arrivals, strategy)
+        },
+        |(list, arrivals, strategy)| {
+            let fleet = Fleet::parse(list).map_err(|e| e.to_string())?;
+            let st = simulate_fleet_waves(&fleet, *strategy, arrivals, MAX_GROUP_LEN);
+            if st.items_completed() != arrivals.len() {
+                return Err(format!(
+                    "{}: {} of {} requests executed",
+                    st.label,
+                    st.items_completed(),
+                    arrivals.len()
+                ));
+            }
+            for (i, (&done, arr)) in st.completions.iter().zip(arrivals.iter()).enumerate() {
+                if !done.is_finite() || done <= arr.arrive_s {
+                    return Err(format!("{}: request {i} completion {done}", st.label));
+                }
+            }
+            let again = simulate_fleet_waves(&fleet, *strategy, arrivals, MAX_GROUP_LEN);
+            if st.makespan_s != again.makespan_s || st.completions != again.completions {
+                return Err(format!("{}: wave replay must be deterministic", st.label));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE acceptance criterion: the all-at-t=0 single-shape stream
+/// through the real-thread dispatcher matches
+/// `FleetDispatcher::dispatch` bit for bit — responses (result
+/// matrices, checksums, board labels) and deterministic per-board
+/// metrics alike — for both static board strategies.
+#[test]
+fn stream_dispatcher_degenerate_burst_matches_fleet_dispatcher() {
+    let fleet = || {
+        Fleet::new(vec![
+            Board::native("exynos", SocSpec::exynos5422()),
+            Board::native("smp2", SocSpec::symmetric(2)),
+        ])
+    };
+    let make = |i: u64| -> Request {
+        let r = 64;
+        let mut rng = Rng::new(400 + i);
+        Request {
+            id: i,
+            shape: GemmShape::square(r),
+            a: Arc::new(rng.fill_matrix(r * r)),
+            b: Arc::new(rng.fill_matrix(r * r)),
+            backend: Backend::Auto,
+        }
+    };
+    for strategy in [FleetStrategy::Sss, FleetStrategy::Sas] {
+        let wave = FleetDispatcher::new(fleet());
+        let stream = StreamDispatcher::new(fleet());
+        let wave_out = wave.dispatch((0..8).map(make).collect(), strategy);
+        let stream_out = stream.dispatch_stream(
+            (0..8).map(|i| StreamRequest::at(0.0, make(i))).collect(),
+            strategy,
+        );
+        assert_eq!(wave_out.len(), stream_out.len());
+        for (i, (a, b)) in wave_out.iter().zip(&stream_out).enumerate() {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.id, i as u64, "{}", strategy.label());
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.c, b.c, "{}: request {i} result matrix", strategy.label());
+            assert_eq!(a.checksum, b.checksum, "{}: request {i}", strategy.label());
+            assert_eq!(
+                a.backend_label, b.backend_label,
+                "{}: request {i} board assignment",
+                strategy.label()
+            );
+        }
+        let (mw, ms) = (wave.metrics(), stream.metrics());
+        assert_eq!(mw.batches, ms.batches, "{}", strategy.label());
+        assert_eq!(mw.completed(), ms.completed());
+        assert_eq!(mw.total_flops(), ms.total_flops());
+        for ((na, a), (nb, b)) in mw.boards.iter().zip(&ms.boards) {
+            assert_eq!(na, nb);
+            assert_eq!(a.completed, b.completed, "{}: board {na}", strategy.label());
+            assert_eq!(a.total_flops, b.total_flops, "{}: board {na}", strategy.label());
+        }
+    }
+}
+
+/// Sim-layer twin of the degeneracy pin, over every preset pair: the
+/// burst stream is `simulate_fleet` under fleet-DAS, bit for bit.
+#[test]
+fn degenerate_burst_stream_is_one_wave_das_on_preset_pairs() {
+    for pair in ["exynos5422,juno_r0", "exynos5422,dynamiq_3c", "juno_r0,symmetric2"] {
+        let fleet = Fleet::parse(pair).unwrap();
+        let shape = GemmShape::square(256);
+        let wave = simulate_fleet(&fleet, FleetStrategy::Das, shape, 12);
+        let stream = simulate_fleet_stream(&fleet, &burst_arrivals(shape, 12));
+        assert_eq!(stream.makespan_s, wave.makespan_s, "{pair}");
+        assert_eq!(stream.energy_j, wave.energy_j, "{pair}");
+        for (s, w) in stream.boards.iter().zip(&wave.boards) {
+            assert_eq!(s.items, w.items, "{pair}/{}", w.name);
+            assert_eq!(s.grabs, w.grabs, "{pair}/{}", w.name);
+            assert_eq!(s.busy_s, w.busy_s, "{pair}/{}", w.name);
+            assert_eq!(s.finish_s, w.finish_s, "{pair}/{}", w.name);
+        }
+    }
+}
+
+/// The real-thread dispatcher on randomized sim-backend fleets: mixed
+/// shapes, scrambled arrival order, every strategy — responses always
+/// come back in submission order and every request executes once.
+#[test]
+fn prop_stream_dispatcher_orders_responses_on_sim_fleets() {
+    prop::check(
+        &prop::Config { cases: 12, seed: 0x57BEA7 },
+        |r| {
+            let n = r.gen_range(1, 4); // 1..=3 boards
+            let toks: Vec<&str> = (0..n).map(|_| *r.choose(&PRESETS)).collect();
+            let count = r.gen_range(1, 10);
+            let spec: Vec<(usize, f64)> = (0..count)
+                .map(|_| (*r.choose(&[48usize, 64, 96]), r.gen_range(0, 5) as f64 * 0.02))
+                .collect();
+            let strategy =
+                *r.choose(&[FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das]);
+            (toks.join(","), spec, strategy)
+        },
+        |(list, spec, strategy)| {
+            let boards: Vec<Board> = list
+                .split(',')
+                .map(Board::from_preset)
+                .collect::<Result<_, _>>()
+                .map_err(|e| e.to_string())?;
+            let d = StreamDispatcher::new(Fleet::new(boards));
+            let reqs: Vec<StreamRequest> = spec
+                .iter()
+                .enumerate()
+                .map(|(i, &(r, arrive))| {
+                    let mut rng = Rng::new(900 + i as u64);
+                    StreamRequest::at(
+                        arrive,
+                        Request {
+                            id: i as u64,
+                            shape: GemmShape::square(r),
+                            a: Arc::new(rng.fill_matrix(r * r)),
+                            b: Arc::new(rng.fill_matrix(r * r)),
+                            backend: Backend::Auto,
+                        },
+                    )
+                })
+                .collect();
+            let out = d.dispatch_stream(reqs, *strategy);
+            if out.len() != spec.len() {
+                return Err(format!("{} responses for {} requests", out.len(), spec.len()));
+            }
+            for (i, resp) in out.iter().enumerate() {
+                let resp = resp.as_ref().map_err(|e| format!("request {i}: {e}"))?;
+                if resp.id != i as u64 {
+                    return Err(format!(
+                        "response {i} carries id {} — submission order broken",
+                        resp.id
+                    ));
+                }
+            }
+            if d.metrics().completed() != spec.len() as u64 {
+                return Err(format!(
+                    "{} completed of {}",
+                    d.metrics().completed(),
+                    spec.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
