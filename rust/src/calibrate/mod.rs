@@ -1,0 +1,885 @@
+//! Empirical calibration layer: measured-rate tables and the
+//! [`WeightSource`] selector (DESIGN.md §5).
+//!
+//! The paper's asymmetric-static schedules hinge on ratios tuned from
+//! *measured* per-cluster throughput (§4 of arXiv:1506.08988), and the
+//! companion work shows the empirical optimum shifts with the operating
+//! point (arXiv:1507.05129). Everywhere else in this codebase the
+//! `sched::Weights` vector is derived from the *analytical* model
+//! ([`PerfModel::auto_weights`]); this layer turns the empirical search
+//! into an alternative — and composable — source of truth:
+//!
+//! * a [`RateTable`] holds **measured per-cluster GFLOPS rates**, one
+//!   row per `(cluster, OPP rung, parameter family)`, each row carrying
+//!   three shape-classed rates (small/medium/large `kc`-bound regimes,
+//!   [`ShapeClass`]). [`RateTable::measure`] fills it from isolated
+//!   per-cluster DES runs — the virtual twin of the paper's wall-clock
+//!   per-cluster GEMM measurements, so the rates include packing,
+//!   barrier and cache-spill effects the analytical steady-state rate
+//!   ignores. The table persists as TSV ([`RateTable::to_text`]) with
+//!   an exact round-trip (f64 shortest-repr `Display`, like
+//!   `search::OppPresetStore`);
+//! * a [`WeightSource`] selects how `sched::Weights` are built:
+//!   `Analytical` (the pre-calibration behavior, bit-for-bit),
+//!   `Empirical` (straight from a rate table) or `Hybrid` (the
+//!   arithmetic blend of the two normalized share vectors). It is
+//!   threaded through the intra-SoC SAS/CA-SAS split, the DVFS online
+//!   retuner (`dvfs::sim::simulate_dvfs_with` — per-OPP rates, not one
+//!   global ratio), fleet-SAS board weights and the capacity planner;
+//! * the **analytical-degeneracy anchor**: a table synthesized *from*
+//!   the analytical model ([`RateTable::from_analytical`]) reproduces
+//!   today's weights bit-for-bit on every preset (pinned by
+//!   `tests/calibrate_golden.rs`), so all existing regressions keep
+//!   their meaning and `Empirical` differs from `Analytical` only by
+//!   what was measured;
+//! * [`trajectory`] is the CI perf-trajectory harness: a pinned,
+//!   deterministic virtual-time metric suite emitted as
+//!   `BENCH_ci.json` and gated against the checked-in
+//!   `BENCH_baseline.json`.
+//!
+//! Measurement protocol (documented caveat): isolated runs execute with
+//! no other cluster active, while a joint SAS run pays the symmetric
+//! cross-cluster interference factor on every cluster's compute phases.
+//! The factor is multiplicative and common to all clusters, so it
+//! nearly cancels in the *ratios* the weight vector encodes — the
+//! residual bias is second-order (packing time is interference-free),
+//! far below the first-order packing/barrier asymmetry the analytical
+//! rates miss entirely.
+
+pub mod trajectory;
+
+use crate::blis::gemm::GemmShape;
+use crate::blis::params::BlisParams;
+use crate::model::PerfModel;
+use crate::sched::{ScheduleSpec, Weights};
+use crate::search::OppPresetStore;
+use crate::sim;
+use crate::soc::{ClusterId, SocSpec};
+
+/// Shape regime of a GEMM relative to the tuned `kc` blocking: the
+/// measured rate of a cluster depends on how many full-depth rank-1
+/// update panels the problem offers (`eff_k` amortization, partial-tile
+/// padding), so the table keys rates by a coarse `k`-vs-`kc` class
+/// instead of pretending one number fits every shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShapeClass {
+    /// `k < kc`: a single shallow pc block — overhead-bound.
+    Small,
+    /// `kc <= k < 4·kc`: a few pc blocks — the common service regime.
+    Medium,
+    /// `k >= 4·kc`: deep problems — the steady-state asymptote.
+    Large,
+}
+
+impl ShapeClass {
+    pub const ALL: [ShapeClass; 3] = [ShapeClass::Small, ShapeClass::Medium, ShapeClass::Large];
+
+    /// Index into a per-row `[small, medium, large]` rate triple.
+    pub fn idx(self) -> usize {
+        match self {
+            ShapeClass::Small => 0,
+            ShapeClass::Medium => 1,
+            ShapeClass::Large => 2,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ShapeClass::Small => "small",
+            ShapeClass::Medium => "medium",
+            ShapeClass::Large => "large",
+        }
+    }
+
+    /// Classify a shape against a reference `kc` (the lead cluster's
+    /// tuned depth).
+    pub fn of(shape: GemmShape, kc_ref: usize) -> ShapeClass {
+        let kc = kc_ref.max(1);
+        if shape.k < kc {
+            ShapeClass::Small
+        } else if shape.k < 4 * kc {
+            ShapeClass::Medium
+        } else {
+            ShapeClass::Large
+        }
+    }
+
+    /// Classify a shape on a topology: the reference depth is the lead
+    /// cluster's tuned `kc` (every preset's oblivious configuration
+    /// runs it everywhere, §4).
+    pub fn for_soc(soc: &SocSpec, shape: GemmShape) -> ShapeClass {
+        ShapeClass::of(shape, soc[soc.lead()].tuned.kc)
+    }
+
+    /// Representative square measurement shape of this class for a
+    /// reference `kc`: squarely inside the class bounds, *floored* to a
+    /// multiple of 8 so every fine-grain split is tidy without ever
+    /// rounding up past a class boundary. Stays inside its class for
+    /// any `kc_ref >= 16` (the generic measurement path's supported
+    /// range; [`RateTable::measure_with_reps`] asserts membership).
+    pub fn rep_shape(self, kc_ref: usize) -> GemmShape {
+        let kc = kc_ref.max(16);
+        let round8 = |x: usize| (x / 8).max(1) * 8;
+        let r = match self {
+            ShapeClass::Small => round8(kc / 2),
+            ShapeClass::Medium => round8(2 * kc),
+            ShapeClass::Large => round8(4 * kc + kc / 2),
+        };
+        GemmShape::square(r)
+    }
+}
+
+/// The generic measurement triple: one [`ShapeClass::rep_shape`] per
+/// class for a reference `kc` — what [`RateTable::measure`] and
+/// [`OppPresetStore::tune_measured`] run when no workload shapes are
+/// supplied.
+pub fn default_reps(kc_ref: usize) -> [GemmShape; 3] {
+    [
+        ShapeClass::Small.rep_shape(kc_ref),
+        ShapeClass::Medium.rep_shape(kc_ref),
+        ShapeClass::Large.rep_shape(kc_ref),
+    ]
+}
+
+/// The evaluation suite's canonical square sizes, one per shape class
+/// for the paper presets (lead `kc = 952`): the sizes the figure
+/// harness measures and asserts at, shared by `figures::calibrate` and
+/// `amp-gemm calibrate` so the persisted table and the report can
+/// never drift apart.
+pub fn canonical_reps() -> [GemmShape; 3] {
+    [
+        GemmShape::square(512),
+        GemmShape::square(2048),
+        GemmShape::square(4096),
+    ]
+}
+
+/// Which blocking-parameter family a measured rate belongs to — the two
+/// configurations the schedulers actually run (§4 vs §5.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// Every cluster on its own tuned optimum (CA-SAS/CA-DAS).
+    CacheAware,
+    /// Every cluster on the boot-lead cluster's parameters (SSS/SAS/DAS;
+    /// the lead is fixed at the *nominal* descriptor so a rung change
+    /// can never silently swap whose parameters "oblivious" means).
+    Oblivious,
+}
+
+impl Family {
+    pub const ALL: [Family; 2] = [Family::CacheAware, Family::Oblivious];
+
+    pub fn of(cache_aware: bool) -> Family {
+        if cache_aware {
+            Family::CacheAware
+        } else {
+            Family::Oblivious
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Family::CacheAware => "ca",
+            Family::Oblivious => "obl",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Family, String> {
+        match s {
+            "ca" => Ok(Family::CacheAware),
+            "obl" => Ok(Family::Oblivious),
+            other => Err(format!("bad family '{other}' (ca|obl)")),
+        }
+    }
+}
+
+/// One calibrated row: a cluster's aggregate GFLOPS at one OPP rung
+/// under one parameter family, shape-classed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RateRow {
+    pub cluster: ClusterId,
+    /// Ladder rung index the rates were taken at.
+    pub opp: usize,
+    pub freq_ghz: f64,
+    pub family: Family,
+    /// Cluster-aggregate GFLOPS per shape class, indexed by
+    /// [`ShapeClass::idx`] (`[small, medium, large]`).
+    pub rates: [f64; 3],
+}
+
+/// Calibrated per-cluster rate table of one SoC: the persisted product
+/// of the empirical search, and the thing a [`WeightSource::Empirical`]
+/// reads per-OPP rates from. Line-oriented TSV with an exact text
+/// round-trip:
+///
+/// ```text
+/// # <soc name>\t<num clusters>
+/// <cluster>\t<opp>\t<freq>\t<family>\t<r_small>\t<r_medium>\t<r_large>
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct RateTable {
+    pub soc: String,
+    pub num_clusters: usize,
+    pub rows: Vec<RateRow>,
+}
+
+impl RateTable {
+    /// Measure the table from isolated per-cluster DES runs: for every
+    /// cluster, every ladder rung and both parameter families, run the
+    /// class-representative shapes through `sim::simulate` on a
+    /// descriptor derived at that rung (cluster-only schedule). The
+    /// cache-aware family runs the rung's own *searched* optimum when
+    /// `presets` carries one (`OppPresetStore` rows from
+    /// [`OppPresetStore::tune_measured`] / `search::tune_opp_ladder`),
+    /// falling back to the descriptor's tuned parameters; the oblivious
+    /// family always runs the boot lead's tuned parameters.
+    pub fn measure(soc: &SocSpec, presets: &[OppPresetStore]) -> RateTable {
+        let reps = default_reps(soc[soc.lead()].tuned.kc);
+        RateTable::measure_with_reps(soc, presets, &reps)
+    }
+
+    /// [`RateTable::measure`] with explicit per-class measurement
+    /// shapes (one per [`ShapeClass`], validated against the classes).
+    /// Use this when the workload's shapes are known: a cluster's rate
+    /// depends on the `k mod kc` remainder structure (shallow trailing
+    /// pc blocks amortize poorly), so calibrating on the *actual
+    /// service shapes* captures the remainder penalty the generic
+    /// class representatives can only approximate.
+    pub fn measure_with_reps(
+        soc: &SocSpec,
+        presets: &[OppPresetStore],
+        reps: &[GemmShape; 3],
+    ) -> RateTable {
+        let kc_ref = soc[soc.lead()].tuned.kc;
+        for (rep, class) in reps.iter().zip(ShapeClass::ALL) {
+            assert_eq!(
+                ShapeClass::of(*rep, kc_ref),
+                class,
+                "measurement shape {rep:?} is not in class {}",
+                class.label()
+            );
+        }
+        let lead_params = soc[soc.lead()].tuned;
+        let mut rows = Vec::new();
+        for c in soc.cluster_ids() {
+            let store = presets.iter().find(|s| s.cluster == c);
+            for opp in 0..soc[c].opps.len() {
+                let at = soc.at_opp(c, opp);
+                let freq_ghz = at[c].core.freq_ghz;
+                for family in Family::ALL {
+                    let params = match family {
+                        Family::CacheAware => store
+                            .and_then(|s| s.at(opp))
+                            .map(|p| {
+                                let t = at[c].tuned;
+                                BlisParams::new(t.nc, p.kc, p.mc, t.nr, t.mr)
+                            })
+                            .unwrap_or(at[c].tuned),
+                        Family::Oblivious => lead_params,
+                    };
+                    rows.push(RateRow {
+                        cluster: c,
+                        opp,
+                        freq_ghz,
+                        family,
+                        rates: measure_cluster(&at, c, params, reps),
+                    });
+                }
+            }
+        }
+        RateTable {
+            soc: soc.name.clone(),
+            num_clusters: soc.num_clusters(),
+            rows,
+        }
+    }
+
+    /// Synthesize a table *from* the analytical model: every rate is
+    /// exactly `PerfModel::cluster_rate_gflops` at that rung (identical
+    /// across shape classes — the steady-state rate is shape-free).
+    /// This is the degeneracy anchor: `WeightSource::Empirical` over
+    /// this table reproduces `PerfModel::auto_weights` bit for bit,
+    /// because a cluster's analytical rate depends only on its own
+    /// descriptor (frequency, tuning, cache geometry) — never on the
+    /// other clusters' rungs.
+    pub fn from_analytical(soc: &SocSpec) -> RateTable {
+        let lead_params = soc[soc.lead()].tuned;
+        let mut rows = Vec::new();
+        for c in soc.cluster_ids() {
+            for opp in 0..soc[c].opps.len() {
+                let model = PerfModel::new(soc.at_opp(c, opp));
+                let freq_ghz = model.soc[c].core.freq_ghz;
+                for family in Family::ALL {
+                    let params = match family {
+                        Family::CacheAware => model.soc[c].tuned,
+                        Family::Oblivious => lead_params,
+                    };
+                    let r = model.cluster_rate_gflops(c, &params, model.soc[c].num_cores);
+                    rows.push(RateRow {
+                        cluster: c,
+                        opp,
+                        freq_ghz,
+                        family,
+                        rates: [r, r, r],
+                    });
+                }
+            }
+        }
+        RateTable {
+            soc: soc.name.clone(),
+            num_clusters: soc.num_clusters(),
+            rows,
+        }
+    }
+
+    /// The measured rate of one `(cluster, rung, family, class)` cell.
+    pub fn rate(
+        &self,
+        cluster: ClusterId,
+        opp: usize,
+        family: Family,
+        class: ShapeClass,
+    ) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| r.cluster == cluster && r.opp == opp && r.family == family)
+            .map(|r| r.rates[class.idx()])
+    }
+
+    /// Per-cluster rates at an OPP vector (one rung per cluster, in
+    /// [`ClusterId`] order) — the raw ingredients of the empirical
+    /// weighted-static split.
+    pub fn cluster_rates(
+        &self,
+        opps: &[usize],
+        family: Family,
+        class: ShapeClass,
+    ) -> Result<Vec<f64>, String> {
+        if opps.len() != self.num_clusters {
+            return Err(format!(
+                "OPP vector has {} entries but the table covers {} clusters",
+                opps.len(),
+                self.num_clusters
+            ));
+        }
+        opps.iter()
+            .enumerate()
+            .map(|(i, &opp)| {
+                self.rate(ClusterId(i), opp, family, class).ok_or_else(|| {
+                    format!(
+                        "rate table '{}' has no row for c{i} rung {opp} family {}",
+                        self.soc,
+                        family.label()
+                    )
+                })
+            })
+            .collect()
+    }
+
+    /// The empirical weight vector at an OPP vector: per-cluster
+    /// measured rates straight into [`Weights`] — exactly how
+    /// `PerfModel::auto_weights` builds the analytical vector.
+    pub fn weights_at(
+        &self,
+        opps: &[usize],
+        family: Family,
+        class: ShapeClass,
+    ) -> Result<Weights, String> {
+        Ok(Weights::from_slice(&self.cluster_rates(opps, family, class)?))
+    }
+
+    /// Aggregate measured throughput of the whole SoC at an OPP vector
+    /// (the board-level weight of the fleet layer).
+    pub fn board_rate(
+        &self,
+        opps: &[usize],
+        family: Family,
+        class: ShapeClass,
+    ) -> Result<f64, String> {
+        Ok(self.cluster_rates(opps, family, class)?.iter().sum())
+    }
+
+    pub fn to_text(&self) -> String {
+        let mut out = format!("# {}\t{}\n", self.soc, self.num_clusters);
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+                r.cluster.0,
+                r.opp,
+                r.freq_ghz,
+                r.family.label(),
+                r.rates[0],
+                r.rates[1],
+                r.rates[2]
+            ));
+        }
+        out
+    }
+
+    pub fn parse_text(s: &str) -> Result<RateTable, String> {
+        let mut lines = s.lines();
+        let header = lines.next().ok_or("empty rate table")?;
+        let header = header
+            .strip_prefix("# ")
+            .ok_or_else(|| format!("bad header '{header}'"))?;
+        let (soc, n) = header
+            .rsplit_once('\t')
+            .ok_or_else(|| format!("bad header '{header}'"))?;
+        let num_clusters: usize = n
+            .parse()
+            .map_err(|_| format!("bad cluster count '{n}'"))?;
+        if num_clusters == 0 {
+            return Err("rate table needs at least one cluster".into());
+        }
+        // Shared with `search::OppPresetStore::parse_text`: persisted
+        // physical quantities are positive and finite or the row is
+        // corrupt.
+        let parse_rate = |s: &str| crate::util::parse_positive_f64(s, "rate");
+        let mut rows = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 7 {
+                return Err(format!("bad rate row '{line}'"));
+            }
+            let cluster: usize = f[0].parse().map_err(|_| format!("bad cluster '{}'", f[0]))?;
+            if cluster >= num_clusters {
+                return Err(format!(
+                    "row names cluster {cluster} but the header declares {num_clusters}"
+                ));
+            }
+            rows.push(RateRow {
+                cluster: ClusterId(cluster),
+                opp: f[1].parse().map_err(|_| format!("bad opp '{}'", f[1]))?,
+                freq_ghz: crate::util::parse_positive_f64(f[2], "freq")?,
+                family: Family::parse(f[3])?,
+                rates: [parse_rate(f[4])?, parse_rate(f[5])?, parse_rate(f[6])?],
+            });
+        }
+        Ok(RateTable {
+            soc: soc.to_string(),
+            num_clusters,
+            rows,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_text())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<RateTable, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        RateTable::parse_text(&text)
+    }
+}
+
+/// Measure one cluster's aggregate DES rate (GFLOPS) under `params` at
+/// the descriptor's current operating point, once per measurement
+/// shape. The cluster runs alone (`ClusterOnly`), every core active —
+/// the §3.4 isolated-cluster protocol the paper tunes its ratios from.
+fn measure_cluster(
+    soc: &SocSpec,
+    cluster: ClusterId,
+    params: BlisParams,
+    reps: &[GemmShape; 3],
+) -> [f64; 3] {
+    let mut probe = soc.clone();
+    probe.clusters[cluster.0].tuned = params;
+    let model = PerfModel::new(probe);
+    let spec = ScheduleSpec::cluster_only(cluster, soc[cluster].num_cores);
+    let mut rates = [0.0; 3];
+    for class in ShapeClass::ALL {
+        let st = sim::simulate(&model, &spec, reps[class.idx()]);
+        rates[class.idx()] = st.gflops;
+    }
+    rates
+}
+
+/// The per-cluster ladders' current rungs of a descriptor, in cluster
+/// order — the OPP vector a freshly built preset sits at (nominal), or
+/// whatever rung an `@governor` pin / `at_opp` derivation moved it to.
+pub fn current_opps(soc: &SocSpec) -> Vec<usize> {
+    soc.clusters.iter().map(|c| c.opps.current_idx()).collect()
+}
+
+/// Where scheduling weights come from: the selector threaded through
+/// `sched::Weights` construction across the stack (intra-SoC SAS/CA-SAS
+/// splits, the DVFS online retuner, fleet-SAS board weights, capacity
+/// planning).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WeightSource {
+    /// The analytical model (`PerfModel::auto_weights`) — the
+    /// pre-calibration behavior, bit for bit.
+    Analytical,
+    /// Measured rates from a [`RateTable`] (per-OPP, shape-classed).
+    Empirical(RateTable),
+    /// The arithmetic mean of the analytical and empirical *normalized*
+    /// share vectors: trust the measurement but hedge against a stale
+    /// table.
+    Hybrid(RateTable),
+}
+
+impl WeightSource {
+    pub fn label(&self) -> &'static str {
+        match self {
+            WeightSource::Analytical => "analytical",
+            WeightSource::Empirical(_) => "empirical",
+            WeightSource::Hybrid(_) => "hybrid",
+        }
+    }
+
+    /// Parse a CLI token into a source; `empirical`/`hybrid` need a
+    /// table (measured by the caller).
+    pub fn from_token(
+        token: &str,
+        table: impl FnOnce() -> RateTable,
+    ) -> Result<WeightSource, String> {
+        match token {
+            "analytical" => Ok(WeightSource::Analytical),
+            "empirical" => Ok(WeightSource::Empirical(table())),
+            "hybrid" => Ok(WeightSource::Hybrid(table())),
+            other => Err(format!(
+                "unknown weight source '{other}' (analytical|empirical|hybrid)"
+            )),
+        }
+    }
+
+    /// The rate table behind this source, if any.
+    pub fn table(&self) -> Option<&RateTable> {
+        match self {
+            WeightSource::Analytical => None,
+            WeightSource::Empirical(t) | WeightSource::Hybrid(t) => Some(t),
+        }
+    }
+
+    /// Weight vector for a model already derived at the descriptor the
+    /// schedule runs on, with `opps` naming the rung each cluster's
+    /// ladder currently sits at (the table key; the analytical path
+    /// ignores it and reads the descriptor directly). Panics if an
+    /// empirical table is missing the requested cells — a calibration
+    /// table that does not cover the topology is a configuration bug,
+    /// not a runtime condition to paper over.
+    pub fn weights_for(
+        &self,
+        model: &PerfModel,
+        opps: &[usize],
+        cache_aware: bool,
+        class: ShapeClass,
+    ) -> Weights {
+        match self {
+            WeightSource::Analytical => model.auto_weights(cache_aware),
+            WeightSource::Empirical(t) => t
+                .weights_at(opps, Family::of(cache_aware), class)
+                .expect("empirical rate table does not cover this topology"),
+            WeightSource::Hybrid(t) => {
+                let emp = t
+                    .weights_at(opps, Family::of(cache_aware), class)
+                    .expect("hybrid rate table does not cover this topology");
+                model
+                    .auto_weights(cache_aware)
+                    .normalized()
+                    .blend(&emp.normalized(), 0.5)
+            }
+        }
+    }
+
+    /// Weight vector at the descriptor's *current* rungs (nominal for
+    /// fresh presets, the pinned rung for `@governor` boards).
+    pub fn weights(&self, model: &PerfModel, cache_aware: bool, class: ShapeClass) -> Weights {
+        self.weights_for(model, &current_opps(&model.soc), cache_aware, class)
+    }
+
+    /// Aggregate throughput of the whole SoC at its current rungs —
+    /// the board weight of the fleet layer (absolute GFLOPS, so
+    /// heterogeneous boards compare; `Hybrid` averages the two
+    /// absolute aggregates).
+    pub fn board_throughput(&self, model: &PerfModel, class: ShapeClass) -> f64 {
+        let analytical = || -> f64 { model.ca_sas_weights().as_slice().iter().sum() };
+        let empirical = |t: &RateTable| -> f64 {
+            t.board_rate(&current_opps(&model.soc), Family::CacheAware, class)
+                .expect("rate table does not cover this topology")
+        };
+        match self {
+            WeightSource::Analytical => analytical(),
+            WeightSource::Empirical(t) => empirical(t),
+            WeightSource::Hybrid(t) => 0.5 * (analytical() + empirical(t)),
+        }
+    }
+}
+
+/// SAS schedule with weights from a source (the oblivious family).
+pub fn sas_spec(source: &WeightSource, model: &PerfModel, class: ShapeClass) -> ScheduleSpec {
+    ScheduleSpec::sas_weighted(source.weights(model, false, class))
+}
+
+/// CA-SAS schedule with weights from a source (the cache-aware family).
+pub fn ca_sas_spec(source: &WeightSource, model: &PerfModel, class: ShapeClass) -> ScheduleSpec {
+    ScheduleSpec::ca_sas_weighted(source.weights(model, true, class))
+}
+
+// The measurement-aware extension of the per-OPP preset store lives
+// here (same crate, different module) so `search` stays independent of
+// the calibration layer.
+impl OppPresetStore {
+    /// [`OppPresetStore::tune`] plus measured rates: every rung's
+    /// searched `(mc, kc)` optimum is executed through the DES on the
+    /// at-rung descriptor (cluster-only, all cores) and the three
+    /// shape-classed aggregate GFLOPS are recorded alongside the
+    /// analytical search score.
+    pub fn tune_measured(soc: &SocSpec, cluster: ClusterId) -> OppPresetStore {
+        let reps = default_reps(soc[soc.lead()].tuned.kc);
+        let mut store = OppPresetStore::tune(soc, cluster);
+        for p in &mut store.presets {
+            let at = soc.at_opp(cluster, p.opp);
+            let t = at[cluster].tuned;
+            let params = BlisParams::new(t.nc, p.kc, p.mc, t.nr, t.mr);
+            p.measured = Some(measure_cluster(&at, cluster, params, &reps));
+        }
+        store
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::{BIG, LITTLE};
+
+    fn soc() -> SocSpec {
+        SocSpec::exynos5422()
+    }
+
+    #[test]
+    fn shape_classes_partition_k() {
+        let kc = 952;
+        assert_eq!(ShapeClass::of(GemmShape::square(512), kc), ShapeClass::Small);
+        assert_eq!(ShapeClass::of(GemmShape::square(2048), kc), ShapeClass::Medium);
+        assert_eq!(ShapeClass::of(GemmShape::square(4096), kc), ShapeClass::Large);
+        assert_eq!(ShapeClass::for_soc(&soc(), GemmShape::square(4096)), ShapeClass::Large);
+        // Representative shapes land inside their own class.
+        for class in ShapeClass::ALL {
+            let rep = class.rep_shape(kc);
+            assert_eq!(ShapeClass::of(rep, kc), class, "{} rep {rep:?}", class.label());
+            assert_eq!(rep.m % 8, 0);
+        }
+    }
+
+    /// The tentpole's degeneracy anchor, module-level: a table
+    /// synthesized from the analytical model reproduces
+    /// `PerfModel::auto_weights` bit for bit (full preset sweep in
+    /// `tests/calibrate_golden.rs`).
+    #[test]
+    fn analytical_synthesis_degenerates_bit_for_bit() {
+        let s = soc();
+        let model = PerfModel::new(s.clone());
+        let table = RateTable::from_analytical(&s);
+        for cache_aware in [true, false] {
+            for class in ShapeClass::ALL {
+                let emp = WeightSource::Empirical(table.clone());
+                assert_eq!(
+                    emp.weights(&model, cache_aware, class),
+                    model.auto_weights(cache_aware),
+                    "ca={cache_aware} class={}",
+                    class.label()
+                );
+            }
+        }
+        // And the hybrid of two identical share vectors is that vector
+        // (up to the blend arithmetic's rounding).
+        let hyb = WeightSource::Hybrid(table).weights(&model, true, ShapeClass::Large);
+        let ana = model.auto_weights(true).normalized();
+        for (h, a) in hyb.as_slice().iter().zip(ana.as_slice()) {
+            assert!((h - a).abs() < 1e-15, "{h} vs {a}");
+        }
+    }
+
+    #[test]
+    fn measured_rates_are_sane_and_below_analytical() {
+        let s = soc();
+        let table = RateTable::measure(&s, &[]);
+        // 2 clusters × 5 rungs × 2 families.
+        assert_eq!(table.rows.len(), 20);
+        let model = PerfModel::new(s.clone());
+        for c in s.cluster_ids() {
+            let nominal = s[c].opps.nominal_idx();
+            let ana = model.cluster_rate_gflops(c, &s[c].tuned, s[c].num_cores);
+            let meas = table
+                .rate(c, nominal, Family::CacheAware, ShapeClass::Large)
+                .unwrap();
+            // The DES pays packing + barriers the steady-state rate
+            // ignores; the measured rate sits below but near it.
+            assert!(meas < ana, "{c}: measured {meas} vs analytical {ana}");
+            assert!(meas > 0.75 * ana, "{c}: measured {meas} vs analytical {ana}");
+            // Rates grow with the clock along the ladder.
+            for opp in 1..s[c].opps.len() {
+                let lo = table.rate(c, opp - 1, Family::CacheAware, ShapeClass::Large).unwrap();
+                let hi = table.rate(c, opp, Family::CacheAware, ShapeClass::Large).unwrap();
+                assert!(hi > lo, "{c} rung {opp}: {hi} vs {lo}");
+            }
+        }
+        // Oblivious parameters hurt the LITTLE cluster, as in §4.
+        let nominal = s[LITTLE].opps.nominal_idx();
+        let own = table.rate(LITTLE, nominal, Family::CacheAware, ShapeClass::Large).unwrap();
+        let obl = table.rate(LITTLE, nominal, Family::Oblivious, ShapeClass::Large).unwrap();
+        assert!(obl < own, "oblivious {obl} vs own {own}");
+        // On the lead cluster the two families coincide.
+        let b_ca = table.rate(BIG, nominal, Family::CacheAware, ShapeClass::Large).unwrap();
+        let b_obl = table.rate(BIG, nominal, Family::Oblivious, ShapeClass::Large).unwrap();
+        assert_eq!(b_ca, b_obl, "lead cluster runs its own params either way");
+    }
+
+    #[test]
+    fn text_round_trip_is_exact() {
+        let s = soc();
+        for table in [RateTable::from_analytical(&s), RateTable::measure(&s, &[])] {
+            let back = RateTable::parse_text(&table.to_text()).unwrap();
+            assert_eq!(back, table);
+        }
+        let dir = std::env::temp_dir().join("amp_gemm_rate_table");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("exynos.tsv");
+        let table = RateTable::from_analytical(&s);
+        table.save(&path).unwrap();
+        assert_eq!(RateTable::load(&path).unwrap(), table);
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(RateTable::load(std::path::Path::new("/nonexistent/x")).is_err());
+    }
+
+    #[test]
+    fn malformed_tables_rejected() {
+        assert!(RateTable::parse_text("").is_err());
+        assert!(RateTable::parse_text("junk\n").is_err());
+        assert!(RateTable::parse_text("# soc\t0\n").is_err(), "zero clusters");
+        assert!(RateTable::parse_text("# soc\tx\n").is_err());
+        // Row arity, family, cluster range, non-finite and non-positive
+        // rates all error cleanly.
+        let ok = "# soc\t2\n0\t0\t1.6\tca\t1\t2\t3\n";
+        assert!(RateTable::parse_text(ok).is_ok());
+        assert!(RateTable::parse_text("# soc\t2\n0\t0\t1.6\tca\t1\t2\n").is_err());
+        assert!(RateTable::parse_text("# soc\t2\n0\t0\t1.6\twarp\t1\t2\t3\n").is_err());
+        assert!(RateTable::parse_text("# soc\t2\n7\t0\t1.6\tca\t1\t2\t3\n").is_err());
+        assert!(RateTable::parse_text("# soc\t2\n0\t0\t1.6\tca\tNaN\t2\t3\n").is_err());
+        assert!(RateTable::parse_text("# soc\t2\n0\t0\t1.6\tca\tinf\t2\t3\n").is_err());
+        assert!(RateTable::parse_text("# soc\t2\n0\t0\t1.6\tca\t-1\t2\t3\n").is_err());
+        assert!(RateTable::parse_text("# soc\t2\n0\t0\t0\tca\t1\t2\t3\n").is_err(), "zero freq");
+    }
+
+    #[test]
+    fn missing_cells_surface_as_errors() {
+        let s = soc();
+        let table = RateTable::from_analytical(&s);
+        assert!(table.rate(BIG, 99, Family::CacheAware, ShapeClass::Large).is_none());
+        assert!(table.weights_at(&[0], Family::CacheAware, ShapeClass::Large).is_err());
+        assert!(table
+            .weights_at(&[0, 99], Family::CacheAware, ShapeClass::Large)
+            .is_err());
+        assert!(table.board_rate(&[4, 4], Family::CacheAware, ShapeClass::Large).is_ok());
+    }
+
+    #[test]
+    fn empirical_weights_shift_toward_the_measured_ratio() {
+        let s = soc();
+        let model = PerfModel::new(s.clone());
+        let table = RateTable::measure(&s, &[]);
+        let ana = model.ca_sas_weights().normalized();
+        let emp = WeightSource::Empirical(table.clone())
+            .weights(&model, true, ShapeClass::Large)
+            .normalized();
+        // The measured big:LITTLE ratio differs from the analytical one
+        // (packing/barrier asymmetry), so the shares move.
+        let delta = (emp.share(0) - ana.share(0)).abs();
+        assert!(delta > 1e-4, "empirical weights must differ: delta {delta}");
+        // The hybrid lands between the two.
+        let hyb = WeightSource::Hybrid(table).weights(&model, true, ShapeClass::Large);
+        let (lo, hi) = (
+            ana.share(0).min(emp.share(0)),
+            ana.share(0).max(emp.share(0)),
+        );
+        assert!(
+            (lo..=hi).contains(&hyb.share(0)),
+            "hybrid {} outside [{lo}, {hi}]",
+            hyb.share(0)
+        );
+    }
+
+    /// Calibration can target the workload's own shapes: the measured
+    /// rate moves with the `k mod kc` remainder structure (a rep whose
+    /// trailing pc block is shallow amortizes worse), and reps outside
+    /// their class are rejected.
+    #[test]
+    fn measure_with_reps_targets_the_workload() {
+        let s = soc();
+        // k = 1904 = 2·952 exactly (no remainder) vs k = 2048 (a
+        // 144-deep trailing block on the big cluster): the big
+        // cluster's measured medium-class rate must drop.
+        let clean = RateTable::measure_with_reps(
+            &s,
+            &[],
+            &[GemmShape::square(512), GemmShape::square(1904), GemmShape::square(4096)],
+        );
+        let ragged = RateTable::measure_with_reps(
+            &s,
+            &[],
+            &[GemmShape::square(512), GemmShape::square(2048), GemmShape::square(4096)],
+        );
+        let nominal = s[BIG].opps.nominal_idx();
+        let r_clean = clean.rate(BIG, nominal, Family::CacheAware, ShapeClass::Medium).unwrap();
+        let r_ragged = ragged.rate(BIG, nominal, Family::CacheAware, ShapeClass::Medium).unwrap();
+        assert!(
+            r_ragged < r_clean,
+            "k-remainder must cost rate: ragged {r_ragged} vs clean {r_clean}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "not in class")]
+    fn measure_with_reps_rejects_misclassed_shapes() {
+        let s = soc();
+        // 2048 is medium-class for kc = 952, not small.
+        RateTable::measure_with_reps(
+            &s,
+            &[],
+            &[GemmShape::square(2048), GemmShape::square(2048), GemmShape::square(4096)],
+        );
+    }
+
+    #[test]
+    fn tune_measured_fills_preset_rates() {
+        let s = soc();
+        let store = OppPresetStore::tune_measured(&s, LITTLE);
+        assert_eq!(store.presets.len(), 5);
+        for p in &store.presets {
+            let m = p.measured.expect("measured rates present");
+            assert!(m.iter().all(|r| r.is_finite() && *r > 0.0), "{m:?}");
+            // Deep problems amortize overhead best.
+            assert!(m[2] > m[0], "large {} vs small {}", m[2], m[0]);
+        }
+        // The measured store round-trips through the extended TSV.
+        let back = OppPresetStore::parse_text(&store.to_text()).unwrap();
+        assert_eq!(back, store);
+    }
+
+    #[test]
+    fn current_opps_track_derivation() {
+        let s = soc();
+        assert_eq!(current_opps(&s), vec![4, 4]);
+        assert_eq!(current_opps(&s.at_opp(BIG, 1)), vec![1, 4]);
+    }
+
+    #[test]
+    fn source_tokens_parse() {
+        let t = || RateTable::from_analytical(&soc());
+        assert_eq!(WeightSource::from_token("analytical", t).unwrap().label(), "analytical");
+        let t = || RateTable::from_analytical(&soc());
+        assert_eq!(WeightSource::from_token("empirical", t).unwrap().label(), "empirical");
+        let t = || RateTable::from_analytical(&soc());
+        assert_eq!(WeightSource::from_token("hybrid", t).unwrap().label(), "hybrid");
+        let t = || RateTable::from_analytical(&soc());
+        assert!(WeightSource::from_token("warp", t).is_err());
+        assert!(WeightSource::Analytical.table().is_none());
+    }
+}

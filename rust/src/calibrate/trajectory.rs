@@ -1,0 +1,426 @@
+//! CI perf-trajectory harness: a pinned, deterministic virtual-time
+//! metric suite with a JSON artifact and a regression gate.
+//!
+//! Every metric here is *virtual-time* — pure f64 arithmetic over the
+//! calibrated model, no host clock — so two builds of the same source
+//! produce identical numbers on any machine. The CI `perf-trajectory`
+//! job runs [`Trajectory::collect`], emits `BENCH_ci.json` (uploaded as
+//! an artifact) and gates it against the checked-in
+//! `BENCH_baseline.json`: a metric drifting past its gate (default
+//! ±10 %) fails the build. Because the numbers are deterministic, the
+//! gate can only fire on a genuine model/scheduling change, never on CI
+//! machine noise — which is what makes a perf gate in CI sane at all.
+//!
+//! The baseline seeded with this harness derives its values from the
+//! invariant *ranges* the test suite already pins (e.g. the §3.4
+//! cluster anchors), with per-entry gates sized to those ranges; the
+//! first CI run's `BENCH_ci.json` artifact is the natural replacement
+//! to tighten the baseline to exact values and extend it to the full
+//! metric set.
+
+use crate::blis::gemm::GemmShape;
+use crate::calibrate::{ca_sas_spec, RateTable, ShapeClass, WeightSource};
+use crate::dvfs::sim::{simulate_dvfs, simulate_dvfs_with, DvfsStrategy, Retune};
+use crate::dvfs::{Governor, Ondemand};
+use crate::figures::fleet::{pinned_stream_arrivals, pinned_stream_fleet};
+use crate::fleet::sim::{simulate_fleet, simulate_fleet_stream};
+use crate::fleet::{Fleet, FleetStrategy};
+use crate::model::PerfModel;
+use crate::sched::ScheduleSpec;
+use crate::sim::simulate;
+use crate::soc::{SocSpec, BIG, LITTLE};
+
+/// Which direction of drift regresses a metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Better {
+    Higher,
+    Lower,
+}
+
+impl Better {
+    pub fn label(self) -> &'static str {
+        match self {
+            Better::Higher => "higher",
+            Better::Lower => "lower",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Better, String> {
+        match s {
+            "higher" => Ok(Better::Higher),
+            "lower" => Ok(Better::Lower),
+            other => Err(format!("bad direction '{other}' (higher|lower)")),
+        }
+    }
+}
+
+/// One tracked metric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchEntry {
+    pub key: String,
+    pub value: f64,
+    pub better: Better,
+    /// Per-entry relative gate overriding the run-wide default, if set
+    /// (seeded baselines carry range-derived gates).
+    pub gate: Option<f64>,
+}
+
+/// A perf-trajectory snapshot: the metric suite of one build.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trajectory {
+    pub entries: Vec<BenchEntry>,
+}
+
+impl Trajectory {
+    fn push(&mut self, key: &str, value: f64, better: Better) {
+        // Every trajectory metric is a rate, time or utilization —
+        // strictly positive by construction. The relative gate depends
+        // on it: `(cur - base) / base` is sign-stable only for
+        // positive baselines.
+        assert!(
+            value.is_finite() && value > 0.0,
+            "metric {key} must be positive and finite: {value}"
+        );
+        assert!(
+            !self.entries.iter().any(|e| e.key == key),
+            "duplicate metric key {key}"
+        );
+        self.entries.push(BenchEntry {
+            key: key.to_string(),
+            value,
+            better,
+            gate: None,
+        });
+    }
+
+    /// Run the pinned suite. Deterministic: same source, same numbers,
+    /// bit for bit, on any machine.
+    pub fn collect() -> Trajectory {
+        let mut t = Trajectory { entries: Vec::new() };
+
+        // --- Per-preset headline GFLOPS (the figures' subjects). ---
+        let soc = SocSpec::exynos5422();
+        let model = PerfModel::new(soc.clone());
+        let r = GemmShape::square(4096);
+        let a15 = simulate(&model, &ScheduleSpec::cluster_only(BIG, 4), r);
+        t.push("exynos_a15x4_gflops", a15.gflops, Better::Higher);
+        let a7 = simulate(&model, &ScheduleSpec::cluster_only(LITTLE, 4), r);
+        t.push("exynos_a7x4_gflops", a7.gflops, Better::Higher);
+        t.push(
+            "exynos_sss_gflops",
+            simulate(&model, &ScheduleSpec::sss(), r).gflops,
+            Better::Higher,
+        );
+        t.push(
+            "exynos_sas5_gflops",
+            simulate(&model, &ScheduleSpec::sas(5.0), r).gflops,
+            Better::Higher,
+        );
+        let cadas = simulate(&model, &ScheduleSpec::ca_das(), r);
+        t.push("exynos_cadas_gflops", cadas.gflops, Better::Higher);
+        t.push("exynos_cadas_makespan_s", cadas.time_s, Better::Lower);
+
+        // --- The calibration layer's own trajectory: empirically
+        //     weighted CA-SAS on the pinned calibration. ---
+        let table = RateTable::measure(&soc, &[]);
+        let emp = WeightSource::Empirical(table);
+        let spec = ca_sas_spec(&emp, &model, ShapeClass::Large);
+        t.push(
+            "exynos_casas_empirical_gflops",
+            simulate(&model, &spec, r).gflops,
+            Better::Higher,
+        );
+        let ramp = Ondemand::new(0.25).plan(&soc, 1e3);
+        let strat = DvfsStrategy::Sas { cache_aware: true };
+        let shape = GemmShape::square(2048);
+        let online = simulate_dvfs(&soc, strat, shape, &ramp, Retune::Online);
+        t.push("exynos_dvfs_online_gflops", online.gflops, Better::Higher);
+        let online_emp = simulate_dvfs_with(&soc, strat, shape, &ramp, Retune::Online, &emp);
+        t.push(
+            "exynos_dvfs_online_empirical_gflops",
+            online_emp.gflops,
+            Better::Higher,
+        );
+
+        // --- Streaming + fleet (the pinned report scenarios). ---
+        let stream = simulate_fleet_stream(&pinned_stream_fleet(), &pinned_stream_arrivals(true));
+        t.push("stream_pinned_makespan_s", stream.makespan_s, Better::Lower);
+        t.push("stream_pinned_utilization", stream.utilization, Better::Higher);
+        t.push("stream_pinned_p99_sojourn_s", stream.sojourn_p99_s, Better::Lower);
+        let fleet = Fleet::parse("exynos5422,juno_r0").expect("presets");
+        let fl = simulate_fleet(&fleet, FleetStrategy::Das, GemmShape::square(1024), 32);
+        t.push("fleet_das_rps", fl.throughput_rps, Better::Higher);
+        for preset in ["juno_r0", "dynamiq_3c", "pe_hybrid"] {
+            let m = PerfModel::new(match preset {
+                "juno_r0" => SocSpec::juno_r0(),
+                "dynamiq_3c" => SocSpec::dynamiq_3c(),
+                _ => SocSpec::pe_hybrid(),
+            });
+            t.push(
+                &format!("{preset}_cadas_gflops"),
+                simulate(&m, &ScheduleSpec::ca_das(), GemmShape::square(2048)).gflops,
+                Better::Higher,
+            );
+        }
+        t
+    }
+
+    /// Emit the artifact: pretty JSON, one entry per line, stable
+    /// order. The format is its own parser's fixture
+    /// ([`Trajectory::parse_json`]) and is pinned by a round-trip test.
+    pub fn to_json(&self) -> String {
+        let mut out =
+            String::from("{\n  \"schema\": \"amp-gemm-perf-trajectory-v1\",\n  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            let gate = match e.gate {
+                Some(g) => format!(", \"gate\": {g}"),
+                None => String::new(),
+            };
+            out.push_str(&format!(
+                "    {{\"key\": \"{}\", \"value\": {}, \"better\": \"{}\"{}}}{}\n",
+                e.key,
+                e.value,
+                e.better.label(),
+                gate,
+                if i + 1 == self.entries.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Parse the artifact format emitted by [`Trajectory::to_json`]
+    /// (one entry object per line). Not a general JSON parser — the
+    /// baseline is machine-written by this module.
+    pub fn parse_json(s: &str) -> Result<Trajectory, String> {
+        if !s.contains("amp-gemm-perf-trajectory-v1") {
+            return Err("not a perf-trajectory artifact (schema marker missing)".into());
+        }
+        let field = |line: &str, name: &str| -> Option<String> {
+            let tag = format!("\"{name}\":");
+            let rest = &line[line.find(&tag)? + tag.len()..];
+            let rest = rest.trim_start();
+            let quoted = rest.starts_with('"');
+            let end = rest
+                .char_indices()
+                .find(|&(i, ch)| {
+                    if quoted {
+                        i > 0 && ch == '"'
+                    } else {
+                        ch == ',' || ch == '}'
+                    }
+                })
+                .map(|(i, _)| i)?;
+            Some(rest[..end].trim_start_matches('"').to_string())
+        };
+        let mut entries = Vec::new();
+        for line in s.lines() {
+            if !line.contains("\"key\":") {
+                continue;
+            }
+            let key = field(line, "key").ok_or_else(|| format!("bad entry line '{line}'"))?;
+            let value: f64 = field(line, "value")
+                .ok_or_else(|| format!("entry '{key}' has no value"))?
+                .parse()
+                .map_err(|_| format!("entry '{key}' has a non-numeric value"))?;
+            if !value.is_finite() || value <= 0.0 {
+                // A zero baseline would make the relative gate NaN
+                // (never firing); a negative one would invert it.
+                return Err(format!(
+                    "entry '{key}' must have a positive finite value, got {value}"
+                ));
+            }
+            let better = Better::parse(
+                &field(line, "better").ok_or_else(|| format!("entry '{key}' has no direction"))?,
+            )?;
+            let gate = match field(line, "gate") {
+                Some(g) => {
+                    let g: f64 = g.parse().map_err(|_| format!("entry '{key}' has a bad gate"))?;
+                    if !g.is_finite() || g <= 0.0 {
+                        return Err(format!("entry '{key}' gate must be positive"));
+                    }
+                    Some(g)
+                }
+                None => None,
+            };
+            entries.push(BenchEntry { key, value, better, gate });
+        }
+        if entries.is_empty() {
+            return Err("perf-trajectory artifact has no entries".into());
+        }
+        Ok(Trajectory { entries })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Trajectory, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Trajectory::parse_json(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&BenchEntry> {
+        self.entries.iter().find(|e| e.key == key)
+    }
+
+    /// The regression gate: every baseline metric must exist in the
+    /// current run and must not have drifted past its gate (the entry's
+    /// own, or `default_gate`) in its worse direction. Improvements
+    /// never fail. Returns the list of violations (empty = pass);
+    /// current-only metrics are allowed (the suite may grow).
+    pub fn gate_against(&self, baseline: &Trajectory, default_gate: f64) -> Vec<String> {
+        assert!(default_gate > 0.0 && default_gate.is_finite());
+        let mut violations = Vec::new();
+        for base in &baseline.entries {
+            let gate = base.gate.unwrap_or(default_gate);
+            let Some(cur) = self.get(&base.key) else {
+                violations.push(format!("metric '{}' disappeared from the suite", base.key));
+                continue;
+            };
+            let rel = (cur.value - base.value) / base.value;
+            let regressed = match base.better {
+                Better::Higher => rel < -gate,
+                Better::Lower => rel > gate,
+            };
+            if regressed {
+                violations.push(format!(
+                    "{}: {} vs baseline {} ({:+.1}% exceeds the {:.0}% gate, better = {})",
+                    base.key,
+                    cur.value,
+                    base.value,
+                    rel * 100.0,
+                    gate * 100.0,
+                    base.better.label()
+                ));
+            }
+        }
+        violations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trajectory {
+        Trajectory {
+            entries: vec![
+                BenchEntry {
+                    key: "a_gflops".into(),
+                    value: 10.0,
+                    better: Better::Higher,
+                    gate: None,
+                },
+                BenchEntry {
+                    key: "b_makespan_s".into(),
+                    value: 2.5,
+                    better: Better::Lower,
+                    gate: Some(0.2),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let t = sample();
+        let back = Trajectory::parse_json(&t.to_json()).unwrap();
+        assert_eq!(back, t);
+        // And through a file.
+        let dir = std::env::temp_dir().join("amp_gemm_trajectory");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("bench.json");
+        t.save(&path).unwrap();
+        assert_eq!(Trajectory::load(&path).unwrap(), t);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_artifacts_rejected() {
+        assert!(Trajectory::parse_json("").is_err());
+        assert!(Trajectory::parse_json("{}").is_err(), "schema marker missing");
+        assert!(
+            Trajectory::parse_json("{\"schema\": \"amp-gemm-perf-trajectory-v1\", \"entries\": []}")
+                .is_err(),
+            "no entries"
+        );
+        let bad_value = sample().to_json().replace("10", "ten");
+        assert!(Trajectory::parse_json(&bad_value).is_err());
+        // Zero or negative values would neuter (or invert) the
+        // relative gate — rejected at parse time.
+        let zero_value = sample().to_json().replace("\"value\": 10", "\"value\": 0");
+        assert!(Trajectory::parse_json(&zero_value).is_err());
+        let neg_value = sample().to_json().replace("\"value\": 10", "\"value\": -10");
+        assert!(Trajectory::parse_json(&neg_value).is_err());
+        let bad_dir = sample().to_json().replace("higher", "sideways");
+        assert!(Trajectory::parse_json(&bad_dir).is_err());
+        let bad_gate = sample().to_json().replace("\"gate\": 0.2", "\"gate\": -1");
+        assert!(Trajectory::parse_json(&bad_gate).is_err());
+    }
+
+    /// The gate fires on regressions in the worse direction only, honors
+    /// per-entry gates, and flags disappeared metrics — exercised here
+    /// so the CI job's failure path is itself tested.
+    #[test]
+    fn gate_catches_regressions_and_allows_improvements() {
+        let base = sample();
+        // Identical run: clean.
+        assert!(base.gate_against(&base, 0.1).is_empty());
+        // Improvements in both directions: clean.
+        let mut better = base.clone();
+        better.entries[0].value = 12.0; // higher is better
+        better.entries[1].value = 2.0; // lower is better
+        assert!(better.gate_against(&base, 0.1).is_empty());
+        // A >10% drop on the higher-is-better metric fails.
+        let mut worse = base.clone();
+        worse.entries[0].value = 8.5;
+        let v = worse.gate_against(&base, 0.1);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("a_gflops"), "{v:?}");
+        // The lower-is-better metric honors its own 20% gate: +15% is
+        // fine, +25% fails.
+        let mut slow = base.clone();
+        slow.entries[1].value = 2.5 * 1.15;
+        assert!(slow.gate_against(&base, 0.1).is_empty());
+        slow.entries[1].value = 2.5 * 1.25;
+        assert_eq!(slow.gate_against(&base, 0.1).len(), 1);
+        // Disappearing metrics fail; new metrics don't.
+        let mut gone = base.clone();
+        gone.entries.remove(0);
+        assert_eq!(gone.gate_against(&base, 0.1).len(), 1);
+        let mut grown = base.clone();
+        grown.entries.push(BenchEntry {
+            key: "new_metric".into(),
+            value: 1.0,
+            better: Better::Higher,
+            gate: None,
+        });
+        assert!(grown.gate_against(&base, 0.1).is_empty());
+    }
+
+    /// The pinned suite runs, stays deterministic, and the checked-in
+    /// seeded baseline passes its own gate — the same comparison the CI
+    /// `perf-trajectory` job performs, so tier-1 catches a drifting
+    /// model before CI does.
+    #[test]
+    fn collected_suite_is_deterministic_and_in_baseline_envelope() {
+        let a = Trajectory::collect();
+        let b = Trajectory::collect();
+        assert_eq!(a, b, "virtual-time metrics must be deterministic");
+        assert!(a.entries.len() >= 12, "suite shrank: {}", a.entries.len());
+        for e in &a.entries {
+            assert!(e.value.is_finite() && e.value > 0.0, "{}: {}", e.key, e.value);
+        }
+        // The repo-root baseline (seeded from the pinned anchor ranges).
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join("BENCH_baseline.json");
+        let baseline = Trajectory::load(&path).expect("checked-in BENCH_baseline.json parses");
+        let violations = a.gate_against(&baseline, 0.10);
+        assert!(violations.is_empty(), "perf trajectory regressed:\n{}", violations.join("\n"));
+    }
+}

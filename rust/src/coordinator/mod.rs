@@ -206,6 +206,22 @@ impl Coordinator {
         self.model.ideal_ratio(&p, &p).round().clamp(1.0, 8.0)
     }
 
+    /// [`Coordinator::auto_ratio`] with the throughputs drawn from a
+    /// `calibrate::WeightSource`: the service layer's ratio knob tuned
+    /// from *measured* rates (shape-classed by the request's `k`)
+    /// instead of the analytical model. Two-cluster topologies only,
+    /// like `auto_ratio`.
+    pub fn auto_ratio_from(
+        &self,
+        source: &crate::calibrate::WeightSource,
+        shape: GemmShape,
+    ) -> f64 {
+        assert_eq!(self.soc.num_clusters(), 2, "auto_ratio is the 2-cluster shorthand");
+        let class = crate::calibrate::ShapeClass::for_soc(&self.soc, shape);
+        let w = source.weights(&self.model, false, class);
+        (w.as_slice()[0] / w.as_slice()[1]).round().clamp(1.0, 8.0)
+    }
+
     /// Resolve `Auto` to a concrete backend for a shape: a loaded
     /// exact-shape artifact wins (zero compile/packing cost at request
     /// time); otherwise the native CA-DAS executor handles any shape.
@@ -779,6 +795,30 @@ mod tests {
         // §5.2.2/Fig. 9: the right ratio is ≈ 5.
         assert_eq!(c.auto_ratio(), 5.0);
         assert_eq!(c.auto_spec(), ScheduleSpec::ca_das());
+    }
+
+    /// ISSUE 5: the service-layer ratio knob can run off the calibration
+    /// layer — analytically synthesized tables reproduce `auto_ratio`,
+    /// and the source is consulted per shape class.
+    #[test]
+    fn auto_ratio_from_weight_sources() {
+        use crate::calibrate::{RateTable, WeightSource};
+        let c = Coordinator::new(SocSpec::exynos5422());
+        let shape = GemmShape::square(4096);
+        assert_eq!(
+            c.auto_ratio_from(&WeightSource::Analytical, shape),
+            c.auto_ratio(),
+            "analytical source is the existing knob"
+        );
+        let table = RateTable::from_analytical(c.soc());
+        assert_eq!(
+            c.auto_ratio_from(&WeightSource::Empirical(table.clone()), shape),
+            c.auto_ratio(),
+            "synthesized table degenerates to the analytical knob"
+        );
+        let measured = WeightSource::Empirical(RateTable::measure(c.soc(), &[]));
+        let r = c.auto_ratio_from(&measured, shape);
+        assert!((1.0..=8.0).contains(&r), "measured ratio {r}");
     }
 
     /// ISSUE satellite: the batcher's drain must flush partially-filled

@@ -25,6 +25,7 @@
 //! timeline, bit for bit.
 
 use crate::blis::gemm::GemmShape;
+use crate::calibrate::{ShapeClass, WeightSource};
 use crate::dvfs::DvfsSchedule;
 use crate::energy::{CoreState, PowerModel};
 use crate::model::calibration as cal;
@@ -83,15 +84,29 @@ impl DvfsStrategy {
         }
     }
 
-    /// The equivalent fixed-frequency schedule spec (weights from the
-    /// given model — i.e. from the operating point it was built at).
+    /// The equivalent fixed-frequency schedule spec (analytical weights
+    /// from the given model — i.e. from the operating point it was
+    /// built at).
     pub fn to_spec(self, model: &PerfModel) -> ScheduleSpec {
+        self.to_spec_with(model, &WeightSource::Analytical, ShapeClass::Large)
+    }
+
+    /// [`DvfsStrategy::to_spec`] with the weight vector drawn from a
+    /// [`WeightSource`] at the model's current per-cluster rungs: the
+    /// calibrated (or blended) split for static strategies; dynamic
+    /// strategies carry no weights and ignore the source.
+    pub fn to_spec_with(
+        self,
+        model: &PerfModel,
+        source: &WeightSource,
+        class: ShapeClass,
+    ) -> ScheduleSpec {
         match self {
             DvfsStrategy::Sas { cache_aware: false } => {
-                ScheduleSpec::sas_weighted(model.sas_weights())
+                ScheduleSpec::sas_weighted(source.weights(model, false, class))
             }
             DvfsStrategy::Sas { cache_aware: true } => {
-                ScheduleSpec::ca_sas_weighted(model.ca_sas_weights())
+                ScheduleSpec::ca_sas_weighted(source.weights(model, true, class))
             }
             DvfsStrategy::Das { cache_aware: false } => ScheduleSpec::das(),
             DvfsStrategy::Das { cache_aware: true } => ScheduleSpec::ca_das(),
@@ -140,6 +155,8 @@ struct Epoch {
 
 /// Simulate one GEMM under `strat` while the OPP `schedule` plays out,
 /// with `retune` governing the SAS weight vector at transitions.
+/// Weights come from the analytical model — the pre-calibration
+/// behavior, bit for bit ([`simulate_dvfs_with`] selects the source).
 pub fn simulate_dvfs(
     base: &SocSpec,
     strat: DvfsStrategy,
@@ -147,20 +164,42 @@ pub fn simulate_dvfs(
     schedule: &DvfsSchedule,
     retune: Retune,
 ) -> DvfsStats {
+    simulate_dvfs_with(base, strat, shape, schedule, retune, &WeightSource::Analytical)
+}
+
+/// [`simulate_dvfs`] with the SAS weight vector drawn from a
+/// [`WeightSource`]: at every epoch (boot and each OPP transition) the
+/// split is looked up at that epoch's *per-cluster rung vector* — so an
+/// empirical source feeds measured per-OPP rates into the online
+/// retuner instead of one global ratio. Epoch *throughputs* (the fluid
+/// rates that integrate time and energy) stay DES-calibrated regardless
+/// of the source: the engine remains the arbiter of how fast work
+/// drains; the source only decides who is assigned what.
+pub fn simulate_dvfs_with(
+    base: &SocSpec,
+    strat: DvfsStrategy,
+    shape: GemmShape,
+    schedule: &DvfsSchedule,
+    retune: Retune,
+    source: &WeightSource,
+) -> DvfsStats {
     schedule.validate(base).expect("invalid DVFS schedule");
     let label = format!("{} [{}]", strat.label(), retune.label());
     let n = base.num_clusters();
+    let class = ShapeClass::for_soc(base, shape);
 
     if schedule.is_static() {
         // Fixed operating point: the DES is exact — and bit-for-bit the
         // pre-DVFS results when the point is nominal.
         let model = PerfModel::new(schedule.soc_at(base, 0.0));
-        let spec = strat.to_spec(&model);
+        let spec = strat.to_spec_with(&model, source, class);
         let st = sim::simulate(&model, &spec, shape);
         let cluster_share = match strat {
-            DvfsStrategy::Sas { cache_aware } => {
-                model.auto_weights(cache_aware).normalized().as_slice().to_vec()
-            }
+            DvfsStrategy::Sas { cache_aware } => source
+                .weights(&model, cache_aware, class)
+                .normalized()
+                .as_slice()
+                .to_vec(),
             DvfsStrategy::Das { .. } => {
                 let mut busy = vec![0.0; n];
                 for c in model.soc.cluster_ids() {
@@ -188,7 +227,7 @@ pub fn simulate_dvfs(
     }
 
     // ---- epoch-fluid replay over the transition boundaries ----
-    let (epochs, bytes_per_flop) = build_epochs(base, strat, shape, schedule);
+    let (epochs, bytes_per_flop) = build_epochs(base, strat, shape, schedule, source, class);
     let f_total = shape.flops();
     let (finish, executed, retunes, grabs) = if strat.is_dynamic() {
         let (f, e, g) = run_das(base, strat, shape, &epochs);
@@ -222,12 +261,15 @@ pub fn simulate_dvfs(
 }
 
 /// Cut virtual time at every transition and compute each epoch's
-/// DES-calibrated per-cluster rates, rail powers and weight vector.
+/// DES-calibrated per-cluster rates, rail powers and the weight vector
+/// the `source` assigns at that epoch's rung vector.
 fn build_epochs(
     base: &SocSpec,
     strat: DvfsStrategy,
     shape: GemmShape,
     schedule: &DvfsSchedule,
+    source: &WeightSource,
+    class: ShapeClass,
 ) -> (Vec<Epoch>, f64) {
     let mut times = vec![0.0];
     times.extend(schedule.boundaries());
@@ -244,11 +286,21 @@ fn build_epochs(
             .map(|c| model.cluster_rate_gflops(c, &params[c.0], model.soc[c].num_cores))
             .collect();
         let total: f64 = analytic.iter().sum();
+        // The epoch's *assignment* weights come from the source at this
+        // epoch's per-cluster rung vector (the per-OPP empirical rates,
+        // when calibrated); with the analytical source this is exactly
+        // `analytic[c] / total`, bit for bit.
+        let opps: Vec<usize> = base.cluster_ids().map(|c| schedule.opp_at(c, t0)).collect();
+        let weights = source
+            .weights_for(&model, &opps, strat.cache_aware(), class)
+            .normalized()
+            .as_slice()
+            .to_vec();
         // One DES run of this epoch's fixed-point configuration pins
         // the fluid aggregate to the engine's (packing, barriers,
         // cross-cluster interference included) — the epoch replay can
         // never be optimistic relative to a fixed-frequency DES run.
-        let joint = sim::simulate(&model, &strat.to_spec(&model), shape);
+        let joint = sim::simulate(&model, &strat.to_spec_with(&model, source, class), shape);
         if i == 0 {
             bytes_per_flop = joint.dram_bytes / joint.flops;
         }
@@ -276,7 +328,7 @@ fn build_epochs(
             rate: analytic.iter().map(|r| r * eta * 1e9).collect(),
             p_busy,
             p_poll,
-            weights: analytic.iter().map(|r| r / total).collect(),
+            weights,
         });
     }
     (epochs, bytes_per_flop)
@@ -484,6 +536,62 @@ mod tests {
             assert_eq!(st.transitions_applied, 2, "{}", st.label);
             assert!(st.cluster_share.iter().all(|&x| x > 0.0), "both clusters work");
         }
+    }
+
+    /// ISSUE 5 degeneracy anchor: an empirical table synthesized from
+    /// the analytical model feeds the online retuner the exact same
+    /// per-OPP weights — the whole replay reproduces bit for bit, so
+    /// `Empirical` differs from `Analytical` only by what was measured.
+    #[test]
+    fn analytical_synthesis_replays_bit_for_bit() {
+        use crate::calibrate::RateTable;
+        let s = soc();
+        let table = WeightSource::Empirical(RateTable::from_analytical(&s));
+        let plan = Ondemand::new(0.25).plan(&s, 30.0);
+        let shape = GemmShape::square(1024);
+        for strat in [
+            DvfsStrategy::Sas { cache_aware: true },
+            DvfsStrategy::Sas { cache_aware: false },
+            DvfsStrategy::Das { cache_aware: true },
+        ] {
+            for retune in [Retune::Boot, Retune::Online] {
+                let ana = simulate_dvfs(&s, strat, shape, &plan, retune);
+                let emp = simulate_dvfs_with(&s, strat, shape, &plan, retune, &table);
+                assert_eq!(ana, emp, "{} [{}]", strat.label(), retune.label());
+            }
+        }
+        // Static schedules too (the DES fast path).
+        let pinned = Performance.plan(&s, 1.0);
+        let strat = DvfsStrategy::Sas { cache_aware: true };
+        let ana = simulate_dvfs(&s, strat, shape, &pinned, Retune::Online);
+        let emp = simulate_dvfs_with(&s, strat, shape, &pinned, Retune::Online, &table);
+        assert_eq!(ana, emp);
+    }
+
+    /// A genuinely measured table shifts the online split away from the
+    /// analytical one — and the empirically weighted replay still
+    /// drains everything deterministically.
+    #[test]
+    fn measured_table_feeds_the_retuner() {
+        use crate::calibrate::RateTable;
+        let s = soc();
+        let source = WeightSource::Empirical(RateTable::measure(&s, &[]));
+        let plan = Ondemand::new(0.25).plan(&s, 30.0);
+        let shape = GemmShape::square(2048);
+        let strat = DvfsStrategy::Sas { cache_aware: true };
+        let emp = simulate_dvfs_with(&s, strat, shape, &plan, Retune::Online, &source);
+        let ana = simulate_dvfs(&s, strat, shape, &plan, Retune::Online);
+        let sum: f64 = emp.cluster_share.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "shares {sum}");
+        assert!(emp.retunes > 0, "the empirical path must retune per rung");
+        assert!(
+            emp.cluster_share != ana.cluster_share,
+            "measured rates must shift the split: {:?}",
+            emp.cluster_share
+        );
+        // Deterministic replay.
+        let again = simulate_dvfs_with(&s, strat, shape, &plan, Retune::Online, &source);
+        assert_eq!(emp, again);
     }
 
     /// ISSUE satellite: same schedule ⇒ identical timeline, twice.

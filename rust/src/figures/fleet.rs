@@ -65,6 +65,8 @@ pub fn stream_row(st: &StreamStats) -> Vec<String> {
         format!("{:.3}", st.makespan_s),
         format!("{:.2}", st.throughput_rps),
         format!("{:.3}", st.utilization),
+        format!("{:.3}", st.sojourn_p50_s),
+        format!("{:.3}", st.sojourn_p99_s),
         format!("{:.2}", st.mean_queue_depth),
         st.max_queue_depth.to_string(),
         format!("{:.1}", st.energy_j),
@@ -72,9 +74,21 @@ pub fn stream_row(st: &StreamStats) -> Vec<String> {
 }
 
 /// Columns of the streaming-vs-wave comparison, shared by every
-/// renderer (report, `amp-gemm fleet --stream`, the example).
-const STREAM_COLUMNS: &[&str] =
-    &["mode", "makespan [s]", "req/s", "utilization", "mean depth", "max depth", "energy [J]"];
+/// renderer (report, `amp-gemm fleet --stream`, the example). The
+/// p50/p99 sojourn percentiles (completion − arrival, submission-
+/// indexed) close the ROADMAP "latency percentiles in the streaming
+/// report" follow-on.
+const STREAM_COLUMNS: &[&str] = &[
+    "mode",
+    "makespan [s]",
+    "req/s",
+    "utilization",
+    "p50 [s]",
+    "p99 [s]",
+    "mean depth",
+    "max depth",
+    "energy [J]",
+];
 
 /// The streaming-vs-wave comparison on any fleet and arrival stream:
 /// one row per wave-mode strategy plus the streaming dispatcher.
@@ -246,6 +260,26 @@ pub fn run(quick: bool) -> FigureResult {
             "stream {:.3} vs waves {:?}",
             stream.utilization,
             wave_stats.iter().map(|w| w.utilization).collect::<Vec<_>>()
+        ),
+    ));
+    assertions.push(Assertion::check(
+        "sojourn percentiles are well-formed (0 < p50 <= p99 <= makespan)",
+        {
+            let ok = |st: &StreamStats| {
+                st.sojourn_p50_s > 0.0
+                    && st.sojourn_p50_s <= st.sojourn_p99_s
+                    && st.sojourn_p99_s <= st.makespan_s + 1e-12
+            };
+            ok(&stream) && wave_stats.iter().all(ok)
+        },
+        format!(
+            "stream p50/p99 {:.3}/{:.3}s, waves {:?}",
+            stream.sojourn_p50_s,
+            stream.sojourn_p99_s,
+            wave_stats
+                .iter()
+                .map(|w| (w.sojourn_p50_s, w.sojourn_p99_s))
+                .collect::<Vec<_>>()
         ),
     ));
     assertions.push(Assertion::check(

@@ -11,14 +11,17 @@
 //! qualitative claims the paper draws from that figure (who wins, where
 //! the crossover sits, by roughly what factor). `cargo test` runs all of
 //! them in quick mode; `amp-gemm figures` and `cargo bench` regenerate
-//! the full versions. DESIGN.md §7 indexes every experiment.
+//! the full versions. DESIGN.md §8 indexes every experiment.
 //!
 //! Beyond the paper: [`ablation`] covers the §6 future-work knobs,
 //! [`fleet`] is the multi-board throughput-scaling report
-//! (`amp-gemm fleet --report`) and [`dvfs`] is the operating-point
-//! Pareto-frontier / online-retuning report (`amp-gemm dvfs --report`).
+//! (`amp-gemm fleet --report`), [`dvfs`] is the operating-point
+//! Pareto-frontier / online-retuning report (`amp-gemm dvfs --report`)
+//! and [`calibrate`] is the measured-rate weight-calibration report
+//! (`amp-gemm calibrate --report`).
 
 pub mod ablation;
+pub mod calibrate;
 pub mod dvfs;
 pub mod fig10;
 pub mod fleet;

@@ -30,6 +30,7 @@
 pub mod sim;
 
 use crate::blis::gemm::GemmShape;
+use crate::calibrate::{RateTable, ShapeClass, WeightSource};
 use crate::model::PerfModel;
 use crate::sched::{ScheduleSpec, Weighted, Weights, MAX_WAYS};
 use crate::soc::SocSpec;
@@ -66,6 +67,13 @@ pub struct Board {
     /// ([`crate::coordinator::FleetDispatcher`]); the virtual-time
     /// [`sim`] ignores it.
     pub backend: crate::coordinator::Backend,
+    /// Where this board's aggregate throughput (its fleet-SAS weight
+    /// and fleet-DAS grain) comes from: the analytical model by
+    /// default, or a measured [`RateTable`] via [`Board::calibrated`] /
+    /// [`Board::with_weight_source`] — which is how calibrated rates
+    /// reach the fleet split and the capacity planner
+    /// ([`sim::boards_to_sustain`]) without touching either.
+    pub weight_source: WeightSource,
     model: PerfModel,
 }
 
@@ -77,6 +85,7 @@ impl Board {
             name: name.to_string(),
             sched,
             backend: crate::coordinator::Backend::Sim(sched),
+            weight_source: WeightSource::Analytical,
             model: PerfModel::new(soc),
         }
     }
@@ -88,8 +97,23 @@ impl Board {
             name: name.to_string(),
             sched,
             backend: crate::coordinator::Backend::Native(sched),
+            weight_source: WeightSource::Analytical,
             model: PerfModel::new(soc),
         }
+    }
+
+    /// Replace the board's weight source (builder style).
+    pub fn with_weight_source(mut self, source: WeightSource) -> Board {
+        self.weight_source = source;
+        self
+    }
+
+    /// Calibrate this board: measure its own descriptor's rate table
+    /// (isolated per-cluster DES runs at every rung) and weigh the
+    /// board empirically from it.
+    pub fn calibrated(self) -> Board {
+        let table = RateTable::measure(self.soc(), &[]);
+        self.with_weight_source(WeightSource::Empirical(table))
     }
 
     /// Build a sim board from a preset token (the `--boards` CLI
@@ -146,11 +170,16 @@ impl Board {
     }
 
     /// Calibrated aggregate steady-state throughput of the board,
-    /// GFLOPS: every cluster on its own tuned parameters (the sum of the
-    /// per-cluster rates behind `PerfModel::ca_sas_weights`). This is
-    /// the board's weight in the fleet-SAS split.
+    /// GFLOPS: every cluster on its own tuned parameters, summed — from
+    /// the analytical model (the rates behind
+    /// `PerfModel::ca_sas_weights`) or, for a calibrated board, from
+    /// its measured rate table at the descriptor's current rungs
+    /// (large-shape class: the steady-state asymptote board-level
+    /// sharding keys on). This is the board's weight in the fleet-SAS
+    /// split and the scale of its fleet-DAS grain.
     pub fn throughput_gflops(&self) -> f64 {
-        self.model.ca_sas_weights().as_slice().iter().sum()
+        self.weight_source
+            .board_throughput(&self.model, ShapeClass::Large)
     }
 }
 
@@ -387,6 +416,32 @@ mod tests {
         assert!(w.as_slice()[0] > 1.5 * w.as_slice()[1], "{:?}", w.as_slice());
         assert!(Board::from_preset("exynos5422@turbo").is_err());
         assert!(Board::from_preset("warp9@powersave").is_err());
+    }
+
+    /// ISSUE 5: a calibrated board weighs itself from measured DES
+    /// rates — strictly below the analytical steady-state aggregate
+    /// (packing and barriers are real), with the hybrid in between —
+    /// and the fleet-SAS split follows the calibrated weights.
+    #[test]
+    fn calibrated_boards_weigh_from_measured_rates() {
+        let ana = Board::from_preset("exynos5422").unwrap();
+        let cal = Board::from_preset("exynos5422").unwrap().calibrated();
+        let t_ana = ana.throughput_gflops();
+        let t_cal = cal.throughput_gflops();
+        assert!(t_cal < t_ana, "measured {t_cal} vs analytical {t_ana}");
+        assert!(t_cal > 0.75 * t_ana, "measured {t_cal} vs analytical {t_ana}");
+        let table = cal.weight_source.table().expect("calibrated board has a table").clone();
+        let hyb = Board::from_preset("exynos5422")
+            .unwrap()
+            .with_weight_source(WeightSource::Hybrid(table));
+        let t_hyb = hyb.throughput_gflops();
+        assert!(t_cal < t_hyb && t_hyb < t_ana, "{t_cal} < {t_hyb} < {t_ana}");
+        // Mixed sourcing shifts the static split: an analytical board
+        // next to its calibrated twin gets the larger shard.
+        let f = Fleet::new(vec![ana, cal]);
+        let shards = f.static_shards(100, FleetStrategy::Sas);
+        assert_eq!(shards.iter().sum::<usize>(), 100);
+        assert!(shards[0] > shards[1], "{shards:?}");
     }
 
     #[test]

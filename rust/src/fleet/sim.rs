@@ -454,6 +454,12 @@ pub struct StreamStats {
     /// Completion instant of every request, in submission order — the
     /// in-order merge the dispatcher exposes to clients.
     pub completions: Vec<f64>,
+    /// Median request sojourn time (completion − arrival, the
+    /// client-visible latency), from the submission-indexed completions.
+    pub sojourn_p50_s: f64,
+    /// 99th-percentile sojourn time — the tail the wave barrier
+    /// inflates and streaming admission is meant to cut.
+    pub sojourn_p99_s: f64,
     /// Executed requests per distinct shape, in first-submission order
     /// (the per-shape shard-sum invariant: must equal the submitted
     /// histogram).
@@ -560,6 +566,15 @@ fn finish_stream_stats(
 
     let total_flops: f64 = arrivals.iter().map(|a| a.shape.flops()).sum();
     let total_busy: f64 = boards.iter().map(|b| b.busy_s).sum();
+    // Sojourn times (completion − arrival) are submission-indexed, so
+    // the percentiles line up request-for-request across replay modes.
+    let sojourns: Vec<f64> = completions
+        .iter()
+        .zip(arrivals)
+        .map(|(&done, a)| done - a.arrive_s)
+        .collect();
+    let sojourn_p50_s = crate::util::stats::percentile(&sojourns, 50.0);
+    let sojourn_p99_s = crate::util::stats::percentile(&sojourns, 99.0);
     StreamStats {
         label,
         requests: arrivals.len(),
@@ -569,6 +584,8 @@ fn finish_stream_stats(
         energy_j: boards.iter().map(|b| b.energy_j).sum(),
         utilization: total_busy / (n as f64 * makespan),
         completions,
+        sojourn_p50_s,
+        sojourn_p99_s,
         per_shape,
         mean_queue_depth: if makespan > 0.0 { integral / makespan } else { 0.0 },
         max_queue_depth: max_depth as usize,
@@ -868,6 +885,10 @@ pub fn simulate_fleet_waves(
 /// sustaining `target_rps` requests per second on `shape` batches of
 /// `batch` items, up to `max_boards` (clamped to the fleet capacity,
 /// [`crate::sched::MAX_WAYS`]). `None` if even the largest fleet can't.
+/// The plan prices whatever the board's `weight_source` says it
+/// sustains — hand it a [`crate::fleet::Board::calibrated`] board and
+/// the capacity answer runs off measured rates instead of the
+/// analytical model.
 pub fn boards_to_sustain(
     board: &crate::fleet::Board,
     shape: GemmShape,
@@ -1325,6 +1346,40 @@ mod tests {
         }
         assert!(a.max_queue_depth >= 1);
         assert!(a.mean_queue_depth >= 0.0);
+    }
+
+    /// ROADMAP follow-on (ISSUE 5 satellite): sojourn-time percentiles
+    /// from the submission-indexed completions — consistent with the
+    /// raw vector, ordered, and bounded by the run.
+    #[test]
+    fn sojourn_percentiles_are_consistent() {
+        let shapes = [GemmShape::square(256), GemmShape::square(384), GemmShape::square(512)];
+        let mut rng = Rng::new(0xFACE);
+        let arrivals = poisson_arrivals(&mut rng, &shapes, 40, 60.0);
+        let st = simulate_fleet_stream(&hetero(), &arrivals);
+        let mut sojourns: Vec<f64> = st
+            .completions
+            .iter()
+            .zip(&arrivals)
+            .map(|(&done, a)| done - a.arrive_s)
+            .collect();
+        sojourns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(st.sojourn_p50_s > 0.0);
+        assert!(
+            st.sojourn_p50_s <= st.sojourn_p99_s,
+            "{} vs {}",
+            st.sojourn_p50_s,
+            st.sojourn_p99_s
+        );
+        assert!(st.sojourn_p99_s <= sojourns[sojourns.len() - 1] + 1e-12);
+        assert!(st.sojourn_p50_s >= sojourns[0] - 1e-12);
+        // Every sojourn is below the makespan (nothing completes after
+        // the run, nothing arrives before t = 0).
+        assert!(st.sojourn_p99_s <= st.makespan_s + 1e-12);
+        // The wave comparator reports them too, and the barrier can
+        // only lengthen the median wait on this near-capacity stream.
+        let waves = simulate_fleet_waves(&hetero(), FleetStrategy::Das, &arrivals, 8);
+        assert!(waves.sojourn_p50_s > 0.0 && waves.sojourn_p99_s >= waves.sojourn_p50_s);
     }
 
     /// An arrival gap idles the whole fleet: the stream waits for the

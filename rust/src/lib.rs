@@ -47,12 +47,24 @@
 //!   (`simulate_fleet_stream`, idle-tail/queue-depth/utilization
 //!   accounting) and the synchronous wave comparator, for capacity
 //!   planning and streaming-vs-wave studies;
+//! * [`calibrate`] — the **empirical calibration layer**: measured
+//!   per-cluster rate tables (shape-classed small/medium/large
+//!   `kc`-bound regimes, one row per OPP rung and parameter family,
+//!   exact TSV round-trip) filled from isolated per-cluster DES runs,
+//!   and the `WeightSource::{Analytical, Empirical, Hybrid}` selector
+//!   threaded through SAS/CA-SAS weight construction, the DVFS online
+//!   retuner (per-OPP rates), fleet-SAS board weights and capacity
+//!   planning — with the analytical-degeneracy anchor (a table
+//!   synthesized from the model reproduces the analytical weights bit
+//!   for bit) and the CI perf-trajectory harness
+//!   (`calibrate::trajectory`, `BENCH_baseline.json` gate);
 //! * [`search`], [`figures`] — the per-cluster empirical (mc, kc)
-//!   search (now swept per OPP, with persisted per-point presets) and
-//!   the regeneration harness for every evaluation figure in the paper
+//!   search (swept per OPP, with persisted per-point presets that
+//!   optionally carry measured shape-classed rates) and the
+//!   regeneration harness for every evaluation figure in the paper
 //!   (plus the §6-roadmap ablations, topology sweeps, the
-//!   fleet-throughput-scaling report and the DVFS perf/energy
-//!   Pareto-frontier report);
+//!   fleet-throughput-scaling report, the DVFS perf/energy
+//!   Pareto-frontier report and the calibration report);
 //! * [`util`] — deterministic RNG, stats, tables, mini-prop, benchkit,
 //!   CLI.
 //!
@@ -62,6 +74,7 @@
 
 pub mod blis;
 pub mod cache;
+pub mod calibrate;
 pub mod coordinator;
 pub mod dvfs;
 pub mod energy;

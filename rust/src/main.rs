@@ -6,7 +6,13 @@
 //! * `search   [--core a15|a7] [--shared-kc]` — the §3.3 (mc, kc) search;
 //! * `gemm     --size R [--sched S] [--backend native|sim|pjrt]` — run
 //!   one GEMM;
-//! * `calibrate` — print model-vs-paper anchor table;
+//! * `calibrate [--report|--anchors]` — run the empirical per-OPP
+//!   search, measure + persist the DES rate table and preset stores and
+//!   print analytical-vs-empirical weight deltas (`--report` regenerates
+//!   the calibration report; `--anchors` the model-vs-paper anchors);
+//! * `trajectory [--emit F] [--baseline F] [--gate G]` — the CI
+//!   perf-trajectory harness: pinned deterministic virtual-time metrics,
+//!   JSON artifact, >gate regression fails the run;
 //! * `serve    [--addr HOST:PORT] [--artifacts DIR]` — TCP GEMM service;
 //! * `fleet    [--boards P1,P2,…] [--size R] [--batch N]` — multi-board
 //!   virtual-time sweep: per-board and fleet-aggregate GFLOPS/energy
@@ -48,7 +54,8 @@ fn main() {
         "ablation" => cmd_ablation(&args),
         "search" => cmd_search(&args),
         "gemm" => cmd_gemm(&args),
-        "calibrate" => cmd_calibrate(),
+        "calibrate" => cmd_calibrate(&args),
+        "trajectory" => cmd_trajectory(&args),
         "serve" => cmd_serve(&args),
         "fleet" => cmd_fleet(&args),
         "dvfs" => cmd_dvfs(&args),
@@ -69,13 +76,18 @@ fn print_help() {
         "amp-gemm — architecture-aware GEMM scheduling on asymmetric multicores
 (reproduction of Catalán et al. 2015; see DESIGN.md)
 
-USAGE: amp-gemm <figures|search|gemm|calibrate|serve|fleet|dvfs|soc> [options]
+USAGE: amp-gemm <figures|search|gemm|calibrate|trajectory|serve|fleet|dvfs|soc> [options]
 
   figures   [--fig N] [--quick] [--out results]   regenerate paper figures
   ablation  [--out results]                        §6 future-work ablations
   search    [--core a15|a7] [--shared-kc]         (mc,kc) empirical search
   gemm      --size R [--sched cadas|das|sas5|...] [--backend native|sim|pjrt]
-  calibrate                                        model-vs-paper anchors
+  calibrate [--out results]   run the empirical search, measure + persist the
+            per-OPP rate table and preset stores, print weight deltas
+  calibrate --report [--quick] [--out results]      calibration report
+  calibrate --anchors                               model-vs-paper anchors
+  trajectory [--emit BENCH_ci.json] [--baseline BENCH_baseline.json]
+            [--gate 0.10] [--seed-baseline PATH]    perf-trajectory gate
   serve     [--addr 127.0.0.1:7070] [--artifacts artifacts]
   fleet     [--boards exynos5422,juno_r0] [--size R] [--batch N] [--sched sss|sas|das]
   fleet     --report [--quick] [--out results]      fixed-fleet scaling report
@@ -83,6 +95,7 @@ USAGE: amp-gemm <figures|search|gemm|calibrate|serve|fleet|dvfs|soc> [options]
             [--rate RPS] [--seed S]                 streaming-vs-wave sweep
   dvfs      [--governor performance|powersave|ondemand[:ms]] [--size R]
             [--sched sas|casas|das|cadas] [--ladder] [--tune-opps]
+            [--weights analytical|empirical|hybrid]
   dvfs      --report [--quick] [--out results]      OPP Pareto + retuning report
   soc                                              simulated SoC descriptor"
     );
@@ -258,10 +271,154 @@ fn cmd_gemm(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_calibrate() -> Result<(), String> {
+/// The calibration entry point (ISSUE 5): run the per-OPP empirical
+/// search, measure the DES rate table, persist both, and print the
+/// analytical-vs-empirical weight deltas. `--report` regenerates the
+/// full calibration report; `--anchors` prints the original
+/// model-vs-paper anchor table.
+fn cmd_calibrate(args: &Args) -> Result<(), String> {
+    use amp_gemm::calibrate::{RateTable, ShapeClass, WeightSource};
+    use amp_gemm::search::OppPresetStore;
+
+    if args.flag("anchors") {
+        return cmd_calibrate_anchors();
+    }
+    if args.flag("report") {
+        let fig = figures::calibrate::run(args.flag("quick"));
+        println!("{}", fig.to_markdown());
+        let out = Path::new(args.get_or("out", "results"));
+        let paths = fig.write_csvs(out).map_err(|e| e.to_string())?;
+        println!("wrote {} CSVs under {}", paths.len(), out.display());
+        if !fig.passed() {
+            return Err("calibration report assertions failed".into());
+        }
+        return Ok(());
+    }
+
+    let soc = SocSpec::exynos5422();
+    let out = Path::new(args.get_or("out", "results"));
+
+    // 1. The per-OPP (mc, kc) search, with measured rates, persisted.
+    let mut stores = Vec::new();
+    for id in soc.cluster_ids() {
+        let store = OppPresetStore::tune_measured(&soc, id);
+        let path = out.join(format!("opp_presets_{id}.tsv"));
+        store.save(&path).map_err(|e| e.to_string())?;
+        let top = store.presets.last().expect("non-empty ladder");
+        println!(
+            "{}: searched {} rungs, nominal (mc, kc) = ({}, {}), measured {:.2} GFLOPS (large) — {}",
+            soc[id].name,
+            store.presets.len(),
+            top.mc,
+            top.kc,
+            top.measured.expect("measured")[2],
+            path.display()
+        );
+        stores.push(store);
+    }
+
+    // 2. The rate table over the searched optima, measured at the
+    // evaluation suite's canonical sizes (one per shape class — the
+    // same triple the calibration report asserts on) and persisted.
+    let table =
+        RateTable::measure_with_reps(&soc, &stores, &amp_gemm::calibrate::canonical_reps());
+    let table_path = out.join("rate_table_exynos5422.tsv");
+    table.save(&table_path).map_err(|e| e.to_string())?;
+    println!("rate table ({} rows) — {}\n", table.rows.len(), table_path.display());
+
+    // 3. Analytical-vs-empirical weight deltas, per shape class.
+    let model = PerfModel::new(soc.clone());
+    let empirical = WeightSource::Empirical(table);
+    let mut t = Table::new(
+        "CA-SAS weight shares: analytical vs empirical (per shape class)",
+        &["class", "analytical big", "empirical big", "Δ [pp]", "analytical b:L", "empirical b:L"],
+    );
+    for class in ShapeClass::ALL {
+        let ana = WeightSource::Analytical.weights(&model, true, class).normalized();
+        let emp = empirical.weights(&model, true, class).normalized();
+        t.push_row(vec![
+            class.label().to_string(),
+            format!("{:.4}", ana.share(0)),
+            format!("{:.4}", emp.share(0)),
+            format!("{:+.2}", (emp.share(0) - ana.share(0)) * 100.0),
+            format!("{:.2}", ana.share(0) / ana.share(1)),
+            format!("{:.2}", emp.share(0) / emp.share(1)),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    Ok(())
+}
+
+/// Perf-trajectory harness (ISSUE 5 CI satellite): collect the pinned
+/// deterministic metric suite, optionally emit it as a JSON artifact,
+/// and gate it against a checked-in baseline (exit non-zero past the
+/// gate). `--seed-baseline` writes the collected suite as a fresh
+/// baseline instead.
+fn cmd_trajectory(args: &Args) -> Result<(), String> {
+    use amp_gemm::calibrate::trajectory::Trajectory;
+
+    let mut current = Trajectory::collect();
+    if let Some(path) = args.get("seed-baseline") {
+        // Re-seeding over an existing baseline keeps its per-entry
+        // gates: the gate widths are policy (sized to each metric's
+        // pinned invariant range), the values are measurement — only
+        // the latter should refresh.
+        if let Ok(old) = Trajectory::load(Path::new(path)) {
+            let mut kept = 0;
+            for e in &mut current.entries {
+                if let Some(gate) = old.get(&e.key).and_then(|o| o.gate) {
+                    e.gate = Some(gate);
+                    kept += 1;
+                }
+            }
+            println!("kept {kept} per-entry gates from the existing baseline");
+        }
+        current.save(Path::new(path)).map_err(|e| e.to_string())?;
+        println!("seeded baseline with {} metrics at {path}", current.entries.len());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        "perf trajectory (virtual-time, deterministic)",
+        &["metric", "value", "better"],
+    );
+    for e in &current.entries {
+        t.push_row(vec![
+            e.key.clone(),
+            format!("{:.6}", e.value),
+            e.better.label().to_string(),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+    if let Some(path) = args.get("emit") {
+        current.save(Path::new(path)).map_err(|e| e.to_string())?;
+        println!("emitted {} metrics to {path}", current.entries.len());
+    }
+    if let Some(path) = args.get("baseline") {
+        let gate = args.f64_or("gate", 0.10)?;
+        if !gate.is_finite() || gate <= 0.0 {
+            return Err(format!("--gate must be a positive fraction, got {gate}"));
+        }
+        let baseline = Trajectory::load(Path::new(path))?;
+        let violations = current.gate_against(&baseline, gate);
+        if !violations.is_empty() {
+            return Err(format!(
+                "perf trajectory regressed past the gate:\n  {}",
+                violations.join("\n  ")
+            ));
+        }
+        println!(
+            "gate clean: {} baseline metrics within their envelopes (default gate {:.0}%)",
+            baseline.entries.len(),
+            gate * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_calibrate_anchors() -> Result<(), String> {
     let model = PerfModel::exynos();
     use amp_gemm::blis::params::BlisParams;
-    println!("model-vs-paper calibration anchors (see DESIGN.md §6):\n");
+    println!("model-vs-paper calibration anchors (see DESIGN.md §7):\n");
     println!("| anchor | paper | model |");
     println!("|---|---|---|");
     let a15 = BlisParams::a15_opt();
@@ -458,7 +615,7 @@ fn cmd_fleet_stream(args: &Args) -> Result<(), String> {
 /// runs the §3.3 search at every ladder rung and persists the per-point
 /// presets.
 fn cmd_dvfs(args: &Args) -> Result<(), String> {
-    use amp_gemm::dvfs::sim::{simulate_dvfs, DvfsStrategy, Retune};
+    use amp_gemm::dvfs::sim::{simulate_dvfs_with, DvfsStrategy, Retune};
     use amp_gemm::dvfs::{parse_governor, Governor};
 
     if args.flag("report") {
@@ -523,19 +680,27 @@ fn cmd_dvfs(args: &Args) -> Result<(), String> {
         "cadas" | "ca-das" => DvfsStrategy::Das { cache_aware: true },
         other => return Err(format!("unknown --sched '{other}' (sas|casas|das|cadas)")),
     };
+    // Where the SAS weight vector comes from: the analytical model, or
+    // a freshly measured rate table (ISSUE 5 — the calibration layer's
+    // per-OPP rates feeding the online retuner).
+    let source = amp_gemm::calibrate::WeightSource::from_token(
+        args.get_or("weights", "analytical"),
+        || amp_gemm::calibrate::RateTable::measure(&soc, &[]),
+    )?;
     let plan = gov.plan(&soc, 1e3);
     println!(
-        "{} governor on {}: {} transitions planned\n",
+        "{} governor on {}: {} transitions planned ({} weights)\n",
         gov.name(),
         soc.name,
-        plan.transitions.len()
+        plan.transitions.len(),
+        source.label()
     );
     let mut t = Table::new(
         &format!("{} under the {} governor, r = {r}", strat.label(), gov.name()),
         &["weights", "makespan [s]", "GFLOPS", "energy [J]", "GFLOPS/W", "retunes", "transitions"],
     );
     for retune in [Retune::Boot, Retune::Online] {
-        let st = simulate_dvfs(&soc, strat, shape, &plan, retune);
+        let st = simulate_dvfs_with(&soc, strat, shape, &plan, retune, &source);
         t.push_row(vec![
             retune.label().to_string(),
             format!("{:.3}", st.time_s),

@@ -114,6 +114,34 @@ impl Weights {
         Weights::from_slice(&ws)
     }
 
+    /// Convex blend of two weight vectors in *share* space:
+    /// `(1 - alpha)·self + alpha·other`, both normalized first — the
+    /// `calibrate::WeightSource::Hybrid` primitive (analytical shares
+    /// hedged against measured ones). `alpha = 0` is exactly
+    /// `self.normalized()`, `alpha = 1` exactly `other.normalized()`.
+    pub fn blend(&self, other: &Weights, alpha: f64) -> Weights {
+        assert_eq!(
+            self.len(),
+            other.len(),
+            "blending weight vectors of different arity ({} vs {})",
+            self.len(),
+            other.len()
+        );
+        assert!(
+            (0.0..=1.0).contains(&alpha),
+            "blend factor must be in [0, 1], got {alpha}"
+        );
+        let a = self.normalized();
+        let b = other.normalized();
+        let ws: Vec<f64> = a
+            .as_slice()
+            .iter()
+            .zip(b.as_slice())
+            .map(|(x, y)| (1.0 - alpha) * x + alpha * y)
+            .collect();
+        Weights::from_slice(&ws)
+    }
+
     /// Way `i`'s fraction of the total weight.
     pub fn share(&self, i: usize) -> f64 {
         assert!(i < self.n, "way {i} out of range ({} ways)", self.n);
@@ -622,6 +650,25 @@ mod tests {
         for i in 0..3 {
             assert!((raw.share(i) - w.as_slice()[i]).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn blend_interpolates_shares() {
+        let a = Weights::from_slice(&[8.0, 2.0]); // shares 0.8 / 0.2
+        let b = Weights::from_slice(&[1.0, 1.0]); // shares 0.5 / 0.5
+        let mid = a.blend(&b, 0.5);
+        assert!((mid.share(0) - 0.65).abs() < 1e-12, "{}", mid.share(0));
+        // Endpoints are the normalized inputs exactly.
+        assert_eq!(a.blend(&b, 0.0), a.normalized());
+        assert_eq!(a.blend(&b, 1.0), b.normalized());
+        // Blending identical vectors is the identity.
+        assert_eq!(a.blend(&a, 0.5), a.normalized());
+    }
+
+    #[test]
+    #[should_panic(expected = "different arity")]
+    fn blend_rejects_mismatched_arity() {
+        Weights::from_slice(&[1.0, 2.0]).blend(&Weights::uniform(3), 0.5);
     }
 
     #[test]

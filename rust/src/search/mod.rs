@@ -108,7 +108,14 @@ pub struct OppPreset {
     pub freq_ghz: f64,
     pub mc: usize,
     pub kc: usize,
+    /// Analytical search score of the optimum (single-core steady rate).
     pub gflops: f64,
+    /// Measured cluster-aggregate GFLOPS at this rung, per shape class
+    /// (`[small, medium, large]`, see `crate::calibrate::ShapeClass`):
+    /// the empirical counterpart of `gflops`, filled by
+    /// `OppPresetStore::tune_measured`. `None` for analytical-only
+    /// stores — the pre-calibration TSV rows parse unchanged.
+    pub measured: Option<[f64; 3]>,
 }
 
 /// The full two-phase search run at every rung of one cluster's OPP
@@ -128,6 +135,7 @@ pub fn tune_opp_ladder(soc: &SocSpec, cluster: ClusterId) -> Vec<OppPreset> {
                 mc: fine.best.mc,
                 kc: fine.best.kc,
                 gflops: fine.best.gflops,
+                measured: None,
             }
         })
         .collect()
@@ -135,8 +143,11 @@ pub fn tune_opp_ladder(soc: &SocSpec, cluster: ClusterId) -> Vec<OppPreset> {
 
 /// Persisted per-OPP tuned presets for one cluster of one SoC: a small
 /// line-oriented format (`# soc<TAB>cluster` header, then
-/// `opp<TAB>freq<TAB>mc<TAB>kc<TAB>gflops` rows) that round-trips
-/// exactly through f64's shortest-repr `Display`.
+/// `opp<TAB>freq<TAB>mc<TAB>kc<TAB>gflops` rows — measured stores
+/// append the three shape-classed rates for 8 fields total) that
+/// round-trips exactly through f64's shortest-repr `Display`. Plain
+/// 5-field rows keep parsing unchanged, so pre-calibration preset files
+/// stay readable.
 #[derive(Debug, Clone, PartialEq)]
 pub struct OppPresetStore {
     pub soc: String,
@@ -158,9 +169,13 @@ impl OppPresetStore {
         let mut out = format!("# {}\t{}\n", self.soc, self.cluster.0);
         for p in &self.presets {
             out.push_str(&format!(
-                "{}\t{}\t{}\t{}\t{}\n",
+                "{}\t{}\t{}\t{}\t{}",
                 p.opp, p.freq_ghz, p.mc, p.kc, p.gflops
             ));
+            if let Some(m) = p.measured {
+                out.push_str(&format!("\t{}\t{}\t{}", m[0], m[1], m[2]));
+            }
+            out.push('\n');
         }
         out
     }
@@ -183,15 +198,30 @@ impl OppPresetStore {
                 continue;
             }
             let f: Vec<&str> = line.split('\t').collect();
-            if f.len() != 5 {
+            if f.len() != 5 && f.len() != 8 {
                 return Err(format!("bad preset row '{line}'"));
             }
+            // Physical quantities share one validator with
+            // `calibrate::RateTable::parse_text`: a frequency or a
+            // (measured) throughput is positive and finite or the row
+            // is corrupt.
+            let rate = crate::util::parse_positive_f64;
+            let measured = if f.len() == 8 {
+                Some([
+                    rate(f[5], "rate")?,
+                    rate(f[6], "rate")?,
+                    rate(f[7], "rate")?,
+                ])
+            } else {
+                None
+            };
             presets.push(OppPreset {
                 opp: f[0].parse().map_err(|_| format!("bad opp '{}'", f[0]))?,
-                freq_ghz: f[1].parse().map_err(|_| format!("bad freq '{}'", f[1]))?,
+                freq_ghz: rate(f[1], "freq")?,
                 mc: f[2].parse().map_err(|_| format!("bad mc '{}'", f[2]))?,
                 kc: f[3].parse().map_err(|_| format!("bad kc '{}'", f[3]))?,
-                gflops: f[4].parse().map_err(|_| format!("bad gflops '{}'", f[4]))?,
+                gflops: rate(f[4], "gflops")?,
+                measured,
             });
         }
         Ok(OppPresetStore {
@@ -369,6 +399,39 @@ mod tests {
         assert!(OppPresetStore::parse_text("junk\n1\t2\t3\t4\t5\n").is_err());
         assert!(OppPresetStore::parse_text("# soc\t0\n1\t2\t3\n").is_err());
         assert!(OppPresetStore::load(std::path::Path::new("/nonexistent/x")).is_err());
+    }
+
+    /// Measured-rate extension: 8-field rows round-trip with the rates,
+    /// 5-field rows stay the pre-calibration format, and mixed stores
+    /// are fine line by line.
+    #[test]
+    fn measured_rows_round_trip_and_plain_rows_stay_compatible() {
+        let plain = "# soc\t1\n0\t0.5\t80\t352\t0.31\n";
+        let store = OppPresetStore::parse_text(plain).unwrap();
+        assert_eq!(store.presets[0].measured, None);
+        assert_eq!(store.to_text(), plain, "5-field rows re-emit unchanged");
+
+        let mut measured = store.clone();
+        measured.presets[0].measured = Some([0.9, 1.7, 2.25]);
+        let text = measured.to_text();
+        assert_eq!(text.lines().nth(1).unwrap().split('\t').count(), 8);
+        let back = OppPresetStore::parse_text(&text).unwrap();
+        assert_eq!(back, measured, "measured round-trip must be exact");
+
+        // Malformed measured rows error cleanly: wrong arity, bad or
+        // non-finite rates.
+        assert!(OppPresetStore::parse_text("# s\t0\n0\t1\t80\t352\t0.3\t1\t2\n").is_err());
+        assert!(OppPresetStore::parse_text("# s\t0\n0\t1\t80\t352\t0.3\t1\t2\t3\t4\n").is_err());
+        assert!(OppPresetStore::parse_text("# s\t0\n0\t1\t80\t352\t0.3\tx\t2\t3\n").is_err());
+        assert!(OppPresetStore::parse_text("# s\t0\n0\t1\t80\t352\t0.3\tNaN\t2\t3\n").is_err());
+        assert!(OppPresetStore::parse_text("# s\t0\n0\t1\t80\t352\t0.3\tinf\t2\t3\n").is_err());
+        assert!(OppPresetStore::parse_text("# s\t0\n0\t1\t80\t352\t0.3\t0\t2\t3\n").is_err());
+        assert!(OppPresetStore::parse_text("# s\t0\n0\t1\t80\t352\t0.3\t-2\t2\t3\n").is_err());
+        // freq and gflops are physical quantities too: same validator.
+        assert!(OppPresetStore::parse_text("# s\t0\n0\tNaN\t80\t352\t0.3\n").is_err());
+        assert!(OppPresetStore::parse_text("# s\t0\n0\t-1\t80\t352\t0.3\n").is_err());
+        assert!(OppPresetStore::parse_text("# s\t0\n0\t1\t80\t352\tNaN\n").is_err());
+        assert!(OppPresetStore::parse_text("# s\t0\n0\t1\t80\t352\tinf\n").is_err());
     }
 
     /// The same machinery tunes every cluster of a tri-cluster topology:

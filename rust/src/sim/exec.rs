@@ -33,7 +33,7 @@ use crate::sim::timeline::{PhaseKind, Timeline};
 use crate::soc::ClusterId;
 
 /// Widest cluster the stack-allocated phase buffers support (perf pass:
-/// avoids a Vec allocation per simulated phase, DESIGN.md §8).
+/// avoids a Vec allocation per simulated phase, DESIGN.md §9).
 const MAX_CLUSTER_THREADS: usize = 16;
 
 /// One cluster's simulated execution state.

@@ -40,6 +40,19 @@ pub fn rel_diff(a: f64, b: f64) -> f64 {
     (a - b).abs() / denom
 }
 
+/// Parse a strictly positive, finite f64 — the shared validator for
+/// persisted physical quantities (GFLOPS rates, frequencies) in the
+/// calibration TSV formats (`search::OppPresetStore`,
+/// `calibrate::RateTable`): one rule, so the two parsers can never
+/// drift apart on what a corrupt row looks like.
+pub fn parse_positive_f64(s: &str, what: &str) -> Result<f64, String> {
+    let v: f64 = s.parse().map_err(|_| format!("bad {what} '{s}'"))?;
+    if !v.is_finite() || v <= 0.0 {
+        return Err(format!("{what} must be positive and finite, got '{s}'"));
+    }
+    Ok(v)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -72,5 +85,15 @@ mod tests {
         assert_eq!(rel_diff(1.0, 1.0), 0.0);
         assert!((rel_diff(1.0, 2.0) - 0.5).abs() < 1e-12);
         assert_eq!(rel_diff(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn parse_positive_f64_contract() {
+        assert_eq!(parse_positive_f64("2.25", "rate").unwrap(), 2.25);
+        for bad in ["x", "", "0", "-1", "NaN", "inf", "-inf"] {
+            assert!(parse_positive_f64(bad, "rate").is_err(), "accepted {bad:?}");
+        }
+        let err = parse_positive_f64("0", "freq").unwrap_err();
+        assert!(err.contains("freq"), "{err}");
     }
 }

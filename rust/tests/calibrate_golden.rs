@@ -1,0 +1,332 @@
+//! Golden regression for the calibration layer (ISSUE 5).
+//!
+//! The load-bearing guarantee: a `RateTable` synthesized *from* the
+//! analytical model, consumed through `WeightSource::Empirical`, yields
+//! `sched::Weights` — and whole scheduled runs — bit-for-bit identical
+//! to the analytical path on every preset. That anchor is what lets
+//! the empirical plumbing thread through sched/dvfs/fleet without
+//! perturbing a single existing regression: `Empirical` differs from
+//! `Analytical` only by what was measured.
+//!
+//! Plus the persistence fuzz the ISSUE asks for: random rate tables
+//! and preset stores must round-trip through TSV bit for bit, and
+//! malformed inputs must be rejected, beyond the three cases pinned in
+//! `rust/src/search/mod.rs`.
+
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::calibrate::{
+    ca_sas_spec, sas_spec, Family, RateRow, RateTable, ShapeClass, WeightSource,
+};
+use amp_gemm::dvfs::sim::{simulate_dvfs, simulate_dvfs_with, DvfsStrategy, Retune};
+use amp_gemm::dvfs::{Governor, Ondemand};
+use amp_gemm::model::PerfModel;
+use amp_gemm::search::{OppPreset, OppPresetStore};
+use amp_gemm::sim::simulate;
+use amp_gemm::soc::{ClusterId, SocSpec};
+use amp_gemm::util::prop;
+use amp_gemm::util::rng::Rng;
+
+fn presets() -> [SocSpec; 4] {
+    [
+        SocSpec::exynos5422(),
+        SocSpec::juno_r0(),
+        SocSpec::dynamiq_3c(),
+        SocSpec::pe_hybrid(),
+    ]
+}
+
+/// Acceptance criterion: the analytical-degeneracy anchor. On all four
+/// presets, for both families and every shape class, the synthesized
+/// table reproduces today's weight vectors bit for bit — and the specs
+/// built from them are (PartialEq-) identical, so every downstream DES
+/// run is too.
+#[test]
+fn analytical_degeneracy_anchor_bit_for_bit() {
+    for soc in presets() {
+        let model = PerfModel::new(soc.clone());
+        let source = WeightSource::Empirical(RateTable::from_analytical(&soc));
+        for cache_aware in [true, false] {
+            for class in ShapeClass::ALL {
+                assert_eq!(
+                    source.weights(&model, cache_aware, class),
+                    model.auto_weights(cache_aware),
+                    "{}: ca={cache_aware} class={}",
+                    soc.name,
+                    class.label()
+                );
+            }
+        }
+        // Spec-level identity (what schedulers actually consume).
+        assert_eq!(
+            ca_sas_spec(&source, &model, ShapeClass::Large),
+            amp_gemm::sched::ScheduleSpec::ca_sas_weighted(model.ca_sas_weights()),
+            "{}",
+            soc.name
+        );
+        assert_eq!(
+            sas_spec(&source, &model, ShapeClass::Large),
+            amp_gemm::sched::ScheduleSpec::sas_weighted(model.sas_weights()),
+            "{}",
+            soc.name
+        );
+        // And a full DES run through the empirically sourced spec is
+        // the analytical run, exactly.
+        let shape = GemmShape::square(768);
+        let ana = simulate(
+            &model,
+            &amp_gemm::sched::ScheduleSpec::ca_sas_weighted(model.ca_sas_weights()),
+            shape,
+        );
+        let emp = simulate(&model, &ca_sas_spec(&source, &model, ShapeClass::Small), shape);
+        assert_eq!(ana.time_s, emp.time_s, "{}", soc.name);
+        assert_eq!(ana.gflops, emp.gflops, "{}", soc.name);
+        assert_eq!(ana.energy.energy_j, emp.energy.energy_j, "{}", soc.name);
+    }
+}
+
+/// The DVFS online-retune path under a synthesized table replays bit
+/// for bit on every preset — per-OPP lookups included (the ondemand
+/// ramp visits every rung of every cluster).
+#[test]
+fn dvfs_retune_degeneracy_across_presets() {
+    for soc in presets() {
+        let source = WeightSource::Empirical(RateTable::from_analytical(&soc));
+        let plan = Ondemand::new(0.2).plan(&soc, 30.0);
+        let shape = GemmShape::square(1024);
+        for strat in [
+            DvfsStrategy::Sas { cache_aware: true },
+            DvfsStrategy::Sas { cache_aware: false },
+        ] {
+            for retune in [Retune::Boot, Retune::Online] {
+                let ana = simulate_dvfs(&soc, strat, shape, &plan, retune);
+                let emp = simulate_dvfs_with(&soc, strat, shape, &plan, retune, &source);
+                assert_eq!(
+                    ana,
+                    emp,
+                    "{}: {} [{}]",
+                    soc.name,
+                    strat.label(),
+                    retune.label()
+                );
+            }
+        }
+    }
+}
+
+/// The exynos ondemand acceptance path with *measured* rates: the
+/// empirical weights feed the retuner per OPP, the split differs from
+/// the analytical one at the bottom of the ladder as well as the top,
+/// and online still beats the stale boot split.
+#[test]
+fn measured_rates_drive_per_opp_retuning() {
+    let soc = SocSpec::exynos5422();
+    let table = RateTable::measure(&soc, &[]);
+    // Per-rung empirical shares differ from the analytical ones at
+    // every rung (the DES measurement is never bitwise the steady-state
+    // model), materially so at the nominal rung — this is a per-OPP
+    // calibration, not one global ratio.
+    let mut shares = Vec::new();
+    for o in 0..soc.clusters[0].opps.len() {
+        let opps = vec![o, o];
+        let emp = table
+            .weights_at(&opps, Family::CacheAware, ShapeClass::Medium)
+            .unwrap()
+            .normalized();
+        let derived = soc.at_opp(ClusterId(0), o).at_opp(ClusterId(1), o);
+        let ana = PerfModel::new(derived).auto_weights(true).normalized();
+        assert!(
+            emp.share(0) != ana.share(0),
+            "rung {o}: empirical share coincides with analytical ({})",
+            emp.share(0)
+        );
+        shares.push(emp.share(0));
+    }
+    let nominal = soc.clusters[0].opps.nominal_idx();
+    let ana_nominal = PerfModel::new(soc.clone()).auto_weights(true).normalized();
+    assert!(
+        (shares[nominal] - ana_nominal.share(0)).abs() > 1e-4,
+        "nominal rung: empirical {} vs analytical {}",
+        shares[nominal],
+        ana_nominal.share(0)
+    );
+    // The empirical share itself moves along the ladder (per-OPP, not
+    // one constant): the frequency ratio swings 1.6x -> 1.14x.
+    let spread = shares.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        - shares.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(spread > 0.005, "per-rung shares {shares:?} are one global ratio");
+    let source = WeightSource::Empirical(table);
+    let plan = Ondemand::new(0.25).plan(&soc, 30.0);
+    let shape = GemmShape::square(2048);
+    let strat = DvfsStrategy::Sas { cache_aware: true };
+    let boot = simulate_dvfs_with(&soc, strat, shape, &plan, Retune::Boot, &source);
+    let online = simulate_dvfs_with(&soc, strat, shape, &plan, Retune::Online, &source);
+    assert!(
+        online.gflops > boot.gflops * 1.01,
+        "online {} must beat boot {}",
+        online.gflops,
+        boot.gflops
+    );
+    assert!(online.retunes > 0);
+    let sum: f64 = online.cluster_share.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-9, "shares {sum}");
+}
+
+fn rand_name(r: &mut Rng) -> String {
+    let len = r.gen_range(1, 12);
+    (0..len)
+        .map(|_| char::from(b'a' + r.gen_range(0, 26) as u8))
+        .collect()
+}
+
+/// A random positive, finite f64 spanning many magnitudes (exercises
+/// the shortest-repr round-trip on awkward mantissas).
+fn rand_rate(r: &mut Rng) -> f64 {
+    let mag = r.gen_range(0, 7) as i32 - 3;
+    r.gen_f64(0.001, 1.0) * 10f64.powi(mag) + f64::MIN_POSITIVE
+}
+
+/// ISSUE satellite: rate-table round-trip fuzzing — random tables
+/// (random soc names, 1–6 clusters, 1–6 rungs, awkward f64 rates) →
+/// TSV → parse → bit-for-bit equal.
+#[test]
+fn prop_rate_table_round_trips_exactly() {
+    prop::check_default(
+        |r| {
+            let clusters = r.gen_range(1, 7);
+            let mut rows = Vec::new();
+            for c in 0..clusters {
+                let rungs = r.gen_range(1, 7);
+                for opp in 0..rungs {
+                    for family in Family::ALL {
+                        rows.push(RateRow {
+                            cluster: ClusterId(c),
+                            opp,
+                            freq_ghz: r.gen_f64(0.1, 4.0),
+                            family,
+                            rates: [rand_rate(r), rand_rate(r), rand_rate(r)],
+                        });
+                    }
+                }
+            }
+            RateTable {
+                soc: rand_name(r),
+                num_clusters: clusters,
+                rows,
+            }
+        },
+        |table| {
+            let text = table.to_text();
+            let back = RateTable::parse_text(&text)?;
+            if &back != table {
+                return Err(format!("round-trip drift:\n{text}"));
+            }
+            // Idempotent re-render.
+            if back.to_text() != text {
+                return Err(format!("re-render drift:\n{text}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE satellite: preset-store round-trip fuzzing with the measured
+/// extension — random stores mixing 5-field and 8-field rows survive
+/// TSV exactly.
+#[test]
+fn prop_opp_preset_store_round_trips_exactly() {
+    prop::check_default(
+        |r| {
+            let rungs = r.gen_range(1, 8);
+            let presets: Vec<OppPreset> = (0..rungs)
+                .map(|opp| OppPreset {
+                    opp,
+                    freq_ghz: r.gen_f64(0.1, 4.0),
+                    mc: 4 * r.gen_range(1, 120),
+                    kc: r.gen_range(8, 1200),
+                    gflops: rand_rate(r),
+                    measured: if r.gen_bool(0.5) {
+                        Some([rand_rate(r), rand_rate(r), rand_rate(r)])
+                    } else {
+                        None
+                    },
+                })
+                .collect();
+            OppPresetStore {
+                soc: rand_name(r),
+                cluster: ClusterId(r.gen_range(0, 8)),
+                presets,
+            }
+        },
+        |store| {
+            let text = store.to_text();
+            let back = OppPresetStore::parse_text(&text)?;
+            if &back != store {
+                return Err(format!("round-trip drift:\n{text}"));
+            }
+            if back.to_text() != text {
+                return Err(format!("re-render drift:\n{text}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Malformed-input rejection beyond the three cases pinned in
+/// `search::tests`: every mutation of a valid file must fail parsing,
+/// never panic or silently truncate.
+#[test]
+fn malformed_inputs_rejected_not_mangled() {
+    // --- OppPresetStore ---
+    let valid = "# soc\t1\n0\t0.5\t80\t352\t0.31\t0.9\t1.7\t2.2\n";
+    assert!(OppPresetStore::parse_text(valid).is_ok());
+    for bad in [
+        "# soc\t1\n0\t0.5\t80\t352\n",                        // 4 fields
+        "# soc\t1\n0\t0.5\t80\t352\t0.31\t0.9\n",             // 6 fields
+        "# soc\t1\n0\t0.5\t80\t352\t0.31\t0.9\t1.7\n",        // 7 fields
+        "# soc\t1\n0\t0.5\t80\t352\t0.31\t0.9\t1.7\t2.2\t9\n", // 9 fields
+        "# soc\t1\nx\t0.5\t80\t352\t0.31\n",                  // bad opp
+        "# soc\t1\n0\tx\t80\t352\t0.31\n",                    // bad freq
+        "# soc\t1\n0\t0.5\tx\t352\t0.31\n",                   // bad mc
+        "# soc\t1\n0\t0.5\t80\tx\t0.31\n",                    // bad kc
+        "# soc\t1\n0\t0.5\t80\t352\tx\n",                     // bad gflops
+        "# soc\t1\n0\t0.5\t80\t352\t0.31\tNaN\t1.7\t2.2\n",   // non-finite rate
+        "# soc\t1\n0\t0.5\t80\t352\t0.31\t-inf\t1.7\t2.2\n",  // non-finite rate
+        "# soc-without-cluster\n0\t0.5\t80\t352\t0.31\n",     // bad header
+        "#\t\n",                                              // degenerate header
+    ] {
+        assert!(OppPresetStore::parse_text(bad).is_err(), "accepted: {bad:?}");
+    }
+
+    // --- RateTable ---
+    let valid = "# soc\t2\n0\t0\t1.6\tca\t1\t2\t3\n1\t0\t1.4\tobl\t0.5\t0.6\t0.7\n";
+    assert!(RateTable::parse_text(valid).is_ok());
+    for bad in [
+        "",                                                  // empty
+        "# soc\tx\n",                                        // bad count
+        "# soc\t0\n",                                        // zero clusters
+        "no-header\n0\t0\t1.6\tca\t1\t2\t3\n",               // missing marker
+        "# soc\t2\n0\t0\t1.6\tca\t1\t2\n",                   // 6 fields
+        "# soc\t2\n0\t0\t1.6\tca\t1\t2\t3\t4\n",             // 8 fields
+        "# soc\t2\n2\t0\t1.6\tca\t1\t2\t3\n",                // cluster out of range
+        "# soc\t2\n0\t0\t1.6\twarp\t1\t2\t3\n",              // bad family
+        "# soc\t2\n0\tx\t1.6\tca\t1\t2\t3\n",                // bad opp
+        "# soc\t2\n0\t0\t-1.6\tca\t1\t2\t3\n",               // bad freq
+        "# soc\t2\n0\t0\t1.6\tca\t0\t2\t3\n",                // zero rate
+        "# soc\t2\n0\t0\t1.6\tca\t-1\t2\t3\n",               // negative rate
+        "# soc\t2\n0\t0\t1.6\tca\tNaN\t2\t3\n",              // NaN rate
+        "# soc\t2\n0\t0\t1.6\tca\tinf\t2\t3\n",              // infinite rate
+    ] {
+        assert!(RateTable::parse_text(bad).is_err(), "accepted: {bad:?}");
+    }
+}
+
+/// Exynos stays exynos: building, synthesizing and measuring tables
+/// never mutates the descriptor (the regression suite's precondition).
+#[test]
+fn calibration_does_not_perturb_presets() {
+    let before = SocSpec::exynos5422();
+    let _ = RateTable::from_analytical(&before);
+    let _ = RateTable::measure(&before, &[]);
+    let _ = OppPresetStore::tune_measured(&before, ClusterId(1));
+    assert_eq!(before, SocSpec::exynos5422());
+}

@@ -19,11 +19,13 @@ use amp_gemm::fleet::FleetStrategy;
 /// `figures::fleet::stream_row` changes formatting, the golden breaks.
 fn golden_row(st: &StreamStats) -> String {
     format!(
-        "| {} | {:.3} | {:.2} | {:.3} | {:.2} | {} | {:.1} |",
+        "| {} | {:.3} | {:.2} | {:.3} | {:.3} | {:.3} | {:.2} | {} | {:.1} |",
         st.label,
         st.makespan_s,
         st.throughput_rps,
         st.utilization,
+        st.sojourn_p50_s,
+        st.sojourn_p99_s,
         st.mean_queue_depth,
         st.max_queue_depth,
         st.energy_j
@@ -46,7 +48,8 @@ fn stream_report_wave_mode_text_pinned() {
     );
     assert!(
         md.contains(
-            "| mode | makespan [s] | req/s | utilization | mean depth | max depth | energy [J] |"
+            "| mode | makespan [s] | req/s | utilization | p50 [s] | p99 [s] | \
+             mean depth | max depth | energy [J] |"
         ),
         "table header drifted:\n{md}"
     );
