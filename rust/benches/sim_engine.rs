@@ -3,10 +3,13 @@
 //! figure suite regenerates in seconds (DESIGN.md §9).
 
 use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::figures::fleet::pinned_stream_fleet;
+use amp_gemm::fleet::sim::{poisson_arrivals, simulate_fleet_stream_cached};
 use amp_gemm::model::PerfModel;
 use amp_gemm::sched::ScheduleSpec;
-use amp_gemm::sim::simulate;
+use amp_gemm::sim::{simulate, RunCache};
 use amp_gemm::util::benchkit::Bencher;
+use amp_gemm::util::rng::Rng;
 
 fn main() {
     let model = PerfModel::exynos();
@@ -26,6 +29,27 @@ fn main() {
     // The figure-suite workload: every strategy at the quick sizes.
     b.bench("full quick figure suite", || {
         amp_gemm::figures::run_all(&model, true).len()
+    });
+
+    // Streaming engine: a 100k-request Poisson sweep near the pinned
+    // pair's capacity, replayed over a warm run cache so the bench
+    // times the event loop (heap pops, grabs, depth bookkeeping), not
+    // the six intra-SoC DES runs the cache collapses the stream onto.
+    let fleet = pinned_stream_fleet();
+    let shapes = [256, 384, 512].map(GemmShape::square);
+    let arrivals = poisson_arrivals(&mut Rng::new(0xE7E_17), &shapes, 100_000, 120.0);
+    let mut cache = RunCache::new();
+    let warm = simulate_fleet_stream_cached(&fleet, &arrivals, &mut cache);
+    let grabs: u64 = warm.boards.iter().map(|bd| bd.grabs).sum();
+    let events = (warm.requests as u64 + grabs) as f64;
+    println!(
+        "stream sweep: {} requests, {grabs} grabs, {} DES runs, cache hit rate {:.4}",
+        warm.requests,
+        warm.des_runs,
+        cache.hit_rate()
+    );
+    b.bench_throughput("stream sweep 100k warm cache", events, "events", || {
+        simulate_fleet_stream_cached(&fleet, &arrivals, &mut cache).makespan_s
     });
 
     b.report("sim engine");

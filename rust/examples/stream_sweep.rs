@@ -88,6 +88,20 @@ fn main() {
     let adhoc = poisson_arrivals(&mut rng, &shapes, count, rate);
     let st = simulate_fleet_stream(&fleet, &adhoc);
     assert_eq!(st.items_completed(), count, "every request executes exactly once");
+    // Engine-layer invariant: the run cache collapses the whole sweep
+    // onto at most one DES run per (board config, shape) pair.
+    assert!(
+        st.des_runs as usize <= fleet.num_boards() * sizes.len(),
+        "{} DES runs for {} board x shape pairs",
+        st.des_runs,
+        fleet.num_boards() * sizes.len()
+    );
+    println!(
+        "engine: {} intra-SoC DES runs priced {} grabs ({} cache hits)\n",
+        st.des_runs,
+        st.boards.iter().map(|b| b.grabs).sum::<u64>(),
+        st.cache_hits
+    );
     for (shape, executed) in &st.per_shape {
         let submitted = adhoc.iter().filter(|a| a.shape == *shape).count();
         assert_eq!(*executed, submitted, "per-shape shard-sum invariant ({shape:?})");

@@ -23,12 +23,15 @@ use crate::calibrate::{ca_sas_spec, RateTable, ShapeClass, WeightSource};
 use crate::dvfs::sim::{simulate_dvfs, simulate_dvfs_with, DvfsStrategy, Retune};
 use crate::dvfs::{Governor, Ondemand};
 use crate::figures::fleet::{pinned_stream_arrivals, pinned_stream_fleet};
-use crate::fleet::sim::{simulate_fleet, simulate_fleet_stream};
+use crate::fleet::sim::{
+    poisson_arrivals, simulate_fleet, simulate_fleet_stream, simulate_fleet_stream_cached,
+};
 use crate::fleet::{Fleet, FleetStrategy};
 use crate::model::PerfModel;
 use crate::sched::ScheduleSpec;
-use crate::sim::simulate;
+use crate::sim::{simulate, RunCache};
 use crate::soc::{SocSpec, BIG, LITTLE};
+use crate::util::rng::Rng;
 
 /// Which direction of drift regresses a metric.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -162,6 +165,27 @@ impl Trajectory {
                 Better::Higher,
             );
         }
+
+        // --- Engine layer: the run cache under a long mixed stream. ---
+        // 2048 Poisson arrivals over three shapes on the pinned
+        // two-board fleet collapse to at most six distinct
+        // (board-config, shape) DES runs; every other service event is
+        // a cache hit. All three metrics are counter or virtual-time
+        // values — deterministic on any machine, so the gate can pin
+        // them like the model metrics above.
+        let mut cache = RunCache::new();
+        let sweep_shapes = [256, 384, 512].map(GemmShape::square);
+        let sweep_arrivals = poisson_arrivals(&mut Rng::new(0x51E7), &sweep_shapes, 2048, 120.0);
+        let sweep =
+            simulate_fleet_stream_cached(&pinned_stream_fleet(), &sweep_arrivals, &mut cache);
+        t.push("sim_engine_stream_des_runs", sweep.des_runs as f64, Better::Lower);
+        t.push("sim_engine_stream_hit_rate", cache.hit_rate(), Better::Higher);
+        let sweep_grabs: u64 = sweep.boards.iter().map(|b| b.grabs).sum();
+        t.push(
+            "sim_engine_stream_events_per_s",
+            (sweep.requests as u64 + sweep_grabs) as f64 / sweep.makespan_s,
+            Better::Higher,
+        );
         t
     }
 

@@ -275,6 +275,11 @@ fn build_epochs(
     times.extend(schedule.boundaries());
     let mut epochs = Vec::with_capacity(times.len());
     let mut bytes_per_flop = 0.0;
+    // Epochs revisiting an operating point (same-rung transitions,
+    // governor plateaus) share one recalibration DES instead of paying
+    // one full run per epoch: the cache fingerprints the derived
+    // at-OPP descriptor, which encodes the rung vector.
+    let mut cache = sim::RunCache::new();
     for (i, &t0) in times.iter().enumerate() {
         let t1 = times.get(i + 1).copied().unwrap_or(f64::INFINITY);
         let soc_t = schedule.soc_at(base, t0);
@@ -300,7 +305,7 @@ fn build_epochs(
         // the fluid aggregate to the engine's (packing, barriers,
         // cross-cluster interference included) — the epoch replay can
         // never be optimistic relative to a fixed-frequency DES run.
-        let joint = sim::simulate(&model, &strat.to_spec_with(&model, source, class), shape);
+        let joint = cache.run(&model, &strat.to_spec_with(&model, source, class), shape);
         if i == 0 {
             bytes_per_flop = joint.dram_bytes / joint.flops;
         }

@@ -28,10 +28,11 @@ use crate::blis::gemm::GemmShape;
 use crate::coordinator::MAX_GROUP_LEN;
 use crate::figures::{Assertion, FigureResult};
 use crate::fleet::sim::{
-    boards_to_sustain, poisson_arrivals, simulate_fleet, simulate_fleet_stream,
-    simulate_fleet_waves, Arrival, StreamStats,
+    boards_to_sustain, poisson_arrivals, simulate_fleet_cached, simulate_fleet_stream_cached,
+    simulate_fleet_waves_cached, Arrival, StreamStats,
 };
 use crate::fleet::{Board, Fleet, FleetStrategy};
+use crate::sim::RunCache;
 use crate::util::rng::Rng;
 use crate::util::table::Table;
 
@@ -94,7 +95,10 @@ const STREAM_COLUMNS: &[&str] = &[
 /// one row per wave-mode strategy plus the streaming dispatcher.
 /// Returns the table with the three wave replays and the stream replay
 /// for assertions — the single implementation behind the report, the
-/// CLI and `examples/stream_sweep.rs`.
+/// CLI and `examples/stream_sweep.rs`. All four replays share one
+/// `RunCache`, so every distinct (board config, shape) pair prices one
+/// DES run for the whole table (the numbers are bit-identical either
+/// way — pinned by `tests/fleet_golden.rs`).
 pub fn stream_table(
     title: &str,
     fleet: &Fleet,
@@ -102,12 +106,13 @@ pub fn stream_table(
 ) -> (Table, Vec<StreamStats>, StreamStats) {
     let mut table = Table::new(title, STREAM_COLUMNS);
     let mut waves = Vec::new();
+    let mut cache = RunCache::new();
     for strategy in [FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das] {
-        let st = simulate_fleet_waves(fleet, strategy, arrivals, MAX_GROUP_LEN);
+        let st = simulate_fleet_waves_cached(fleet, strategy, arrivals, MAX_GROUP_LEN, &mut cache);
         table.push_row(stream_row(&st));
         waves.push(st);
     }
-    let stream = simulate_fleet_stream(fleet, arrivals);
+    let stream = simulate_fleet_stream_cached(fleet, arrivals, &mut cache);
     table.push_row(stream_row(&stream));
     (table, waves, stream)
 }
@@ -141,8 +146,9 @@ pub fn run(quick: bool) -> FigureResult {
         &["strategy", "makespan [s]", "GFLOPS", "req/s", "energy [J]", "GFLOPS/W", "items/board"],
     );
     let mut by_strategy = Vec::new();
+    let mut cache = RunCache::new();
     for strategy in [FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das] {
-        let st = simulate_fleet(&fleet, strategy, shape, batch);
+        let st = simulate_fleet_cached(&fleet, strategy, shape, batch, &mut cache);
         cmp.push_row(vec![
             strategy.label().to_string(),
             format!("{:.3}", st.makespan_s),
@@ -168,7 +174,8 @@ pub fn run(quick: bool) -> FigureResult {
     );
     let mut rps = Vec::new();
     for n in 1..=4 {
-        let st = simulate_fleet(&Fleet::homogeneous(n, &exynos), FleetStrategy::Das, shape, batch);
+        let hom = Fleet::homogeneous(n, &exynos);
+        let st = simulate_fleet_cached(&hom, FleetStrategy::Das, shape, batch, &mut cache);
         rps.push(st.throughput_rps);
         scaling.push_row(vec![
             n.to_string(),

@@ -27,15 +27,26 @@
 //! today's `FleetDispatcher` discipline made explicit in virtual time.
 //! When every request arrives at t = 0 with one shape, both degenerate
 //! to [`simulate_fleet`] bit-for-bit (pinned by tests).
+//!
+//! Perf (ISSUE 6): every simulator here prices items through the
+//! engine-layer [`RunCache`]. The `*_cached` variants take a
+//! caller-owned cache so sweeps (capacity planning, scaling curves,
+//! the trajectory suite) amortize DES runs across calls; the plain
+//! entry points run against a fresh cache, and cached == fresh bit for
+//! bit. The counters surface as `des_runs`/`cache_hits` on the stats.
+//! The streaming replays keep their admission and queue-depth
+//! bookkeeping in the engine's [`EventQueue`] — O(log n) per event
+//! instead of sorted-`Vec` scans.
 
 use crate::blis::gemm::GemmShape;
 use crate::coordinator::Batcher;
 use crate::dvfs::DvfsSchedule;
 use crate::energy::PowerModel;
 use crate::fleet::{Fleet, FleetStrategy, DISPATCH_S};
+use crate::sim::engine::{ConfigId, EventQueue, ItemCost, RunCache};
 use crate::sim::simulate;
 use crate::util::rng::Rng;
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap};
 
 /// One board's share of a simulated fleet run.
 #[derive(Debug, Clone)]
@@ -70,6 +81,11 @@ pub struct FleetStats {
     /// Whole-fleet energy (every board charged to the makespan).
     pub energy_j: f64,
     pub gflops_per_watt: f64,
+    /// Intra-SoC DES runs this call executed (run-cache misses); 0 on
+    /// a warm cache.
+    pub des_runs: u64,
+    /// Item pricings served from the run cache without a DES run.
+    pub cache_hits: u64,
     /// Per-board breakdown, in fleet order.
     pub boards: Vec<BoardStats>,
 }
@@ -90,24 +106,38 @@ pub fn simulate_fleet(
     shape: GemmShape,
     batch: usize,
 ) -> FleetStats {
+    simulate_fleet_cached(fleet, strategy, shape, batch, &mut RunCache::new())
+}
+
+/// [`simulate_fleet`] against a caller-owned [`RunCache`]: sweeps that
+/// replay the same boards (capacity planning, scaling curves, the
+/// trajectory suite) pay each distinct (board, shape) DES exactly once
+/// across the whole sweep. Cached and fresh runs are bit-for-bit
+/// identical (property-tested).
+pub fn simulate_fleet_cached(
+    fleet: &Fleet,
+    strategy: FleetStrategy,
+    shape: GemmShape,
+    batch: usize,
+    cache: &mut RunCache,
+) -> FleetStats {
     assert!(batch > 0, "empty batch");
     let n = fleet.num_boards();
+    let (hits0, misses0) = (cache.hits(), cache.misses());
 
-    // One intra-SoC DES run per board gives the per-item time/energy;
-    // every item of the batch has the same shape, so one run suffices —
-    // and identical boards (homogeneous capacity sweeps are fleets of
-    // clones) share a single run instead of re-simulating it.
-    let mut per_item: Vec<crate::sim::RunStats> = Vec::with_capacity(n);
-    for (i, b) in fleet.boards.iter().enumerate() {
-        let cached = fleet.boards[..i]
-            .iter()
-            .position(|p| p.soc() == b.soc() && p.sched == b.sched);
-        let st = match cached {
-            Some(j) => per_item[j].clone(),
-            None => simulate(b.model(), &b.sched, shape),
-        };
-        per_item.push(st);
-    }
+    // One intra-SoC DES run per distinct board configuration gives the
+    // per-item time/energy; every item of the batch has the same shape,
+    // so one run suffices — and identical boards (homogeneous capacity
+    // sweeps are fleets of clones) intern to the same id and share one
+    // cache slot instead of re-simulating.
+    let per_item: Vec<ItemCost> = fleet
+        .boards
+        .iter()
+        .map(|b| {
+            let cfg = cache.config(b.model(), &b.sched);
+            cache.cost_with(cfg, shape, || simulate(b.model(), &b.sched, shape))
+        })
+        .collect();
     let baseline_w: Vec<f64> = fleet
         .boards
         .iter()
@@ -158,7 +188,7 @@ pub fn simulate_fleet(
             // Active window at run power, everything else (dispatch
             // waits + idle tail to the fleet makespan) at baseline.
             let energy =
-                items[b] as f64 * per_item[b].energy.energy_j + baseline_w[b] * (makespan - busy);
+                items[b] as f64 * per_item[b].energy_j + baseline_w[b] * (makespan - busy);
             BoardStats {
                 name: fleet.boards[b].name.clone(),
                 items: items[b],
@@ -195,6 +225,8 @@ pub fn simulate_fleet(
         throughput_rps: batch as f64 / makespan,
         energy_j,
         gflops_per_watt: total_flops / energy_j / 1e9,
+        des_runs: cache.misses() - misses0,
+        cache_hits: cache.hits() - hits0,
         boards,
     }
 }
@@ -216,6 +248,22 @@ pub fn simulate_fleet_dvfs(
     batch: usize,
     plans: &[DvfsSchedule],
 ) -> FleetStats {
+    simulate_fleet_dvfs_cached(fleet, strategy, shape, batch, plans, &mut RunCache::new())
+}
+
+/// [`simulate_fleet_dvfs`] against a caller-owned [`RunCache`]. The
+/// cache keys on the *derived* at-OPP descriptor, so the rung vector is
+/// part of the fingerprint for free: boards revisiting an operating
+/// point — or identical boards visiting the same one — share a single
+/// DES run, across calls too.
+pub fn simulate_fleet_dvfs_cached(
+    fleet: &Fleet,
+    strategy: FleetStrategy,
+    shape: GemmShape,
+    batch: usize,
+    plans: &[DvfsSchedule],
+    cache: &mut RunCache,
+) -> FleetStats {
     assert!(batch > 0, "empty batch");
     let n = fleet.num_boards();
     assert_eq!(plans.len(), n, "one DVFS schedule per board");
@@ -234,37 +282,38 @@ pub fn simulate_fleet_dvfs(
                 .cluster_ids()
                 .all(|c| p.initial[c.0] == b.soc()[c].opps.current_idx())
     }) {
-        return simulate_fleet(fleet, strategy, shape, batch);
+        return simulate_fleet_cached(fleet, strategy, shape, batch, cache);
     }
+    let (hits0, misses0) = (cache.hits(), cache.misses());
 
-    // One DES run per (board, OPP vector) the schedules visit; identical
-    // boards running identical plans share one cache slot (the
-    // homogeneous-fleet dedup `simulate_fleet` also does).
-    let canon: Vec<usize> = (0..n)
-        .map(|b| {
-            (0..b)
-                .find(|&p| {
-                    fleet.boards[p].soc() == fleet.boards[b].soc()
-                        && fleet.boards[p].sched == fleet.boards[b].sched
-                        && plans[p] == plans[b]
-                })
-                .unwrap_or(b)
-        })
-        .collect();
-    let mut cache: Vec<HashMap<Vec<usize>, crate::sim::RunStats>> = vec![HashMap::new(); n];
-    let item_stats = |cache: &mut [HashMap<Vec<usize>, crate::sim::RunStats>],
-                      b: usize,
-                      t: f64|
-     -> crate::sim::RunStats {
-        let soc = fleet.boards[b].soc();
+    // One DES run per distinct (at-OPP descriptor, schedule) the plans
+    // visit: the run cache fingerprints the *derived* descriptor, so
+    // boards revisiting a rung vector — and identical boards visiting
+    // the same one — intern to the same id. `rung_cfg[b]` memoizes each
+    // board's rung-vector → id resolution so the hot loop never
+    // re-derives a descriptor it has already fingerprinted.
+    let mut rung_cfg: Vec<HashMap<Vec<usize>, ConfigId>> = vec![HashMap::new(); n];
+    let item_cost = |cache: &mut RunCache,
+                     rung_cfg: &mut [HashMap<Vec<usize>, ConfigId>],
+                     b: usize,
+                     t: f64|
+     -> ItemCost {
+        let board = &fleet.boards[b];
+        let soc = board.soc();
         let key: Vec<usize> = soc.cluster_ids().map(|c| plans[b].opp_at(c, t)).collect();
-        cache[canon[b]]
-            .entry(key)
-            .or_insert_with(|| {
+        let cfg = match rung_cfg[b].get(&key) {
+            Some(&cfg) => cfg,
+            None => {
                 let model = crate::model::PerfModel::new(plans[b].soc_at(soc, t));
-                simulate(&model, &fleet.boards[b].sched, shape)
-            })
-            .clone()
+                let cfg = cache.config(&model, &board.sched);
+                rung_cfg[b].insert(key, cfg);
+                cfg
+            }
+        };
+        cache.cost_with(cfg, shape, || {
+            let model = crate::model::PerfModel::new(plans[b].soc_at(soc, t));
+            simulate(&model, &board.sched, shape)
+        })
     };
     // Baseline (idle-rail) power of board `b` at instant `t` — priced
     // at the operating point in effect, not the boot point.
@@ -277,7 +326,8 @@ pub fn simulate_fleet_dvfs(
     let mut clock = vec![0.0f64; n];
     let mut busy = vec![0.0f64; n];
     let mut energy = vec![0.0f64; n];
-    let run_items = |cache: &mut [HashMap<Vec<usize>, crate::sim::RunStats>],
+    let run_items = |cache: &mut RunCache,
+                     rung_cfg: &mut [HashMap<Vec<usize>, ConfigId>],
                      clock: &mut [f64],
                      busy: &mut [f64],
                      energy: &mut [f64],
@@ -286,10 +336,10 @@ pub fn simulate_fleet_dvfs(
         energy[b] += baseline_at(b, clock[b]) * DISPATCH_S;
         clock[b] += DISPATCH_S;
         for _ in 0..count {
-            let st = item_stats(cache, b, clock[b]);
+            let st = item_cost(cache, rung_cfg, b, clock[b]);
             clock[b] += st.time_s;
             busy[b] += st.time_s;
-            energy[b] += st.energy.energy_j;
+            energy[b] += st.energy_j;
         }
     };
 
@@ -299,7 +349,7 @@ pub fn simulate_fleet_dvfs(
                 if share > 0 {
                     items[b] = share;
                     grabs[b] = 1;
-                    run_items(&mut cache, &mut clock, &mut busy, &mut energy, b, share);
+                    run_items(cache, &mut rung_cfg, &mut clock, &mut busy, &mut energy, b, share);
                 }
             }
         }
@@ -317,7 +367,7 @@ pub fn simulate_fleet_dvfs(
                 next += take;
                 items[idx] += take;
                 grabs[idx] += 1;
-                run_items(&mut cache, &mut clock, &mut busy, &mut energy, idx, take);
+                run_items(cache, &mut rung_cfg, &mut clock, &mut busy, &mut energy, idx, take);
             }
         }
     }
@@ -371,6 +421,8 @@ pub fn simulate_fleet_dvfs(
         throughput_rps: batch as f64 / makespan,
         energy_j,
         gflops_per_watt: total_flops / energy_j / 1e9,
+        des_runs: cache.misses() - misses0,
+        cache_hits: cache.hits() - hits0,
         boards,
     }
 }
@@ -468,6 +520,11 @@ pub struct StreamStats {
     pub mean_queue_depth: f64,
     /// Peak depth of that queue.
     pub max_queue_depth: usize,
+    /// Intra-SoC DES runs this replay executed (run-cache misses); 0
+    /// on a warm cache.
+    pub des_runs: u64,
+    /// Grab pricings served from the run cache without a DES run.
+    pub cache_hits: u64,
     /// Per-board breakdown, in fleet order.
     pub boards: Vec<StreamBoardStats>,
 }
@@ -491,14 +548,16 @@ fn finish_stream_stats(
     fleet: &Fleet,
     label: String,
     arrivals: &[Arrival],
-    cache: &mut [HashMap<GemmShape, crate::sim::RunStats>],
-    canon: &[usize],
+    cache: &RunCache,
+    cfgs: &[ConfigId],
     counts: &[BTreeMap<GemmShape, usize>],
     items: &[usize],
     grabs: &[u64],
     finish: &[f64],
     completions: Vec<f64>,
-    depth_events: &mut Vec<(f64, i64)>,
+    mut depth_events: EventQueue<i64>,
+    des_runs: u64,
+    cache_hits: u64,
 ) -> StreamStats {
     let n = fleet.num_boards();
     let makespan = finish.iter().cloned().fold(0.0, f64::max);
@@ -513,7 +572,9 @@ fn finish_stream_stats(
         let mut busy = 0.0;
         let mut item_energy = 0.0;
         for (&shape, &count) in &counts[b] {
-            let st = cache[canon[b]].get(&shape).expect("executed shapes are cached").clone();
+            // `peek` re-reads runs the replay executed without counting
+            // extra cache lookups against the surfaced hit/miss stats.
+            let st = cache.peek(cfgs[b], shape).expect("executed shapes are cached");
             busy += count as f64 * st.time_s;
             item_energy += count as f64 * st.energy.energy_j;
         }
@@ -547,16 +608,15 @@ fn finish_stream_stats(
     }
 
     // Queue-depth integral: +1 at each arrival instant, -take at each
-    // grab instant; ties process arrivals first so a burst's peak is
-    // visible before the first grab drains it.
-    depth_events.sort_by(|a, b| {
-        a.0.partial_cmp(&b.0).expect("finite instants").then(b.1.cmp(&a.1))
-    });
+    // grab instant. The event queue already orders by (time, tie rank):
+    // arrivals carry rank −1 and grabs their positive take, so ties
+    // process arrivals first and a burst's peak is visible before the
+    // first grab drains it.
     let mut depth = 0i64;
     let mut max_depth = 0i64;
     let mut integral = 0.0;
     let mut prev_t = 0.0;
-    for &(t, delta) in depth_events.iter() {
+    while let Some((t, delta)) = depth_events.pop() {
         integral += depth as f64 * (t - prev_t);
         prev_t = t;
         depth += delta;
@@ -589,6 +649,8 @@ fn finish_stream_stats(
         per_shape,
         mean_queue_depth: if makespan > 0.0 { integral / makespan } else { 0.0 },
         max_queue_depth: max_depth as usize,
+        des_runs,
+        cache_hits,
         boards,
     }
 }
@@ -597,33 +659,20 @@ fn board_names(fleet: &Fleet) -> String {
     fleet.boards.iter().map(|b| b.name.as_str()).collect::<Vec<_>>().join("+")
 }
 
-/// Dedup map for the per-(board, shape) DES cache: identical boards
-/// share one cache slot (the homogeneous-fleet dedup of
-/// [`simulate_fleet`], lifted to mixed shapes).
-fn canonical_boards(fleet: &Fleet) -> Vec<usize> {
-    (0..fleet.num_boards())
-        .map(|b| {
-            (0..b)
-                .find(|&p| {
-                    fleet.boards[p].soc() == fleet.boards[b].soc()
-                        && fleet.boards[p].sched == fleet.boards[b].sched
-                })
-                .unwrap_or(b)
-        })
-        .collect()
+/// Interned configuration ids for every board of the fleet, in fleet
+/// order — identical boards intern to the same id (the homogeneous
+/// dedup, now a hash lookup instead of an O(n²) scan).
+fn board_configs(fleet: &Fleet, cache: &mut RunCache) -> Vec<ConfigId> {
+    fleet.boards.iter().map(|b| cache.config(b.model(), &b.sched)).collect()
 }
 
-fn stream_item_stats(
-    fleet: &Fleet,
-    cache: &mut [HashMap<GemmShape, crate::sim::RunStats>],
-    canon: &[usize],
-    b: usize,
-    shape: GemmShape,
-) -> crate::sim::RunStats {
-    cache[canon[b]]
-        .entry(shape)
-        .or_insert_with(|| simulate(fleet.boards[b].model(), &fleet.boards[b].sched, shape))
-        .clone()
+/// The shared arrival validation (finite, non-negative), with the
+/// exact diagnostic both the sims and the dispatcher emit.
+fn assert_arrival_instant(i: usize, t: f64) {
+    assert!(
+        t.is_finite() && t >= 0.0,
+        "request {i}: arrival instant must be finite and >= 0, got {t}"
+    );
 }
 
 /// Admission order over raw arrival instants: by time, ties broken by
@@ -633,18 +682,10 @@ fn stream_item_stats(
 /// contract cannot drift between them.
 pub fn admission_order_by(times: &[f64]) -> Vec<usize> {
     for (i, &t) in times.iter().enumerate() {
-        assert!(
-            t.is_finite() && t >= 0.0,
-            "request {i}: arrival instant must be finite and >= 0, got {t}"
-        );
+        assert_arrival_instant(i, t);
     }
     let mut order: Vec<usize> = (0..times.len()).collect();
-    order.sort_by(|&i, &j| {
-        times[i]
-            .partial_cmp(&times[j])
-            .expect("finite arrivals")
-            .then(i.cmp(&j))
-    });
+    order.sort_by(|&i, &j| times[i].total_cmp(&times[j]).then(i.cmp(&j)));
     order
 }
 
@@ -666,11 +707,21 @@ fn admission_order(arrivals: &[Arrival]) -> Vec<usize> {
 /// same grab sequence, same clock arithmetic, bit-for-bit equal
 /// makespan/energy/per-board tallies (pinned by tests).
 pub fn simulate_fleet_stream(fleet: &Fleet, arrivals: &[Arrival]) -> StreamStats {
+    simulate_fleet_stream_cached(fleet, arrivals, &mut RunCache::new())
+}
+
+/// [`simulate_fleet_stream`] against a caller-owned [`RunCache`]: a
+/// warm cache replays a stream without a single DES run (`des_runs`
+/// = 0), bit-for-bit identical to the fresh replay.
+pub fn simulate_fleet_stream_cached(
+    fleet: &Fleet,
+    arrivals: &[Arrival],
+    cache: &mut RunCache,
+) -> StreamStats {
     assert!(!arrivals.is_empty(), "empty stream");
     let n = fleet.num_boards();
-    let order = admission_order(arrivals);
-    let canon = canonical_boards(fleet);
-    let mut cache: Vec<HashMap<GemmShape, crate::sim::RunStats>> = vec![HashMap::new(); n];
+    let (hits0, misses0) = (cache.hits(), cache.misses());
+    let cfgs = board_configs(fleet, cache);
     let grains = fleet.grains();
 
     let mut clock = vec![0.0f64; n];
@@ -683,9 +734,23 @@ pub fn simulate_fleet_stream(fleet: &Fleet, arrivals: &[Arrival]) -> StreamStats
     let mut grabs = vec![0u64; n];
     let mut counts: Vec<BTreeMap<GemmShape, usize>> = vec![BTreeMap::new(); n];
     let mut completions = vec![f64::NAN; arrivals.len()];
-    let mut depth_events: Vec<(f64, i64)> = Vec::new();
-    let mut ready: VecDeque<usize> = VecDeque::new();
-    let mut next_arrival = 0usize;
+    let mut depth_events: EventQueue<i64> = EventQueue::with_capacity(2 * arrivals.len());
+    // Pending requests, heap-keyed (arrive_s, submission index): the
+    // head is always the next item in `admission_order_by` order, at
+    // O(log n) per event instead of a full up-front sort. The acting
+    // board's clock is the fleet minimum and never decreases, so every
+    // request admitted by an earlier iteration still satisfies
+    // `arrive_s <= clock[b]` — head-of-heap under that bound is exactly
+    // the old sorted-order admission cursor plus FIFO ready queue.
+    let mut pending: EventQueue<usize> = EventQueue::with_capacity(arrivals.len());
+    for (i, a) in arrivals.iter().enumerate() {
+        assert_arrival_instant(i, a.arrive_s);
+        pending.push_tied(a.arrive_s, i as i64, i);
+        // Queue-depth +1 at each arrival; rank −1 orders arrivals ahead
+        // of any same-instant grab (positive rank) in the depth replay.
+        depth_events.push_tied(a.arrive_s, -1, 1);
+    }
+    let mut run: Vec<usize> = Vec::with_capacity(grains.iter().copied().max().unwrap_or(1));
     let mut executed = 0usize;
 
     while executed < arrivals.len() {
@@ -696,38 +761,32 @@ pub fn simulate_fleet_stream(fleet: &Fleet, arrivals: &[Arrival]) -> StreamStats
                 b = c;
             }
         }
-        // Admit everything that has arrived by this board's clock.
-        while next_arrival < order.len()
-            && arrivals[order[next_arrival]].arrive_s <= clock[b]
-        {
-            let id = order[next_arrival];
-            ready.push_back(id);
-            depth_events.push((arrivals[id].arrive_s, 1));
-            next_arrival += 1;
-        }
-        if ready.is_empty() {
+        let (t_next, &head) = pending.peek().expect("requests remain");
+        if t_next > clock[b] {
             // Nothing admitted yet: idle this board to the next arrival
-            // (`admit <= clock` above guarantees it is strictly later).
-            clock[b] = arrivals[order[next_arrival]].arrive_s;
+            // (strictly later than its clock).
+            clock[b] = t_next;
             continue;
         }
         // Work-conserving grab: a consecutive same-shape run of up to
         // the board's grain from the front of the admitted queue.
-        let shape = arrivals[*ready.front().expect("non-empty")].shape;
-        let mut run: Vec<usize> = Vec::new();
+        let shape = arrivals[head].shape;
+        run.clear();
         while run.len() < grains[b] {
-            match ready.front() {
-                Some(&id) if arrivals[id].shape == shape => {
+            match pending.peek() {
+                Some((t, &id)) if t <= clock[b] && arrivals[id].shape == shape => {
                     run.push(id);
-                    ready.pop_front();
+                    pending.pop();
                 }
                 _ => break,
             }
         }
         let take = run.len();
-        let st = stream_item_stats(fleet, &mut cache, &canon, b, shape);
+        let st = cache.cost_with(cfgs[b], shape, || {
+            simulate(fleet.boards[b].model(), &fleet.boards[b].sched, shape)
+        });
         let start = clock[b];
-        depth_events.push((start, -(take as i64)));
+        depth_events.push_tied(start, take as i64, -(take as i64));
         clock[b] += DISPATCH_S + take as f64 * st.time_s;
         finish[b] = clock[b];
         for (j, &id) in run.iter().enumerate() {
@@ -744,14 +803,16 @@ pub fn simulate_fleet_stream(fleet: &Fleet, arrivals: &[Arrival]) -> StreamStats
         fleet,
         format!("stream [{}]", board_names(fleet)),
         arrivals,
-        &mut cache,
-        &canon,
+        cache,
+        &cfgs,
         &counts,
         &items,
         &grabs,
         &finish,
         completions,
-        &mut depth_events,
+        depth_events,
+        cache.misses() - misses0,
+        cache.hits() - hits0,
     )
 }
 
@@ -772,11 +833,24 @@ pub fn simulate_fleet_waves(
     arrivals: &[Arrival],
     max_group: usize,
 ) -> StreamStats {
+    simulate_fleet_waves_cached(fleet, strategy, arrivals, max_group, &mut RunCache::new())
+}
+
+/// [`simulate_fleet_waves`] against a caller-owned [`RunCache`] — the
+/// comparator and the stream it is compared to can share one cache, so
+/// the comparison never pays the DES twice.
+pub fn simulate_fleet_waves_cached(
+    fleet: &Fleet,
+    strategy: FleetStrategy,
+    arrivals: &[Arrival],
+    max_group: usize,
+    cache: &mut RunCache,
+) -> StreamStats {
     assert!(!arrivals.is_empty(), "empty stream");
     let n = fleet.num_boards();
     let order = admission_order(arrivals);
-    let canon = canonical_boards(fleet);
-    let mut cache: Vec<HashMap<GemmShape, crate::sim::RunStats>> = vec![HashMap::new(); n];
+    let (hits0, misses0) = (cache.hits(), cache.misses());
+    let cfgs = board_configs(fleet, cache);
     let grains = fleet.grains();
 
     // Same-shape waves in admission order.
@@ -794,7 +868,7 @@ pub fn simulate_fleet_waves(
     let mut counts: Vec<BTreeMap<GemmShape, usize>> = vec![BTreeMap::new(); n];
     let mut finish = vec![0.0f64; n];
     let mut completions = vec![f64::NAN; arrivals.len()];
-    let mut depth_events: Vec<(f64, i64)> = Vec::new();
+    let mut depth_events: EventQueue<i64> = EventQueue::with_capacity(2 * arrivals.len());
     let mut prev_end = 0.0f64;
 
     for (shape, members) in &waves {
@@ -805,9 +879,9 @@ pub fn simulate_fleet_waves(
             .fold(0.0, f64::max);
         let start = prev_end.max(ready);
         for &i in members {
-            depth_events.push((arrivals[i].arrive_s, 1));
+            depth_events.push_tied(arrivals[i].arrive_s, -1, 1);
         }
-        depth_events.push((start, -(count as i64)));
+        depth_events.push_tied(start, count as i64, -(count as i64));
         // Per-item times are looked up lazily per participating board —
         // a board whose shard is empty (or that never wins a grab)
         // never pays a DES run for this shape; the cache makes repeats
@@ -823,7 +897,11 @@ pub fn simulate_fleet_waves(
                     }
                     let ids = &members[offset..offset + share];
                     offset += share;
-                    let time_s = stream_item_stats(fleet, &mut cache, &canon, b, *shape).time_s;
+                    let time_s = cache
+                        .cost_with(cfgs[b], *shape, || {
+                            simulate(fleet.boards[b].model(), &fleet.boards[b].sched, *shape)
+                        })
+                        .time_s;
                     wclock[b] = start + (DISPATCH_S + share as f64 * time_s);
                     for (j, &id) in ids.iter().enumerate() {
                         completions[id] = start + (DISPATCH_S + (j + 1) as f64 * time_s);
@@ -845,8 +923,11 @@ pub fn simulate_fleet_waves(
                     }
                     let take = grains[idx].min(count - next);
                     let t0 = wclock[idx];
-                    let time_s =
-                        stream_item_stats(fleet, &mut cache, &canon, idx, *shape).time_s;
+                    let time_s = cache
+                        .cost_with(cfgs[idx], *shape, || {
+                            simulate(fleet.boards[idx].model(), &fleet.boards[idx].sched, *shape)
+                        })
+                        .time_s;
                     wclock[idx] += DISPATCH_S + take as f64 * time_s;
                     for (j, &id) in members[next..next + take].iter().enumerate() {
                         completions[id] = t0 + DISPATCH_S + (j + 1) as f64 * time_s;
@@ -870,14 +951,16 @@ pub fn simulate_fleet_waves(
         fleet,
         format!("wave {} [{}]", strategy.label(), board_names(fleet)),
         arrivals,
-        &mut cache,
-        &canon,
+        cache,
+        &cfgs,
         &counts,
         &items,
         &grabs,
         &finish,
         completions,
-        &mut depth_events,
+        depth_events,
+        cache.misses() - misses0,
+        cache.hits() - hits0,
     )
 }
 
@@ -897,9 +980,12 @@ pub fn boards_to_sustain(
     max_boards: usize,
 ) -> Option<usize> {
     assert!(target_rps > 0.0 && max_boards >= 1);
+    // One cache across the whole growth sweep: the fleets are clones of
+    // one board, so the entire search costs a single DES run.
+    let mut cache = RunCache::new();
     for n in 1..=max_boards.min(crate::sched::MAX_WAYS) {
         let fleet = Fleet::homogeneous(n, board);
-        let st = simulate_fleet(&fleet, FleetStrategy::Das, shape, batch);
+        let st = simulate_fleet_cached(&fleet, FleetStrategy::Das, shape, batch, &mut cache);
         if st.throughput_rps >= target_rps {
             return Some(n);
         }
@@ -1363,7 +1449,7 @@ mod tests {
             .zip(&arrivals)
             .map(|(&done, a)| done - a.arrive_s)
             .collect();
-        sojourns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sojourns.sort_by(|a, b| a.total_cmp(b));
         assert!(st.sojourn_p50_s > 0.0);
         assert!(
             st.sojourn_p50_s <= st.sojourn_p99_s,
@@ -1418,6 +1504,68 @@ mod tests {
         assert!(st.mean_queue_depth > 0.0 && st.mean_queue_depth <= 12.0);
         let grain = f.grains()[0];
         assert_eq!(st.boards[0].grabs, (12usize.div_ceil(grain)) as u64);
+    }
+
+    /// ISSUE 6 tentpole: the run cache surfaces its counters — a
+    /// 4-clone fleet prices one DES and serves the rest from cache, and
+    /// the linear-scan dedup it replaced never showed this.
+    #[test]
+    fn run_cache_counters_surface_in_fleet_stats() {
+        let ex = Board::from_preset("exynos5422").unwrap();
+        let shape = GemmShape::square(512);
+        let st = simulate_fleet(&Fleet::homogeneous(4, &ex), FleetStrategy::Das, shape, 16);
+        assert_eq!(st.des_runs, 1, "4 clones share one DES run");
+        assert_eq!(st.cache_hits, 3);
+        let het = simulate_fleet(&hetero(), FleetStrategy::Das, shape, 16);
+        assert_eq!(het.des_runs, 2, "two distinct boards, two runs");
+    }
+
+    /// ISSUE 6 acceptance: a warm cache replays a stream bit for bit
+    /// with zero DES runs, and the same cache serves the batch and wave
+    /// paths too.
+    #[test]
+    fn warm_cache_replays_streams_bit_for_bit_without_des_runs() {
+        let shapes = [GemmShape::square(256), GemmShape::square(384)];
+        let arrivals = poisson_arrivals(&mut Rng::new(0xCAC4E), &shapes, 24, 60.0);
+        let fresh = simulate_fleet_stream(&hetero(), &arrivals);
+        assert!(fresh.des_runs > 0, "a cold cache must pay the DES");
+        assert_eq!(fresh.cache_hits + fresh.des_runs, fresh.boards.iter().map(|b| b.grabs).sum());
+
+        let mut cache = RunCache::new();
+        let first = simulate_fleet_stream_cached(&hetero(), &arrivals, &mut cache);
+        let warm = simulate_fleet_stream_cached(&hetero(), &arrivals, &mut cache);
+        assert_eq!(warm.des_runs, 0, "warm replay must be DES-free");
+        assert!(warm.cache_hits > 0);
+        assert_eq!(warm.makespan_s, fresh.makespan_s);
+        assert_eq!(warm.energy_j, fresh.energy_j);
+        assert_eq!(warm.completions, fresh.completions);
+        assert_eq!(warm.mean_queue_depth, fresh.mean_queue_depth);
+        assert_eq!(first.makespan_s, fresh.makespan_s);
+        for (w, f) in warm.boards.iter().zip(&fresh.boards) {
+            assert_eq!(w.busy_s, f.busy_s, "{}", f.name);
+            assert_eq!(w.energy_j, f.energy_j, "{}", f.name);
+        }
+        // The wave comparator shares the same slots.
+        let wave = simulate_fleet_waves_cached(
+            &hetero(),
+            FleetStrategy::Das,
+            &arrivals,
+            crate::coordinator::MAX_GROUP_LEN,
+            &mut cache,
+        );
+        assert!(
+            wave.des_runs <= fresh.des_runs && wave.cache_hits > 0,
+            "the wave replay must reuse the stream's cache slots: {} runs",
+            wave.des_runs
+        );
+        let wave_fresh = simulate_fleet_waves(
+            &hetero(),
+            FleetStrategy::Das,
+            &arrivals,
+            crate::coordinator::MAX_GROUP_LEN,
+        );
+        assert_eq!(wave.makespan_s, wave_fresh.makespan_s);
+        assert_eq!(wave.completions, wave_fresh.completions);
     }
 
     #[test]

@@ -25,7 +25,12 @@
 //!   of time);
 //! * [`cache`], [`model`], [`energy`], [`sim`] — the simulated AMP
 //!   substrate (cache simulator, calibrated per-cluster performance and
-//!   power models, discrete-event engine);
+//!   power models, discrete-event engine); `sim::engine` is its
+//!   **performance layer**: a memoizing `RunCache` (DES results keyed
+//!   by configuration fingerprint × shape, with `des_runs`/`cache_hits`
+//!   counters surfaced through the fleet stats) and a deterministic
+//!   binary-heap `EventQueue` ((time, tie, seq) ordering), which
+//!   together carry million-arrival streaming sweeps;
 //! * [`blis`], [`partition`], [`sched`] — the paper's contribution:
 //!   BLIS control trees (one per cluster), N-way loop partitioning
 //!   (weighted-static and dynamic-queue) and the SSS/SAS/CA-SAS/DAS/

@@ -1,0 +1,377 @@
+//! Sim-engine performance layer: a memoized run cache over the DES and
+//! an indexed event queue for the streaming simulators (the ROADMAP
+//! "million-event DES" item).
+//!
+//! **[`RunCache`]** memoizes [`crate::sim::simulate`] results by
+//! *configuration fingerprint* × [`GemmShape`]. A configuration is the
+//! exact `(SocSpec, ScheduleSpec)` pair the DES would execute — the
+//! calibrate layer already establishes that a run's statistics depend
+//! on nothing else, and a DVFS rung vector is covered for free because
+//! callers fingerprint the *derived* at-OPP descriptor
+//! ([`crate::dvfs::DvfsSchedule::soc_at`]). Fingerprints are the
+//! `Debug` rendering of that pair: Rust formats `f64` with
+//! shortest-round-trip precision, so two configurations share a
+//! fingerprint iff they are value-equal. Interning the string to a
+//! [`ConfigId`] turns the fleet layer's former O(n²) linear-scan board
+//! dedup into id lookups and lets one cache serve a whole sweep
+//! (capacity planning, wave replays, trajectory suites). Hits and
+//! misses are counted: `misses()` is exactly the number of DES runs
+//! executed, the deterministic counter the perf-trajectory suite gates.
+//!
+//! **[`EventQueue`]** is a binary min-heap keyed `(time, tie, seq)`:
+//! NaN-safe [`f64::total_cmp`] ordering on time, a caller-chosen
+//! integer tie rank, and a monotone sequence number so equal keys pop
+//! in insertion order (the stable-sort contract of the sorted-`Vec`
+//! bookkeeping it replaces, at O(log n) per event instead of
+//! sort-after-the-fact).
+//!
+//! Both structures are pure bookkeeping: cached and fresh runs, and
+//! heap-ordered and sort-ordered replays, are bit-for-bit identical
+//! (property-tested in `tests/stream_props.rs` / `tests/dvfs_props.rs`).
+
+use crate::blis::gemm::GemmShape;
+use crate::model::PerfModel;
+use crate::sched::ScheduleSpec;
+use crate::sim::exec::simulate;
+use crate::sim::stats::RunStats;
+use std::cmp::Ordering;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
+/// Interned handle for one DES configuration (descriptor + schedule).
+/// Equal ids ⇔ value-equal configurations within one [`RunCache`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConfigId(usize);
+
+/// The two numbers the fleet hot loops price an item with — `Copy`, so
+/// per-grab lookups never clone a [`RunStats`] (label string, per-core
+/// activity vector, energy report).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ItemCost {
+    pub time_s: f64,
+    pub energy_j: f64,
+}
+
+/// Memoized DES runs: `(ConfigId, GemmShape) → RunStats`, with interned
+/// configuration fingerprints and hit/miss counters.
+#[derive(Debug, Default)]
+pub struct RunCache {
+    ids: HashMap<String, usize>,
+    runs: HashMap<(usize, GemmShape), RunStats>,
+    hits: u64,
+    misses: u64,
+}
+
+impl RunCache {
+    pub fn new() -> RunCache {
+        RunCache::default()
+    }
+
+    /// The configuration fingerprint: the `Debug` rendering of the
+    /// descriptor and the schedule. `f64` debug-formats with
+    /// shortest-round-trip precision, so value-equal configurations —
+    /// and only those — collide.
+    pub fn fingerprint(model: &PerfModel, spec: &ScheduleSpec) -> String {
+        format!("{:?}#{:?}", model.soc, spec)
+    }
+
+    /// Intern a raw fingerprint string to its [`ConfigId`].
+    pub fn intern(&mut self, fingerprint: String) -> ConfigId {
+        let next = self.ids.len();
+        ConfigId(*self.ids.entry(fingerprint).or_insert(next))
+    }
+
+    /// Intern `(model, spec)`: the id every lookup for this
+    /// configuration keys on. Does not touch the hit/miss counters.
+    pub fn config(&mut self, model: &PerfModel, spec: &ScheduleSpec) -> ConfigId {
+        self.intern(Self::fingerprint(model, spec))
+    }
+
+    /// The memoized run for `(cfg, shape)`, executing `des` only on a
+    /// miss. Counts one hit or one miss.
+    pub fn run_with(
+        &mut self,
+        cfg: ConfigId,
+        shape: GemmShape,
+        des: impl FnOnce() -> RunStats,
+    ) -> &RunStats {
+        match self.runs.entry((cfg.0, shape)) {
+            Entry::Occupied(e) => {
+                self.hits += 1;
+                e.into_mut()
+            }
+            Entry::Vacant(v) => {
+                self.misses += 1;
+                v.insert(des())
+            }
+        }
+    }
+
+    /// Convenience: intern and run in one call.
+    pub fn run(&mut self, model: &PerfModel, spec: &ScheduleSpec, shape: GemmShape) -> &RunStats {
+        let cfg = self.config(model, spec);
+        self.run_with(cfg, shape, || simulate(model, spec, shape))
+    }
+
+    /// [`RunCache::run_with`] reduced to the `Copy` per-item cost the
+    /// fleet hot loops need.
+    pub fn cost_with(
+        &mut self,
+        cfg: ConfigId,
+        shape: GemmShape,
+        des: impl FnOnce() -> RunStats,
+    ) -> ItemCost {
+        let st = self.run_with(cfg, shape, des);
+        ItemCost { time_s: st.time_s, energy_j: st.energy.energy_j }
+    }
+
+    /// Read a cached run without counting a lookup (post-processing
+    /// passes that re-read runs the replay already executed).
+    pub fn peek(&self, cfg: ConfigId, shape: GemmShape) -> Option<&RunStats> {
+        self.runs.get(&(cfg.0, shape))
+    }
+
+    /// Lookups served from the cache.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that executed a DES run — the "DES runs performed"
+    /// counter the perf-trajectory suite pins.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// `hits / (hits + misses)`, 0 for an untouched cache.
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.hits + self.misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / lookups as f64
+        }
+    }
+
+    /// Distinct configurations interned so far.
+    pub fn configs(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Distinct `(configuration, shape)` runs held.
+    pub fn cached_runs(&self) -> usize {
+        self.runs.len()
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Event<T> {
+    time: f64,
+    tie: i64,
+    seq: u64,
+    payload: T,
+}
+
+/// Indexed event queue: a binary min-heap ordered by
+/// `(time via total_cmp, tie, insertion seq)`. Equal `(time, tie)` keys
+/// pop in push order, so it is a drop-in for "push everything, stable
+/// sort, scan" bookkeeping — including NaN inputs, which order last
+/// instead of panicking.
+#[derive(Debug, Clone)]
+pub struct EventQueue<T> {
+    heap: Vec<Event<T>>,
+    seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> EventQueue<T> {
+        EventQueue { heap: Vec::new(), seq: 0 }
+    }
+
+    pub fn with_capacity(cap: usize) -> EventQueue<T> {
+        EventQueue { heap: Vec::with_capacity(cap), seq: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Push at `time` with the neutral tie rank 0.
+    pub fn push(&mut self, time: f64, payload: T) {
+        self.push_tied(time, 0, payload);
+    }
+
+    /// Push at `time` with an explicit tie rank: among equal instants,
+    /// lower `tie` pops first (and equal `(time, tie)` pops FIFO).
+    pub fn push_tied(&mut self, time: f64, tie: i64, payload: T) {
+        let ev = Event { time, tie, seq: self.seq, payload };
+        self.seq += 1;
+        self.heap.push(ev);
+        self.sift_up(self.heap.len() - 1);
+    }
+
+    /// The earliest event, without removing it.
+    pub fn peek(&self) -> Option<(f64, &T)> {
+        self.heap.first().map(|e| (e.time, &e.payload))
+    }
+
+    /// Remove and return the earliest event.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let last = self.heap.len() - 1;
+        self.heap.swap(0, last);
+        let ev = self.heap.pop().expect("non-empty");
+        if !self.heap.is_empty() {
+            self.sift_down(0);
+        }
+        Some((ev.time, ev.payload))
+    }
+
+    fn before(a: &Event<T>, b: &Event<T>) -> bool {
+        match a.time.total_cmp(&b.time) {
+            Ordering::Less => true,
+            Ordering::Greater => false,
+            Ordering::Equal => (a.tie, a.seq) < (b.tie, b.seq),
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if Self::before(&self.heap[i], &self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let left = 2 * i + 1;
+            if left >= self.heap.len() {
+                break;
+            }
+            let right = left + 1;
+            let child = if right < self.heap.len()
+                && Self::before(&self.heap[right], &self.heap[left])
+            {
+                right
+            } else {
+                left
+            };
+            if Self::before(&self.heap[child], &self.heap[i]) {
+                self.heap.swap(i, child);
+                i = child;
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::SocSpec;
+
+    #[test]
+    fn event_queue_pops_in_time_tie_seq_order() {
+        let mut q: EventQueue<&'static str> = EventQueue::new();
+        q.push_tied(2.0, 0, "late");
+        q.push_tied(1.0, 5, "grab"); // same instant, higher tie rank
+        q.push_tied(1.0, -1, "arrive-a"); // arrivals outrank grabs
+        q.push_tied(1.0, -1, "arrive-b"); // FIFO among equal keys
+        q.push(0.5, "early");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, ["early", "arrive-a", "arrive-b", "grab", "late"]);
+        assert!(q.is_empty() && q.pop().is_none());
+    }
+
+    #[test]
+    fn event_queue_matches_a_stable_sort() {
+        // The drop-in contract: popping reproduces `sort_by(time asc,
+        // tie asc)` with insertion order preserved among equal keys.
+        let mut rng = crate::util::rng::Rng::new(0xE7E27);
+        for _ in 0..50 {
+            let n = rng.gen_range(1, 64);
+            let events: Vec<(f64, i64, usize)> = (0..n)
+                .map(|i| (rng.gen_range(0, 8) as f64 * 0.25, rng.gen_range(0, 3) as i64 - 1, i))
+                .collect();
+            let mut q = EventQueue::with_capacity(n);
+            for &(t, tie, id) in &events {
+                q.push_tied(t, tie, id);
+            }
+            let mut sorted = events.clone();
+            sorted.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let popped: Vec<(f64, usize)> = std::iter::from_fn(|| q.pop()).collect();
+            for (got, want) in popped.iter().zip(&sorted) {
+                assert_eq!(got.0, want.0);
+                assert_eq!(got.1, want.2);
+            }
+        }
+    }
+
+    #[test]
+    fn event_queue_orders_nan_last_without_panicking() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.push(f64::NAN, 0);
+        q.push(1.0, 1);
+        q.push(f64::INFINITY, 2);
+        assert_eq!(q.pop().map(|(_, p)| p), Some(1));
+        assert_eq!(q.pop().map(|(_, p)| p), Some(2));
+        assert_eq!(q.pop().map(|(_, p)| p), Some(0), "NaN sorts after +inf");
+    }
+
+    #[test]
+    fn run_cache_memoizes_and_counts() {
+        let model = PerfModel::exynos();
+        let spec = ScheduleSpec::ca_das();
+        let shape = GemmShape::square(256);
+        let mut cache = RunCache::new();
+        let fresh = simulate(&model, &spec, shape);
+        let cfg = cache.config(&model, &spec);
+        assert_eq!(cfg, cache.config(&model, &spec), "interning is stable");
+        let a = cache.run(&model, &spec, shape).time_s;
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let b = cache.run(&model, &spec, shape).time_s;
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert_eq!(a, b);
+        assert_eq!(a, fresh.time_s, "cached == fresh, bit for bit");
+        assert_eq!(cache.peek(cfg, shape).expect("cached").energy.energy_j, fresh.energy.energy_j);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1), "peek never counts");
+        assert_eq!(cache.hit_rate(), 0.5);
+        assert_eq!((cache.configs(), cache.cached_runs()), (1, 1));
+    }
+
+    #[test]
+    fn run_cache_distinguishes_configurations() {
+        let exynos = PerfModel::exynos();
+        let juno = PerfModel::new(SocSpec::juno_r0());
+        let shape = GemmShape::square(192);
+        let mut cache = RunCache::new();
+        let a = cache.config(&exynos, &ScheduleSpec::ca_das());
+        let b = cache.config(&exynos, &ScheduleSpec::sas(5.0));
+        let c = cache.config(&juno, &ScheduleSpec::ca_das());
+        assert!(a != b && a != c && b != c, "distinct configs, distinct ids");
+        // Distinct shapes under one config are distinct runs.
+        cache.run(&exynos, &ScheduleSpec::ca_das(), shape);
+        cache.run(&exynos, &ScheduleSpec::ca_das(), GemmShape::square(384));
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.configs(), 3);
+        // An untouched cache reports a 0 hit rate, not NaN.
+        assert_eq!(RunCache::new().hit_rate(), 0.0);
+    }
+}

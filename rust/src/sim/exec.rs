@@ -32,8 +32,9 @@ use crate::sim::stats::RunStats;
 use crate::sim::timeline::{PhaseKind, Timeline};
 use crate::soc::ClusterId;
 
-/// Widest cluster the stack-allocated phase buffers support (perf pass:
-/// avoids a Vec allocation per simulated phase, DESIGN.md §9).
+/// Widest cluster the stack-allocated phase buffers and per-thread
+/// accumulators support (perf pass: no heap allocation per simulated
+/// phase or per ClusterSim, DESIGN.md §9).
 const MAX_CLUSTER_THREADS: usize = 16;
 
 /// One cluster's simulated execution state.
@@ -43,8 +44,8 @@ struct ClusterSim<'m> {
     tree: ControlTree,
     model: &'m PerfModel,
     clock: f64,
-    busy: Vec<f64>,
-    poll: Vec<f64>,
+    busy: [f64; MAX_CLUSTER_THREADS],
+    poll: [f64; MAX_CLUSTER_THREADS],
     grabs: u64,
     barriers: u64,
     dram_bytes: f64,
@@ -77,8 +78,8 @@ impl<'m> ClusterSim<'m> {
             tree,
             model,
             clock: 0.0,
-            busy: vec![0.0; threads],
-            poll: vec![0.0; threads],
+            busy: [0.0; MAX_CLUSTER_THREADS],
+            poll: [0.0; MAX_CLUSTER_THREADS],
             grabs: 0,
             barriers: 0,
             dram_bytes: 0.0,
@@ -223,7 +224,10 @@ impl<'m> ClusterSim<'m> {
     }
 }
 
-/// Simulate one GEMM run under `spec`. Deterministic.
+/// Simulate one GEMM run under `spec`. Deterministic. This is the
+/// no-trace fast path: timeline recording stays off and no per-phase
+/// trace is allocated; [`simulate_traced`] returns bit-for-bit the same
+/// [`RunStats`] plus the trace.
 pub fn simulate(model: &PerfModel, spec: &ScheduleSpec, shape: GemmShape) -> RunStats {
     simulate_impl(model, spec, shape, false).0
 }
@@ -653,6 +657,27 @@ mod tests {
         // Compute dominates everything else for the balanced schedule.
         let compute = tl2.total(BIG, PhaseKind::Compute);
         assert!(compute > 0.8 * st2.time_s);
+    }
+
+    /// The no-trace fast path is the same simulation as the traced one:
+    /// every `RunStats` field — makespan, activity, energy, counters —
+    /// matches bit for bit, and only the traced run carries segments.
+    #[test]
+    fn untraced_fast_path_matches_traced_bit_for_bit() {
+        let tri = PerfModel::new(SocSpec::dynamiq_3c());
+        let cases = [
+            (model(), ScheduleSpec::sss()),
+            (model(), ScheduleSpec::sas(5.0)),
+            (model(), ScheduleSpec::ca_sas(5.0)),
+            (model(), ScheduleSpec::ca_das()),
+            (tri, ScheduleSpec::das()),
+        ];
+        for (m, spec) in &cases {
+            let fast = simulate(m, spec, GemmShape::square(1024));
+            let (traced, tl) = super::simulate_traced(m, spec, GemmShape::square(1024));
+            assert_eq!(fast, traced, "{}", fast.label);
+            assert!(!tl.segments.is_empty(), "{}", fast.label);
+        }
     }
 
     #[test]

@@ -6,11 +6,19 @@
 //! with makespan, GFLOPS, per-core activity, DRAM traffic and the
 //! energy report. See DESIGN.md §1 for why time is virtual while the
 //! numerics run for real in `crate::native`.
+//!
+//! [`engine`] is the performance layer over the DES: a memoized
+//! [`RunCache`] (fleet sweeps and DVFS replays re-price the same
+//! configuration thousands of times) and an indexed [`EventQueue`] for
+//! the streaming simulators. `simulate` itself is the no-trace fast
+//! path; `simulate_traced` opts into timeline recording.
 
+pub mod engine;
 pub mod exec;
 pub mod stats;
 pub mod timeline;
 
+pub use engine::{ConfigId, EventQueue, ItemCost, RunCache};
 pub use exec::{simulate, simulate_traced};
 pub use timeline::{PhaseKind, Timeline};
 pub use stats::RunStats;

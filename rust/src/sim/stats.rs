@@ -4,7 +4,10 @@ use crate::blis::gemm::GemmShape;
 use crate::energy::{CoreActivity, EnergyReport};
 
 /// Everything a figure needs from one simulated run.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares every field bit for bit — the equality the
+/// fast-path-vs-traced and cached-vs-fresh contracts are stated in.
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunStats {
     pub label: String,
     pub shape: GemmShape,

@@ -26,7 +26,7 @@ impl Summary {
             0.0
         };
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let median = if n % 2 == 1 {
             sorted[n / 2]
         } else {
@@ -57,7 +57,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty sample");
     assert!((0.0..=100.0).contains(&p));
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     if sorted.len() == 1 {
         return sorted[0];
     }

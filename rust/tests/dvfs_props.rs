@@ -20,8 +20,10 @@
 use amp_gemm::blis::gemm::GemmShape;
 use amp_gemm::dvfs::sim::{simulate_dvfs, DvfsStrategy, Retune};
 use amp_gemm::dvfs::{DvfsSchedule, Governor, Ondemand, Powersave, Transition};
+use amp_gemm::fleet::sim::{simulate_fleet_dvfs, simulate_fleet_dvfs_cached, FleetStats};
+use amp_gemm::fleet::{Fleet, FleetStrategy};
 use amp_gemm::model::PerfModel;
-use amp_gemm::sim::simulate;
+use amp_gemm::sim::{simulate, RunCache};
 use amp_gemm::soc::{ClusterId, ClusterSpec, OperatingPoint, OppTable, SocSpec};
 use amp_gemm::util::prop;
 use amp_gemm::util::rng::Rng;
@@ -324,6 +326,91 @@ fn forced_epoch_fluid_matches_fixed_point_des_on_every_preset() {
             );
         }
     }
+}
+
+/// ISSUE 6 satellite: the DVFS fleet replay prices bit for bit through
+/// a shared [`RunCache`] under random OPP rung vectors — random initial
+/// rungs plus random in-flight transitions on random preset fleets, for
+/// every strategy. A warm replay executes zero DES runs: the cache keys
+/// on the *derived* at-OPP descriptor, so the rung vector is part of
+/// the fingerprint.
+#[test]
+fn prop_dvfs_cached_replays_match_fresh_bit_for_bit() {
+    let presets = ["exynos5422", "juno_r0", "dynamiq_3c", "pe_hybrid"];
+    let same_fleet = |tag: &str, a: &FleetStats, b: &FleetStats| -> Result<(), String> {
+        if a.makespan_s != b.makespan_s
+            || a.gflops != b.gflops
+            || a.throughput_rps != b.throughput_rps
+            || a.energy_j != b.energy_j
+            || a.gflops_per_watt != b.gflops_per_watt
+        {
+            return Err(format!("{tag}: aggregate fleet stats diverge"));
+        }
+        for (x, y) in a.boards.iter().zip(&b.boards) {
+            if x.items != y.items
+                || x.grabs != y.grabs
+                || x.busy_s != y.busy_s
+                || x.finish_s != y.finish_s
+                || x.energy_j != y.energy_j
+            {
+                return Err(format!("{tag}: board {} diverges", x.name));
+            }
+        }
+        Ok(())
+    };
+    prop::check(
+        &prop::Config { cases: 12, seed: 0xD1F5 },
+        |r| {
+            let n = r.gen_range(1, 5); // 1..=4 boards
+            let toks: Vec<&str> = (0..n).map(|_| *r.choose(&presets)).collect();
+            let size = *r.choose(&[128usize, 192, 256]);
+            let batch = r.gen_range(1, 13);
+            let strategy =
+                *r.choose(&[FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das]);
+            (toks.join(","), size, batch, r.next_u64(), strategy)
+        },
+        |(list, size, batch, plan_seed, strategy)| {
+            let (strategy, batch) = (*strategy, *batch);
+            let fleet = Fleet::parse(list).map_err(|e| e.to_string())?;
+            let mut pr = Rng::new(*plan_seed);
+            let plans: Vec<DvfsSchedule> = fleet
+                .boards
+                .iter()
+                .map(|bd| {
+                    let soc = bd.soc();
+                    let initial: Vec<usize> = soc
+                        .clusters
+                        .iter()
+                        .map(|c| pr.gen_range(0, c.opps.len()))
+                        .collect();
+                    let transitions: Vec<Transition> = (0..pr.gen_range(0, 4))
+                        .map(|_| {
+                            let c = pr.gen_range(0, soc.num_clusters());
+                            Transition {
+                                t_s: pr.gen_f64(0.0, 0.05),
+                                cluster: ClusterId(c),
+                                opp: pr.gen_range(0, soc.clusters[c].opps.len()),
+                            }
+                        })
+                        .collect();
+                    DvfsSchedule::new(initial, transitions)
+                })
+                .collect();
+            let shape = GemmShape::square(*size);
+            let fresh = simulate_fleet_dvfs(&fleet, strategy, shape, batch, &plans);
+            let mut cache = RunCache::new();
+            let cold =
+                simulate_fleet_dvfs_cached(&fleet, strategy, shape, batch, &plans, &mut cache);
+            same_fleet("cold", &fresh, &cold)?;
+            let warm =
+                simulate_fleet_dvfs_cached(&fleet, strategy, shape, batch, &plans, &mut cache);
+            if warm.des_runs != 0 {
+                return Err(format!("warm replay ran {} DES runs", warm.des_runs));
+            }
+            same_fleet("warm", &fresh, &warm)?;
+            Ok(())
+        },
+    );
 }
 
 /// A hand-written multi-rung schedule over a random topology keeps

@@ -16,10 +16,14 @@ use amp_gemm::blis::gemm::GemmShape;
 use amp_gemm::coordinator::{
     Backend, FleetDispatcher, Request, StreamDispatcher, StreamRequest, MAX_GROUP_LEN,
 };
+use amp_gemm::figures::fleet::pinned_stream_fleet;
 use amp_gemm::fleet::sim::{
-    burst_arrivals, simulate_fleet, simulate_fleet_stream, simulate_fleet_waves, Arrival,
+    burst_arrivals, poisson_arrivals, simulate_fleet, simulate_fleet_cached,
+    simulate_fleet_stream, simulate_fleet_stream_cached, simulate_fleet_waves,
+    simulate_fleet_waves_cached, Arrival, FleetStats, StreamStats,
 };
 use amp_gemm::fleet::{Board, Fleet, FleetStrategy};
+use amp_gemm::sim::RunCache;
 use amp_gemm::soc::SocSpec;
 use amp_gemm::util::prop;
 use amp_gemm::util::rng::Rng;
@@ -225,6 +229,130 @@ fn degenerate_burst_stream_is_one_wave_das_on_preset_pairs() {
             assert_eq!(s.finish_s, w.finish_s, "{pair}/{}", w.name);
         }
     }
+}
+
+/// Field-by-field bit equality for the stats a cached replay must
+/// reproduce. The `des_runs`/`cache_hits` counters are *expected* to
+/// differ between a fresh and a warm run, so they are excluded.
+fn same_stream(tag: &str, a: &StreamStats, b: &StreamStats) -> Result<(), String> {
+    let agg = [
+        (a.makespan_s, b.makespan_s),
+        (a.energy_j, b.energy_j),
+        (a.utilization, b.utilization),
+        (a.mean_queue_depth, b.mean_queue_depth),
+        (a.sojourn_p50_s, b.sojourn_p50_s),
+        (a.sojourn_p99_s, b.sojourn_p99_s),
+    ];
+    if agg.iter().any(|(x, y)| x != y)
+        || a.completions != b.completions
+        || a.max_queue_depth != b.max_queue_depth
+    {
+        return Err(format!("{tag}: aggregate stream stats diverge"));
+    }
+    for (x, y) in a.boards.iter().zip(&b.boards) {
+        if x.items != y.items
+            || x.grabs != y.grabs
+            || x.busy_s != y.busy_s
+            || x.finish_s != y.finish_s
+            || x.idle_tail_s != y.idle_tail_s
+            || x.energy_j != y.energy_j
+        {
+            return Err(format!("{tag}: board {} diverges", x.name));
+        }
+    }
+    Ok(())
+}
+
+/// [`same_stream`]'s twin for the one-wave batch path.
+fn same_fleet(tag: &str, a: &FleetStats, b: &FleetStats) -> Result<(), String> {
+    let agg = [
+        (a.makespan_s, b.makespan_s),
+        (a.gflops, b.gflops),
+        (a.throughput_rps, b.throughput_rps),
+        (a.energy_j, b.energy_j),
+        (a.gflops_per_watt, b.gflops_per_watt),
+    ];
+    if agg.iter().any(|(x, y)| x != y) {
+        return Err(format!("{tag}: aggregate fleet stats diverge"));
+    }
+    for (x, y) in a.boards.iter().zip(&b.boards) {
+        if x.items != y.items
+            || x.grabs != y.grabs
+            || x.busy_s != y.busy_s
+            || x.finish_s != y.finish_s
+            || x.energy_j != y.energy_j
+        {
+            return Err(format!("{tag}: board {} diverges", x.name));
+        }
+    }
+    Ok(())
+}
+
+/// ISSUE 6 satellite: memoized replays are bit-for-bit identical to
+/// fresh runs. One `RunCache` is shared across every run below —
+/// stream, all three wave strategies, all three batch strategies — so
+/// later runs price their items from earlier runs' DES results, and a
+/// warm stream replay executes zero DES runs.
+#[test]
+fn prop_cached_replays_match_fresh_bit_for_bit() {
+    prop::check_default(
+        |r| random_stream(r),
+        |(list, arrivals)| {
+            let fleet = Fleet::parse(list).map_err(|e| e.to_string())?;
+            let mut cache = RunCache::new();
+            let fresh = simulate_fleet_stream(&fleet, arrivals);
+            let cached = simulate_fleet_stream_cached(&fleet, arrivals, &mut cache);
+            if cached.des_runs == 0 {
+                return Err("a cold cache must execute DES runs".into());
+            }
+            same_stream("stream cold", &fresh, &cached)?;
+            let warm = simulate_fleet_stream_cached(&fleet, arrivals, &mut cache);
+            if warm.des_runs != 0 {
+                return Err(format!("warm replay ran {} DES runs", warm.des_runs));
+            }
+            if warm.cache_hits == 0 {
+                return Err("warm replay must price from the cache".into());
+            }
+            same_stream("stream warm", &fresh, &warm)?;
+            let (shape, batch) = (arrivals[0].shape, arrivals.len());
+            for strategy in [FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das] {
+                let tag = strategy.label();
+                let fw = simulate_fleet_waves(&fleet, strategy, arrivals, MAX_GROUP_LEN);
+                let cw = simulate_fleet_waves_cached(
+                    &fleet,
+                    strategy,
+                    arrivals,
+                    MAX_GROUP_LEN,
+                    &mut cache,
+                );
+                same_stream(tag, &fw, &cw)?;
+                let fb = simulate_fleet(&fleet, strategy, shape, batch);
+                let cb = simulate_fleet_cached(&fleet, strategy, shape, batch, &mut cache);
+                same_fleet(tag, &fb, &cb)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE 6 acceptance pin: a 10^6-arrival mixed-shape stream replays
+/// through the engine inside the tier-1 budget. On the pinned two-board
+/// fleet the run cache collapses the whole sweep onto at most six
+/// intra-SoC DES runs — every service event beyond those is a heap
+/// pop, a grab and a cache hit.
+#[test]
+fn million_arrival_stream_sweep_completes() {
+    let fleet = pinned_stream_fleet();
+    let shapes = [256, 384, 512].map(GemmShape::square);
+    let arrivals = poisson_arrivals(&mut Rng::new(0x1E6), &shapes, 1_000_000, 120.0);
+    let mut cache = RunCache::new();
+    let st = simulate_fleet_stream_cached(&fleet, &arrivals, &mut cache);
+    assert_eq!(st.items_completed(), 1_000_000);
+    assert!(st.des_runs <= 6, "expected at most 6 DES runs, got {}", st.des_runs);
+    let grabs: u64 = st.boards.iter().map(|b| b.grabs).sum();
+    assert_eq!(st.des_runs + st.cache_hits, grabs, "every grab is a hit or a miss");
+    assert!(st.makespan_s.is_finite() && st.makespan_s > 0.0);
+    assert!(st.completions.iter().all(|c| c.is_finite()));
 }
 
 /// The real-thread dispatcher on randomized sim-backend fleets: mixed
