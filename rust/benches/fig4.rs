@@ -1,4 +1,4 @@
-//! Regenerates paper Fig. 4 (see DESIGN.md §8 experiment index).
+//! Regenerates paper Fig. 4 (see DESIGN.md §9 experiment index).
 fn main() {
     amp_gemm::figures::bench_figure_main(4);
 }

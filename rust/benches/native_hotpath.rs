@@ -1,4 +1,4 @@
-//! Hot-path benchmarks for the native executor (DESIGN.md §9):
+//! Hot-path benchmarks for the native executor (DESIGN.md §10):
 //! micro-kernel throughput, packing bandwidth, sequential blocked GEMM
 //! and the full parallel executor across schedules.
 

@@ -1,6 +1,6 @@
 //! PJRT runtime benchmarks: artifact execution latency/throughput per
 //! shape and variant, plus dispatch overhead through the runtime-thread
-//! handle (DESIGN.md §9). Requires `make artifacts`.
+//! handle (DESIGN.md §10). Requires `make artifacts`.
 
 use amp_gemm::blis::gemm::GemmShape;
 use amp_gemm::runtime::worker::PjrtHandle;

@@ -1,7 +1,7 @@
 //! Scheduling-machinery micro-benchmarks: partitioners, the dynamic
 //! chunk queue (the §5.4 critical section), control-tree construction
 //! and the coordinator's batch grouping. None of these may show up in
-//! a GEMM profile — this bench keeps them honest (DESIGN.md §9).
+//! a GEMM profile — this bench keeps them honest (DESIGN.md §10).
 
 use amp_gemm::blis::gemm::GemmShape;
 use amp_gemm::coordinator::{Backend, Coordinator, Request};

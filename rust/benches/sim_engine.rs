@@ -1,6 +1,6 @@
 //! DES engine throughput: simulated runs per second across strategies
 //! and problem sizes. The engine must stay fast enough that the full
-//! figure suite regenerates in seconds (DESIGN.md §9).
+//! figure suite regenerates in seconds (DESIGN.md §10).
 
 use amp_gemm::blis::gemm::GemmShape;
 use amp_gemm::figures::fleet::pinned_stream_fleet;

@@ -14,7 +14,7 @@
 //!      the paper's architecture-aware-vs-oblivious claim.
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_gemm`
-//! The experiment index lives in DESIGN.md §8.
+//! The experiment index lives in DESIGN.md §9.
 
 use amp_gemm::blis::gemm::{gemm_naive, GemmShape};
 use amp_gemm::coordinator::{server, Coordinator};
@@ -185,7 +185,7 @@ fn main() {
     );
     assert!(cadas.gflops > sas5.gflops * 0.97 && cadas.gflops > sss.gflops * 2.0);
 
-    println!("\ne2e OK in {:.1} s — CSVs in results/, experiment index in DESIGN.md §8", t_start.elapsed().as_secs_f64());
+    println!("\ne2e OK in {:.1} s — CSVs in results/, experiment index in DESIGN.md §9", t_start.elapsed().as_secs_f64());
 }
 
 fn parse_latency_ms(reply: &str) -> f64 {

@@ -11,7 +11,7 @@
 //!
 //! The generic path handles any (mr, nr); the `4×4` fast path keeps the
 //! accumulators in 16 named locals so rustc maps them to registers —
-//! the hot path of the native executor (DESIGN.md §9).
+//! the hot path of the native executor (DESIGN.md §10).
 
 /// Generic micro-kernel for arbitrary register blocking. `m_eff`/`n_eff`
 /// handle edge tiles (≤ mr/nr): only the first `m_eff` rows and `n_eff`

@@ -30,7 +30,7 @@ pub fn pack_a(
     let panels = mc_eff.div_ceil(mr);
     buf.clear();
     buf.resize(panels * mr * kc_eff, 0.0);
-    // Row-contiguous source reads (perf pass, DESIGN.md §9):
+    // Row-contiguous source reads (perf pass, DESIGN.md §10):
     // each source row of A is walked once sequentially; the strided
     // destination writes stay within the 30 KiB panel.
     for p in 0..panels {
@@ -62,7 +62,7 @@ pub fn pack_b(
     let panels = nc_eff.div_ceil(nr);
     buf.clear();
     buf.resize(panels * kc_eff * nr, 0.0);
-    // Row-major-friendly order (perf pass, DESIGN.md §9): walk
+    // Row-major-friendly order (perf pass, DESIGN.md §10): walk
     // each source row once — it is contiguous across *all* panels — and
     // scatter nr-wide segments with `copy_from_slice`. ~2× over the
     // panel-outer order, which re-walked every source row per panel.

@@ -24,7 +24,7 @@
 //! the micro-kernel degrades towards a bandwidth-bound floor rather than
 //! collapsing — matching the paper's observation that the A7 running
 //! with A15-optimal parameters is slower but far from useless (the SAS
-//! optimum ratio of 5–6 in Fig. 9 *is* that penalty, see DESIGN.md §7).
+//! optimum ratio of 5–6 in Fig. 9 *is* that penalty, see DESIGN.md §8).
 
 use crate::blis::params::BlisParams;
 use crate::soc::{ClusterId, ClusterSpec, SocSpec};

@@ -186,6 +186,45 @@ impl Trajectory {
             (sweep.requests as u64 + sweep_grabs) as f64 / sweep.makespan_s,
             Better::Higher,
         );
+
+        // --- Observability layer: the zero-overhead-when-off pin. ---
+        // The same sweep re-run through the *traced* entry point with
+        // the NullSink + disabled-registry pair must be the fast path
+        // (warm cache, zero DES runs) and bit-for-bit the untraced
+        // result; and tracing must never perturb virtual time, so the
+        // traced/untraced makespan ratio is exactly 1.0 — any drift is
+        // instrumentation leaking into the clock arithmetic.
+        let off = crate::fleet::sim::simulate_fleet_stream_traced(
+            &pinned_stream_fleet(),
+            &sweep_arrivals,
+            &mut cache,
+            &mut crate::obs::NullSink,
+            &mut crate::obs::MetricsRegistry::disabled(),
+        );
+        let off_grabs: u64 = off.boards.iter().map(|b| b.grabs).sum();
+        t.push(
+            "obs_off_events_per_s",
+            (off.requests as u64 + off_grabs) as f64 / off.makespan_s,
+            Better::Higher,
+        );
+        let small_arrivals =
+            poisson_arrivals(&mut Rng::new(0x0B5), &sweep_shapes, 256, 120.0);
+        let small_off =
+            simulate_fleet_stream_cached(&pinned_stream_fleet(), &small_arrivals, &mut cache);
+        let mut sink = crate::obs::MemorySink::new();
+        let mut reg = crate::obs::MetricsRegistry::new();
+        let small_on = crate::fleet::sim::simulate_fleet_stream_traced(
+            &pinned_stream_fleet(),
+            &small_arrivals,
+            &mut cache,
+            &mut sink,
+            &mut reg,
+        );
+        t.push(
+            "obs_trace_overhead_ratio",
+            small_on.makespan_s / small_off.makespan_s,
+            Better::Lower,
+        );
         t
     }
 

@@ -7,6 +7,7 @@
 //! GEMM <m> <n> <k> <seed> <backend>   backend ∈ native|pjrt|pjrt:<variant>|sim
 //! PING
 //! STATS
+//! METRICS
 //! QUIT
 //! ```
 //!
@@ -16,7 +17,13 @@
 //! any client can recompute.
 //!
 //! Responses: `OK <id> <latency_ms> <gflops> <checksum> <backend>` or
-//! `ERR <message>`; `PONG`; `STATS <completed> <batches> <avg_gflops>`.
+//! `ERR <message>`; `PONG`; `STATS <completed> <batches> <avg_gflops>`;
+//! `METRICS` replies with a one-line JSON snapshot of the coordinator's
+//! [`crate::obs::MetricsRegistry`] view (counters + derived gauges).
+//! Errors are structured: the first `ERR` token names the failure kind
+//! (`ERR empty_request`, `ERR unknown_command <token>`, `ERR <detail>`
+//! for malformed GEMM operands), so clients can dispatch on it without
+//! scraping prose.
 
 use crate::blis::gemm::GemmShape;
 use crate::coordinator::{Backend, Coordinator, Request};
@@ -100,9 +107,10 @@ enum LineResult {
 fn handle_line(coord: &Coordinator, ids: &AtomicU64, line: &str) -> LineResult {
     let parts: Vec<&str> = line.split_whitespace().collect();
     match parts.as_slice() {
-        [] => LineResult::Reply("ERR empty request".into()),
+        [] => LineResult::Reply("ERR empty_request".into()),
         ["PING"] => LineResult::Reply("PONG".into()),
         ["QUIT"] => LineResult::Quit,
+        ["METRICS"] => LineResult::Reply(metrics_snapshot(coord).to_json()),
         ["STATS"] => {
             let m = coord.metrics();
             let avg = if m.total_latency_s > 0.0 {
@@ -118,8 +126,27 @@ fn handle_line(coord: &Coordinator, ids: &AtomicU64, line: &str) -> LineResult {
                 Err(e) => LineResult::Reply(format!("ERR {e}")),
             }
         }
-        _ => LineResult::Reply(format!("ERR unrecognized request '{line}'")),
+        // Structured unknown-command error: a fixed kind token plus the
+        // offending command, machine-dispatchable.
+        [cmd, ..] => LineResult::Reply(format!("ERR unknown_command {cmd}")),
     }
+}
+
+/// The coordinator's counters as an observability registry — what the
+/// `METRICS` command serializes (one-line JSON) and `amp-gemm metrics`
+/// renders as Prometheus text.
+pub fn metrics_snapshot(coord: &Coordinator) -> crate::obs::MetricsRegistry {
+    let m = coord.metrics();
+    let mut reg = crate::obs::MetricsRegistry::new();
+    reg.inc("coordinator_completed", m.completed as f64);
+    reg.inc("coordinator_batches", m.batches as f64);
+    reg.inc("coordinator_total_flops", m.total_flops);
+    reg.inc("coordinator_total_latency_s", m.total_latency_s);
+    reg.set_gauge(
+        "coordinator_avg_gflops",
+        if m.total_latency_s > 0.0 { m.total_flops / m.total_latency_s / 1e9 } else { 0.0 },
+    );
+    reg
 }
 
 fn gemm_request(
@@ -264,6 +291,33 @@ mod tests {
         assert!(cl.call("BOGUS").unwrap().starts_with("ERR"));
         // Connection still alive afterwards.
         assert_eq!(cl.call("PING").unwrap(), "PONG");
+        h.shutdown();
+    }
+
+    #[test]
+    fn unknown_command_error_is_structured() {
+        let (_c, h) = start();
+        let mut cl = Client::connect(h.addr).unwrap();
+        assert_eq!(cl.call("BOGUS one two").unwrap(), "ERR unknown_command BOGUS");
+        assert_eq!(cl.call("metrics").unwrap(), "ERR unknown_command metrics");
+        h.shutdown();
+    }
+
+    #[test]
+    fn metrics_round_trip_through_client() {
+        let (_c, h) = start();
+        let mut cl = Client::connect(h.addr).unwrap();
+        cl.call("GEMM 32 32 32 1 native").unwrap();
+        let reply = cl.call("METRICS").unwrap();
+        // One line, parseable JSON, with the executed request counted.
+        assert!(reply.starts_with('{'), "{reply}");
+        let v = crate::obs::json::parse(&reply).unwrap();
+        let counters = v.get("counters").unwrap();
+        assert_eq!(
+            counters.get("coordinator_completed").unwrap().as_num(),
+            Some(1.0)
+        );
+        assert!(counters.get("coordinator_total_flops").unwrap().as_num().unwrap() > 0.0);
         h.shutdown();
     }
 

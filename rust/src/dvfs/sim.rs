@@ -30,6 +30,7 @@ use crate::dvfs::DvfsSchedule;
 use crate::energy::{CoreState, PowerModel};
 use crate::model::calibration as cal;
 use crate::model::PerfModel;
+use crate::obs::{MetricsRegistry, TraceEvent, TraceSink};
 use crate::sched::ScheduleSpec;
 use crate::sim;
 use crate::soc::SocSpec;
@@ -258,6 +259,96 @@ pub fn simulate_dvfs_with(
         retunes,
         grabs,
     }
+}
+
+/// [`simulate_dvfs_with`] plus observability: the replay itself is
+/// untouched (same arithmetic, same [`DvfsStats`] bit for bit); the
+/// trace and metrics are *derived* afterwards from the schedule and
+/// the returned makespan. Emits, on process 0: epoch spans between
+/// transition boundaries (tid 0), per-cluster OPP-residency spans and
+/// transition instants (tid 1+c), and the counters
+/// `dvfs_transitions_applied` / `dvfs_retunes` / `dvfs_grabs` plus
+/// per-rung residency seconds (`dvfs_residency_c{c}_opp{r}_s`).
+pub fn simulate_dvfs_traced(
+    base: &SocSpec,
+    strat: DvfsStrategy,
+    shape: GemmShape,
+    schedule: &DvfsSchedule,
+    retune: Retune,
+    source: &WeightSource,
+    sink: &mut dyn TraceSink,
+    metrics: &mut MetricsRegistry,
+) -> DvfsStats {
+    let stats = simulate_dvfs_with(base, strat, shape, schedule, retune, source);
+    let makespan = stats.time_s;
+    if metrics.enabled() {
+        metrics.inc("dvfs_transitions_applied", stats.transitions_applied as f64);
+        metrics.inc("dvfs_retunes", stats.retunes as f64);
+        metrics.inc("dvfs_grabs", stats.grabs as f64);
+    }
+    if sink.enabled() {
+        sink.record(TraceEvent::process_name(0, &base.name));
+        sink.record(TraceEvent::thread_name(0, 0, "epochs"));
+        for c in base.cluster_ids() {
+            sink.record(TraceEvent::thread_name(0, 1 + c.0, &format!("cluster c{}", c.0)));
+        }
+        for tr in &schedule.transitions {
+            if tr.t_s < makespan {
+                sink.record(TraceEvent::instant(
+                    &format!("opp c{}->{}", tr.cluster.0, tr.opp),
+                    "dvfs",
+                    0,
+                    1 + tr.cluster.0,
+                    tr.t_s,
+                ));
+            }
+        }
+        let mut edges = vec![0.0];
+        for &t in &schedule.boundaries() {
+            if t > 0.0 && t < makespan {
+                edges.push(t);
+            }
+        }
+        edges.push(makespan);
+        for (i, w) in edges.windows(2).enumerate() {
+            if w[1] > w[0] {
+                sink.record(TraceEvent::span(&format!("epoch{i}"), "dvfs", 0, 0, w[0], w[1] - w[0]));
+            }
+        }
+    }
+    if metrics.enabled() || sink.enabled() {
+        // Per-cluster rung residency: cut [0, makespan] at the
+        // cluster's own transitions; `opp_at` names the rung in force
+        // over each piece.
+        for c in base.cluster_ids() {
+            let mut cuts = vec![0.0];
+            for tr in &schedule.transitions {
+                if tr.cluster == c && tr.t_s > 0.0 && tr.t_s < makespan {
+                    cuts.push(tr.t_s);
+                }
+            }
+            cuts.push(makespan);
+            for w in cuts.windows(2) {
+                let (t0, t1) = (w[0], w[1]);
+                if t1 <= t0 {
+                    continue;
+                }
+                let rung = schedule.opp_at(c, t0);
+                metrics.inc(&format!("dvfs_residency_c{}_opp{rung}_s", c.0), t1 - t0);
+                if sink.enabled() {
+                    sink.record(TraceEvent::span(
+                        &format!("opp{rung}"),
+                        "dvfs",
+                        0,
+                        1 + c.0,
+                        t0,
+                        t1 - t0,
+                    ));
+                }
+            }
+        }
+    }
+    stats
 }
 
 /// Cut virtual time at every transition and compute each epoch's

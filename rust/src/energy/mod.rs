@@ -58,6 +58,23 @@ impl EnergyReport {
     pub fn cluster_rail_j(&self, c: ClusterId) -> f64 {
         self.energy_clusters_j[c.0]
     }
+
+    /// Accumulate this report's joules into a metrics registry as
+    /// monotone counters, one per sensor rail:
+    /// `{prefix}_energy_j` (whole SoC), `{prefix}_energy_c{c}_j`
+    /// per cluster, plus the DRAM and GPU rails. A no-op on a
+    /// disabled registry.
+    pub fn export_metrics(&self, reg: &mut crate::obs::MetricsRegistry, prefix: &str) {
+        if !reg.enabled() {
+            return;
+        }
+        reg.inc(&format!("{prefix}_energy_j"), self.energy_j);
+        for (c, &j) in self.energy_clusters_j.iter().enumerate() {
+            reg.inc(&format!("{prefix}_energy_c{c}_j"), j);
+        }
+        reg.inc(&format!("{prefix}_energy_dram_j"), self.energy_dram_j);
+        reg.inc(&format!("{prefix}_energy_gpu_j"), self.energy_gpu_j);
+    }
 }
 
 /// The power model bound to a SoC descriptor.

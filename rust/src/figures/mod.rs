@@ -11,7 +11,7 @@
 //! qualitative claims the paper draws from that figure (who wins, where
 //! the crossover sits, by roughly what factor). `cargo test` runs all of
 //! them in quick mode; `amp-gemm figures` and `cargo bench` regenerate
-//! the full versions. DESIGN.md §8 indexes every experiment.
+//! the full versions. DESIGN.md §9 indexes every experiment.
 //!
 //! Beyond the paper: [`ablation`] covers the §6 future-work knobs,
 //! [`fleet`] is the multi-board throughput-scaling report

@@ -43,8 +43,9 @@ use crate::coordinator::Batcher;
 use crate::dvfs::DvfsSchedule;
 use crate::energy::PowerModel;
 use crate::fleet::{Fleet, FleetStrategy, DISPATCH_S};
+use crate::obs::{Histogram, MetricsRegistry, NullSink, TraceEvent, TraceSink};
 use crate::sim::engine::{ConfigId, EventQueue, ItemCost, RunCache};
-use crate::sim::simulate;
+use crate::sim::{simulate, simulate_traced, Timeline};
 use crate::util::rng::Rng;
 use std::collections::{BTreeMap, HashMap};
 
@@ -469,7 +470,7 @@ pub fn poisson_arrivals(
 }
 
 /// One board's share of a streamed (or wave-replayed) run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StreamBoardStats {
     pub name: String,
     /// Requests this board executed.
@@ -490,7 +491,7 @@ pub struct StreamBoardStats {
 
 /// Aggregated result of one streamed (or wave-replayed) fleet run.
 /// Deterministic: two replays of the same arrivals compare equal.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StreamStats {
     pub label: String,
     pub requests: usize,
@@ -558,6 +559,8 @@ fn finish_stream_stats(
     mut depth_events: EventQueue<i64>,
     des_runs: u64,
     cache_hits: u64,
+    sink: &mut dyn TraceSink,
+    metrics: &mut MetricsRegistry,
 ) -> StreamStats {
     let n = fleet.num_boards();
     let makespan = finish.iter().cloned().fold(0.0, f64::max);
@@ -577,6 +580,13 @@ fn finish_stream_stats(
             let st = cache.peek(cfgs[b], shape).expect("executed shapes are cached");
             busy += count as f64 * st.time_s;
             item_energy += count as f64 * st.energy.energy_j;
+            if metrics.enabled() {
+                // Per-cluster joules as monotone counters (the item
+                // energy, scaled by how many items ran this shape).
+                for (c, &j) in st.energy.energy_clusters_j.iter().enumerate() {
+                    metrics.inc(&format!("board{b}_energy_c{c}_j"), count as f64 * j);
+                }
+            }
         }
         boards.push(StreamBoardStats {
             name: fleet.boards[b].name.clone(),
@@ -621,6 +631,11 @@ fn finish_stream_stats(
         prev_t = t;
         depth += delta;
         max_depth = max_depth.max(depth);
+        if sink.enabled() {
+            // Counter series on the dispatcher process (pid = board
+            // count): Perfetto renders it as a stepped area chart.
+            sink.record(TraceEvent::counter("queue_depth", n, 0, t, depth as f64));
+        }
     }
     integral += depth as f64 * (makespan - prev_t).max(0.0);
 
@@ -628,13 +643,27 @@ fn finish_stream_stats(
     let total_busy: f64 = boards.iter().map(|b| b.busy_s).sum();
     // Sojourn times (completion − arrival) are submission-indexed, so
     // the percentiles line up request-for-request across replay modes.
-    let sojourns: Vec<f64> = completions
-        .iter()
-        .zip(arrivals)
-        .map(|(&done, a)| done - a.arrive_s)
-        .collect();
-    let sojourn_p50_s = crate::util::stats::percentile(&sojourns, 50.0);
-    let sojourn_p99_s = crate::util::stats::percentile(&sojourns, 99.0);
+    // They feed an exact-sample histogram whose `quantile` is the same
+    // kernel the old `percentile` calls used — the reported p50/p99
+    // stay bit-for-bit while the full distribution reaches the
+    // registry.
+    let mut sojourn_hist = Histogram::with_samples();
+    for (&done, a) in completions.iter().zip(arrivals) {
+        sojourn_hist.observe(done - a.arrive_s);
+    }
+    let sojourn_p50_s = sojourn_hist.quantile(50.0);
+    let sojourn_p99_s = sojourn_hist.quantile(99.0);
+    if metrics.enabled() {
+        metrics.record_histogram("sojourn_s", &sojourn_hist);
+        metrics.inc("stream_completions", completions.len() as f64);
+        metrics.set_gauge("queue_depth_mean", if makespan > 0.0 { integral / makespan } else { 0.0 });
+        metrics.set_gauge("queue_depth_max", max_depth as f64);
+        for (b, board) in boards.iter().enumerate() {
+            metrics.inc(&format!("board{b}_energy_j"), board.energy_j);
+            metrics.set_gauge(&format!("board{b}_utilization"), board.utilization);
+            metrics.set_gauge(&format!("board{b}_queue_grabs"), board.grabs as f64);
+        }
+    }
     StreamStats {
         label,
         requests: arrivals.len(),
@@ -712,17 +741,69 @@ pub fn simulate_fleet_stream(fleet: &Fleet, arrivals: &[Arrival]) -> StreamStats
 
 /// [`simulate_fleet_stream`] against a caller-owned [`RunCache`]: a
 /// warm cache replays a stream without a single DES run (`des_runs`
-/// = 0), bit-for-bit identical to the fresh replay.
+/// = 0), bit-for-bit identical to the fresh replay. This is the
+/// no-trace fast path: it delegates to
+/// [`simulate_fleet_stream_traced`] with a [`NullSink`] and a
+/// disabled registry, which skip every instrumentation branch.
 pub fn simulate_fleet_stream_cached(
     fleet: &Fleet,
     arrivals: &[Arrival],
     cache: &mut RunCache,
+) -> StreamStats {
+    simulate_fleet_stream_traced(
+        fleet,
+        arrivals,
+        cache,
+        &mut NullSink,
+        &mut MetricsRegistry::disabled(),
+    )
+}
+
+/// The streaming replay with observability attached: every event the
+/// replay already computes is mirrored into `sink` (request flows,
+/// execute spans, per-cluster phase spans, cache instants, a queue
+/// depth counter series) and `metrics` (admission/completion/grab
+/// counters, sojourn + service-time histograms, per-board energy).
+///
+/// **Zero-overhead contract**: all instrumentation is behind
+/// `sink.enabled()` / `metrics.enabled()` guards and never feeds back
+/// into the clock arithmetic, so the returned [`StreamStats`] is
+/// bit-for-bit identical whichever sink is passed (pinned by
+/// `tests/obs_props.rs`), and with the [`NullSink`] pair this *is*
+/// the PR 6 fast path (pinned by the `obs_off_events_per_s` /
+/// `obs_trace_overhead_ratio` perf-trajectory rows).
+///
+/// Trace layout: one process per board (pid = board index, tid 0 the
+/// request track, tid 1+c the phase track of cluster `c`) plus a
+/// dispatcher process (pid = board count) carrying admission instants,
+/// flow starts and the queue-depth counter. Phase spans replay the
+/// per-item [`Timeline`] of a separate [`simulate_traced`] run per
+/// distinct `(board, shape)` — trace mode pays that extra DES, the
+/// replay's own cache never sees it.
+pub fn simulate_fleet_stream_traced(
+    fleet: &Fleet,
+    arrivals: &[Arrival],
+    cache: &mut RunCache,
+    sink: &mut dyn TraceSink,
+    metrics: &mut MetricsRegistry,
 ) -> StreamStats {
     assert!(!arrivals.is_empty(), "empty stream");
     let n = fleet.num_boards();
     let (hits0, misses0) = (cache.hits(), cache.misses());
     let cfgs = board_configs(fleet, cache);
     let grains = fleet.grains();
+    if sink.enabled() {
+        for (b, board) in fleet.boards.iter().enumerate() {
+            sink.record(TraceEvent::process_name(b, &board.name));
+            sink.record(TraceEvent::thread_name(b, 0, "requests"));
+            for c in 0..board.soc().clusters.len() {
+                sink.record(TraceEvent::thread_name(b, 1 + c, &format!("cluster c{c}")));
+            }
+        }
+        sink.record(TraceEvent::process_name(n, "dispatcher"));
+        sink.record(TraceEvent::thread_name(n, 0, "admissions"));
+    }
+    metrics.inc("stream_admissions", arrivals.len() as f64);
 
     let mut clock = vec![0.0f64; n];
     // Last-completion instant per board — distinct from the scheduling
@@ -749,9 +830,23 @@ pub fn simulate_fleet_stream_cached(
         // Queue-depth +1 at each arrival; rank −1 orders arrivals ahead
         // of any same-instant grab (positive rank) in the depth replay.
         depth_events.push_tied(a.arrive_s, -1, 1);
+        if sink.enabled() {
+            sink.record(TraceEvent::instant("admit", "request", n, 0, a.arrive_s));
+            sink.record(TraceEvent::flow_start(
+                &format!("req {i}"),
+                "request",
+                n,
+                0,
+                a.arrive_s,
+                i as u64,
+            ));
+        }
     }
     let mut run: Vec<usize> = Vec::with_capacity(grains.iter().copied().max().unwrap_or(1));
     let mut executed = 0usize;
+    // Per-(board, shape) phase timelines for the cluster tracks —
+    // recorded lazily on first execution, trace mode only.
+    let mut timelines: HashMap<(usize, GemmShape), Timeline> = HashMap::new();
 
     while executed < arrivals.len() {
         // The board with the earliest clock acts next (ties: lowest id).
@@ -782,6 +877,7 @@ pub fn simulate_fleet_stream_cached(
             }
         }
         let take = run.len();
+        let hits_before = cache.hits();
         let st = cache.cost_with(cfgs[b], shape, || {
             simulate(fleet.boards[b].model(), &fleet.boards[b].sched, shape)
         });
@@ -793,10 +889,49 @@ pub fn simulate_fleet_stream_cached(
             debug_assert!(completions[id].is_nan(), "request {id} executed twice");
             completions[id] = start + DISPATCH_S + (j + 1) as f64 * st.time_s;
         }
+        if sink.enabled() {
+            sink.record(TraceEvent::instant(
+                if cache.hits() > hits_before { "cache_hit" } else { "cache_miss" },
+                "cache",
+                b,
+                0,
+                start,
+            ));
+            let span_name = format!("gemm {}x{}x{}", shape.m, shape.n, shape.k);
+            let tl = timelines.entry((b, shape)).or_insert_with(|| {
+                simulate_traced(fleet.boards[b].model(), &fleet.boards[b].sched, shape).1
+            });
+            for (j, &id) in run.iter().enumerate() {
+                let t0 = start + DISPATCH_S + j as f64 * st.time_s;
+                sink.record(TraceEvent::flow_step(&format!("req {id}"), "request", b, 0, t0, id as u64));
+                sink.record(TraceEvent::span(&span_name, "execute", b, 0, t0, st.time_s));
+                tl.emit_to(sink, b, 1, t0);
+                sink.record(TraceEvent::flow_end(
+                    &format!("req {id}"),
+                    "request",
+                    b,
+                    0,
+                    completions[id],
+                    id as u64,
+                ));
+            }
+        }
+        if metrics.enabled() {
+            metrics.inc("stream_grabs", 1.0);
+            metrics.inc(&format!("board{b}_items"), take as f64);
+            for _ in 0..take {
+                metrics.observe("service_time_s", st.time_s);
+            }
+        }
         items[b] += take;
         grabs[b] += 1;
         *counts[b].entry(shape).or_insert(0) += take;
         executed += take;
+    }
+    if metrics.enabled() {
+        metrics.inc("stream_des_runs", (cache.misses() - misses0) as f64);
+        metrics.inc("stream_cache_hits", (cache.hits() - hits0) as f64);
+        cache.export_metrics(metrics);
     }
 
     finish_stream_stats(
@@ -813,6 +948,8 @@ pub fn simulate_fleet_stream_cached(
         depth_events,
         cache.misses() - misses0,
         cache.hits() - hits0,
+        sink,
+        metrics,
     )
 }
 
@@ -961,6 +1098,8 @@ pub fn simulate_fleet_waves_cached(
         depth_events,
         cache.misses() - misses0,
         cache.hits() - hits0,
+        &mut NullSink,
+        &mut MetricsRegistry::disabled(),
     )
 }
 

@@ -6,7 +6,7 @@
 //! Rust + JAX + Pallas system, generalized from the paper's two-cluster
 //! big.LITTLE testbed to arbitrary N-cluster topologies. See DESIGN.md
 //! for the system inventory, the hardware-substitution rationale (§1),
-//! the `Topology` model (§2) and the experiment index (§6).
+//! the `Topology` model (§2) and the experiment index (§9).
 //!
 //! Layer map:
 //! * [`soc`] — the **topology descriptor**: `SocSpec` holds a
@@ -52,6 +52,16 @@
 //!   (`simulate_fleet_stream`, idle-tail/queue-depth/utilization
 //!   accounting) and the synchronous wave comparator, for capacity
 //!   planning and streaming-vs-wave studies;
+//! * [`obs`] — the **observability layer** (DESIGN.md §6): a
+//!   `MetricsRegistry` of counters/gauges/mergeable log-linear
+//!   histograms threaded through the run cache, fleet streams, DVFS
+//!   replays and energy accounting (Prometheus/JSON/TSV exports, the
+//!   coordinator `METRICS` command, `amp-gemm metrics`), and a
+//!   virtual-time `TraceSink` rendering request lifecycles, per-cluster
+//!   phase spans and OPP transitions as Perfetto-openable Chrome trace
+//!   JSON (`amp-gemm trace`) — with a zero-overhead-when-off contract:
+//!   the default `NullSink` + disabled-registry path is bit-for-bit the
+//!   PR 6 fast path;
 //! * [`calibrate`] — the **empirical calibration layer**: measured
 //!   per-cluster rate tables (shape-classed small/medium/large
 //!   `kc`-bound regimes, one row per OPP rung and parameter family,
@@ -87,6 +97,7 @@ pub mod figures;
 pub mod fleet;
 pub mod model;
 pub mod native;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod sched;

@@ -23,6 +23,13 @@
 //!   schedule, comparing online weight retuning against stale boot
 //!   weights (`--report` regenerates the OPP Pareto report;
 //!   `--ladder` prints the operating-point tables);
+//! * `trace    [--boards P1,P2,…] [--sizes R1,R2,…] [--requests N]
+//!   [--rate RPS] [--seed S] [--out F.trace.json]` — replay a Poisson
+//!   stream with tracing on and write Chrome-trace JSON (open in
+//!   `ui.perfetto.dev`);
+//! * `metrics  [--size R] [--json|--tsv]` — run a small pinned stream
+//!   with the metrics registry enabled and print the snapshot
+//!   (Prometheus text by default);
 //! * `soc` — show the simulated SoC descriptor.
 
 use amp_gemm::blis::gemm::GemmShape;
@@ -59,6 +66,8 @@ fn main() {
         "serve" => cmd_serve(&args),
         "fleet" => cmd_fleet(&args),
         "dvfs" => cmd_dvfs(&args),
+        "trace" => cmd_trace(&args),
+        "metrics" => cmd_metrics(&args),
         "soc" => cmd_soc(),
         _ => {
             print_help();
@@ -76,7 +85,7 @@ fn print_help() {
         "amp-gemm — architecture-aware GEMM scheduling on asymmetric multicores
 (reproduction of Catalán et al. 2015; see DESIGN.md)
 
-USAGE: amp-gemm <figures|search|gemm|calibrate|trajectory|serve|fleet|dvfs|soc> [options]
+USAGE: amp-gemm <figures|search|gemm|calibrate|trajectory|serve|fleet|dvfs|trace|metrics|soc> [options]
 
   figures   [--fig N] [--quick] [--out results]   regenerate paper figures
   ablation  [--out results]                        §6 future-work ablations
@@ -97,6 +106,11 @@ USAGE: amp-gemm <figures|search|gemm|calibrate|trajectory|serve|fleet|dvfs|soc> 
             [--sched sas|casas|das|cadas] [--ladder] [--tune-opps]
             [--weights analytical|empirical|hybrid]
   dvfs      --report [--quick] [--out results]      OPP Pareto + retuning report
+  trace     [--boards exynos5422,juno_r0] [--sizes R1,R2,...] [--requests N]
+            [--rate RPS] [--seed S] [--out stream.trace.json]
+            streamed-fleet Perfetto trace (open in ui.perfetto.dev)
+  metrics   [--size R] [--json|--tsv]               metrics snapshot of a pinned
+            stream (Prometheus text by default)
   soc                                              simulated SoC descriptor"
     );
 }
@@ -418,7 +432,7 @@ fn cmd_trajectory(args: &Args) -> Result<(), String> {
 fn cmd_calibrate_anchors() -> Result<(), String> {
     let model = PerfModel::exynos();
     use amp_gemm::blis::params::BlisParams;
-    println!("model-vs-paper calibration anchors (see DESIGN.md §7):\n");
+    println!("model-vs-paper calibration anchors (see DESIGN.md §8):\n");
     println!("| anchor | paper | model |");
     println!("|---|---|---|");
     let a15 = BlisParams::a15_opt();
@@ -450,7 +464,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         Coordinator::new(SocSpec::exynos5422())
     };
     let handle = server::serve(Arc::new(coord), addr).map_err(|e| e.to_string())?;
-    println!("serving on {} — protocol: GEMM m n k seed native|pjrt|sim ; PING ; STATS ; QUIT", handle.addr);
+    println!("serving on {} — protocol: GEMM m n k seed native|pjrt|sim ; PING ; STATS ; METRICS ; QUIT", handle.addr);
     // Run until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -712,6 +726,92 @@ fn cmd_dvfs(args: &Args) -> Result<(), String> {
         ]);
     }
     println!("{}", t.to_markdown());
+    Ok(())
+}
+
+/// `amp-gemm trace`: replay a Poisson stream with tracing on and write
+/// Chrome-trace JSON (the Perfetto-openable artifact; also the CI
+/// smoke target, validated by `python3 -m json.tool`).
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    use amp_gemm::fleet::sim::{poisson_arrivals, simulate_fleet_stream_traced};
+    use amp_gemm::obs::{trace, MemorySink, MetricsRegistry};
+    use amp_gemm::sim::RunCache;
+
+    let fleet = Fleet::parse(args.get_or("boards", "exynos5422,juno_r0"))?;
+    let sizes = args
+        .usize_list("sizes")?
+        .unwrap_or_else(|| vec![384, 512, 640]);
+    if sizes.iter().any(|&r| r == 0) {
+        return Err("--sizes entries must be at least 1".into());
+    }
+    let count = args.usize_or("requests", 24)?;
+    if count == 0 {
+        return Err("--requests must be at least 1".into());
+    }
+    let rate = args.f64_or("rate", 80.0)?;
+    if !rate.is_finite() || rate <= 0.0 {
+        return Err(format!("--rate must be a positive request rate, got {rate}"));
+    }
+    let seed = args.usize_or("seed", 42)? as u64;
+    let out = args.get_or("out", "stream.trace.json");
+
+    let shapes: Vec<GemmShape> = sizes.iter().map(|&r| GemmShape::square(r)).collect();
+    let mut rng = Rng::new(seed);
+    let arrivals = poisson_arrivals(&mut rng, &shapes, count, rate);
+    let mut cache = RunCache::new();
+    let mut sink = MemorySink::new();
+    let mut metrics = MetricsRegistry::new();
+    let stats =
+        simulate_fleet_stream_traced(&fleet, &arrivals, &mut cache, &mut sink, &mut metrics);
+    let doc = sink.to_chrome_json();
+    let n_events = trace::validate_chrome_json(&doc)?;
+    std::fs::write(out, &doc).map_err(|e| e.to_string())?;
+    println!(
+        "traced {} requests over {} boards: {n_events} events -> {out}\n\
+         makespan {:.3} s, sojourn p50 {:.3} s / p99 {:.3} s — open in ui.perfetto.dev",
+        stats.requests,
+        fleet.num_boards(),
+        stats.makespan_s,
+        stats.sojourn_p50_s,
+        stats.sojourn_p99_s
+    );
+    Ok(())
+}
+
+/// `amp-gemm metrics`: run a small pinned stream with the registry
+/// enabled and print the snapshot (Prometheus text exposition by
+/// default; `--json` for the one-line snapshot the coordinator
+/// `METRICS` command also serves; `--tsv` for the exact round-trip
+/// form).
+fn cmd_metrics(args: &Args) -> Result<(), String> {
+    use amp_gemm::fleet::sim::{poisson_arrivals, simulate_fleet_stream_traced};
+    use amp_gemm::obs::{MetricsRegistry, NullSink};
+    use amp_gemm::sim::{simulate, RunCache};
+
+    let size = args.usize_or("size", 512)?;
+    if size == 0 {
+        return Err("--size must be at least 1".into());
+    }
+    let fleet = Fleet::parse(args.get_or("boards", "exynos5422,juno_r0"))?;
+    let shapes = vec![GemmShape::square(size)];
+    let mut rng = Rng::new(args.usize_or("seed", 42)? as u64);
+    let arrivals = poisson_arrivals(&mut rng, &shapes, 16, 80.0);
+    let mut cache = RunCache::new();
+    let mut metrics = MetricsRegistry::new();
+    let stats =
+        simulate_fleet_stream_traced(&fleet, &arrivals, &mut cache, &mut NullSink, &mut metrics);
+    metrics.set_gauge("stream_makespan_s", stats.makespan_s);
+    // Per-cluster rails of one item on board 0 — the energy layer's
+    // registry hook, exercised end to end.
+    let item = simulate(fleet.boards[0].model(), &fleet.boards[0].sched, shapes[0]);
+    item.energy.export_metrics(&mut metrics, "board0_item");
+    if args.flag("json") {
+        println!("{}", metrics.to_json());
+    } else if args.flag("tsv") {
+        print!("{}", metrics.to_tsv());
+    } else {
+        print!("{}", metrics.to_prometheus());
+    }
     Ok(())
 }
 

@@ -1,0 +1,676 @@
+//! Metrics registry: named counters, gauges, and log-linear
+//! histograms for the virtual-time layers (run cache, fleet streams,
+//! DVFS replays, energy accounting).
+//!
+//! Design rules, in contract order:
+//!
+//! - **Zero overhead when off.** A registry built with
+//!   [`MetricsRegistry::disabled`] turns every mutation into an early
+//!   return; the hot loops it instruments never change their
+//!   arithmetic, so the no-trace fast path stays bit-for-bit (pinned
+//!   by `rust/tests/obs_props.rs` and the perf-trajectory rows
+//!   `obs_off_events_per_s` / `obs_trace_overhead_ratio`).
+//! - **One quantile kernel.** [`quantile_sorted`] is the single
+//!   linear-interpolation quantile in the repo:
+//!   [`crate::util::stats::percentile`] and
+//!   [`crate::util::stats::Summary`] delegate here, and
+//!   [`Histogram::quantile`] uses it verbatim whenever exact samples
+//!   are retained — which is how `StreamStats` p50/p99 stay
+//!   bit-for-bit after moving onto histograms.
+//! - **Mergeable.** Histograms use a fixed log-linear bucket ladder
+//!   (8 sub-buckets per octave over 2^-40 ‥ 2^41), so merging two
+//!   histograms bucket-wise equals bucketing the pooled sample.
+//! - **Exact round-trip.** [`MetricsRegistry::to_tsv`] /
+//!   [`MetricsRegistry::from_tsv`] reproduce the registry exactly
+//!   (Rust's shortest-round-trip `{}` float formatting), like
+//!   `calibrate::RateTable`; [`MetricsRegistry::to_json`] emits a
+//!   one-line snapshot consumed by the coordinator `METRICS` command
+//!   and validated by [`crate::obs::json::parse`].
+
+use std::collections::BTreeMap;
+
+/// Sub-bucket resolution: 2^3 = 8 linear sub-buckets per octave, a
+/// worst-case relative bucket width of 12.5%.
+const SUB_BITS: u32 = 3;
+const SUBS: usize = 1 << SUB_BITS;
+/// Smallest bucketed exponent: values below 2^-40 (~9e-13 — far under
+/// any virtual-time duration we record) land in the underflow bucket.
+const MIN_EXP: i32 = -40;
+/// Largest bucketed exponent: values at or above 2^41 overflow.
+const MAX_EXP: i32 = 40;
+const OCTAVES: usize = (MAX_EXP - MIN_EXP + 1) as usize;
+/// Ladder buckets plus underflow (index 0) and overflow (last index).
+pub const NUM_BUCKETS: usize = OCTAVES * SUBS + 2;
+
+/// Bucket index for `v`. Non-positive, sub-ladder, and NaN values go
+/// to the underflow bucket; values past the ladder (and +inf) go to
+/// the overflow bucket. Pure bit arithmetic — no `log2` calls — so
+/// the ladder is identical on every platform.
+fn bucket_index(v: f64) -> usize {
+    if v.is_nan() || v <= 0.0 {
+        return 0;
+    }
+    if v == f64::INFINITY {
+        return NUM_BUCKETS - 1;
+    }
+    let bits = v.to_bits();
+    let exp = ((bits >> 52) & 0x7ff) as i32 - 1023; // floor(log2 v); subnormals give < MIN_EXP
+    if exp < MIN_EXP {
+        return 0;
+    }
+    if exp > MAX_EXP {
+        return NUM_BUCKETS - 1;
+    }
+    let sub = ((bits >> (52 - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+    1 + (exp - MIN_EXP) as usize * SUBS + sub
+}
+
+/// Inclusive lower edge of ladder bucket `idx` (1 ‥ NUM_BUCKETS-2).
+fn bucket_lower(idx: usize) -> f64 {
+    let o = (idx - 1) / SUBS;
+    let sub = (idx - 1) % SUBS;
+    2f64.powi(MIN_EXP + o as i32) * (1.0 + sub as f64 / SUBS as f64)
+}
+
+/// Exclusive upper edge of ladder bucket `idx`.
+fn bucket_upper(idx: usize) -> f64 {
+    let o = (idx - 1) / SUBS;
+    let sub = (idx - 1) % SUBS;
+    2f64.powi(MIN_EXP + o as i32) * (1.0 + (sub + 1) as f64 / SUBS as f64)
+}
+
+/// The repo's single linear-interpolation quantile kernel over an
+/// ascending-sorted sample. `p` is a percentile rank in `[0, 100]`;
+/// the rank maps to `p/100 · (n−1)` with linear interpolation between
+/// neighbours — exactly the historical `util::stats::percentile`
+/// contract, which now delegates here.
+pub fn quantile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "quantile of empty sample");
+    assert!((0.0..=100.0).contains(&p), "quantile rank {p} outside [0, 100]");
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// A mergeable log-linear histogram with optional exact-sample
+/// retention. With samples retained (the default for registry
+/// observations and the stream sojourn path), [`Histogram::quantile`]
+/// is exact — bit-for-bit [`quantile_sorted`]; without, it answers
+/// from the bucket ladder within one bucket's resolution (≤ 12.5%
+/// relative).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    samples: Option<Vec<f64>>,
+}
+
+impl Histogram {
+    /// Bucket-only histogram (constant memory).
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: vec![0; NUM_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            samples: None,
+        }
+    }
+
+    /// Histogram that additionally retains every observed value, for
+    /// exact quantiles (memory grows with the sample).
+    pub fn with_samples() -> Histogram {
+        Histogram { samples: Some(Vec::new()), ..Histogram::new() }
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if let Some(s) = &mut self.samples {
+            s.push(v);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Minimum observed value (+inf when empty).
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Maximum observed value (−inf when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Merge `other` into `self`, bucket-wise. Equivalent to having
+    /// observed the pooled sample: bucket counts, count/sum/min/max
+    /// add exactly; samples concatenate when both sides retain them
+    /// and are dropped otherwise.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, &o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.samples = match (self.samples.take(), &other.samples) {
+            (Some(mut mine), Some(theirs)) => {
+                mine.extend_from_slice(theirs);
+                Some(mine)
+            }
+            _ => None,
+        };
+    }
+
+    /// Percentile-rank quantile, `p` in `[0, 100]`. Exact (the shared
+    /// [`quantile_sorted`] kernel) when samples are retained; bucket
+    /// midpoint clamped to the observed `[min, max]` otherwise.
+    pub fn quantile(&self, p: f64) -> f64 {
+        assert!(self.count > 0, "quantile of empty histogram");
+        assert!((0.0..=100.0).contains(&p), "quantile rank {p} outside [0, 100]");
+        if let Some(s) = &self.samples {
+            let mut sorted = s.clone();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            return quantile_sorted(&sorted, p);
+        }
+        let rank = p / 100.0 * (self.count - 1) as f64;
+        let mut cum = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            if cum as f64 > rank {
+                let mid = if idx == 0 {
+                    self.min
+                } else if idx == NUM_BUCKETS - 1 {
+                    self.max
+                } else {
+                    0.5 * (bucket_lower(idx) + bucket_upper(idx))
+                };
+                return mid.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    fn to_tsv_fields(&self) -> String {
+        let nonzero: Vec<String> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| format!("{i}:{c}"))
+            .collect();
+        let buckets = if nonzero.is_empty() { "-".to_string() } else { nonzero.join(",") };
+        let samples = match &self.samples {
+            None => "-".to_string(),
+            Some(s) => {
+                let joined: Vec<String> = s.iter().map(|v| format!("{v}")).collect();
+                format!("~{}", joined.join(","))
+            }
+        };
+        format!(
+            "{}\t{}\t{}\t{}\t{}\t{}",
+            self.count, self.sum, self.min, self.max, buckets, samples
+        )
+    }
+
+    fn from_tsv_fields(fields: &[&str]) -> Result<Histogram, String> {
+        if fields.len() != 6 {
+            return Err(format!("hist row wants 6 fields, got {}", fields.len()));
+        }
+        let mut h = Histogram::new();
+        h.count = fields[0].parse().map_err(|_| format!("bad hist count '{}'", fields[0]))?;
+        h.sum = parse_f64(fields[1])?;
+        h.min = parse_f64(fields[2])?;
+        h.max = parse_f64(fields[3])?;
+        if fields[4] != "-" {
+            for pair in fields[4].split(',') {
+                let (i, c) = pair
+                    .split_once(':')
+                    .ok_or_else(|| format!("bad bucket entry '{pair}'"))?;
+                let i: usize = i.parse().map_err(|_| format!("bad bucket index '{i}'"))?;
+                if i >= NUM_BUCKETS {
+                    return Err(format!("bucket index {i} out of range"));
+                }
+                h.buckets[i] = c.parse().map_err(|_| format!("bad bucket count '{c}'"))?;
+            }
+        }
+        if let Some(rest) = fields[5].strip_prefix('~') {
+            let mut samples = Vec::new();
+            if !rest.is_empty() {
+                for tok in rest.split(',') {
+                    samples.push(parse_f64(tok)?);
+                }
+            }
+            h.samples = Some(samples);
+        }
+        Ok(h)
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+fn parse_f64(tok: &str) -> Result<f64, String> {
+    tok.parse::<f64>().map_err(|_| format!("bad float '{tok}'"))
+}
+
+/// Prometheus metric names admit `[a-zA-Z0-9_:]`; everything else
+/// becomes `_`.
+fn prom_name(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect()
+}
+
+/// A registry of named metrics. Counters are monotone f64 adds (so
+/// fractional joules and flop counts fit), gauges are last-write
+/// scalars, histograms retain exact samples. All maps are `BTreeMap`,
+/// so every export is deterministically ordered.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsRegistry {
+    enabled: bool,
+    counters: BTreeMap<String, f64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    /// An enabled (recording) registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry {
+            enabled: true,
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            histograms: BTreeMap::new(),
+        }
+    }
+
+    /// The zero-overhead registry: every mutation returns immediately
+    /// and no allocation ever happens. This is what the default
+    /// (untraced) entry points pass.
+    pub fn disabled() -> MetricsRegistry {
+        MetricsRegistry { enabled: false, ..MetricsRegistry::new() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Add `delta` to counter `name` (created at 0).
+    pub fn inc(&mut self, name: &str, delta: f64) {
+        if !self.enabled {
+            return;
+        }
+        *self.counters.entry(name.to_string()).or_insert(0.0) += delta;
+    }
+
+    /// Set gauge `name` to `v` (last write wins).
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Observe `v` into histogram `name` (created retaining samples).
+    pub fn observe(&mut self, name: &str, v: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.histograms.entry(name.to_string()).or_insert_with(Histogram::with_samples).observe(v);
+    }
+
+    /// Record a whole pre-built histogram under `name` (merging into
+    /// any existing one) — how the stream sim hands over its sojourn
+    /// and service-time histograms without re-observing every value.
+    pub fn record_histogram(&mut self, name: &str, h: &Histogram) {
+        if !self.enabled {
+            return;
+        }
+        self.histograms.entry(name.to_string()).or_insert_with(Histogram::with_samples).merge(h);
+    }
+
+    pub fn counter(&self, name: &str) -> Option<f64> {
+        self.counters.get(name).copied()
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn counter_names(&self) -> impl Iterator<Item = &str> {
+        self.counters.keys().map(|s| s.as_str())
+    }
+
+    /// Merge `other` into `self`: counters add, gauges take `other`'s
+    /// value, histograms merge bucket-wise.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        if !self.enabled {
+            return;
+        }
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0.0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.histograms {
+            self.histograms.entry(k.clone()).or_insert_with(Histogram::with_samples).merge(h);
+        }
+    }
+
+    /// Exact TSV serialization (one metric per line); inverse of
+    /// [`MetricsRegistry::from_tsv`], bit-for-bit.
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::from("# amp-gemm-metrics-v1\n");
+        for (k, v) in &self.counters {
+            out.push_str(&format!("counter\t{k}\t{v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("gauge\t{k}\t{v}\n"));
+        }
+        for (k, h) in &self.histograms {
+            out.push_str(&format!("hist\t{k}\t{}\n", h.to_tsv_fields()));
+        }
+        out
+    }
+
+    /// Parse [`MetricsRegistry::to_tsv`] output. The result is an
+    /// enabled registry equal to the serialized one.
+    pub fn from_tsv(text: &str) -> Result<MetricsRegistry, String> {
+        let mut reg = MetricsRegistry::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim_end();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            let err = |m: String| format!("metrics tsv line {}: {m}", lineno + 1);
+            match fields[0] {
+                "counter" | "gauge" if fields.len() == 3 => {
+                    let v = parse_f64(fields[2]).map_err(err)?;
+                    if fields[0] == "counter" {
+                        reg.counters.insert(fields[1].to_string(), v);
+                    } else {
+                        reg.gauges.insert(fields[1].to_string(), v);
+                    }
+                }
+                "hist" if fields.len() == 8 => {
+                    let h = Histogram::from_tsv_fields(&fields[2..]).map_err(err)?;
+                    reg.histograms.insert(fields[1].to_string(), h);
+                }
+                _ => return Err(err(format!("unrecognized row '{line}'"))),
+            }
+        }
+        Ok(reg)
+    }
+
+    /// One-line JSON snapshot (counters, gauges, histogram summaries)
+    /// — the coordinator `METRICS` reply. Parses under
+    /// [`crate::obs::json::parse`]; keys are in BTreeMap order.
+    pub fn to_json(&self) -> String {
+        let fmt_map = |m: &BTreeMap<String, f64>| -> String {
+            let fields: Vec<String> = m
+                .iter()
+                .map(|(k, v)| format!("\"{}\":{}", crate::obs::json::escape(k), json_num(*v)))
+                .collect();
+            format!("{{{}}}", fields.join(","))
+        };
+        let hists: Vec<String> = self
+            .histograms
+            .iter()
+            .map(|(k, h)| {
+                format!(
+                    "\"{}\":{{\"count\":{},\"sum\":{},\"min\":{},\"max\":{},\"mean\":{},\"p50\":{},\"p99\":{}}}",
+                    crate::obs::json::escape(k),
+                    h.count(),
+                    json_num(h.sum()),
+                    json_num(if h.count() == 0 { 0.0 } else { h.min() }),
+                    json_num(if h.count() == 0 { 0.0 } else { h.max() }),
+                    json_num(h.mean()),
+                    json_num(if h.count() == 0 { 0.0 } else { h.quantile(50.0) }),
+                    json_num(if h.count() == 0 { 0.0 } else { h.quantile(99.0) }),
+                )
+            })
+            .collect();
+        format!(
+            "{{\"counters\":{},\"gauges\":{},\"histograms\":{{{}}}}}",
+            fmt_map(&self.counters),
+            fmt_map(&self.gauges),
+            hists.join(",")
+        )
+    }
+
+    /// Prometheus text exposition (counters, gauges, and histogram
+    /// summaries with p50/p99 quantile labels).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            let name = prom_name(k);
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            let name = prom_name(k);
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        for (k, h) in &self.histograms {
+            let name = prom_name(k);
+            out.push_str(&format!("# TYPE {name} summary\n"));
+            out.push_str(&format!("{name}_count {}\n", h.count()));
+            out.push_str(&format!("{name}_sum {}\n", h.sum()));
+            if h.count() > 0 {
+                out.push_str(&format!("{name}{{quantile=\"0.5\"}} {}\n", h.quantile(50.0)));
+                out.push_str(&format!("{name}{{quantile=\"0.99\"}} {}\n", h.quantile(99.0)));
+            }
+        }
+        out
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry::new()
+    }
+}
+
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        // JSON has no inf/nan; snapshot consumers get null.
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_index_is_monotone_and_in_range() {
+        let mut prev = 0usize;
+        let mut v = 1e-14;
+        while v < 1e14 {
+            let idx = bucket_index(v);
+            assert!(idx < NUM_BUCKETS);
+            assert!(idx >= prev, "bucket index regressed at {v}");
+            prev = idx;
+            v *= 1.07;
+        }
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-3.0), 0);
+        assert_eq!(bucket_index(f64::INFINITY), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn ladder_buckets_contain_their_values() {
+        for &v in &[1e-9, 0.001, 0.5, 1.0, 1.49, 7.3, 1e6] {
+            let idx = bucket_index(v);
+            assert!(idx > 0 && idx < NUM_BUCKETS - 1, "{v} fell off the ladder");
+            assert!(bucket_lower(idx) <= v && v < bucket_upper(idx), "{v} outside bucket {idx}");
+        }
+    }
+
+    #[test]
+    fn sampled_quantile_matches_percentile_kernel() {
+        let mut rng = Rng::new(7);
+        let xs: Vec<f64> = (0..257).map(|_| rng.gen_range(0.001, 50.0)).collect();
+        let mut h = Histogram::with_samples();
+        for &x in &xs {
+            h.observe(x);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for &p in &[0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(h.quantile(p), quantile_sorted(&sorted, p));
+        }
+    }
+
+    #[test]
+    fn bucket_quantile_is_within_bucket_resolution() {
+        let mut rng = Rng::new(11);
+        let xs: Vec<f64> = (0..400).map(|_| rng.gen_range(0.01, 100.0)).collect();
+        let mut bucketed = Histogram::new();
+        let mut exact = Histogram::with_samples();
+        for &x in &xs {
+            bucketed.observe(x);
+            exact.observe(x);
+        }
+        for &p in &[10.0, 50.0, 90.0, 99.0] {
+            let approx = bucketed.quantile(p);
+            let truth = exact.quantile(p);
+            assert!(
+                (approx - truth).abs() <= 0.125 * truth.abs() + 1e-12,
+                "p{p}: bucket answer {approx} vs exact {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_equals_pooled_sample() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<f64> = (0..300).map(|_| rng.gen_range(0.001, 20.0)).collect();
+        let mut pooled = Histogram::with_samples();
+        let mut left = Histogram::with_samples();
+        let mut right = Histogram::with_samples();
+        for (i, &x) in xs.iter().enumerate() {
+            pooled.observe(x);
+            if i % 2 == 0 {
+                left.observe(x)
+            } else {
+                right.observe(x)
+            }
+        }
+        left.merge(&right);
+        assert_eq!(left.count(), pooled.count());
+        assert_eq!(left.min(), pooled.min());
+        assert_eq!(left.max(), pooled.max());
+        assert_eq!(left.buckets, pooled.buckets);
+        for &p in &[0.0, 50.0, 99.0, 100.0] {
+            // Same sorted multiset, same kernel ⇒ bit-for-bit.
+            assert_eq!(left.quantile(p), pooled.quantile(p));
+        }
+    }
+
+    #[test]
+    fn registry_tsv_round_trips_exactly() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("stream_admissions", 24.0);
+        reg.inc("energy_j_c0", 1.2345678901234567);
+        reg.set_gauge("queue_depth_max", 7.0);
+        reg.observe("sojourn_s", 0.125);
+        reg.observe("sojourn_s", 3.5e-3);
+        reg.observe("sojourn_s", 42.0);
+        let parsed = MetricsRegistry::from_tsv(&reg.to_tsv()).unwrap();
+        assert_eq!(parsed, reg);
+        // And the round-trip is a fixed point of serialization.
+        assert_eq!(parsed.to_tsv(), reg.to_tsv());
+    }
+
+    #[test]
+    fn json_snapshot_parses() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("hits", 3.0);
+        reg.set_gauge("depth", 2.5);
+        reg.observe("lat_s", 0.25);
+        reg.observe("lat_s", 0.75);
+        let doc = reg.to_json();
+        assert!(!doc.contains('\n'), "snapshot must stay a single line");
+        let v = crate::obs::json::parse(&doc).unwrap();
+        assert_eq!(v.get("counters").unwrap().get("hits").unwrap().as_num(), Some(3.0));
+        assert_eq!(v.get("gauges").unwrap().get("depth").unwrap().as_num(), Some(2.5));
+        let lat = v.get("histograms").unwrap().get("lat_s").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_num(), Some(2.0));
+        assert_eq!(lat.get("p50").unwrap().as_num(), Some(0.5));
+    }
+
+    #[test]
+    fn prometheus_exposition_has_expected_lines() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("cache.hits", 5.0);
+        reg.observe("sojourn_s", 1.0);
+        let text = reg.to_prometheus();
+        assert!(text.contains("# TYPE cache_hits counter"));
+        assert!(text.contains("cache_hits 5"));
+        assert!(text.contains("sojourn_s_count 1"));
+        assert!(text.contains("sojourn_s{quantile=\"0.5\"} 1"));
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let mut reg = MetricsRegistry::disabled();
+        reg.inc("a", 1.0);
+        reg.set_gauge("b", 2.0);
+        reg.observe("c", 3.0);
+        reg.record_histogram("d", &Histogram::with_samples());
+        assert!(!reg.enabled());
+        assert!(reg.is_empty());
+    }
+}

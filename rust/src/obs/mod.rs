@@ -1,0 +1,38 @@
+//! Observability layer: virtual-time tracing + a metrics registry
+//! (DESIGN.md §6).
+//!
+//! Two halves, one contract:
+//!
+//! - [`metrics`] — a [`MetricsRegistry`] of named counters, gauges,
+//!   and mergeable log-linear [`Histogram`]s, threaded through the
+//!   hot layers (`sim::engine::RunCache`, the fleet stream replay,
+//!   `dvfs::sim`, `energy`). Snapshots export as exact TSV, one-line
+//!   JSON (the coordinator `METRICS` command), and Prometheus text
+//!   (`amp-gemm metrics`).
+//! - [`trace`] — a [`TraceSink`] of virtual-time spans, instants,
+//!   flow events, and counters, rendered as Chrome-trace-event JSON
+//!   (`amp-gemm trace`, openable in `ui.perfetto.dev`). One process
+//!   per fleet board plus a dispatcher process; one track per
+//!   cluster.
+//!
+//! **The zero-overhead-when-off contract**: every traced entry point
+//! (`simulate_fleet_stream_traced`, `simulate_dvfs_traced`) takes a
+//! sink + registry pair, and the default untraced entry points pass
+//! [`NullSink`] + [`MetricsRegistry::disabled`]. Producers guard all
+//! event construction behind `sink.enabled()` / the registry's
+//! internal flag, and never let instrumentation into the clock
+//! arithmetic — so the untraced results are bit-for-bit identical to
+//! the traced ones, and the off path keeps PR 6's no-trace speed
+//! (pinned by `rust/tests/obs_props.rs` and the
+//! `obs_off_events_per_s` / `obs_trace_overhead_ratio`
+//! perf-trajectory rows).
+//!
+//! [`json`] is the shared hand-rolled JSON escape/parse support both
+//! exporters lean on (the repo deliberately carries no serde).
+
+pub mod json;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{quantile_sorted, Histogram, MetricsRegistry};
+pub use trace::{to_chrome_json, MemorySink, NullSink, TraceEvent, TraceSink};

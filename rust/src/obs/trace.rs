@@ -1,0 +1,277 @@
+//! Virtual-time span/event tracing with Chrome-trace-event (Perfetto)
+//! export.
+//!
+//! Producers (the DES layers) talk to a [`TraceSink`]; the two
+//! built-in sinks bracket the design space:
+//!
+//! - [`NullSink`] — `enabled()` is `false` and `record` drops. Every
+//!   traced entry point's default delegate passes this, and producers
+//!   guard all event construction behind `sink.enabled()`, so the
+//!   no-trace fast path allocates nothing and its arithmetic is
+//!   untouched (the zero-overhead-when-off contract, pinned by
+//!   `rust/tests/obs_props.rs` and the `obs_trace_overhead_ratio`
+//!   perf-trajectory row).
+//! - [`MemorySink`] — buffers events in order;
+//!   [`to_chrome_json`] renders them as a `.trace.json` openable in
+//!   `ui.perfetto.dev` or `chrome://tracing`.
+//!
+//! Track layout (fixed, asserted by `rust/tests/trace_golden.rs`):
+//! one Chrome *process* per fleet [`crate::fleet::Board`] (pid =
+//! board index) plus a final "dispatcher" process (pid = board
+//! count); within a board, tid 0 is the request/execute track and
+//! tid 1+c is the phase track of [`crate::soc::ClusterId`] `c`.
+//! Request lifecycles are flow events (`s`/`t`/`f`) keyed by the
+//! submission index; OPP transitions and cache hits/misses are
+//! instants; queue depth is a counter series.
+//!
+//! All timestamps are virtual seconds converted to the trace format's
+//! microseconds (`ts = t_s · 1e6`).
+
+use crate::obs::json::escape;
+
+/// An argument value on a trace event (`args` map entry).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    Num(f64),
+    Str(String),
+}
+
+/// One Chrome trace event. `ph` is the phase tag: `X` complete span,
+/// `i` instant, `s`/`t`/`f` flow start/step/end, `C` counter, `M`
+/// metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub name: String,
+    pub cat: String,
+    pub ph: char,
+    /// Timestamp in trace microseconds (virtual seconds × 1e6).
+    pub ts_us: f64,
+    /// Span duration in microseconds (`X` events only).
+    pub dur_us: Option<f64>,
+    pub pid: usize,
+    pub tid: usize,
+    /// Flow-binding id (`s`/`t`/`f` events only).
+    pub id: Option<u64>,
+    pub args: Vec<(String, ArgValue)>,
+}
+
+const US: f64 = 1e6;
+
+impl TraceEvent {
+    fn base(name: &str, cat: &str, ph: char, pid: usize, tid: usize, t_s: f64) -> TraceEvent {
+        TraceEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ph,
+            ts_us: t_s * US,
+            dur_us: None,
+            pid,
+            tid,
+            id: None,
+            args: Vec::new(),
+        }
+    }
+
+    /// Complete span (`ph = X`) covering `[t0_s, t0_s + dur_s]`.
+    pub fn span(name: &str, cat: &str, pid: usize, tid: usize, t0_s: f64, dur_s: f64) -> TraceEvent {
+        TraceEvent { dur_us: Some(dur_s * US), ..TraceEvent::base(name, cat, 'X', pid, tid, t0_s) }
+    }
+
+    /// Thread-scoped instant (`ph = i`).
+    pub fn instant(name: &str, cat: &str, pid: usize, tid: usize, t_s: f64) -> TraceEvent {
+        TraceEvent::base(name, cat, 'i', pid, tid, t_s)
+    }
+
+    /// Flow start (`ph = s`): the first arrow anchor of flow `id`.
+    pub fn flow_start(name: &str, cat: &str, pid: usize, tid: usize, t_s: f64, id: u64) -> TraceEvent {
+        TraceEvent { id: Some(id), ..TraceEvent::base(name, cat, 's', pid, tid, t_s) }
+    }
+
+    /// Flow step (`ph = t`): an intermediate anchor of flow `id`.
+    pub fn flow_step(name: &str, cat: &str, pid: usize, tid: usize, t_s: f64, id: u64) -> TraceEvent {
+        TraceEvent { id: Some(id), ..TraceEvent::base(name, cat, 't', pid, tid, t_s) }
+    }
+
+    /// Flow end (`ph = f`, enclosing-slice binding).
+    pub fn flow_end(name: &str, cat: &str, pid: usize, tid: usize, t_s: f64, id: u64) -> TraceEvent {
+        TraceEvent { id: Some(id), ..TraceEvent::base(name, cat, 'f', pid, tid, t_s) }
+    }
+
+    /// Counter sample (`ph = C`) of series `name`.
+    pub fn counter(name: &str, pid: usize, tid: usize, t_s: f64, value: f64) -> TraceEvent {
+        TraceEvent {
+            args: vec![("value".to_string(), ArgValue::Num(value))],
+            ..TraceEvent::base(name, "counter", 'C', pid, tid, t_s)
+        }
+    }
+
+    /// `process_name` metadata for `pid`.
+    pub fn process_name(pid: usize, name: &str) -> TraceEvent {
+        TraceEvent {
+            args: vec![("name".to_string(), ArgValue::Str(name.to_string()))],
+            ..TraceEvent::base("process_name", "__metadata", 'M', pid, 0, 0.0)
+        }
+    }
+
+    /// `thread_name` metadata for `(pid, tid)`.
+    pub fn thread_name(pid: usize, tid: usize, name: &str) -> TraceEvent {
+        TraceEvent {
+            args: vec![("name".to_string(), ArgValue::Str(name.to_string()))],
+            ..TraceEvent::base("thread_name", "__metadata", 'M', pid, tid, 0.0)
+        }
+    }
+
+    fn to_json(&self) -> String {
+        let mut fields = vec![
+            format!("\"name\":\"{}\"", escape(&self.name)),
+            format!("\"cat\":\"{}\"", escape(&self.cat)),
+            format!("\"ph\":\"{}\"", self.ph),
+            format!("\"ts\":{}", self.ts_us),
+            format!("\"pid\":{}", self.pid),
+            format!("\"tid\":{}", self.tid),
+        ];
+        if let Some(dur) = self.dur_us {
+            fields.push(format!("\"dur\":{dur}"));
+        }
+        if let Some(id) = self.id {
+            fields.push(format!("\"id\":{id}"));
+        }
+        if self.ph == 'i' {
+            // Instants need an explicit scope; thread-scoped renders
+            // as a small marker on its track.
+            fields.push("\"s\":\"t\"".to_string());
+        }
+        if self.ph == 'f' {
+            // Bind the flow end to the enclosing slice.
+            fields.push("\"bp\":\"e\"".to_string());
+        }
+        if !self.args.is_empty() {
+            let args: Vec<String> = self
+                .args
+                .iter()
+                .map(|(k, v)| match v {
+                    ArgValue::Num(x) if x.is_finite() => format!("\"{}\":{x}", escape(k)),
+                    ArgValue::Num(_) => format!("\"{}\":null", escape(k)),
+                    ArgValue::Str(s) => format!("\"{}\":\"{}\"", escape(k), escape(s)),
+                })
+                .collect();
+            fields.push(format!("\"args\":{{{}}}", args.join(",")));
+        }
+        format!("{{{}}}", fields.join(","))
+    }
+}
+
+/// Where producers send trace events. Producers must guard event
+/// construction with `enabled()` so a disabled sink costs nothing.
+pub trait TraceSink {
+    /// Whether this sink wants events at all. `false` promises the
+    /// producer may skip all trace bookkeeping.
+    fn enabled(&self) -> bool;
+    fn record(&mut self, ev: TraceEvent);
+}
+
+/// The zero-overhead sink: disabled, drops everything.
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn record(&mut self, _ev: TraceEvent) {}
+}
+
+/// Buffers events in record order (deterministic: the DES replay
+/// order is pure virtual time).
+#[derive(Debug, Default, Clone)]
+pub struct MemorySink {
+    pub events: Vec<TraceEvent>,
+}
+
+impl MemorySink {
+    pub fn new() -> MemorySink {
+        MemorySink::default()
+    }
+
+    /// Render the buffered events as a Chrome trace JSON document.
+    pub fn to_chrome_json(&self) -> String {
+        to_chrome_json(&self.events)
+    }
+}
+
+impl TraceSink for MemorySink {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn record(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+}
+
+/// Render `events` (in order) as a Chrome trace JSON object:
+/// `{"displayTimeUnit":"ms","traceEvents":[...]}`. The output is a
+/// single line and parses under [`crate::obs::json::parse`]; CI
+/// additionally runs it through `python3 -m json.tool`.
+pub fn to_chrome_json(events: &[TraceEvent]) -> String {
+    let body: Vec<String> = events.iter().map(|e| e.to_json()).collect();
+    format!("{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[{}]}}", body.join(","))
+}
+
+/// Validate that `text` is a parseable Chrome trace document with a
+/// `traceEvents` array; returns the event count.
+pub fn validate_chrome_json(text: &str) -> Result<usize, String> {
+    let v = crate::obs::json::parse(text)?;
+    let events = v
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| "missing traceEvents array".to_string())?;
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chrome_json_round_trips_through_parser() {
+        let mut sink = MemorySink::new();
+        sink.record(TraceEvent::process_name(0, "exynos5422"));
+        sink.record(TraceEvent::thread_name(0, 1, "cluster c0"));
+        sink.record(TraceEvent::span("compute", "phase", 0, 1, 0.5e-3, 2.0e-3));
+        sink.record(TraceEvent::instant("cache_miss", "cache", 0, 0, 0.5e-3));
+        sink.record(TraceEvent::flow_start("req 3", "request", 2, 0, 0.0, 3));
+        sink.record(TraceEvent::flow_end("req 3", "request", 0, 0, 2.5e-3, 3));
+        sink.record(TraceEvent::counter("queue_depth", 2, 0, 1.0e-3, 4.0));
+        let doc = sink.to_chrome_json();
+        assert_eq!(validate_chrome_json(&doc).unwrap(), 7);
+        let v = crate::obs::json::parse(&doc).unwrap();
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events[2].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(events[2].get("dur").unwrap().as_num(), Some(2.0e-3 * 1e6));
+        assert_eq!(events[3].get("s").unwrap().as_str(), Some("t"));
+        assert_eq!(events[5].get("bp").unwrap().as_str(), Some("e"));
+        assert_eq!(events[5].get("id").unwrap().as_num(), Some(3.0));
+        assert_eq!(events[6].get("args").unwrap().get("value").unwrap().as_num(), Some(4.0));
+    }
+
+    #[test]
+    fn null_sink_is_disabled_and_memory_sink_is_not() {
+        assert!(!NullSink.enabled());
+        assert!(MemorySink::new().enabled());
+    }
+
+    #[test]
+    fn event_names_are_escaped() {
+        let doc = to_chrome_json(&[TraceEvent::instant("a\"b\\c", "x", 0, 0, 0.0)]);
+        assert!(validate_chrome_json(&doc).is_ok());
+        let v = crate::obs::json::parse(&doc).unwrap();
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events[0].get("name").unwrap().as_str(), Some("a\"b\\c"));
+    }
+
+    #[test]
+    fn empty_trace_is_still_valid() {
+        assert_eq!(validate_chrome_json(&to_chrome_json(&[])).unwrap(), 0);
+    }
+}

@@ -161,6 +161,21 @@ impl RunCache {
     pub fn cached_runs(&self) -> usize {
         self.runs.len()
     }
+
+    /// Snapshot the cache counters into a metrics registry
+    /// (`run_cache_hits`, `run_cache_misses`, `run_cache_configs`,
+    /// `run_cache_cached_runs`, `run_cache_hit_rate`). A no-op on a
+    /// disabled registry.
+    pub fn export_metrics(&self, reg: &mut crate::obs::MetricsRegistry) {
+        if !reg.enabled() {
+            return;
+        }
+        reg.inc("run_cache_hits", self.hits as f64);
+        reg.inc("run_cache_misses", self.misses as f64);
+        reg.set_gauge("run_cache_configs", self.configs() as f64);
+        reg.set_gauge("run_cache_cached_runs", self.cached_runs() as f64);
+        reg.set_gauge("run_cache_hit_rate", self.hit_rate());
+    }
 }
 
 #[derive(Debug, Clone)]

@@ -34,7 +34,7 @@ use crate::soc::ClusterId;
 
 /// Widest cluster the stack-allocated phase buffers and per-thread
 /// accumulators support (perf pass: no heap allocation per simulated
-/// phase or per ClusterSim, DESIGN.md §9).
+/// phase or per ClusterSim, DESIGN.md §10).
 const MAX_CLUSTER_THREADS: usize = 16;
 
 /// One cluster's simulated execution state.

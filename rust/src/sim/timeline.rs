@@ -151,6 +151,34 @@ impl Timeline {
         }
         t
     }
+
+    /// Emit every segment into a [`crate::obs::TraceSink`] as a
+    /// complete span on the cluster's track: process `pid`, thread
+    /// `tid_base + cluster`, timestamps shifted by `offset_s` (the
+    /// item's virtual start instant inside a larger replay). The CSV
+    /// export above is untouched — the sink is an additional
+    /// consumer, not a replacement.
+    pub fn emit_to(
+        &self,
+        sink: &mut dyn crate::obs::TraceSink,
+        pid: usize,
+        tid_base: usize,
+        offset_s: f64,
+    ) {
+        if !sink.enabled() {
+            return;
+        }
+        for s in &self.segments {
+            sink.record(crate::obs::TraceEvent::span(
+                s.kind.name(),
+                "phase",
+                pid,
+                tid_base + s.cluster.0,
+                offset_s + s.t0,
+                s.dur(),
+            ));
+        }
+    }
 }
 
 #[cfg(test)]

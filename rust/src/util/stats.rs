@@ -27,11 +27,14 @@ impl Summary {
         };
         let mut sorted = xs.to_vec();
         sorted.sort_by(|a, b| a.total_cmp(b));
-        let median = if n % 2 == 1 {
-            sorted[n / 2]
-        } else {
-            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
-        };
+        // Quantiles route through the shared observability kernel;
+        // see `obs::metrics::quantile_sorted` for the one
+        // linear-interpolation definition the whole repo uses.
+        let mut hist = crate::obs::metrics::Histogram::with_samples();
+        for &x in xs {
+            hist.observe(x);
+        }
+        let median = hist.quantile(50.0);
         Some(Summary {
             n,
             mean,
@@ -52,24 +55,16 @@ impl Summary {
     }
 }
 
-/// Percentile with linear interpolation, `p` in [0, 100].
+/// Percentile with linear interpolation, `p` in [0, 100]. A thin
+/// wrapper over [`crate::obs::metrics::quantile_sorted`] — the single
+/// quantile kernel shared with `obs::metrics::Histogram::quantile`,
+/// so the fleet tables and these helpers can never drift apart.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty sample");
     assert!((0.0..=100.0).contains(&p));
     let mut sorted = xs.to_vec();
     sorted.sort_by(|a, b| a.total_cmp(b));
-    if sorted.len() == 1 {
-        return sorted[0];
-    }
-    let rank = p / 100.0 * (sorted.len() - 1) as f64;
-    let lo = rank.floor() as usize;
-    let hi = rank.ceil() as usize;
-    if lo == hi {
-        sorted[lo]
-    } else {
-        let frac = rank - lo as f64;
-        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
-    }
+    crate::obs::metrics::quantile_sorted(&sorted, p)
 }
 
 /// Geometric mean; all inputs must be positive.

@@ -1,7 +1,7 @@
 //! CSV and markdown table emission for figures and benches.
 //!
 //! Every paper figure is regenerated as (a) a CSV file consumable by any
-//! plotting tool and (b) a markdown table printed to stdout (see DESIGN.md §8).
+//! plotting tool and (b) a markdown table printed to stdout (see DESIGN.md §9).
 
 use std::fmt::Write as _;
 use std::fs;

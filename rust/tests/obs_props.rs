@@ -1,0 +1,227 @@
+//! Property tests for the observability layer (ISSUE 7 satellite):
+//! over random fleets and random Poisson-ish streams from `util::rng`,
+//!
+//! * trace spans on any one `(pid, tid)` track never overlap — the
+//!   Perfetto rendering invariant (a track is a timeline of disjoint
+//!   slices);
+//! * request flows conserve: every admitted request id carries exactly
+//!   one flow start (`s`), one step (`t`) and one end (`f`), in
+//!   non-decreasing virtual time;
+//! * [`Histogram::merge`] equals pooled observation — bit-for-bit
+//!   quantiles with retained samples, and bit-for-bit bucket quantiles
+//!   without (bucket counts are integers, so sharded merge cannot
+//!   drift);
+//! * the zero-overhead-when-off contract: a [`MemorySink`] + enabled
+//!   registry run returns `StreamStats` bit-for-bit equal to the
+//!   [`NullSink`] + disabled-registry fast path (`PartialEq` compares
+//!   every field, completions vector included), and `simulate_traced`
+//!   returns `RunStats` bit-for-bit equal to `simulate`.
+
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::fleet::sim::{
+    poisson_arrivals, simulate_fleet_stream_cached, simulate_fleet_stream_traced, Arrival,
+};
+use amp_gemm::fleet::Fleet;
+use amp_gemm::obs::{Histogram, MemorySink, MetricsRegistry, TraceEvent};
+use amp_gemm::sim::{simulate, simulate_traced, RunCache};
+use amp_gemm::util::prop;
+use amp_gemm::util::rng::Rng;
+use amp_gemm::{prop_assert, prop_assert_eq};
+
+const PRESETS: [&str; 4] = ["exynos5422", "juno_r0", "dynamiq_3c", "symmetric2"];
+const SIZES: [usize; 4] = [96, 128, 192, 256];
+
+/// A random fleet of 1–3 boards and a random mixed-shape stream.
+fn random_stream(r: &mut Rng) -> (String, Vec<Arrival>) {
+    let n = r.gen_range(1, 4);
+    let toks: Vec<&str> = (0..n).map(|_| *r.choose(&PRESETS)).collect();
+    let shapes: Vec<GemmShape> = (0..r.gen_range(1, 4))
+        .map(|_| GemmShape::square(*r.choose(&SIZES)))
+        .collect();
+    let count = r.gen_range(1, 20);
+    let rate = r.gen_f64(20.0, 200.0);
+    let mut arr_rng = Rng::new(r.next_u64());
+    (toks.join(","), poisson_arrivals(&mut arr_rng, &shapes, count, rate))
+}
+
+fn traced_run(list: &str, arrivals: &[Arrival]) -> Result<(Vec<TraceEvent>, MetricsRegistry), String> {
+    let fleet = Fleet::parse(list).map_err(|e| e.to_string())?;
+    let mut sink = MemorySink::new();
+    let mut metrics = MetricsRegistry::new();
+    simulate_fleet_stream_traced(&fleet, arrivals, &mut RunCache::new(), &mut sink, &mut metrics);
+    Ok((sink.events, metrics))
+}
+
+/// Spans on one `(pid, tid)` track are pairwise disjoint. The slack
+/// covers the float noise between `offset + j·t + t` and
+/// `offset + (j+1)·t` plus the 1e-9 s tolerance `Timeline::validate`
+/// itself grants adjacent phase segments.
+#[test]
+fn prop_track_spans_never_overlap() {
+    prop::check(
+        &prop::Config { cases: 48, seed: 0x0B5_1 },
+        random_stream,
+        |(list, arrivals)| {
+            let (events, _) = traced_run(list, arrivals)?;
+            let mut tracks: std::collections::BTreeMap<(usize, usize), Vec<(f64, f64)>> =
+                std::collections::BTreeMap::new();
+            for e in &events {
+                if e.ph == 'X' {
+                    let dur = e.dur_us.ok_or("X event without dur")?;
+                    prop_assert!(dur >= 0.0, "negative span duration {dur}");
+                    tracks.entry((e.pid, e.tid)).or_default().push((e.ts_us, dur));
+                }
+            }
+            prop_assert!(!tracks.is_empty(), "traced run recorded no spans");
+            for ((pid, tid), spans) in &mut tracks {
+                spans.sort_by(|a, b| a.0.total_cmp(&b.0));
+                for w in spans.windows(2) {
+                    let (t0, d0) = w[0];
+                    let (t1, _) = w[1];
+                    let end = t0 + d0;
+                    let slack = 1e-2 + 1e-9 * end.abs();
+                    prop_assert!(
+                        t1 >= end - slack,
+                        "track ({pid},{tid}): span at {t1}us overlaps previous end {end}us"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Flow conservation: each admitted request id has exactly one
+/// `s`/`t`/`f` anchor, ordered admit ≤ dispatch ≤ complete.
+#[test]
+fn prop_request_flows_conserve_exactly_once() {
+    prop::check(
+        &prop::Config { cases: 48, seed: 0x0B5_2 },
+        random_stream,
+        |(list, arrivals)| {
+            let (events, metrics) = traced_run(list, arrivals)?;
+            prop_assert_eq!(
+                metrics.counter("stream_admissions"),
+                Some(arrivals.len() as f64)
+            );
+            for id in 0..arrivals.len() as u64 {
+                let mut anchors: Vec<(char, f64)> = events
+                    .iter()
+                    .filter(|e| e.id == Some(id) && matches!(e.ph, 's' | 't' | 'f'))
+                    .map(|e| (e.ph, e.ts_us))
+                    .collect();
+                anchors.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+                let phases: String = anchors.iter().map(|a| a.0).collect();
+                prop_assert!(
+                    phases == "stf" || phases == "sft",
+                    "request {id}: flow anchors are {phases:?}, want one each of s/t/f"
+                );
+                // s (admit) precedes t (dispatch) precedes f (complete).
+                let ts = |ph: char| anchors.iter().find(|a| a.0 == ph).unwrap().1;
+                prop_assert!(
+                    ts('s') <= ts('t') && ts('t') <= ts('f'),
+                    "request {id}: flow anchors out of order"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Merged shards equal pooled observation: exact quantiles with
+/// retained samples (same sorted multiset), exact bucket quantiles
+/// without (integer bucket counts, exact min/max of maxima).
+#[test]
+fn prop_histogram_merge_equals_pooled() {
+    prop::check_default(
+        |r| {
+            let n = r.gen_range(1, 40);
+            let xs: Vec<f64> = (0..n)
+                .map(|_| 10f64.powf(r.gen_f64(-6.0, 6.0)) * r.gen_f64(0.5, 1.5))
+                .collect();
+            let split = r.gen_range(0, n + 1);
+            (xs, split)
+        },
+        |(xs, split)| {
+            for sampled in [true, false] {
+                let fresh = || if sampled { Histogram::with_samples() } else { Histogram::new() };
+                let mut pooled = fresh();
+                let (mut left, mut right) = (fresh(), fresh());
+                for (i, &x) in xs.iter().enumerate() {
+                    pooled.observe(x);
+                    if i < *split {
+                        left.observe(x);
+                    } else {
+                        right.observe(x);
+                    }
+                }
+                let mut merged = left.clone();
+                merged.merge(&right);
+                prop_assert_eq!(merged.count(), pooled.count());
+                prop_assert_eq!(merged.min(), pooled.min());
+                prop_assert_eq!(merged.max(), pooled.max());
+                for p in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+                    let (m, q) = (merged.quantile(p), pooled.quantile(p));
+                    prop_assert!(
+                        m == q,
+                        "sampled={sampled} p{p}: merged {m} != pooled {q}"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The zero-overhead-when-off contract, stated as bit-for-bit equality:
+/// attaching a live sink + registry must not move a single bit of the
+/// returned statistics relative to the `NullSink` fast path.
+#[test]
+fn prop_traced_stream_stats_match_fast_path_bit_for_bit() {
+    prop::check(
+        &prop::Config { cases: 48, seed: 0x0B5_4 },
+        random_stream,
+        |(list, arrivals)| {
+            let fleet = Fleet::parse(list).map_err(|e| e.to_string())?;
+            let mut cache_off = RunCache::new();
+            let off = simulate_fleet_stream_cached(&fleet, arrivals, &mut cache_off);
+            let mut cache_on = RunCache::new();
+            let mut sink = MemorySink::new();
+            let mut metrics = MetricsRegistry::new();
+            let on = simulate_fleet_stream_traced(
+                &fleet,
+                arrivals,
+                &mut cache_on,
+                &mut sink,
+                &mut metrics,
+            );
+            prop_assert_eq!(off, on);
+            // The replay's own cache is untouched by trace bookkeeping
+            // (phase timelines come from a side `simulate_traced`).
+            prop_assert_eq!(cache_off.hits(), cache_on.hits());
+            prop_assert_eq!(cache_off.misses(), cache_on.misses());
+            prop_assert_eq!(cache_off.cached_runs(), cache_on.cached_runs());
+            Ok(())
+        },
+    );
+}
+
+/// `simulate_traced` vs `simulate`: the per-run half of the same
+/// contract (already relied on by the stream's phase tracks).
+#[test]
+fn prop_traced_run_stats_match_untraced_bit_for_bit() {
+    prop::check(
+        &prop::Config { cases: 32, seed: 0x0B5_5 },
+        |r| (String::from(*r.choose(&PRESETS)), *r.choose(&SIZES)),
+        |(preset, size)| {
+            let fleet = Fleet::parse(preset).map_err(|e| e.to_string())?;
+            let board = &fleet.boards[0];
+            let shape = GemmShape::square(*size);
+            let plain = simulate(board.model(), &board.sched, shape);
+            let (traced, timeline) = simulate_traced(board.model(), &board.sched, shape);
+            prop_assert_eq!(plain, traced);
+            timeline.validate()?;
+            Ok(())
+        },
+    );
+}

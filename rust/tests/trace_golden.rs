@@ -1,0 +1,263 @@
+//! Golden regression for the Perfetto trace exporter (ISSUE 7
+//! satellite): the pinned two-board stream (exynos5422 + juno_r0, 24
+//! Poisson arrivals — the same fixture `tests/fleet_golden.rs` pins
+//! numerically) is traced and the emitted Chrome-trace document is
+//! checked structurally:
+//!
+//! * the JSON parses (in-repo parser; CI re-checks with
+//!   `python3 -m json.tool`) and is byte-identical across runs
+//!   (deterministic ordering — the DES replay is pure virtual time);
+//! * event counts derive from the replay: one `s`/`t`/`f` flow anchor
+//!   and one execute span per request, one cache instant per grab, one
+//!   queue-depth sample per arrival and per grab, process/thread
+//!   metadata matching the fleet topology;
+//! * per-board execute-span durations sum to that board's busy time,
+//!   and each flow end lands exactly on the request's completion
+//!   instant — the trace and the [`StreamStats`] it rode along with
+//!   describe the same schedule;
+//! * phase spans replay the per-`(board, shape)` [`simulate_traced`]
+//!   timelines, segment for segment;
+//! * the DVFS tracer emits OPP transition instants, epoch spans and
+//!   per-rung residency spans that tile `[0, makespan]`, without
+//!   moving a bit of the untraced [`DvfsStats`].
+
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::calibrate::WeightSource;
+use amp_gemm::dvfs::sim::{simulate_dvfs_traced, simulate_dvfs_with, DvfsStrategy, Retune};
+use amp_gemm::dvfs::{DvfsSchedule, Transition};
+use amp_gemm::figures::fleet::{pinned_stream_arrivals, pinned_stream_fleet};
+use amp_gemm::fleet::sim::{simulate_fleet_stream_cached, simulate_fleet_stream_traced, StreamStats};
+use amp_gemm::obs::trace::validate_chrome_json;
+use amp_gemm::obs::{json, MemorySink, MetricsRegistry, TraceEvent};
+use amp_gemm::sim::{simulate_traced, RunCache};
+use amp_gemm::soc::{ClusterId, SocSpec};
+
+fn traced_pinned_stream() -> (Vec<TraceEvent>, MetricsRegistry, StreamStats) {
+    let fleet = pinned_stream_fleet();
+    let arrivals = pinned_stream_arrivals(true);
+    let mut sink = MemorySink::new();
+    let mut metrics = MetricsRegistry::new();
+    let stats =
+        simulate_fleet_stream_traced(&fleet, &arrivals, &mut RunCache::new(), &mut sink, &mut metrics);
+    (sink.events, metrics, stats)
+}
+
+fn count<'a>(
+    events: &'a [TraceEvent],
+    pred: impl Fn(&&'a TraceEvent) -> bool,
+) -> usize {
+    events.iter().filter(pred).count()
+}
+
+/// The document is valid Chrome-trace JSON and byte-identical across
+/// two fresh runs.
+#[test]
+fn pinned_stream_trace_is_deterministic_and_valid() {
+    let (events_a, _, _) = traced_pinned_stream();
+    let (events_b, _, _) = traced_pinned_stream();
+    let doc_a = amp_gemm::obs::to_chrome_json(&events_a);
+    let doc_b = amp_gemm::obs::to_chrome_json(&events_b);
+    assert_eq!(doc_a, doc_b, "trace must be deterministic");
+    let n = validate_chrome_json(&doc_a).expect("valid Chrome trace JSON");
+    assert_eq!(n, events_a.len());
+    // Spot-check the parsed shape: every event is an object carrying
+    // the mandatory keys.
+    let v = json::parse(&doc_a).unwrap();
+    assert_eq!(v.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    for e in v.get("traceEvents").unwrap().as_arr().unwrap() {
+        for key in ["name", "ph", "ts", "pid", "tid"] {
+            assert!(e.get(key).is_some(), "event missing {key}: {e:?}");
+        }
+    }
+}
+
+/// Event counts, metadata topology, flow/completion agreement, busy
+/// sums and phase-span replay on the pinned stream.
+#[test]
+fn pinned_stream_trace_structure_pinned() {
+    let fleet = pinned_stream_fleet();
+    let arrivals = pinned_stream_arrivals(true);
+    let (events, metrics, stats) = traced_pinned_stream();
+    let n_req = arrivals.len();
+    let n_boards = fleet.num_boards();
+    assert_eq!(n_req, 24);
+    assert_eq!(n_boards, 2);
+
+    // Process/thread metadata mirrors the fleet topology: one process
+    // per board plus the dispatcher.
+    let procs: Vec<(usize, &str)> = events
+        .iter()
+        .filter(|e| e.name == "process_name")
+        .map(|e| match &e.args[0].1 {
+            amp_gemm::obs::trace::ArgValue::Str(s) => (e.pid, s.as_str()),
+            other => panic!("process_name arg {other:?}"),
+        })
+        .collect();
+    assert_eq!(procs, vec![(0, "exynos5422"), (1, "juno_r0"), (2, "dispatcher")]);
+    let expected_threads: usize = fleet
+        .boards
+        .iter()
+        .map(|b| 1 + b.soc().clusters.len())
+        .sum::<usize>()
+        + 1;
+    assert_eq!(count(&events, |e| e.name == "thread_name"), expected_threads);
+
+    // Request lifecycle: one admit instant + one s/t/f anchor each.
+    assert_eq!(count(&events, |e| e.name == "admit" && e.pid == n_boards), n_req);
+    for ph in ['s', 't', 'f'] {
+        assert_eq!(count(&events, |e| e.ph == ph), n_req, "flow anchors '{ph}'");
+        let mut ids: Vec<u64> =
+            events.iter().filter(|e| e.ph == ph).map(|e| e.id.unwrap()).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n_req as u64).collect::<Vec<_>>(), "flow ids '{ph}'");
+    }
+    // Each flow end lands exactly on the request's completion instant.
+    for e in events.iter().filter(|e| e.ph == 'f') {
+        let id = e.id.unwrap() as usize;
+        assert_eq!(e.ts_us, stats.completions[id] * 1e6, "flow end of request {id}");
+    }
+
+    // One execute span per request; per-board durations sum to the
+    // board's busy time.
+    let execs: Vec<&TraceEvent> = events.iter().filter(|e| e.cat == "execute").collect();
+    assert_eq!(execs.len(), n_req);
+    for (b, board) in stats.boards.iter().enumerate() {
+        let sum_us: f64 =
+            execs.iter().filter(|e| e.pid == b).map(|e| e.dur_us.unwrap()).sum();
+        let want_us = board.busy_s * 1e6;
+        assert!(
+            (sum_us - want_us).abs() <= 1e-9 * want_us.max(1.0),
+            "board {b}: execute spans sum to {sum_us}us, busy time is {want_us}us"
+        );
+    }
+
+    // Cache instants: one per grab, split hit/miss exactly as the
+    // surfaced StreamStats counters report.
+    let grabs_total: u64 = stats.boards.iter().map(|b| b.grabs).sum();
+    assert_eq!(count(&events, |e| e.cat == "cache"), grabs_total as usize);
+    assert_eq!(count(&events, |e| e.name == "cache_miss"), stats.des_runs as usize);
+    assert_eq!(count(&events, |e| e.name == "cache_hit"), stats.cache_hits as usize);
+
+    // Queue-depth counter: one sample per arrival and per grab.
+    assert_eq!(count(&events, |e| e.ph == 'C'), n_req + grabs_total as usize);
+
+    // Phase spans replay the per-(board, shape) simulate_traced
+    // timelines, segment for segment.
+    for b in 0..n_boards {
+        let board = &fleet.boards[b];
+        let mut expected = 0usize;
+        for size in [384usize, 512, 640] {
+            let shape = GemmShape::square(size);
+            let runs = execs
+                .iter()
+                .filter(|e| e.pid == b && e.name == format!("gemm {size}x{size}x{size}"))
+                .count();
+            if runs > 0 {
+                let (_, tl) = simulate_traced(board.model(), &board.sched, shape);
+                expected += runs * tl.segments.len();
+            }
+        }
+        assert!(expected > 0, "board {b} executed nothing in the pinned stream");
+        assert_eq!(
+            count(&events, |e| e.cat == "phase" && e.pid == b),
+            expected,
+            "board {b} phase spans"
+        );
+    }
+
+    // The stats the trace rode along with are the fast path's, bit for
+    // bit, and the registry agrees with them.
+    let untraced = simulate_fleet_stream_cached(&fleet, &arrivals, &mut RunCache::new());
+    assert_eq!(stats, untraced);
+    assert_eq!(metrics.counter("stream_admissions"), Some(n_req as f64));
+    assert_eq!(metrics.counter("stream_completions"), Some(n_req as f64));
+    assert_eq!(metrics.counter("stream_grabs"), Some(grabs_total as f64));
+    assert_eq!(metrics.gauge("queue_depth_max"), Some(stats.max_queue_depth as f64));
+    let sojourn = metrics.histogram("sojourn_s").expect("sojourn histogram");
+    assert_eq!(sojourn.count(), n_req as u64);
+    assert_eq!(sojourn.quantile(50.0), stats.sojourn_p50_s);
+    assert_eq!(sojourn.quantile(99.0), stats.sojourn_p99_s);
+    let service = metrics.histogram("service_time_s").expect("service histogram");
+    assert_eq!(service.count(), n_req as u64);
+}
+
+/// The DVFS tracer: OPP transition instants on the cluster tracks,
+/// epoch spans on tid 0, per-rung residency spans tiling
+/// `[0, makespan]` per cluster — derived without perturbing the
+/// untraced replay.
+#[test]
+fn dvfs_trace_emits_opp_instants_and_residency() {
+    let soc = SocSpec::exynos5422();
+    let shape = GemmShape::square(1024);
+    let schedule = DvfsSchedule::new(
+        soc.clusters.iter().map(|c| c.opps.nominal_idx()).collect(),
+        vec![
+            Transition { t_s: 0.03, cluster: ClusterId(0), opp: 0 },
+            Transition { t_s: 0.06, cluster: ClusterId(1), opp: 0 },
+        ],
+    );
+    let strat = DvfsStrategy::Sas { cache_aware: true };
+    let source = WeightSource::Analytical;
+
+    let plain = simulate_dvfs_with(&soc, strat, shape, &schedule, Retune::Online, &source);
+    let mut sink = MemorySink::new();
+    let mut metrics = MetricsRegistry::new();
+    let traced = simulate_dvfs_traced(
+        &soc,
+        strat,
+        shape,
+        &schedule,
+        Retune::Online,
+        &source,
+        &mut sink,
+        &mut metrics,
+    );
+    assert_eq!(plain, traced, "tracing must not move the replay");
+    let makespan = traced.time_s;
+    assert!(makespan > 0.06, "fixture transitions must land inside the run");
+
+    let events = &sink.events;
+    let opp_instants: Vec<&TraceEvent> =
+        events.iter().filter(|e| e.ph == 'i' && e.cat == "dvfs").collect();
+    assert_eq!(opp_instants.len(), 2);
+    assert_eq!(opp_instants[0].name, "opp c0->0");
+    assert_eq!(opp_instants[0].tid, 1);
+    assert_eq!(opp_instants[1].name, "opp c1->0");
+    assert_eq!(opp_instants[1].tid, 2);
+
+    // Epochs between the boundaries: [0, 0.03, 0.06, makespan].
+    assert_eq!(count(events, |e| e.ph == 'X' && e.tid == 0), 3);
+
+    // Residency spans tile [0, makespan] per cluster: each cluster has
+    // one transition, so two spans whose durations sum to the makespan.
+    for c in 0..soc.clusters.len() {
+        let spans: Vec<&TraceEvent> = events
+            .iter()
+            .filter(|e| e.ph == 'X' && e.tid == 1 + c && e.name.starts_with("opp"))
+            .collect();
+        assert_eq!(spans.len(), 2, "cluster {c} residency spans");
+        let sum_us: f64 = spans.iter().map(|e| e.dur_us.unwrap()).sum();
+        assert!(
+            (sum_us - makespan * 1e6).abs() <= 1e-6 * makespan * 1e6,
+            "cluster {c}: residency {sum_us}us vs makespan {}us",
+            makespan * 1e6
+        );
+        // The registry carries the same residency, keyed by rung.
+        let total: f64 = metrics
+            .counter_names()
+            .filter(|n| n.starts_with(&format!("dvfs_residency_c{c}_")))
+            .map(|n| metrics.counter(n).unwrap())
+            .sum();
+        assert!(
+            (total - makespan).abs() <= 1e-9 * makespan,
+            "cluster {c}: residency counters sum to {total}, makespan {makespan}"
+        );
+    }
+    assert_eq!(
+        metrics.counter("dvfs_transitions_applied"),
+        Some(traced.transitions_applied as f64)
+    );
+
+    let doc = sink.to_chrome_json();
+    assert_eq!(validate_chrome_json(&doc).unwrap(), events.len());
+}
