@@ -225,6 +225,27 @@ impl Trajectory {
             small_on.makespan_s / small_off.makespan_s,
             Better::Lower,
         );
+
+        // --- Autoscaler (ISSUE 8): the pinned SLO sweep's decisions.
+        //     `boards_at_slo` pins the fleet the scaler provisions at
+        //     the sweep's top (past-saturation) rate; `cost_ratio` pins
+        //     the sweep-aggregate elastic-vs-peak-static cost — both
+        //     integer-plateaued decisions, so the gates are sized to a
+        //     whole board of drift, not measurement noise. ---
+        let mut as_cache = RunCache::new();
+        let sc = crate::figures::autoscale::sweep_scenario(40);
+        let decisions = crate::figures::autoscale::sweep_decisions(&sc, &mut as_cache);
+        let peak = crate::figures::autoscale::peak_static_boards(&sc, &mut as_cache)
+            .expect("a static fleet within the rack limit holds the pinned SLO");
+        let auto_total: f64 = decisions.iter().map(|d| d.price_per_hour).sum();
+        let static_total = Fleet::homogeneous(peak, &sc.template).price_per_hour()
+            * decisions.len() as f64;
+        t.push(
+            "autoscale_boards_at_slo",
+            decisions.last().expect("non-empty sweep").fleet.num_boards() as f64,
+            Better::Lower,
+        );
+        t.push("autoscale_cost_ratio", auto_total / static_total, Better::Lower);
         t
     }
 

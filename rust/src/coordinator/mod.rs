@@ -561,10 +561,54 @@ impl StreamDispatcher {
         reqs: Vec<StreamRequest>,
         strategy: FleetStrategy,
     ) -> Vec<Result<Response>> {
+        self.dispatch_stream_inner(reqs, strategy, None)
+    }
+
+    /// Wall-clock-paced admission (ISSUE 8): like [`dispatch_stream`],
+    /// but arrival timestamps are honored in *real time* — request `i`
+    /// starts no earlier than `arrive_s / time_scale` wall seconds
+    /// after the call begins, instead of executing as fast as the
+    /// boards allow. `time_scale` compresses the virtual clock (a
+    /// 60-virtual-second trace replays in `60 / time_scale` wall
+    /// seconds), which keeps paced runs testable. Responses still merge
+    /// in submission order and are bit-for-bit the unpaced responses —
+    /// pacing only gates *when* work starts, never what runs where.
+    pub fn dispatch_stream_paced(
+        &self,
+        reqs: Vec<StreamRequest>,
+        strategy: FleetStrategy,
+        time_scale: f64,
+    ) -> Vec<Result<Response>> {
+        assert!(
+            time_scale.is_finite() && time_scale > 0.0,
+            "time scale must be positive and finite, got {time_scale}"
+        );
+        self.dispatch_stream_inner(reqs, strategy, Some(time_scale))
+    }
+
+    fn dispatch_stream_inner(
+        &self,
+        reqs: Vec<StreamRequest>,
+        strategy: FleetStrategy,
+        pace: Option<f64>,
+    ) -> Vec<Result<Response>> {
         let n = reqs.len();
         if n == 0 {
             return Vec::new();
         }
+        // Paced mode: every request has a wall-clock eligibility
+        // deadline measured from here; a worker about to execute it
+        // sleeps out the remainder first.
+        let start = std::time::Instant::now();
+        let wait_for = |i: usize| {
+            if let Some(scale) = pace {
+                let deadline = std::time::Duration::from_secs_f64(reqs[i].arrive_s / scale);
+                let elapsed = start.elapsed();
+                if deadline > elapsed {
+                    std::thread::sleep(deadline - elapsed);
+                }
+            }
+        };
         // Admission order: virtual arrival instants, ties by submission
         // index — the same contract (and validation) as the virtual-time
         // twin, via the shared helper.
@@ -617,9 +661,11 @@ impl StreamDispatcher {
                     let tx = tx.clone();
                     let reqs = &reqs;
                     let admitted = &admitted[..];
+                    let wait_for = &wait_for;
                     s.spawn(move || {
                         while let Some(chunk) = queue.grab(grain) {
                             for &i in &admitted[chunk.start..chunk.end()] {
+                                wait_for(i);
                                 tx.send((i, self.inner.execute_on(b, &reqs[i].req)))
                                     .expect("result channel");
                             }
@@ -633,8 +679,10 @@ impl StreamDispatcher {
                     }
                     let tx = tx.clone();
                     let reqs = &reqs;
+                    let wait_for = &wait_for;
                     s.spawn(move || {
                         for i in idxs {
+                            wait_for(i);
                             tx.send((i, self.inner.execute_on(b, &reqs[i].req)))
                                 .expect("result channel");
                         }
@@ -1024,6 +1072,55 @@ mod tests {
         let d = stream_dispatcher();
         assert!(d.dispatch_stream(Vec::new(), FleetStrategy::Das).is_empty());
         assert_eq!(d.metrics().completed(), 0);
+    }
+
+    /// ISSUE 8: wall-clock-paced admission honors arrival gaps — the
+    /// run cannot finish before the last (scaled) arrival instant — and
+    /// returns exactly the unpaced responses (pacing gates *when* work
+    /// starts, never what runs where).
+    #[test]
+    fn paced_stream_honors_arrival_gaps() {
+        let arrive = [0.0, 2.0, 4.0];
+        let time_scale = 50.0; // 4 virtual s → 80 wall ms
+        let d = stream_dispatcher();
+        let mut reqs = Vec::new();
+        let mut wants = Vec::new();
+        for (i, &t) in arrive.iter().enumerate() {
+            let (req, want) = request(i as u64, 64, 40 + i as u64, Backend::Auto);
+            reqs.push(StreamRequest::at(t, req));
+            wants.push(want);
+        }
+        let unpaced = stream_dispatcher().dispatch_stream(reqs.clone(), FleetStrategy::Das);
+        let start = std::time::Instant::now();
+        let paced = d.dispatch_stream_paced(reqs, FleetStrategy::Das, time_scale);
+        let elapsed = start.elapsed().as_secs_f64();
+        assert!(
+            elapsed >= arrive[2] / time_scale,
+            "paced run finished in {elapsed:.3}s, before the last arrival at {:.3}s",
+            arrive[2] / time_scale
+        );
+        assert_eq!(paced.len(), 3);
+        for (i, (resp, want)) in paced.iter().zip(&wants).enumerate() {
+            let resp = resp.as_ref().unwrap();
+            assert_eq!(resp.id, i as u64, "submission order");
+            assert!(max_abs_diff(&resp.c, want) < gemm_tolerance(64), "request {i} numerics");
+            let twin = unpaced[i].as_ref().unwrap();
+            assert_eq!(resp.c, twin.c, "paced numerics must match unpaced");
+            assert_eq!(resp.checksum, twin.checksum);
+        }
+        assert_eq!(d.metrics().completed(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "time scale")]
+    fn paced_stream_rejects_bad_time_scale() {
+        let d = stream_dispatcher();
+        let (req, _) = request(0, 32, 1, Backend::Auto);
+        let _ = d.dispatch_stream_paced(
+            vec![StreamRequest::at(0.0, req)],
+            FleetStrategy::Das,
+            f64::NAN,
+        );
     }
 
     #[test]

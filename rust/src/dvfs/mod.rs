@@ -55,13 +55,11 @@ pub struct DvfsSchedule {
 
 impl DvfsSchedule {
     /// Build from raw parts; transitions are sorted into replay order.
+    /// The sort is total (`f64::total_cmp`, NaN-last) so a malformed
+    /// time can never panic here — [`DvfsSchedule::validate`] is where
+    /// non-finite instants are rejected with a clean `Err`.
     pub fn new(initial: Vec<usize>, mut transitions: Vec<Transition>) -> Self {
-        transitions.sort_by(|a, b| {
-            a.t_s
-                .partial_cmp(&b.t_s)
-                .expect("transition times must be comparable")
-                .then(a.cluster.cmp(&b.cluster))
-        });
+        transitions.sort_by(|a, b| a.t_s.total_cmp(&b.t_s).then(a.cluster.cmp(&b.cluster)));
         DvfsSchedule { initial, transitions }
     }
 
@@ -175,6 +173,105 @@ impl DvfsSchedule {
     }
 }
 
+/// A per-period load trace sampled from a DES replay — the feedback
+/// input of a closed-loop governor. Row `p` describes virtual-time
+/// window `[p·period_s, (p+1)·period_s)`: the busy fraction of every
+/// cluster in that window, plus an optional run-queue depth series for
+/// fleet-level streams. This is the signal the open-loop `ondemand`
+/// ramp is blind to: it carries *measured* utilization, not elapsed
+/// time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadSignal {
+    /// Sampling period (virtual seconds per row).
+    pub period_s: f64,
+    /// `samples[p][c]` = utilization of cluster `c` in period `p`,
+    /// clamped to `[0, 1]`.
+    pub samples: Vec<Vec<f64>>,
+    /// Mean run-queue depth per period (empty when the replay has no
+    /// queue, e.g. a single GEMM).
+    pub queue_depth: Vec<f64>,
+}
+
+impl LoadSignal {
+    pub fn new(period_s: f64, samples: Vec<Vec<f64>>) -> Self {
+        assert!(
+            period_s.is_finite() && period_s > 0.0,
+            "load-signal period must be positive, got {period_s}"
+        );
+        assert!(
+            samples
+                .iter()
+                .flatten()
+                .all(|u| u.is_finite() && (0.0..=1.0).contains(u)),
+            "utilization samples must be finite fractions in [0, 1]"
+        );
+        LoadSignal { period_s, samples, queue_depth: Vec::new() }
+    }
+
+    /// A flat signal: every cluster at `util` for `periods` periods.
+    /// `util = 1.0` is the saturating trace under which a closed-loop
+    /// governor must reproduce the open-loop ramp bit for bit; `0.0` is
+    /// the idle trace under which it must never leave the bottom rung.
+    pub fn constant(period_s: f64, n_clusters: usize, periods: usize, util: f64) -> Self {
+        LoadSignal::new(period_s, vec![vec![util; n_clusters]; periods])
+    }
+
+    /// Sample a replay where cluster `c` is busy on `[0, busy_until[c])`
+    /// and idle after — the shape every work-conserving GEMM/stream
+    /// replay in this codebase produces. Covers the whole horizon:
+    /// `ceil(max(busy_until) / period_s)` rows, plus one trailing idle
+    /// row so the drain is observable.
+    pub fn from_busy_until(period_s: f64, busy_until: &[f64]) -> Self {
+        assert!(period_s.is_finite() && period_s > 0.0);
+        assert!(busy_until.iter().all(|t| t.is_finite() && *t >= 0.0));
+        let horizon = busy_until.iter().fold(0.0_f64, |a, &b| a.max(b));
+        let periods = (horizon / period_s).ceil() as usize + 1;
+        let samples = (0..periods)
+            .map(|p| {
+                let start = p as f64 * period_s;
+                busy_until
+                    .iter()
+                    .map(|&f| ((f - start) / period_s).clamp(0.0, 1.0))
+                    .collect()
+            })
+            .collect();
+        LoadSignal::new(period_s, samples)
+    }
+
+    /// Read the signal back out of an [`crate::obs::MetricsRegistry`]
+    /// snapshot of a stream replay (the `board{b}_utilization` gauge +
+    /// the `queue_depth_mean` gauge over `periods` rows): the governor
+    /// loop consuming the observability layer's numbers instead of
+    /// growing private counters. The snapshot is an aggregate, so the
+    /// trace is flat — a coarse but *measured* feedback term.
+    pub fn from_metrics(
+        reg: &crate::obs::MetricsRegistry,
+        board: usize,
+        period_s: f64,
+        n_clusters: usize,
+        periods: usize,
+    ) -> Option<Self> {
+        let util = reg.gauge(&format!("board{board}_utilization"))?;
+        let mut sig =
+            LoadSignal::constant(period_s, n_clusters, periods, util.clamp(0.0, 1.0));
+        if let Some(depth) = reg.gauge("queue_depth_mean") {
+            sig.queue_depth = vec![depth; periods];
+        }
+        Some(sig)
+    }
+
+    pub fn with_queue_depth(mut self, depth: Vec<f64>) -> Self {
+        assert!(depth.iter().all(|d| d.is_finite() && *d >= 0.0));
+        self.queue_depth = depth;
+        self
+    }
+
+    /// The horizon the trace covers.
+    pub fn horizon_s(&self) -> f64 {
+        self.samples.len() as f64 * self.period_s
+    }
+}
+
 /// A DVFS policy: plans a [`DvfsSchedule`] over a virtual-time horizon
 /// for a given topology — the simulated counterpart of a `cpufreq`
 /// governor (arXiv:1509.02058's scheduler/governor interplay).
@@ -182,6 +279,14 @@ pub trait Governor {
     fn name(&self) -> &'static str;
     /// Plan per-cluster OPP transitions over `[0, horizon_s)`.
     fn plan(&self, soc: &SocSpec, horizon_s: f64) -> DvfsSchedule;
+    /// Plan against a measured [`LoadSignal`] instead of blind elapsed
+    /// time. The default ignores the feedback and falls back to the
+    /// open-loop plan over the signal's horizon — pinned governors
+    /// (`performance`, `powersave`) are load-independent by definition,
+    /// so only policies with a real feedback law override this.
+    fn plan_closed_loop(&self, soc: &SocSpec, load: &LoadSignal) -> DvfsSchedule {
+        self.plan(soc, load.horizon_s())
+    }
 }
 
 /// Pin every cluster at the ladder top (= the nominal rung for every
@@ -196,6 +301,10 @@ impl Governor for Performance {
         "performance"
     }
     fn plan(&self, soc: &SocSpec, _horizon_s: f64) -> DvfsSchedule {
+        // `len() - 1` trusts the ladder invariants — re-checked here so
+        // a malformed descriptor fails with a diagnostic, not an
+        // underflow (ISSUE 8).
+        soc.validate_ladders().expect("governor planning against a malformed descriptor");
         DvfsSchedule::pinned(
             &soc.clusters
                 .iter()
@@ -229,6 +338,13 @@ impl Governor for Powersave {
 pub struct Ondemand {
     /// Governor sampling period (virtual seconds per rung).
     pub period_s: f64,
+    /// Closed-loop up-step threshold: a cluster whose measured
+    /// utilization in a period reaches this raises one rung at the
+    /// period boundary (the real `cpufreq` ondemand's `up_threshold`).
+    pub up_threshold: f64,
+    /// Closed-loop idle threshold: a cluster at or below this drops to
+    /// the bottom rung (no point holding voltage for an empty queue).
+    pub down_threshold: f64,
 }
 
 impl Ondemand {
@@ -237,7 +353,19 @@ impl Ondemand {
             period_s.is_finite() && period_s > 0.0,
             "ondemand period must be positive, got {period_s}"
         );
-        Ondemand { period_s }
+        Ondemand { period_s, up_threshold: 0.7, down_threshold: 0.2 }
+    }
+
+    /// Override the closed-loop thresholds (open-loop planning is
+    /// unaffected — it models a permanently saturated cluster).
+    pub fn with_thresholds(mut self, up: f64, down: f64) -> Self {
+        assert!(
+            up.is_finite() && down.is_finite() && 0.0 <= down && down < up && up <= 1.0,
+            "thresholds must satisfy 0 <= down < up <= 1, got up={up} down={down}"
+        );
+        self.up_threshold = up;
+        self.down_threshold = down;
+        self
     }
 }
 
@@ -252,6 +380,7 @@ impl Governor for Ondemand {
         "ondemand"
     }
     fn plan(&self, soc: &SocSpec, horizon_s: f64) -> DvfsSchedule {
+        soc.validate_ladders().expect("governor planning against a malformed descriptor");
         let mut transitions = Vec::new();
         for c in soc.cluster_ids() {
             for rung in 1..soc[c].opps.len() {
@@ -263,6 +392,45 @@ impl Governor for Ondemand {
             }
         }
         DvfsSchedule::new(vec![0; soc.num_clusters()], transitions)
+    }
+
+    /// The feedback law: at every period boundary strictly inside the
+    /// signal's horizon, a cluster whose measured utilization reached
+    /// `up_threshold` raises one rung; one at or below `down_threshold`
+    /// drops to the bottom. Between the thresholds it holds. Under a
+    /// saturating trace this emits exactly the open-loop ramp (same
+    /// `rung·period` instants — the degeneracy anchor); under a zero
+    /// trace it emits nothing and stays pinned at the bottom rung. The
+    /// sampling cadence is the *signal's* period: the governor reacts
+    /// at the rate it is measured.
+    fn plan_closed_loop(&self, soc: &SocSpec, load: &LoadSignal) -> DvfsSchedule {
+        soc.validate_ladders().expect("governor planning against a malformed descriptor");
+        let n = soc.num_clusters();
+        let horizon = load.horizon_s();
+        let mut cur = vec![0usize; n];
+        let mut transitions = Vec::new();
+        'periods: for (p, row) in load.samples.iter().enumerate() {
+            assert_eq!(row.len(), n, "load signal row arity vs '{}'", soc.name);
+            let t = (p + 1) as f64 * load.period_s;
+            if t >= horizon {
+                break 'periods;
+            }
+            for c in soc.cluster_ids() {
+                // `opps` is never empty (OppTable::new forbids it), so
+                // `len() - 1` cannot underflow; on a single-rung ladder
+                // `top == 0` and neither branch can fire.
+                let top = soc[c].opps.len() - 1;
+                let u = row[c.0];
+                if u >= self.up_threshold && cur[c.0] < top {
+                    cur[c.0] += 1;
+                    transitions.push(Transition { t_s: t, cluster: c, opp: cur[c.0] });
+                } else if u <= self.down_threshold && cur[c.0] > 0 {
+                    cur[c.0] = 0;
+                    transitions.push(Transition { t_s: t, cluster: c, opp: 0 });
+                }
+            }
+        }
+        DvfsSchedule::new(vec![0; n], transitions)
     }
 }
 
@@ -422,6 +590,158 @@ mod tests {
         assert!(parse_governor("ondemand:-5").is_err());
         assert!(parse_governor("ondemand:x").is_err());
         assert!(parse_governor("turbo").is_err());
+    }
+
+    /// Malformed ondemand periods must come back as clean `Err`s, never
+    /// reach the `assert!` in `Ondemand::new` — the NaN/inf/-0/empty
+    /// fuzz set from the closed-loop hardening pass.
+    #[test]
+    fn governor_parser_rejects_malformed_periods() {
+        for tok in [
+            "ondemand:NaN",
+            "ondemand:nan",
+            "ondemand:-NaN",
+            "ondemand:inf",
+            "ondemand:+inf",
+            "ondemand:-inf",
+            "ondemand:infinity",
+            "ondemand:-0",
+            "ondemand:-0.0",
+            "ondemand:0",
+            "ondemand:0.0",
+            "ondemand:",
+            "ondemand: 250",
+            "ondemand:1e999",
+        ] {
+            let r = parse_governor(tok);
+            assert!(r.is_err(), "'{tok}' must be rejected cleanly");
+        }
+        // And the surviving boundary cases still parse.
+        assert_eq!(parse_governor("ondemand:0.001").unwrap().name(), "ondemand");
+        assert_eq!(parse_governor("ondemand:1e3").unwrap().name(), "ondemand");
+    }
+
+    /// A degenerate single-rung ladder must neither underflow the
+    /// `len() - 1` indexing nor emit spurious transitions under any
+    /// governor, open- or closed-loop.
+    #[test]
+    fn single_rung_ladders_plan_no_transitions() {
+        let s = SocSpec::symmetric(2);
+        let single: Vec<usize> = s.clusters.iter().map(|_| 0).collect();
+        let mut frozen = s.clone();
+        for c in &mut frozen.clusters {
+            c.opps = OppTable::single(c.core.freq_ghz);
+        }
+        let govs: [Box<dyn Governor>; 3] = [
+            Box::new(Performance),
+            Box::new(Powersave),
+            Box::new(Ondemand::default()),
+        ];
+        for gov in &govs {
+            let plan = gov.plan(&frozen, 10.0);
+            plan.validate(&frozen).unwrap();
+            assert!(plan.is_static(), "{} emitted transitions on a 1-rung ladder", gov.name());
+            assert_eq!(plan.initial, single);
+            let saturated = LoadSignal::constant(0.5, frozen.num_clusters(), 8, 1.0);
+            let closed = gov.plan_closed_loop(&frozen, &saturated);
+            closed.validate(&frozen).unwrap();
+            assert!(closed.is_static(), "{} closed loop on a 1-rung ladder", gov.name());
+        }
+    }
+
+    /// Degeneracy anchor: a saturating constant load reproduces the
+    /// open-loop time ramp bit for bit (same transitions, same f64
+    /// instants), because "always above the up-threshold" is exactly
+    /// the assumption the open-loop plan hard-codes.
+    #[test]
+    fn saturating_load_reproduces_open_loop_ramp_bit_for_bit() {
+        for s in [soc(), SocSpec::juno_r0(), SocSpec::dynamiq_3c()] {
+            let gov = Ondemand::new(0.5);
+            let sat = LoadSignal::constant(gov.period_s, s.num_clusters(), 10, 1.0);
+            let open = gov.plan(&s, sat.horizon_s());
+            let closed = gov.plan_closed_loop(&s, &sat);
+            assert_eq!(closed, open, "{}", s.name);
+        }
+    }
+
+    /// Degeneracy anchor: zero load never leaves the bottom rung — the
+    /// closed loop plans exactly the powersave pin.
+    #[test]
+    fn zero_load_stays_pinned_at_bottom_rung() {
+        let s = soc();
+        let gov = Ondemand::new(0.5);
+        let idle = LoadSignal::constant(gov.period_s, s.num_clusters(), 10, 0.0);
+        let plan = gov.plan_closed_loop(&s, &idle);
+        assert!(plan.is_static());
+        assert_eq!(plan, Powersave.plan(&s, idle.horizon_s()));
+        for t in [0.0, 1.0, 4.9] {
+            assert_eq!(plan.opp_at(BIG, t), 0);
+            assert_eq!(plan.opp_at(LITTLE, t), 0);
+        }
+    }
+
+    /// The feedback law proper: ramp up while saturated, hold in the
+    /// hysteresis band, drop to the bottom once idle.
+    #[test]
+    fn closed_loop_steps_down_when_idle() {
+        let s = soc();
+        let gov = Ondemand::new(0.5);
+        // Saturated for 3 periods, half-loaded for one, then idle.
+        let mut rows = vec![vec![1.0; 2]; 3];
+        rows.push(vec![0.5; 2]);
+        rows.extend(vec![vec![0.0; 2]; 3]);
+        let sig = LoadSignal::new(0.5, rows);
+        let plan = gov.plan_closed_loop(&s, &sig);
+        plan.validate(&s).unwrap();
+        // Up-steps at 0.5/1.0/1.5; hold through the 0.5-util period;
+        // down to rung 0 at 2.5.
+        assert_eq!(plan.opp_at(BIG, 0.4), 0);
+        assert_eq!(plan.opp_at(BIG, 1.6), 3);
+        assert_eq!(plan.opp_at(BIG, 2.4), 3, "hysteresis band holds the rung");
+        assert_eq!(plan.opp_at(BIG, 2.5), 0, "idle cluster drops to the bottom");
+        assert_eq!(plan.opp_at(LITTLE, 9.0), 0);
+        // Exactly 3 up-steps + 1 down-step per cluster.
+        assert_eq!(plan.transitions.len(), 8);
+    }
+
+    /// The default governors ignore feedback: closed-loop planning on a
+    /// pinned policy is its open-loop plan.
+    #[test]
+    fn pinned_governors_are_load_independent() {
+        let s = soc();
+        let sig = LoadSignal::constant(0.5, s.num_clusters(), 6, 0.9);
+        assert_eq!(Performance.plan_closed_loop(&s, &sig), Performance.plan(&s, 3.0));
+        assert_eq!(Powersave.plan_closed_loop(&s, &sig), Powersave.plan(&s, 3.0));
+    }
+
+    /// NaN transition times no longer panic the constructor's sort;
+    /// they sort last and are rejected by `validate` instead.
+    #[test]
+    fn nan_transition_times_sort_without_panicking() {
+        let s = soc();
+        let plan = DvfsSchedule::new(
+            vec![4, 4],
+            vec![
+                Transition { t_s: f64::NAN, cluster: BIG, opp: 0 },
+                Transition { t_s: 1.0, cluster: LITTLE, opp: 1 },
+            ],
+        );
+        assert_eq!(plan.transitions[0].t_s, 1.0, "NaN sorts last under total_cmp");
+        assert!(plan.validate(&s).is_err(), "validate rejects the NaN instant");
+    }
+
+    #[test]
+    fn load_signal_shapes() {
+        let sig = LoadSignal::from_busy_until(0.5, &[1.2, 0.3]);
+        // ceil(1.2/0.5) + 1 = 4 rows.
+        assert_eq!(sig.samples.len(), 4);
+        assert_eq!(sig.horizon_s(), 2.0);
+        assert_eq!(sig.samples[0], vec![1.0, 0.6]);
+        assert_eq!(sig.samples[2], vec![0.4, 0.0]);
+        assert_eq!(sig.samples[3], vec![0.0, 0.0]);
+        let flat = LoadSignal::constant(0.25, 3, 4, 0.5).with_queue_depth(vec![1.0; 4]);
+        assert_eq!(flat.queue_depth.len(), 4);
+        assert_eq!(flat.horizon_s(), 1.0);
     }
 
     #[test]

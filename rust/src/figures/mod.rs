@@ -17,10 +17,12 @@
 //! [`fleet`] is the multi-board throughput-scaling report
 //! (`amp-gemm fleet --report`), [`dvfs`] is the operating-point
 //! Pareto-frontier / online-retuning report (`amp-gemm dvfs --report`)
-//! and [`calibrate`] is the measured-rate weight-calibration report
-//! (`amp-gemm calibrate --report`).
+//! [`calibrate`] is the measured-rate weight-calibration report
+//! (`amp-gemm calibrate --report`) and [`autoscale`] is the SLO-driven
+//! elastic-fleet / closed-loop-governor report (`amp-gemm autoscale`).
 
 pub mod ablation;
+pub mod autoscale;
 pub mod calibrate;
 pub mod dvfs;
 pub mod fig10;

@@ -1,0 +1,377 @@
+//! SLO-driven fleet autoscaling (ISSUE 8; ROADMAP open item #1).
+//!
+//! The capacity planner ([`crate::fleet::sim::boards_to_sustain`])
+//! answers "how many boards sustain X req/s" on raw throughput. An SLO
+//! is a harder contract: hold the **p99 sojourn** (queueing included)
+//! of a timestamped arrival stream under a bound — and do it at the
+//! lowest provisioned **cost**, now that every [`Board`] carries a
+//! $/hour price tag. The [`Autoscaler`] closes that loop against the
+//! deterministic stream replay
+//! ([`crate::fleet::sim::simulate_fleet_stream_cached`]): grow while
+//! the SLO is violated (best marginal p99-per-$ template wins), then
+//! shrink and *downgrade* — swap boards for cheaper catalog templates
+//! while the SLO still holds — so the converged fleet is cheaper than
+//! the smallest homogeneous static fleet whenever mixed hardware can
+//! cover the residual load (the fleet-level analogue of "schedule the
+//! tail on the LITTLE cluster").
+//!
+//! Everything is virtual-time deterministic: same arrivals + same
+//! catalog ⇒ same decision, bit for bit — which is what lets the
+//! rate-sweep figure and the perf-trajectory gate pin the scaler's
+//! behavior.
+
+use crate::fleet::sim::{simulate_fleet_stream_cached, Arrival, StreamStats};
+use crate::fleet::{Board, Fleet};
+use crate::sched::MAX_WAYS;
+use crate::sim::engine::RunCache;
+
+/// The service-level objective a fleet must hold on a stream.
+#[derive(Debug, Clone, Copy)]
+pub struct SloPolicy {
+    /// p99 sojourn bound (admission → completion), virtual seconds.
+    pub p99_sojourn_s: f64,
+}
+
+impl SloPolicy {
+    pub fn new(p99_sojourn_s: f64) -> Self {
+        assert!(
+            p99_sojourn_s.is_finite() && p99_sojourn_s > 0.0,
+            "SLO bound must be positive and finite, got {p99_sojourn_s}"
+        );
+        SloPolicy { p99_sojourn_s }
+    }
+
+    /// Does a replay meet the objective?
+    pub fn met_by(&self, st: &StreamStats) -> bool {
+        st.sojourn_p99_s <= self.p99_sojourn_s
+    }
+}
+
+/// Grows/shrinks a [`Fleet`] against an [`SloPolicy`] using priced
+/// catalog templates.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    pub slo: SloPolicy,
+    /// Board templates the scaler may provision, in preference order
+    /// (ties in every score break toward the earlier entry). The first
+    /// template seeds the fleet.
+    pub catalog: Vec<Board>,
+    /// Hard rack limit (≤ [`MAX_WAYS`], the sharding fan-out cap).
+    pub max_boards: usize,
+}
+
+/// One converged scaling decision, with the replay that justified it.
+#[derive(Debug, Clone)]
+pub struct AutoscaleDecision {
+    pub fleet: Fleet,
+    /// The final fleet's replay of the full stream.
+    pub stats: StreamStats,
+    pub slo_met: bool,
+    /// Provisioned cost rate of the converged fleet, $/hour.
+    pub price_per_hour: f64,
+    /// Candidate replays the search paid (all served through the shared
+    /// [`RunCache`], so repeated shapes cost one DES run each).
+    pub evaluations: usize,
+}
+
+impl Autoscaler {
+    pub fn new(slo: SloPolicy, catalog: Vec<Board>) -> Self {
+        assert!(!catalog.is_empty(), "autoscaler needs at least one board template");
+        Autoscaler { slo, catalog, max_boards: MAX_WAYS }
+    }
+
+    /// Cap the rack size (builder style).
+    pub fn with_max_boards(mut self, max_boards: usize) -> Self {
+        assert!(
+            (1..=MAX_WAYS).contains(&max_boards),
+            "rack limit must be 1..={MAX_WAYS}, got {max_boards}"
+        );
+        self.max_boards = max_boards;
+        self
+    }
+
+    /// Converge on the cheapest fleet that holds the SLO for `arrivals`
+    /// (or the best-effort fleet at the rack limit if nothing does).
+    ///
+    /// Three deterministic passes:
+    /// 1. **Grow** from one seed template: while the SLO is violated,
+    ///    add the catalog template with the best p99 improvement per
+    ///    dollar (strictly-improving candidates only; stop at the rack
+    ///    limit or when no candidate moves the p99).
+    /// 2. **Shrink**: drop any board whose removal keeps the SLO —
+    ///    most expensive removable board first. A sub-capacity stream
+    ///    therefore never scales past its seed board.
+    /// 3. **Downgrade**: replace boards with strictly cheaper catalog
+    ///    templates while the SLO still holds — the pass that beats
+    ///    same-template static provisioning on cost.
+    pub fn plan(&self, arrivals: &[Arrival], cache: &mut RunCache) -> AutoscaleDecision {
+        let mut evaluations = 0usize;
+        let mut eval = |boards: &[Board], cache: &mut RunCache, n: &mut usize| -> StreamStats {
+            *n += 1;
+            simulate_fleet_stream_cached(&Fleet::new(boards.to_vec()), arrivals, cache)
+        };
+
+        let mut boards = vec![self.instance(0, 0)];
+        let mut stats = eval(&boards, cache, &mut evaluations);
+
+        // Pass 1: grow while the SLO is violated.
+        while !self.slo.met_by(&stats) && boards.len() < self.max_boards {
+            let mut best: Option<(f64, usize, StreamStats)> = None;
+            for (t, template) in self.catalog.iter().enumerate() {
+                let mut candidate = boards.clone();
+                candidate.push(self.named_instance(t, &boards));
+                let st = eval(&candidate, cache, &mut evaluations);
+                let gain = stats.sojourn_p99_s - st.sojourn_p99_s;
+                if gain <= 0.0 {
+                    continue; // the extra board did not move the tail
+                }
+                let score = gain / template.price_per_hour;
+                let better = match &best {
+                    None => true,
+                    Some((s, _, _)) => score > *s,
+                };
+                if better {
+                    best = Some((score, t, st));
+                }
+            }
+            match best {
+                Some((_, t, st)) => {
+                    boards.push(self.named_instance(t, &boards));
+                    stats = st;
+                }
+                None => break, // saturated: no template improves the tail
+            }
+        }
+
+        // Pass 2: shrink — drop boards the SLO does not need, most
+        // expensive removable first.
+        if self.slo.met_by(&stats) {
+            loop {
+                let mut order: Vec<usize> = (0..boards.len()).collect();
+                order.sort_by(|&a, &b| {
+                    boards[b].price_per_hour.total_cmp(&boards[a].price_per_hour).then(a.cmp(&b))
+                });
+                let mut removed = false;
+                for &i in &order {
+                    if boards.len() == 1 {
+                        break;
+                    }
+                    let mut candidate = boards.clone();
+                    candidate.remove(i);
+                    let st = eval(&candidate, cache, &mut evaluations);
+                    if self.slo.met_by(&st) {
+                        boards = candidate;
+                        stats = st;
+                        removed = true;
+                        break;
+                    }
+                }
+                if !removed {
+                    break;
+                }
+            }
+
+            // Pass 3: downgrade — swap each board for the cheapest
+            // catalog template that still holds the SLO.
+            for i in 0..boards.len() {
+                let mut swaps: Vec<usize> = (0..self.catalog.len())
+                    .filter(|&t| self.catalog[t].price_per_hour < boards[i].price_per_hour)
+                    .collect();
+                swaps.sort_by(|&a, &b| {
+                    self.catalog[a]
+                        .price_per_hour
+                        .total_cmp(&self.catalog[b].price_per_hour)
+                        .then(a.cmp(&b))
+                });
+                for t in swaps {
+                    let mut candidate = boards.clone();
+                    candidate[i] = self.instance(t, i);
+                    let st = eval(&candidate, cache, &mut evaluations);
+                    if self.slo.met_by(&st) {
+                        boards = candidate;
+                        stats = st;
+                        break;
+                    }
+                }
+            }
+        }
+
+        let fleet = Fleet::new(boards);
+        let slo_met = self.slo.met_by(&stats);
+        let price_per_hour = fleet.price_per_hour();
+        AutoscaleDecision { fleet, stats, slo_met, price_per_hour, evaluations }
+    }
+
+    /// Catalog template `t`, named for slot `slot`.
+    fn instance(&self, t: usize, slot: usize) -> Board {
+        let mut b = self.catalog[t].clone();
+        b.name = format!("{}#{slot}", self.catalog[t].name);
+        b
+    }
+
+    /// Catalog template `t`, named after the current fleet size.
+    fn named_instance(&self, t: usize, boards: &[Board]) -> Board {
+        self.instance(t, boards.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blis::gemm::GemmShape;
+    use crate::fleet::sim::{boards_to_sustain, poisson_arrivals, simulate_fleet_stream};
+    use crate::fleet::FleetStrategy;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn stream(rate: f64, count: usize, seed: u64) -> Vec<Arrival> {
+        let mut rng = Rng::new(seed);
+        poisson_arrivals(&mut rng, &[GemmShape::square(1024)], count, rate)
+    }
+
+    /// ISSUE 8 degeneracy anchor: a stream one board sustains with
+    /// headroom never scales — the decision matches
+    /// `boards_to_sustain`'s single-board answer.
+    #[test]
+    fn sub_capacity_stream_never_scales() {
+        let ex = Board::from_preset("exynos5422").unwrap();
+        let shape = GemmShape::square(1024);
+        let solo = crate::fleet::sim::simulate_fleet(
+            &Fleet::homogeneous(1, &ex),
+            FleetStrategy::Das,
+            shape,
+            16,
+        );
+        let rate = 0.4 * solo.throughput_rps;
+        assert_eq!(boards_to_sustain(&ex, shape, 16, rate, 8), Some(1));
+        let arrivals = stream(rate, 60, 7);
+        // A loose SLO: 20× one item's service time.
+        let item = crate::sim::simulate(ex.model(), &ex.sched, shape).time_s;
+        let scaler = Autoscaler::new(SloPolicy::new(20.0 * item), vec![ex]);
+        let d = scaler.plan(&arrivals, &mut RunCache::new());
+        assert!(d.slo_met, "p99 {:.3}s vs SLO {:.3}s", d.stats.sojourn_p99_s, 20.0 * item);
+        assert_eq!(d.fleet.num_boards(), 1, "sub-capacity stream must not scale");
+        assert_eq!(d.price_per_hour, d.fleet.boards[0].price_per_hour);
+    }
+
+    /// Past single-board saturation the scaler grows until the SLO
+    /// holds, and the decision is deterministic.
+    #[test]
+    fn saturating_stream_grows_until_slo_holds() {
+        let ex = Board::from_preset("exynos5422").unwrap();
+        let shape = GemmShape::square(1024);
+        let solo = crate::fleet::sim::simulate_fleet(
+            &Fleet::homogeneous(1, &ex),
+            FleetStrategy::Das,
+            shape,
+            16,
+        );
+        let rate = 2.2 * solo.throughput_rps;
+        let arrivals = stream(rate, 80, 11);
+        let item = crate::sim::simulate(ex.model(), &ex.sched, shape).time_s;
+        let slo = SloPolicy::new(8.0 * item);
+        // One board alone must violate the SLO at this rate.
+        let one = simulate_fleet_stream(&Fleet::homogeneous(1, &ex), &arrivals);
+        assert!(!slo.met_by(&one), "rate too low to force scaling");
+        let scaler = Autoscaler::new(slo, vec![ex.clone()]);
+        let d = scaler.plan(&arrivals, &mut RunCache::new());
+        assert!(d.slo_met, "p99 {:.3}s vs SLO {:.3}s", d.stats.sojourn_p99_s, slo.p99_sojourn_s);
+        assert!(d.fleet.num_boards() >= 2, "saturating stream must scale out");
+        // Deterministic: same arrivals + same catalog ⇒ same decision.
+        let d2 = scaler.plan(&arrivals, &mut RunCache::new());
+        assert_eq!(d.fleet.num_boards(), d2.fleet.num_boards());
+        assert_eq!(d.price_per_hour, d2.price_per_hour);
+        assert_eq!(d.stats.sojourn_p99_s, d2.stats.sojourn_p99_s);
+        // Minimality vs the same template: one fewer board violates.
+        let fewer = Fleet::homogeneous(d.fleet.num_boards() - 1, &ex);
+        let st = simulate_fleet_stream(&fewer, &arrivals);
+        assert!(
+            !slo.met_by(&st) || d.price_per_hour < fewer.price_per_hour(),
+            "the decision must be minimal or cheaper than the smaller static fleet"
+        );
+    }
+
+    /// A heterogeneous catalog lets the downgrade pass undercut
+    /// same-template static provisioning: the converged fleet holds the
+    /// SLO strictly cheaper than the smallest homogeneous fleet of
+    /// reference boards that holds it.
+    #[test]
+    fn downgrade_pass_beats_homogeneous_static_cost() {
+        let ex = Board::from_preset("exynos5422").unwrap();
+        let little = Board::from_preset("symmetric2").unwrap();
+        assert!(little.price_per_hour < ex.price_per_hour, "catalog needs a cheaper template");
+        let shape = GemmShape::square(1024);
+        let solo = crate::fleet::sim::simulate_fleet(
+            &Fleet::homogeneous(1, &ex),
+            FleetStrategy::Das,
+            shape,
+            16,
+        );
+        let rate = 1.4 * solo.throughput_rps;
+        let arrivals = stream(rate, 80, 23);
+        let item = crate::sim::simulate(ex.model(), &ex.sched, shape).time_s;
+        let slo = SloPolicy::new(10.0 * item);
+        let scaler = Autoscaler::new(slo, vec![ex.clone(), little]);
+        let mut cache = RunCache::new();
+        let d = scaler.plan(&arrivals, &mut cache);
+        assert!(d.slo_met);
+        // Smallest homogeneous exynos fleet holding the SLO.
+        let mut static_n = None;
+        for n in 1..=8usize {
+            let st = simulate_fleet_stream_cached(
+                &Fleet::homogeneous(n, &ex),
+                &arrivals,
+                &mut cache,
+            );
+            if slo.met_by(&st) {
+                static_n = Some(n);
+                break;
+            }
+        }
+        let n = static_n.expect("some static fleet must hold the SLO");
+        let static_cost = Fleet::homogeneous(n, &ex).price_per_hour();
+        assert!(
+            d.price_per_hour <= static_cost,
+            "autoscaled ${:.2}/h must not exceed static ${static_cost:.2}/h",
+            d.price_per_hour
+        );
+    }
+
+    /// ISSUE 8 property test: over random fleets, an SLO met at some
+    /// rate stays met when the rate decreases (arrival gaps stretch,
+    /// service times unchanged ⇒ the tail cannot grow).
+    #[test]
+    fn prop_slo_stays_met_as_rate_decreases() {
+        let presets = ["exynos5422", "juno_r0", "dynamiq_3c", "symmetric4"];
+        prop::check_default(
+            |r| {
+                let n = r.gen_range(1, 4); // 1..=3 boards
+                let toks: Vec<&str> = (0..n).map(|_| *r.choose(&presets)).collect();
+                (toks.join(","), r.gen_range(20, 60), r.gen_range(1, 1000) as u64)
+            },
+            |(list, count, seed)| {
+                let fleet = Fleet::parse(list).map_err(|e| e.to_string())?;
+                let mut rng = Rng::new(*seed);
+                let arrivals =
+                    poisson_arrivals(&mut rng, &[GemmShape::square(512)], *count, 4.0);
+                let st = simulate_fleet_stream(&fleet, &arrivals);
+                // The SLO "exactly met" at this rate: its own p99.
+                let slo = SloPolicy::new(st.sojourn_p99_s.max(1e-9));
+                for stretch in [2.0, 4.0] {
+                    let slower: Vec<Arrival> = arrivals
+                        .iter()
+                        .map(|a| Arrival::at(a.shape, a.arrive_s * stretch))
+                        .collect();
+                    let slow_st = simulate_fleet_stream(&fleet, &slower);
+                    if !slo.met_by(&slow_st) {
+                        return Err(format!(
+                            "p99 grew from {:.4}s to {:.4}s at 1/{stretch} rate on {list}",
+                            st.sojourn_p99_s, slow_st.sojourn_p99_s
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

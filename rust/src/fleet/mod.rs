@@ -27,6 +27,7 @@
 //!   capacity-planning sweeps; the real request path is
 //!   [`crate::coordinator::FleetDispatcher`].
 
+pub mod autoscale;
 pub mod sim;
 
 use crate::blis::gemm::GemmShape;
@@ -74,30 +75,51 @@ pub struct Board {
     /// reach the fleet split and the capacity planner
     /// ([`sim::boards_to_sustain`]) without touching either.
     pub weight_source: WeightSource,
+    /// Rental price of the board, $/hour — the cost axis the
+    /// [`crate::fleet::autoscale::Autoscaler`] optimizes against the
+    /// throughput axis (ISSUE 8). Presets carry list prices
+    /// ([`Board::from_preset`]); other constructors default to a
+    /// peak-proportional formula; [`Board::with_price`] overrides.
+    pub price_per_hour: f64,
     model: PerfModel,
+}
+
+/// Default $/hour for a descriptor without a preset list price:
+/// proportional to ideal aggregate peak, so a board constructed from a
+/// raw [`SocSpec`] is never free (which would break every
+/// cost-per-throughput comparison) and bigger silicon always rents for
+/// more.
+fn default_price_per_hour(soc: &SocSpec) -> f64 {
+    0.025 * soc.aggregate_peak_gflops()
 }
 
 impl Board {
     /// A board executed in virtual time (capacity planning).
     pub fn sim(name: &str, soc: SocSpec) -> Board {
+        soc.validate_ladders().expect("board descriptor has a malformed OPP ladder");
         let sched = ScheduleSpec::ca_das();
+        let price_per_hour = default_price_per_hour(&soc);
         Board {
             name: name.to_string(),
             sched,
             backend: crate::coordinator::Backend::Sim(sched),
             weight_source: WeightSource::Analytical,
+            price_per_hour,
             model: PerfModel::new(soc),
         }
     }
 
     /// A board executed by the real-thread native engine.
     pub fn native(name: &str, soc: SocSpec) -> Board {
+        soc.validate_ladders().expect("board descriptor has a malformed OPP ladder");
         let sched = ScheduleSpec::ca_das();
+        let price_per_hour = default_price_per_hour(&soc);
         Board {
             name: name.to_string(),
             sched,
             backend: crate::coordinator::Backend::Native(sched),
             weight_source: WeightSource::Analytical,
+            price_per_hour,
             model: PerfModel::new(soc),
         }
     }
@@ -105,6 +127,16 @@ impl Board {
     /// Replace the board's weight source (builder style).
     pub fn with_weight_source(mut self, source: WeightSource) -> Board {
         self.weight_source = source;
+        self
+    }
+
+    /// Replace the board's rental price (builder style).
+    pub fn with_price(mut self, price_per_hour: f64) -> Board {
+        assert!(
+            price_per_hour.is_finite() && price_per_hour > 0.0,
+            "board price must be positive and finite, got {price_per_hour}"
+        );
+        self.price_per_hour = price_per_hour;
         self
     }
 
@@ -133,7 +165,10 @@ impl Board {
             // through `sim::simulate_fleet_dvfs`).
             let plan = gov.plan(board.soc(), 0.0);
             let soc = plan.soc_at(board.soc(), 0.0);
-            return Ok(Board::sim(token, soc));
+            // Same silicon rents for the same price whatever rung it is
+            // pinned at — the rate card prices hardware, not settings.
+            let price = board.price_per_hour;
+            return Ok(Board::sim(token, soc).with_price(price));
         }
         let soc = match token {
             "exynos5422" | "exynos" => SocSpec::exynos5422(),
@@ -158,7 +193,19 @@ impl Board {
                 }
             },
         };
-        Ok(Board::sim(token, soc))
+        // List prices of the rate card, $/hour. Deliberately *not*
+        // proportional to throughput: the big Exynos is the best value,
+        // the Juno rents at a premium for its modest rate, the little
+        // symmetric boards are cheap top-up capacity — the spread that
+        // makes cost-aware scaling decisions non-trivial.
+        let price = match token {
+            "exynos5422" | "exynos" => 0.30,
+            "juno_r0" | "juno" => 0.28,
+            "dynamiq_3c" | "dynamiq" => 0.26,
+            "pe_hybrid" => 0.48,
+            _ => default_price_per_hour(&soc), // symmetric<N>
+        };
+        Ok(Board::sim(token, soc).with_price(price))
     }
 
     pub fn soc(&self) -> &SocSpec {
@@ -328,6 +375,13 @@ impl Fleet {
         self.boards.iter().map(Board::throughput_gflops).sum()
     }
 
+    /// Provisioned cost rate of the fleet, $/hour: what this rack rents
+    /// for whether or not it is busy — the denominator of every
+    /// cost-vs-SLO trade the autoscaler makes.
+    pub fn price_per_hour(&self) -> f64 {
+        self.boards.iter().map(|b| b.price_per_hour).sum()
+    }
+
     /// Mixed-shape shard plan: split every same-shape subgroup of one
     /// dispatch wave across the boards independently, under a static
     /// strategy. Each subgroup's shards sum to its item count (the
@@ -442,6 +496,34 @@ mod tests {
         let shards = f.static_shards(100, FleetStrategy::Sas);
         assert_eq!(shards.iter().sum::<usize>(), 100);
         assert!(shards[0] > shards[1], "{shards:?}");
+    }
+
+    /// ISSUE 8: every board rents for a positive $/hour — presets at
+    /// their list price, `@governor` pins at the silicon's price, raw
+    /// descriptors at the peak-proportional default — and the fleet's
+    /// cost rate is the sum.
+    #[test]
+    fn boards_carry_list_prices() {
+        let ex = Board::from_preset("exynos5422").unwrap();
+        assert_eq!(ex.price_per_hour, 0.30);
+        let pinned = Board::from_preset("exynos5422@powersave").unwrap();
+        assert_eq!(pinned.price_per_hour, 0.30, "same silicon, same rent");
+        let sym = Board::from_preset("symmetric2").unwrap();
+        assert!(
+            sym.price_per_hour > 0.0 && sym.price_per_hour < ex.price_per_hour,
+            "symmetric2 is the cheap top-up template: ${}/h",
+            sym.price_per_hour
+        );
+        assert!(Board::sim("raw", crate::soc::SocSpec::juno_r0()).price_per_hour > 0.0);
+        let f = Fleet::parse("exynos5422,juno_r0").unwrap();
+        assert!((f.price_per_hour() - 0.58).abs() < 1e-12, "{}", f.price_per_hour());
+        assert_eq!(ex.clone().with_price(1.25).price_per_hour, 1.25);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive and finite")]
+    fn non_finite_price_rejected() {
+        let _ = Board::from_preset("exynos5422").unwrap().with_price(f64::NAN);
     }
 
     #[test]

@@ -40,7 +40,7 @@
 
 use crate::blis::gemm::GemmShape;
 use crate::coordinator::Batcher;
-use crate::dvfs::DvfsSchedule;
+use crate::dvfs::{DvfsSchedule, Governor, LoadSignal, Ondemand};
 use crate::energy::PowerModel;
 use crate::fleet::{Fleet, FleetStrategy, DISPATCH_S};
 use crate::obs::{Histogram, MetricsRegistry, NullSink, TraceEvent, TraceSink};
@@ -428,6 +428,68 @@ pub fn simulate_fleet_dvfs_cached(
     }
 }
 
+/// Closed-loop fleet DVFS planning (ISSUE 8): iterate the replay and
+/// the governor's feedback law to a fixed point. Round 0 gives every
+/// board the open-loop [`Ondemand`] ramp; each subsequent round replays
+/// the batch under the current plans, samples each board's busy window
+/// into a per-period [`LoadSignal`] (saturated until the board's own
+/// finish, idle after), and re-plans via
+/// [`Governor::plan_closed_loop`]. Boards that finish before the fleet
+/// makespan therefore step back to the bottom rung for their idle tail
+/// — cheaper idle rails at equal makespan — while the critical board's
+/// ramp is untouched. Converges in ≤ 4 rounds (typically 2: the
+/// replay's board finishes don't move once the tail plans change,
+/// because item pricing only reads the OPP at dispatch instants inside
+/// the busy window).
+pub fn plan_fleet_dvfs_load_driven(
+    fleet: &Fleet,
+    strategy: FleetStrategy,
+    shape: GemmShape,
+    batch: usize,
+    gov: &Ondemand,
+    cache: &mut RunCache,
+) -> Vec<DvfsSchedule> {
+    let mut plans: Vec<DvfsSchedule> =
+        fleet.boards.iter().map(|b| gov.plan(b.soc(), 1e3)).collect();
+    for _ in 0..4 {
+        let st = simulate_fleet_dvfs_cached(fleet, strategy, shape, batch, &plans, cache);
+        let next: Vec<DvfsSchedule> = fleet
+            .boards
+            .iter()
+            .zip(&st.boards)
+            .map(|(board, bs)| {
+                let clusters = board.soc().num_clusters();
+                let sig =
+                    LoadSignal::from_busy_until(gov.period_s, &vec![bs.finish_s; clusters]);
+                gov.plan_closed_loop(board.soc(), &sig)
+            })
+            .collect();
+        if next == plans {
+            break;
+        }
+        plans = next;
+    }
+    plans
+}
+
+/// [`simulate_fleet_dvfs`] under load-driven closed-loop plans: plans
+/// come from [`plan_fleet_dvfs_load_driven`]'s fixed point instead of
+/// an open-loop governor sweep. Returns the stats and the converged
+/// plans so callers (figures, the trajectory gate) can pin both.
+pub fn simulate_fleet_dvfs_load_driven(
+    fleet: &Fleet,
+    strategy: FleetStrategy,
+    shape: GemmShape,
+    batch: usize,
+    gov: &Ondemand,
+    cache: &mut RunCache,
+) -> (FleetStats, Vec<DvfsSchedule>) {
+    let plans = plan_fleet_dvfs_load_driven(fleet, strategy, shape, batch, gov, cache);
+    let mut st = simulate_fleet_dvfs_cached(fleet, strategy, shape, batch, &plans, cache);
+    st.label = format!("{} [closed loop]", st.label);
+    (st, plans)
+}
+
 /// One streamed request: a GEMM shape admitted at a virtual instant.
 /// Vector index = submission order; `arrive_s` orders *admission*, so
 /// arrival order and submission order are independent.
@@ -651,8 +713,14 @@ fn finish_stream_stats(
     for (&done, a) in completions.iter().zip(arrivals) {
         sojourn_hist.observe(done - a.arrive_s);
     }
-    let sojourn_p50_s = sojourn_hist.quantile(50.0);
-    let sojourn_p99_s = sojourn_hist.quantile(99.0);
+    // An empty stream has no sojourn distribution — report 0.0 rather
+    // than panicking in `quantile` (same convention as the ratio
+    // fields below).
+    let (sojourn_p50_s, sojourn_p99_s) = if arrivals.is_empty() {
+        (0.0, 0.0)
+    } else {
+        (sojourn_hist.quantile(50.0), sojourn_hist.quantile(99.0))
+    };
     if metrics.enabled() {
         metrics.record_histogram("sojourn_s", &sojourn_hist);
         metrics.inc("stream_completions", completions.len() as f64);
@@ -668,10 +736,13 @@ fn finish_stream_stats(
         label,
         requests: arrivals.len(),
         makespan_s: makespan,
-        gflops: total_flops / makespan / 1e9,
-        throughput_rps: arrivals.len() as f64 / makespan,
+        // Every ratio over the makespan is zero-guarded: an empty (or
+        // degenerate zero-length) stream reports 0.0 instead of NaN,
+        // which would poison downstream gates (means, trajectory rows).
+        gflops: if makespan > 0.0 { total_flops / makespan / 1e9 } else { 0.0 },
+        throughput_rps: if makespan > 0.0 { arrivals.len() as f64 / makespan } else { 0.0 },
         energy_j: boards.iter().map(|b| b.energy_j).sum(),
-        utilization: total_busy / (n as f64 * makespan),
+        utilization: if makespan > 0.0 { total_busy / (n as f64 * makespan) } else { 0.0 },
         completions,
         sojourn_p50_s,
         sojourn_p99_s,
@@ -787,7 +858,10 @@ pub fn simulate_fleet_stream_traced(
     sink: &mut dyn TraceSink,
     metrics: &mut MetricsRegistry,
 ) -> StreamStats {
-    assert!(!arrivals.is_empty(), "empty stream");
+    // An empty stream is legal: the replay loop below never starts and
+    // `finish_stream_stats` reports well-formed all-zero stats (no NaN
+    // ratios, no panicking quantiles) — pinned by the empty-arrivals
+    // test.
     let n = fleet.num_boards();
     let (hits0, misses0) = (cache.hits(), cache.misses());
     let cfgs = board_configs(fleet, cache);
@@ -983,7 +1057,8 @@ pub fn simulate_fleet_waves_cached(
     max_group: usize,
     cache: &mut RunCache,
 ) -> StreamStats {
-    assert!(!arrivals.is_empty(), "empty stream");
+    // Empty streams form zero waves and fall straight through to the
+    // all-zero stats, mirroring the streaming replay's convention.
     let n = fleet.num_boards();
     let order = admission_order(arrivals);
     let (hits0, misses0) = (cache.hits(), cache.misses());
@@ -1419,6 +1494,90 @@ mod tests {
         let slow2 = simulate_fleet(&Fleet::homogeneous(2, &slow), FleetStrategy::Das, shape, 32);
         assert!(st.throughput_rps < fast2.throughput_rps);
         assert!(st.throughput_rps > slow2.throughput_rps);
+    }
+
+    /// ISSUE 8 satellite: an empty arrival stream must yield
+    /// well-formed all-zero stats — no NaN ratios (the old
+    /// `total_busy / (n * makespan)` hole), no panicking quantiles —
+    /// in both the streaming replay and the wave comparator.
+    #[test]
+    fn empty_stream_yields_zero_stats_without_nan() {
+        for st in [
+            simulate_fleet_stream(&hetero(), &[]),
+            simulate_fleet_waves(&hetero(), FleetStrategy::Das, &[], 4),
+        ] {
+            assert_eq!(st.requests, 0);
+            assert_eq!(st.makespan_s, 0.0);
+            assert_eq!(st.gflops, 0.0);
+            assert_eq!(st.throughput_rps, 0.0);
+            assert_eq!(st.utilization, 0.0);
+            assert_eq!(st.sojourn_p50_s, 0.0);
+            assert_eq!(st.sojourn_p99_s, 0.0);
+            assert_eq!(st.mean_queue_depth, 0.0);
+            assert_eq!(st.max_queue_depth, 0);
+            assert!(st.energy_j == 0.0, "no makespan, no idle-rail charge");
+            for b in &st.boards {
+                assert_eq!(b.items, 0);
+                assert_eq!(b.utilization, 0.0);
+                assert!(b.energy_j == 0.0);
+            }
+        }
+    }
+
+    /// ISSUE 8 tentpole (fleet layer): the load-driven closed loop
+    /// converges to plans that down-step early-finishing boards for
+    /// their idle tail — strictly less energy than the open-loop
+    /// time-ramp at (near-)equal makespan — and is deterministic.
+    #[test]
+    fn fleet_closed_loop_saves_idle_tail_energy() {
+        let fleet = skewed(); // asymmetric pair → a real idle tail
+        let shape = GemmShape::square(1024);
+        let batch = 24;
+        let gov = Ondemand::new(0.25);
+        let mut cache = RunCache::new();
+        let open: Vec<DvfsSchedule> =
+            fleet.boards.iter().map(|b| gov.plan(b.soc(), 1e3)).collect();
+        let open_st =
+            simulate_fleet_dvfs_cached(&fleet, FleetStrategy::Sss, shape, batch, &open, &mut cache);
+        let (closed_st, plans) = simulate_fleet_dvfs_load_driven(
+            &fleet,
+            FleetStrategy::Sss,
+            shape,
+            batch,
+            &gov,
+            &mut cache,
+        );
+        // The fast board finishes early under the oblivious equal split;
+        // its converged plan must step back to the bottom rung.
+        assert!(
+            plans.iter().any(|p| p.transitions.iter().any(|t| t.opp == 0 && t.t_s > 0.0)),
+            "no down-step in converged plans: {plans:?}"
+        );
+        let drift = (closed_st.makespan_s / open_st.makespan_s - 1.0).abs();
+        assert!(
+            drift < 0.01,
+            "closed loop must hold the makespan: {:.4}s vs {:.4}s",
+            closed_st.makespan_s,
+            open_st.makespan_s
+        );
+        assert!(
+            closed_st.energy_j < open_st.energy_j,
+            "idle tail at the bottom rung must be cheaper: {:.1} J vs {:.1} J",
+            closed_st.energy_j,
+            open_st.energy_j
+        );
+        // Deterministic: the fixed point and its stats replay bit for bit.
+        let (again, plans2) = simulate_fleet_dvfs_load_driven(
+            &fleet,
+            FleetStrategy::Sss,
+            shape,
+            batch,
+            &gov,
+            &mut RunCache::new(),
+        );
+        assert_eq!(plans, plans2);
+        assert_eq!(closed_st.makespan_s, again.makespan_s);
+        assert_eq!(closed_st.energy_j, again.energy_j);
     }
 
     /// ISSUE 4 degeneracy anchor (sim layer): an all-at-t=0

@@ -22,7 +22,10 @@
 //!   per-cluster throughputs and the `sched::Weights` vector at every
 //!   transition, so SAS repartitions *online* instead of keeping stale
 //!   boot-time weights (the first place the weight vector is a function
-//!   of time);
+//!   of time); `Governor::plan_closed_loop` consumes measured
+//!   `LoadSignal`s (per-period cluster utilization) so the ondemand
+//!   ramp reacts to the workload instead of the clock — saturating
+//!   load degenerates to the open-loop ramp bit for bit;
 //! * [`cache`], [`model`], [`energy`], [`sim`] — the simulated AMP
 //!   substrate (cache simulator, calibrated per-cluster performance and
 //!   power models, discrete-event engine); `sim::engine` is its
@@ -51,7 +54,10 @@
 //!   (`simulate_fleet`), arrival-driven streaming
 //!   (`simulate_fleet_stream`, idle-tail/queue-depth/utilization
 //!   accounting) and the synchronous wave comparator, for capacity
-//!   planning and streaming-vs-wave studies;
+//!   planning and streaming-vs-wave studies; `fleet::autoscale` closes
+//!   the provisioning loop — $/hour-priced boards grown, shrunk and
+//!   downgraded against a p99-sojourn `SloPolicy` (DESIGN.md §11,
+//!   `amp-gemm autoscale`);
 //! * [`obs`] — the **observability layer** (DESIGN.md §6): a
 //!   `MetricsRegistry` of counters/gauges/mergeable log-linear
 //!   histograms threaded through the run cache, fleet streams, DVFS

@@ -19,6 +19,9 @@
 //!   under fleet-SSS/SAS/DAS (`--report` regenerates the full
 //!   fleet-scaling report; `--stream` replays a Poisson-like arrival
 //!   stream through the streaming dispatcher vs the wave modes);
+//! * `autoscale [--quick] [--out DIR]` — SLO autoscaling report: the
+//!   pinned Poisson rate sweep (elastic fleets vs the peak-sized static
+//!   fleet) plus the closed-loop vs open-loop ondemand energy tables;
 //! * `dvfs     [--governor G] [--size R] [--sched S]` — replay a DVFS
 //!   schedule, comparing online weight retuning against stale boot
 //!   weights (`--report` regenerates the OPP Pareto report;
@@ -65,6 +68,7 @@ fn main() {
         "trajectory" => cmd_trajectory(&args),
         "serve" => cmd_serve(&args),
         "fleet" => cmd_fleet(&args),
+        "autoscale" => cmd_autoscale(&args),
         "dvfs" => cmd_dvfs(&args),
         "trace" => cmd_trace(&args),
         "metrics" => cmd_metrics(&args),
@@ -85,7 +89,7 @@ fn print_help() {
         "amp-gemm — architecture-aware GEMM scheduling on asymmetric multicores
 (reproduction of Catalán et al. 2015; see DESIGN.md)
 
-USAGE: amp-gemm <figures|search|gemm|calibrate|trajectory|serve|fleet|dvfs|trace|metrics|soc> [options]
+USAGE: amp-gemm <figures|search|gemm|calibrate|trajectory|serve|fleet|autoscale|dvfs|trace|metrics|soc> [options]
 
   figures   [--fig N] [--quick] [--out results]   regenerate paper figures
   ablation  [--out results]                        §6 future-work ablations
@@ -102,6 +106,8 @@ USAGE: amp-gemm <figures|search|gemm|calibrate|trajectory|serve|fleet|dvfs|trace
   fleet     --report [--quick] [--out results]      fixed-fleet scaling report
   fleet     --stream [--boards ...] [--sizes R1,R2,...] [--requests N]
             [--rate RPS] [--seed S]                 streaming-vs-wave sweep
+  autoscale [--quick] [--out results]               SLO rate-sweep report:
+            elastic fleets vs peak static, closed-loop governor energy
   dvfs      [--governor performance|powersave|ondemand[:ms]] [--size R]
             [--sched sas|casas|das|cadas] [--ladder] [--tune-opps]
             [--weights analytical|empirical|hybrid]
@@ -619,6 +625,22 @@ fn cmd_fleet_stream(args: &Args) -> Result<(), String> {
         ]);
     }
     println!("{}", boards.to_markdown());
+    Ok(())
+}
+
+/// `amp-gemm autoscale` (ISSUE 8): regenerate the SLO autoscaling +
+/// closed-loop governor report — the pinned Poisson rate sweep past
+/// saturation (elastic vs peak-sized static provisioning) and the
+/// load-driven vs time-ramp ondemand energy comparison.
+fn cmd_autoscale(args: &Args) -> Result<(), String> {
+    let fig = figures::autoscale::run(args.flag("quick"));
+    println!("{}", fig.to_markdown());
+    let out = Path::new(args.get_or("out", "results"));
+    let paths = fig.write_csvs(out).map_err(|e| e.to_string())?;
+    println!("wrote {} CSVs under {}", paths.len(), out.display());
+    if !fig.passed() {
+        return Err("autoscale report assertions failed".into());
+    }
     Ok(())
 }
 

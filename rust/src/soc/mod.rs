@@ -796,6 +796,53 @@ impl SocSpec {
     pub fn aggregate_peak_gflops(&self) -> f64 {
         self.clusters.iter().map(ClusterSpec::peak_gflops).sum()
     }
+
+    /// Re-check every cluster's OPP ladder invariants on a whole
+    /// descriptor: non-empty, strictly ascending frequency with
+    /// non-decreasing voltage, positive finite points, derivation rung
+    /// in range. [`OppTable::new`] enforces all of this for tables it
+    /// builds, but governors index `opps.len() - 1` and trust
+    /// `current_idx` unconditionally — so descriptors are re-validated
+    /// in one place where they *enter* the system (board construction,
+    /// governor planning) rather than deep inside a plan (ISSUE 8).
+    pub fn validate_ladders(&self) -> Result<(), String> {
+        for c in &self.clusters {
+            let ladder = &c.opps;
+            if ladder.is_empty() {
+                return Err(format!("{}: cluster '{}' has an empty OPP ladder", self.name, c.name));
+            }
+            if ladder.current_idx() >= ladder.len() {
+                return Err(format!(
+                    "{}: cluster '{}' derived at rung {} of a {}-point ladder",
+                    self.name,
+                    c.name,
+                    ladder.current_idx(),
+                    ladder.len()
+                ));
+            }
+            for (i, p) in ladder.points().iter().enumerate() {
+                if !(p.freq_ghz.is_finite() && p.freq_ghz > 0.0 && p.volt_v.is_finite() && p.volt_v > 0.0)
+                {
+                    return Err(format!(
+                        "{}: cluster '{}' OPP {i} is not positive finite ({} GHz, {} V)",
+                        self.name, c.name, p.freq_ghz, p.volt_v
+                    ));
+                }
+            }
+            for (i, w) in ladder.points().windows(2).enumerate() {
+                if !(w[0].freq_ghz < w[1].freq_ghz && w[0].volt_v <= w[1].volt_v) {
+                    return Err(format!(
+                        "{}: cluster '{}' OPP ladder must ascend at rung {}..{}",
+                        self.name,
+                        c.name,
+                        i,
+                        i + 1
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -891,6 +938,42 @@ mod tests {
             c.tuned.validate();
             c.l2.validate();
         }
+    }
+
+    /// ISSUE 8 satellite: whole-descriptor ladder validation — every
+    /// preset passes, single-point ladders are legal (no DVFS), and
+    /// forged degenerate ladders are reported instead of underflowing
+    /// in a governor's `len() - 1` arithmetic later.
+    #[test]
+    fn validate_ladders_accepts_presets_and_rejects_forgeries() {
+        for soc in [
+            SocSpec::exynos5422(),
+            SocSpec::juno_r0(),
+            SocSpec::dynamiq_3c(),
+            SocSpec::pe_hybrid(),
+            SocSpec::symmetric(4),
+        ] {
+            soc.validate_ladders().unwrap_or_else(|e| panic!("{}: {e}", soc.name));
+        }
+        let mut single = SocSpec::symmetric(2);
+        for c in &mut single.clusters {
+            c.opps = OppTable::single(c.core.freq_ghz);
+        }
+        single.validate_ladders().unwrap();
+        // Forgeries (same-module field access; external code cannot
+        // build these through `OppTable`'s constructors).
+        let mut empty = SocSpec::exynos5422();
+        empty.clusters[0].opps.points.clear();
+        let err = empty.validate_ladders().unwrap_err();
+        assert!(err.contains("empty OPP ladder"), "{err}");
+        let mut descending = SocSpec::exynos5422();
+        descending.clusters[1].opps.points.reverse();
+        let err = descending.validate_ladders().unwrap_err();
+        assert!(err.contains("must ascend"), "{err}");
+        let mut out_of_range = SocSpec::exynos5422();
+        out_of_range.clusters[0].opps.cur = 99;
+        let err = out_of_range.validate_ladders().unwrap_err();
+        assert!(err.contains("derived at rung"), "{err}");
     }
 
     #[test]
