@@ -1,0 +1,648 @@
+//! Online calibration while serving (ISSUE 9): learn per-cluster
+//! service rates from the chunks the fleet is *already* executing,
+//! instead of (or on top of) the offline §3.4 probe protocol of
+//! [`RateTable::measure`].
+//!
+//! A [`LiveRateTable`] accumulates an exponentially-weighted moving
+//! average of observed rates per `(cluster, rung, family, ShapeClass)`
+//! cell. Every completed chunk reports `(flops, service_s)` for the
+//! cluster that ran it; the observation is the aggregate GFLOPS that
+//! completion implies. Cells carry sample counts, and a consumer-chosen
+//! confidence threshold (`min_samples`) gates when a cell's learned
+//! rate replaces the analytical fallback — so a cold table behaves
+//! exactly like [`WeightSource::Analytical`], bit for bit, and warms
+//! cell by cell.
+//!
+//! Determinism contract: the table is a pure fold over the observation
+//! sequence (no wall clock, no randomness — the decay is per *event*,
+//! `0.5^(1/half_life_events)`), so a replay that feeds the same
+//! completions in the same order reproduces the same table, and a
+//! frozen [`LiveRateTable::snapshot`] replays bit for bit through the
+//! ordinary [`WeightSource::Empirical`] path (DESIGN.md §5, "Live
+//! calibration").
+
+use std::collections::BTreeMap;
+
+use crate::blis::gemm::GemmShape;
+use crate::calibrate::{Family, RateTable, ShapeClass, WeightSource};
+use crate::model::PerfModel;
+use crate::obs::MetricsRegistry;
+use crate::soc::{ClusterId, SocSpec};
+
+/// One learned cell: the EWMA numerator/denominator pair plus how many
+/// accepted observations fed it. `rate = num / den`; `den` is the decayed
+/// event mass, so a cell observed once reports exactly that observation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LiveCell {
+    num: f64,
+    den: f64,
+    samples: u64,
+}
+
+impl LiveCell {
+    pub fn rate(&self) -> f64 {
+        self.num / self.den
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+}
+
+/// Cell key in deterministic iteration order: `(cluster, rung, family,
+/// class)` — the same coordinates a [`RateTable`] row is addressed by.
+pub type LiveKey = (usize, usize, Family, ShapeClass);
+
+/// Exponentially-weighted per-cell observed service rates, learned from
+/// completions on the serving path (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LiveRateTable {
+    /// Descriptor name the observations came from (labeling only).
+    pub soc: String,
+    pub num_clusters: usize,
+    /// The boot lead cluster's tuned `kc` the table classifies shapes
+    /// against — pinned at construction so live observations and
+    /// offline [`RateTable::measure`] rows can never class the same
+    /// shape differently (the ISSUE 9 boundary-audit satellite).
+    pub kc_ref: usize,
+    /// EWMA half-life in *events*: after this many accepted
+    /// observations an old observation's weight has halved.
+    pub half_life_events: f64,
+    accepted: u64,
+    rejected: u64,
+    cells: BTreeMap<LiveKey, LiveCell>,
+}
+
+impl LiveRateTable {
+    /// An empty table for a descriptor. Panics on a non-finite or
+    /// non-positive half-life — a decay factor outside `(0, 1)` would
+    /// let one observation dominate forever or diverge the EWMA.
+    pub fn new(soc: &SocSpec, half_life_events: f64) -> LiveRateTable {
+        assert!(
+            half_life_events.is_finite() && half_life_events > 0.0,
+            "EWMA half-life must be positive and finite, got {half_life_events}"
+        );
+        LiveRateTable {
+            soc: soc.name.clone(),
+            num_clusters: soc.num_clusters(),
+            kc_ref: soc[soc.lead()].tuned.kc,
+            half_life_events,
+            accepted: 0,
+            rejected: 0,
+            cells: BTreeMap::new(),
+        }
+    }
+
+    /// Per-event decay factor, strictly inside `(0, 1)`.
+    fn decay(&self) -> f64 {
+        0.5f64.powf(1.0 / self.half_life_events)
+    }
+
+    /// Classify a shape against the table's pinned reference depth —
+    /// the *same* `ShapeClass::of` call the offline measurement path
+    /// makes, so a `k == kc` shape lands in the same class either way.
+    pub fn classify(&self, shape: GemmShape) -> ShapeClass {
+        ShapeClass::of(shape, self.kc_ref)
+    }
+
+    /// Feed one completed chunk: `flops` useful flops retired by
+    /// `cluster` (running ladder rung `opp` under `family` parameters)
+    /// in `service_s` seconds of service. Returns whether the
+    /// observation was accepted. Non-finite or non-positive inputs —
+    /// a zero-duration completion from a degenerate shape would imply
+    /// an infinite rate — are *counted* (`rejected`, surfaced as an
+    /// `obs` metric by [`LiveRateTable::export_metrics`]) and dropped
+    /// without touching the EWMA.
+    pub fn observe(
+        &mut self,
+        cluster: ClusterId,
+        opp: usize,
+        family: Family,
+        shape: GemmShape,
+        flops: f64,
+        service_s: f64,
+    ) -> bool {
+        self.observe_weighted(cluster, opp, family, shape, flops, service_s, 1)
+    }
+
+    /// [`LiveRateTable::observe`] applied `multiplicity` times — the
+    /// batched form a multi-item grab reports. Implemented as the
+    /// literal repeated single-event update, so it is bit-for-bit the
+    /// same fold as `multiplicity` sequential `observe` calls (the
+    /// determinism contract is stated over the *event sequence*).
+    #[allow(clippy::too_many_arguments)]
+    pub fn observe_weighted(
+        &mut self,
+        cluster: ClusterId,
+        opp: usize,
+        family: Family,
+        shape: GemmShape,
+        flops: f64,
+        service_s: f64,
+        multiplicity: u64,
+    ) -> bool {
+        assert!(
+            cluster.0 < self.num_clusters,
+            "observation names cluster {cluster} but the table covers {} clusters",
+            self.num_clusters
+        );
+        if multiplicity == 0 {
+            return false;
+        }
+        if !(flops.is_finite() && flops > 0.0 && service_s.is_finite() && service_s > 0.0) {
+            self.rejected += multiplicity;
+            return false;
+        }
+        let x = flops / service_s / 1e9;
+        let d = self.decay();
+        let class = self.classify(shape);
+        let cell = self
+            .cells
+            .entry((cluster.0, opp, family, class))
+            .or_insert(LiveCell { num: 0.0, den: 0.0, samples: 0 });
+        for _ in 0..multiplicity {
+            cell.num = cell.num * d + x;
+            cell.den = cell.den * d + 1.0;
+        }
+        cell.samples += multiplicity;
+        self.accepted += multiplicity;
+        true
+    }
+
+    /// The learned rate of one cell (GFLOPS), if it has ever been fed.
+    pub fn rate(&self, cluster: ClusterId, opp: usize, family: Family, class: ShapeClass) -> Option<f64> {
+        self.cells.get(&(cluster.0, opp, family, class)).map(LiveCell::rate)
+    }
+
+    /// Accepted observations of one cell (0 if the cell is cold).
+    pub fn samples(&self, cluster: ClusterId, opp: usize, family: Family, class: ShapeClass) -> u64 {
+        self.cells
+            .get(&(cluster.0, opp, family, class))
+            .map_or(0, LiveCell::samples)
+    }
+
+    /// Confidence gate: the cell exists and has at least `min_samples`
+    /// accepted observations. Below the gate consumers fall back to
+    /// the analytical rate for that cell.
+    pub fn confident(
+        &self,
+        cluster: ClusterId,
+        opp: usize,
+        family: Family,
+        class: ShapeClass,
+        min_samples: u64,
+    ) -> bool {
+        self.cells
+            .get(&(cluster.0, opp, family, class))
+            .is_some_and(|c| c.samples >= min_samples)
+    }
+
+    /// Total accepted observations across every cell.
+    pub fn accepted(&self) -> u64 {
+        self.accepted
+    }
+
+    /// Observations rejected at the [`LiveRateTable::observe`] gate
+    /// (non-finite / non-positive flops or service time).
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// Number of cells that have received at least one observation.
+    pub fn num_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Deterministic iteration over every learned cell.
+    pub fn cells(&self) -> impl Iterator<Item = (&LiveKey, &LiveCell)> {
+        self.cells.iter()
+    }
+
+    /// Whether every learned cell has crossed the confidence gate (and
+    /// at least one cell exists) — the "warmed up" predicate the fleet
+    /// stream timestamps ([`crate::fleet::sim::simulate_fleet_stream_live`]).
+    pub fn warmed_up(&self, min_samples: u64) -> bool {
+        !self.cells.is_empty() && self.cells.values().all(|c| c.samples >= min_samples)
+    }
+
+    /// Per-cluster rates at an OPP vector with the per-cell analytical
+    /// fallback applied: a confident cell contributes its learned rate,
+    /// a cold cell the model's `cluster_rate_gflops` under the family's
+    /// parameters — exactly the per-cluster values
+    /// `PerfModel::auto_weights` is built from, so a fully cold table
+    /// reproduces [`WeightSource::Analytical`] bit for bit.
+    pub fn cluster_rates_or_analytical(
+        &self,
+        model: &PerfModel,
+        opps: &[usize],
+        cache_aware: bool,
+        class: ShapeClass,
+        min_samples: u64,
+    ) -> Vec<f64> {
+        assert_eq!(
+            opps.len(),
+            self.num_clusters,
+            "OPP vector has {} entries but the live table covers {} clusters",
+            opps.len(),
+            self.num_clusters
+        );
+        let params = model.family_params(cache_aware);
+        let family = Family::of(cache_aware);
+        model
+            .soc
+            .cluster_ids()
+            .map(|c| {
+                if self.confident(c, opps[c.0], family, class, min_samples) {
+                    self.rate(c, opps[c.0], family, class).expect("confident cell has a rate")
+                } else {
+                    model.cluster_rate_gflops(c, &params[c.0], model.soc[c].num_cores)
+                }
+            })
+            .collect()
+    }
+
+    /// Freeze the table into an ordinary [`RateTable`]: the analytical
+    /// synthesis of `soc` ([`RateTable::from_analytical`]) with every
+    /// *confident* live cell overwriting its analytical value. The
+    /// snapshot replays through [`WeightSource::Empirical`] bit for bit
+    /// — the determinism contract replays are stated in.
+    pub fn snapshot(&self, soc: &SocSpec, min_samples: u64) -> RateTable {
+        assert_eq!(
+            soc.num_clusters(),
+            self.num_clusters,
+            "snapshot descriptor has {} clusters but the live table covers {}",
+            soc.num_clusters(),
+            self.num_clusters
+        );
+        let mut table = RateTable::from_analytical(soc);
+        for row in &mut table.rows {
+            for class in ShapeClass::ALL {
+                if self.confident(row.cluster, row.opp, row.family, class, min_samples) {
+                    row.rates[class.idx()] = self
+                        .rate(row.cluster, row.opp, row.family, class)
+                        .expect("confident cell has a rate");
+                }
+            }
+        }
+        table
+    }
+
+    /// Line-oriented TSV with an exact text round-trip (the live
+    /// sibling of [`RateTable::to_text`]):
+    ///
+    /// ```text
+    /// #live\t<soc>\t<clusters>\t<kc_ref>\t<half_life>\t<accepted>\t<rejected>
+    /// <cluster>\t<opp>\t<family>\t<class>\t<num>\t<den>\t<samples>
+    /// ```
+    pub fn to_text(&self) -> String {
+        let mut out = format!(
+            "#live\t{}\t{}\t{}\t{}\t{}\t{}\n",
+            self.soc, self.num_clusters, self.kc_ref, self.half_life_events, self.accepted, self.rejected
+        );
+        for ((cluster, opp, family, class), cell) in &self.cells {
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+                cluster,
+                opp,
+                family.label(),
+                class.label(),
+                cell.num,
+                cell.den,
+                cell.samples
+            ));
+        }
+        out
+    }
+
+    pub fn parse_text(s: &str) -> Result<LiveRateTable, String> {
+        let mut lines = s.lines();
+        let header = lines.next().ok_or("empty live rate table")?;
+        let h: Vec<&str> = header.split('\t').collect();
+        if h.len() != 7 || h[0] != "#live" {
+            return Err(format!("bad live header '{header}'"));
+        }
+        let num_clusters: usize =
+            h[2].parse().map_err(|_| format!("bad cluster count '{}'", h[2]))?;
+        if num_clusters == 0 {
+            return Err("live rate table needs at least one cluster".into());
+        }
+        let kc_ref: usize = h[3].parse().map_err(|_| format!("bad kc_ref '{}'", h[3]))?;
+        if kc_ref == 0 {
+            return Err("live rate table needs kc_ref >= 1".into());
+        }
+        let half_life_events = crate::util::parse_positive_f64(h[4], "half-life")?;
+        let accepted: u64 = h[5].parse().map_err(|_| format!("bad accepted count '{}'", h[5]))?;
+        let rejected: u64 = h[6].parse().map_err(|_| format!("bad rejected count '{}'", h[6]))?;
+        let mut cells = BTreeMap::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split('\t').collect();
+            if f.len() != 7 {
+                return Err(format!("bad live row '{line}'"));
+            }
+            let cluster: usize = f[0].parse().map_err(|_| format!("bad cluster '{}'", f[0]))?;
+            if cluster >= num_clusters {
+                return Err(format!(
+                    "row names cluster {cluster} but the header declares {num_clusters}"
+                ));
+            }
+            let opp: usize = f[1].parse().map_err(|_| format!("bad opp '{}'", f[1]))?;
+            let family = Family::parse(f[2])?;
+            let class = ShapeClass::parse(f[3])?;
+            let num = crate::util::parse_positive_f64(f[4], "num")?;
+            let den = crate::util::parse_positive_f64(f[5], "den")?;
+            let samples: u64 = f[6].parse().map_err(|_| format!("bad sample count '{}'", f[6]))?;
+            if samples == 0 {
+                return Err(format!("live row '{line}' carries zero samples"));
+            }
+            if cells.insert((cluster, opp, family, class), LiveCell { num, den, samples }).is_some()
+            {
+                return Err(format!("duplicate live cell in row '{line}'"));
+            }
+        }
+        Ok(LiveRateTable {
+            soc: h[1].to_string(),
+            num_clusters,
+            kc_ref,
+            half_life_events,
+            accepted,
+            rejected,
+            cells,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_text())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<LiveRateTable, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        LiveRateTable::parse_text(&text)
+    }
+
+    /// Mirror the table into a [`MetricsRegistry`]: per-cell sample
+    /// counts as gauges (`<prefix>_samples_c<c>_o<opp>_<family>_<class>`)
+    /// plus the accepted/rejected totals — gauges throughout, so
+    /// re-exporting after more observations is idempotent-by-overwrite.
+    /// No-op on a disabled registry (the zero-overhead contract).
+    pub fn export_metrics(&self, metrics: &mut MetricsRegistry, prefix: &str) {
+        if !metrics.enabled() {
+            return;
+        }
+        metrics.set_gauge(&format!("{prefix}_accepted"), self.accepted as f64);
+        metrics.set_gauge(&format!("{prefix}_rejected"), self.rejected as f64);
+        metrics.set_gauge(&format!("{prefix}_cells"), self.cells.len() as f64);
+        for ((cluster, opp, family, class), cell) in &self.cells {
+            metrics.set_gauge(
+                &format!(
+                    "{prefix}_samples_c{cluster}_o{opp}_{}_{}",
+                    family.label(),
+                    class.label()
+                ),
+                cell.samples as f64,
+            );
+        }
+    }
+}
+
+/// Build the live weight source over a table — sugar for the common
+/// construction site.
+pub fn live_source(table: LiveRateTable, min_samples: u64) -> WeightSource {
+    WeightSource::Live { table, min_samples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::BIG;
+
+    fn soc() -> SocSpec {
+        SocSpec::exynos5422()
+    }
+
+    fn table() -> LiveRateTable {
+        LiveRateTable::new(&soc(), 32.0)
+    }
+
+    #[test]
+    fn single_observation_reports_itself() {
+        let mut t = table();
+        let shape = GemmShape::square(2048);
+        assert!(t.observe(BIG, 4, Family::CacheAware, shape, 2e9, 0.5));
+        let r = t.rate(BIG, 4, Family::CacheAware, ShapeClass::Medium).unwrap();
+        // 2e9 flops in 0.5 s = 4 GFLOPS, exactly (den = 1 after one event).
+        assert_eq!(r, 4.0);
+        assert_eq!(t.samples(BIG, 4, Family::CacheAware, ShapeClass::Medium), 1);
+        assert_eq!(t.accepted(), 1);
+        assert_eq!(t.num_cells(), 1);
+    }
+
+    #[test]
+    fn ewma_weighs_recent_events_and_converges() {
+        let mut t = LiveRateTable::new(&soc(), 4.0);
+        let shape = GemmShape::square(4096);
+        for _ in 0..50 {
+            t.observe(BIG, 4, Family::CacheAware, shape, 1e9, 1.0); // 1 GFLOPS
+        }
+        let r0 = t.rate(BIG, 4, Family::CacheAware, ShapeClass::Large).unwrap();
+        assert!((r0 - 1.0).abs() < 1e-12, "{r0}");
+        // A regime change: the EWMA chases the new 3-GFLOPS level, past
+        // halfway within one half-life, within 1% after many.
+        t.observe(BIG, 4, Family::CacheAware, shape, 3e9, 1.0);
+        let r1 = t.rate(BIG, 4, Family::CacheAware, ShapeClass::Large).unwrap();
+        assert!(r1 > 1.0 && r1 < 3.0, "{r1}");
+        for _ in 0..100 {
+            t.observe(BIG, 4, Family::CacheAware, shape, 3e9, 1.0);
+        }
+        let r2 = t.rate(BIG, 4, Family::CacheAware, ShapeClass::Large).unwrap();
+        assert!((r2 - 3.0).abs() < 0.03, "{r2}");
+    }
+
+    #[test]
+    fn weighted_observation_is_the_sequential_fold() {
+        let shape = GemmShape::square(4096);
+        let mut seq = table();
+        let mut bat = table();
+        for i in 0..5u64 {
+            let flops = 1e9 + i as f64 * 1e8;
+            for _ in 0..3 {
+                seq.observe(BIG, 2, Family::Oblivious, shape, flops, 0.25);
+            }
+            bat.observe_weighted(BIG, 2, Family::Oblivious, shape, flops, 0.25, 3);
+        }
+        // Bit-for-bit: the batched form is the literal repeated update.
+        assert_eq!(seq, bat);
+        assert!(!bat.observe_weighted(BIG, 2, Family::Oblivious, shape, 1e9, 0.25, 0));
+    }
+
+    /// ISSUE 9 satellite: non-finite / non-positive observations are
+    /// rejected and *counted*, never folded into the EWMA.
+    #[test]
+    fn degenerate_observations_rejected_and_counted() {
+        let mut t = table();
+        let shape = GemmShape::square(1024);
+        for (flops, service_s) in [
+            (1e9, 0.0),            // zero-duration completion => inf rate
+            (1e9, -1.0),
+            (1e9, f64::NAN),
+            (1e9, f64::INFINITY),
+            (0.0, 0.5),
+            (-1e9, 0.5),
+            (f64::NAN, 0.5),
+            (f64::INFINITY, 0.5),
+        ] {
+            assert!(!t.observe(BIG, 4, Family::CacheAware, shape, flops, service_s));
+        }
+        assert_eq!(t.rejected(), 8);
+        assert_eq!(t.accepted(), 0);
+        assert_eq!(t.num_cells(), 0, "rejected observations must not create cells");
+        // The rejection counter reaches the registry as an obs metric.
+        let mut m = MetricsRegistry::new();
+        t.export_metrics(&mut m, "live");
+        assert_eq!(m.gauge("live_rejected"), Some(8.0));
+    }
+
+    /// ISSUE 9 satellite (boundary audit): the live path classifies
+    /// with the same pinned `kc_ref` the offline measurement uses, so
+    /// `k ∈ {kc-1, kc, kc+1}` land identically: `kc-1` is Small, `kc`
+    /// and `kc+1` are Medium (`Small` is `k < kc`, half-open).
+    #[test]
+    fn classification_matches_offline_at_the_kc_boundary() {
+        let s = soc();
+        let kc = s[s.lead()].tuned.kc;
+        let t = LiveRateTable::new(&s, 32.0);
+        assert_eq!(t.kc_ref, kc);
+        for (k, expect) in [
+            (kc - 1, ShapeClass::Small),
+            (kc, ShapeClass::Medium),
+            (kc + 1, ShapeClass::Medium),
+        ] {
+            let shape = GemmShape { m: 256, n: 256, k };
+            assert_eq!(t.classify(shape), expect, "k = {k}");
+            assert_eq!(ShapeClass::for_soc(&s, shape), expect, "offline path, k = {k}");
+        }
+    }
+
+    #[test]
+    fn snapshot_degenerates_to_analytical_when_cold() {
+        let s = soc();
+        let t = table();
+        assert_eq!(t.snapshot(&s, 1), RateTable::from_analytical(&s));
+        // One confident cell overwrites exactly that cell.
+        let mut t = table();
+        let shape = GemmShape::square(4096);
+        t.observe(BIG, 4, Family::CacheAware, shape, 5e9, 1.0);
+        let snap = t.snapshot(&s, 1);
+        assert_eq!(snap.rate(BIG, 4, Family::CacheAware, ShapeClass::Large), Some(5.0));
+        // Below the confidence gate the analytical value stays.
+        let gated = t.snapshot(&s, 2);
+        assert_eq!(gated, RateTable::from_analytical(&s));
+    }
+
+    #[test]
+    fn cold_table_reproduces_analytical_weights_bit_for_bit() {
+        let s = soc();
+        let model = PerfModel::new(s.clone());
+        let t = table();
+        for cache_aware in [false, true] {
+            let live = WeightSource::Live { table: t.clone(), min_samples: 1 }
+                .weights(&model, cache_aware, ShapeClass::Large);
+            let ana = model.auto_weights(cache_aware);
+            assert_eq!(live.as_slice(), ana.as_slice());
+        }
+        let live_tp = WeightSource::Live { table: t.clone(), min_samples: 1 }
+            .board_throughput(&model, ShapeClass::Large);
+        assert_eq!(live_tp, WeightSource::Analytical.board_throughput(&model, ShapeClass::Large));
+    }
+
+    #[test]
+    fn text_round_trip_is_exact() {
+        let s = soc();
+        let mut t = LiveRateTable::new(&s, 24.0);
+        let shapes = [GemmShape::square(512), GemmShape::square(2048), GemmShape::square(4096)];
+        for (i, shape) in shapes.iter().enumerate() {
+            for c in s.cluster_ids() {
+                t.observe_weighted(
+                    c,
+                    i,
+                    Family::CacheAware,
+                    *shape,
+                    1.23e9 + i as f64 * 0.37e9,
+                    0.17 + c.0 as f64 * 0.05,
+                    (i + 1) as u64,
+                );
+            }
+        }
+        t.observe(BIG, 0, Family::Oblivious, shapes[0], f64::NAN, 1.0); // one rejection
+        let back = LiveRateTable::parse_text(&t.to_text()).unwrap();
+        assert_eq!(back, t);
+        let dir = std::env::temp_dir().join("amp_gemm_live_table");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("live.tsv");
+        t.save(&path).unwrap();
+        assert_eq!(LiveRateTable::load(&path).unwrap(), t);
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(LiveRateTable::load(std::path::Path::new("/nonexistent/x")).is_err());
+    }
+
+    #[test]
+    fn malformed_live_tables_rejected() {
+        assert!(LiveRateTable::parse_text("").is_err());
+        assert!(LiveRateTable::parse_text("junk\n").is_err());
+        // Wrong header arity / tag / counts.
+        assert!(LiveRateTable::parse_text("#live\tsoc\t2\t952\t32\t0\n").is_err());
+        assert!(LiveRateTable::parse_text("# soc\t2\n").is_err());
+        assert!(LiveRateTable::parse_text("#live\tsoc\t0\t952\t32\t0\t0\n").is_err());
+        assert!(LiveRateTable::parse_text("#live\tsoc\t2\t0\t32\t0\t0\n").is_err());
+        assert!(LiveRateTable::parse_text("#live\tsoc\t2\t952\tNaN\t0\t0\n").is_err());
+        assert!(LiveRateTable::parse_text("#live\tsoc\t2\t952\t-1\t0\t0\n").is_err());
+        assert!(LiveRateTable::parse_text("#live\tsoc\t2\t952\t32\tx\t0\n").is_err());
+        let head = "#live\tsoc\t2\t952\t32\t3\t0\n";
+        let ok = format!("{head}0\t4\tca\tmedium\t1.5\t1\t3\n");
+        assert!(LiveRateTable::parse_text(&ok).is_ok());
+        // Row arity, vocabulary, range, non-finite fields, zero
+        // samples, duplicate cells.
+        for row in [
+            "0\t4\tca\tmedium\t1.5\t1\n",
+            "0\t4\twarp\tmedium\t1.5\t1\t3\n",
+            "0\t4\tca\thuge\t1.5\t1\t3\n",
+            "7\t4\tca\tmedium\t1.5\t1\t3\n",
+            "0\t4\tca\tmedium\tNaN\t1\t3\n",
+            "0\t4\tca\tmedium\t1.5\tinf\t3\n",
+            "0\t4\tca\tmedium\t-1.5\t1\t3\n",
+            "0\t4\tca\tmedium\t1.5\t1\t0\n",
+            "0\t4\tca\tmedium\t1.5\t1\t3\n0\t4\tca\tmedium\t1.5\t1\t3\n",
+        ] {
+            assert!(
+                LiveRateTable::parse_text(&format!("{head}{row}")).is_err(),
+                "row '{row}' must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "half-life must be positive")]
+    fn non_positive_half_life_rejected() {
+        let _ = LiveRateTable::new(&soc(), 0.0);
+    }
+
+    #[test]
+    fn sample_count_gauges_reach_the_registry() {
+        let mut t = table();
+        t.observe_weighted(BIG, 4, Family::CacheAware, GemmShape::square(4096), 1e9, 1.0, 7);
+        let mut m = MetricsRegistry::new();
+        t.export_metrics(&mut m, "live");
+        assert_eq!(m.gauge("live_samples_c0_o4_ca_large"), Some(7.0));
+        assert_eq!(m.gauge("live_accepted"), Some(7.0));
+        assert_eq!(m.gauge("live_cells"), Some(1.0));
+        // Zero overhead when off: a disabled registry stays empty.
+        let mut off = MetricsRegistry::disabled();
+        t.export_metrics(&mut off, "live");
+        assert_eq!(off.gauge("live_accepted"), None);
+    }
+}

@@ -46,6 +46,7 @@
 //! far below the first-order packing/barrier asymmetry the analytical
 //! rates miss entirely.
 
+pub mod live;
 pub mod trajectory;
 
 use crate::blis::gemm::GemmShape;
@@ -61,7 +62,7 @@ use crate::soc::{ClusterId, SocSpec};
 /// update panels the problem offers (`eff_k` amortization, partial-tile
 /// padding), so the table keys rates by a coarse `k`-vs-`kc` class
 /// instead of pretending one number fits every shape.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum ShapeClass {
     /// `k < kc`: a single shallow pc block — overhead-bound.
     Small,
@@ -89,6 +90,15 @@ impl ShapeClass {
             ShapeClass::Medium => "medium",
             ShapeClass::Large => "large",
         }
+    }
+
+    /// Inverse of [`ShapeClass::label`] — the persisted-row vocabulary
+    /// of the live table ([`live::LiveRateTable::parse_text`]).
+    pub fn parse(s: &str) -> Result<ShapeClass, String> {
+        ShapeClass::ALL
+            .into_iter()
+            .find(|c| c.label() == s)
+            .ok_or_else(|| format!("bad shape class '{s}' (small|medium|large)"))
     }
 
     /// Classify a shape against a reference `kc` (the lead cluster's
@@ -156,7 +166,7 @@ pub fn canonical_reps() -> [GemmShape; 3] {
 
 /// Which blocking-parameter family a measured rate belongs to — the two
 /// configurations the schedulers actually run (§4 vs §5.3).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Family {
     /// Every cluster on its own tuned optimum (CA-SAS/CA-DAS).
     CacheAware,
@@ -522,6 +532,16 @@ pub enum WeightSource {
     /// share vectors: trust the measurement but hedge against a stale
     /// table.
     Hybrid(RateTable),
+    /// Rates learned online from the serving path itself
+    /// ([`live::LiveRateTable`], ISSUE 9): per cell, the learned rate
+    /// once its sample count reaches `min_samples`, the analytical
+    /// model until then — so a cold table is exactly `Analytical`, bit
+    /// for bit, and warms cell by cell as completions arrive.
+    Live {
+        table: live::LiveRateTable,
+        /// Per-cell confidence threshold (accepted observations).
+        min_samples: u64,
+    },
 }
 
 impl WeightSource {
@@ -530,6 +550,7 @@ impl WeightSource {
             WeightSource::Analytical => "analytical",
             WeightSource::Empirical(_) => "empirical",
             WeightSource::Hybrid(_) => "hybrid",
+            WeightSource::Live { .. } => "live",
         }
     }
 
@@ -549,10 +570,12 @@ impl WeightSource {
         }
     }
 
-    /// The rate table behind this source, if any.
+    /// The offline rate table behind this source, if any (`Live`
+    /// carries a [`live::LiveRateTable`] instead — freeze one with
+    /// [`live::LiveRateTable::snapshot`] to get a `RateTable`).
     pub fn table(&self) -> Option<&RateTable> {
         match self {
-            WeightSource::Analytical => None,
+            WeightSource::Analytical | WeightSource::Live { .. } => None,
             WeightSource::Empirical(t) | WeightSource::Hybrid(t) => Some(t),
         }
     }
@@ -585,6 +608,9 @@ impl WeightSource {
                     .normalized()
                     .blend(&emp.normalized(), 0.5)
             }
+            WeightSource::Live { table, min_samples } => Weights::from_slice(
+                &table.cluster_rates_or_analytical(model, opps, cache_aware, class, *min_samples),
+            ),
         }
     }
 
@@ -608,6 +634,16 @@ impl WeightSource {
             WeightSource::Analytical => analytical(),
             WeightSource::Empirical(t) => empirical(t),
             WeightSource::Hybrid(t) => 0.5 * (analytical() + empirical(t)),
+            WeightSource::Live { table, min_samples } => table
+                .cluster_rates_or_analytical(
+                    model,
+                    &current_opps(&model.soc),
+                    true,
+                    class,
+                    *min_samples,
+                )
+                .iter()
+                .sum(),
         }
     }
 }

@@ -246,6 +246,23 @@ impl Trajectory {
             Better::Lower,
         );
         t.push("autoscale_cost_ratio", auto_total / static_total, Better::Lower);
+
+        // --- Live calibration (ISSUE 9): the pinned convergence
+        //     scenario. `convergence_pct` is the learned-vs-offline
+        //     share error after the stream (floored away from zero —
+        //     perfect convergence would trip the positive-value
+        //     invariant, and anything below a millipoint is noise-free
+        //     perfection anyway); `warmup_events` is the accepted
+        //     observation count at which every learned cell first
+        //     crossed the confidence gate. Both deterministic, both
+        //     lower-is-better. ---
+        let live = crate::figures::live::convergence_summary(true);
+        t.push("live_convergence_pct", live.convergence_pct.max(1e-3), Better::Lower);
+        t.push(
+            "live_warmup_events",
+            live.report.warmup_events.expect("pinned live scenario warms up") as f64,
+            Better::Lower,
+        );
         t
     }
 

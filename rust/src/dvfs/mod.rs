@@ -145,7 +145,9 @@ impl DvfsSchedule {
             .map(|tr| tr.t_s)
             .filter(|&t| t > 0.0)
             .collect();
-        ts.sort_by(|a, b| a.partial_cmp(b).expect("finite times"));
+        // NaN-total order: a forged/NaN transition instant sorts last
+        // instead of panicking the replay (ISSUE 9 hardening).
+        ts.sort_by(|a, b| a.total_cmp(b));
         ts.dedup();
         ts
     }
@@ -579,6 +581,33 @@ mod tests {
         assert_eq!(plan.transitions[1].cluster, LITTLE);
         assert_eq!(plan.transitions[2].t_s, 2.0);
         assert_eq!(plan.boundaries(), vec![1.0, 2.0]);
+    }
+
+    /// ISSUE 9 regression: a forged schedule carrying a NaN transition
+    /// instant must not panic the sort inside [`DvfsSchedule::new`] or
+    /// [`DvfsSchedule::boundaries`] — NaN orders last under
+    /// `f64::total_cmp`, the finite prefix stays ascending, and
+    /// `validate` is still the place that rejects it with a clean `Err`.
+    #[test]
+    fn forged_nan_schedule_sorts_instead_of_panicking() {
+        let s = soc();
+        let forged = DvfsSchedule::new(
+            vec![4, 4],
+            vec![
+                Transition { t_s: f64::NAN, cluster: BIG, opp: 1 },
+                Transition { t_s: 2.0, cluster: LITTLE, opp: 2 },
+                Transition { t_s: 1.0, cluster: BIG, opp: 0 },
+            ],
+        );
+        // Finite instants first (ascending), the NaN parked at the end.
+        assert_eq!(forged.transitions[0].t_s, 1.0);
+        assert_eq!(forged.transitions[1].t_s, 2.0);
+        assert!(forged.transitions[2].t_s.is_nan());
+        // `boundaries` filters on `t > 0.0`, which a NaN instant fails:
+        // the forged entry drops out instead of poisoning the epochs.
+        assert_eq!(forged.boundaries(), vec![1.0, 2.0]);
+        // The replay gate still refuses the forged plan cleanly.
+        assert!(forged.validate(&s).is_err());
     }
 
     #[test]

@@ -49,7 +49,7 @@ pub fn run(quick: bool) -> FigureResult {
     }
     let argmax = |f: &dyn Fn(&DvfsStats) -> f64| -> usize {
         (0..points.len())
-            .max_by(|&a, &b| f(&points[a]).partial_cmp(&f(&points[b])).unwrap())
+            .max_by(|&a, &b| f(&points[a]).total_cmp(&f(&points[b])))
             .unwrap()
     };
     let perf_opt = argmax(&|st: &DvfsStats| st.gflops);

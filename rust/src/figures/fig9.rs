@@ -53,7 +53,7 @@ pub fn run(model: &PerfModel, quick: bool) -> FigureResult {
     let best_ratio = 1 + big_curve
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .unwrap()
         .0;
     let best = big_curve[best_ratio - 1];

@@ -79,7 +79,7 @@ pub fn stream_row(st: &StreamStats) -> Vec<String> {
 /// p50/p99 sojourn percentiles (completion − arrival, submission-
 /// indexed) close the ROADMAP "latency percentiles in the streaming
 /// report" follow-on.
-const STREAM_COLUMNS: &[&str] = &[
+pub const STREAM_COLUMNS: &[&str] = &[
     "mode",
     "makespan [s]",
     "req/s",

@@ -18,8 +18,10 @@
 //! (`amp-gemm fleet --report`), [`dvfs`] is the operating-point
 //! Pareto-frontier / online-retuning report (`amp-gemm dvfs --report`)
 //! [`calibrate`] is the measured-rate weight-calibration report
-//! (`amp-gemm calibrate --report`) and [`autoscale`] is the SLO-driven
-//! elastic-fleet / closed-loop-governor report (`amp-gemm autoscale`).
+//! (`amp-gemm calibrate --report`), [`live`] is the online-calibration
+//! convergence report (`amp-gemm calibrate --live`) and [`autoscale`]
+//! is the SLO-driven elastic-fleet / closed-loop-governor report
+//! (`amp-gemm autoscale`).
 
 pub mod ablation;
 pub mod autoscale;
@@ -28,6 +30,7 @@ pub mod dvfs;
 pub mod fig10;
 pub mod fleet;
 pub mod fig11;
+pub mod live;
 pub mod fig12;
 pub mod fig4;
 pub mod fig5;

@@ -39,11 +39,14 @@
 //! instead of sorted-`Vec` scans.
 
 use crate::blis::gemm::GemmShape;
+use crate::calibrate::live::LiveRateTable;
+use crate::calibrate::{current_opps, Family, WeightSource};
 use crate::coordinator::Batcher;
 use crate::dvfs::{DvfsSchedule, Governor, LoadSignal, Ondemand};
 use crate::energy::PowerModel;
 use crate::fleet::{Fleet, FleetStrategy, DISPATCH_S};
 use crate::obs::{Histogram, MetricsRegistry, NullSink, TraceEvent, TraceSink};
+use crate::sched::{ScheduleSpec, Strategy};
 use crate::sim::engine::{ConfigId, EventQueue, ItemCost, RunCache};
 use crate::sim::{simulate, simulate_traced, Timeline};
 use crate::util::rng::Rng;
@@ -602,9 +605,13 @@ impl StreamStats {
 
 /// Shared post-processing of a virtual-time stream/wave replay: builds
 /// [`StreamStats`] from the per-board tallies. `counts[b]` maps each
-/// shape to the number of items board `b` executed; busy time and item
-/// energy are recomputed `count × per-item` per shape (deterministic
-/// BTreeMap order), so the degenerate single-shape run reproduces
+/// `(config, shape)` pair to the number of items board `b` executed
+/// under that interned configuration — keyed by [`ConfigId`] as well as
+/// shape because the live-calibration replay re-plans a board's
+/// schedule mid-stream (ISSUE 9), so one board can price the same shape
+/// under several configurations. Busy time and item energy are
+/// recomputed `count × per-item` per pair (deterministic BTreeMap
+/// order), so the degenerate single-shape single-config run reproduces
 /// [`simulate_fleet`]'s accounting bit for bit.
 #[allow(clippy::too_many_arguments)]
 fn finish_stream_stats(
@@ -612,8 +619,7 @@ fn finish_stream_stats(
     label: String,
     arrivals: &[Arrival],
     cache: &RunCache,
-    cfgs: &[ConfigId],
-    counts: &[BTreeMap<GemmShape, usize>],
+    counts: &[BTreeMap<(ConfigId, GemmShape), usize>],
     items: &[usize],
     grabs: &[u64],
     finish: &[f64],
@@ -636,10 +642,10 @@ fn finish_stream_stats(
     for b in 0..n {
         let mut busy = 0.0;
         let mut item_energy = 0.0;
-        for (&shape, &count) in &counts[b] {
+        for (&(cfg, shape), &count) in &counts[b] {
             // `peek` re-reads runs the replay executed without counting
             // extra cache lookups against the surfaced hit/miss stats.
-            let st = cache.peek(cfgs[b], shape).expect("executed shapes are cached");
+            let st = cache.peek(cfg, shape).expect("executed shapes are cached");
             busy += count as f64 * st.time_s;
             item_energy += count as f64 * st.energy.energy_j;
             if metrics.enabled() {
@@ -670,7 +676,7 @@ fn finish_stream_stats(
         }
     }
     for counts_b in counts {
-        for (&shape, &count) in counts_b {
+        for (&(_, shape), &count) in counts_b {
             let entry = per_shape
                 .iter_mut()
                 .find(|(s, _)| *s == shape)
@@ -887,7 +893,7 @@ pub fn simulate_fleet_stream_traced(
     let mut finish = vec![0.0f64; n];
     let mut items = vec![0usize; n];
     let mut grabs = vec![0u64; n];
-    let mut counts: Vec<BTreeMap<GemmShape, usize>> = vec![BTreeMap::new(); n];
+    let mut counts: Vec<BTreeMap<(ConfigId, GemmShape), usize>> = vec![BTreeMap::new(); n];
     let mut completions = vec![f64::NAN; arrivals.len()];
     let mut depth_events: EventQueue<i64> = EventQueue::with_capacity(2 * arrivals.len());
     // Pending requests, heap-keyed (arrive_s, submission index): the
@@ -999,7 +1005,7 @@ pub fn simulate_fleet_stream_traced(
         }
         items[b] += take;
         grabs[b] += 1;
-        *counts[b].entry(shape).or_insert(0) += take;
+        *counts[b].entry((cfgs[b], shape)).or_insert(0) += take;
         executed += take;
     }
     if metrics.enabled() {
@@ -1013,7 +1019,6 @@ pub fn simulate_fleet_stream_traced(
         format!("stream [{}]", board_names(fleet)),
         arrivals,
         cache,
-        &cfgs,
         &counts,
         &items,
         &grabs,
@@ -1025,6 +1030,263 @@ pub fn simulate_fleet_stream_traced(
         sink,
         metrics,
     )
+}
+
+/// Knobs of the live-calibrating streaming replay (ISSUE 9).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LiveStreamConfig {
+    /// EWMA half-life in accepted observations
+    /// ([`LiveRateTable::new`]).
+    pub half_life_events: f64,
+    /// Per-cell confidence threshold: below it the analytical rate
+    /// serves ([`WeightSource::Live`]).
+    pub min_samples: u64,
+    /// Re-plan period: every this-many grabs a board running a
+    /// weighted-static schedule (SAS / CA-SAS) re-derives its weight
+    /// vector from the live table. Must be >= 1.
+    pub replan_every: usize,
+}
+
+impl Default for LiveStreamConfig {
+    fn default() -> LiveStreamConfig {
+        LiveStreamConfig { half_life_events: 32.0, min_samples: 8, replan_every: 16 }
+    }
+}
+
+/// What one board learned over a live replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LiveBoardReport {
+    /// The board's learned table — freeze it with
+    /// [`LiveRateTable::snapshot`] for a bit-for-bit deterministic
+    /// replay through [`WeightSource::Empirical`].
+    pub table: LiveRateTable,
+    /// Accepted observations at the instant every learned cell first
+    /// crossed the confidence gate (`None` if the board never warmed
+    /// up) — the `live_warmup_events` trajectory row.
+    pub warmup_events: Option<u64>,
+    /// Mid-stream re-plans that actually changed the board's schedule.
+    pub replans: u64,
+}
+
+/// [`simulate_fleet_stream`] with online calibration in the loop (the
+/// ISSUE 9 tentpole): every completed grab feeds per-cluster
+/// `(flops, service)` observations into a per-board [`LiveRateTable`],
+/// and boards running weighted-static schedules (SAS / CA-SAS)
+/// re-derive their weight vector from the live table every
+/// `cfg.replan_every` grabs through [`WeightSource::Live`] — the
+/// analytical rate serves per-cell until the cell's sample count
+/// crosses `cfg.min_samples`. (The DVFS axis re-plans at *epoch
+/// boundaries* instead: hand [`WeightSource::Live`] to
+/// [`crate::dvfs::DvfsStrategy::to_spec_with`] and every epoch's
+/// weight vector is re-derived the same way.)
+///
+/// The observed per-cluster rate of a completion is busy-time based:
+/// cluster `c` retired `cluster_flops[c]` useful flops over a mean
+/// per-core busy time of `busy_c / num_cores_c`, so the observation is
+/// `flops · n / (busy · 1e9)` GFLOPS — quantization-free under both
+/// static shards and dynamic grabs. Clusters a schedule left inactive
+/// (zero flops) are skipped silently; degenerate observations
+/// (zero/NaN busy time) are *counted* at the
+/// [`LiveRateTable::observe`] gate.
+///
+/// Determinism: the table is a pure fold over the replay's own event
+/// sequence and re-planning depends only on it, so two runs over the
+/// same arrivals are bit-for-bit identical — stats, tables and re-plan
+/// instants alike (property-tested in `tests/live_props.rs`).
+pub fn simulate_fleet_stream_live(
+    fleet: &Fleet,
+    arrivals: &[Arrival],
+    cfg: LiveStreamConfig,
+) -> (StreamStats, Vec<LiveBoardReport>) {
+    simulate_fleet_stream_live_traced(
+        fleet,
+        arrivals,
+        cfg,
+        &mut RunCache::new(),
+        &mut NullSink,
+        &mut MetricsRegistry::disabled(),
+    )
+}
+
+/// [`simulate_fleet_stream_live`] against a caller-owned cache, trace
+/// sink and metrics registry. Per-cell sample-count gauges
+/// (`board<b>_live_samples_*`) and accepted/rejected totals reach the
+/// registry after the replay; instrumentation never feeds back into
+/// the clock arithmetic (same zero-overhead contract as
+/// [`simulate_fleet_stream_traced`]).
+pub fn simulate_fleet_stream_live_traced(
+    fleet: &Fleet,
+    arrivals: &[Arrival],
+    lcfg: LiveStreamConfig,
+    cache: &mut RunCache,
+    sink: &mut dyn TraceSink,
+    metrics: &mut MetricsRegistry,
+) -> (StreamStats, Vec<LiveBoardReport>) {
+    assert!(lcfg.replan_every >= 1, "replan period must be >= 1");
+    let n = fleet.num_boards();
+    let (hits0, misses0) = (cache.hits(), cache.misses());
+    // Mutable per-board schedule state: re-planning swaps the weight
+    // vector (and thus the interned configuration) mid-stream; the
+    // coarse/fine loop orders of the board's original spec are kept.
+    let mut scheds: Vec<ScheduleSpec> = fleet.boards.iter().map(|b| b.sched).collect();
+    let mut cfgs: Vec<ConfigId> = fleet
+        .boards
+        .iter()
+        .zip(&scheds)
+        .map(|(b, s)| cache.config(b.model(), s))
+        .collect();
+    let grains = fleet.grains();
+    let opps: Vec<Vec<usize>> = fleet.boards.iter().map(|b| current_opps(b.soc())).collect();
+    let mut live: Vec<LiveRateTable> = fleet
+        .boards
+        .iter()
+        .map(|b| LiveRateTable::new(b.soc(), lcfg.half_life_events))
+        .collect();
+    let mut warmup: Vec<Option<u64>> = vec![None; n];
+    let mut replans = vec![0u64; n];
+    metrics.inc("stream_admissions", arrivals.len() as f64);
+
+    let mut clock = vec![0.0f64; n];
+    let mut finish = vec![0.0f64; n];
+    let mut items = vec![0usize; n];
+    let mut grabs = vec![0u64; n];
+    let mut counts: Vec<BTreeMap<(ConfigId, GemmShape), usize>> = vec![BTreeMap::new(); n];
+    let mut completions = vec![f64::NAN; arrivals.len()];
+    let mut depth_events: EventQueue<i64> = EventQueue::with_capacity(2 * arrivals.len());
+    let mut pending: EventQueue<usize> = EventQueue::with_capacity(arrivals.len());
+    for (i, a) in arrivals.iter().enumerate() {
+        assert_arrival_instant(i, a.arrive_s);
+        pending.push_tied(a.arrive_s, i as i64, i);
+        depth_events.push_tied(a.arrive_s, -1, 1);
+    }
+    let mut run: Vec<usize> = Vec::with_capacity(grains.iter().copied().max().unwrap_or(1));
+    let mut executed = 0usize;
+
+    while executed < arrivals.len() {
+        let mut b = 0;
+        for c in 1..n {
+            if clock[c] < clock[b] {
+                b = c;
+            }
+        }
+        let (t_next, &head) = pending.peek().expect("requests remain");
+        if t_next > clock[b] {
+            clock[b] = t_next;
+            continue;
+        }
+        let shape = arrivals[head].shape;
+        run.clear();
+        while run.len() < grains[b] {
+            match pending.peek() {
+                Some((t, &id)) if t <= clock[b] && arrivals[id].shape == shape => {
+                    run.push(id);
+                    pending.pop();
+                }
+                _ => break,
+            }
+        }
+        let take = run.len();
+        let st = cache.cost_with(cfgs[b], shape, || {
+            simulate(fleet.boards[b].model(), &scheds[b], shape)
+        });
+        let start = clock[b];
+        depth_events.push_tied(start, take as i64, -(take as i64));
+        clock[b] += DISPATCH_S + take as f64 * st.time_s;
+        finish[b] = clock[b];
+        for (j, &id) in run.iter().enumerate() {
+            debug_assert!(completions[id].is_nan(), "request {id} executed twice");
+            completions[id] = start + DISPATCH_S + (j + 1) as f64 * st.time_s;
+        }
+        if metrics.enabled() {
+            metrics.inc("stream_grabs", 1.0);
+            metrics.inc(&format!("board{b}_items"), take as f64);
+            for _ in 0..take {
+                metrics.observe("service_time_s", st.time_s);
+            }
+        }
+        items[b] += take;
+        grabs[b] += 1;
+        *counts[b].entry((cfgs[b], shape)).or_insert(0) += take;
+        executed += take;
+
+        // --- Online calibration: feed the completion back. ---
+        let stats = cache.peek(cfgs[b], shape).expect("executed shapes are cached");
+        let family = Family::of(scheds[b].strategy.is_cache_aware());
+        let soc = fleet.boards[b].soc();
+        for c in soc.cluster_ids() {
+            let flops_c = stats.cluster_flops[c.0];
+            if flops_c <= 0.0 {
+                continue; // cluster left inactive by the schedule
+            }
+            let busy_c: f64 = soc.core_ids(c).map(|gid| stats.activity[gid].busy_s).sum();
+            let service_c = busy_c / soc[c].num_cores as f64;
+            live[b].observe_weighted(c, opps[b][c.0], family, shape, flops_c, service_c, take as u64);
+        }
+        if warmup[b].is_none() && live[b].warmed_up(lcfg.min_samples) {
+            warmup[b] = Some(live[b].accepted());
+        }
+
+        // --- Re-plan point: every `replan_every` grabs, weighted-static
+        // boards re-derive their split from the live table. ---
+        if grabs[b] % lcfg.replan_every as u64 == 0 {
+            let model = fleet.boards[b].model();
+            let source = WeightSource::Live { table: live[b].clone(), min_samples: lcfg.min_samples };
+            let class = live[b].classify(shape);
+            let new_strategy = match scheds[b].strategy {
+                Strategy::Sas { .. } => {
+                    Some(Strategy::Sas { weights: source.weights(model, false, class) })
+                }
+                Strategy::CaSas { .. } => {
+                    Some(Strategy::CaSas { weights: source.weights(model, true, class) })
+                }
+                _ => None, // dynamic / cluster-only schedules carry no weights
+            };
+            if let Some(strategy) = new_strategy {
+                let spec = ScheduleSpec::new(strategy, scheds[b].coarse, scheds[b].fine);
+                if spec != scheds[b] {
+                    scheds[b] = spec;
+                    cfgs[b] = cache.config(model, &spec);
+                    replans[b] += 1;
+                    if sink.enabled() {
+                        sink.record(TraceEvent::instant("replan", "live", b, 0, clock[b]));
+                    }
+                }
+            }
+        }
+    }
+    if metrics.enabled() {
+        metrics.inc("stream_des_runs", (cache.misses() - misses0) as f64);
+        metrics.inc("stream_cache_hits", (cache.hits() - hits0) as f64);
+        cache.export_metrics(metrics);
+        for (b, table) in live.iter().enumerate() {
+            table.export_metrics(metrics, &format!("board{b}_live"));
+            metrics.set_gauge(&format!("board{b}_live_replans"), replans[b] as f64);
+        }
+    }
+
+    let stats = finish_stream_stats(
+        fleet,
+        format!("live stream [{}]", board_names(fleet)),
+        arrivals,
+        cache,
+        &counts,
+        &items,
+        &grabs,
+        &finish,
+        completions,
+        depth_events,
+        cache.misses() - misses0,
+        cache.hits() - hits0,
+        sink,
+        metrics,
+    );
+    let reports = live
+        .into_iter()
+        .zip(warmup)
+        .zip(replans)
+        .map(|((table, warmup_events), replans)| LiveBoardReport { table, warmup_events, replans })
+        .collect();
+    (stats, reports)
 }
 
 /// Wave-mode comparator: the same arrival stream replayed under
@@ -1077,7 +1339,7 @@ pub fn simulate_fleet_waves_cached(
 
     let mut items = vec![0usize; n];
     let mut grabs = vec![0u64; n];
-    let mut counts: Vec<BTreeMap<GemmShape, usize>> = vec![BTreeMap::new(); n];
+    let mut counts: Vec<BTreeMap<(ConfigId, GemmShape), usize>> = vec![BTreeMap::new(); n];
     let mut finish = vec![0.0f64; n];
     let mut completions = vec![f64::NAN; arrivals.len()];
     let mut depth_events: EventQueue<i64> = EventQueue::with_capacity(2 * arrivals.len());
@@ -1120,7 +1382,7 @@ pub fn simulate_fleet_waves_cached(
                     }
                     items[b] += share;
                     grabs[b] += 1;
-                    *counts[b].entry(*shape).or_insert(0) += share;
+                    *counts[b].entry((cfgs[b], *shape)).or_insert(0) += share;
                     finish[b] = wclock[b];
                 }
             }
@@ -1147,7 +1409,7 @@ pub fn simulate_fleet_waves_cached(
                     next += take;
                     items[idx] += take;
                     grabs[idx] += 1;
-                    *counts[idx].entry(*shape).or_insert(0) += take;
+                    *counts[idx].entry((cfgs[idx], *shape)).or_insert(0) += take;
                     finish[idx] = wclock[idx];
                 }
             }
@@ -1164,7 +1426,6 @@ pub fn simulate_fleet_waves_cached(
         format!("wave {} [{}]", strategy.label(), board_names(fleet)),
         arrivals,
         cache,
-        &cfgs,
         &counts,
         &items,
         &grabs,

@@ -72,13 +72,19 @@
 //!   per-cluster rate tables (shape-classed small/medium/large
 //!   `kc`-bound regimes, one row per OPP rung and parameter family,
 //!   exact TSV round-trip) filled from isolated per-cluster DES runs,
-//!   and the `WeightSource::{Analytical, Empirical, Hybrid}` selector
-//!   threaded through SAS/CA-SAS weight construction, the DVFS online
-//!   retuner (per-OPP rates), fleet-SAS board weights and capacity
-//!   planning — with the analytical-degeneracy anchor (a table
-//!   synthesized from the model reproduces the analytical weights bit
-//!   for bit) and the CI perf-trajectory harness
+//!   and the `WeightSource::{Analytical, Empirical, Hybrid, Live}`
+//!   selector threaded through SAS/CA-SAS weight construction, the
+//!   DVFS online retuner (per-OPP rates), fleet-SAS board weights and
+//!   capacity planning — with the analytical-degeneracy anchor (a
+//!   table synthesized from the model reproduces the analytical
+//!   weights bit for bit) and the CI perf-trajectory harness
 //!   (`calibrate::trajectory`, `BENCH_baseline.json` gate);
+//!   `calibrate::live` learns the same rates *online* from the chunks
+//!   the fleet stream is already serving (per-event EWMA cells,
+//!   confidence-gated per-cell analytical fallback, mid-stream
+//!   re-planning via `simulate_fleet_stream_live`, frozen snapshots
+//!   that replay bit for bit — DESIGN.md §5 "Live calibration",
+//!   `amp-gemm calibrate --live`);
 //! * [`search`], [`figures`] — the per-cluster empirical (mc, kc)
 //!   search (swept per OPP, with persisted per-point presets that
 //!   optionally carry measured shape-classed rates) and the

@@ -98,6 +98,8 @@ USAGE: amp-gemm <figures|search|gemm|calibrate|trajectory|serve|fleet|autoscale|
   calibrate [--out results]   run the empirical search, measure + persist the
             per-OPP rate table and preset stores, print weight deltas
   calibrate --report [--quick] [--out results]      calibration report
+  calibrate --live [--quick] [--out results]        online-calibration
+            convergence report (learn rates while serving, re-plan live)
   calibrate --anchors                               model-vs-paper anchors
   trajectory [--emit BENCH_ci.json] [--baseline BENCH_baseline.json]
             [--gate 0.10] [--seed-baseline PATH]    perf-trajectory gate
@@ -311,6 +313,17 @@ fn cmd_calibrate(args: &Args) -> Result<(), String> {
         println!("wrote {} CSVs under {}", paths.len(), out.display());
         if !fig.passed() {
             return Err("calibration report assertions failed".into());
+        }
+        return Ok(());
+    }
+    if args.flag("live") {
+        let fig = figures::live::run(args.flag("quick"));
+        println!("{}", fig.to_markdown());
+        let out = Path::new(args.get_or("out", "results"));
+        let paths = fig.write_csvs(out).map_err(|e| e.to_string())?;
+        println!("wrote {} CSVs under {}", paths.len(), out.display());
+        if !fig.passed() {
+            return Err("live-calibration report assertions failed".into());
         }
         return Ok(());
     }

@@ -40,7 +40,7 @@ use std::collections::HashMap;
 
 /// Interned handle for one DES configuration (descriptor + schedule).
 /// Equal ids ⇔ value-equal configurations within one [`RunCache`].
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ConfigId(usize);
 
 /// The two numbers the fleet hot loops price an item with — `Copy`, so

@@ -49,6 +49,10 @@ struct ClusterSim<'m> {
     grabs: u64,
     barriers: u64,
     dram_bytes: f64,
+    /// Useful flops this cluster executed (2·mc·nc·kc per macro-kernel
+    /// chunk) — the per-cluster attribution `RunStats::cluster_flops`
+    /// surfaces for the live calibration layer.
+    flops: f64,
     /// Whether at least one other cluster also computes in this run.
     other_active: bool,
     /// Does this cluster's `Ac` overflow its L2 (per-jr re-streaming)?
@@ -83,6 +87,7 @@ impl<'m> ClusterSim<'m> {
             grabs: 0,
             barriers: 0,
             dram_bytes: 0.0,
+            flops: 0.0,
             other_active,
             ac_overflows: !fit.ac_fits() && !fit.ac_fits_l3(),
             timeline: Timeline::default(),
@@ -167,6 +172,7 @@ impl<'m> ClusterSim<'m> {
 
     /// Process one Loop-3 chunk: pack `Ac`, barrier, macro-kernel, barrier.
     fn process_ic_chunk(&mut self, mc_eff: usize, nc_eff: usize, kc_eff: usize) {
+        self.flops += 2.0 * mc_eff as f64 * nc_eff as f64 * kc_eff as f64;
         let pa = pack_a_bytes(mc_eff, kc_eff);
         self.pack_phase(PhaseKind::PackA, pa, true);
         if self.ac_overflows {
@@ -322,6 +328,10 @@ fn simulate_impl(
             };
         }
     }
+    let mut cluster_flops = vec![0.0f64; soc.num_clusters()];
+    for sim in &sims {
+        cluster_flops[sim.cluster.0] = sim.flops;
+    }
     let dram_bytes: f64 = sims.iter().map(|s| s.dram_bytes).sum();
     let power = PowerModel::new(soc.clone());
     let energy = power.integrate(time_s, &activity, dram_bytes);
@@ -337,6 +347,7 @@ fn simulate_impl(
         flops,
         gflops: flops / time_s / 1e9,
         activity,
+        cluster_flops,
         dram_bytes,
         gflops_per_watt: energy.gflops_per_watt(flops),
         energy,
@@ -506,7 +517,7 @@ mod tests {
         let g: Vec<f64> = (1..=7)
             .map(|r| run(ScheduleSpec::sas(r as f64), 4096).gflops)
             .collect();
-        let best = (1..=7).max_by(|&a, &b| g[a - 1].partial_cmp(&g[b - 1]).unwrap()).unwrap();
+        let best = (1..=7).max_by(|&a, &b| g[a - 1].total_cmp(&g[b - 1])).unwrap();
         assert!(
             (5..=6).contains(&best),
             "best ratio {best}, curve {g:?}"
@@ -515,7 +526,7 @@ mod tests {
         let gain = g[best - 1] / a15;
         assert!((1.10..1.30).contains(&gain), "gain over A15-only {gain}");
         // Ratio 1 (homogeneous) is the worst.
-        let worst = (1..=7).min_by(|&a, &b| g[a - 1].partial_cmp(&g[b - 1]).unwrap()).unwrap();
+        let worst = (1..=7).min_by(|&a, &b| g[a - 1].total_cmp(&g[b - 1])).unwrap();
         assert_eq!(worst, 1, "curve {g:?}");
     }
 

@@ -18,6 +18,13 @@ pub struct RunStats {
     pub gflops: f64,
     /// Per-core activity, indexed by global SoC core id.
     pub activity: Vec<CoreActivity>,
+    /// Useful flops each cluster executed, indexed by
+    /// [`crate::soc::ClusterId`]
+    /// (zero for clusters the schedule left inactive). Sums to `flops`.
+    /// This is the attribution the live calibration layer reads: under
+    /// dynamic self-scheduling a cluster's executed-flops share reveals
+    /// its relative service rate ([`crate::calibrate::live`]).
+    pub cluster_flops: Vec<f64>,
     /// Total DRAM payload moved (packing, C updates, overflow streams).
     pub dram_bytes: f64,
     pub energy: EnergyReport,

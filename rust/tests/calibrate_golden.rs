@@ -11,9 +11,12 @@
 //! Plus the persistence fuzz the ISSUE asks for: random rate tables
 //! and preset stores must round-trip through TSV bit for bit, and
 //! malformed inputs must be rejected, beyond the three cases pinned in
-//! `rust/src/search/mod.rs`.
+//! `rust/src/search/mod.rs`. ISSUE 9 extends the same suite to
+//! [`LiveRateTable`] rows — EWMA numerator/denominator pairs,
+//! sample counts and the half-life header field included.
 
 use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::calibrate::live::LiveRateTable;
 use amp_gemm::calibrate::{
     ca_sas_spec, sas_spec, Family, RateRow, RateTable, ShapeClass, WeightSource,
 };
@@ -317,6 +320,99 @@ fn malformed_inputs_rejected_not_mangled() {
         "# soc\t2\n0\t0\t1.6\tca\tinf\t2\t3\n",              // infinite rate
     ] {
         assert!(RateTable::parse_text(bad).is_err(), "accepted: {bad:?}");
+    }
+}
+
+/// ISSUE 9 satellite: live-table round-trip fuzzing. Random tables —
+/// random soc names, 1–6 declared clusters, random `kc_ref` /
+/// half-life headers, cells grown through the real `observe` fold (so
+/// the EWMA numerators and denominators are awkward decayed-sum
+/// mantissas, not round numbers) plus a few gate-rejected observations
+/// to fuzz the rejected counter — survive TSV bit for bit.
+#[test]
+fn prop_live_rate_table_round_trips_exactly() {
+    prop::check_default(
+        |r| {
+            let soc = SocSpec::exynos5422();
+            let mut table = LiveRateTable::new(&soc, r.gen_f64(0.5, 200.0));
+            // The labeling fields are pub: fuzz them past what any real
+            // descriptor would produce.
+            table.soc = rand_name(r);
+            table.num_clusters = r.gen_range(1, 7);
+            table.kc_ref = r.gen_range(8, 3000);
+            table.half_life_events = r.gen_f64(0.5, 200.0);
+            for _ in 0..r.gen_range(1, 40) {
+                let c = ClusterId(r.gen_range(0, table.num_clusters));
+                let opp = r.gen_range(0, 6);
+                let family = Family::ALL[r.gen_range(0, Family::ALL.len())];
+                // k spans all three classes relative to the fuzzed kc_ref.
+                let shape = GemmShape {
+                    m: r.gen_range(1, 2048),
+                    n: r.gen_range(1, 2048),
+                    k: r.gen_range(1, 8 * table.kc_ref),
+                };
+                table.observe(c, opp, family, shape, rand_rate(r) * 1e9, rand_rate(r));
+            }
+            for _ in 0..r.gen_range(0, 4) {
+                let c = ClusterId(r.gen_range(0, table.num_clusters));
+                table.observe(c, 0, Family::CacheAware, GemmShape::square(64), f64::NAN, 1.0);
+            }
+            table
+        },
+        |table| {
+            let text = table.to_text();
+            let back = LiveRateTable::parse_text(&text)?;
+            if &back != table {
+                return Err(format!("round-trip drift:\n{text}"));
+            }
+            if back.to_text() != text {
+                return Err(format!("re-render drift:\n{text}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE 9 satellite: malformed live rows are rejected, never panicked
+/// on or silently mangled — header arity/vocabulary/range errors, bad
+/// half-life and count fields, non-finite or non-positive EWMA terms,
+/// zero sample counts and duplicate cells.
+#[test]
+fn malformed_live_rows_rejected_not_mangled() {
+    const H: &str = "#live\tsoc\t2\t952\t32\t10\t1\n";
+    let valid = format!("{H}0\t0\tca\tsmall\t5.5\t1.5\t3\n1\t2\tobl\tlarge\t0.25\t2\t8\n");
+    assert!(LiveRateTable::parse_text(&valid).is_ok());
+    let bad_cases = [
+        "".to_string(),                                       // empty
+        "#rates\tsoc\t2\t952\t32\t10\t1\n".to_string(),       // wrong marker
+        "#live\tsoc\t2\t952\t32\t10\n".to_string(),           // 6-field header
+        "#live\tsoc\t2\t952\t32\t10\t1\t9\n".to_string(),     // 8-field header
+        "#live\tsoc\tx\t952\t32\t10\t1\n".to_string(),        // bad cluster count
+        "#live\tsoc\t0\t952\t32\t10\t1\n".to_string(),        // zero clusters
+        "#live\tsoc\t2\t0\t32\t10\t1\n".to_string(),          // zero kc_ref
+        "#live\tsoc\t2\t952\t0\t10\t1\n".to_string(),         // zero half-life
+        "#live\tsoc\t2\t952\t-32\t10\t1\n".to_string(),       // negative half-life
+        "#live\tsoc\t2\t952\tNaN\t10\t1\n".to_string(),       // NaN half-life
+        "#live\tsoc\t2\t952\tinf\t10\t1\n".to_string(),       // infinite half-life
+        "#live\tsoc\t2\t952\t32\tx\t1\n".to_string(),         // bad accepted count
+        "#live\tsoc\t2\t952\t32\t10\t-1\n".to_string(),       // negative rejected count
+        format!("{H}0\t0\tca\tsmall\t5.5\t1.5\n"),            // 6-field row
+        format!("{H}0\t0\tca\tsmall\t5.5\t1.5\t3\t9\n"),      // 8-field row
+        format!("{H}2\t0\tca\tsmall\t5.5\t1.5\t3\n"),         // cluster out of range
+        format!("{H}x\t0\tca\tsmall\t5.5\t1.5\t3\n"),         // bad cluster
+        format!("{H}0\tx\tca\tsmall\t5.5\t1.5\t3\n"),         // bad opp
+        format!("{H}0\t0\twarp\tsmall\t5.5\t1.5\t3\n"),       // bad family
+        format!("{H}0\t0\tca\ttiny\t5.5\t1.5\t3\n"),          // bad class
+        format!("{H}0\t0\tca\tsmall\t0\t1.5\t3\n"),           // zero num
+        format!("{H}0\t0\tca\tsmall\t5.5\t-1\t3\n"),          // negative den
+        format!("{H}0\t0\tca\tsmall\tNaN\t1.5\t3\n"),         // NaN num
+        format!("{H}0\t0\tca\tsmall\t5.5\tinf\t3\n"),         // infinite den
+        format!("{H}0\t0\tca\tsmall\t5.5\t1.5\t0\n"),         // zero samples
+        format!("{H}0\t0\tca\tsmall\t5.5\t1.5\t-3\n"),        // negative samples
+        format!("{H}0\t0\tca\tsmall\t5.5\t1.5\t3\n0\t0\tca\tsmall\t5.5\t1.5\t3\n"), // duplicate
+    ];
+    for bad in &bad_cases {
+        assert!(LiveRateTable::parse_text(bad).is_err(), "accepted: {bad:?}");
     }
 }
 

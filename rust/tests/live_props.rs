@@ -1,0 +1,396 @@
+//! Property tests for online calibration while serving (ISSUE 9,
+//! proptest-style over randomized 1–4-cluster descriptors):
+//!
+//! * a *cold* [`WeightSource::Live`] degenerates to
+//!   [`WeightSource::Analytical`] bit for bit — through the weight
+//!   vector, the coordinator's SAS ratio knob and the DVFS strategy
+//!   specs alike;
+//! * once every cell a weight call needs is confident, `Live` equals
+//!   [`WeightSource::Empirical`] over the frozen
+//!   [`LiveRateTable::snapshot`] bit for bit (the replay contract);
+//! * the live-calibrating streaming replay is deterministic: two runs
+//!   over the same arrivals produce identical stats *and* identical
+//!   learned tables, re-plan counts included;
+//! * cold-start convergence: serving a stream from a cold table drives
+//!   the live weight shares toward the offline-measured
+//!   ([`RateTable::measure`]) shares on randomized descriptors;
+//! * degenerate observations (zero/negative/NaN flops or service) are
+//!   counted at the gate and never poison learned rates;
+//! * `ShapeClass::of` boundary audit: `k == kc` is Medium, `k == 4·kc`
+//!   is Large — live classification can never disagree with the
+//!   offline measurement path over the same `kc_ref`.
+
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::calibrate::live::{live_source, LiveRateTable};
+use amp_gemm::calibrate::{current_opps, Family, RateTable, ShapeClass, WeightSource};
+use amp_gemm::coordinator::Coordinator;
+use amp_gemm::dvfs::sim::DvfsStrategy;
+use amp_gemm::fleet::sim::{poisson_arrivals, simulate_fleet_stream_live, LiveStreamConfig};
+use amp_gemm::fleet::{Board, Fleet};
+use amp_gemm::model::PerfModel;
+use amp_gemm::soc::{ClusterId, ClusterSpec, OperatingPoint, OppTable, SocSpec};
+use amp_gemm::util::prop;
+use amp_gemm::util::rng::Rng;
+use amp_gemm::{prop_assert, prop_assert_eq};
+
+/// A random 1–4-cluster topology with 1–3-rung OPP ladders: donor
+/// clusters from the presets with randomized frequencies, the nominal
+/// rung pinned to the boot frequency (the `dvfs_props` generator,
+/// bounded to the ISSUE 9 acceptance envelope).
+fn random_soc(r: &mut Rng, max_clusters: usize, max_rungs: usize) -> SocSpec {
+    let exynos = SocSpec::exynos5422();
+    let tri = SocSpec::dynamiq_3c();
+    let donors: Vec<ClusterSpec> = vec![
+        exynos.clusters[0].clone(),
+        exynos.clusters[1].clone(),
+        tri.clusters[1].clone(),
+    ];
+    let n = r.gen_range(1, max_clusters + 1);
+    let clusters: Vec<ClusterSpec> = (0..n)
+        .map(|i| {
+            let mut cl = donors[r.gen_range(0, donors.len())].clone();
+            cl.name = format!("c{i}-{}", cl.name);
+            cl.core.freq_ghz = r.gen_f64(0.4, 2.5);
+            let rungs = r.gen_range(1, max_rungs + 1);
+            let lo = r.gen_f64(0.3, 0.8);
+            let points: Vec<OperatingPoint> = (0..rungs)
+                .map(|k| {
+                    // The nominal (last) rung must be *exactly* the boot
+                    // frequency — `lo + (1-lo)` is not exactly 1.0 in
+                    // floating point.
+                    let frac = if k + 1 == rungs {
+                        1.0
+                    } else {
+                        lo + (1.0 - lo) * k as f64 / (rungs - 1).max(1) as f64
+                    };
+                    let volt = 0.9 + 0.25 * k as f64 / (rungs - 1).max(1) as f64;
+                    OperatingPoint::new(cl.core.freq_ghz * frac, volt)
+                })
+                .collect();
+            cl.opps = if rungs == 1 {
+                OppTable::single(cl.core.freq_ghz)
+            } else {
+                OppTable::new(points)
+            };
+            cl
+        })
+        .collect();
+    SocSpec {
+        name: format!("random-{n}c"),
+        clusters,
+        l3: None,
+        dram_bw_gbs: 3.2,
+        dram_total_bytes: 2 * 1024 * 1024 * 1024,
+    }
+}
+
+/// A cold live table behaves exactly like the analytical source — same
+/// weight vector (both families, every shape class), same coordinator
+/// SAS ratio, same DVFS strategy specs. Bit for bit, not approximately:
+/// both paths build `Weights::from_slice` over the same per-cluster
+/// `cluster_rate_gflops` values.
+#[test]
+fn prop_cold_live_degenerates_to_analytical() {
+    prop::check_default(
+        |r| {
+            let soc = random_soc(r, 4, 3);
+            let half_life = r.gen_f64(1.0, 128.0);
+            let min_samples = r.gen_range(1, 64) as u64;
+            (soc, half_life, min_samples)
+        },
+        |(soc, half_life, min_samples)| {
+            let model = PerfModel::new(soc.clone());
+            let cold = live_source(LiveRateTable::new(soc, *half_life), *min_samples);
+            for cache_aware in [false, true] {
+                for class in ShapeClass::ALL {
+                    let live = cold.weights(&model, cache_aware, class);
+                    let ana = WeightSource::Analytical.weights(&model, cache_aware, class);
+                    prop_assert_eq!(live.as_slice(), ana.as_slice());
+                    for strategy in [
+                        DvfsStrategy::Sas { cache_aware },
+                        DvfsStrategy::Das { cache_aware },
+                    ] {
+                        prop_assert_eq!(
+                            strategy.to_spec_with(&model, &cold, class),
+                            strategy.to_spec_with(&model, &WeightSource::Analytical, class)
+                        );
+                    }
+                }
+            }
+            if soc.num_clusters() == 2 {
+                let coord = Coordinator::new(soc.clone());
+                let shape = GemmShape::square(512);
+                prop_assert_eq!(
+                    coord.auto_ratio_from(&cold, shape),
+                    coord.auto_ratio_from(&WeightSource::Analytical, shape)
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Once every cell a weight call touches is confident, `Live` equals
+/// `Empirical` over the frozen snapshot bit for bit — the determinism
+/// contract replays are stated in (DESIGN.md §5).
+#[test]
+fn prop_confident_live_matches_frozen_snapshot() {
+    prop::check_default(
+        |r| {
+            let soc = random_soc(r, 4, 3);
+            let half_life = r.gen_f64(1.0, 128.0);
+            let min_samples = r.gen_range(1, 16) as u64;
+            let cache_aware = r.gen_bool(0.5);
+            let class = ShapeClass::ALL[r.gen_range(0, 3)];
+            // Per-cluster observation streams: (observed GFLOPS, extra
+            // events past the confidence gate).
+            let obs: Vec<(f64, u64)> = (0..soc.num_clusters())
+                .map(|_| (r.gen_f64(0.1, 50.0), r.gen_range(0, 8) as u64))
+                .collect();
+            (soc, half_life, min_samples, cache_aware, class, obs)
+        },
+        |(soc, half_life, min_samples, cache_aware, class, obs)| {
+            let model = PerfModel::new(soc.clone());
+            let mut table = LiveRateTable::new(soc, *half_life);
+            let opps = current_opps(soc);
+            let family = Family::of(*cache_aware);
+            let shape = class.rep_shape(table.kc_ref);
+            prop_assert_eq!(table.classify(shape), *class);
+            for c in soc.cluster_ids() {
+                let (gflops, extra) = obs[c.0];
+                for _ in 0..(*min_samples + extra) {
+                    // `service = flops / (rate · 1e9)` feeds the cell an
+                    // observation of exactly `gflops`.
+                    let flops = 2.0 * (shape.m * shape.n * shape.k) as f64;
+                    let ok =
+                        table.observe(c, opps[c.0], family, shape, flops, flops / (gflops * 1e9));
+                    prop_assert!(ok, "valid observation rejected at the gate");
+                }
+                prop_assert!(
+                    table.confident(c, opps[c.0], family, *class, *min_samples),
+                    "cluster {c} fed past the gate is not confident"
+                );
+            }
+            let frozen = WeightSource::Empirical(table.snapshot(soc, *min_samples));
+            let live = live_source(table, *min_samples);
+            prop_assert_eq!(
+                live.weights(&model, *cache_aware, *class).as_slice(),
+                frozen.weights(&model, *cache_aware, *class).as_slice()
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Degenerate observations (zero / negative / non-finite flops or
+/// service time) are counted at the gate and change *nothing* else:
+/// not the accepted count, not any learned cell.
+#[test]
+fn prop_degenerate_observations_are_counted_not_poisoning() {
+    prop::check_default(
+        |r| {
+            let soc = random_soc(r, 4, 3);
+            let half_life = r.gen_f64(1.0, 128.0);
+            let valid = r.gen_range(1, 32);
+            (soc, half_life, valid)
+        },
+        |(soc, half_life, valid)| {
+            let mut table = LiveRateTable::new(soc, *half_life);
+            let opps = current_opps(soc);
+            let shape = GemmShape::square(512);
+            let mut r = Rng::new(0xD00_D1E);
+            for _ in 0..*valid {
+                let c = ClusterId(r.gen_range(0, soc.num_clusters()));
+                table.observe(c, opps[c.0], Family::CacheAware, shape, 1e9, r.gen_f64(0.01, 2.0));
+            }
+            let before = table.clone();
+            let c0 = ClusterId(0);
+            let bad = [
+                (0.0, 1.0),
+                (-3.0, 1.0),
+                (f64::NAN, 1.0),
+                (1e9, 0.0),
+                (1e9, -1.0),
+                (1e9, f64::NAN),
+                (f64::INFINITY, 1.0),
+                (1e9, f64::INFINITY),
+            ];
+            for (i, (flops, service)) in bad.iter().enumerate() {
+                let ok = table.observe(c0, opps[0], Family::CacheAware, shape, *flops, *service);
+                prop_assert!(!ok, "degenerate observation ({flops}, {service}) accepted");
+                prop_assert_eq!(table.rejected(), before.rejected() + 1 + i as u64);
+            }
+            prop_assert_eq!(table.accepted(), before.accepted());
+            prop_assert_eq!(table.num_cells(), before.num_cells());
+            for ((ka, ca), (kb, cb)) in table.cells().zip(before.cells()) {
+                prop_assert_eq!(ka, kb);
+                prop_assert_eq!(ca, cb);
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Boundary audit: the class edges sit exactly at `k == kc` (Small →
+/// Medium) and `k == 4·kc` (Medium → Large), and a live table pinned at
+/// a descriptor's lead `kc` classifies every shape exactly like the
+/// offline path ([`ShapeClass::for_soc`]) does.
+#[test]
+fn prop_shape_class_boundaries_pin_kc() {
+    prop::check_default(
+        |r| {
+            let kc = r.gen_range(2, 3000);
+            let m = r.gen_range(1, 4096);
+            let n = r.gen_range(1, 4096);
+            (kc, m, n)
+        },
+        |(kc, m, n)| {
+            let at = |k: usize| ShapeClass::of(GemmShape { m: *m, n: *n, k }, *kc);
+            prop_assert_eq!(at(*kc - 1), ShapeClass::Small);
+            prop_assert_eq!(at(*kc), ShapeClass::Medium);
+            prop_assert_eq!(at(4 * *kc - 1), ShapeClass::Medium);
+            prop_assert_eq!(at(4 * *kc), ShapeClass::Large);
+            Ok(())
+        },
+    );
+    // The live table's pinned `kc_ref` is the lead cluster's tuned kc —
+    // the exact reference `ShapeClass::for_soc` classifies against.
+    let soc = SocSpec::exynos5422();
+    let table = LiveRateTable::new(&soc, 32.0);
+    for k in [1, 476, 951, 952, 953, 3807, 3808, 8192] {
+        let shape = GemmShape { m: 640, n: 640, k };
+        assert_eq!(table.classify(shape), ShapeClass::for_soc(&soc, shape));
+    }
+}
+
+/// The live-calibrating streaming replay is deterministic: two runs
+/// over the same arrivals are bit-for-bit identical — stream stats,
+/// learned tables, warmup instants and re-plan counts alike.
+#[test]
+fn prop_live_stream_replay_is_deterministic() {
+    prop::check(
+        &prop::Config { cases: 8, seed: 0x11FE_DE7 },
+        |r| {
+            let soc = random_soc(r, 4, 2);
+            let weighted_static = r.gen_bool(0.5);
+            let size = 128 * r.gen_range(2, 6);
+            let seed = r.gen_range(1, 1 << 30) as u64;
+            (soc, weighted_static, size, seed)
+        },
+        |(soc, weighted_static, size, seed)| {
+            let mut board = Board::sim("rand", soc.clone());
+            if *weighted_static {
+                // CA-SAS exercises the mid-stream re-plan arm; the
+                // default CA-DAS board only feeds observations.
+                board.sched = amp_gemm::calibrate::ca_sas_spec(
+                    &WeightSource::Analytical,
+                    board.model(),
+                    ShapeClass::for_soc(soc, GemmShape::square(*size)),
+                );
+            }
+            let fleet = Fleet::new(vec![board]);
+            let mut rng = Rng::new(*seed);
+            let arrivals = poisson_arrivals(&mut rng, &[GemmShape::square(*size)], 24, 50.0);
+            let cfg = LiveStreamConfig::default();
+            let a = simulate_fleet_stream_live(&fleet, &arrivals, cfg);
+            let b = simulate_fleet_stream_live(&fleet, &arrivals, cfg);
+            prop_assert_eq!(&a.0, &b.0);
+            prop_assert_eq!(&a.1, &b.1);
+            prop_assert_eq!(a.1.len(), 1);
+            Ok(())
+        },
+    );
+}
+
+/// Cold-start convergence (the ISSUE 9 acceptance property): serving a
+/// stream from a *cold* table on a randomized 1–4-cluster descriptor
+/// drives the live weight shares to within 10 pp of the shares an
+/// offline [`RateTable::measure`] pass produces — without ever running
+/// the offline probe. Vacuous when the stream is too short to warm
+/// every cluster's cell past the confidence gate (the fallback serves
+/// analytically there, which the cold-degeneracy property pins).
+#[test]
+fn prop_cold_start_converges_toward_offline_rates() {
+    prop::check(
+        &prop::Config { cases: 6, seed: 0xC0_1DCA1B },
+        |r| {
+            let soc = random_soc(r, 4, 2);
+            let seed = r.gen_range(1, 1 << 30) as u64;
+            (soc, seed)
+        },
+        |(soc, seed)| {
+            let model = PerfModel::new(soc.clone());
+            let cfg = LiveStreamConfig::default();
+            // One mid-class shape: every grab feeds the same cell per
+            // cluster, so 40 requests comfortably clear min_samples.
+            let shape = ShapeClass::Medium.rep_shape(soc[soc.lead()].tuned.kc);
+            let class = ShapeClass::for_soc(soc, shape);
+            let fleet = Fleet::new(vec![Board::sim("rand", soc.clone())]);
+            let mut rng = Rng::new(*seed);
+            let arrivals = poisson_arrivals(&mut rng, &[shape], 40, 100.0);
+            let (_, reports) = simulate_fleet_stream_live(&fleet, &arrivals, cfg);
+            let table = &reports[0].table;
+            let opps = current_opps(soc);
+            let all_confident = soc
+                .cluster_ids()
+                .all(|c| table.confident(c, opps[c.0], Family::CacheAware, class, cfg.min_samples));
+            if !all_confident {
+                // Too few observations to warm up — the analytical
+                // fallback serves, which is covered elsewhere.
+                return Ok(());
+            }
+            let live = live_source(table.clone(), cfg.min_samples)
+                .weights(&model, true, class)
+                .normalized();
+            let offline = WeightSource::Empirical(RateTable::measure(soc, &[]))
+                .weights(&model, true, class)
+                .normalized();
+            for c in 0..soc.num_clusters() {
+                let gap = (live.share(c) - offline.share(c)).abs();
+                prop_assert!(
+                    gap <= 0.10,
+                    "cluster {c}: live share {:.4} vs offline {:.4} (gap {gap:.4})",
+                    live.share(c),
+                    offline.share(c)
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Pinned end-to-end check on the exynos5422 preset (the descriptor the
+/// `calibrate --live` report runs): a CA-SAS board re-plans mid-stream
+/// at the default period, warms up at exactly `clusters · min_samples`
+/// accepted observations (one Small-class cell per cluster), rejects
+/// nothing, and the learned table freezes into a snapshot whose
+/// empirical weights equal the live ones bit for bit.
+#[test]
+fn pinned_exynos_live_stream_warms_up_and_freezes() {
+    let mut board = Board::from_preset("exynos5422").expect("preset");
+    let class = ShapeClass::Small; // every stream k (384..640) < kc_ref 952
+    board.sched =
+        amp_gemm::calibrate::ca_sas_spec(&WeightSource::Analytical, board.model(), class);
+    let model = board.model().clone();
+    let soc = model.soc.clone();
+    let fleet = Fleet::new(vec![board]);
+    let shapes = [GemmShape::square(384), GemmShape::square(512), GemmShape::square(640)];
+    let mut rng = Rng::new(0x11FE_CA1B);
+    let arrivals = poisson_arrivals(&mut rng, &shapes, 48, 80.0);
+    let cfg = LiveStreamConfig::default();
+    let (stats, reports) = simulate_fleet_stream_live(&fleet, &arrivals, cfg);
+    assert_eq!(reports.len(), 1);
+    let rep = &reports[0];
+    assert_eq!(rep.table.rejected(), 0, "degenerate observations on the pinned stream");
+    assert!(rep.table.accepted() > 0);
+    // Both clusters observe once per grab (grain 1), so every cell
+    // crosses min_samples on the same grab: warmup at 2 · 8 events.
+    assert_eq!(rep.warmup_events, Some(2 * cfg.min_samples));
+    assert!(rep.replans >= 1, "48 grabs at replan_every=16 must re-plan");
+    assert_eq!(stats.requests, 48);
+    // Frozen-snapshot replay: Empirical over the snapshot == Live.
+    let live_w = live_source(rep.table.clone(), cfg.min_samples).weights(&model, true, class);
+    let frozen_w = WeightSource::Empirical(rep.table.snapshot(&soc, cfg.min_samples))
+        .weights(&model, true, class);
+    assert_eq!(live_w.as_slice(), frozen_w.as_slice());
+}
