@@ -102,9 +102,9 @@ fn main() {
         st.boards.iter().map(|b| b.grabs).sum::<u64>(),
         st.cache_hits
     );
-    for (shape, executed) in &st.per_shape {
-        let submitted = adhoc.iter().filter(|a| a.shape == *shape).count();
-        assert_eq!(*executed, submitted, "per-shape shard-sum invariant ({shape:?})");
+    for (job, executed) in &st.per_job {
+        let submitted = adhoc.iter().filter(|a| a.job == *job).count();
+        assert_eq!(*executed, submitted, "per-job shard-sum invariant ({job:?})");
     }
     for (i, (&done, a)) in st.completions.iter().zip(&adhoc).enumerate() {
         assert!(done.is_finite() && done > a.arrive_s, "request {i} completion");

@@ -4,9 +4,11 @@
 //! versions of the remaining Level-3 kernels are in general built on
 //! top of GEMM" [Kågström et al.], and its stated goal (§6) is "a full
 //! BLAS implementation optimized for big.LITTLE architectures". This
-//! module delivers that layer: SYMM, SYRK and TRMM expressed as
+//! module delivers that layer: SYMM, SYRK, TRMM and TRSM expressed as
 //! partitioned calls into the asymmetric-scheduled GEMM executor, so
 //! every Level-3 routine inherits the CA-DAS machinery for free.
+//! `trsm_lower` is also the panel-solve kernel of the blocked Cholesky
+//! in [`crate::dag::exec`].
 //!
 //! Matrices are row-major f64, as everywhere in this crate. Only the
 //! variants the GEMM-based decomposition needs are implemented
@@ -17,9 +19,19 @@ use crate::blis::gemm::GemmShape;
 use crate::native::gemm_parallel;
 use crate::sched::ScheduleSpec;
 use crate::soc::SocSpec;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Reused densification scratch for [`symm_lower`]. The mirror loop
+    /// overwrites every entry of the `m × m` prefix before the GEMM
+    /// reads it, so growth/shrink via `resize` needs no zeroing and the
+    /// operand bits are identical to a freshly allocated buffer.
+    static SYMM_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
 
 /// C += A·B where A is symmetric (m×m), only its lower triangle stored.
-/// Expands the triangle once into a dense operand and dispatches one
+/// Densifies the triangle into a thread-local scratch operand (reused
+/// across calls rather than reallocated every time) and dispatches one
 /// scheduled GEMM — the standard GEMM-based SYMM decomposition.
 pub fn symm_lower(
     soc: &SocSpec,
@@ -31,16 +43,74 @@ pub fn symm_lower(
     c: &mut [f64],
 ) {
     assert!(a_lower.len() >= m * m && b.len() >= m * n && c.len() >= m * n);
-    // Symmetrize: A[i][j] = A[j][i] = stored lower entry.
-    let mut a = vec![0.0; m * m];
-    for i in 0..m {
-        for j in 0..=i {
-            let v = a_lower[i * m + j];
-            a[i * m + j] = v;
-            a[j * m + i] = v;
+    SYMM_SCRATCH.with(|scratch| {
+        let mut a = scratch.borrow_mut();
+        a.resize(m * m, 0.0);
+        // Symmetrize: A[i][j] = A[j][i] = stored lower entry.
+        for i in 0..m {
+            for j in 0..=i {
+                let v = a_lower[i * m + j];
+                a[i * m + j] = v;
+                a[j * m + i] = v;
+            }
+        }
+        gemm_parallel(soc, spec, GemmShape { m, n, k: m }, &a, b, c);
+    });
+}
+
+/// Solve L·X = B in place (TRSM, left, lower-triangular, non-unit
+/// diagonal; L is m×m, B is m×n and holds X on return). Only the lower
+/// triangle of `l` is ever read — callers may leave garbage above the
+/// diagonal, as the blocked factorizations in [`crate::dag::exec`] do.
+///
+/// Block decomposition with block size `nb`, top-down: the trailing
+/// panel update `B[i0.., :] -= L[i0.., ..i0] · X[..i0, :]` carries all
+/// the flops and flows through the scheduled GEMM (as a negated-panel
+/// accumulate); only the small diagonal-block forward substitution is
+/// sequential.
+pub fn trsm_lower(
+    soc: &SocSpec,
+    spec: &ScheduleSpec,
+    m: usize,
+    n: usize,
+    l: &[f64],
+    b: &mut [f64],
+    nb: usize,
+) {
+    assert!(l.len() >= m * m && b.len() >= m * n);
+    assert!(nb > 0);
+    let nblocks = m.div_ceil(nb);
+    for bi in 0..nblocks {
+        let i0 = bi * nb;
+        let ib = (m - i0).min(nb);
+        if i0 > 0 {
+            let mut neg_l21 = vec![0.0; ib * i0];
+            for r in 0..ib {
+                for q in 0..i0 {
+                    neg_l21[r * i0 + q] = -l[(i0 + r) * m + q];
+                }
+            }
+            let x_top = b[..i0 * n].to_vec();
+            let tail = &mut b[i0 * n..(i0 + ib) * n];
+            gemm_parallel(soc, spec, GemmShape { m: ib, n, k: i0 }, &neg_l21, &x_top, tail);
+        }
+        // Forward substitution within the diagonal block.
+        for r in 0..ib {
+            let li = i0 + r;
+            for q in 0..r {
+                let f = l[li * m + i0 + q];
+                if f != 0.0 {
+                    for c in 0..n {
+                        b[li * n + c] -= f * b[(i0 + q) * n + c];
+                    }
+                }
+            }
+            let d = l[li * m + li];
+            for c in 0..n {
+                b[li * n + c] /= d;
+            }
         }
     }
-    gemm_parallel(soc, spec, GemmShape { m, n, k: m }, &a, b, c);
 }
 
 /// C += A·Aᵀ (SYRK, lower triangle of C updated; C is m×m, A is m×k).
@@ -233,6 +303,94 @@ mod tests {
             let d = max_abs_diff(&b, &want);
             assert!(d < gemm_tolerance(m), "nb={nb}: diff {d}");
         }
+    }
+
+    #[test]
+    fn symm_scratch_reuse_is_bit_identical() {
+        // Regression for the per-call densify allocation: interleave
+        // sizes so the thread-local scratch grows and shrinks, and pin
+        // every result bit-for-bit against a fresh-operand reference.
+        let mut rng = Rng::new(305);
+        for &(m, n) in &[(33usize, 17usize), (9, 28), (48, 5), (33, 17)] {
+            let mut a_lower = vec![0.0; m * m];
+            for i in 0..m {
+                for j in 0..=i {
+                    a_lower[i * m + j] = rng.gen_f64(-1.0, 1.0);
+                }
+            }
+            let b = rng.fill_matrix(m * n);
+            let c0 = rng.fill_matrix(m * n);
+
+            let mut c = c0.clone();
+            symm_lower(&soc(), &spec(), m, n, &a_lower, &b, &mut c);
+
+            let mut a_full = vec![0.0; m * m];
+            for i in 0..m {
+                for j in 0..=i {
+                    let v = a_lower[i * m + j];
+                    a_full[i * m + j] = v;
+                    a_full[j * m + i] = v;
+                }
+            }
+            let mut want = c0.clone();
+            gemm_parallel(&soc(), &spec(), GemmShape { m, n, k: m }, &a_full, &b, &mut want);
+            assert_eq!(c, want, "m={m} n={n}: scratch reuse changed bits");
+        }
+    }
+
+    #[test]
+    fn trsm_solves_the_lower_system() {
+        let (m, n) = (45, 21);
+        let mut rng = Rng::new(306);
+        let mut l = vec![0.0; m * m];
+        for i in 0..m {
+            for j in 0..=i {
+                l[i * m + j] = rng.gen_f64(-1.0, 1.0);
+            }
+            l[i * m + i] += 2.0; // keep the solve well-conditioned
+        }
+        // The strictly-upper half must never be read.
+        for i in 0..m {
+            for j in i + 1..m {
+                l[i * m + j] = f64::NAN;
+            }
+        }
+        let b0 = rng.fill_matrix(m * n);
+        for nb in [4usize, 16, 64] {
+            let mut x = b0.clone();
+            trsm_lower(&soc(), &spec(), m, n, &l, &mut x, nb);
+            // Residual check: L·X must reproduce B.
+            let mut lx = vec![0.0; m * n];
+            for i in 0..m {
+                for c in 0..n {
+                    let mut s = 0.0;
+                    for p in 0..=i {
+                        s += l[i * m + p] * x[p * n + c];
+                    }
+                    lx[i * n + c] = s;
+                }
+            }
+            let d = max_abs_diff(&lx, &b0);
+            assert!(d < gemm_tolerance(m) * 10.0, "nb={nb}: residual {d}");
+        }
+    }
+
+    #[test]
+    fn trsm_inverts_trmm() {
+        let (m, n) = (31, 12);
+        let mut rng = Rng::new(307);
+        let mut l = vec![0.0; m * m];
+        for i in 0..m {
+            for j in 0..=i {
+                l[i * m + j] = rng.gen_f64(-1.0, 1.0);
+            }
+            l[i * m + i] += 2.0;
+        }
+        let x0 = rng.fill_matrix(m * n);
+        let mut b = x0.clone();
+        trmm_lower_left(&soc(), &spec(), m, n, &l, &mut b, 8); // B = L·X
+        trsm_lower(&soc(), &spec(), m, n, &l, &mut b, 8); // solve back
+        assert!(max_abs_diff(&b, &x0) < gemm_tolerance(m) * 10.0);
     }
 
     #[test]

@@ -263,6 +263,17 @@ impl Trajectory {
             live.report.warmup_events.expect("pinned live scenario warms up") as f64,
             Better::Lower,
         );
+
+        // --- Task-DAG runtime (ISSUE 10): the pinned blocked-Cholesky
+        //     schedule pair and the mixed GEMM+factorization stream.
+        //     `cholesky_speedup` is oblivious/CA makespan (> 1 means
+        //     criticality-awareness pays); `stream_mixed_p99` is the
+        //     tail sojourn of the pinned mixed-job stream through the
+        //     unified JobSpec DES. Both pure virtual time. ---
+        let (ca, obl) = crate::figures::dag::pinned_cholesky_pair();
+        t.push("dag_cholesky_speedup", obl.makespan_s / ca.makespan_s, Better::Higher);
+        let mixed = crate::figures::dag::mixed_stream_summary(true);
+        t.push("dag_stream_mixed_p99", mixed.sojourn_p99_s, Better::Lower);
         t
     }
 

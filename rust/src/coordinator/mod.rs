@@ -20,6 +20,7 @@
 pub mod server;
 
 use crate::blis::gemm::GemmShape;
+use crate::dag::JobSpec;
 use crate::fleet::{Fleet, FleetStrategy};
 use crate::model::PerfModel;
 use crate::native;
@@ -432,10 +433,10 @@ impl FleetDispatcher {
         strategy: FleetStrategy,
     ) -> Vec<Result<Response>> {
         let n = reqs.len();
-        let mut batcher: Batcher<GemmShape, usize> = Batcher::new(MAX_GROUP_LEN);
+        let mut batcher: Batcher<JobSpec, usize> = Batcher::new(MAX_GROUP_LEN);
         let mut groups: Vec<Vec<usize>> = Vec::new();
         for (i, r) in reqs.iter().enumerate() {
-            if let Some(g) = batcher.push(r.shape, i) {
+            if let Some(g) = batcher.push(JobSpec::Gemm(r.shape), i) {
                 groups.push(g);
             }
         }
@@ -614,12 +615,14 @@ impl StreamDispatcher {
         // twin, via the shared helper.
         let times: Vec<f64> = reqs.iter().map(|r| r.arrive_s).collect();
         let order = crate::fleet::sim::admission_order_by(&times);
-        // Shape-aware wave packing: same-shape subgroups of at most
-        // MAX_GROUP_LEN, in admission order.
-        let mut batcher: Batcher<GemmShape, usize> = Batcher::new(MAX_GROUP_LEN);
-        let mut groups: Vec<(GemmShape, Vec<usize>)> = Vec::new();
+        // Job-aware wave packing: same-job subgroups of at most
+        // MAX_GROUP_LEN, in admission order (ISSUE 10: the batch key is
+        // the [`JobSpec`], so non-GEMM jobs batch through the same
+        // machinery; coordinator requests are GEMMs today).
+        let mut batcher: Batcher<JobSpec, usize> = Batcher::new(MAX_GROUP_LEN);
+        let mut groups: Vec<(JobSpec, Vec<usize>)> = Vec::new();
         for &i in &order {
-            if let Some(g) = batcher.push_keyed(reqs[i].req.shape, i) {
+            if let Some(g) = batcher.push_keyed(JobSpec::Gemm(reqs[i].req.shape), i) {
                 groups.push(g);
             }
         }
@@ -638,7 +641,7 @@ impl StreamDispatcher {
             // behind a later one of another shape.
             admitted = order;
         } else {
-            let subgroups: Vec<(GemmShape, usize)> =
+            let subgroups: Vec<(JobSpec, usize)> =
                 groups.iter().map(|(s, g)| (*s, g.len())).collect();
             let plan = self.fleet().plan_wave(&subgroups, strategy);
             for (gp, (_, members)) in plan.groups.iter().zip(&groups) {

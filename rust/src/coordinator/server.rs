@@ -5,6 +5,10 @@
 //!
 //! ```text
 //! GEMM <m> <n> <k> <seed> <backend>   backend ∈ native|pjrt|pjrt:<variant>|sim
+//! JOB gemm <m> <n> <k> <seed> <backend>   alias for GEMM
+//! JOB chol <n> <nb> <seed>            blocked Cholesky via the task-DAG runtime
+//! JOB lu <n> <nb> <seed>              blocked LU (no pivoting), same runtime
+//! HELP
 //! PING
 //! STATS
 //! METRICS
@@ -14,19 +18,24 @@
 //! Operands are generated server-side from the deterministic seed
 //! (xorshift64*, same generator as the test suite) so the protocol stays
 //! tiny while results remain verifiable: the response carries a checksum
-//! any client can recompute.
+//! any client can recompute. Factorizations seed an SPD (chol) or
+//! diagonally-dominant (lu) matrix and run the [`crate::dag`] blocked
+//! algorithm on the coordinator's SoC under its auto schedule.
 //!
-//! Responses: `OK <id> <latency_ms> <gflops> <checksum> <backend>` or
+//! Responses: `OK <id> <latency_ms> <gflops> <checksum> <label>` or
 //! `ERR <message>`; `PONG`; `STATS <completed> <batches> <avg_gflops>`;
 //! `METRICS` replies with a one-line JSON snapshot of the coordinator's
-//! [`crate::obs::MetricsRegistry`] view (counters + derived gauges).
-//! Errors are structured: the first `ERR` token names the failure kind
-//! (`ERR empty_request`, `ERR unknown_command <token>`, `ERR <detail>`
-//! for malformed GEMM operands), so clients can dispatch on it without
-//! scraping prose.
+//! [`crate::obs::MetricsRegistry`] view (counters + derived gauges);
+//! `HELP` lists the command family on one line. Errors are structured:
+//! the first `ERR` token names the failure kind (`ERR empty_request`,
+//! `ERR unknown_command <token>`, `ERR unknown_job <kind>` for a `JOB`
+//! whose kind is not gemm/chol/lu, `ERR usage ...` for a known job with
+//! the wrong arity, `ERR <detail>` for malformed operands), so clients
+//! can dispatch on it without scraping prose.
 
 use crate::blis::gemm::GemmShape;
 use crate::coordinator::{Backend, Coordinator, Request};
+use crate::dag::FactorKind;
 use crate::util::rng::Rng;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -120,17 +129,49 @@ fn handle_line(coord: &Coordinator, ids: &AtomicU64, line: &str) -> LineResult {
             };
             LineResult::Reply(format!("STATS {} {} {:.3}", m.completed, m.batches, avg))
         }
+        ["HELP"] => LineResult::Reply(HELP_LINE.into()),
         ["GEMM", m, n, k, seed, backend] => {
             match gemm_request(coord, ids, m, n, k, seed, backend) {
                 Ok(s) => LineResult::Reply(s),
                 Err(e) => LineResult::Reply(format!("ERR {e}")),
             }
         }
+        // ISSUE 10: the JOB family routes every workload kind through
+        // one verb; `JOB gemm` is an exact alias for the legacy GEMM
+        // command, chol/lu run the task-DAG factorization runtime.
+        ["JOB", "gemm", m, n, k, seed, backend] => {
+            match gemm_request(coord, ids, m, n, k, seed, backend) {
+                Ok(s) => LineResult::Reply(s),
+                Err(e) => LineResult::Reply(format!("ERR {e}")),
+            }
+        }
+        ["JOB", kind @ ("chol" | "lu"), n, nb, seed] => {
+            match factor_request(coord, ids, kind, n, nb, seed) {
+                Ok(s) => LineResult::Reply(s),
+                Err(e) => LineResult::Reply(format!("ERR {e}")),
+            }
+        }
+        // Known job kind, wrong arity: say what the right call looks
+        // like instead of claiming the kind is unknown.
+        ["JOB", "gemm", ..] => {
+            LineResult::Reply("ERR usage JOB gemm <m> <n> <k> <seed> <backend>".into())
+        }
+        ["JOB", kind @ ("chol" | "lu"), ..] => {
+            LineResult::Reply(format!("ERR usage JOB {kind} <n> <nb> <seed>"))
+        }
+        // Structured unknown-job error, mirroring unknown_command.
+        ["JOB", kind, ..] => LineResult::Reply(format!("ERR unknown_job {kind}")),
+        ["JOB"] => LineResult::Reply("ERR usage JOB <kind> <args..> (HELP lists kinds)".into()),
         // Structured unknown-command error: a fixed kind token plus the
         // offending command, machine-dispatchable.
         [cmd, ..] => LineResult::Reply(format!("ERR unknown_command {cmd}")),
     }
 }
+
+/// One-line command reference returned by `HELP`.
+const HELP_LINE: &str = "OK commands: GEMM <m> <n> <k> <seed> <backend> | \
+JOB gemm <m> <n> <k> <seed> <backend> | JOB chol <n> <nb> <seed> | \
+JOB lu <n> <nb> <seed> | HELP | PING | STATS | METRICS | QUIT";
 
 /// The coordinator's counters as an observability registry — what the
 /// `METRICS` command serializes (one-line JSON) and `amp-gemm metrics`
@@ -199,6 +240,72 @@ fn gemm_request(
         resp.gflops,
         resp.checksum,
         resp.backend_label.replace(' ', "_")
+    ))
+}
+
+/// Execute `JOB chol|lu <n> <nb> <seed>`: seed a well-conditioned
+/// matrix server-side, run the blocked factorization through the
+/// task-DAG runtime ([`crate::dag::exec`]) on the coordinator's SoC
+/// under its auto schedule, and answer in the same `OK` grammar as
+/// GEMM (`gflops` counts the factorization's useful flops).
+fn factor_request(
+    coord: &Coordinator,
+    ids: &AtomicU64,
+    kind: &str,
+    n: &str,
+    nb: &str,
+    seed: &str,
+) -> Result<String, String> {
+    let kind = FactorKind::parse(kind)?;
+    let n: usize = n.parse().map_err(|_| format!("bad n '{n}'"))?;
+    let nb: usize = nb.parse().map_err(|_| format!("bad nb '{nb}'"))?;
+    let seed: u64 = seed.parse().map_err(|_| format!("bad seed '{seed}'"))?;
+    if n == 0 || n > 1024 {
+        return Err(format!("n out of range (1..=1024): {n}"));
+    }
+    if nb == 0 || nb > n || n % nb != 0 {
+        return Err(format!("nb must divide n (got n={n} nb={nb})"));
+    }
+    let mut rng = Rng::new(seed);
+    let mut a = rng.fill_matrix(n * n);
+    match kind {
+        // Symmetric + strictly diagonally dominant ⇒ SPD.
+        FactorKind::Cholesky => {
+            for i in 0..n {
+                for j in 0..i {
+                    let avg = 0.5 * (a[i * n + j] + a[j * n + i]);
+                    a[i * n + j] = avg;
+                    a[j * n + i] = avg;
+                }
+                a[i * n + i] = a[i * n + i].abs() + n as f64 + 1.0;
+            }
+        }
+        // Diagonal dominance keeps pivot-free LU stable.
+        FactorKind::Lu => {
+            for i in 0..n {
+                a[i * n + i] += n as f64 + 1.0;
+            }
+        }
+    }
+    let spec = coord.auto_spec();
+    let start = std::time::Instant::now();
+    let log = match kind {
+        FactorKind::Cholesky => crate::dag::exec::cholesky(coord.soc(), &spec, n, nb, &mut a),
+        FactorKind::Lu => crate::dag::exec::lu(coord.soc(), &spec, n, nb, &mut a),
+    };
+    let latency_s = start.elapsed().as_secs_f64();
+    debug_assert!(!log.executed.is_empty());
+    let checksum: f64 = a.iter().sum();
+    let gflops = if latency_s > 0.0 { kind.flops(n) / latency_s / 1e9 } else { 0.0 };
+    Ok(format!(
+        "OK {} {:.3} {:.3} {:.6e} native/{}_n{}_nb{}",
+        ids.fetch_add(1, Ordering::SeqCst),
+        latency_s * 1e3,
+        gflops,
+        checksum,
+        kind.label(),
+        n,
+        nb
     ))
 }
 
@@ -300,6 +407,66 @@ mod tests {
         let mut cl = Client::connect(h.addr).unwrap();
         assert_eq!(cl.call("BOGUS one two").unwrap(), "ERR unknown_command BOGUS");
         assert_eq!(cl.call("metrics").unwrap(), "ERR unknown_command metrics");
+        h.shutdown();
+    }
+
+    /// ISSUE 10: `JOB gemm` is a pure alias — same grammar, same
+    /// deterministic checksum as the legacy `GEMM` verb.
+    #[test]
+    fn job_gemm_aliases_the_legacy_command() {
+        let (_c, h) = start();
+        let mut cl = Client::connect(h.addr).unwrap();
+        let legacy = cl.call("GEMM 48 48 48 7 native").unwrap();
+        let alias = cl.call("JOB gemm 48 48 48 7 native").unwrap();
+        assert!(alias.starts_with("OK "), "{alias}");
+        let nth = |r: &str, i: usize| r.split_whitespace().nth(i).unwrap().to_string();
+        // Same checksum, gflops field present, same backend label.
+        assert_eq!(nth(&legacy, 4), nth(&alias, 4));
+        assert_eq!(nth(&legacy, 5), nth(&alias, 5));
+        h.shutdown();
+    }
+
+    /// ISSUE 10: factorizations round-trip over the wire — blocked
+    /// Cholesky and LU run through the task-DAG runtime, respond in
+    /// the GEMM grammar, and checksums are seed-deterministic.
+    #[test]
+    fn job_factorizations_over_the_wire() {
+        let (_c, h) = start();
+        let mut cl = Client::connect(h.addr).unwrap();
+        let r1 = cl.call("JOB chol 96 32 5 ").unwrap();
+        assert!(r1.starts_with("OK "), "{r1}");
+        assert!(r1.ends_with("native/chol_n96_nb32"), "{r1}");
+        let r2 = cl.call("JOB chol 96 32 5").unwrap();
+        let nth = |r: &str, i: usize| r.split_whitespace().nth(i).unwrap().to_string();
+        assert_eq!(nth(&r1, 4), nth(&r2, 4), "same seed → same checksum");
+        let lu = cl.call("JOB lu 64 32 9").unwrap();
+        assert!(lu.starts_with("OK "), "{lu}");
+        assert!(lu.ends_with("native/lu_n64_nb32"), "{lu}");
+        assert_ne!(nth(&r1, 4), nth(&lu, 4));
+        h.shutdown();
+    }
+
+    /// ISSUE 10: structured JOB errors — unknown kinds get a fixed
+    /// `ERR unknown_job` token, bad arity and bad operands stay
+    /// non-fatal, and `HELP` lists the whole command family.
+    #[test]
+    fn job_errors_and_help_are_structured() {
+        let (_c, h) = start();
+        let mut cl = Client::connect(h.addr).unwrap();
+        assert_eq!(cl.call("JOB qr 96 32 1").unwrap(), "ERR unknown_job qr");
+        assert_eq!(
+            cl.call("JOB chol 96").unwrap(),
+            "ERR usage JOB chol <n> <nb> <seed>"
+        );
+        assert!(cl.call("JOB chol 100 32 1").unwrap().starts_with("ERR"), "nb must divide n");
+        assert!(cl.call("JOB lu 2048 64 1").unwrap().starts_with("ERR"), "n capped at 1024");
+        let help = cl.call("HELP").unwrap();
+        assert!(help.starts_with("OK commands:"), "{help}");
+        for verb in ["GEMM", "JOB gemm", "JOB chol", "JOB lu", "HELP", "STATS"] {
+            assert!(help.contains(verb), "HELP missing {verb}: {help}");
+        }
+        // Connection still alive afterwards.
+        assert_eq!(cl.call("PING").unwrap(), "PONG");
         h.shutdown();
     }
 

@@ -1,0 +1,331 @@
+//! Numeric executor for [`TaskGraph`]s: runs the tiled kernels in
+//! topological (id) order on real row-major matrices.
+//!
+//! The per-tile kernels reuse the existing packing/control-tree layer:
+//! every trailing update is a [`crate::native::gemm_parallel`] call
+//! under the caller's [`ScheduleSpec`], and the Cholesky panel solve
+//! goes through [`crate::blis::level3::trsm_lower`]. Only the O(nb³)
+//! diagonal-tile factorizations and the LU unit/upper tile solves are
+//! sequential — the asymptotically dominant work flows through the
+//! scheduled GEMM path, which is the whole point of the GEMM-based
+//! decomposition (§6 / arXiv:1511.02171).
+
+use crate::blis::gemm::GemmShape;
+use crate::blis::level3::trsm_lower;
+use crate::dag::graph::{FactorKind, KernelKind, TaskGraph};
+use crate::native::gemm_parallel;
+use crate::sched::ScheduleSpec;
+use crate::soc::SocSpec;
+
+/// Execution record: task ids in the order they ran — the
+/// exactly-once / topological-order witness the property tests check.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecLog {
+    pub executed: Vec<usize>,
+}
+
+/// Blocked Cholesky of the `n × n` matrix `a` (lower triangle result;
+/// the strictly-upper part is left unspecified). `n` must be a
+/// multiple of `nb`.
+pub fn cholesky(soc: &SocSpec, spec: &ScheduleSpec, n: usize, nb: usize, a: &mut [f64]) -> ExecLog {
+    factorize(soc, spec, &TaskGraph::cholesky(n, nb), a)
+}
+
+/// Blocked LU (no pivoting) of the `n × n` matrix `a`, in place:
+/// L (unit lower) and U packed in the usual LAPACK layout.
+pub fn lu(soc: &SocSpec, spec: &ScheduleSpec, n: usize, nb: usize, a: &mut [f64]) -> ExecLog {
+    factorize(soc, spec, &TaskGraph::lu(n, nb), a)
+}
+
+/// Execute `graph` on `a`, task by task in id order (ids are
+/// topological by construction, so dependencies are always satisfied).
+pub fn factorize(
+    soc: &SocSpec,
+    spec: &ScheduleSpec,
+    graph: &TaskGraph,
+    a: &mut [f64],
+) -> ExecLog {
+    let (n, nb) = (graph.n, graph.nb);
+    assert!(a.len() >= n * n, "matrix buffer too small: {} < {}", a.len(), n * n);
+    let mut executed = Vec::with_capacity(graph.num_tasks());
+    for t in &graph.tasks {
+        match (graph.kind, t.kind) {
+            (_, KernelKind::Potrf) => {
+                let mut d = gather(a, n, nb, t.row, t.col);
+                tile_potrf(&mut d, nb);
+                scatter(a, n, nb, t.row, t.col, &d);
+            }
+            (_, KernelKind::Getrf) => {
+                let mut d = gather(a, n, nb, t.row, t.col);
+                tile_getrf(&mut d, nb);
+                scatter(a, n, nb, t.row, t.col, &d);
+            }
+            (FactorKind::Cholesky, KernelKind::Trsm) => {
+                // A_ik := A_ik · L_kk⁻ᵀ, via the left lower solve:
+                // L_kk · Xᵀ = A_ikᵀ.
+                let l = gather(a, n, nb, t.step, t.step);
+                let mut bt = transpose(&gather(a, n, nb, t.row, t.col), nb);
+                trsm_lower(soc, spec, nb, nb, &l, &mut bt, nb.div_ceil(2).max(1));
+                scatter(a, n, nb, t.row, t.col, &transpose(&bt, nb));
+            }
+            (FactorKind::Cholesky, KernelKind::Syrk) => {
+                // A_ii -= A_ik · A_ikᵀ (full tile update; only the
+                // lower half is ever read downstream).
+                let p = gather(a, n, nb, t.row, t.step);
+                let neg: Vec<f64> = p.iter().map(|&x| -x).collect();
+                let pt = transpose(&p, nb);
+                let mut c = gather(a, n, nb, t.row, t.col);
+                gemm_parallel(soc, spec, GemmShape::square(nb), &neg, &pt, &mut c);
+                scatter(a, n, nb, t.row, t.col, &c);
+            }
+            (FactorKind::Cholesky, KernelKind::GemmUpd) => {
+                // A_ij -= A_ik · A_jkᵀ.
+                let neg: Vec<f64> =
+                    gather(a, n, nb, t.row, t.step).iter().map(|&x| -x).collect();
+                let bt = transpose(&gather(a, n, nb, t.col, t.step), nb);
+                let mut c = gather(a, n, nb, t.row, t.col);
+                gemm_parallel(soc, spec, GemmShape::square(nb), &neg, &bt, &mut c);
+                scatter(a, n, nb, t.row, t.col, &c);
+            }
+            (FactorKind::Lu, KernelKind::Trsm) => {
+                let d = gather(a, n, nb, t.step, t.step);
+                let mut b = gather(a, n, nb, t.row, t.col);
+                if t.row == t.step {
+                    // Row panel: A_kj := L_kk⁻¹ · A_kj (unit lower).
+                    tile_trsm_unit_lower_left(&d, &mut b, nb);
+                } else {
+                    // Column panel: A_ik := A_ik · U_kk⁻¹.
+                    tile_trsm_upper_right(&d, &mut b, nb);
+                }
+                scatter(a, n, nb, t.row, t.col, &b);
+            }
+            (FactorKind::Lu, KernelKind::GemmUpd) => {
+                // A_ij -= A_ik · A_kj.
+                let neg: Vec<f64> =
+                    gather(a, n, nb, t.row, t.step).iter().map(|&x| -x).collect();
+                let b = gather(a, n, nb, t.step, t.col);
+                let mut c = gather(a, n, nb, t.row, t.col);
+                gemm_parallel(soc, spec, GemmShape::square(nb), &neg, &b, &mut c);
+                scatter(a, n, nb, t.row, t.col, &c);
+            }
+            (kind, other) => unreachable!("{other:?} task in a {kind:?} graph"),
+        }
+        executed.push(t.id);
+    }
+    ExecLog { executed }
+}
+
+/// Copy tile (block `row`, block `col`) out of the `n × n` matrix.
+fn gather(a: &[f64], n: usize, nb: usize, row: usize, col: usize) -> Vec<f64> {
+    let mut t = vec![0.0; nb * nb];
+    for r in 0..nb {
+        let src = (row * nb + r) * n + col * nb;
+        t[r * nb..(r + 1) * nb].copy_from_slice(&a[src..src + nb]);
+    }
+    t
+}
+
+/// Write tile (block `row`, block `col`) back.
+fn scatter(a: &mut [f64], n: usize, nb: usize, row: usize, col: usize, t: &[f64]) {
+    for r in 0..nb {
+        let dst = (row * nb + r) * n + col * nb;
+        a[dst..dst + nb].copy_from_slice(&t[r * nb..(r + 1) * nb]);
+    }
+}
+
+fn transpose(t: &[f64], nb: usize) -> Vec<f64> {
+    let mut out = vec![0.0; nb * nb];
+    for r in 0..nb {
+        for c in 0..nb {
+            out[c * nb + r] = t[r * nb + c];
+        }
+    }
+    out
+}
+
+/// Unblocked Cholesky of one tile (lower, in place; the strictly-upper
+/// part is left untouched).
+fn tile_potrf(t: &mut [f64], nb: usize) {
+    for j in 0..nb {
+        let mut d = t[j * nb + j];
+        for p in 0..j {
+            d -= t[j * nb + p] * t[j * nb + p];
+        }
+        assert!(d > 0.0, "tile lost positive definiteness at column {j}: pivot {d}");
+        let d = d.sqrt();
+        t[j * nb + j] = d;
+        for i in j + 1..nb {
+            let mut s = t[i * nb + j];
+            for p in 0..j {
+                s -= t[i * nb + p] * t[j * nb + p];
+            }
+            t[i * nb + j] = s / d;
+        }
+    }
+}
+
+/// Unblocked Doolittle LU of one tile (no pivoting), L unit lower and
+/// U packed in place.
+fn tile_getrf(t: &mut [f64], nb: usize) {
+    for k in 0..nb {
+        let pivot = t[k * nb + k];
+        assert!(pivot.abs() > 1e-300, "zero pivot at {k} (LU runs without pivoting)");
+        for i in k + 1..nb {
+            let f = t[i * nb + k] / pivot;
+            t[i * nb + k] = f;
+            for j in k + 1..nb {
+                t[i * nb + j] -= f * t[k * nb + j];
+            }
+        }
+    }
+}
+
+/// Solve L·X = B in place where L is the *unit* lower triangle of a
+/// packed LU tile.
+fn tile_trsm_unit_lower_left(l: &[f64], b: &mut [f64], nb: usize) {
+    for r in 0..nb {
+        for p in 0..r {
+            let f = l[r * nb + p];
+            if f != 0.0 {
+                for j in 0..nb {
+                    b[r * nb + j] -= f * b[p * nb + j];
+                }
+            }
+        }
+    }
+}
+
+/// Solve X·U = B in place where U is the upper triangle of a packed LU
+/// tile.
+fn tile_trsm_upper_right(u: &[f64], b: &mut [f64], nb: usize) {
+    for r in 0..nb {
+        for c in 0..nb {
+            let mut s = b[r * nb + c];
+            for p in 0..c {
+                s -= b[r * nb + p] * u[p * nb + c];
+            }
+            b[r * nb + c] = s / u[c * nb + c];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::SocSpec;
+    use crate::util::rng::Rng;
+    use crate::util::stats::{gemm_tolerance, max_abs_diff};
+
+    fn soc() -> SocSpec {
+        SocSpec::exynos5422()
+    }
+
+    fn spec() -> ScheduleSpec {
+        ScheduleSpec::ca_das()
+    }
+
+    /// A well-conditioned SPD matrix: A = L·Lᵀ with a boosted diagonal.
+    fn spd(rng: &mut Rng, n: usize) -> Vec<f64> {
+        let mut l = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                l[i * n + j] = rng.gen_f64(-1.0, 1.0);
+            }
+            l[i * n + i] += 2.0 + n as f64 / 8.0;
+        }
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..=i.min(j) {
+                    s += l[i * n + p] * l[j * n + p];
+                }
+                a[i * n + j] = s;
+            }
+        }
+        a
+    }
+
+    fn lower_of(a: &[f64], n: usize) -> Vec<f64> {
+        let mut out = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                out[i * n + j] = a[i * n + j];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_cholesky_matches_unblocked_reference() {
+        let (n, nb) = (192, 64);
+        let mut rng = Rng::new(0xC401);
+        let a0 = spd(&mut rng, n);
+
+        let mut reference = a0.clone();
+        tile_potrf(&mut reference, n); // unblocked on the full matrix
+
+        let mut blocked = a0.clone();
+        let log = cholesky(&soc(), &spec(), n, nb, &mut blocked);
+        assert_eq!(log.executed, (0..log.executed.len()).collect::<Vec<_>>());
+
+        let d = max_abs_diff(&lower_of(&reference, n), &lower_of(&blocked, n));
+        assert!(d < gemm_tolerance(n), "blocked vs unblocked Cholesky diff {d}");
+
+        // And L·Lᵀ reconstructs A.
+        let l = lower_of(&blocked, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = 0.0;
+                for p in 0..=j {
+                    s += l[i * n + p] * l[j * n + p];
+                }
+                let d = (s - a0[i * n + j]).abs();
+                assert!(d < gemm_tolerance(n) * 10.0, "A[{i}][{j}] off by {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_lu_reconstructs_the_matrix() {
+        let (n, nb) = (160, 32);
+        let mut rng = Rng::new(0x1007);
+        let mut a0 = vec![0.0; n * n];
+        for (i, v) in a0.iter_mut().enumerate() {
+            *v = rng.gen_f64(-1.0, 1.0);
+            if i % (n + 1) == 0 {
+                *v += n as f64; // diagonally dominant → pivot-free LU is stable
+            }
+        }
+        let mut f = a0.clone();
+        let log = lu(&soc(), &spec(), n, nb, &mut f);
+        assert_eq!(log.executed.len(), TaskGraph::lu(n, nb).num_tasks());
+
+        // Rebuild A = L·U from the packed factors.
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                let lim = i.min(j);
+                for p in 0..lim {
+                    s += f[i * n + p] * f[p * n + j];
+                }
+                s += if i <= j { f[i * n + j] } else { f[i * n + j] * f[j * n + j] };
+                // (i <= j: L_ii = 1 contributes U_ij; i > j: L_ij·U_jj.)
+                let d = (s - a0[i * n + j]).abs();
+                assert!(d < gemm_tolerance(n) * 10.0, "A[{i}][{j}] off by {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_tile_graphs_degenerate_to_the_unblocked_kernels() {
+        let n = 48;
+        let mut rng = Rng::new(7);
+        let a0 = spd(&mut rng, n);
+        let mut one = a0.clone();
+        cholesky(&soc(), &spec(), n, n, &mut one);
+        let mut reference = a0.clone();
+        tile_potrf(&mut reference, n);
+        assert_eq!(lower_of(&one, n), lower_of(&reference, n), "nb = n is exactly tile_potrf");
+    }
+}

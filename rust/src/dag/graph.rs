@@ -1,0 +1,366 @@
+//! Tiled task graphs for blocked dense factorizations.
+//!
+//! A [`TaskGraph`] is a vector of [`Task`]s whose ids are a topological
+//! order *by construction*: builders emit tasks in the right-looking
+//! elimination order and every dependency points at an earlier id (each
+//! tile tracks its last writer). That invariant is what lets the
+//! numeric executor ([`crate::dag::exec`]) simply walk ids 0..n and the
+//! schedulers treat the id as a deterministic tiebreaker.
+
+/// Which factorization a graph (or a `JobSpec::Factor`) performs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum FactorKind {
+    /// A = L·Lᵀ, A symmetric positive definite, lower stored.
+    Cholesky,
+    /// A = L·U without pivoting (L unit lower), for diagonally
+    /// dominant operands.
+    Lu,
+}
+
+impl FactorKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            FactorKind::Cholesky => "chol",
+            FactorKind::Lu => "lu",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FactorKind, String> {
+        match s {
+            "chol" | "cholesky" => Ok(FactorKind::Cholesky),
+            "lu" => Ok(FactorKind::Lu),
+            other => Err(format!("unknown factorization '{other}' (chol|lu)")),
+        }
+    }
+
+    /// Useful flops of the full factorization of an `n × n` matrix.
+    pub fn flops(self, n: usize) -> f64 {
+        let n = n as f64;
+        match self {
+            FactorKind::Cholesky => n * n * n / 3.0,
+            FactorKind::Lu => 2.0 * n * n * n / 3.0,
+        }
+    }
+}
+
+/// The per-tile kernel a task runs. Costs are expressed as fractions
+/// of one full `nb³` GEMM tile update (`2·nb³` flops) — the quantity
+/// one DES run per cluster calibrates ([`crate::dag::sched::tile_costs`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum KernelKind {
+    /// Cholesky of the diagonal tile: `nb³/3` flops.
+    Potrf,
+    /// LU of the diagonal tile: `2·nb³/3` flops.
+    Getrf,
+    /// Triangular panel solve: `nb³` flops.
+    Trsm,
+    /// Symmetric rank-k tile update (lower half): `nb³` flops.
+    Syrk,
+    /// Trailing GEMM tile update: `2·nb³` flops.
+    GemmUpd,
+}
+
+impl KernelKind {
+    /// This kernel's flops as a fraction of the `2·nb³` GEMM tile.
+    pub fn gemm_fraction(self) -> f64 {
+        match self {
+            KernelKind::Potrf => 1.0 / 6.0,
+            KernelKind::Getrf => 1.0 / 3.0,
+            KernelKind::Trsm => 0.5,
+            KernelKind::Syrk => 0.5,
+            KernelKind::GemmUpd => 1.0,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelKind::Potrf => "potrf",
+            KernelKind::Getrf => "getrf",
+            KernelKind::Trsm => "trsm",
+            KernelKind::Syrk => "syrk",
+            KernelKind::GemmUpd => "gemm",
+        }
+    }
+}
+
+/// One tiled kernel invocation: writes tile `(row, col)` at elimination
+/// step `step`, after every task in `deps` (all with smaller ids).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Task {
+    pub id: usize,
+    pub kind: KernelKind,
+    /// Block-row of the output tile.
+    pub row: usize,
+    /// Block-column of the output tile.
+    pub col: usize,
+    /// Elimination step (the `k` of the right-looking outer loop).
+    pub step: usize,
+    /// Ids of the tasks that must finish first; strictly smaller than
+    /// `id`, so id order is a topological order.
+    pub deps: Vec<usize>,
+}
+
+/// A blocked factorization as a dependency graph of tiled kernels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskGraph {
+    pub kind: FactorKind,
+    /// Matrix dimension; must be a multiple of `nb`.
+    pub n: usize,
+    /// Tile (block) size.
+    pub nb: usize,
+    /// Tiles per dimension (`n / nb`).
+    pub nt: usize,
+    pub tasks: Vec<Task>,
+}
+
+impl TaskGraph {
+    /// Build the graph for `kind` on an `n × n` matrix with `nb × nb`
+    /// tiles. `n` must be a positive multiple of `nb`.
+    pub fn build(kind: FactorKind, n: usize, nb: usize) -> TaskGraph {
+        match kind {
+            FactorKind::Cholesky => TaskGraph::cholesky(n, nb),
+            FactorKind::Lu => TaskGraph::lu(n, nb),
+        }
+    }
+
+    fn builder(kind: FactorKind, n: usize, nb: usize) -> (TaskGraph, TileOwners) {
+        assert!(
+            nb >= 1 && n >= nb && n % nb == 0,
+            "factor graph needs n a positive multiple of nb, got n={n} nb={nb}"
+        );
+        let nt = n / nb;
+        (
+            TaskGraph { kind, n, nb, nt, tasks: Vec::new() },
+            TileOwners { last_writer: vec![None; nt * nt], nt },
+        )
+    }
+
+    /// Right-looking blocked Cholesky (arXiv:1509.02058's running
+    /// example): per step `k`, `potrf(k,k)`, a `trsm` column panel, then
+    /// `syrk` diagonal and `gemm` off-diagonal trailing updates.
+    pub fn cholesky(n: usize, nb: usize) -> TaskGraph {
+        let (mut g, mut own) = TaskGraph::builder(FactorKind::Cholesky, n, nb);
+        for k in 0..g.nt {
+            let potrf = g.push(KernelKind::Potrf, k, k, k, own.reads(&[(k, k)]));
+            own.write(k, k, potrf);
+            let trsm: Vec<usize> = (k + 1..g.nt)
+                .map(|i| {
+                    let t = g.push(KernelKind::Trsm, i, k, k, own.reads(&[(k, k), (i, k)]));
+                    own.write(i, k, t);
+                    t
+                })
+                .collect();
+            for i in k + 1..g.nt {
+                let ti = trsm[i - k - 1];
+                let s = g.push(KernelKind::Syrk, i, i, k, own.reads_plus(&[(i, i)], &[ti]));
+                own.write(i, i, s);
+                for j in k + 1..i {
+                    let tj = trsm[j - k - 1];
+                    let u =
+                        g.push(KernelKind::GemmUpd, i, j, k, own.reads_plus(&[(i, j)], &[ti, tj]));
+                    own.write(i, j, u);
+                }
+            }
+        }
+        g
+    }
+
+    /// Right-looking blocked LU without pivoting: per step `k`,
+    /// `getrf(k,k)`, a `trsm` row panel (U tiles) and column panel
+    /// (L tiles), then `gemm` trailing updates.
+    pub fn lu(n: usize, nb: usize) -> TaskGraph {
+        let (mut g, mut own) = TaskGraph::builder(FactorKind::Lu, n, nb);
+        for k in 0..g.nt {
+            let getrf = g.push(KernelKind::Getrf, k, k, k, own.reads(&[(k, k)]));
+            own.write(k, k, getrf);
+            let row: Vec<usize> = (k + 1..g.nt)
+                .map(|j| {
+                    let t = g.push(KernelKind::Trsm, k, j, k, own.reads(&[(k, k), (k, j)]));
+                    own.write(k, j, t);
+                    t
+                })
+                .collect();
+            let col: Vec<usize> = (k + 1..g.nt)
+                .map(|i| {
+                    let t = g.push(KernelKind::Trsm, i, k, k, own.reads(&[(k, k), (i, k)]));
+                    own.write(i, k, t);
+                    t
+                })
+                .collect();
+            for i in k + 1..g.nt {
+                for j in k + 1..g.nt {
+                    let deps = vec![col[i - k - 1], row[j - k - 1]];
+                    let u = g.push(KernelKind::GemmUpd, i, j, k, own.reads_plus(&[(i, j)], &deps));
+                    own.write(i, j, u);
+                }
+            }
+        }
+        g
+    }
+
+    fn push(&mut self, kind: KernelKind, row: usize, col: usize, step: usize, deps: Vec<usize>) -> usize {
+        let id = self.tasks.len();
+        debug_assert!(deps.iter().all(|&d| d < id), "deps must precede the task");
+        self.tasks.push(Task { id, kind, row, col, step, deps });
+        id
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Successor adjacency (who waits on each task).
+    pub fn successors(&self) -> Vec<Vec<usize>> {
+        let mut succ = vec![Vec::new(); self.tasks.len()];
+        for t in &self.tasks {
+            for &d in &t.deps {
+                succ[d].push(t.id);
+            }
+        }
+        succ
+    }
+
+    /// Check the structural invariants: ids are dense and ordered,
+    /// every dependency points at an earlier task (id order is
+    /// topological) with no duplicates.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, t) in self.tasks.iter().enumerate() {
+            if t.id != i {
+                return Err(format!("task {i} carries id {}", t.id));
+            }
+            let mut seen = std::collections::HashSet::new();
+            for &d in &t.deps {
+                if d >= i {
+                    return Err(format!("task {i} depends on later task {d}"));
+                }
+                if !seen.insert(d) {
+                    return Err(format!("task {i} lists dep {d} twice"));
+                }
+            }
+            if t.row >= self.nt || t.col >= self.nt || t.step >= self.nt {
+                return Err(format!("task {i} addresses tile out of range"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total graph flops — the tile-kernel sum, which telescopes to the
+    /// closed form of [`FactorKind::flops`] up to the blocked
+    /// algorithm's tile granularity.
+    pub fn flops(&self) -> f64 {
+        let tile = 2.0 * (self.nb as f64).powi(3);
+        self.tasks.iter().map(|t| t.kind.gemm_fraction() * tile).sum()
+    }
+}
+
+/// Last writer of every tile — what turns the elimination order into
+/// dependency edges while keeping deps strictly backwards.
+struct TileOwners {
+    last_writer: Vec<Option<usize>>,
+    nt: usize,
+}
+
+impl TileOwners {
+    fn reads(&self, tiles: &[(usize, usize)]) -> Vec<usize> {
+        self.reads_plus(tiles, &[])
+    }
+
+    /// Deps = last writers of the read tiles, plus explicit extra task
+    /// ids, deduplicated, in ascending order (determinism).
+    fn reads_plus(&self, tiles: &[(usize, usize)], extra: &[usize]) -> Vec<usize> {
+        let mut deps: Vec<usize> = tiles
+            .iter()
+            .filter_map(|&(r, c)| self.last_writer[r * self.nt + c])
+            .chain(extra.iter().copied())
+            .collect();
+        deps.sort_unstable();
+        deps.dedup();
+        deps
+    }
+
+    fn write(&mut self, row: usize, col: usize, id: usize) {
+        self.last_writer[row * self.nt + col] = Some(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_task_counts_match_closed_form() {
+        // nt tiles: potrf nt, trsm nt(nt-1)/2, syrk nt(nt-1)/2,
+        // gemm nt(nt-1)(nt-2)/6.
+        for nt in 1..=6usize {
+            let g = TaskGraph::cholesky(64 * nt, 64);
+            g.validate().unwrap();
+            assert_eq!(g.nt, nt);
+            let count = |k: KernelKind| g.tasks.iter().filter(|t| t.kind == k).count();
+            assert_eq!(count(KernelKind::Potrf), nt);
+            assert_eq!(count(KernelKind::Trsm), nt * (nt - 1) / 2);
+            assert_eq!(count(KernelKind::Syrk), nt * (nt - 1) / 2);
+            assert_eq!(count(KernelKind::GemmUpd), nt * (nt - 1) * (nt.max(2) - 2) / 6);
+        }
+    }
+
+    #[test]
+    fn lu_task_counts_match_closed_form() {
+        for nt in 1..=5usize {
+            let g = TaskGraph::lu(32 * nt, 32);
+            g.validate().unwrap();
+            let count = |k: KernelKind| g.tasks.iter().filter(|t| t.kind == k).count();
+            assert_eq!(count(KernelKind::Getrf), nt);
+            assert_eq!(count(KernelKind::Trsm), nt * (nt - 1));
+            let gemms: usize = (0..nt).map(|k| (nt - 1 - k) * (nt - 1 - k)).sum();
+            assert_eq!(count(KernelKind::GemmUpd), gemms);
+        }
+    }
+
+    #[test]
+    fn graph_flops_approach_closed_form() {
+        // The blocked sum equals the closed form up to O(n²·nb) tile
+        // granularity; at nt = 8 they are within a few percent.
+        for kind in [FactorKind::Cholesky, FactorKind::Lu] {
+            let g = TaskGraph::build(kind, 1024, 128);
+            let exact = kind.flops(1024);
+            let rel = (g.flops() - exact).abs() / exact;
+            assert!(rel < 0.25, "{kind:?}: blocked {} vs exact {exact}", g.flops());
+        }
+    }
+
+    #[test]
+    fn dependencies_capture_the_elimination_order() {
+        let g = TaskGraph::cholesky(384, 128); // nt = 3
+        g.validate().unwrap();
+        // The final potrf transitively depends on everything that
+        // writes tile (2,2): syrk at steps 0 and 1.
+        let last = g.tasks.iter().rev().find(|t| t.kind == KernelKind::Potrf).unwrap();
+        assert_eq!((last.row, last.col), (2, 2));
+        let dep = &g.tasks[*last.deps.last().unwrap()];
+        assert_eq!(dep.kind, KernelKind::Syrk);
+        assert_eq!((dep.row, dep.col, dep.step), (2, 2, 1));
+        // Trsm depends on its step's potrf.
+        let trsm = g.tasks.iter().find(|t| t.kind == KernelKind::Trsm).unwrap();
+        assert!(trsm.deps.iter().any(|&d| g.tasks[d].kind == KernelKind::Potrf));
+    }
+
+    #[test]
+    fn successors_mirror_deps() {
+        let g = TaskGraph::lu(256, 64);
+        let succ = g.successors();
+        for t in &g.tasks {
+            for &d in &t.deps {
+                assert!(succ[d].contains(&t.id));
+            }
+        }
+        // Sources and sinks exist.
+        assert!(g.tasks[0].deps.is_empty());
+        assert!(succ.last().unwrap().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of nb")]
+    fn ragged_tiling_rejected() {
+        TaskGraph::cholesky(100, 64);
+    }
+}

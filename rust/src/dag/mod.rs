@@ -1,0 +1,253 @@
+//! Task-DAG factorization runtime and the unified `JobSpec` workload
+//! API (DESIGN.md §12).
+//!
+//! The paper schedules the loops of *one* GEMM across asymmetric
+//! clusters; its §6 roadmap (and the follow-on work, arXiv:1511.02171
+//! for the BLAS-3 family, arXiv:1509.02058 for criticality-aware task
+//! scheduling of dense factorizations) points at the natural next
+//! level: a *graph* of tiled kernels. This module supplies it:
+//!
+//! * [`graph`] — [`TaskGraph`]: tiled right-looking blocked Cholesky
+//!   and LU builders whose tasks are per-tile kernels
+//!   (`potrf`/`getrf`/`trsm`/`syrk`/`gemm`-panel) with structural
+//!   dependencies, ids in topological order by construction;
+//! * [`sched`] — deterministic list scheduling of a [`TaskGraph`]
+//!   across the clusters of a SoC: **criticality-aware** (critical-path
+//!   tasks pinned to the fastest cluster at its tuned `(mc, kc)`,
+//!   trailing updates split in proportion to the existing
+//!   [`crate::sched::Weights`] vector, so
+//!   `WeightSource::{Analytical, Empirical, Live}` all drive it
+//!   unchanged) vs the **cluster-oblivious** round-robin comparator;
+//! * [`exec`] — the numeric executor: runs a graph's tasks in
+//!   topological order on real row-major matrices, per-tile kernels
+//!   delegating to [`crate::blis::level3`] (`trsm_lower`) and the
+//!   packed parallel [`crate::native::gemm_parallel`] for every
+//!   trailing update, verified against naive reference factorizations;
+//! * [`JobSpec`] — the workload unit the dispatch layers now share.
+//!   `Arrival`, the request `Batcher` key, [`crate::fleet::Fleet::plan_wave`]
+//!   and the stream DES all carry a `JobSpec` instead of a raw
+//!   [`GemmShape`], so factorizations and level-3 ops flow through the
+//!   same queues, caches and stats as plain GEMMs. GEMM-only streams
+//!   are bit-for-bit the old API (pinned by `tests/stream_props.rs`
+//!   and `tests/fleet_golden.rs`).
+
+pub mod exec;
+pub mod graph;
+pub mod sched;
+
+pub use graph::{FactorKind, KernelKind, Task, TaskGraph};
+pub use sched::{factor_price, schedule, tile_costs, DagPolicy, DagSchedule, TileCosts};
+
+use crate::blis::gemm::GemmShape;
+
+/// Level-3 BLAS operations served through the job API. Each maps to a
+/// [`crate::blis::level3`] kernel whose DES cost profile is that of an
+/// equivalent GEMM ([`JobSpec::equiv_gemm`]) scaled by the op's flop
+/// fraction ([`JobSpec::cost_scale`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level3Op {
+    /// `symm_lower`: C += A·B with A symmetric (lower stored) — a full
+    /// GEMM's worth of flops.
+    SymmLower,
+    /// `trsm_lower`: solve L·X = B in place — half a GEMM.
+    TrsmLower,
+    /// `syrk_lower`: C_lower += A·Aᵀ — half a GEMM.
+    SyrkLower,
+    /// `trmm_lower_left`: B := L·B — half a GEMM.
+    TrmmLower,
+}
+
+impl Level3Op {
+    pub fn label(self) -> &'static str {
+        match self {
+            Level3Op::SymmLower => "symm",
+            Level3Op::TrsmLower => "trsm",
+            Level3Op::SyrkLower => "syrk",
+            Level3Op::TrmmLower => "trmm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Level3Op, String> {
+        match s {
+            "symm" => Ok(Level3Op::SymmLower),
+            "trsm" => Ok(Level3Op::TrsmLower),
+            "syrk" => Ok(Level3Op::SyrkLower),
+            "trmm" => Ok(Level3Op::TrmmLower),
+            other => Err(format!("unknown level-3 op '{other}' (symm|trsm|syrk|trmm)")),
+        }
+    }
+}
+
+/// One unit of schedulable work — the workload vocabulary every
+/// dispatch layer now shares (`Arrival`, `Batcher` keys,
+/// `Fleet::plan_wave`, the stream DES, the `JOB` wire command).
+///
+/// `Gemm` is deliberately the first variant: the derived `Ord` then
+/// sorts GEMM-only job sets exactly as the raw [`GemmShape`] `Ord`
+/// did, so every `BTreeMap` tally and per-job stats vector of a
+/// GEMM-only stream iterates — and therefore sums — in the historical
+/// order, keeping the old entry points bit-for-bit through the new API.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum JobSpec {
+    /// A plain GEMM — the paper's workload, unchanged.
+    Gemm(GemmShape),
+    /// One level-3 BLAS op; `m`/`n` are the operand dimensions
+    /// (`m` is the triangular/symmetric dimension, `n` the panel width;
+    /// for `syrk`, `m` is the output dimension and `n` the inner `k`).
+    Level3 { op: Level3Op, m: usize, n: usize },
+    /// A blocked factorization of an `n × n` matrix with tile size
+    /// `nb`, executed as a task DAG ([`TaskGraph`]).
+    Factor { kind: FactorKind, n: usize, nb: usize },
+}
+
+impl From<GemmShape> for JobSpec {
+    fn from(shape: GemmShape) -> JobSpec {
+        JobSpec::Gemm(shape)
+    }
+}
+
+impl JobSpec {
+    /// The GEMM shape, if this is a plain GEMM job.
+    pub fn gemm(self) -> Option<GemmShape> {
+        match self {
+            JobSpec::Gemm(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Useful floating-point operations of one job.
+    pub fn flops(self) -> f64 {
+        match self {
+            JobSpec::Gemm(s) => s.flops(),
+            JobSpec::Level3 { op, m, n } => {
+                let (m, n) = (m as f64, n as f64);
+                match op {
+                    // symm_lower runs a full m×n×m GEMM's flops.
+                    Level3Op::SymmLower => 2.0 * m * m * n,
+                    Level3Op::TrsmLower | Level3Op::TrmmLower | Level3Op::SyrkLower => m * m * n,
+                }
+            }
+            JobSpec::Factor { kind, n, .. } => kind.flops(n),
+        }
+    }
+
+    /// The GEMM whose DES run profiles this job's per-item service
+    /// cost. For a `Factor` job this is the `nb × nb` *tile* GEMM (the
+    /// DAG scheduler prices the whole graph from it); level-3 ops map
+    /// to the dense GEMM their blocked implementation performs.
+    pub fn equiv_gemm(self) -> GemmShape {
+        match self {
+            JobSpec::Gemm(s) => s,
+            JobSpec::Level3 { op, m, n } => match op {
+                Level3Op::SymmLower | Level3Op::TrsmLower | Level3Op::TrmmLower => {
+                    GemmShape { m, n, k: m }
+                }
+                Level3Op::SyrkLower => GemmShape { m, n: m, k: n },
+            },
+            JobSpec::Factor { nb, .. } => GemmShape::square(nb),
+        }
+    }
+
+    /// Fraction of the equivalent GEMM's cost this job incurs
+    /// (time and energy scale together — same kernel, fewer flops).
+    /// `Factor` jobs are not priced this way — see
+    /// [`sched::factor_price`] — so they report 1.0.
+    pub fn cost_scale(self) -> f64 {
+        match self {
+            JobSpec::Gemm(_) => 1.0,
+            JobSpec::Level3 { op, .. } => match op {
+                Level3Op::SymmLower => 1.0,
+                Level3Op::TrsmLower | Level3Op::SyrkLower | Level3Op::TrmmLower => 0.5,
+            },
+            JobSpec::Factor { .. } => 1.0,
+        }
+    }
+
+    /// Human/trace label. For GEMM jobs this is exactly the label the
+    /// pre-`JobSpec` stream tracer emitted (`gemm {m}x{n}x{k}`), so
+    /// GEMM-only traces are unchanged.
+    pub fn label(self) -> String {
+        match self {
+            JobSpec::Gemm(s) => format!("gemm {}x{}x{}", s.m, s.n, s.k),
+            JobSpec::Level3 { op, m, n } => format!("{} {m}x{n}", op.label()),
+            JobSpec::Factor { kind, n, nb } => format!("{} n={n} nb={nb}", kind.label()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_jobs_sort_like_gemm_shapes() {
+        // The bit-for-bit anchor of the workload redesign: GEMM-only
+        // job sets must iterate in the historical GemmShape order.
+        let mut shapes = vec![
+            GemmShape::square(512),
+            GemmShape { m: 64, n: 4096, k: 8 },
+            GemmShape::square(96),
+            GemmShape { m: 512, n: 1, k: 2048 },
+        ];
+        let mut jobs: Vec<JobSpec> = shapes.iter().map(|&s| JobSpec::Gemm(s)).collect();
+        shapes.sort();
+        jobs.sort();
+        let unwrapped: Vec<GemmShape> = jobs.iter().map(|j| j.gemm().unwrap()).collect();
+        assert_eq!(unwrapped, shapes);
+        // And Gemm orders strictly before the other variants.
+        let f = JobSpec::Factor { kind: FactorKind::Cholesky, n: 1, nb: 1 };
+        let l = JobSpec::Level3 { op: Level3Op::SymmLower, m: 1, n: 1 };
+        assert!(JobSpec::Gemm(GemmShape::square(usize::MAX / 4)) < l);
+        assert!(l < f);
+    }
+
+    #[test]
+    fn flops_and_equiv_gemm_are_consistent() {
+        let g = JobSpec::Gemm(GemmShape::square(128));
+        assert_eq!(g.flops(), GemmShape::square(128).flops());
+        assert_eq!(g.cost_scale(), 1.0);
+
+        let trsm = JobSpec::Level3 { op: Level3Op::TrsmLower, m: 100, n: 40 };
+        // Half the equivalent GEMM's flops, and the scale agrees.
+        assert_eq!(trsm.flops(), 0.5 * trsm.equiv_gemm().flops());
+        assert_eq!(trsm.cost_scale(), 0.5);
+        let symm = JobSpec::Level3 { op: Level3Op::SymmLower, m: 100, n: 40 };
+        assert_eq!(symm.flops(), symm.equiv_gemm().flops());
+        let syrk = JobSpec::Level3 { op: Level3Op::SyrkLower, m: 60, n: 90 };
+        assert_eq!(syrk.equiv_gemm(), GemmShape { m: 60, n: 60, k: 90 });
+        assert_eq!(syrk.flops(), 0.5 * syrk.equiv_gemm().flops());
+
+        let chol = JobSpec::Factor { kind: FactorKind::Cholesky, n: 300, nb: 100 };
+        assert!((chol.flops() - 300.0f64.powi(3) / 3.0).abs() < 1e-6);
+        assert_eq!(chol.equiv_gemm(), GemmShape::square(100));
+        let lu = JobSpec::Factor { kind: FactorKind::Lu, n: 300, nb: 100 };
+        assert!((lu.flops() - 2.0 * 300.0f64.powi(3) / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        // The GEMM label is a traced-stream fixture — never change it.
+        let g = JobSpec::Gemm(GemmShape { m: 384, n: 512, k: 640 });
+        assert_eq!(g.label(), "gemm 384x512x640");
+        let c = JobSpec::Factor { kind: FactorKind::Cholesky, n: 768, nb: 128 };
+        assert_eq!(c.label(), "chol n=768 nb=128");
+        assert_eq!(
+            JobSpec::Level3 { op: Level3Op::SyrkLower, m: 64, n: 32 }.label(),
+            "syrk 64x32"
+        );
+        assert_eq!(Level3Op::parse("trsm").unwrap(), Level3Op::TrsmLower);
+        assert!(Level3Op::parse("gemv").is_err());
+    }
+
+    #[test]
+    fn gemm_shapes_convert() {
+        let s = GemmShape::square(64);
+        let j: JobSpec = s.into();
+        assert_eq!(j, JobSpec::Gemm(s));
+        assert_eq!(j.gemm(), Some(s));
+        assert_eq!(
+            JobSpec::Factor { kind: FactorKind::Lu, n: 64, nb: 32 }.gemm(),
+            None
+        );
+    }
+}

@@ -1,0 +1,407 @@
+//! Deterministic list scheduling of a [`TaskGraph`] across the
+//! clusters of one SoC.
+//!
+//! Two policies share one engine:
+//!
+//! * [`DagPolicy::CriticalityAware`] — the arXiv:1509.02058 recipe on
+//!   this codebase's machinery: tasks on the critical path are pinned
+//!   to the fastest cluster (which runs them at its own tuned
+//!   `(mc, kc)` — the per-cluster control trees of
+//!   [`crate::sched::ScheduleSpec::cluster_only`]), and the trailing
+//!   updates are spread so each cluster's accumulated busy time tracks
+//!   its share of the existing [`Weights`] vector — the same vector
+//!   SAS/CA-SAS use, so `WeightSource::{Analytical, Empirical, Live}`
+//!   all drive the DAG unchanged;
+//! * [`DagPolicy::Oblivious`] — the asymmetry-blind comparator:
+//!   round-robin cluster assignment in dispatch order (the DAG
+//!   analogue of SSS's equal split). Tile *physics* stay per-cluster
+//!   truthful; only the placement ignores them.
+//!
+//! Everything is pure f64 virtual time with id-ordered tiebreaks, so a
+//! schedule replays bit-for-bit for a given descriptor — the property
+//! `tests/dag_props.rs` pins across randomized 1–4-cluster SoCs.
+
+use crate::blis::gemm::GemmShape;
+use crate::calibrate::{ShapeClass, WeightSource};
+use crate::dag::graph::{FactorKind, TaskGraph};
+use crate::model::PerfModel;
+use crate::sched::{ScheduleSpec, Weights};
+use crate::sim::{simulate, ItemCost, RunCache};
+use crate::soc::ClusterId;
+
+/// Placement policy for a DAG schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DagPolicy {
+    /// Critical path to the fastest cluster, trailing updates split by
+    /// the cluster weight vector.
+    CriticalityAware,
+    /// Round-robin placement in dispatch order — asymmetry-blind.
+    Oblivious,
+}
+
+impl DagPolicy {
+    pub fn label(self) -> &'static str {
+        match self {
+            DagPolicy::CriticalityAware => "criticality-aware",
+            DagPolicy::Oblivious => "oblivious",
+        }
+    }
+}
+
+/// Per-cluster cost of one full `nb³` GEMM tile update, from one DES
+/// run per cluster at that cluster's tuned parameters (cached in the
+/// shared [`RunCache`] under the `cluster_only` configuration, so a
+/// stream of factorizations prices its tiles exactly once). Kernel
+/// costs derive by flop fraction ([`crate::dag::KernelKind`]).
+#[derive(Debug, Clone)]
+pub struct TileCosts {
+    /// One entry per cluster: the tile GEMM's virtual time and energy.
+    pub gemm_tile: Vec<ItemCost>,
+}
+
+impl TileCosts {
+    pub fn num_clusters(&self) -> usize {
+        self.gemm_tile.len()
+    }
+
+    /// Virtual seconds of `kind` on cluster `c`.
+    pub fn time(&self, c: usize, kind: crate::dag::KernelKind) -> f64 {
+        self.gemm_tile[c].time_s * kind.gemm_fraction()
+    }
+
+    /// Joules of `kind` on cluster `c`.
+    pub fn energy(&self, c: usize, kind: crate::dag::KernelKind) -> f64 {
+        self.gemm_tile[c].energy_j * kind.gemm_fraction()
+    }
+
+    /// Index of the fastest cluster for a tile (ties → lowest id) —
+    /// where the critical path goes.
+    pub fn fastest(&self) -> usize {
+        let mut best = 0;
+        for c in 1..self.gemm_tile.len() {
+            if self.gemm_tile[c].time_s < self.gemm_tile[best].time_s {
+                best = c;
+            }
+        }
+        best
+    }
+}
+
+/// Measure [`TileCosts`] for `nb × nb` tiles on every cluster of the
+/// model's SoC, memoized through `cache`.
+pub fn tile_costs(model: &PerfModel, nb: usize, cache: &mut RunCache) -> TileCosts {
+    let shape = GemmShape::square(nb);
+    let gemm_tile = model
+        .soc
+        .cluster_ids()
+        .map(|c| {
+            let spec = ScheduleSpec::cluster_only(c, model.soc[c].num_cores);
+            let cfg = cache.config(model, &spec);
+            cache.cost_with(cfg, shape, || simulate(model, &spec, shape))
+        })
+        .collect();
+    TileCosts { gemm_tile }
+}
+
+/// One placed task of a schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduledTask {
+    pub task: usize,
+    pub cluster: ClusterId,
+    pub start_s: f64,
+    pub finish_s: f64,
+}
+
+/// A complete deterministic schedule of one [`TaskGraph`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct DagSchedule {
+    pub policy: DagPolicy,
+    /// Tasks in dispatch order (each task appears exactly once).
+    pub order: Vec<ScheduledTask>,
+    pub makespan_s: f64,
+    /// Active (tile) energy, summed over every task.
+    pub energy_j: f64,
+    /// Active energy per cluster (rail split of `energy_j`).
+    pub energy_clusters_j: Vec<f64>,
+    /// Busy seconds per cluster.
+    pub busy_s: Vec<f64>,
+    /// How many tasks the policy deemed critical.
+    pub critical_tasks: usize,
+    /// Length of the critical path at fastest-cluster speeds — the
+    /// makespan lower bound no schedule can beat.
+    pub critical_path_s: f64,
+}
+
+impl DagSchedule {
+    /// Effective GFLOPS of the factorization under this schedule.
+    pub fn gflops(&self, graph: &TaskGraph) -> f64 {
+        graph.kind.flops(graph.n) / self.makespan_s / 1e9
+    }
+}
+
+/// Schedule `graph` over the clusters described by `costs`, splitting
+/// non-critical work by `weights` (one entry per cluster). Fully
+/// deterministic: ready tasks are picked by (longest bottom level,
+/// lowest id), placement tiebreaks go to the lowest cluster id.
+pub fn schedule(
+    graph: &TaskGraph,
+    costs: &TileCosts,
+    weights: &Weights,
+    policy: DagPolicy,
+) -> DagSchedule {
+    let n = graph.tasks.len();
+    let nc = costs.num_clusters();
+    assert!(nc >= 1, "need at least one cluster");
+    assert_eq!(
+        weights.len(),
+        nc,
+        "weight vector ({} ways) must match the cluster count ({nc})",
+        weights.len()
+    );
+    let fast = costs.fastest();
+
+    // Critical-path analysis at fastest-cluster speeds: bottom levels
+    // (longest path to a sink, inclusive) drive the ready-list
+    // priority; top + bottom == CP length marks the critical tasks.
+    let succ = graph.successors();
+    let t_fast: Vec<f64> = graph.tasks.iter().map(|t| costs.time(fast, t.kind)).collect();
+    let mut bottom = vec![0.0f64; n];
+    for id in (0..n).rev() {
+        let tail = succ[id].iter().map(|&s| bottom[s]).fold(0.0f64, f64::max);
+        bottom[id] = t_fast[id] + tail;
+    }
+    let mut top = vec![0.0f64; n];
+    for id in 0..n {
+        top[id] = graph.tasks[id]
+            .deps
+            .iter()
+            .map(|&d| top[d] + t_fast[d])
+            .fold(0.0f64, f64::max);
+    }
+    let cp = (0..n).map(|i| top[i] + bottom[i]).fold(0.0f64, f64::max);
+    let critical: Vec<bool> =
+        (0..n).map(|i| top[i] + bottom[i] >= cp * (1.0 - 1e-9)).collect();
+
+    // Weight shares for the non-critical split; floor away from zero so
+    // a degenerate weight vector can't divide by zero.
+    let shares: Vec<f64> = (0..nc).map(|c| weights.share(c).max(1e-12)).collect();
+
+    // List scheduling: ready set, highest bottom level first (id
+    // breaks ties), one pass per task.
+    let mut indeg: Vec<usize> = graph.tasks.iter().map(|t| t.deps.len()).collect();
+    let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut finish = vec![0.0f64; n];
+    let mut clock = vec![0.0f64; nc];
+    let mut busy = vec![0.0f64; nc];
+    let mut assigned = vec![0.0f64; nc];
+    let mut energy = vec![0.0f64; nc];
+    let mut order = Vec::with_capacity(n);
+    let mut rr = 0usize;
+    while let Some(pos) = pick(&ready, &bottom) {
+        let id = ready.swap_remove(pos);
+        let kind = graph.tasks[id].kind;
+        let c = match policy {
+            DagPolicy::Oblivious => {
+                let c = rr % nc;
+                rr += 1;
+                c
+            }
+            DagPolicy::CriticalityAware => {
+                if critical[id] {
+                    fast
+                } else {
+                    // Keep each cluster's accumulated busy time on its
+                    // weight share: place where (assigned + cost)/share
+                    // is smallest (ties → lowest cluster id).
+                    let mut best = 0;
+                    let mut best_v = f64::INFINITY;
+                    for (c, share) in shares.iter().enumerate() {
+                        let v = (assigned[c] + costs.time(c, kind)) / share;
+                        if v < best_v {
+                            best_v = v;
+                            best = c;
+                        }
+                    }
+                    best
+                }
+            }
+        };
+        let ready_at = graph.tasks[id]
+            .deps
+            .iter()
+            .map(|&d| finish[d])
+            .fold(0.0f64, f64::max);
+        let start = clock[c].max(ready_at);
+        let dur = costs.time(c, kind);
+        finish[id] = start + dur;
+        clock[c] = finish[id];
+        busy[c] += dur;
+        assigned[c] += dur;
+        energy[c] += costs.energy(c, kind);
+        order.push(ScheduledTask {
+            task: id,
+            cluster: ClusterId(c),
+            start_s: start,
+            finish_s: finish[id],
+        });
+        for &s in &succ[id] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.push(s);
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "schedule must place every task exactly once");
+
+    DagSchedule {
+        policy,
+        makespan_s: clock.iter().cloned().fold(0.0f64, f64::max),
+        energy_j: energy.iter().sum(),
+        energy_clusters_j: energy,
+        busy_s: busy,
+        critical_tasks: critical.iter().filter(|&&c| c).count(),
+        critical_path_s: cp,
+        order,
+    }
+}
+
+/// Ready-list pick: highest bottom level, lowest id on ties. Returns
+/// the *position* in `ready`.
+fn pick(ready: &[usize], bottom: &[f64]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (pos, &id) in ready.iter().enumerate() {
+        let better = match best {
+            None => true,
+            Some(b) => {
+                let (bb, bi) = (bottom[ready[b]], ready[b]);
+                bottom[id] > bb || (bottom[id] == bb && id < bi)
+            }
+        };
+        if better {
+            best = Some(pos);
+        }
+    }
+    best
+}
+
+/// Price one `Factor` job for the stream DES: build the graph, measure
+/// the tile costs (memoized in `cache`), schedule criticality-aware
+/// with the board's weight vector, and return the makespan/energy as
+/// the per-item cost plus the per-cluster energy rails.
+pub fn factor_price(
+    model: &PerfModel,
+    source: &WeightSource,
+    kind: FactorKind,
+    n: usize,
+    nb: usize,
+    cache: &mut RunCache,
+) -> (ItemCost, Vec<f64>) {
+    let graph = TaskGraph::build(kind, n, nb);
+    let costs = tile_costs(model, nb, cache);
+    let class = ShapeClass::for_soc(&model.soc, GemmShape::square(nb));
+    let weights = source.weights(model, true, class);
+    let s = schedule(&graph, &costs, &weights, DagPolicy::CriticalityAware);
+    (
+        ItemCost { time_s: s.makespan_s, energy_j: s.energy_j },
+        s.energy_clusters_j,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dag::KernelKind;
+    use crate::soc::SocSpec;
+
+    fn exynos_setup(n: usize, nb: usize) -> (TaskGraph, TileCosts, Weights) {
+        let model = PerfModel::new(SocSpec::exynos5422());
+        let graph = TaskGraph::cholesky(n, nb);
+        let mut cache = RunCache::new();
+        let costs = tile_costs(&model, nb, &mut cache);
+        let w = WeightSource::Analytical.weights(&model, true, ShapeClass::Large);
+        (graph, costs, w)
+    }
+
+    #[test]
+    fn tile_costs_reflect_the_asymmetry() {
+        let model = PerfModel::new(SocSpec::exynos5422());
+        let mut cache = RunCache::new();
+        let costs = tile_costs(&model, 128, &mut cache);
+        assert_eq!(costs.num_clusters(), 2);
+        assert_eq!(costs.fastest(), 0, "the A15 cluster is the fast one");
+        let ratio = costs.gemm_tile[1].time_s / costs.gemm_tile[0].time_s;
+        assert!(ratio > 2.0, "big:LITTLE tile-time ratio {ratio}");
+        // Kernel fractions order as documented.
+        assert!(costs.time(0, KernelKind::Potrf) < costs.time(0, KernelKind::Trsm));
+        assert!(costs.time(0, KernelKind::Trsm) < costs.time(0, KernelKind::GemmUpd));
+        // Memoized: a second measurement is pure cache hits.
+        let runs = cache.cached_runs();
+        let again = tile_costs(&model, 128, &mut cache);
+        assert_eq!(cache.cached_runs(), runs);
+        assert_eq!(again.gemm_tile[0].time_s, costs.gemm_tile[0].time_s);
+    }
+
+    #[test]
+    fn both_policies_respect_dependencies_and_place_exactly_once() {
+        let (graph, costs, w) = exynos_setup(768, 128);
+        for policy in [DagPolicy::CriticalityAware, DagPolicy::Oblivious] {
+            let s = schedule(&graph, &costs, &w, policy);
+            assert_eq!(s.order.len(), graph.num_tasks());
+            let mut seen = vec![false; graph.num_tasks()];
+            let mut finish = vec![0.0; graph.num_tasks()];
+            for st in &s.order {
+                assert!(!seen[st.task], "task {} placed twice", st.task);
+                seen[st.task] = true;
+                finish[st.task] = st.finish_s;
+                for &d in &graph.tasks[st.task].deps {
+                    assert!(seen[d], "task {} dispatched before dep {d}", st.task);
+                    assert!(
+                        st.start_s >= finish[d] - 1e-12,
+                        "task {} starts at {} before dep {d} finishes at {}",
+                        st.task,
+                        st.start_s,
+                        finish[d]
+                    );
+                }
+            }
+            assert!(s.makespan_s >= s.critical_path_s - 1e-12);
+            assert!(s.makespan_s > 0.0 && s.energy_j > 0.0);
+        }
+    }
+
+    #[test]
+    fn criticality_aware_beats_oblivious_on_exynos() {
+        let (graph, costs, w) = exynos_setup(1024, 128);
+        let ca = schedule(&graph, &costs, &w, DagPolicy::CriticalityAware);
+        let obl = schedule(&graph, &costs, &w, DagPolicy::Oblivious);
+        assert!(
+            ca.makespan_s * 1.05 < obl.makespan_s,
+            "CA {} vs oblivious {}",
+            ca.makespan_s,
+            obl.makespan_s
+        );
+        // Critical tasks all landed on the fast cluster.
+        assert!(ca.critical_tasks > 0);
+        assert!(ca.busy_s[0] > ca.busy_s[1], "{:?}", ca.busy_s);
+    }
+
+    #[test]
+    fn factor_price_is_deterministic_and_positive() {
+        let model = PerfModel::new(SocSpec::exynos5422());
+        let mut cache = RunCache::new();
+        let (a, rails_a) =
+            factor_price(&model, &WeightSource::Analytical, FactorKind::Cholesky, 768, 128, &mut cache);
+        let (b, rails_b) =
+            factor_price(&model, &WeightSource::Analytical, FactorKind::Cholesky, 768, 128, &mut cache);
+        assert_eq!(a.time_s, b.time_s);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(rails_a, rails_b);
+        assert!(a.time_s > 0.0 && a.energy_j > 0.0);
+        assert_eq!(rails_a.len(), 2);
+        assert!((rails_a.iter().sum::<f64>() - a.energy_j).abs() < 1e-9);
+        // LU does twice the flops — it must cost visibly more.
+        let (lu, _) =
+            factor_price(&model, &WeightSource::Analytical, FactorKind::Lu, 768, 128, &mut cache);
+        assert!(lu.time_s > a.time_s);
+    }
+}

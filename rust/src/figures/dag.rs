@@ -1,0 +1,269 @@
+//! Task-DAG factorization report (ISSUE 10, no paper counterpart — the
+//! §6 "task-level scheduling" future-work item, via arXiv:1509.02058's
+//! criticality-aware recipe): what scheduling a *graph* of tiled
+//! kernels architecture-aware buys on an asymmetric SoC, and that the
+//! unified [`JobSpec`] workload API really carries mixed GEMM +
+//! factorization streams end to end.
+//!
+//! Three tables:
+//! 1. **blocked factorizations** — criticality-aware vs
+//!    cluster-oblivious schedules of blocked Cholesky and LU on the
+//!    exynos5422 (n = 1024, nb = 128): makespan, effective GFLOPS,
+//!    energy, critical-path bound;
+//! 2. **mixed-job stream** — a pinned Poisson stream interleaving
+//!    square GEMMs with `Factor` jobs through the one [`StreamSim`]
+//!    DES, on the fleet report's columns;
+//! 3. **coordinator round-trip** — a real TCP server served GEMM and
+//!    `JOB chol`/`JOB lu` requests over one connection, checksums
+//!    replayed for determinism.
+//!
+//! The acceptance criteria (ISSUE 10): criticality-aware blocked
+//! Cholesky beats the asymmetry-oblivious schedule by ≥ 5 % on the
+//! exynos5422, the mixed stream executes exactly once with the per-job
+//! histogram merging in submission order, and the wire protocol serves
+//! factorizations next to GEMMs on one connection.
+
+use crate::blis::gemm::GemmShape;
+use crate::calibrate::{ShapeClass, WeightSource};
+use crate::coordinator::server::{serve, Client};
+use crate::coordinator::Coordinator;
+use crate::dag::{
+    schedule, tile_costs, DagPolicy, DagSchedule, FactorKind, JobSpec, TaskGraph,
+};
+use crate::figures::fleet::{stream_row, STREAM_COLUMNS};
+use crate::figures::{Assertion, FigureResult};
+use crate::fleet::sim::{poisson_job_arrivals, Arrival, StreamSim, StreamStats};
+use crate::fleet::Fleet;
+use crate::model::PerfModel;
+use crate::sim::RunCache;
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use std::sync::Arc;
+
+/// The pinned factorization descriptor: n = 1024 in nb = 128 tiles —
+/// an 8 × 8 tile grid, large enough that trailing updates dominate and
+/// placement quality shows, small enough to schedule instantly.
+pub const PINNED_N: usize = 1024;
+pub const PINNED_NB: usize = 128;
+
+/// Schedule the pinned blocked Cholesky both ways on the exynos5422:
+/// `(criticality-aware, oblivious)`. Pure virtual time (one DES run
+/// per cluster for the tile costs), deterministic — the subject of the
+/// `dag_cholesky_speedup` trajectory row.
+pub fn pinned_cholesky_pair() -> (DagSchedule, DagSchedule) {
+    pinned_pair(FactorKind::Cholesky)
+}
+
+fn pinned_pair(kind: FactorKind) -> (DagSchedule, DagSchedule) {
+    let model = PerfModel::exynos();
+    let graph = TaskGraph::build(kind, PINNED_N, PINNED_NB);
+    let mut cache = RunCache::new();
+    let costs = tile_costs(&model, PINNED_NB, &mut cache);
+    let class = ShapeClass::for_soc(&model.soc, GemmShape::square(PINNED_NB));
+    let w = WeightSource::Analytical.weights(&model, true, class);
+    (
+        schedule(&graph, &costs, &w, DagPolicy::CriticalityAware),
+        schedule(&graph, &costs, &w, DagPolicy::Oblivious),
+    )
+}
+
+/// The pinned mixed-job stream: two square GEMM sizes interleaved with
+/// a blocked Cholesky and a blocked LU, Poisson arrivals above the
+/// board's capacity so the replay is service-bound. Deterministic
+/// (seeded [`Rng`]); `quick` halves the stream length.
+pub fn pinned_mixed_arrivals(quick: bool) -> Vec<Arrival> {
+    let jobs = [
+        JobSpec::Gemm(GemmShape::square(384)),
+        JobSpec::Gemm(GemmShape::square(512)),
+        JobSpec::Factor { kind: FactorKind::Cholesky, n: 512, nb: 128 },
+        JobSpec::Factor { kind: FactorKind::Lu, n: 384, nb: 128 },
+    ];
+    let count = if quick { 32 } else { 64 };
+    let mut rng = Rng::new(0xDA6_F10);
+    poisson_job_arrivals(&mut rng, &jobs, count, 60.0)
+}
+
+/// One exynos5422 board under its preset schedule — factorization
+/// tiles price through the same weight source as the GEMMs.
+pub fn pinned_mixed_fleet() -> Fleet {
+    Fleet::parse("exynos5422").expect("preset")
+}
+
+/// Replay the pinned mixed stream through the consolidated
+/// [`StreamSim`] entry point — the `dag_stream_mixed_p99` trajectory
+/// row and the report's table 2.
+pub fn mixed_stream_summary(quick: bool) -> StreamStats {
+    StreamSim::new(&pinned_mixed_fleet()).run(&pinned_mixed_arrivals(quick))
+}
+
+fn factor_row(kind: FactorKind, graph: &TaskGraph, s: &DagSchedule) -> Vec<String> {
+    vec![
+        format!("{} n={} nb={}", kind.label(), graph.n, graph.nb),
+        s.policy.label().to_string(),
+        format!("{:.4}", s.makespan_s),
+        format!("{:.3}", s.gflops(graph)),
+        format!("{:.2}", s.energy_j),
+        format!("{:.4}", s.critical_path_s),
+        s.critical_tasks.to_string(),
+    ]
+}
+
+pub fn run(quick: bool) -> FigureResult {
+    // --- Table 1: the schedule pair, Cholesky and LU. ---
+    let mut factor = Table::new(
+        "Blocked factorizations on the exynos5422 — criticality-aware vs cluster-oblivious",
+        &["factorization", "policy", "makespan [s]", "GFLOPS", "energy [J]",
+          "critical path [s]", "critical tasks"],
+    );
+    let chol_graph = TaskGraph::cholesky(PINNED_N, PINNED_NB);
+    let (chol_ca, chol_obl) = pinned_cholesky_pair();
+    factor.push_row(factor_row(FactorKind::Cholesky, &chol_graph, &chol_ca));
+    factor.push_row(factor_row(FactorKind::Cholesky, &chol_graph, &chol_obl));
+    let lu_graph = TaskGraph::lu(PINNED_N, PINNED_NB);
+    let (lu_ca, lu_obl) = pinned_pair(FactorKind::Lu);
+    factor.push_row(factor_row(FactorKind::Lu, &lu_graph, &lu_ca));
+    factor.push_row(factor_row(FactorKind::Lu, &lu_graph, &lu_obl));
+    let chol_speedup = chol_obl.makespan_s / chol_ca.makespan_s;
+
+    // --- Table 2: the mixed-job stream through StreamSim. ---
+    let arrivals = pinned_mixed_arrivals(quick);
+    let mixed = mixed_stream_summary(quick);
+    let mut stream = Table::new(
+        &format!(
+            "Mixed GEMM + factorization stream — exynos5422, {} Poisson arrivals",
+            mixed.requests
+        ),
+        STREAM_COLUMNS,
+    );
+    stream.push_row(stream_row(&mixed));
+    // Submitted histogram in first-submission order — what `per_job`
+    // must merge back to.
+    let mut submitted: Vec<(JobSpec, usize)> = Vec::new();
+    for a in &arrivals {
+        match submitted.iter_mut().find(|(j, _)| *j == a.job) {
+            Some((_, c)) => *c += 1,
+            None => submitted.push((a.job, 1)),
+        }
+    }
+
+    // --- Table 3: the wire protocol, GEMMs and factorizations on one
+    //     connection against a real TCP server. Sizes are small — this
+    //     is a protocol round-trip, not a benchmark. ---
+    let coord = Arc::new(Coordinator::new(crate::soc::SocSpec::exynos5422()));
+    let handle = serve(coord, "127.0.0.1:0").expect("ephemeral server");
+    let mut client = Client::connect(handle.addr).expect("client connect");
+    let mut wire = Table::new(
+        "Coordinator round-trip — interleaved GEMM and JOB requests, one connection",
+        &["request", "reply ok", "label", "checksum replays"],
+    );
+    let mut wire_ok = true;
+    for line in ["GEMM 64 64 64 7 native", "JOB chol 96 32 7", "JOB gemm 64 64 64 7 native",
+                 "JOB lu 96 32 7"] {
+        let r1 = client.call(line).expect("call");
+        let r2 = client.call(line).expect("replay");
+        let ok = r1.starts_with("OK ");
+        let nth = |r: &str, i: usize| r.split_whitespace().nth(i).map(str::to_string);
+        let replays = ok && nth(&r1, 4) == nth(&r2, 4);
+        wire_ok &= ok && replays;
+        wire.push_row(vec![
+            line.to_string(),
+            ok.to_string(),
+            nth(&r1, 5).unwrap_or_else(|| r1.clone()),
+            replays.to_string(),
+        ]);
+    }
+    let help = client.call("HELP").expect("help");
+    let unknown = client.call("JOB qr 96 32 1").expect("unknown job");
+    handle.shutdown();
+
+    let assertions = vec![
+        Assertion::check(
+            "criticality-aware blocked Cholesky beats oblivious by >= 5%",
+            chol_speedup >= 1.05,
+            format!(
+                "CA {:.4}s vs oblivious {:.4}s ({:.1}% faster)",
+                chol_ca.makespan_s,
+                chol_obl.makespan_s,
+                (chol_speedup - 1.0) * 100.0
+            ),
+        ),
+        Assertion::check(
+            "criticality-aware LU beats oblivious too",
+            lu_ca.makespan_s < lu_obl.makespan_s,
+            format!("CA {:.4}s vs oblivious {:.4}s", lu_ca.makespan_s, lu_obl.makespan_s),
+        ),
+        Assertion::check(
+            "no schedule beats its critical-path bound",
+            chol_ca.makespan_s >= chol_ca.critical_path_s - 1e-12
+                && lu_ca.makespan_s >= lu_ca.critical_path_s - 1e-12,
+            format!(
+                "chol {:.4} >= {:.4}, lu {:.4} >= {:.4}",
+                chol_ca.makespan_s,
+                chol_ca.critical_path_s,
+                lu_ca.makespan_s,
+                lu_ca.critical_path_s
+            ),
+        ),
+        Assertion::check(
+            "the mixed stream executes every job exactly once",
+            mixed.items_completed() == mixed.requests
+                && mixed.completions.len() == mixed.requests
+                && mixed.completions.iter().all(|c| c.is_finite()),
+            format!("{}/{} requests completed", mixed.items_completed(), mixed.requests),
+        ),
+        Assertion::check(
+            "per-job stats merge back to the submitted histogram in submission order",
+            mixed.per_job == submitted,
+            format!("executed {:?} vs submitted {:?}", mixed.per_job, submitted),
+        ),
+        Assertion::check(
+            "the mixed stream replays bit-for-bit",
+            mixed == mixed_stream_summary(quick),
+            "second replay (fresh cache) compared equal".to_string(),
+        ),
+        Assertion::check(
+            "GEMM and JOB requests round-trip the wire with deterministic checksums",
+            wire_ok,
+            format!("{} interleaved requests on one connection", wire.rows.len()),
+        ),
+        Assertion::check(
+            "HELP lists the JOB family; unknown kinds get a structured error",
+            help.starts_with("OK commands:")
+                && help.contains("JOB chol")
+                && unknown == "ERR unknown_job qr",
+            format!("HELP -> '{help}', JOB qr -> '{unknown}'"),
+        ),
+    ];
+
+    FigureResult {
+        id: "dag",
+        title: "Task-DAG factorizations: criticality-aware scheduling and the unified job API",
+        tables: vec![factor, stream, wire],
+        assertions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn dag_report_passes_quick() {
+        let fig = super::run(true);
+        assert!(fig.passed(), "{}", fig.to_markdown());
+        assert_eq!(fig.tables.len(), 3);
+        assert_eq!(fig.id, "dag");
+    }
+
+    /// The pinned inputs behind the trajectory rows are stable across
+    /// calls.
+    #[test]
+    fn pinned_dag_scenario_is_deterministic() {
+        let (ca1, obl1) = super::pinned_cholesky_pair();
+        let (ca2, obl2) = super::pinned_cholesky_pair();
+        assert_eq!(ca1, ca2);
+        assert_eq!(obl1, obl2);
+        let a = super::pinned_mixed_arrivals(true);
+        assert_eq!(a, super::pinned_mixed_arrivals(true));
+        assert_eq!(a.len(), 32);
+        assert_eq!(super::pinned_mixed_arrivals(false).len(), 64);
+    }
+}

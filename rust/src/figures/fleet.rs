@@ -294,17 +294,17 @@ pub fn run(quick: bool) -> FigureResult {
         stream.items_completed() == stream.requests
             && stream.completions.iter().all(|c| c.is_finite())
             && stream
-                .per_shape
+                .per_job
                 .iter()
                 .map(|(_, c)| c)
                 .sum::<usize>()
                 == stream.requests
             && wave_stats.iter().all(|w| w.items_completed() == w.requests),
         format!(
-            "stream {}/{} requests, per shape {:?}",
+            "stream {}/{} requests, per job {:?}",
             stream.items_completed(),
             stream.requests,
-            stream.per_shape
+            stream.per_job
         ),
     ));
 

@@ -114,7 +114,9 @@ pub fn convergence_summary(quick: bool) -> LiveSummary {
     let cfg = LiveStreamConfig::default();
     let class = pinned_live_class();
     let soc = fleet.boards[0].soc();
-    debug_assert!(arrivals.iter().all(|a| ShapeClass::for_soc(soc, a.shape) == class));
+    debug_assert!(
+        arrivals.iter().all(|a| ShapeClass::for_soc(soc, a.job.equiv_gemm()) == class)
+    );
 
     // Both replays share one cache: the pre-replan grabs of the live
     // run price against the same interned analytical-CA-SAS config the

@@ -19,13 +19,15 @@
 //! Pareto-frontier / online-retuning report (`amp-gemm dvfs --report`)
 //! [`calibrate`] is the measured-rate weight-calibration report
 //! (`amp-gemm calibrate --report`), [`live`] is the online-calibration
-//! convergence report (`amp-gemm calibrate --live`) and [`autoscale`]
+//! convergence report (`amp-gemm calibrate --live`), [`autoscale`]
 //! is the SLO-driven elastic-fleet / closed-loop-governor report
-//! (`amp-gemm autoscale`).
+//! (`amp-gemm autoscale`) and [`dag`] is the task-DAG factorization /
+//! unified-job-API report (`amp-gemm dag --report`).
 
 pub mod ablation;
 pub mod autoscale;
 pub mod calibrate;
+pub mod dag;
 pub mod dvfs;
 pub mod fig10;
 pub mod fleet;

@@ -360,7 +360,7 @@ mod tests {
                 for stretch in [2.0, 4.0] {
                     let slower: Vec<Arrival> = arrivals
                         .iter()
-                        .map(|a| Arrival::at(a.shape, a.arrive_s * stretch))
+                        .map(|a| Arrival::at(a.job, a.arrive_s * stretch))
                         .collect();
                     let slow_st = simulate_fleet_stream(&fleet, &slower);
                     if !slo.met_by(&slow_st) {

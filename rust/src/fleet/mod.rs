@@ -32,6 +32,7 @@ pub mod sim;
 
 use crate::blis::gemm::GemmShape;
 use crate::calibrate::{RateTable, ShapeClass, WeightSource};
+use crate::dag::JobSpec;
 use crate::model::PerfModel;
 use crate::sched::{ScheduleSpec, Weighted, Weights, MAX_WAYS};
 use crate::soc::SocSpec;
@@ -382,17 +383,20 @@ impl Fleet {
         self.boards.iter().map(|b| b.price_per_hour).sum()
     }
 
-    /// Mixed-shape shard plan: split every same-shape subgroup of one
+    /// Mixed-job shard plan: split every same-job subgroup of one
     /// dispatch wave across the boards independently, under a static
     /// strategy. Each subgroup's shards sum to its item count (the
-    /// per-shape shard-sum invariant the streaming dispatcher relies
+    /// per-job shard-sum invariant the streaming dispatcher relies
     /// on). Panics for fleet-DAS, whose shards emerge from the queue.
-    pub fn plan_wave(&self, groups: &[(GemmShape, usize)], strategy: FleetStrategy) -> WavePlan {
+    /// (ISSUE 10: the group key is a [`JobSpec`]; pass
+    /// `JobSpec::Gemm(shape)` — or `shape.into()` — for the old
+    /// GEMM-only waves.)
+    pub fn plan_wave(&self, groups: &[(JobSpec, usize)], strategy: FleetStrategy) -> WavePlan {
         WavePlan {
             groups: groups
                 .iter()
-                .map(|&(shape, count)| WaveGroupPlan {
-                    shape,
+                .map(|&(job, count)| WaveGroupPlan {
+                    job,
                     shards: self.static_shards(count, strategy),
                 })
                 .collect(),
@@ -400,15 +404,15 @@ impl Fleet {
     }
 }
 
-/// Static shard plan of one same-shape subgroup within a mixed wave.
+/// Static shard plan of one same-job subgroup within a mixed wave.
 #[derive(Debug, Clone)]
 pub struct WaveGroupPlan {
-    pub shape: GemmShape,
+    pub job: JobSpec,
     /// Items of this subgroup assigned to each board, in fleet order.
     pub shards: Vec<usize>,
 }
 
-/// Per-shape shard plan for one mixed-shape dispatch wave
+/// Per-job shard plan for one mixed-job dispatch wave
 /// ([`Fleet::plan_wave`]): the static-strategy counterpart of the
 /// streaming queue — the `coordinator::StreamDispatcher` seeds each
 /// board's private queue from the per-group shards, in wave order.
@@ -617,28 +621,30 @@ mod tests {
         );
     }
 
-    /// ISSUE 4: mixed-shape wave plans shard every same-shape subgroup
+    /// ISSUE 4: mixed-job wave plans shard every same-job subgroup
     /// independently, and each subgroup's shards sum to its item count.
+    /// (ISSUE 10: keys are [`JobSpec`]s — GEMMs and factorizations plan
+    /// through the same waves.)
     #[test]
-    fn plan_wave_shards_each_shape_subgroup() {
+    fn plan_wave_shards_each_job_subgroup() {
         let f = Fleet::parse("exynos5422,juno_r0").unwrap();
         let groups = [
-            (GemmShape::square(512), 10usize),
-            (GemmShape::square(1024), 7),
-            (GemmShape::square(512), 1),
+            (JobSpec::Gemm(GemmShape::square(512)), 10usize),
+            (JobSpec::Gemm(GemmShape::square(1024)), 7),
+            (JobSpec::Factor { kind: crate::dag::FactorKind::Cholesky, n: 512, nb: 128 }, 1),
         ];
         for strategy in [FleetStrategy::Sss, FleetStrategy::Sas] {
             let plan = f.plan_wave(&groups, strategy);
             assert_eq!(plan.groups.len(), 3);
             assert_eq!(plan.items(), 18);
-            for (g, &(shape, count)) in plan.groups.iter().zip(&groups) {
-                assert_eq!(g.shape, shape);
+            for (g, &(job, count)) in plan.groups.iter().zip(&groups) {
+                assert_eq!(g.job, job);
                 assert_eq!(g.shards.len(), f.num_boards());
                 assert_eq!(g.shards.iter().sum::<usize>(), count, "{}", strategy.label());
             }
             assert_eq!(plan.board_items(0) + plan.board_items(1), 18);
             // Per-group shards must match the single-shape splitter —
-            // the wave plan is `static_shards`, shape by shape.
+            // the wave plan is `static_shards`, job by job.
             assert_eq!(plan.groups[0].shards, f.static_shards(10, strategy));
         }
     }
@@ -647,7 +653,7 @@ mod tests {
     #[should_panic(expected = "dynamic queue")]
     fn plan_wave_rejects_das() {
         let f = Fleet::parse("exynos5422").unwrap();
-        f.plan_wave(&[(GemmShape::square(256), 4)], FleetStrategy::Das);
+        f.plan_wave(&[(GemmShape::square(256).into(), 4)], FleetStrategy::Das);
     }
 
     #[test]

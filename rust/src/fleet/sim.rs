@@ -37,11 +37,24 @@
 //! The streaming replays keep their admission and queue-depth
 //! bookkeeping in the engine's [`EventQueue`] — O(log n) per event
 //! instead of sorted-`Vec` scans.
+//!
+//! ISSUE 10 (API redesign): the unit of streamed work is now a
+//! [`JobSpec`] — plain GEMMs, level-3 ops and blocked factorizations
+//! flow through one queue. GEMM jobs price exactly as before (the
+//! bit-for-bit anchor); level-3 jobs price as their equivalent GEMM
+//! scaled by the op's flop fraction; `Factor` jobs price through the
+//! criticality-aware DAG scheduler ([`crate::dag::sched::factor_price`])
+//! under the board's own `WeightSource`. The fractured
+//! `simulate_fleet_stream{,_cached,_traced,_live,_live_traced}` ×
+//! `simulate_fleet_waves{,_cached}` surface collapsed into one
+//! [`StreamSim`] builder; the old names survive as thin delegating
+//! wrappers, pinned bit-for-bit in `tests/stream_props.rs`.
 
 use crate::blis::gemm::GemmShape;
 use crate::calibrate::live::LiveRateTable;
 use crate::calibrate::{current_opps, Family, WeightSource};
 use crate::coordinator::Batcher;
+use crate::dag::JobSpec;
 use crate::dvfs::{DvfsSchedule, Governor, LoadSignal, Ondemand};
 use crate::energy::PowerModel;
 use crate::fleet::{Fleet, FleetStrategy, DISPATCH_S};
@@ -493,18 +506,20 @@ pub fn simulate_fleet_dvfs_load_driven(
     (st, plans)
 }
 
-/// One streamed request: a GEMM shape admitted at a virtual instant.
+/// One streamed request: a [`JobSpec`] admitted at a virtual instant.
 /// Vector index = submission order; `arrive_s` orders *admission*, so
-/// arrival order and submission order are independent.
+/// arrival order and submission order are independent. Plain
+/// [`GemmShape`]s convert implicitly, so pre-`JobSpec` call sites
+/// (`Arrival::at(shape, t)`) read unchanged.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Arrival {
-    pub shape: GemmShape,
+    pub job: JobSpec,
     pub arrive_s: f64,
 }
 
 impl Arrival {
-    pub fn at(shape: GemmShape, arrive_s: f64) -> Arrival {
-        Arrival { shape, arrive_s }
+    pub fn at(job: impl Into<JobSpec>, arrive_s: f64) -> Arrival {
+        Arrival { job: job.into(), arrive_s }
     }
 }
 
@@ -523,13 +538,25 @@ pub fn poisson_arrivals(
     count: usize,
     rate_rps: f64,
 ) -> Vec<Arrival> {
-    assert!(!shapes.is_empty(), "need at least one shape");
+    let jobs: Vec<JobSpec> = shapes.iter().map(|&s| JobSpec::Gemm(s)).collect();
+    poisson_job_arrivals(rng, &jobs, count, rate_rps)
+}
+
+/// [`poisson_arrivals`] over arbitrary [`JobSpec`]s — mixed
+/// GEMM + factorization streams draw uniformly from `jobs`.
+pub fn poisson_job_arrivals(
+    rng: &mut Rng,
+    jobs: &[JobSpec],
+    count: usize,
+    rate_rps: f64,
+) -> Vec<Arrival> {
+    assert!(!jobs.is_empty(), "need at least one job kind");
     assert!(count > 0, "empty stream");
     let mut t = 0.0;
     (0..count)
         .map(|_| {
             t += rng.gen_exp(rate_rps);
-            Arrival::at(*rng.choose(shapes), t)
+            Arrival::at(*rng.choose(jobs), t)
         })
         .collect()
 }
@@ -578,10 +605,10 @@ pub struct StreamStats {
     /// 99th-percentile sojourn time — the tail the wave barrier
     /// inflates and streaming admission is meant to cut.
     pub sojourn_p99_s: f64,
-    /// Executed requests per distinct shape, in first-submission order
-    /// (the per-shape shard-sum invariant: must equal the submitted
+    /// Executed requests per distinct job, in first-submission order
+    /// (the per-job shard-sum invariant: must equal the submitted
     /// histogram).
-    pub per_shape: Vec<(GemmShape, usize)>,
+    pub per_job: Vec<(JobSpec, usize)>,
     /// Time-averaged depth of the arrived-but-unexecuted queue.
     pub mean_queue_depth: f64,
     /// Peak depth of that queue.
@@ -603,23 +630,79 @@ impl StreamStats {
     }
 }
 
+/// Priced service profile of one `(configuration, job)` pair: per-item
+/// virtual time, energy, and the per-cluster rail split. For GEMM jobs
+/// these are verbatim copies of the cached [`crate::sim::RunStats`]
+/// floats, so downstream sums are bit-for-bit the pre-`JobSpec` values.
+#[derive(Debug, Clone)]
+struct JobPrice {
+    time_s: f64,
+    energy_j: f64,
+    energy_clusters_j: Vec<f64>,
+}
+
+/// Price one job on one board configuration. GEMM jobs go through
+/// [`RunCache::cost_with`] exactly as before (hit/miss counters
+/// included); level-3 jobs price as their [`JobSpec::equiv_gemm`]
+/// scaled by [`JobSpec::cost_scale`] (same kernel, fewer flops);
+/// `Factor` jobs price the whole task graph through the
+/// criticality-aware DAG scheduler under the board's own
+/// [`WeightSource`].
+fn price_job(
+    board: &crate::fleet::Board,
+    sched: &ScheduleSpec,
+    cfg: ConfigId,
+    job: JobSpec,
+    cache: &mut RunCache,
+) -> JobPrice {
+    match job {
+        JobSpec::Gemm(shape) => {
+            let c = cache.cost_with(cfg, shape, || simulate(board.model(), sched, shape));
+            let st = cache.peek(cfg, shape).expect("priced runs are cached");
+            JobPrice {
+                time_s: c.time_s,
+                energy_j: c.energy_j,
+                energy_clusters_j: st.energy.energy_clusters_j.clone(),
+            }
+        }
+        JobSpec::Level3 { .. } => {
+            let g = job.equiv_gemm();
+            let scale = job.cost_scale();
+            let c = cache.cost_with(cfg, g, || simulate(board.model(), sched, g));
+            let st = cache.peek(cfg, g).expect("priced runs are cached");
+            JobPrice {
+                time_s: scale * c.time_s,
+                energy_j: scale * c.energy_j,
+                energy_clusters_j: st.energy.energy_clusters_j.iter().map(|&j| scale * j).collect(),
+            }
+        }
+        JobSpec::Factor { kind, n, nb } => {
+            let (cost, rails) =
+                crate::dag::sched::factor_price(board.model(), &board.weight_source, kind, n, nb, cache);
+            JobPrice { time_s: cost.time_s, energy_j: cost.energy_j, energy_clusters_j: rails }
+        }
+    }
+}
+
 /// Shared post-processing of a virtual-time stream/wave replay: builds
 /// [`StreamStats`] from the per-board tallies. `counts[b]` maps each
-/// `(config, shape)` pair to the number of items board `b` executed
+/// `(config, job)` pair to the number of items board `b` executed
 /// under that interned configuration — keyed by [`ConfigId`] as well as
-/// shape because the live-calibration replay re-plans a board's
-/// schedule mid-stream (ISSUE 9), so one board can price the same shape
+/// job because the live-calibration replay re-plans a board's
+/// schedule mid-stream (ISSUE 9), so one board can price the same job
 /// under several configurations. Busy time and item energy are
 /// recomputed `count × per-item` per pair (deterministic BTreeMap
-/// order), so the degenerate single-shape single-config run reproduces
+/// order; `JobSpec::Gemm` is the first enum variant, so GEMM-only
+/// streams iterate in the historical `GemmShape` order), so the
+/// degenerate single-shape single-config run reproduces
 /// [`simulate_fleet`]'s accounting bit for bit.
 #[allow(clippy::too_many_arguments)]
 fn finish_stream_stats(
     fleet: &Fleet,
     label: String,
     arrivals: &[Arrival],
-    cache: &RunCache,
-    counts: &[BTreeMap<(ConfigId, GemmShape), usize>],
+    priced: &BTreeMap<(ConfigId, JobSpec), JobPrice>,
+    counts: &[BTreeMap<(ConfigId, JobSpec), usize>],
     items: &[usize],
     grabs: &[u64],
     finish: &[f64],
@@ -642,16 +725,14 @@ fn finish_stream_stats(
     for b in 0..n {
         let mut busy = 0.0;
         let mut item_energy = 0.0;
-        for (&(cfg, shape), &count) in &counts[b] {
-            // `peek` re-reads runs the replay executed without counting
-            // extra cache lookups against the surfaced hit/miss stats.
-            let st = cache.peek(cfg, shape).expect("executed shapes are cached");
-            busy += count as f64 * st.time_s;
-            item_energy += count as f64 * st.energy.energy_j;
+        for (&(cfg, job), &count) in &counts[b] {
+            let p = priced.get(&(cfg, job)).expect("executed jobs are priced");
+            busy += count as f64 * p.time_s;
+            item_energy += count as f64 * p.energy_j;
             if metrics.enabled() {
                 // Per-cluster joules as monotone counters (the item
-                // energy, scaled by how many items ran this shape).
-                for (c, &j) in st.energy.energy_clusters_j.iter().enumerate() {
+                // energy, scaled by how many items ran this job).
+                for (c, &j) in p.energy_clusters_j.iter().enumerate() {
                     metrics.inc(&format!("board{b}_energy_c{c}_j"), count as f64 * j);
                 }
             }
@@ -668,19 +749,19 @@ fn finish_stream_stats(
         });
     }
 
-    // Executed-per-shape histogram, in first-submission order.
-    let mut per_shape: Vec<(GemmShape, usize)> = Vec::new();
+    // Executed-per-job histogram, in first-submission order.
+    let mut per_job: Vec<(JobSpec, usize)> = Vec::new();
     for a in arrivals {
-        if !per_shape.iter().any(|(s, _)| *s == a.shape) {
-            per_shape.push((a.shape, 0));
+        if !per_job.iter().any(|(s, _)| *s == a.job) {
+            per_job.push((a.job, 0));
         }
     }
     for counts_b in counts {
-        for (&(_, shape), &count) in counts_b {
-            let entry = per_shape
+        for (&(_, job), &count) in counts_b {
+            let entry = per_job
                 .iter_mut()
-                .find(|(s, _)| *s == shape)
-                .expect("executed shape was submitted");
+                .find(|(s, _)| *s == job)
+                .expect("executed job was submitted");
             entry.1 += count;
         }
     }
@@ -707,7 +788,7 @@ fn finish_stream_stats(
     }
     integral += depth as f64 * (makespan - prev_t).max(0.0);
 
-    let total_flops: f64 = arrivals.iter().map(|a| a.shape.flops()).sum();
+    let total_flops: f64 = arrivals.iter().map(|a| a.job.flops()).sum();
     let total_busy: f64 = boards.iter().map(|b| b.busy_s).sum();
     // Sojourn times (completion − arrival) are submission-indexed, so
     // the percentiles line up request-for-request across replay modes.
@@ -752,7 +833,7 @@ fn finish_stream_stats(
         completions,
         sojourn_p50_s,
         sojourn_p99_s,
-        per_shape,
+        per_job,
         mean_queue_depth: if makespan > 0.0 { integral / makespan } else { 0.0 },
         max_queue_depth: max_depth as usize,
         des_runs,
@@ -800,10 +881,115 @@ fn admission_order(arrivals: &[Arrival]) -> Vec<usize> {
     admission_order_by(&times)
 }
 
-/// Streaming replay (the tentpole): requests are admitted continuously
-/// as they arrive; the board with the earliest clock pulls the next
-/// same-shape run (up to its own grain, [`Fleet::grains`]) from the
-/// front of the admitted queue — work-conserving backfill, no wave
+/// One builder over every stream/wave replay mode (the ISSUE 10 API
+/// consolidation): pick a discipline (`streaming` by default, or
+/// [`StreamSim::waves`]), attach optional state (a caller-owned
+/// [`RunCache`], a [`TraceSink`], a [`MetricsRegistry`], a live
+/// calibration config), then [`StreamSim::run`] the arrivals.
+///
+/// ```text
+/// StreamSim::new(&fleet).cache(&mut cache).sink(&mut sink).run(&arrivals)
+/// ```
+///
+/// Every legacy entry point (`simulate_fleet_stream{,_cached,_traced,
+/// _live,_live_traced}`, `simulate_fleet_waves{,_cached}`) is now a
+/// thin delegation through this builder — bit-for-bit equivalence is
+/// pinned in `tests/stream_props.rs`. Defaults: a fresh private cache,
+/// a [`NullSink`], a disabled registry, no live calibration.
+pub struct StreamSim<'a> {
+    fleet: &'a Fleet,
+    cache: Option<&'a mut RunCache>,
+    sink: Option<&'a mut dyn TraceSink>,
+    metrics: Option<&'a mut MetricsRegistry>,
+    live: Option<LiveStreamConfig>,
+    waves: Option<(FleetStrategy, usize)>,
+}
+
+impl<'a> StreamSim<'a> {
+    /// A streaming replay of `fleet` with all defaults.
+    pub fn new(fleet: &'a Fleet) -> StreamSim<'a> {
+        StreamSim { fleet, cache: None, sink: None, metrics: None, live: None, waves: None }
+    }
+
+    /// Price items through a caller-owned [`RunCache`] (warm replays
+    /// are DES-free and bit-for-bit identical to fresh ones).
+    pub fn cache(mut self, cache: &'a mut RunCache) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Mirror replay events into a trace sink (zero-overhead contract:
+    /// never feeds back into the clock arithmetic).
+    pub fn sink(mut self, sink: &'a mut dyn TraceSink) -> Self {
+        self.sink = Some(sink);
+        self
+    }
+
+    /// Export counters/histograms/gauges into a metrics registry.
+    pub fn metrics(mut self, metrics: &'a mut MetricsRegistry) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+
+    /// Enable online calibration (ISSUE 9): boards learn rates from
+    /// their own completions and weighted-static schedules re-plan
+    /// mid-stream. Use [`StreamSim::run_live`] to also get the
+    /// per-board [`LiveBoardReport`]s back.
+    pub fn live(mut self, cfg: LiveStreamConfig) -> Self {
+        self.live = Some(cfg);
+        self
+    }
+
+    /// Replay under the synchronous wave discipline instead of
+    /// streaming admission: same-job waves of at most `max_group`
+    /// (admission order), each barriered on the previous wave.
+    pub fn waves(mut self, strategy: FleetStrategy, max_group: usize) -> Self {
+        self.waves = Some((strategy, max_group));
+        self
+    }
+
+    /// Run the replay. Live mode discards the board reports — call
+    /// [`StreamSim::run_live`] to keep them.
+    pub fn run(self, arrivals: &[Arrival]) -> StreamStats {
+        if self.live.is_some() {
+            return self.run_live(arrivals).0;
+        }
+        let StreamSim { fleet, cache, sink, metrics, waves, .. } = self;
+        let mut local_cache = RunCache::new();
+        let cache = cache.unwrap_or(&mut local_cache);
+        let mut null = NullSink;
+        let sink = sink.unwrap_or(&mut null);
+        let mut disabled = MetricsRegistry::disabled();
+        let metrics = metrics.unwrap_or(&mut disabled);
+        match waves {
+            Some((strategy, max_group)) => {
+                waves_engine(fleet, strategy, arrivals, max_group, cache, sink, metrics)
+            }
+            None => stream_engine(fleet, arrivals, cache, sink, metrics),
+        }
+    }
+
+    /// Run with online calibration and return what each board learned.
+    /// Incompatible with [`StreamSim::waves`] (the wave barrier has no
+    /// re-plan points).
+    pub fn run_live(self, arrivals: &[Arrival]) -> (StreamStats, Vec<LiveBoardReport>) {
+        let StreamSim { fleet, cache, sink, metrics, live, waves } = self;
+        assert!(waves.is_none(), "live calibration replays the streaming discipline, not waves");
+        let lcfg = live.unwrap_or_default();
+        let mut local_cache = RunCache::new();
+        let cache = cache.unwrap_or(&mut local_cache);
+        let mut null = NullSink;
+        let sink = sink.unwrap_or(&mut null);
+        let mut disabled = MetricsRegistry::disabled();
+        let metrics = metrics.unwrap_or(&mut disabled);
+        live_engine(fleet, arrivals, lcfg, cache, sink, metrics)
+    }
+}
+
+/// Streaming replay (the ISSUE 4 tentpole): requests are admitted
+/// continuously as they arrive; the board with the earliest clock pulls
+/// the next same-job run (up to its own grain, [`Fleet::grains`]) from
+/// the front of the admitted queue — work-conserving backfill, no wave
 /// barrier. A board facing an empty queue idles only until the next
 /// arrival. Deterministic: pure virtual time (ties go to the lowest
 /// board id), same arrivals ⇒ same timeline, bit for bit.
@@ -813,34 +999,38 @@ fn admission_order(arrivals: &[Arrival]) -> Vec<usize> {
 /// same grab sequence, same clock arithmetic, bit-for-bit equal
 /// makespan/energy/per-board tallies (pinned by tests).
 pub fn simulate_fleet_stream(fleet: &Fleet, arrivals: &[Arrival]) -> StreamStats {
-    simulate_fleet_stream_cached(fleet, arrivals, &mut RunCache::new())
+    StreamSim::new(fleet).run(arrivals)
 }
 
 /// [`simulate_fleet_stream`] against a caller-owned [`RunCache`]: a
 /// warm cache replays a stream without a single DES run (`des_runs`
-/// = 0), bit-for-bit identical to the fresh replay. This is the
-/// no-trace fast path: it delegates to
-/// [`simulate_fleet_stream_traced`] with a [`NullSink`] and a
-/// disabled registry, which skip every instrumentation branch.
+/// = 0), bit-for-bit identical to the fresh replay.
 pub fn simulate_fleet_stream_cached(
     fleet: &Fleet,
     arrivals: &[Arrival],
     cache: &mut RunCache,
 ) -> StreamStats {
-    simulate_fleet_stream_traced(
-        fleet,
-        arrivals,
-        cache,
-        &mut NullSink,
-        &mut MetricsRegistry::disabled(),
-    )
+    StreamSim::new(fleet).cache(cache).run(arrivals)
 }
 
-/// The streaming replay with observability attached: every event the
-/// replay already computes is mirrored into `sink` (request flows,
-/// execute spans, per-cluster phase spans, cache instants, a queue
-/// depth counter series) and `metrics` (admission/completion/grab
-/// counters, sojourn + service-time histograms, per-board energy).
+/// The streaming replay with observability attached — delegates to
+/// [`StreamSim`] with a sink and registry. See [`stream_engine`]'s
+/// notes on the trace layout and the zero-overhead contract.
+pub fn simulate_fleet_stream_traced(
+    fleet: &Fleet,
+    arrivals: &[Arrival],
+    cache: &mut RunCache,
+    sink: &mut dyn TraceSink,
+    metrics: &mut MetricsRegistry,
+) -> StreamStats {
+    StreamSim::new(fleet).cache(cache).sink(sink).metrics(metrics).run(arrivals)
+}
+
+/// The streaming engine. Every event the replay computes can be
+/// mirrored into `sink` (request flows, execute spans, per-cluster
+/// phase spans, cache instants, a queue depth counter series) and
+/// `metrics` (admission/completion/grab counters, sojourn +
+/// service-time histograms, per-board energy).
 ///
 /// **Zero-overhead contract**: all instrumentation is behind
 /// `sink.enabled()` / `metrics.enabled()` guards and never feeds back
@@ -856,8 +1046,10 @@ pub fn simulate_fleet_stream_cached(
 /// flow starts and the queue-depth counter. Phase spans replay the
 /// per-item [`Timeline`] of a separate [`simulate_traced`] run per
 /// distinct `(board, shape)` — trace mode pays that extra DES, the
-/// replay's own cache never sees it.
-pub fn simulate_fleet_stream_traced(
+/// replay's own cache never sees it. GEMM execute spans keep their
+/// historical `gemm {m}x{n}x{k}` names ([`JobSpec::label`]); non-GEMM
+/// jobs get a labelled span without per-cluster phase replay.
+fn stream_engine(
     fleet: &Fleet,
     arrivals: &[Arrival],
     cache: &mut RunCache,
@@ -893,7 +1085,8 @@ pub fn simulate_fleet_stream_traced(
     let mut finish = vec![0.0f64; n];
     let mut items = vec![0usize; n];
     let mut grabs = vec![0u64; n];
-    let mut counts: Vec<BTreeMap<(ConfigId, GemmShape), usize>> = vec![BTreeMap::new(); n];
+    let mut counts: Vec<BTreeMap<(ConfigId, JobSpec), usize>> = vec![BTreeMap::new(); n];
+    let mut priced: BTreeMap<(ConfigId, JobSpec), JobPrice> = BTreeMap::new();
     let mut completions = vec![f64::NAN; arrivals.len()];
     let mut depth_events: EventQueue<i64> = EventQueue::with_capacity(2 * arrivals.len());
     // Pending requests, heap-keyed (arrive_s, submission index): the
@@ -943,13 +1136,13 @@ pub fn simulate_fleet_stream_traced(
             clock[b] = t_next;
             continue;
         }
-        // Work-conserving grab: a consecutive same-shape run of up to
+        // Work-conserving grab: a consecutive same-job run of up to
         // the board's grain from the front of the admitted queue.
-        let shape = arrivals[head].shape;
+        let job = arrivals[head].job;
         run.clear();
         while run.len() < grains[b] {
             match pending.peek() {
-                Some((t, &id)) if t <= clock[b] && arrivals[id].shape == shape => {
+                Some((t, &id)) if t <= clock[b] && arrivals[id].job == job => {
                     run.push(id);
                     pending.pop();
                 }
@@ -958,9 +1151,15 @@ pub fn simulate_fleet_stream_traced(
         }
         let take = run.len();
         let hits_before = cache.hits();
-        let st = cache.cost_with(cfgs[b], shape, || {
-            simulate(fleet.boards[b].model(), &fleet.boards[b].sched, shape)
-        });
+        // GEMM/level-3 jobs re-price every grab (preserving the cache
+        // hit/miss counters the stats surface); factorizations memoize
+        // through `priced` so the graph is scheduled once per
+        // (config, job) instead of once per grab.
+        let key = (cfgs[b], job);
+        let st = match priced.get(&key) {
+            Some(p) if matches!(job, JobSpec::Factor { .. }) => p.clone(),
+            _ => price_job(&fleet.boards[b], &fleet.boards[b].sched, cfgs[b], job, cache),
+        };
         let start = clock[b];
         depth_events.push_tied(start, take as i64, -(take as i64));
         clock[b] += DISPATCH_S + take as f64 * st.time_s;
@@ -977,15 +1176,17 @@ pub fn simulate_fleet_stream_traced(
                 0,
                 start,
             ));
-            let span_name = format!("gemm {}x{}x{}", shape.m, shape.n, shape.k);
-            let tl = timelines.entry((b, shape)).or_insert_with(|| {
-                simulate_traced(fleet.boards[b].model(), &fleet.boards[b].sched, shape).1
-            });
+            let span_name = job.label();
             for (j, &id) in run.iter().enumerate() {
                 let t0 = start + DISPATCH_S + j as f64 * st.time_s;
                 sink.record(TraceEvent::flow_step(&format!("req {id}"), "request", b, 0, t0, id as u64));
                 sink.record(TraceEvent::span(&span_name, "execute", b, 0, t0, st.time_s));
-                tl.emit_to(sink, b, 1, t0);
+                if let JobSpec::Gemm(shape) = job {
+                    let tl = timelines.entry((b, shape)).or_insert_with(|| {
+                        simulate_traced(fleet.boards[b].model(), &fleet.boards[b].sched, shape).1
+                    });
+                    tl.emit_to(sink, b, 1, t0);
+                }
                 sink.record(TraceEvent::flow_end(
                     &format!("req {id}"),
                     "request",
@@ -1005,7 +1206,8 @@ pub fn simulate_fleet_stream_traced(
         }
         items[b] += take;
         grabs[b] += 1;
-        *counts[b].entry((cfgs[b], shape)).or_insert(0) += take;
+        *counts[b].entry(key).or_insert(0) += take;
+        priced.entry(key).or_insert(st);
         executed += take;
     }
     if metrics.enabled() {
@@ -1018,7 +1220,7 @@ pub fn simulate_fleet_stream_traced(
         fleet,
         format!("stream [{}]", board_names(fleet)),
         arrivals,
-        cache,
+        &priced,
         &counts,
         &items,
         &grabs,
@@ -1098,23 +1300,34 @@ pub fn simulate_fleet_stream_live(
     arrivals: &[Arrival],
     cfg: LiveStreamConfig,
 ) -> (StreamStats, Vec<LiveBoardReport>) {
-    simulate_fleet_stream_live_traced(
-        fleet,
-        arrivals,
-        cfg,
-        &mut RunCache::new(),
-        &mut NullSink,
-        &mut MetricsRegistry::disabled(),
-    )
+    StreamSim::new(fleet).live(cfg).run_live(arrivals)
 }
 
 /// [`simulate_fleet_stream_live`] against a caller-owned cache, trace
-/// sink and metrics registry. Per-cell sample-count gauges
-/// (`board<b>_live_samples_*`) and accepted/rejected totals reach the
-/// registry after the replay; instrumentation never feeds back into
-/// the clock arithmetic (same zero-overhead contract as
-/// [`simulate_fleet_stream_traced`]).
+/// sink and metrics registry — delegates to [`StreamSim`]. Per-cell
+/// sample-count gauges (`board<b>_live_samples_*`) and
+/// accepted/rejected totals reach the registry after the replay;
+/// instrumentation never feeds back into the clock arithmetic (same
+/// zero-overhead contract as the plain streaming engine).
 pub fn simulate_fleet_stream_live_traced(
+    fleet: &Fleet,
+    arrivals: &[Arrival],
+    lcfg: LiveStreamConfig,
+    cache: &mut RunCache,
+    sink: &mut dyn TraceSink,
+    metrics: &mut MetricsRegistry,
+) -> (StreamStats, Vec<LiveBoardReport>) {
+    StreamSim::new(fleet).live(lcfg).cache(cache).sink(sink).metrics(metrics).run_live(arrivals)
+}
+
+/// The live-calibrating streaming engine (ISSUE 9). Non-GEMM jobs ride
+/// along: level-3 jobs feed the observation loop through their
+/// equivalent GEMM's run stats (time and flops scale together, so the
+/// learned *rate* is unchanged); `Factor` jobs feed nothing — their
+/// tile kernels run under per-cluster `cluster_only` configurations,
+/// not the board's own schedule, so their completions say nothing
+/// about the board-schedule rate cells the table learns.
+fn live_engine(
     fleet: &Fleet,
     arrivals: &[Arrival],
     lcfg: LiveStreamConfig,
@@ -1150,7 +1363,8 @@ pub fn simulate_fleet_stream_live_traced(
     let mut finish = vec![0.0f64; n];
     let mut items = vec![0usize; n];
     let mut grabs = vec![0u64; n];
-    let mut counts: Vec<BTreeMap<(ConfigId, GemmShape), usize>> = vec![BTreeMap::new(); n];
+    let mut counts: Vec<BTreeMap<(ConfigId, JobSpec), usize>> = vec![BTreeMap::new(); n];
+    let mut priced: BTreeMap<(ConfigId, JobSpec), JobPrice> = BTreeMap::new();
     let mut completions = vec![f64::NAN; arrivals.len()];
     let mut depth_events: EventQueue<i64> = EventQueue::with_capacity(2 * arrivals.len());
     let mut pending: EventQueue<usize> = EventQueue::with_capacity(arrivals.len());
@@ -1174,11 +1388,11 @@ pub fn simulate_fleet_stream_live_traced(
             clock[b] = t_next;
             continue;
         }
-        let shape = arrivals[head].shape;
+        let job = arrivals[head].job;
         run.clear();
         while run.len() < grains[b] {
             match pending.peek() {
-                Some((t, &id)) if t <= clock[b] && arrivals[id].shape == shape => {
+                Some((t, &id)) if t <= clock[b] && arrivals[id].job == job => {
                     run.push(id);
                     pending.pop();
                 }
@@ -1186,9 +1400,11 @@ pub fn simulate_fleet_stream_live_traced(
             }
         }
         let take = run.len();
-        let st = cache.cost_with(cfgs[b], shape, || {
-            simulate(fleet.boards[b].model(), &scheds[b], shape)
-        });
+        let key = (cfgs[b], job);
+        let st = match priced.get(&key) {
+            Some(p) if matches!(job, JobSpec::Factor { .. }) => p.clone(),
+            _ => price_job(&fleet.boards[b], &scheds[b], cfgs[b], job, cache),
+        };
         let start = clock[b];
         depth_events.push_tied(start, take as i64, -(take as i64));
         clock[b] += DISPATCH_S + take as f64 * st.time_s;
@@ -1206,24 +1422,36 @@ pub fn simulate_fleet_stream_live_traced(
         }
         items[b] += take;
         grabs[b] += 1;
-        *counts[b].entry((cfgs[b], shape)).or_insert(0) += take;
+        *counts[b].entry(key).or_insert(0) += take;
+        priced.entry(key).or_insert(st);
         executed += take;
 
-        // --- Online calibration: feed the completion back. ---
-        let stats = cache.peek(cfgs[b], shape).expect("executed shapes are cached");
-        let family = Family::of(scheds[b].strategy.is_cache_aware());
-        let soc = fleet.boards[b].soc();
-        for c in soc.cluster_ids() {
-            let flops_c = stats.cluster_flops[c.0];
-            if flops_c <= 0.0 {
-                continue; // cluster left inactive by the schedule
+        // --- Online calibration: feed the completion back. GEMM jobs
+        // observe their own run; level-3 jobs observe their equivalent
+        // GEMM (flops and service scale together, so the rate is the
+        // same); factorizations observe nothing (their tiles ran under
+        // cluster_only configurations, not this board schedule). ---
+        let observed = match job {
+            JobSpec::Gemm(s) => Some(s),
+            JobSpec::Level3 { .. } => Some(job.equiv_gemm()),
+            JobSpec::Factor { .. } => None,
+        };
+        if let Some(shape) = observed {
+            let stats = cache.peek(cfgs[b], shape).expect("executed shapes are cached");
+            let family = Family::of(scheds[b].strategy.is_cache_aware());
+            let soc = fleet.boards[b].soc();
+            for c in soc.cluster_ids() {
+                let flops_c = stats.cluster_flops[c.0];
+                if flops_c <= 0.0 {
+                    continue; // cluster left inactive by the schedule
+                }
+                let busy_c: f64 = soc.core_ids(c).map(|gid| stats.activity[gid].busy_s).sum();
+                let service_c = busy_c / soc[c].num_cores as f64;
+                live[b].observe_weighted(c, opps[b][c.0], family, shape, flops_c, service_c, take as u64);
             }
-            let busy_c: f64 = soc.core_ids(c).map(|gid| stats.activity[gid].busy_s).sum();
-            let service_c = busy_c / soc[c].num_cores as f64;
-            live[b].observe_weighted(c, opps[b][c.0], family, shape, flops_c, service_c, take as u64);
-        }
-        if warmup[b].is_none() && live[b].warmed_up(lcfg.min_samples) {
-            warmup[b] = Some(live[b].accepted());
+            if warmup[b].is_none() && live[b].warmed_up(lcfg.min_samples) {
+                warmup[b] = Some(live[b].accepted());
+            }
         }
 
         // --- Re-plan point: every `replan_every` grabs, weighted-static
@@ -1231,7 +1459,7 @@ pub fn simulate_fleet_stream_live_traced(
         if grabs[b] % lcfg.replan_every as u64 == 0 {
             let model = fleet.boards[b].model();
             let source = WeightSource::Live { table: live[b].clone(), min_samples: lcfg.min_samples };
-            let class = live[b].classify(shape);
+            let class = live[b].classify(job.equiv_gemm());
             let new_strategy = match scheds[b].strategy {
                 Strategy::Sas { .. } => {
                     Some(Strategy::Sas { weights: source.weights(model, false, class) })
@@ -1268,7 +1496,7 @@ pub fn simulate_fleet_stream_live_traced(
         fleet,
         format!("live stream [{}]", board_names(fleet)),
         arrivals,
-        cache,
+        &priced,
         &counts,
         &items,
         &grabs,
@@ -1306,7 +1534,7 @@ pub fn simulate_fleet_waves(
     arrivals: &[Arrival],
     max_group: usize,
 ) -> StreamStats {
-    simulate_fleet_waves_cached(fleet, strategy, arrivals, max_group, &mut RunCache::new())
+    StreamSim::new(fleet).waves(strategy, max_group).run(arrivals)
 }
 
 /// [`simulate_fleet_waves`] against a caller-owned [`RunCache`] — the
@@ -1319,6 +1547,19 @@ pub fn simulate_fleet_waves_cached(
     max_group: usize,
     cache: &mut RunCache,
 ) -> StreamStats {
+    StreamSim::new(fleet).waves(strategy, max_group).cache(cache).run(arrivals)
+}
+
+/// The wave-discipline engine behind [`StreamSim::waves`].
+fn waves_engine(
+    fleet: &Fleet,
+    strategy: FleetStrategy,
+    arrivals: &[Arrival],
+    max_group: usize,
+    cache: &mut RunCache,
+    sink: &mut dyn TraceSink,
+    metrics: &mut MetricsRegistry,
+) -> StreamStats {
     // Empty streams form zero waves and fall straight through to the
     // all-zero stats, mirroring the streaming replay's convention.
     let n = fleet.num_boards();
@@ -1327,11 +1568,11 @@ pub fn simulate_fleet_waves_cached(
     let cfgs = board_configs(fleet, cache);
     let grains = fleet.grains();
 
-    // Same-shape waves in admission order.
-    let mut batcher: Batcher<GemmShape, usize> = Batcher::new(max_group);
-    let mut waves: Vec<(GemmShape, Vec<usize>)> = Vec::new();
+    // Same-job waves in admission order.
+    let mut batcher: Batcher<JobSpec, usize> = Batcher::new(max_group);
+    let mut waves: Vec<(JobSpec, Vec<usize>)> = Vec::new();
     for &i in &order {
-        if let Some(g) = batcher.push_keyed(arrivals[i].shape, i) {
+        if let Some(g) = batcher.push_keyed(arrivals[i].job, i) {
             waves.push(g);
         }
     }
@@ -1339,13 +1580,28 @@ pub fn simulate_fleet_waves_cached(
 
     let mut items = vec![0usize; n];
     let mut grabs = vec![0u64; n];
-    let mut counts: Vec<BTreeMap<(ConfigId, GemmShape), usize>> = vec![BTreeMap::new(); n];
+    let mut counts: Vec<BTreeMap<(ConfigId, JobSpec), usize>> = vec![BTreeMap::new(); n];
+    let mut priced: BTreeMap<(ConfigId, JobSpec), JobPrice> = BTreeMap::new();
     let mut finish = vec![0.0f64; n];
     let mut completions = vec![f64::NAN; arrivals.len()];
     let mut depth_events: EventQueue<i64> = EventQueue::with_capacity(2 * arrivals.len());
     let mut prev_end = 0.0f64;
+    // Per-board pricing closure mirroring the streaming engine's
+    // policy: GEMM/level-3 jobs re-price every grab (the hit/miss
+    // counters), factorizations memoize their DAG schedule.
+    let mut price = |b: usize, job: JobSpec, cache: &mut RunCache,
+                     priced: &mut BTreeMap<(ConfigId, JobSpec), JobPrice>|
+     -> JobPrice {
+        let key = (cfgs[b], job);
+        let p = match priced.get(&key) {
+            Some(p) if matches!(job, JobSpec::Factor { .. }) => p.clone(),
+            _ => price_job(&fleet.boards[b], &fleet.boards[b].sched, cfgs[b], job, cache),
+        };
+        priced.entry(key).or_insert_with(|| p.clone());
+        p
+    };
 
-    for (shape, members) in &waves {
+    for (job, members) in &waves {
         let count = members.len();
         let ready = members
             .iter()
@@ -1358,7 +1614,7 @@ pub fn simulate_fleet_waves_cached(
         depth_events.push_tied(start, count as i64, -(count as i64));
         // Per-item times are looked up lazily per participating board —
         // a board whose shard is empty (or that never wins a grab)
-        // never pays a DES run for this shape; the cache makes repeats
+        // never pays a DES run for this job; the cache makes repeats
         // free.
         let mut wclock = vec![start; n];
         match strategy {
@@ -1371,18 +1627,14 @@ pub fn simulate_fleet_waves_cached(
                     }
                     let ids = &members[offset..offset + share];
                     offset += share;
-                    let time_s = cache
-                        .cost_with(cfgs[b], *shape, || {
-                            simulate(fleet.boards[b].model(), &fleet.boards[b].sched, *shape)
-                        })
-                        .time_s;
+                    let time_s = price(b, *job, cache, &mut priced).time_s;
                     wclock[b] = start + (DISPATCH_S + share as f64 * time_s);
                     for (j, &id) in ids.iter().enumerate() {
                         completions[id] = start + (DISPATCH_S + (j + 1) as f64 * time_s);
                     }
                     items[b] += share;
                     grabs[b] += 1;
-                    *counts[b].entry((cfgs[b], *shape)).or_insert(0) += share;
+                    *counts[b].entry((cfgs[b], *job)).or_insert(0) += share;
                     finish[b] = wclock[b];
                 }
             }
@@ -1397,11 +1649,7 @@ pub fn simulate_fleet_waves_cached(
                     }
                     let take = grains[idx].min(count - next);
                     let t0 = wclock[idx];
-                    let time_s = cache
-                        .cost_with(cfgs[idx], *shape, || {
-                            simulate(fleet.boards[idx].model(), &fleet.boards[idx].sched, *shape)
-                        })
-                        .time_s;
+                    let time_s = price(idx, *job, cache, &mut priced).time_s;
                     wclock[idx] += DISPATCH_S + take as f64 * time_s;
                     for (j, &id) in members[next..next + take].iter().enumerate() {
                         completions[id] = t0 + DISPATCH_S + (j + 1) as f64 * time_s;
@@ -1409,7 +1657,7 @@ pub fn simulate_fleet_waves_cached(
                     next += take;
                     items[idx] += take;
                     grabs[idx] += 1;
-                    *counts[idx].entry((cfgs[idx], *shape)).or_insert(0) += take;
+                    *counts[idx].entry((cfgs[idx], *job)).or_insert(0) += take;
                     finish[idx] = wclock[idx];
                 }
             }
@@ -1425,7 +1673,7 @@ pub fn simulate_fleet_waves_cached(
         fleet,
         format!("wave {} [{}]", strategy.label(), board_names(fleet)),
         arrivals,
-        cache,
+        &priced,
         &counts,
         &items,
         &grabs,
@@ -1434,8 +1682,8 @@ pub fn simulate_fleet_waves_cached(
         depth_events,
         cache.misses() - misses0,
         cache.hits() - hits0,
-        &mut NullSink,
-        &mut MetricsRegistry::disabled(),
+        sink,
+        metrics,
     )
 }
 
@@ -1975,12 +2223,12 @@ mod tests {
             assert!(done > arr.arrive_s, "request {i} completed before arriving");
             assert!(done <= a.makespan_s + 1e-12);
         }
-        // Executed-per-shape histogram == submitted histogram.
-        for &(shape, executed) in &a.per_shape {
-            let submitted = arrivals.iter().filter(|x| x.shape == shape).count();
-            assert_eq!(executed, submitted, "{shape:?}");
+        // Executed-per-job histogram == submitted histogram.
+        for &(job, executed) in &a.per_job {
+            let submitted = arrivals.iter().filter(|x| x.job == job).count();
+            assert_eq!(executed, submitted, "{job:?}");
         }
-        assert_eq!(a.per_shape.iter().map(|(_, c)| c).sum::<usize>(), 30);
+        assert_eq!(a.per_job.iter().map(|(_, c)| c).sum::<usize>(), 30);
         // Per-board accounting.
         assert!(a.utilization > 0.0 && a.utilization <= 1.0, "{}", a.utilization);
         for bd in &a.boards {
@@ -2138,10 +2386,62 @@ mod tests {
             assert!(w[1].arrive_s >= w[0].arrive_s, "arrivals must be sorted");
         }
         assert!(a.iter().all(|x| x.arrive_s > 0.0 && x.arrive_s.is_finite()));
-        assert!(a.iter().all(|x| shapes.contains(&x.shape)));
+        assert!(a.iter().all(|x| shapes.iter().any(|&s| x.job == JobSpec::Gemm(s))));
         // Mean inter-arrival ≈ 1/rate over 50 draws (loose bound).
         let mean = a.last().unwrap().arrive_s / 50.0;
         assert!((0.04..0.25).contains(&mean), "mean gap {mean}");
+    }
+
+    /// ISSUE 10: a mixed GEMM + factorization stream drains with
+    /// exactly-once completions, a consistent per-job histogram, and
+    /// deterministic replays — the JobSpec vocabulary end to end.
+    #[test]
+    fn mixed_job_stream_drains_exactly_once() {
+        use crate::dag::FactorKind;
+        let jobs = [
+            JobSpec::Gemm(GemmShape::square(256)),
+            JobSpec::Factor { kind: FactorKind::Cholesky, n: 512, nb: 128 },
+            JobSpec::Level3 { op: crate::dag::Level3Op::TrsmLower, m: 256, n: 128 },
+        ];
+        let arrivals = poisson_job_arrivals(&mut Rng::new(0xDA6), &jobs, 24, 30.0);
+        let a = simulate_fleet_stream(&hetero(), &arrivals);
+        assert_eq!(a.items_completed(), 24);
+        assert_eq!(a.per_job.iter().map(|(_, c)| c).sum::<usize>(), 24);
+        for &(job, executed) in &a.per_job {
+            assert_eq!(executed, arrivals.iter().filter(|x| x.job == job).count(), "{job:?}");
+        }
+        for (i, &done) in a.completions.iter().enumerate() {
+            assert!(done.is_finite() && done > arrivals[i].arrive_s, "request {i}");
+        }
+        assert!(a.energy_j > 0.0 && a.makespan_s > 0.0);
+        let b = simulate_fleet_stream(&hetero(), &arrivals);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.completions, b.completions);
+        // The wave comparator drains the same mixed stream.
+        let w = simulate_fleet_waves(&hetero(), FleetStrategy::Das, &arrivals, 8);
+        assert_eq!(w.items_completed(), 24);
+    }
+
+    /// ISSUE 10 consolidation: the legacy entry points and the
+    /// `StreamSim` builder are the same replay, bit for bit.
+    #[test]
+    fn stream_sim_builder_matches_legacy_entry_points() {
+        let shapes = [GemmShape::square(256), GemmShape::square(384)];
+        let arrivals = poisson_arrivals(&mut Rng::new(0x51B), &shapes, 20, 50.0);
+        let legacy = simulate_fleet_stream(&hetero(), &arrivals);
+        let built = StreamSim::new(&hetero()).run(&arrivals);
+        assert_eq!(legacy, built);
+        let legacy_w =
+            simulate_fleet_waves(&hetero(), FleetStrategy::Das, &arrivals, 8);
+        let built_w = StreamSim::new(&hetero()).waves(FleetStrategy::Das, 8).run(&arrivals);
+        assert_eq!(legacy_w, built_w);
+        let (legacy_l, legacy_r) =
+            simulate_fleet_stream_live(&hetero(), &arrivals, LiveStreamConfig::default());
+        let (built_l, built_r) =
+            StreamSim::new(&hetero()).live(LiveStreamConfig::default()).run_live(&arrivals);
+        assert_eq!(legacy_l, built_l);
+        assert_eq!(legacy_r, built_r);
     }
 
     #[test]

@@ -41,6 +41,19 @@
 //!   (clusters of a SoC, or boards of a fleet — `sched::Weighted`);
 //! * [`native`] — real multithreaded packed GEMM applying those
 //!   strategies on any topology (numerics verified against the oracle);
+//! * [`dag`] — the **task-DAG layer** (DESIGN.md §12): `TaskGraph`
+//!   builders for tiled blocked Cholesky/LU whose per-tile kernels
+//!   reuse the packing/control-tree layer (`blis::level3::trsm_lower`,
+//!   `native::gemm_parallel`), a deterministic criticality-aware list
+//!   scheduler (critical path → fastest cluster at its tuned
+//!   `(mc, kc)`, trailing updates split by the existing
+//!   `sched::Weights` vector, so every `WeightSource` drives it
+//!   unchanged) vs a cluster-oblivious comparator, a verified numeric
+//!   executor, and the unified `JobSpec` workload API — `Arrival`, the
+//!   request `Batcher` key, `Fleet::plan_wave`, the stream DES and the
+//!   coordinator `JOB` wire commands all carry
+//!   `Gemm | Level3 | Factor` jobs through one set of queues, caches
+//!   and stats (GEMM-only paths pinned bit-for-bit);
 //! * [`runtime`], [`coordinator`] — the PJRT artifact runtime (HLO text
 //!   → compile → execute), the GEMM service on top, the generic-key
 //!   request `Batcher`, the one-wave-per-batch `FleetDispatcher` and
@@ -103,6 +116,7 @@ pub mod blis;
 pub mod cache;
 pub mod calibrate;
 pub mod coordinator;
+pub mod dag;
 pub mod dvfs;
 pub mod energy;
 pub mod figures;

@@ -69,6 +69,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "fleet" => cmd_fleet(&args),
         "autoscale" => cmd_autoscale(&args),
+        "dag" => cmd_dag(&args),
         "dvfs" => cmd_dvfs(&args),
         "trace" => cmd_trace(&args),
         "metrics" => cmd_metrics(&args),
@@ -89,7 +90,7 @@ fn print_help() {
         "amp-gemm — architecture-aware GEMM scheduling on asymmetric multicores
 (reproduction of Catalán et al. 2015; see DESIGN.md)
 
-USAGE: amp-gemm <figures|search|gemm|calibrate|trajectory|serve|fleet|autoscale|dvfs|trace|metrics|soc> [options]
+USAGE: amp-gemm <figures|search|gemm|calibrate|trajectory|serve|fleet|autoscale|dag|dvfs|trace|metrics|soc> [options]
 
   figures   [--fig N] [--quick] [--out results]   regenerate paper figures
   ablation  [--out results]                        §6 future-work ablations
@@ -110,6 +111,9 @@ USAGE: amp-gemm <figures|search|gemm|calibrate|trajectory|serve|fleet|autoscale|
             [--rate RPS] [--seed S]                 streaming-vs-wave sweep
   autoscale [--quick] [--out results]               SLO rate-sweep report:
             elastic fleets vs peak static, closed-loop governor energy
+  dag       [--report] [--quick] [--out results]    task-DAG factorization
+            report: criticality-aware vs oblivious blocked Cholesky/LU,
+            mixed GEMM+factorization stream, JOB wire protocol
   dvfs      [--governor performance|powersave|ondemand[:ms]] [--size R]
             [--sched sas|casas|das|cadas] [--ladder] [--tune-opps]
             [--weights analytical|empirical|hybrid]
@@ -483,7 +487,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         Coordinator::new(SocSpec::exynos5422())
     };
     let handle = server::serve(Arc::new(coord), addr).map_err(|e| e.to_string())?;
-    println!("serving on {} — protocol: GEMM m n k seed native|pjrt|sim ; PING ; STATS ; METRICS ; QUIT", handle.addr);
+    println!("serving on {} — protocol: GEMM m n k seed native|pjrt|sim ; JOB gemm|chol|lu ... ; HELP ; PING ; STATS ; METRICS ; QUIT", handle.addr);
     // Run until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -653,6 +657,23 @@ fn cmd_autoscale(args: &Args) -> Result<(), String> {
     println!("wrote {} CSVs under {}", paths.len(), out.display());
     if !fig.passed() {
         return Err("autoscale report assertions failed".into());
+    }
+    Ok(())
+}
+
+/// Task-DAG factorization report (ISSUE 10): criticality-aware vs
+/// cluster-oblivious blocked Cholesky/LU schedules, the mixed-job
+/// stream through the unified JobSpec DES, and the JOB wire protocol.
+/// `--report` is accepted for symmetry with the other report commands
+/// but is the only mode.
+fn cmd_dag(args: &Args) -> Result<(), String> {
+    let fig = figures::dag::run(args.flag("quick"));
+    println!("{}", fig.to_markdown());
+    let out = Path::new(args.get_or("out", "results"));
+    let paths = fig.write_csvs(out).map_err(|e| e.to_string())?;
+    println!("wrote {} CSVs under {}", paths.len(), out.display());
+    if !fig.passed() {
+        return Err("dag report assertions failed".into());
     }
     Ok(())
 }

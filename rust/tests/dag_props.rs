@@ -1,0 +1,245 @@
+//! Property tests for the task-DAG runtime (ISSUE 10, proptest-style
+//! over `util::rng`):
+//!
+//! * graph structure: random blocked Cholesky/LU graphs validate, and
+//!   both scheduling policies execute every task exactly once in an
+//!   order that respects every dependency edge;
+//! * replay determinism: over randomized 1–4-cluster descriptors, a
+//!   schedule replays bit for bit (order, makespan, energy rails);
+//! * the ISSUE acceptance pin: on the exynos5422, the
+//!   criticality-aware policy (critical path to the big cluster at its
+//!   tuned `(mc, kc)`, trailing updates split by the weight vector)
+//!   strictly beats the cluster-oblivious round-robin comparator;
+//! * the numeric executor logs the graph's own topological id order —
+//!   scheduling policy changes never reorder the in-place algebra.
+
+use amp_gemm::blis::gemm::GemmShape;
+use amp_gemm::calibrate::{ShapeClass, WeightSource};
+use amp_gemm::dag::{schedule, tile_costs, DagPolicy, FactorKind, TaskGraph};
+use amp_gemm::model::PerfModel;
+use amp_gemm::sim::RunCache;
+use amp_gemm::soc::{ClusterSpec, OppTable, SocSpec};
+use amp_gemm::util::prop;
+use amp_gemm::util::rng::Rng;
+
+/// A random 1–4-cluster topology (single-rung ladders — the DAG layer
+/// schedules at nominal frequency), donor clusters from the presets
+/// with randomized frequencies: the `live_props`/`dvfs_props`
+/// generator bounded to what `tile_costs` consumes.
+fn random_soc(r: &mut Rng, max_clusters: usize) -> SocSpec {
+    let exynos = SocSpec::exynos5422();
+    let tri = SocSpec::dynamiq_3c();
+    let donors: Vec<ClusterSpec> = vec![
+        exynos.clusters[0].clone(),
+        exynos.clusters[1].clone(),
+        tri.clusters[1].clone(),
+    ];
+    let n = r.gen_range(1, max_clusters + 1);
+    let clusters: Vec<ClusterSpec> = (0..n)
+        .map(|i| {
+            let mut cl = donors[r.gen_range(0, donors.len())].clone();
+            cl.name = format!("c{i}-{}", cl.name);
+            cl.core.freq_ghz = r.gen_f64(0.4, 2.5);
+            cl.opps = OppTable::single(cl.core.freq_ghz);
+            cl
+        })
+        .collect();
+    SocSpec {
+        name: format!("random-{n}c"),
+        clusters,
+        l3: None,
+        dram_bw_gbs: 3.2,
+        dram_total_bytes: 2 * 1024 * 1024 * 1024,
+    }
+}
+
+/// A random factorization descriptor: kind, tile grid of 2–6 tiles,
+/// tile size from the small-search grid.
+fn random_factor(r: &mut Rng) -> (FactorKind, usize, usize) {
+    let kind = *r.choose(&[FactorKind::Cholesky, FactorKind::Lu]);
+    let nb = *r.choose(&[64usize, 96, 128]);
+    let nt = r.gen_range(2, 7);
+    (kind, nt * nb, nb)
+}
+
+/// Both policies place every task exactly once, never before one of
+/// its dependencies, and never beat the critical-path bound — on
+/// random graphs over random descriptors.
+#[test]
+fn prop_schedules_respect_dependencies_exactly_once() {
+    prop::check(
+        &prop::Config { cases: 24, seed: 0xDA6_001 },
+        |r| {
+            let soc = random_soc(r, 4);
+            let (kind, n, nb) = random_factor(r);
+            (soc, kind, n, nb)
+        },
+        |(soc, kind, n, nb)| {
+            let graph = TaskGraph::build(*kind, *n, *nb);
+            graph.validate()?;
+            let model = PerfModel::new(soc.clone());
+            let mut cache = RunCache::new();
+            let costs = tile_costs(&model, *nb, &mut cache);
+            let class = ShapeClass::for_soc(&model.soc, GemmShape::square(*nb));
+            let w = WeightSource::Analytical.weights(&model, true, class);
+            for policy in [DagPolicy::CriticalityAware, DagPolicy::Oblivious] {
+                let s = schedule(&graph, &costs, &w, policy);
+                if s.order.len() != graph.num_tasks() {
+                    return Err(format!(
+                        "{}: {} placements for {} tasks",
+                        policy.label(),
+                        s.order.len(),
+                        graph.num_tasks()
+                    ));
+                }
+                let mut finish = vec![f64::NAN; graph.num_tasks()];
+                for st in &s.order {
+                    if !finish[st.task].is_nan() {
+                        return Err(format!("{}: task {} placed twice", policy.label(), st.task));
+                    }
+                    for &d in &graph.tasks[st.task].deps {
+                        if finish[d].is_nan() {
+                            return Err(format!(
+                                "{}: task {} dispatched before dep {d}",
+                                policy.label(),
+                                st.task
+                            ));
+                        }
+                        if st.start_s < finish[d] - 1e-12 {
+                            return Err(format!(
+                                "{}: task {} starts before dep {d} finishes",
+                                policy.label(),
+                                st.task
+                            ));
+                        }
+                    }
+                    finish[st.task] = st.finish_s;
+                }
+                if s.makespan_s < s.critical_path_s - 1e-12 {
+                    return Err(format!(
+                        "{}: makespan {} beats the critical-path bound {}",
+                        policy.label(),
+                        s.makespan_s,
+                        s.critical_path_s
+                    ));
+                }
+                let busy: f64 = s.busy_s.iter().sum();
+                if !(s.makespan_s > 0.0 && s.energy_j > 0.0 && busy > 0.0) {
+                    return Err(format!("{}: degenerate schedule totals", policy.label()));
+                }
+                let rails: f64 = s.energy_clusters_j.iter().sum();
+                if (rails - s.energy_j).abs() > 1e-9 * s.energy_j.max(1.0) {
+                    return Err(format!(
+                        "{}: energy rails {} do not sum to {}",
+                        policy.label(),
+                        rails,
+                        s.energy_j
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Replay determinism across randomized 1–4-cluster descriptors: the
+/// whole pipeline — tile costing through a fresh cache, critical-path
+/// analysis, placement — replays bit for bit, both policies.
+#[test]
+fn prop_schedules_replay_bit_for_bit() {
+    prop::check(
+        &prop::Config { cases: 24, seed: 0xDA6_002 },
+        |r| {
+            let soc = random_soc(r, 4);
+            let (kind, n, nb) = random_factor(r);
+            (soc, kind, n, nb)
+        },
+        |(soc, kind, n, nb)| {
+            let graph = TaskGraph::build(*kind, *n, *nb);
+            let model = PerfModel::new(soc.clone());
+            let class = ShapeClass::for_soc(&model.soc, GemmShape::square(*nb));
+            let w = WeightSource::Analytical.weights(&model, true, class);
+            for policy in [DagPolicy::CriticalityAware, DagPolicy::Oblivious] {
+                let mut c1 = RunCache::new();
+                let a = schedule(&graph, &tile_costs(&model, *nb, &mut c1), &w, policy);
+                let mut c2 = RunCache::new();
+                let b = schedule(&graph, &tile_costs(&model, *nb, &mut c2), &w, policy);
+                if a != b {
+                    return Err(format!("{}: schedule replay diverged", policy.label()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The ISSUE 10 acceptance pin: criticality-awareness strictly beats
+/// the cluster-oblivious comparator on the exynos5422, for both
+/// factorizations at the pinned descriptor — and the critical tasks
+/// all land on the big cluster (cluster 0 is fastest on this SoC).
+#[test]
+fn critical_path_to_big_beats_oblivious_on_exynos() {
+    let model = PerfModel::new(SocSpec::exynos5422());
+    let mut cache = RunCache::new();
+    let costs = tile_costs(&model, 128, &mut cache);
+    assert_eq!(costs.fastest(), 0, "the A15 cluster prices fastest");
+    let class = ShapeClass::for_soc(&model.soc, GemmShape::square(128));
+    let w = WeightSource::Analytical.weights(&model, true, class);
+    for kind in [FactorKind::Cholesky, FactorKind::Lu] {
+        let graph = TaskGraph::build(kind, 1024, 128);
+        let ca = schedule(&graph, &costs, &w, DagPolicy::CriticalityAware);
+        let obl = schedule(&graph, &costs, &w, DagPolicy::Oblivious);
+        assert!(
+            ca.makespan_s < obl.makespan_s,
+            "{}: CA {} vs oblivious {}",
+            kind.label(),
+            ca.makespan_s,
+            obl.makespan_s
+        );
+        assert!(ca.critical_tasks > 0, "{}: no critical tasks found", kind.label());
+        // Every task the policy deemed critical ran on the fast cluster.
+        let order = &ca.order;
+        let fast_tasks = order.iter().filter(|t| t.cluster.0 == 0).count();
+        assert!(
+            fast_tasks >= ca.critical_tasks,
+            "{}: {} fast-cluster placements for {} critical tasks",
+            kind.label(),
+            fast_tasks,
+            ca.critical_tasks
+        );
+    }
+    // Cholesky specifically must clear the 5% figure-level bar.
+    let graph = TaskGraph::cholesky(1024, 128);
+    let ca = schedule(&graph, &costs, &w, DagPolicy::CriticalityAware);
+    let obl = schedule(&graph, &costs, &w, DagPolicy::Oblivious);
+    assert!(
+        ca.makespan_s * 1.05 <= obl.makespan_s,
+        "CA {} vs oblivious {} — under the 5% acceptance bar",
+        ca.makespan_s,
+        obl.makespan_s
+    );
+}
+
+/// The numeric executor runs tasks in the graph's own id order
+/// (topological by construction) — exactly once, every task, so the
+/// in-place tile algebra is schedule-independent.
+#[test]
+fn executor_log_is_the_topological_id_order() {
+    let soc = SocSpec::exynos5422();
+    let spec = amp_gemm::sched::ScheduleSpec::ca_das();
+    let n = 128;
+    let mut rng = Rng::new(0xDA6_E7E);
+    let mut a = rng.fill_matrix(n * n);
+    for i in 0..n {
+        for j in 0..i {
+            let avg = 0.5 * (a[i * n + j] + a[j * n + i]);
+            a[i * n + j] = avg;
+            a[j * n + i] = avg;
+        }
+        a[i * n + i] = a[i * n + i].abs() + n as f64;
+    }
+    let log = amp_gemm::dag::exec::cholesky(&soc, &spec, n, 32, &mut a);
+    let graph = TaskGraph::cholesky(n, 32);
+    assert_eq!(log.executed.len(), graph.num_tasks());
+    assert!(log.executed.iter().enumerate().all(|(i, &t)| i == t));
+}

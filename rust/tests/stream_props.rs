@@ -68,11 +68,11 @@ fn prop_stream_merges_in_order_exactly_once_deterministically() {
                     arrivals.len()
                 ));
             }
-            for &(shape, executed) in &a.per_shape {
-                let submitted = arrivals.iter().filter(|x| x.shape == shape).count();
+            for &(job, executed) in &a.per_job {
+                let submitted = arrivals.iter().filter(|x| x.job == job).count();
                 if executed != submitted {
                     return Err(format!(
-                        "shape {shape:?}: executed {executed} vs submitted {submitted}"
+                        "job {job:?}: executed {executed} vs submitted {submitted}"
                     ));
                 }
             }
@@ -314,7 +314,10 @@ fn prop_cached_replays_match_fresh_bit_for_bit() {
                 return Err("warm replay must price from the cache".into());
             }
             same_stream("stream warm", &fresh, &warm)?;
-            let (shape, batch) = (arrivals[0].shape, arrivals.len());
+            let (shape, batch) = (
+                arrivals[0].job.gemm().expect("random streams are GEMM-only"),
+                arrivals.len(),
+            );
             for strategy in [FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das] {
                 let tag = strategy.label();
                 let fw = simulate_fleet_waves(&fleet, strategy, arrivals, MAX_GROUP_LEN);
@@ -329,6 +332,43 @@ fn prop_cached_replays_match_fresh_bit_for_bit() {
                 let fb = simulate_fleet(&fleet, strategy, shape, batch);
                 let cb = simulate_fleet_cached(&fleet, strategy, shape, batch, &mut cache);
                 same_fleet(tag, &fb, &cb)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE 10 satellite: the consolidated [`StreamSim`] builder is
+/// bit-for-bit the legacy entry points it absorbed, on random fleets
+/// and streams — streaming admission, every wave strategy, and the
+/// live-calibration replay (stats and board reports alike).
+#[test]
+fn prop_stream_sim_builder_matches_legacy_entry_points() {
+    use amp_gemm::fleet::sim::{simulate_fleet_stream_live, LiveStreamConfig, StreamSim};
+    prop::check(
+        &prop::Config { cases: 24, seed: 0x51B_0B15 },
+        |r| random_stream(r),
+        |(list, arrivals)| {
+            let fleet = Fleet::parse(list).map_err(|e| e.to_string())?;
+            let legacy = simulate_fleet_stream(&fleet, arrivals);
+            let built = StreamSim::new(&fleet).run(arrivals);
+            if built != legacy {
+                return Err("StreamSim streaming replay diverges from the wrapper".into());
+            }
+            for strategy in [FleetStrategy::Sss, FleetStrategy::Sas, FleetStrategy::Das] {
+                let legacy_w = simulate_fleet_waves(&fleet, strategy, arrivals, MAX_GROUP_LEN);
+                let built_w =
+                    StreamSim::new(&fleet).waves(strategy, MAX_GROUP_LEN).run(arrivals);
+                if built_w != legacy_w {
+                    return Err(format!("{}: StreamSim wave replay diverges", strategy.label()));
+                }
+            }
+            let cfg = LiveStreamConfig::default();
+            let (legacy_live, legacy_reports) = simulate_fleet_stream_live(&fleet, arrivals, cfg);
+            let (built_live, built_reports) =
+                StreamSim::new(&fleet).live(cfg).run_live(arrivals);
+            if built_live != legacy_live || built_reports != legacy_reports {
+                return Err("StreamSim live replay diverges from the wrapper".into());
             }
             Ok(())
         },
